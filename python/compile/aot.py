@@ -1,0 +1,208 @@
+"""AOT compile path: lower the L2 graphs to HLO *text* artifacts.
+
+Run once at build time (``make artifacts``):
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Emits ``<name>.hlo.txt`` per artifact plus ``manifest.json`` describing
+input/output shapes and metadata; the Rust runtime
+(``rust/src/runtime/registry.rs``) reads the manifest, compiles each module
+on the PJRT CPU client once, and executes from the serve path.
+
+HLO **text** is the interchange format, not ``.serialize()``: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the image's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. Lowered with ``return_tuple=True``;
+the Rust side unwraps with ``to_tuple1``/``to_tupleN``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# ---------------------------------------------------------------------------
+# Artifact catalogue.
+#
+# Block shapes mirror the hardware geometry: one DIRC-RAG core holds 2 Mb of
+# NVM = 256 Kb usable INT8 values / dim. With dim=512 a core holds 512 INT8
+# embeddings per macro-column-group; the serving blocks below are the
+# per-core slabs the coordinator dispatches (padded to the block size).
+# Small 128x64 shapes are fast-compile variants for tests.
+# ---------------------------------------------------------------------------
+
+ARTIFACTS: list[dict] = []
+
+
+def _art(name: str, fn, specs: list[jax.ShapeDtypeStruct], outputs: list[dict],
+         **meta) -> None:
+    ARTIFACTS.append({
+        "name": name,
+        "fn": fn,
+        "specs": specs,
+        "outputs": outputs,
+        "meta": meta,
+    })
+
+
+def _i32(*shape: int) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def _f32(*shape: int) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _build_catalogue() -> None:
+    # --- MIPS score blocks (dot fast path) ---
+    for n, dim, tile in [(128, 64, 64), (1024, 512, 128), (4096, 512, 128)]:
+        _art(
+            f"mips_dot_int8_{n}x{dim}",
+            functools.partial(model.mips_graph, bitserial=False, tile_n=tile),
+            [_i32(n, dim), _i32(dim)],
+            [{"dtype": "i32", "shape": [n]}],
+            kind="mips", bits=8, n=n, dim=dim, tile_n=tile, path="dot",
+        )
+
+    # --- Serving fast-path blocks: one fused dot per block (see
+    #     model.mips_plain_graph docstring) ---
+    for n, dim in [(1024, 512), (2048, 512), (4096, 512), (8192, 512),
+                   (2048, 128), (8192, 128), (4096, 1024), (128, 64)]:
+        _art(
+            f"mips_plain_int8_{n}x{dim}",
+            model.mips_plain_graph,
+            [_i32(n, dim), _i32(dim)],
+            [{"dtype": "i32", "shape": [n]}],
+            kind="mips_plain", bits=8, n=n, dim=dim, path="plain",
+        )
+
+    # --- Bit-serial DIRC-path blocks (structural fidelity) ---
+    for bits, n, dim, tile in [(8, 128, 64, 64), (8, 1024, 512, 128),
+                               (4, 128, 64, 64), (4, 1024, 512, 128)]:
+        _art(
+            f"mips_bitserial_int{bits}_{n}x{dim}",
+            functools.partial(model.mips_graph, bits=bits, bitserial=True,
+                              tile_n=tile),
+            [_i32(n, dim), _i32(dim)],
+            [{"dtype": "i32", "shape": [n]}],
+            kind="mips", bits=bits, n=n, dim=dim, tile_n=tile, path="bitserial",
+        )
+
+    # --- Fused score + local-top-k blocks (the per-core hot path) ---
+    for n, dim, tile, k in [(128, 64, 64, 5), (1024, 512, 128, 10),
+                            (4096, 512, 128, 10)]:
+        _art(
+            f"mips_topk_int8_{n}x{dim}_k{k}",
+            functools.partial(model.mips_topk_graph, k=k, tile_n=tile),
+            [_i32(n, dim), _i32(dim)],
+            [{"dtype": "f32", "shape": [k]}, {"dtype": "i32", "shape": [k]}],
+            kind="mips_topk", bits=8, n=n, dim=dim, tile_n=tile, k=k,
+        )
+        _art(
+            f"cosine_topk_int8_{n}x{dim}_k{k}",
+            functools.partial(model.cosine_topk_graph, k=k, tile_n=tile),
+            [_i32(n, dim), _i32(dim), _f32(n), _f32()],
+            [{"dtype": "f32", "shape": [k]}, {"dtype": "i32", "shape": [k]}],
+            kind="cosine_topk", bits=8, n=n, dim=dim, tile_n=tile, k=k,
+        )
+
+    # --- Full cosine score vector (for evaluation sweeps) ---
+    for n, dim, tile in [(1024, 512, 128)]:
+        _art(
+            f"cosine_scores_int8_{n}x{dim}",
+            functools.partial(model.cosine_scores_graph, tile_n=tile),
+            [_i32(n, dim), _i32(dim), _f32(n), _f32()],
+            [{"dtype": "f32", "shape": [n]}],
+            kind="cosine", bits=8, n=n, dim=dim, tile_n=tile,
+        )
+
+    # --- Embedding model (synthetic all-MiniLM stand-in) ---
+    # Weights are inputs (x, w1, b1, w2, b2); aot main() writes the actual
+    # weight values to embed_weights.bin for the Rust runtime.
+    v, h, d = model.EMBED_VOCAB, model.EMBED_HIDDEN, model.EMBED_DIM
+    for batch in (1, 32):
+        _art(
+            f"embed_mlp_b{batch}",
+            model.embed_graph,
+            [_f32(batch, v), _f32(v, h), _f32(h), _f32(h, d), _f32(d)],
+            [{"dtype": "f32", "shape": [batch, d]}],
+            kind="embed", batch=batch, vocab=v, hidden=h, dim=d,
+            weights_file="embed_weights.bin",
+        )
+
+
+# ---------------------------------------------------------------------------
+# Lowering.
+# ---------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_artifact(art: dict, outdir: str) -> dict:
+    lowered = jax.jit(art["fn"]).lower(*art["specs"])
+    text = to_hlo_text(lowered)
+    fname = f"{art['name']}.hlo.txt"
+    with open(os.path.join(outdir, fname), "w") as f:
+        f.write(text)
+    entry = {
+        "name": art["name"],
+        "file": fname,
+        "inputs": [
+            {"dtype": str(s.dtype), "shape": list(s.shape)} for s in art["specs"]
+        ],
+        "outputs": art["outputs"],
+        "meta": art["meta"],
+    }
+    return entry
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description="DIRC-RAG AOT artifact builder")
+    parser.add_argument("--out", default="../artifacts",
+                        help="output directory for HLO text artifacts")
+    parser.add_argument("--only", default=None,
+                        help="substring filter on artifact names")
+    args = parser.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+
+    # Embedder weights sidecar: f32 little-endian, w1 | b1 | w2 | b2 in
+    # row-major order (layout recorded in the artifact meta).
+    import numpy as np
+    w1, b1, w2, b2 = model.embed_weights()
+    flat = np.concatenate([w.reshape(-1) for w in (w1, b1, w2, b2)])
+    flat.astype("<f4").tofile(os.path.join(args.out, "embed_weights.bin"))
+    print(f"  embed_weights.bin ({flat.nbytes / 1024:.1f} KiB)")
+
+    _build_catalogue()
+    manifest = []
+    for art in ARTIFACTS:
+        if args.only and args.only not in art["name"]:
+            continue
+        entry = lower_artifact(art, args.out)
+        size = os.path.getsize(os.path.join(args.out, entry["file"]))
+        print(f"  {entry['name']:44s} -> {entry['file']} ({size/1024:.1f} KiB)")
+        manifest.append(entry)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump({"version": 1, "artifacts": manifest}, f, indent=2)
+    print(f"wrote {len(manifest)} artifacts + manifest.json to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

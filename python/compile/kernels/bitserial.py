@@ -1,0 +1,150 @@
+"""L1 — the DIRC column digital MAC as a Pallas kernel.
+
+The paper's compute hot-spot is the DIRC macro: a 128x128 plane of
+ReRAM-SRAM coupled cells feeding, per column, 128 NOR-gate bit multipliers,
+a 128-input carry-save adder and a shift accumulator, driven by the
+bit-level query-stationary (QS) schedule of Fig. 4:
+
+    for D_bit in 0..B:          # document bit-plane sensed into SRAM
+        for Q_bit in 0..B:      # query bit broadcast from input registers
+            column_psum = CSA_128(d_plane & q_plane)
+            acc += column_psum << (D_bit + Q_bit)   # (sign-corrected)
+
+Hardware adaptation (custom 40nm digital CIM -> TPU-style Pallas):
+
+  * the 128x128 SRAM compute plane -> a (TILE_N, dim) VMEM block chosen by
+    ``BlockSpec``; grid steps walk document tiles, which is the role the 16
+    parallel macros play on-chip;
+  * NOR multiplier + 128-input CSA   -> elementwise AND of bit planes and a
+    lane-axis ``jnp.sum`` (XLA's reduction tree is the CSA);
+  * the bit-serial accumulator       -> an unrolled double loop over the
+    B*B bit pairs carrying an int32 accumulator, with two's-complement
+    positional weights (bit B-1 weighs -2^(B-1)).
+
+``interpret=True`` always: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret mode lowers the kernel to plain HLO so the same
+artifact runs under the Rust runtime. Real-TPU VMEM/MXU characteristics are
+estimated in DESIGN.md §Perf instead of measured.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import bit_weight
+
+# Default document-tile height. 128 matches the macro's column count so one
+# grid step corresponds to one macro-sized slab of documents.
+DEFAULT_TILE_N = 128
+
+
+def _bitserial_kernel(d_ref, q_ref, o_ref, *, bits: int):
+    """Pallas kernel body: bit-serial integer dot of a document tile.
+
+    d_ref: [TILE_N, dim] int32 block (two's-complement INT``bits`` values)
+    q_ref: [1, dim] int32 (query row, replicated to every grid step)
+    o_ref: [TILE_N] int32 scores
+    """
+    d = d_ref[...]
+    q = q_ref[...]
+    acc = jnp.zeros((d.shape[0],), jnp.int32)
+    # QS schedule: D bit-plane outer (one ReRAM sense each), Q bit inner
+    # (one input-register broadcast each). Unrolled: `bits` is static.
+    for db in range(bits):
+        d_plane = (d >> db) & 1
+        w_d = bit_weight(db, bits)
+        for qb in range(bits):
+            q_plane = (q >> qb) & 1
+            w_q = bit_weight(qb, bits)
+            # NOR-gate bit-multiplier array == AND of bit planes.
+            prod = d_plane * q_plane                   # [TILE_N, dim] of {0,1}
+            psum = jnp.sum(prod, axis=1)               # 128-input CSA
+            acc = acc + psum * (w_d * w_q)             # shift accumulator
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "tile_n"))
+def bitserial_scores(d: jnp.ndarray, q: jnp.ndarray, *, bits: int = 8,
+                     tile_n: int = DEFAULT_TILE_N) -> jnp.ndarray:
+    """Integer MIPS scores via the bit-serial Pallas kernel.
+
+    d: [N, dim] int32, values in the signed ``bits``-bit range
+    q: [dim]    int32, same range
+    returns: [N] int32 exact inner products
+
+    N must be divisible by ``tile_n`` (the library pads on the Rust side;
+    the AOT artifacts are emitted for fixed padded shapes).
+    """
+    n, dim = d.shape
+    if n % tile_n != 0:
+        raise ValueError(f"N={n} not divisible by tile_n={tile_n}")
+    q2 = q.reshape(1, dim)
+    grid = (n // tile_n,)
+    return pl.pallas_call(
+        functools.partial(_bitserial_kernel, bits=bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_n, dim), lambda i: (i, 0)),
+            pl.BlockSpec((1, dim), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=True,
+    )(d, q2)
+
+
+def _dot_kernel(d_ref, q_ref, o_ref):
+    """Fast-path kernel: plain int32 contraction of a document tile.
+
+    Functionally identical to the bit-serial kernel (the bit expansion is
+    exact); used for the serving fast path where the per-bit structure is
+    not being exercised. On a real TPU this is the MXU variant; the
+    bit-serial kernel is the VPU/bitwise variant.
+    """
+    d = d_ref[...]
+    q = q_ref[...]
+    o_ref[...] = jax.lax.dot_general(
+        d, q[0],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n",))
+def dot_scores(d: jnp.ndarray, q: jnp.ndarray, *,
+               tile_n: int = DEFAULT_TILE_N) -> jnp.ndarray:
+    """Integer MIPS scores via the dot-based Pallas fast path."""
+    n, dim = d.shape
+    if n % tile_n != 0:
+        raise ValueError(f"N={n} not divisible by tile_n={tile_n}")
+    q2 = q.reshape(1, dim)
+    grid = (n // tile_n,)
+    return pl.pallas_call(
+        _dot_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_n, dim), lambda i: (i, 0)),
+            pl.BlockSpec((1, dim), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=True,
+    )(d, q2)
+
+
+def vmem_bytes_per_step(tile_n: int, dim: int) -> int:
+    """Estimated VMEM residency of one grid step (documented in DESIGN.md).
+
+    One i32 document tile + the i32 query row + the i32 accumulator and two
+    transient bit planes. Used to size TILE_N so a real-TPU port stays well
+    under the ~16 MiB VMEM budget.
+    """
+    doc_tile = tile_n * dim * 4
+    query = dim * 4
+    acc = tile_n * 4
+    transients = 2 * tile_n * dim * 4
+    return doc_tile + query + acc + transients

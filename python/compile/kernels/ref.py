@@ -1,0 +1,90 @@
+"""Pure-jnp correctness oracles for the DIRC bit-serial MAC kernel.
+
+These are the ground-truth references the Pallas kernels (and, transitively,
+the Rust hardware simulator) are validated against. Everything here is
+straight-line jnp with no Pallas, no custom lowering.
+
+The DIRC column computes, per document embedding ``d`` and query ``q``
+(both two's-complement INT``B``):
+
+    score(d, q) = sum_i d_i * q_i        (exact integer inner product)
+
+via a bit-serial expansion:
+
+    d_i = -2^(B-1) * d_i[B-1] + sum_{b<B-1} 2^b * d_i[b]
+    q_i likewise,
+    score = sum_{db, qb} w(db) * w(qb) * sum_i d_i[db] & q_i[qb]
+
+where the inner sum over ``i`` is the macro's 128-input carry-save adder
+and the outer double loop is the query-stationary bit schedule. The
+bit-serial expansion is *exactly* equal to the integer dot product, so the
+oracle is simply an int32 matmul.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def int_range(bits: int) -> tuple[int, int]:
+    """Inclusive [lo, hi] representable range of a signed ``bits``-bit int."""
+    return -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+
+
+def mips_scores(d: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+    """Exact integer inner-product scores.
+
+    d: [N, dim] int32 (values within the quantized INT4/INT8 range)
+    q: [dim]    int32
+    returns: [N] int32
+    """
+    return jnp.dot(d.astype(jnp.int32), q.astype(jnp.int32),
+                   preferred_element_type=jnp.int32)
+
+
+def cosine_scores(d: jnp.ndarray, q: jnp.ndarray,
+                  d_norm: jnp.ndarray, q_norm: jnp.ndarray) -> jnp.ndarray:
+    """Cosine similarity from integer dot products and pre-computed norms.
+
+    d_norm: [N] f32 — L2 norms of the (de-quantized) document embeddings
+    q_norm: scalar f32 — L2 norm of the query embedding
+    """
+    ip = mips_scores(d, q).astype(jnp.float32)
+    denom = jnp.maximum(d_norm * q_norm, 1e-12)
+    return ip / denom
+
+
+def bit_decompose(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Two's-complement bit-plane decomposition.
+
+    x: int32 array with values in the signed ``bits``-bit range.
+    returns: [bits, *x.shape] int32 of {0,1} planes; plane b is bit b.
+
+    Works on negative values because the low ``bits`` bits of the int32
+    two's-complement pattern equal the INT``bits`` pattern.
+    """
+    planes = [(x >> b) & 1 for b in range(bits)]
+    return jnp.stack(planes, axis=0)
+
+
+def bit_weight(b: int, bits: int) -> int:
+    """Positional weight of bit ``b`` in a signed ``bits``-bit integer."""
+    return -(1 << b) if b == bits - 1 else (1 << b)
+
+
+def bitserial_scores_ref(d: jnp.ndarray, q: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Bit-serial expansion of the integer dot product, mirroring the DIRC
+    query-stationary schedule (D-bit outer loop, Q-bit inner loop) but in
+    plain jnp. Must equal :func:`mips_scores` exactly.
+    """
+    d = d.astype(jnp.int32)
+    q = q.astype(jnp.int32)
+    acc = jnp.zeros((d.shape[0],), jnp.int32)
+    for db in range(bits):
+        d_plane = (d >> db) & 1                       # [N, dim]
+        for qb in range(bits):
+            q_plane = (q >> qb) & 1                   # [dim]
+            # NOR-gate multiplier array == AND of the two bit planes.
+            partial = jnp.sum(d_plane * q_plane, axis=1)  # 128-input CSA
+            acc = acc + partial * (bit_weight(db, bits) * bit_weight(qb, bits))
+    return acc

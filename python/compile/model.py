@@ -1,0 +1,141 @@
+"""L2 — the DIRC-RAG retrieval compute graphs (build-time JAX).
+
+These are the functions AOT-lowered to HLO text by :mod:`compile.aot` and
+executed from the Rust runtime via PJRT. Python never runs at serve time.
+
+Graphs:
+
+  * ``mips_graph``          — integer inner-product scores over a document
+                              block (dot fast path or bit-serial DIRC path)
+  * ``cosine_topk_graph``   — cosine similarity + fused ``lax.top_k`` (the
+                              per-core local top-k of Fig. 3a)
+  * ``mips_topk_graph``     — MIPS + fused top-k
+  * ``embed_graph``         — the synthetic "embedding model": a 2-layer
+                              MLP over hashed bag-of-words features with
+                              L2-normalised 512-d output. Stands in for
+                              all-MiniLM-L6-v2 (see DESIGN.md substitutions).
+                              Weights are runtime *inputs* (uploaded once by
+                              the Rust runtime from ``embed_weights.bin``):
+                              baking them as HLO constants does not survive
+                              the text interchange, which elides large
+                              literals as ``{...}``.
+
+All quantized tensors cross the PJRT boundary as int32 (the ``xla`` crate
+exposes i32/i64/u32/u64/f32/f64 literals only); values stay within the
+INT8/INT4 range.
+
+Top-k note: ``lax.top_k`` lowers to the new ``topk(..., largest=true)``
+HLO instruction, which xla_extension 0.5.1's text parser rejects; the
+fused top-k graphs therefore use a stable ``lax.sort_key_val`` + slice,
+which lowers to the classic ``sort`` instruction (and preserves the
+deterministic lowest-index tie-break the Rust comparator uses).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import bitserial as kern
+
+# ---------------------------------------------------------------------------
+# Embedding model constants (the synthetic all-MiniLM stand-in).
+# ---------------------------------------------------------------------------
+
+EMBED_VOCAB = 2048    # hashed bag-of-words buckets
+EMBED_HIDDEN = 256
+EMBED_DIM = 512       # matches the paper's SBERT dimension
+EMBED_SEED = 0x51C0FFEE
+
+
+def embed_weights() -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Deterministic MLP weights (written to artifacts/embed_weights.bin)."""
+    rs = np.random.RandomState(EMBED_SEED & 0x7FFFFFFF)
+    scale1 = 1.0 / np.sqrt(EMBED_VOCAB)
+    scale2 = 1.0 / np.sqrt(EMBED_HIDDEN)
+    w1 = rs.normal(0.0, scale1, size=(EMBED_VOCAB, EMBED_HIDDEN)).astype(np.float32)
+    b1 = np.zeros((EMBED_HIDDEN,), np.float32)
+    w2 = rs.normal(0.0, scale2, size=(EMBED_HIDDEN, EMBED_DIM)).astype(np.float32)
+    b2 = np.zeros((EMBED_DIM,), np.float32)
+    return w1, b1, w2, b2
+
+
+def embed_graph(x: jnp.ndarray, w1: jnp.ndarray, b1: jnp.ndarray,
+                w2: jnp.ndarray, b2: jnp.ndarray) -> tuple[jnp.ndarray]:
+    """Hashed-BoW -> L2-normalised embedding. x: [B, EMBED_VOCAB] f32."""
+    h = jnp.tanh(x @ w1 + b1)
+    e = h @ w2 + b2
+    norm = jnp.sqrt(jnp.sum(e * e, axis=1, keepdims=True))
+    return (e / jnp.maximum(norm, 1e-12),)
+
+
+# ---------------------------------------------------------------------------
+# Retrieval graphs.
+# ---------------------------------------------------------------------------
+
+
+def mips_graph(d: jnp.ndarray, q: jnp.ndarray, *, bits: int = 8,
+               bitserial: bool = False, tile_n: int = 128) -> tuple[jnp.ndarray]:
+    """Integer MIPS scores for one document block. Returns ([N] i32,)."""
+    if bitserial:
+        scores = kern.bitserial_scores(d, q, bits=bits, tile_n=tile_n)
+    else:
+        scores = kern.dot_scores(d, q, tile_n=tile_n)
+    return (scores,)
+
+
+def mips_plain_graph(d: jnp.ndarray, q: jnp.ndarray) -> tuple[jnp.ndarray]:
+    """Serving fast path: one fused XLA dot over the whole block, no
+    Pallas grid loop. Functionally identical to ``mips_graph``; exists
+    because the interpret-mode pallas_call lowers to a serial while-loop
+    over grid steps that XLA:CPU cannot parallelise — the plain dot is
+    ~an order of magnitude faster per block (see EXPERIMENTS.md §Perf)."""
+    scores = jnp.dot(d, q, preferred_element_type=jnp.int32)
+    return (scores,)
+
+
+def _topk_sorted(scores: jnp.ndarray, k: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-k via stable sort (see module docstring): descending scores,
+    lowest index wins ties — matching the Rust TopK comparator."""
+    n = scores.shape[0]
+    idx = lax.iota(jnp.int32, n)
+    sorted_neg, sorted_idx = lax.sort_key_val(-scores, idx, is_stable=True)
+    return -sorted_neg[:k], sorted_idx[:k]
+
+
+def mips_topk_graph(d: jnp.ndarray, q: jnp.ndarray, *, k: int,
+                    tile_n: int = 128) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """MIPS scores + fused local top-k. Returns (vals f32[k], idx i32[k]).
+
+    Values are emitted as f32 so the Rust-side global comparator consumes a
+    single score type for both metrics.
+    """
+    scores = kern.dot_scores(d, q, tile_n=tile_n).astype(jnp.float32)
+    vals, idx = _topk_sorted(scores, k)
+    return (vals, idx.astype(jnp.int32))
+
+
+def cosine_topk_graph(d: jnp.ndarray, q: jnp.ndarray, d_norm: jnp.ndarray,
+                      q_norm: jnp.ndarray, *, k: int, tile_n: int = 128
+                      ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Cosine similarity + fused local top-k.
+
+    d_norm: [N] f32 document embedding norms (from the core's ReRAM buffer)
+    q_norm: [] f32 query norm (from the chip's norm unit)
+    Returns (vals f32[k], idx i32[k]).
+    """
+    ip = kern.dot_scores(d, q, tile_n=tile_n).astype(jnp.float32)
+    denom = jnp.maximum(d_norm * q_norm, 1e-12)
+    scores = ip / denom
+    vals, idx = _topk_sorted(scores, k)
+    return (vals, idx.astype(jnp.int32))
+
+
+def cosine_scores_graph(d: jnp.ndarray, q: jnp.ndarray, d_norm: jnp.ndarray,
+                        q_norm: jnp.ndarray, *, tile_n: int = 128
+                        ) -> tuple[jnp.ndarray]:
+    """Cosine similarity scores without top-k (full score vector out)."""
+    ip = kern.dot_scores(d, q, tile_n=tile_n).astype(jnp.float32)
+    denom = jnp.maximum(d_norm * q_norm, 1e-12)
+    return (ip / denom,)

@@ -1,0 +1,60 @@
+"""AOT path: every catalogued artifact lowers to parseable HLO text and the
+manifest is well-formed. Uses a temp dir; the real build is `make artifacts`.
+"""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def catalogue():
+    aot.ARTIFACTS.clear()
+    aot._build_catalogue()
+    return list(aot.ARTIFACTS)
+
+
+def test_catalogue_names_unique(catalogue):
+    names = [a["name"] for a in catalogue]
+    assert len(names) == len(set(names))
+    assert len(names) >= 10
+
+
+def test_small_artifacts_lower(tmp_path, catalogue):
+    """Lower the fast-compile subset and sanity-check the HLO text."""
+    small = [a for a in catalogue if "128x64" in a["name"] or "embed_mlp_b1" == a["name"]]
+    assert small, "expected small fast-compile artifacts in the catalogue"
+    for art in small:
+        entry = aot.lower_artifact(art, str(tmp_path))
+        path = tmp_path / entry["file"]
+        text = path.read_text()
+        assert text.startswith("HloModule"), art["name"]
+        assert "ROOT" in text
+        # return_tuple=True => root computation returns a tuple
+        assert "tuple" in text or ")) -> (" in text
+
+
+def test_manifest_entry_shapes(tmp_path, catalogue):
+    art = next(a for a in catalogue if a["name"] == "mips_dot_int8_128x64")
+    entry = aot.lower_artifact(art, str(tmp_path))
+    assert entry["inputs"][0]["shape"] == [128, 64]
+    assert entry["inputs"][1]["shape"] == [64]
+    assert entry["outputs"][0] == {"dtype": "i32", "shape": [128]}
+    assert entry["meta"]["kind"] == "mips"
+    json.dumps(entry)  # JSON-serialisable
+
+
+def test_built_artifacts_dir_if_present():
+    """If `make artifacts` has run, the manifest must index existing files."""
+    artdir = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    manifest = os.path.join(artdir, "manifest.json")
+    if not os.path.exists(manifest):
+        pytest.skip("artifacts not built yet")
+    with open(manifest) as f:
+        m = json.load(f)
+    assert m["version"] == 1
+    for entry in m["artifacts"]:
+        assert os.path.exists(os.path.join(artdir, entry["file"])), entry["name"]

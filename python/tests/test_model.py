@@ -1,0 +1,125 @@
+"""L2 graph correctness: retrieval graphs + embedder shapes and semantics."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def _quantize_sym(x: np.ndarray, bits: int) -> np.ndarray:
+    """Symmetric per-tensor quantizer (matches rust/src/retrieval/quant.rs)."""
+    lo, hi = ref.int_range(bits)
+    scale = np.max(np.abs(x)) / hi if np.max(np.abs(x)) > 0 else 1.0
+    return np.clip(np.round(x / scale), lo, hi).astype(np.int32)
+
+
+def test_mips_topk_graph_selects_best():
+    rng = np.random.default_rng(0)
+    n, dim, k = 256, 64, 5
+    d = rng.integers(-128, 128, size=(n, dim)).astype(np.int32)
+    q = rng.integers(-128, 128, size=(dim,)).astype(np.int32)
+    vals, idx = model.mips_topk_graph(jnp.asarray(d), jnp.asarray(q),
+                                      k=k, tile_n=64)
+    scores = d.astype(np.int64) @ q.astype(np.int64)
+    want_idx = np.argsort(-scores, kind="stable")[:k]
+    np.testing.assert_array_equal(np.sort(np.asarray(idx)), np.sort(want_idx))
+    np.testing.assert_allclose(np.asarray(vals),
+                               scores[np.asarray(idx)].astype(np.float32))
+
+
+def test_cosine_topk_graph_matches_fp_cosine_ranking():
+    """INT8-quantized cosine top-k ranks ~like FP cosine on separable data."""
+    rng = np.random.default_rng(1)
+    n, dim, k = 256, 64, 3
+    base = rng.normal(size=(n, dim)).astype(np.float32)
+    base /= np.linalg.norm(base, axis=1, keepdims=True)
+    qf = base[17] + 0.05 * rng.normal(size=(dim,)).astype(np.float32)
+
+    d_q = np.stack([_quantize_sym(row, 8) for row in base])
+    q_q = _quantize_sym(qf, 8)
+    d_norm = np.linalg.norm(d_q.astype(np.float32), axis=1)
+    q_norm = np.float32(np.linalg.norm(q_q.astype(np.float32)))
+
+    vals, idx = model.cosine_topk_graph(
+        jnp.asarray(d_q), jnp.asarray(q_q), jnp.asarray(d_norm),
+        jnp.asarray(q_norm), k=k, tile_n=64)
+    assert int(np.asarray(idx)[0]) == 17
+    v = np.asarray(vals)
+    assert np.all(v[:-1] >= v[1:])          # sorted descending
+    assert v[0] <= 1.0 + 1e-5               # cosine bound
+
+
+def test_cosine_scores_graph_matches_ref():
+    rng = np.random.default_rng(2)
+    n, dim = 128, 64
+    d = rng.integers(-128, 128, size=(n, dim)).astype(np.int32)
+    q = rng.integers(-128, 128, size=(dim,)).astype(np.int32)
+    d_norm = np.linalg.norm(d.astype(np.float32), axis=1)
+    q_norm = np.float32(np.linalg.norm(q.astype(np.float32)))
+    (got,) = model.cosine_scores_graph(
+        jnp.asarray(d), jnp.asarray(q), jnp.asarray(d_norm),
+        jnp.asarray(q_norm), tile_n=64)
+    want = ref.cosine_scores(jnp.asarray(d), jnp.asarray(q),
+                             jnp.asarray(d_norm), jnp.asarray(q_norm))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+def _embed(x: np.ndarray) -> np.ndarray:
+    w1, b1, w2, b2 = model.embed_weights()
+    (e,) = model.embed_graph(*(jnp.asarray(a) for a in (x, w1, b1, w2, b2)))
+    return np.asarray(e)
+
+
+def test_embed_graph_normalised_and_deterministic():
+    rng = np.random.default_rng(3)
+    x = rng.random((4, model.EMBED_VOCAB)).astype(np.float32)
+    e1, e2 = _embed(x), _embed(x)
+    assert e1.shape == (4, model.EMBED_DIM)
+    np.testing.assert_array_equal(e1, e2)
+    np.testing.assert_allclose(np.linalg.norm(e1, axis=1), 1.0, rtol=1e-5)
+
+
+def test_embed_graph_separates_inputs():
+    """Different BoW inputs map to distinguishable embeddings."""
+    x = np.zeros((2, model.EMBED_VOCAB), np.float32)
+    x[0, :16] = 1.0
+    x[1, 16:32] = 1.0
+    e = _embed(x)
+    cos = float(e[0] @ e[1])
+    assert cos < 0.99
+
+
+def test_embed_weights_deterministic():
+    a = model.embed_weights()
+    b = model.embed_weights()
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_topk_sorted_matches_lax_topk():
+    rng = np.random.default_rng(5)
+    scores = jnp.asarray(rng.normal(size=(256,)).astype(np.float32))
+    vals, idx = model._topk_sorted(scores, 10)
+    import jax.lax as lax
+    wv, wi = lax.top_k(scores, 10)
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(wv))
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(wi))
+
+
+def test_topk_sorted_stable_tie_break():
+    scores = jnp.asarray(np.array([1.0, 2.0, 2.0, 2.0, 0.0], np.float32))
+    _, idx = model._topk_sorted(scores, 2)
+    np.testing.assert_array_equal(np.asarray(idx), [1, 2])
+
+
+def test_mips_plain_matches_kernel_path():
+    rng = np.random.default_rng(7)
+    d = rng.integers(-128, 128, size=(256, 64)).astype(np.int32)
+    q = rng.integers(-128, 128, size=(64,)).astype(np.int32)
+    (plain,) = model.mips_plain_graph(jnp.asarray(d), jnp.asarray(q))
+    (kerneled,) = model.mips_graph(jnp.asarray(d), jnp.asarray(q), tile_n=64)
+    np.testing.assert_array_equal(np.asarray(plain), np.asarray(kerneled))
+    want = d.astype(np.int64) @ q.astype(np.int64)
+    np.testing.assert_array_equal(np.asarray(plain, np.int64), want)

@@ -1,0 +1,52 @@
+//! Ablation (Sec III.B) — WS vs IS vs QS dataflow: latency, energy and
+//! array utilisation for the same retrieval workload, over database size.
+
+use dirc_rag::baseline::{CimDataflow, CimDataflowModel};
+use dirc_rag::bench::Table;
+
+fn main() {
+    let m = CimDataflowModel::default();
+    let dim = 512;
+    let flows = [
+        CimDataflow::WeightStationary,
+        CimDataflow::InputStationary,
+        CimDataflow::QueryStationary,
+    ];
+
+    let mut t = Table::new(&[
+        "DB size", "dataflow", "cycles", "latency µs", "energy µJ", "utilisation",
+    ]);
+    for &n in &[1024usize, 2048, 4096, 8192] {
+        let mb = n * dim / (1 << 20);
+        for flow in flows {
+            let c = m.cost(flow, n, dim, 8);
+            t.row(&[
+                format!("{mb} MB ({n} docs)"),
+                flow.name().to_string(),
+                format!("{}", c.cycles),
+                format!("{:.2}", c.latency_s * 1e6),
+                format!("{:.3}", c.energy_j * 1e6),
+                format!("{:.1}%", c.compute_utilisation * 100.0),
+            ]);
+        }
+    }
+    println!("\n=== Ablation: dataflow comparison (Sec III.B) ===");
+    t.print();
+
+    // Verdicts at 4 MB (the paper's operating point).
+    let qs = m.cost(CimDataflow::QueryStationary, 8192, dim, 8);
+    let ws = m.cost(CimDataflow::WeightStationary, 8192, dim, 8);
+    let is = m.cost(CimDataflow::InputStationary, 8192, dim, 8);
+    println!(
+        "\nat 4 MB: QS is {:.1}x faster / {:.1}x lower-energy than WS, \
+         {:.1}x faster than IS; QS utilisation {:.0}% vs WS {:.0}% vs IS {:.1}%",
+        ws.latency_s / qs.latency_s,
+        ws.energy_j / qs.energy_j,
+        is.latency_s / qs.latency_s,
+        qs.compute_utilisation * 100.0,
+        ws.compute_utilisation * 100.0,
+        is.compute_utilisation * 100.0,
+    );
+    assert!(qs.latency_s < ws.latency_s && qs.latency_s < is.latency_s);
+    assert!(qs.energy_j < ws.energy_j && qs.energy_j < is.energy_j);
+}

@@ -1,0 +1,30 @@
+#![allow(dead_code)]
+
+//! Shared helpers for the paper-reproduction benches.
+
+use dirc_rag::data::DatasetSpec;
+use dirc_rag::data::SynthDataset;
+
+/// Query cap per dataset: full run by default, trimmed under
+/// `DIRC_BENCH_FAST=1` (CI smoke).
+pub fn query_cap(spec_queries: usize) -> usize {
+    if std::env::var("DIRC_BENCH_FAST").ok().as_deref() == Some("1") {
+        spec_queries.min(40)
+    } else {
+        spec_queries.min(250)
+    }
+}
+
+/// Monte-Carlo points for error-map extraction in benches.
+pub fn map_points() -> usize {
+    if std::env::var("DIRC_BENCH_FAST").ok().as_deref() == Some("1") {
+        120
+    } else {
+        1000
+    }
+}
+
+/// Generate a registered dataset.
+pub fn generate(spec: &DatasetSpec) -> SynthDataset {
+    SynthDataset::generate(spec.n_docs, spec.n_queries, spec.dim, &spec.params)
+}

@@ -1,0 +1,37 @@
+//! Fig 2 — mainstream CIM memory technology comparison, regenerated as a
+//! table with the same verdicts.
+
+use dirc_rag::baseline::memtech::{dirc_unique_advantages, technologies};
+use dirc_rag::bench::Table;
+
+fn main() {
+    let mut t = Table::new(&[
+        "technology", "density Mb/mm^2", "digital accuracy", "rewritable",
+        "non-volatile", "refresh-free", "exemplar",
+    ]);
+    let yn = |b: bool| if b { "yes" } else { "no" };
+    for tech in technologies() {
+        t.row(&[
+            tech.name.to_string(),
+            format!("{:.2}", tech.density_mb_mm2),
+            yn(tech.digital_accuracy).to_string(),
+            yn(tech.rewritable).to_string(),
+            yn(tech.non_volatile).to_string(),
+            yn(!tech.needs_refresh).to_string(),
+            tech.exemplar.to_string(),
+        ]);
+    }
+    println!("\n=== Fig 2: mainstream CIM memories ===");
+    t.print();
+
+    println!("\nDIRC's position (the figure's verdict):");
+    for adv in dirc_unique_advantages() {
+        println!("  - {adv}");
+    }
+    // The figure's claim: only DIRC combines all four qualities.
+    let all4 = technologies()
+        .iter()
+        .filter(|t| t.digital_accuracy && t.rewritable && t.non_volatile && !t.needs_refresh)
+        .count();
+    assert_eq!(all4, 1, "exactly one technology (DIRC) has all four qualities");
+}

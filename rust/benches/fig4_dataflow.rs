@@ -1,0 +1,83 @@
+//! Fig 4 — the bit-level query-stationary dataflow: cycle budget of one
+//! DIRC column pass (16 INT8 embeddings, dim 128), cross-checked between
+//! the bit-exact column datapath and the analytical cycle model, plus
+//! host wall-clock of the bit-exact path.
+
+use dirc_rag::bench::{Bench, Table};
+use dirc_rag::constants::MACRO_DIM;
+use dirc_rag::dirc::column::run_column_pass;
+use dirc_rag::sim::cycles::CycleModel;
+use dirc_rag::util::rng::Pcg;
+
+fn main() {
+    let mut rng = Pcg::new(1);
+    let docs: Vec<[i8; MACRO_DIM]> = (0..16)
+        .map(|_| {
+            let mut w = [0i8; MACRO_DIM];
+            for v in w.iter_mut() {
+                *v = rng.int_in(-128, 127) as i8;
+            }
+            w
+        })
+        .collect();
+    let query: Vec<i8> = (0..MACRO_DIM).map(|_| rng.int_in(-128, 127) as i8).collect();
+
+    let (results, cycles) = run_column_pass(&docs, &query, 8, true);
+    let model = CycleModel::default().macro_pass(16, 8, true);
+
+    let mut t = Table::new(&["phase", "paper (Fig 4)", "bit-exact datapath", "cycle model"]);
+    t.row(&[
+        "ReRAM sensing".to_string(),
+        "128 cycles".to_string(),
+        format!("{} cycles", cycles.sense_cycles),
+        format!("{} cycles", model.sense),
+    ]);
+    t.row(&[
+        "error detection".to_string(),
+        "128 cycles".to_string(),
+        format!("{} cycles", cycles.detect_cycles),
+        format!("{} cycles", model.detect),
+    ]);
+    t.row(&[
+        "MAC".to_string(),
+        "1024 cycles".to_string(),
+        format!("{} cycles", cycles.mac_cycles),
+        format!("{} cycles", model.mac),
+    ]);
+    t.row(&[
+        "total".to_string(),
+        "~1300 cycles (5.2 µs @250MHz)".to_string(),
+        format!("{} cycles", cycles.total()),
+        format!(
+            "{} cycles ({:.2} µs)",
+            model.total(),
+            CycleModel::default().seconds(model.total()) * 1e6
+        ),
+    ]);
+    println!("\n=== Fig 4: QS dataflow cycle budget (one column pass) ===");
+    t.print();
+
+    assert_eq!(cycles.sense_cycles, model.sense);
+    assert_eq!(cycles.detect_cycles, model.detect);
+    assert_eq!(cycles.mac_cycles, model.mac);
+
+    // Correctness of the bit-exact path against the integer dot.
+    for (w, words) in docs.iter().enumerate() {
+        let want: i64 = words.iter().zip(&query).map(|(&d, &q)| d as i64 * q as i64).sum();
+        assert_eq!(results[w], want);
+    }
+    println!("\nbit-exact MAC verified against integer dot for all 16 embeddings");
+
+    // INT4 variant: half the planes, quarter the MAC cycles per slot set.
+    let (_, c4) = run_column_pass(&docs[..8], &query, 4, true);
+    println!(
+        "INT4 (8 words): {} sense + {} detect + {} MAC = {} cycles",
+        c4.sense_cycles, c4.detect_cycles, c4.mac_cycles, c4.total()
+    );
+
+    let mut b = Bench::new();
+    b.run("bit-exact column pass (16 INT8 x dim128, host)", || {
+        run_column_pass(&docs, &query, 8, true).1.total()
+    });
+    b.report("fig4_dataflow");
+}

@@ -1,0 +1,52 @@
+//! Fig 5a — the 8x8 LSB spatial error map from the 1000-point post-layout
+//! Monte-Carlo (behavioural model), plus the MSB reliability claim and
+//! host wall-clock of the extraction.
+
+mod common;
+
+use dirc_rag::bench::Bench;
+use dirc_rag::dirc::variation::VariationModel;
+
+fn main() {
+    let points = common::map_points();
+    let model = VariationModel::default();
+    let map = model.extract_error_map(points, 42);
+
+    println!("\n=== Fig 5a: LSB spatial error map ({points} MC points/position) ===");
+    print!("{}", map.render_lsb());
+    println!(
+        "\nmean LSB error: {:.3e}   max MSB error: {:.3e} (paper: MSB 100% reliable)",
+        map.lsb_mean(),
+        map.msb_max()
+    );
+
+    // The paper's spatial claims.
+    let right_edge: f64 = (0..8).map(|r| map.lsb[r][7]).sum();
+    let left_edge: f64 = (0..8).map(|r| map.lsb[r][0]).sum();
+    let far_from_readout: f64 = (0..8).map(|r| map.lsb[r][2] + map.lsb[r][3]).sum();
+    println!(
+        "\ncolumn sums: right edge (VSS + readout) {:.4}, left edge (VSS) {:.4}, \
+         center-left (far from both) {:.4}",
+        right_edge, left_edge, far_from_readout
+    );
+    assert!(map.msb_max() < 1e-3, "MSB reliability");
+    assert!(
+        right_edge < far_from_readout,
+        "cells near the readout must be more reliable"
+    );
+
+    // Reliability ordering drives the remap; show the 8 best/worst.
+    let order = map.positions_by_reliability();
+    println!(
+        "best positions: {:?}\nworst positions: {:?}",
+        &order[..8],
+        &order[56..]
+    );
+
+    let mut b = Bench::new();
+    let quick = points.min(200);
+    b.run(&format!("extract error map ({quick} points)"), || {
+        model.extract_error_map(quick, 7).lsb_mean()
+    });
+    b.report("fig5_error_map");
+}

@@ -1,0 +1,97 @@
+//! Fig 6 — effectiveness of the error-aware optimisation techniques:
+//! retrieval precision vs process corner for {naive, naive+detect,
+//! error-aware remap, remap+detect}, with the paper's headline "+24.6%
+//! precision from bitwise remapping" checked at the stressed corner.
+
+mod common;
+
+use dirc_rag::bench::Table;
+use dirc_rag::data::dataset_by_name;
+use dirc_rag::dirc::chip::{ChipConfig, DircChip};
+use dirc_rag::dirc::variation::VariationModel;
+use dirc_rag::dirc::RemapStrategy;
+use dirc_rag::eval::evaluate;
+use dirc_rag::retrieval::quant::{quantize, QuantScheme};
+use dirc_rag::retrieval::score::Metric;
+use dirc_rag::util::rng::Pcg;
+
+fn main() {
+    let spec = dataset_by_name("scifact").unwrap();
+    let nq = common::query_cap(120);
+    let ds = common::generate(&spec);
+    let db = quantize(&ds.docs, ds.n_docs, ds.dim, QuantScheme::Int8);
+
+    // Clean reference.
+    let clean_cfg = ChipConfig { map_points: 150, ..ChipConfig::paper_default(spec.dim, Metric::Cosine) };
+    let clean_chip = DircChip::build(clean_cfg, &db);
+    let clean = evaluate(nq, &ds.qrels[..nq], |qi| {
+        let q = quantize(ds.query(qi), 1, ds.dim, QuantScheme::Int8);
+        clean_chip.clean_query(&q.values, 5)
+    });
+
+    let corners = [1.0, 2.0, 2.5, 3.0];
+    let configs: [(&str, RemapStrategy, bool); 4] = [
+        ("naive", RemapStrategy::Interleaved, false),
+        ("naive+detect", RemapStrategy::Interleaved, true),
+        ("remap", RemapStrategy::ErrorAware, false),
+        ("remap+detect", RemapStrategy::ErrorAware, true),
+    ];
+
+    let mut t = Table::new(&["corner", "config", "P@1", "P@3", "P@5", "vs naive P@1"]);
+    let mut stressed: Vec<(String, f64)> = Vec::new();
+
+    for &corner in &corners {
+        let mut naive_p1 = None;
+        for (name, remap, detect) in configs {
+            let cfg = ChipConfig {
+                remap,
+                detect,
+                variation: VariationModel { corner, ..VariationModel::default() },
+                map_points: 150,
+                ..ChipConfig::paper_default(spec.dim, Metric::Cosine)
+            };
+            let chip = DircChip::build(cfg, &db);
+            let mut rng = Pcg::new(17);
+            let rep = evaluate(nq, &ds.qrels[..nq], |qi| {
+                let q = quantize(ds.query(qi), 1, ds.dim, QuantScheme::Int8);
+                chip.query(&q.values, 5, &mut rng).0
+            });
+            let base = *naive_p1.get_or_insert(rep.p_at_1);
+            t.row(&[
+                format!("{corner:.1}x"),
+                name.to_string(),
+                format!("{:.4}", rep.p_at_1),
+                format!("{:.4}", rep.p_at_3),
+                format!("{:.4}", rep.p_at_5),
+                format!("{:+.1}%", (rep.p_at_1 / base.max(1e-9) - 1.0) * 100.0),
+            ]);
+            if corner == 2.5 {
+                stressed.push((name.to_string(), rep.p_at_1));
+            }
+        }
+    }
+
+    println!("\n=== Fig 6: error-aware optimisation vs process corner ===");
+    println!(
+        "clean reference: P@1 {:.4}  P@3 {:.4}  P@5 {:.4}  ({nq} queries)",
+        clean.p_at_1, clean.p_at_3, clean.p_at_5
+    );
+    t.print();
+
+    // Headline check at the stressed corner: remap uplift over naive in
+    // the paper's ballpark (+24.6%); remap+detect recovers ~the clean
+    // precision.
+    let get = |n: &str| stressed.iter().find(|(s, _)| s == n).unwrap().1;
+    let uplift = (get("remap") / get("naive").max(1e-9) - 1.0) * 100.0;
+    let full = get("remap+detect");
+    println!(
+        "\nremap uplift at 2.5x corner: {uplift:+.1}% (paper: +24.6%); \
+         remap+detect P@1 {full:.4} vs clean {:.4}",
+        clean.p_at_1
+    );
+    assert!(uplift > 10.0, "remap must deliver a double-digit uplift");
+    assert!(
+        full >= clean.p_at_1 * 0.93,
+        "remap+detect must recover near-clean precision"
+    );
+}

@@ -1,0 +1,105 @@
+//! Hot-path microbenchmarks — the §Perf instrument panel.
+//!
+//! Times every stage of the serve path in isolation so the performance
+//! pass can attribute end-to-end cost: exact scoring, sensing simulation,
+//! top-k, PJRT execution, engine retrieve, and the full coordinator
+//! round-trip. Results are logged in EXPERIMENTS.md §Perf.
+
+use std::sync::Arc;
+
+use dirc_rag::bench::{fmt_si, Bench};
+use dirc_rag::coordinator::{Engine, ServingEngine, SimEngine};
+use dirc_rag::dirc::chip::{ChipConfig, DircChip};
+use dirc_rag::retrieval::quant::{quantize, QuantScheme};
+use dirc_rag::retrieval::score::{mips_scores, Metric};
+use dirc_rag::retrieval::topk::topk_from_scores;
+use dirc_rag::runtime::PjrtRuntime;
+use dirc_rag::util::rng::Pcg;
+
+fn main() -> anyhow::Result<()> {
+    let (n, dim) = (8192usize, 512usize);
+    let mut rng = Pcg::new(1);
+    let fp: Vec<f32> = (0..n * dim).map(|_| rng.normal() as f32 * 0.05).collect();
+    let db = quantize(&fp, n, dim, QuantScheme::Int8);
+    let q: Vec<i8> = (0..dim).map(|_| rng.int_in(-128, 127) as i8).collect();
+
+    let mut b = Bench::new();
+
+    // --- L3 pure compute stages. ---
+    let r = b.run("exact i8 scores, 8192x512 (4 MB sweep)", || {
+        mips_scores(&db.values, n, dim, &q)
+    });
+    let docs_per_s = n as f64 / r.summary.median;
+    eprintln!("    -> {} doc-scores/s", fmt_si(docs_per_s));
+
+    let scores: Vec<f64> = mips_scores(&db.values, n, dim, &q)
+        .into_iter()
+        .map(|v| v as f64)
+        .collect();
+    b.run("top-10 of 8192 scores", || topk_from_scores(&scores, 0, 10));
+
+    let cfg = ChipConfig { map_points: 150, ..ChipConfig::paper_default(dim, Metric::Mips) };
+    let chip = DircChip::build(cfg.clone(), &db);
+    b.run("macro sense (error injection), 1 core", || {
+        let mut r = Pcg::new(2);
+        chip.cores()[0].macro_().sense(&mut r).1.flips
+    });
+    b.run("full chip query (sim engine path)", || {
+        let mut r = Pcg::new(3);
+        chip.query(&q, 10, &mut r).1.cycles
+    });
+
+    // --- PJRT stages (need artifacts). ---
+    let dir = dirc_rag::runtime::artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        let rt = Arc::new(PjrtRuntime::new(dir)?);
+        let art = rt.manifest().best_block("mips", 512, dim)?.name.clone();
+        let block = rt.upload_db(&art, &db.values[..512 * dim], 512, dim, None)?;
+        b.run("PJRT mips block 1024x512 (pallas grid loop)", || {
+            rt.mips_scores(&block, &q).unwrap().len()
+        });
+
+        // The serving fast path: plain fused dot, whole DB in one exec.
+        let plain1k = rt.manifest().best_block("mips_plain", 512, dim)?.name.clone();
+        let pb1 = rt.upload_db(&plain1k, &db.values[..512 * dim], 512, dim, None)?;
+        b.run("PJRT mips_plain block 1024x512 (fused dot)", || {
+            rt.mips_scores(&pb1, &q).unwrap().len()
+        });
+        let plain8k = rt.manifest().best_block("mips_plain", n, dim)?.name.clone();
+        let pb8 = rt.upload_db(&plain8k, &db.values, n, dim, None)?;
+        b.run("PJRT mips_plain block 8192x512 (whole 4 MB DB)", || {
+            rt.mips_scores(&pb8, &q).unwrap().len()
+        });
+
+        let tk = rt
+            .manifest()
+            .best_block("mips_topk", 512, dim)
+            .map(|a| a.name.clone());
+        if let Ok(tk) = tk {
+            let tkb = rt.upload_db(&tk, &db.values[..512 * dim], 512, dim, None)?;
+            b.run("PJRT fused topk block 1024x512", || {
+                rt.topk(&tkb, &q, None).unwrap().len()
+            });
+        }
+
+        let feats = vec![0.01f32; 2048];
+        b.run("PJRT embed b1", || rt.embed(&feats, 1).unwrap().len());
+
+        let sim = SimEngine::new(cfg.clone(), &db);
+        b.run("SimEngine.retrieve (4 MB, errors+stats)", || {
+            let mut r = Pcg::new(5);
+            sim.retrieve(&q, 10, &mut r).0.len()
+        });
+
+        let srv = ServingEngine::new(cfg, &db, Arc::clone(&rt))?;
+        b.run("ServingEngine.retrieve (4 MB, PJRT+corrections)", || {
+            let mut r = Pcg::new(6);
+            srv.retrieve(&q, 10, &mut r).0.len()
+        });
+    } else {
+        eprintln!("(artifacts not built: skipping PJRT stages)");
+    }
+
+    b.report("hotpath");
+    Ok(())
+}

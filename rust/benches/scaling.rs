@@ -1,0 +1,91 @@
+//! Scaling study (Sec IV.B): latency and energy vs database size (linear
+//! scaling claim), precision vs dimension, and the INT4 capacity doubling.
+
+mod common;
+
+use dirc_rag::bench::Table;
+use dirc_rag::dirc::chip::{ChipConfig, DircChip};
+use dirc_rag::retrieval::quant::{quantize, QuantScheme};
+use dirc_rag::retrieval::score::Metric;
+use dirc_rag::util::rng::Pcg;
+
+fn chip_for(n: usize, dim: usize, scheme: QuantScheme) -> (DircChip, Vec<i8>) {
+    let mut rng = Pcg::new(7);
+    let fp: Vec<f32> = (0..n * dim).map(|_| rng.normal() as f32 * 0.05).collect();
+    let db = quantize(&fp, n, dim, scheme);
+    let cfg = ChipConfig {
+        bits: scheme.bits(),
+        map_points: 80,
+        ..ChipConfig::paper_default(dim, Metric::Mips)
+    };
+    let q: Vec<i8> = (0..dim)
+        .map(|_| rng.int_in(scheme.qmin() as i64, scheme.qmax() as i64) as i8)
+        .collect();
+    (DircChip::build(cfg, &db), q)
+}
+
+fn main() {
+    // --- Latency/energy vs DB size (INT8, dim 512). ---
+    let dim = 512;
+    let sizes = [512usize, 1024, 2048, 4096, 8192];
+    let mut t = Table::new(&["DB", "docs", "latency µs", "energy µJ", "µs/MB", "µJ/MB"]);
+    let mut per_mb: Vec<(f64, f64)> = Vec::new();
+    for &n in &sizes {
+        let (chip, q) = chip_for(n, dim, QuantScheme::Int8);
+        let mut rng = Pcg::new(1);
+        let (_, stats) = chip.query(&q, 10, &mut rng);
+        let mb = (n * dim) as f64 / 1e6;
+        t.row(&[
+            format!("{:.2} MB", mb),
+            n.to_string(),
+            format!("{:.2}", stats.latency_s * 1e6),
+            format!("{:.3}", stats.energy_j * 1e6),
+            format!("{:.2}", stats.latency_s * 1e6 / mb),
+            format!("{:.3}", stats.energy_j * 1e6 / mb),
+        ]);
+        per_mb.push((stats.latency_s / mb, stats.energy_j / mb));
+    }
+    println!("\n=== Scaling: latency & energy vs DB size (INT8, dim 512) ===");
+    t.print();
+    // Linearity: marginal cost per MB converges (fixed overhead shrinks).
+    let last = per_mb.last().unwrap();
+    let prev = per_mb[per_mb.len() - 2];
+    assert!((last.0 / prev.0 - 1.0).abs() < 0.25, "latency/MB must stabilise");
+    assert!((last.1 / prev.1 - 1.0).abs() < 0.25, "energy/MB must stabilise");
+
+    // --- Dimension sweep (same total bytes). ---
+    let mut t2 = Table::new(&["dim", "docs (1 MB)", "latency µs", "energy µJ"]);
+    for &d in &[128usize, 256, 512, 1024] {
+        let n = 1_048_576 / d; // 1 MiB of INT8
+        let (chip, q) = chip_for(n, d, QuantScheme::Int8);
+        let mut rng = Pcg::new(2);
+        let (_, stats) = chip.query(&q, 10, &mut rng);
+        t2.row(&[
+            d.to_string(),
+            n.to_string(),
+            format!("{:.2}", stats.latency_s * 1e6),
+            format!("{:.3}", stats.energy_j * 1e6),
+        ]);
+    }
+    println!("\n=== Scaling: dimension sweep at fixed 1 MiB ===");
+    t2.print();
+
+    // --- INT4 vs INT8 capacity & cost. ---
+    let (chip8, q8) = chip_for(8192, dim, QuantScheme::Int8);
+    let (chip4, q4) = chip_for(16384, dim, QuantScheme::Int4);
+    let mut rng = Pcg::new(3);
+    let s8 = chip8.query(&q8, 10, &mut rng).1;
+    let s4 = chip4.query(&q4, 10, &mut rng).1;
+    println!(
+        "\nINT4 doubles capacity: {} docs (INT4) vs {} docs (INT8) on the same chip;\n\
+         full-chip query: INT4 {:.2} µs / {:.3} µJ vs INT8 {:.2} µs / {:.3} µJ",
+        chip4.n_docs(),
+        chip8.n_docs(),
+        s4.latency_s * 1e6,
+        s4.energy_j * 1e6,
+        s8.latency_s * 1e6,
+        s8.energy_j * 1e6,
+    );
+    assert_eq!(chip4.n_docs(), 2 * chip8.n_docs());
+    assert!(s4.latency_s < s8.latency_s, "INT4 full chip must be faster than INT8");
+}

@@ -1,0 +1,68 @@
+//! Table I — DIRC-RAG spec sheet: paper vs derived model, plus wall-clock
+//! of the full-capacity chip query in the simulator.
+
+mod common;
+
+use dirc_rag::bench::{Bench, Table};
+use dirc_rag::dirc::chip::{ChipConfig, DircChip};
+use dirc_rag::retrieval::quant::{quantize, QuantScheme};
+use dirc_rag::retrieval::score::Metric;
+use dirc_rag::sim::ChipSpec;
+use dirc_rag::util::rng::Pcg;
+
+fn main() {
+    let s = ChipSpec::derive();
+    let mut t = Table::new(&["Table I row", "paper", "model"]);
+    t.row(&["Process", "TSMC40nm", s.process]);
+    t.row(&["DIRC-RAG Area", "6.18 mm^2", &format!("{:.2} mm^2", s.area_mm2)]);
+    t.row(&["Frequency", "250 MHz", &format!("{:.0} MHz", s.freq_hz / 1e6)]);
+    t.row(&["Voltage", "0.8 V", &format!("{:.1} V", s.voltage)]);
+    t.row(&["Precisions", "INT4/8", s.precisions]);
+    t.row(&["Embedding Dimension", "128~1024", &format!("{}~{}", s.dim_range.0, s.dim_range.1)]);
+    t.row(&["Macro Size", "16 Kb", &format!("{} Kb", s.macro_size_bits / 1024)]);
+    t.row(&["Macro Area", "0.34 mm^2", &format!("{:.2} mm^2", s.macro_area_mm2)]);
+    t.row(&[
+        "Macro Efficiency",
+        "1176 TOPS/W, 24.9 TOPS/mm^2",
+        &format!("{:.0} TOPS/W, {:.1} TOPS/mm^2", s.macro_tops_per_w, s.macro_tops_per_mm2),
+    ]);
+    t.row(&["Macro NVM Storage", "2 Mb", &format!("{} Mb", s.macro_nvm_bits / (1 << 20))]);
+    t.row(&["Total NVM Storage", "4 MB", &format!("{} MB", s.total_nvm_bytes / (1 << 20))]);
+    t.row(&[
+        "Total Memory Density",
+        "5.178 Mb/mm^2",
+        &format!("{:.3} Mb/mm^2", s.memory_density_mb_per_mm2),
+    ]);
+    t.row(&["Chip Throughput", "131 TOPS", &format!("{:.1} TOPS", s.chip_tops)]);
+    t.row(&[
+        "Retrieval Latency",
+        "5.6 µs (4MB)",
+        &format!("{:.2} µs (4MB)", s.retrieval_latency_s * 1e6),
+    ]);
+    t.row(&[
+        "Energy/Query",
+        "0.956 µJ (4MB)",
+        &format!("{:.3} µJ (4MB)", s.energy_per_query_j * 1e6),
+    ]);
+    println!("\n=== Table I: DIRC-RAG spec (paper vs model) ===");
+    t.print();
+
+    // Simulator wall-clock for a full-capacity query (host-side cost of
+    // producing the above numbers, not the chip latency).
+    let (n, dim) = (8192, 512);
+    let mut rng = Pcg::new(1);
+    let fp: Vec<f32> = (0..n * dim).map(|_| rng.normal() as f32 * 0.05).collect();
+    let db = quantize(&fp, n, dim, QuantScheme::Int8);
+    let cfg = ChipConfig {
+        map_points: common::map_points().min(300),
+        ..ChipConfig::paper_default(dim, Metric::Mips)
+    };
+    let chip = DircChip::build(cfg, &db);
+    let q: Vec<i8> = (0..dim).map(|_| rng.int_in(-128, 127) as i8).collect();
+
+    let mut b = Bench::new();
+    b.run("simulate full 4MB chip query (host)", || {
+        chip.query(&q, 10, &mut rng).1.cycles
+    });
+    b.report("table1_spec");
+}

@@ -1,0 +1,215 @@
+//! SRAM-CIM dataflow baselines (Sec III.B).
+//!
+//! The paper motivates the query-stationary (QS) dataflow by costing the
+//! two mainstream alternatives for retrieval:
+//!
+//! * **Weight-stationary (WS)**: document embeddings live in the CIM
+//!   macro's SRAM. SRAM density is far below ReRAM's, so the database
+//!   does not fit; the macro must be re-filled row by row from a buffer /
+//!   off-chip DRAM every few MAC cycles — tens to hundreds of update
+//!   cycles per compute cycle.
+//! * **Input-stationary (IS)**: the (single) query is pinned in the array
+//!   and documents stream through as inputs — utilisation collapses
+//!   because one query occupies one row-equivalent of an array built for
+//!   thousands, and every document still crosses the buffer hierarchy.
+//!
+//! The models below cost both for the same retrieval workload the DIRC
+//! chip runs, producing the `ablate_dataflow` bench (who wins and by
+//! what factor).
+
+use crate::constants::{FREQ_HZ, MACRO_DIM, NUM_CORES};
+
+/// Dataflow selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CimDataflow {
+    WeightStationary,
+    InputStationary,
+    QueryStationary,
+}
+
+impl CimDataflow {
+    pub fn name(self) -> &'static str {
+        match self {
+            CimDataflow::WeightStationary => "WS (SRAM-CIM)",
+            CimDataflow::InputStationary => "IS (CIM)",
+            CimDataflow::QueryStationary => "QS (DIRC)",
+        }
+    }
+}
+
+/// Cost model constants for a conventional SRAM-CIM macro of the same
+/// 128x128 geometry at the same clock.
+#[derive(Debug, Clone)]
+pub struct CimDataflowModel {
+    /// SRAM row write cycles (one 128-bit row per cycle per macro).
+    pub row_write_cycles: u64,
+    /// DRAM fetch energy per byte (off-chip, LPDDR4-class for edge).
+    pub dram_j_per_byte: f64,
+    /// SRAM write energy per bit.
+    pub sram_write_j_per_bit: f64,
+    /// On-chip buffer read energy per bit.
+    pub buffer_j_per_bit: f64,
+    /// MAC energy per bit-op (same digital datapath as DIRC).
+    pub mac_op_j: f64,
+    /// ReRAM sense energy per bit (QS only).
+    pub sense_bit_j: f64,
+    pub freq_hz: f64,
+}
+
+impl Default for CimDataflowModel {
+    fn default() -> Self {
+        CimDataflowModel {
+            row_write_cycles: 1,
+            dram_j_per_byte: 20.0e-12,
+            sram_write_j_per_bit: 50.0e-15,
+            buffer_j_per_bit: 15.0e-15,
+            mac_op_j: 0.85e-15,
+            sense_bit_j: 6.0e-15,
+            freq_hz: FREQ_HZ,
+        }
+    }
+}
+
+/// Cost of one retrieval pass.
+#[derive(Debug, Clone, Copy)]
+pub struct DataflowCost {
+    pub cycles: u64,
+    pub latency_s: f64,
+    pub energy_j: f64,
+    /// Fraction of cycles doing MAC work (array utilisation proxy).
+    pub compute_utilisation: f64,
+}
+
+impl CimDataflowModel {
+    /// Cost a `n x dim` INT`bits` retrieval for one query under `flow`,
+    /// using `NUM_CORES` macros of 128x128 cells.
+    pub fn cost(&self, flow: CimDataflow, n: usize, dim: usize, bits: usize) -> DataflowCost {
+        let macros = NUM_CORES as u64;
+        let cells = (MACRO_DIM * MACRO_DIM) as u64;
+        let db_bits = (n * dim * bits) as u64;
+        // Bit-serial MAC cycles if the whole DB were resident (the QS
+        // reference): slots * bits^2 per macro, striped across macros.
+        let slots_total = (n as u64 * dim as u64).div_ceil(cells);
+        let mac_cycles = slots_total.div_ceil(macros) * (bits * bits) as u64;
+        let mac_energy = mac_cycles as f64 * macros as f64 * cells as f64 * 2.0 * self.mac_op_j;
+
+        match flow {
+            CimDataflow::QueryStationary => {
+                // DIRC: single-cycle in-situ loads, no DRAM traffic.
+                let sense_cycles = slots_total.div_ceil(macros) * bits as u64;
+                let cycles = mac_cycles + sense_cycles;
+                let energy = mac_energy + db_bits as f64 * self.sense_bit_j;
+                DataflowCost {
+                    cycles,
+                    latency_s: cycles as f64 / self.freq_hz,
+                    energy_j: energy,
+                    compute_utilisation: mac_cycles as f64 / cycles as f64,
+                }
+            }
+            CimDataflow::WeightStationary => {
+                // SRAM plane holds one bit-plane of macros*cells bits; the
+                // DB is db_bits: refills = db_bits / (macros*cells), each
+                // refill is 128 row-writes per macro, sourced from DRAM.
+                let plane_bits = macros * cells;
+                let refills = db_bits.div_ceil(plane_bits);
+                let write_cycles = refills * MACRO_DIM as u64 * self.row_write_cycles;
+                let cycles = mac_cycles + write_cycles;
+                let energy = mac_energy
+                    + db_bits as f64 / 8.0 * self.dram_j_per_byte
+                    + db_bits as f64 * self.sram_write_j_per_bit;
+                DataflowCost {
+                    cycles,
+                    latency_s: cycles as f64 / self.freq_hz,
+                    energy_j: energy,
+                    compute_utilisation: mac_cycles as f64 / cycles as f64,
+                }
+            }
+            CimDataflow::InputStationary => {
+                // The query (dim*bits bits) occupies one row-equivalent;
+                // documents stream as inputs: one doc element column per
+                // cycle per macro, i.e. array utilisation ~ 1/128.
+                // Every document bit crosses the buffer hierarchy.
+                let stream_cycles = (n as u64 * dim as u64 * bits as u64)
+                    .div_ceil(macros * MACRO_DIM as u64);
+                let cycles = stream_cycles.max(mac_cycles * MACRO_DIM as u64);
+                let energy = mac_energy
+                    + db_bits as f64 / 8.0 * self.dram_j_per_byte
+                    + db_bits as f64 * self.buffer_j_per_bit;
+                DataflowCost {
+                    cycles,
+                    latency_s: cycles as f64 / self.freq_hz,
+                    energy_j: energy,
+                    compute_utilisation: (mac_cycles as f64) / cycles as f64,
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const N: usize = 8192;
+    const DIM: usize = 512;
+
+    #[test]
+    fn qs_beats_ws_beats_nothing() {
+        let m = CimDataflowModel::default();
+        let qs = m.cost(CimDataflow::QueryStationary, N, DIM, 8);
+        let ws = m.cost(CimDataflow::WeightStationary, N, DIM, 8);
+        let is = m.cost(CimDataflow::InputStationary, N, DIM, 8);
+        assert!(qs.latency_s < ws.latency_s);
+        assert!(qs.latency_s < is.latency_s);
+        assert!(qs.energy_j < ws.energy_j);
+        assert!(qs.energy_j < is.energy_j);
+    }
+
+    #[test]
+    fn ws_dominated_by_updates() {
+        // The paper's point: row-by-row updates swamp compute.
+        let m = CimDataflowModel::default();
+        let ws = m.cost(CimDataflow::WeightStationary, N, DIM, 8);
+        assert!(
+            ws.compute_utilisation < 0.5,
+            "WS utilisation {}",
+            ws.compute_utilisation
+        );
+    }
+
+    #[test]
+    fn is_has_terrible_utilisation() {
+        let m = CimDataflowModel::default();
+        let is = m.cost(CimDataflow::InputStationary, N, DIM, 8);
+        assert!(
+            is.compute_utilisation < 0.05,
+            "IS utilisation {}",
+            is.compute_utilisation
+        );
+    }
+
+    #[test]
+    fn qs_utilisation_high() {
+        let m = CimDataflowModel::default();
+        let qs = m.cost(CimDataflow::QueryStationary, N, DIM, 8);
+        assert!(qs.compute_utilisation > 0.8);
+    }
+
+    #[test]
+    fn energy_gap_is_orders_of_magnitude() {
+        let m = CimDataflowModel::default();
+        let qs = m.cost(CimDataflow::QueryStationary, N, DIM, 8);
+        let ws = m.cost(CimDataflow::WeightStationary, N, DIM, 8);
+        assert!(ws.energy_j / qs.energy_j > 3.0, "ratio {}", ws.energy_j / qs.energy_j);
+    }
+
+    #[test]
+    fn qs_latency_matches_chip_model_scale() {
+        // The dataflow abstraction must agree with the detailed chip
+        // model to first order (~5 µs for 4 MB).
+        let m = CimDataflowModel::default();
+        let qs = m.cost(CimDataflow::QueryStationary, N, DIM, 8);
+        let us = qs.latency_s * 1e6;
+        assert!((4.0..7.0).contains(&us), "{us} µs");
+    }
+}

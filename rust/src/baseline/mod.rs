@@ -1,0 +1,13 @@
+//! Baseline systems the paper compares against (or argues against).
+//!
+//! * [`gpu`]     — the RTX3090-class GPU cost model behind Table III.
+//! * [`cim`]     — SRAM-CIM weight-stationary and input-stationary
+//!   dataflow cost models behind the Sec III.B dataflow argument.
+//! * [`memtech`] — the Fig 2 mainstream-CIM-memory comparison.
+
+pub mod cim;
+pub mod gpu;
+pub mod memtech;
+
+pub use cim::{CimDataflow, CimDataflowModel};
+pub use gpu::GpuModel;

@@ -1,0 +1,241 @@
+//! Benchmark harness (offline replacement for `criterion`).
+//!
+//! Each `rust/benches/*.rs` target sets `harness = false` and drives a
+//! [`Bench`] session: named closures are warmed up, timed for a target
+//! duration, and reported as a table of median/mean/p95 with derived
+//! throughput. Also provides [`Table`], the fixed-width table printer the
+//! paper-reproduction benches use to emit their rows (EXPERIMENTS.md
+//! copies these tables verbatim).
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::Summary;
+
+/// One timed benchmark result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub summary: Summary, // seconds per iteration
+}
+
+impl BenchResult {
+    pub fn per_iter(&self) -> Duration {
+        Duration::from_secs_f64(self.summary.median)
+    }
+}
+
+/// A bench session: collects results, prints a report at the end.
+pub struct Bench {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_iters: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        // Honour quick-run env for CI: DIRC_BENCH_FAST=1 shrinks windows.
+        let fast = std::env::var("DIRC_BENCH_FAST").ok().as_deref() == Some("1");
+        Bench {
+            warmup: if fast { Duration::from_millis(50) } else { Duration::from_millis(300) },
+            measure: if fast { Duration::from_millis(200) } else { Duration::from_secs(1) },
+            min_iters: 5,
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f`, which performs one logical iteration per call. The return
+    /// value is folded into a black-box sink so the work is not elided.
+    pub fn run<R>(&mut self, name: &str, mut f: impl FnMut() -> R) -> &BenchResult {
+        // Warmup.
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            std::hint::black_box(f());
+        }
+        // Measure.
+        let mut samples = Vec::new();
+        let t0 = Instant::now();
+        while t0.elapsed() < self.measure || samples.len() < self.min_iters {
+            let it = Instant::now();
+            std::hint::black_box(f());
+            samples.push(it.elapsed().as_secs_f64());
+            if samples.len() >= 100_000 {
+                break;
+            }
+        }
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: samples.len(),
+            summary: Summary::of(&samples),
+        };
+        eprintln!(
+            "  bench {:<44} {:>12} median  {:>12} p95  ({} iters)",
+            res.name,
+            fmt_duration(res.summary.median),
+            fmt_duration(res.summary.p95),
+            res.iters
+        );
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    /// Print the final report table.
+    pub fn report(&self, title: &str) {
+        let mut t = Table::new(&["benchmark", "median", "mean", "p95", "iters"]);
+        for r in &self.results {
+            t.row(&[
+                r.name.clone(),
+                fmt_duration(r.summary.median),
+                fmt_duration(r.summary.mean),
+                fmt_duration(r.summary.p95),
+                r.iters.to_string(),
+            ]);
+        }
+        println!("\n=== {title} ===");
+        t.print();
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+/// Human-friendly duration formatting.
+pub fn fmt_duration(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3} s")
+    } else if secs >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3} µs", secs * 1e6)
+    } else {
+        format!("{:.1} ns", secs * 1e9)
+    }
+}
+
+/// Human-friendly SI formatting for counts/rates.
+pub fn fmt_si(x: f64) -> String {
+    let ax = x.abs();
+    if ax >= 1e12 {
+        format!("{:.2} T", x / 1e12)
+    } else if ax >= 1e9 {
+        format!("{:.2} G", x / 1e9)
+    } else if ax >= 1e6 {
+        format!("{:.2} M", x / 1e6)
+    } else if ax >= 1e3 {
+        format!("{:.2} k", x / 1e3)
+    } else {
+        format!("{x:.2}")
+    }
+}
+
+/// Fixed-width table printer used by the paper-reproduction benches.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row<S: AsRef<str>>(&mut self, cells: &[S]) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells.iter().map(|s| s.as_ref().to_string()).collect());
+    }
+
+    pub fn to_string(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.chars().count());
+            }
+        }
+        let mut out = String::new();
+        let emit_row = |out: &mut String, cells: &[String]| {
+            for i in 0..ncol {
+                let cell = &cells[i];
+                out.push_str("| ");
+                out.push_str(cell);
+                for _ in cell.chars().count()..widths[i] {
+                    out.push(' ');
+                }
+                out.push(' ');
+            }
+            out.push_str("|\n");
+        };
+        emit_row(&mut out, &self.headers);
+        for (i, w) in widths.iter().enumerate() {
+            out.push_str(if i == 0 { "|" } else { "|" });
+            for _ in 0..w + 2 {
+                out.push('-');
+            }
+        }
+        out.push_str("|\n");
+        for row in &self.rows {
+            emit_row(&mut out, row);
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.to_string());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        std::env::set_var("DIRC_BENCH_FAST", "1");
+        let mut b = Bench::new();
+        let r = b.run("spin", || {
+            let mut s = 0u64;
+            for i in 0..1000 {
+                s = s.wrapping_add(i);
+            }
+            s
+        });
+        assert!(r.iters >= 5);
+        assert!(r.summary.median > 0.0);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(&["short", "1"]);
+        t.row(&["a-much-longer-name", "123456"]);
+        let s = t.to_string();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines.iter().all(|l| l.len() == lines[0].len()));
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_duration(2.0), "2.000 s");
+        assert_eq!(fmt_duration(0.0025), "2.500 ms");
+        assert_eq!(fmt_duration(3.1e-6), "3.100 µs");
+        assert!(fmt_duration(5e-9).ends_with("ns"));
+        assert_eq!(fmt_si(131.0e12), "131.00 T");
+        assert_eq!(fmt_si(42.0), "42.00");
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn table_rejects_bad_row() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one"]);
+    }
+}

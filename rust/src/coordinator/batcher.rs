@@ -1,0 +1,162 @@
+//! Embed-batch assembly.
+//!
+//! The AOT embedder artifacts come in fixed batch sizes (1 and 32); the
+//! batcher groups queued token-queries into the largest available batch,
+//! flushing either when a batch fills or when the oldest request exceeds
+//! the deadline — the standard dynamic-batching policy of serving systems
+//! (vLLM-style), applied to the embedding front-end that dominates host
+//! work in DIRC-RAG serving.
+
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    /// Available batch sizes, ascending (from the artifact manifest).
+    pub sizes: Vec<usize>,
+    /// Max time the oldest request may wait before a forced flush.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { sizes: vec![1, 32], max_wait: Duration::from_millis(2) }
+    }
+}
+
+impl BatchPolicy {
+    /// Largest configured size <= n (n >= 1).
+    pub fn best_fit(&self, n: usize) -> usize {
+        self.sizes
+            .iter()
+            .copied()
+            .filter(|&s| s <= n)
+            .max()
+            .unwrap_or_else(|| self.sizes.first().copied().unwrap_or(1))
+    }
+
+    pub fn max_size(&self) -> usize {
+        self.sizes.iter().copied().max().unwrap_or(1)
+    }
+}
+
+/// An accumulating batch of pending items.
+#[derive(Debug)]
+pub struct Batcher<T> {
+    policy: BatchPolicy,
+    pending: Vec<T>,
+    oldest: Option<Instant>,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Batcher { policy, pending: Vec::new(), oldest: None }
+    }
+
+    pub fn push(&mut self, item: T) {
+        if self.pending.is_empty() {
+            self.oldest = Some(Instant::now());
+        }
+        self.pending.push(item);
+    }
+
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Should we flush now? Full batch, or deadline expired.
+    pub fn should_flush(&self) -> bool {
+        if self.pending.is_empty() {
+            return false;
+        }
+        if self.pending.len() >= self.policy.max_size() {
+            return true;
+        }
+        self.oldest
+            .map(|t| t.elapsed() >= self.policy.max_wait)
+            .unwrap_or(false)
+    }
+
+    /// Time remaining until the deadline would force a flush.
+    pub fn time_to_deadline(&self) -> Option<Duration> {
+        self.oldest.map(|t| self.policy.max_wait.saturating_sub(t.elapsed()))
+    }
+
+    /// Take up to one batch (the best-fitting artifact size).
+    pub fn take_batch(&mut self) -> Vec<T> {
+        let n = self.policy.best_fit(self.pending.len()).min(self.pending.len());
+        let rest = self.pending.split_off(n);
+        let batch = std::mem::replace(&mut self.pending, rest);
+        self.oldest = if self.pending.is_empty() { None } else { Some(Instant::now()) };
+        batch
+    }
+
+    pub fn policy(&self) -> &BatchPolicy {
+        &self.policy
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy(ms: u64) -> BatchPolicy {
+        BatchPolicy { sizes: vec![1, 32], max_wait: Duration::from_millis(ms) }
+    }
+
+    #[test]
+    fn best_fit_selection() {
+        let p = policy(2);
+        assert_eq!(p.best_fit(1), 1);
+        assert_eq!(p.best_fit(31), 1);
+        assert_eq!(p.best_fit(32), 32);
+        assert_eq!(p.best_fit(100), 32);
+    }
+
+    #[test]
+    fn flush_on_full() {
+        let mut b = Batcher::new(policy(1000));
+        for i in 0..32 {
+            assert!(!b.should_flush() || i == 32);
+            b.push(i);
+        }
+        assert!(b.should_flush());
+        let batch = b.take_batch();
+        assert_eq!(batch.len(), 32);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn flush_on_deadline() {
+        let mut b = Batcher::new(policy(0));
+        b.push(1u32);
+        assert!(b.should_flush());
+        assert_eq!(b.take_batch(), vec![1]);
+    }
+
+    #[test]
+    fn take_batch_leaves_remainder() {
+        let mut b = Batcher::new(policy(1000));
+        for i in 0..40 {
+            b.push(i);
+        }
+        let batch = b.take_batch();
+        assert_eq!(batch.len(), 32);
+        assert_eq!(b.len(), 8);
+        let batch2 = b.take_batch();
+        // 8 pending -> best fit is 1.
+        assert_eq!(batch2.len(), 1);
+        assert_eq!(b.len(), 7);
+    }
+
+    #[test]
+    fn empty_never_flushes() {
+        let b: Batcher<u32> = Batcher::new(policy(0));
+        assert!(!b.should_flush());
+        assert!(b.time_to_deadline().is_none());
+    }
+}

@@ -1,0 +1,178 @@
+//! Config-file binding: build [`ChipConfig`] / [`CoordinatorConfig`] from
+//! the TOML-subset files under `configs/` (layered: defaults <- file).
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::batcher::BatchPolicy;
+use crate::coordinator::server::CoordinatorConfig;
+use crate::dirc::chip::ChipConfig;
+use crate::dirc::detect::ResensePolicy;
+use crate::dirc::variation::VariationModel;
+use crate::dirc::RemapStrategy;
+use crate::retrieval::quant::QuantScheme;
+use crate::retrieval::score::Metric;
+use crate::util::config::Config;
+
+/// Parse a remap strategy name.
+pub fn parse_remap(s: &str) -> Result<RemapStrategy> {
+    match s {
+        "interleaved" => Ok(RemapStrategy::Interleaved),
+        "random" => Ok(RemapStrategy::Random { seed: 1 }),
+        "error-aware" => Ok(RemapStrategy::ErrorAware),
+        other => Err(anyhow!("unknown remap strategy {other:?}")),
+    }
+}
+
+/// Parse a quantisation scheme name.
+pub fn parse_quant(s: &str) -> Result<QuantScheme> {
+    match s {
+        "fp32" => Ok(QuantScheme::Fp32),
+        "int8" => Ok(QuantScheme::Int8),
+        "int4" => Ok(QuantScheme::Int4),
+        other => Err(anyhow!("unknown quantisation {other:?}")),
+    }
+}
+
+/// Build a [`ChipConfig`] from a layered config.
+pub fn chip_config(cfg: &Config) -> Result<ChipConfig> {
+    let metric = Metric::parse(&cfg.str_or("chip.metric", "cosine"))
+        .ok_or_else(|| anyhow!("chip.metric must be cosine|mips"))?;
+    let dim = cfg.usize_or("chip.dim", 512);
+    let mut chip = ChipConfig::paper_default(dim, metric);
+    chip.bits = cfg.usize_or("chip.bits", 8);
+    chip.detect = cfg.bool_or("chip.detect", true);
+    chip.remap = parse_remap(&cfg.str_or("chip.remap", "error-aware"))?;
+    chip.cores = cfg.usize_or("chip.cores", chip.cores);
+    chip.map_points = cfg.usize_or("chip.map_points", chip.map_points);
+    chip.resense = ResensePolicy {
+        max_retries: cfg.usize_or("chip.max_resense_retries", 8),
+    };
+    chip.seed = cfg.int_or("chip.seed", chip.seed as i64) as u64;
+    chip.variation = VariationModel {
+        corner: cfg.float_or("variation.corner", 1.0),
+        reram_sigma: cfg.float_or("variation.reram_sigma", 0.1),
+        ..VariationModel::default()
+    };
+    if chip.bits != 4 && chip.bits != 8 {
+        return Err(anyhow!("chip.bits must be 4 or 8"));
+    }
+    if chip.dim % 128 != 0 {
+        return Err(anyhow!("chip.dim must be a multiple of 128"));
+    }
+    Ok(chip)
+}
+
+/// Build a [`CoordinatorConfig`] from a layered config.
+pub fn coordinator_config(cfg: &Config) -> Result<CoordinatorConfig> {
+    let sizes = cfg
+        .int_arr("serving.embed_batch_sizes")
+        .unwrap_or_else(|_| vec![1, 32])
+        .into_iter()
+        .map(|v| v.max(1) as usize)
+        .collect();
+    Ok(CoordinatorConfig {
+        workers: cfg.usize_or("serving.workers", 3),
+        batch: BatchPolicy {
+            sizes,
+            max_wait: std::time::Duration::from_millis(
+                cfg.int_or("serving.embed_max_wait_ms", 2).max(0) as u64,
+            ),
+        },
+        scheme: parse_quant(&cfg.str_or("serving.query_quant", "int8"))?,
+        seed: cfg.int_or("chip.seed", 0xC00D) as u64,
+    })
+}
+
+/// Load `configs/default.toml` (if present) layered under `path`.
+pub fn load_layered(path: Option<&str>) -> Result<Config> {
+    let mut cfg = Config::default();
+    let default_path = std::path::Path::new("configs/default.toml");
+    if default_path.exists() {
+        cfg = Config::from_file(default_path)?;
+    }
+    if let Some(p) = path {
+        cfg.overlay(&Config::from_file(p)?);
+    }
+    Ok(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+[chip]
+bits = 4
+dim = 256
+metric = "mips"
+detect = false
+remap = "interleaved"
+cores = 4
+map_points = 77
+
+[variation]
+corner = 2.5
+
+[serving]
+workers = 5
+embed_batch_sizes = [1, 8, 32]
+query_quant = "int4"
+"#;
+
+    #[test]
+    fn chip_config_from_toml() {
+        let cfg = Config::parse(SAMPLE).unwrap();
+        let chip = chip_config(&cfg).unwrap();
+        assert_eq!(chip.bits, 4);
+        assert_eq!(chip.dim, 256);
+        assert_eq!(chip.metric, Metric::Mips);
+        assert!(!chip.detect);
+        assert_eq!(chip.remap, RemapStrategy::Interleaved);
+        assert_eq!(chip.cores, 4);
+        assert_eq!(chip.map_points, 77);
+        assert!((chip.variation.corner - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn coordinator_config_from_toml() {
+        let cfg = Config::parse(SAMPLE).unwrap();
+        let c = coordinator_config(&cfg).unwrap();
+        assert_eq!(c.workers, 5);
+        assert_eq!(c.batch.sizes, vec![1, 8, 32]);
+        assert_eq!(c.scheme, QuantScheme::Int4);
+    }
+
+    #[test]
+    fn defaults_when_empty() {
+        let cfg = Config::parse("").unwrap();
+        let chip = chip_config(&cfg).unwrap();
+        assert_eq!(chip.bits, 8);
+        assert_eq!(chip.dim, 512);
+        assert_eq!(chip.cores, 16);
+        let c = coordinator_config(&cfg).unwrap();
+        assert_eq!(c.batch.sizes, vec![1, 32]);
+    }
+
+    #[test]
+    fn invalid_values_rejected() {
+        let bad_bits = Config::parse("[chip]\nbits = 6").unwrap();
+        assert!(chip_config(&bad_bits).is_err());
+        let bad_dim = Config::parse("[chip]\ndim = 200").unwrap();
+        assert!(chip_config(&bad_dim).is_err());
+        let bad_metric = Config::parse("[chip]\nmetric = \"dot\"").unwrap();
+        assert!(chip_config(&bad_metric).is_err());
+    }
+
+    #[test]
+    fn repo_config_files_parse() {
+        // The shipped config files must bind cleanly (paths relative to
+        // the workspace root; skip if running elsewhere).
+        let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+        for name in ["default.toml", "stressed_corner.toml"] {
+            let p = root.join("configs").join(name);
+            let cfg = Config::from_file(&p).unwrap();
+            chip_config(&cfg).unwrap();
+            coordinator_config(&cfg).unwrap();
+        }
+    }
+}

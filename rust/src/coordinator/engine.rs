@@ -1,0 +1,200 @@
+//! Retrieval engines.
+//!
+//! [`SimEngine`] — the pure DIRC chip simulator: bit-exact integer scores
+//! with sensing-error injection, used by the evaluation sweeps (Table II,
+//! Fig 6) and as the oracle for the serving engine.
+//!
+//! [`ServingEngine`] — the production path: per-core document blocks are
+//! device-resident PJRT buffers; scores come from the AOT-compiled L2
+//! graph (`mips_dot_*` artifacts), sensing-error *corrections* and all
+//! cycle/energy accounting come from the chip simulator, finalisation
+//! (cosine, top-k merge) runs in Rust. Results are bit-identical to
+//! `SimEngine` by construction — asserted in `rust/tests/`.
+
+use anyhow::Result;
+
+use crate::dirc::chip::{ChipConfig, DircChip, QueryStats};
+use crate::retrieval::quant::Quantized;
+use crate::retrieval::score::{finalize_scores, norm_i8, Metric};
+use crate::retrieval::topk::{ScoredDoc, TopK};
+use crate::runtime::{PjrtRuntime, ResidentDb};
+use crate::util::rng::Pcg;
+
+/// A retrieval engine: quantised query in, ranked documents + hardware
+/// stats out.
+pub trait Engine: Send + Sync {
+    fn retrieve(&self, q: &[i8], k: usize, rng: &mut Pcg) -> (Vec<ScoredDoc>, QueryStats);
+
+    fn dim(&self) -> usize;
+
+    fn n_docs(&self) -> usize;
+}
+
+/// Pure-simulator engine.
+pub struct SimEngine {
+    chip: DircChip,
+}
+
+impl SimEngine {
+    pub fn new(cfg: ChipConfig, db: &Quantized) -> SimEngine {
+        SimEngine { chip: DircChip::build(cfg, db) }
+    }
+
+    pub fn chip(&self) -> &DircChip {
+        &self.chip
+    }
+}
+
+impl Engine for SimEngine {
+    fn retrieve(&self, q: &[i8], k: usize, rng: &mut Pcg) -> (Vec<ScoredDoc>, QueryStats) {
+        self.chip.query(q, k, rng)
+    }
+
+    fn dim(&self) -> usize {
+        self.chip.cfg.dim
+    }
+
+    fn n_docs(&self) -> usize {
+        self.chip.n_docs()
+    }
+}
+
+/// PJRT-fused serving engine.
+///
+/// Per query: one `sense_pass` over the chip simulator (flips + full
+/// cycle/energy accounting, no functional compute) and **one** PJRT
+/// execution of a whole-database `mips_plain` block (a single fused XLA
+/// dot), followed by exact flip corrections, metric finalisation and one
+/// top-k in Rust. Compared to the original per-core exec fan-out this cut
+/// retrieve latency ~14x (EXPERIMENTS.md §Perf).
+pub struct ServingEngine {
+    chip: DircChip,
+    runtime: std::sync::Arc<PjrtRuntime>,
+    /// The whole database, resident on the PJRT device.
+    block: ResidentDb,
+    /// Stored norms (all docs, for cosine finalisation).
+    norms: Vec<f32>,
+    /// Doc-id base per core (for flip corrections).
+    bases: Vec<u64>,
+    metric: Metric,
+}
+
+impl ServingEngine {
+    /// Build from a quantised database, picking the smallest `mips_plain`
+    /// artifact block that covers it.
+    pub fn new(
+        cfg: ChipConfig,
+        db: &Quantized,
+        runtime: std::sync::Arc<PjrtRuntime>,
+    ) -> Result<ServingEngine> {
+        let metric = cfg.metric;
+        let chip = DircChip::build(cfg, db);
+        let artifact = runtime
+            .manifest()
+            .best_block("mips_plain", db.n.max(1), db.dim)?
+            .name
+            .clone();
+        let block = runtime.upload_db(&artifact, &db.values, db.n, db.dim, None)?;
+        let per_core = db.n.div_ceil(chip.cores().len());
+        let bases = (0..chip.cores().len())
+            .map(|c| ((c * per_core).min(db.n)) as u64)
+            .collect();
+        Ok(ServingEngine {
+            chip,
+            runtime,
+            block,
+            norms: db.norms.clone(),
+            bases,
+            metric,
+        })
+    }
+
+    pub fn chip(&self) -> &DircChip {
+        &self.chip
+    }
+
+    pub fn runtime(&self) -> &PjrtRuntime {
+        &self.runtime
+    }
+}
+
+impl Engine for ServingEngine {
+    fn retrieve(&self, q: &[i8], k: usize, rng: &mut Pcg) -> (Vec<ScoredDoc>, QueryStats) {
+        let q_norm = norm_i8(q);
+
+        // Hardware pass: sensing + accounting (no functional compute).
+        let (per_core_flips, stats) = self.chip.sense_pass(k, rng);
+
+        // Functional pass: one PJRT execution for the whole database.
+        let ips = self
+            .runtime
+            .mips_scores(&self.block, q)
+            .expect("PJRT execution failed on the serve path");
+        let mut ips: Vec<i64> = ips.into_iter().map(|v| v as i64).collect();
+
+        // Exact flip corrections, offset into the global doc space.
+        for (c, flips) in per_core_flips.iter().enumerate() {
+            let core = &self.chip.cores()[c];
+            let base = self.bases[c] as usize;
+            for (doc, dq) in core.macro_().score_corrections(flips, q) {
+                ips[base + doc as usize] += dq;
+            }
+        }
+
+        let scores = finalize_scores(
+            &ips,
+            self.metric,
+            if self.metric == Metric::Cosine { Some(&self.norms) } else { None },
+            q_norm,
+        );
+        let mut topk = TopK::new(k);
+        for (i, &s) in scores.iter().enumerate() {
+            topk.push(ScoredDoc { doc_id: i as u64, score: s });
+        }
+        (topk.into_sorted(), stats)
+    }
+
+    fn dim(&self) -> usize {
+        self.chip.cfg.dim
+    }
+
+    fn n_docs(&self) -> usize {
+        self.chip.n_docs()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::retrieval::quant::{quantize, random_unit_rows, QuantScheme};
+
+    fn db(n: usize, dim: usize, seed: u64) -> Quantized {
+        let mut rng = Pcg::new(seed);
+        let fp = random_unit_rows(n, dim, &mut rng);
+        quantize(&fp, n, dim, QuantScheme::Int8)
+    }
+
+    fn cfg(dim: usize, cores: usize) -> ChipConfig {
+        ChipConfig {
+            cores,
+            map_points: 40,
+            ..ChipConfig::paper_default(dim, Metric::Cosine)
+        }
+    }
+
+    #[test]
+    fn sim_engine_retrieves() {
+        let q = db(300, 128, 1);
+        let eng = SimEngine::new(cfg(128, 4), &q);
+        let mut rng = Pcg::new(2);
+        let qv: Vec<i8> = (0..128).map(|_| rng.int_in(-128, 127) as i8).collect();
+        let (top, stats) = eng.retrieve(&qv, 5, &mut rng);
+        assert_eq!(top.len(), 5);
+        assert!(stats.latency_s > 0.0);
+        assert_eq!(eng.n_docs(), 300);
+        assert_eq!(eng.dim(), 128);
+    }
+
+    // ServingEngine vs SimEngine equivalence lives in rust/tests/
+    // integration tests (needs built artifacts).
+}

@@ -1,0 +1,176 @@
+//! Serving metrics: throughput, latency distribution, simulated hardware
+//! totals. Shared across worker threads behind a mutex (updates are tiny
+//! compared to retrieval work; see §Perf).
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::stats::{Histogram, Welford};
+
+/// Aggregated serving metrics.
+#[derive(Debug)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+    started: Instant,
+}
+
+#[derive(Debug)]
+struct Inner {
+    served: u64,
+    errors: u64,
+    host_latency: Welford,
+    host_hist: Histogram,
+    embed_s: Welford,
+    retrieve_s: Welford,
+    sim_latency_s: Welford,
+    sim_energy_j: Welford,
+    sim_flips: u64,
+    sim_resenses: u64,
+}
+
+/// Snapshot of metrics at a point in time.
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    pub served: u64,
+    pub errors: u64,
+    pub uptime_s: f64,
+    pub qps: f64,
+    pub host_latency_mean_s: f64,
+    pub host_latency_p95_s: f64,
+    pub embed_mean_s: f64,
+    pub retrieve_mean_s: f64,
+    pub sim_latency_mean_s: f64,
+    pub sim_energy_mean_j: f64,
+    pub sim_flips: u64,
+    pub sim_resenses: u64,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics {
+            inner: Mutex::new(Inner {
+                served: 0,
+                errors: 0,
+                host_latency: Welford::default(),
+                host_hist: Histogram::new(100e-6, 10_000), // 100 µs buckets, 1 s span
+                embed_s: Welford::default(),
+                retrieve_s: Welford::default(),
+                sim_latency_s: Welford::default(),
+                sim_energy_j: Welford::default(),
+                sim_flips: 0,
+                sim_resenses: 0,
+            }),
+            started: Instant::now(),
+        }
+    }
+
+    /// Record one served response.
+    pub fn record(&self, resp: &crate::coordinator::request::Response) {
+        let mut m = self.inner.lock().unwrap();
+        m.served += 1;
+        m.host_latency.push(resp.total_s);
+        m.host_hist.record(resp.total_s);
+        m.embed_s.push(resp.embed_s);
+        m.retrieve_s.push(resp.retrieve_s);
+        m.sim_latency_s.push(resp.stats.latency_s);
+        m.sim_energy_j.push(resp.stats.energy_j);
+        m.sim_flips += resp.stats.sense.flips;
+        m.sim_resenses += resp.stats.sense.resenses;
+    }
+
+    pub fn record_error(&self) {
+        self.inner.lock().unwrap().errors += 1;
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        let m = self.inner.lock().unwrap();
+        let uptime = self.started.elapsed().as_secs_f64();
+        Snapshot {
+            served: m.served,
+            errors: m.errors,
+            uptime_s: uptime,
+            qps: m.served as f64 / uptime.max(1e-9),
+            host_latency_mean_s: m.host_latency.mean(),
+            host_latency_p95_s: m.host_hist.percentile(95.0),
+            embed_mean_s: m.embed_s.mean(),
+            retrieve_mean_s: m.retrieve_s.mean(),
+            sim_latency_mean_s: m.sim_latency_s.mean(),
+            sim_energy_mean_j: m.sim_energy_j.mean(),
+            sim_flips: m.sim_flips,
+            sim_resenses: m.sim_resenses,
+        }
+    }
+}
+
+impl Snapshot {
+    pub fn render(&self) -> String {
+        format!(
+            concat!(
+                "served={} errors={} uptime={:.1}s qps={:.1}\n",
+                "host latency: mean {:.3} ms, p95 {:.3} ms ",
+                "(embed {:.3} ms, retrieve {:.3} ms)\n",
+                "simulated chip: latency {:.2} µs/query, energy {:.3} µJ/query, ",
+                "{} flips, {} re-senses\n",
+            ),
+            self.served,
+            self.errors,
+            self.uptime_s,
+            self.qps,
+            self.host_latency_mean_s * 1e3,
+            self.host_latency_p95_s * 1e3,
+            self.embed_mean_s * 1e3,
+            self.retrieve_mean_s * 1e3,
+            self.sim_latency_mean_s * 1e6,
+            self.sim_energy_mean_j * 1e6,
+            self.sim_flips,
+            self.sim_resenses,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::Response;
+    use crate::dirc::chip::QueryStats;
+    use crate::dirc::macro_::SenseStats;
+
+    fn fake_response(total_s: f64) -> Response {
+        Response {
+            id: 1,
+            topk: vec![],
+            stats: QueryStats {
+                sense: SenseStats { flips: 3, resenses: 1, ..SenseStats::default() },
+                cycles: 1400,
+                latency_s: 5.6e-6,
+                energy_j: 0.95e-6,
+                docs_scored: 100,
+            },
+            embed_s: 1e-4,
+            retrieve_s: 2e-4,
+            total_s,
+        }
+    }
+
+    #[test]
+    fn record_and_snapshot() {
+        let m = Metrics::new();
+        for i in 0..10 {
+            m.record(&fake_response(1e-3 * (i + 1) as f64));
+        }
+        m.record_error();
+        let s = m.snapshot();
+        assert_eq!(s.served, 10);
+        assert_eq!(s.errors, 1);
+        assert!((s.host_latency_mean_s - 5.5e-3).abs() < 1e-6);
+        assert_eq!(s.sim_flips, 30);
+        assert_eq!(s.sim_resenses, 10);
+        assert!(s.render().contains("served=10"));
+    }
+}

@@ -1,0 +1,26 @@
+//! The serving coordinator — the L3 request path.
+//!
+//! DIRC-RAG is a retrieval accelerator, so the coordinator is shaped like
+//! a retrieval server: queries arrive (as text-token keyword lists or raw
+//! embeddings), are batched through the AOT-compiled embedding MLP,
+//! quantised, and dispatched to the retrieval engine — the DIRC chip
+//! simulator for hardware accounting fused with the PJRT executables for
+//! the functional scores. Python never runs here.
+//!
+//! * [`request`] — request/response types.
+//! * [`engine`]  — the retrieval engines (PJRT-fused serving engine and
+//!   the pure-simulator engine used by evaluation sweeps).
+//! * [`batcher`] — embed-batch assembly (size/deadline policy).
+//! * [`metrics`] — latency/throughput accounting.
+//! * [`server`]  — worker threads, channels, lifecycle.
+
+pub mod batcher;
+pub mod configfile;
+pub mod engine;
+pub mod metrics;
+pub mod request;
+pub mod server;
+
+pub use engine::{Engine, ServingEngine, SimEngine};
+pub use request::{Query, Request, Response};
+pub use server::{Coordinator, CoordinatorConfig};

@@ -1,0 +1,53 @@
+//! Request/response types of the serving path.
+
+use crate::dirc::chip::QueryStats;
+use crate::retrieval::topk::ScoredDoc;
+
+/// Query payload: either raw text tokens (embedded on-path through the
+/// AOT MLP) or a pre-computed FP32 embedding.
+#[derive(Debug, Clone)]
+pub enum Query {
+    Tokens(Vec<u32>),
+    Embedding(Vec<f32>),
+}
+
+/// One retrieval request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub query: Query,
+    pub k: usize,
+}
+
+/// The response: ranked documents + hardware accounting + wall times.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub topk: Vec<ScoredDoc>,
+    /// Simulated chip statistics (latency/energy of the accelerator).
+    pub stats: QueryStats,
+    /// Host wall-clock: embed time (s), shared across the batch.
+    pub embed_s: f64,
+    /// Host wall-clock: retrieval compute (s).
+    pub retrieve_s: f64,
+    /// End-to-end host latency from submission (s).
+    pub total_s: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn query_variants() {
+        let t = Query::Tokens(vec![1, 2, 3]);
+        let e = Query::Embedding(vec![0.5; 8]);
+        match (&t, &e) {
+            (Query::Tokens(toks), Query::Embedding(emb)) => {
+                assert_eq!(toks.len(), 3);
+                assert_eq!(emb.len(), 8);
+            }
+            _ => unreachable!(),
+        }
+    }
+}

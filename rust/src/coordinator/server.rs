@@ -1,0 +1,311 @@
+//! The coordinator server: ingest thread (embed batching + quantisation)
+//! feeding a pool of retrieval workers, with shared metrics and graceful
+//! shutdown. Thread-based by design: PJRT execution is a blocking FFI
+//! call, so threads + channels beat an async runtime here (see DESIGN.md
+//! environment substitutions).
+//!
+//! Topology:
+//!
+//! ```text
+//!  submit() -> ingest queue -> [ingest thread: batcher -> PJRT embed ->
+//!      quantise] -> work queue -> [N retrieval workers: Engine] ->
+//!      per-request response channel
+//! ```
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::batcher::{BatchPolicy, Batcher};
+use crate::coordinator::engine::Engine;
+use crate::coordinator::metrics::{Metrics, Snapshot};
+use crate::coordinator::request::{Query, Request, Response};
+use crate::data::text::{bow_features, HASH_BUCKETS};
+use crate::retrieval::quant::QuantScheme;
+use crate::runtime::PjrtRuntime;
+use crate::util::rng::Pcg;
+
+/// Coordinator configuration.
+#[derive(Clone)]
+pub struct CoordinatorConfig {
+    pub workers: usize,
+    pub batch: BatchPolicy,
+    /// Quantisation applied to query embeddings (must match the DB).
+    pub scheme: QuantScheme,
+    pub seed: u64,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            workers: crate::util::pool::default_threads().min(4),
+            batch: BatchPolicy::default(),
+            scheme: QuantScheme::Int8,
+            seed: 0xC00D,
+        }
+    }
+}
+
+struct Pending {
+    req: Request,
+    submitted: Instant,
+    resp_tx: Sender<Response>,
+}
+
+struct WorkItem {
+    pending: Pending,
+    q_int: Vec<i8>,
+    embed_s: f64,
+}
+
+/// Running coordinator handle.
+pub struct Coordinator {
+    ingest_tx: Option<Sender<Pending>>,
+    threads: Vec<JoinHandle<()>>,
+    metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+    stop: Arc<AtomicBool>,
+}
+
+impl Coordinator {
+    /// Start the coordinator over an engine and a PJRT runtime (used for
+    /// on-path query embedding of token queries).
+    pub fn start(
+        engine: Arc<dyn Engine>,
+        runtime: Arc<PjrtRuntime>,
+        cfg: CoordinatorConfig,
+    ) -> Coordinator {
+        let metrics = Arc::new(Metrics::new());
+        let stop = Arc::new(AtomicBool::new(false));
+        let (ingest_tx, ingest_rx) = channel::<Pending>();
+        let (work_tx, work_rx) = channel::<WorkItem>();
+        let work_rx = Arc::new(Mutex::new(work_rx));
+
+        let mut threads = Vec::new();
+
+        // Ingest thread: batches token queries through the embedder.
+        {
+            let runtime = Arc::clone(&runtime);
+            let cfg2 = cfg.clone();
+            let stop2 = Arc::clone(&stop);
+            let metrics2 = Arc::clone(&metrics);
+            threads.push(
+                std::thread::Builder::new()
+                    .name("dirc-ingest".into())
+                    .spawn(move || {
+                        ingest_loop(ingest_rx, work_tx, runtime, cfg2, stop2, metrics2)
+                    })
+                    .expect("spawn ingest"),
+            );
+        }
+
+        // Retrieval workers.
+        for w in 0..cfg.workers.max(1) {
+            let engine = Arc::clone(&engine);
+            let work_rx = Arc::clone(&work_rx);
+            let metrics2 = Arc::clone(&metrics);
+            let seed = cfg.seed ^ (w as u64) << 32;
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("dirc-worker-{w}"))
+                    .spawn(move || worker_loop(work_rx, engine, metrics2, seed))
+                    .expect("spawn worker"),
+            );
+        }
+
+        Coordinator {
+            ingest_tx: Some(ingest_tx),
+            threads,
+            metrics,
+            next_id: AtomicU64::new(1),
+            stop,
+        }
+    }
+
+    /// Submit a request; returns the response channel.
+    pub fn submit(&self, query: Query, k: usize) -> Result<(u64, Receiver<Response>)> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (resp_tx, resp_rx) = channel();
+        let pending = Pending {
+            req: Request { id, query, k },
+            submitted: Instant::now(),
+            resp_tx,
+        };
+        self.ingest_tx
+            .as_ref()
+            .ok_or_else(|| anyhow!("coordinator stopped"))?
+            .send(pending)
+            .map_err(|_| anyhow!("ingest thread gone"))?;
+        Ok((id, resp_rx))
+    }
+
+    pub fn metrics(&self) -> Snapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Graceful shutdown: drain queues, stop threads.
+    pub fn shutdown(mut self) -> Snapshot {
+        self.stop.store(true, Ordering::SeqCst);
+        self.ingest_tx.take(); // close ingest channel
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+        self.metrics.snapshot()
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.ingest_tx.take();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+fn ingest_loop(
+    rx: Receiver<Pending>,
+    work_tx: Sender<WorkItem>,
+    runtime: Arc<PjrtRuntime>,
+    cfg: CoordinatorConfig,
+    stop: Arc<AtomicBool>,
+    metrics: Arc<Metrics>,
+) {
+    let mut batcher: Batcher<Pending> = Batcher::new(cfg.batch.clone());
+    loop {
+        // Wait for work, bounded by the batch deadline.
+        let timeout = batcher
+            .time_to_deadline()
+            .unwrap_or(std::time::Duration::from_millis(50));
+        match rx.recv_timeout(timeout) {
+            Ok(p) => batcher.push(p),
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                // Drain what's left, then exit.
+                while !batcher.is_empty() {
+                    flush(&mut batcher, &work_tx, &runtime, &cfg, &metrics);
+                }
+                return;
+            }
+        }
+        while batcher.should_flush() || (stop.load(Ordering::SeqCst) && !batcher.is_empty()) {
+            flush(&mut batcher, &work_tx, &runtime, &cfg, &metrics);
+        }
+    }
+}
+
+fn flush(
+    batcher: &mut Batcher<Pending>,
+    work_tx: &Sender<WorkItem>,
+    runtime: &PjrtRuntime,
+    cfg: &CoordinatorConfig,
+    metrics: &Metrics,
+) {
+    let batch = batcher.take_batch();
+    if batch.is_empty() {
+        return;
+    }
+    // Split raw-embedding requests (no embed needed) from token requests.
+    let mut token_items: Vec<Pending> = Vec::new();
+    let mut ready: Vec<(Pending, Vec<f32>, f64)> = Vec::new();
+    for p in batch {
+        match &p.req.query {
+            Query::Embedding(e) => {
+                let e = e.clone();
+                ready.push((p, e, 0.0));
+            }
+            Query::Tokens(_) => token_items.push(p),
+        }
+    }
+    if !token_items.is_empty() {
+        let t0 = Instant::now();
+        let feats: Vec<f32> = token_items
+            .iter()
+            .flat_map(|p| match &p.req.query {
+                Query::Tokens(toks) => bow_features(toks),
+                Query::Embedding(_) => unreachable!(),
+            })
+            .collect();
+        let b = token_items.len();
+        // Pad the feature batch up to an available artifact batch size.
+        let batch_size = cfg
+            .batch
+            .sizes
+            .iter()
+            .copied()
+            .find(|&s| s >= b)
+            .unwrap_or_else(|| cfg.batch.max_size());
+        let embedded: Result<Vec<f32>> = if batch_size == b {
+            runtime.embed(&feats, b)
+        } else {
+            let mut padded = feats.clone();
+            padded.resize(batch_size * HASH_BUCKETS, 0.0);
+            runtime.embed(&padded, batch_size)
+        };
+        match embedded {
+            Ok(emb) => {
+                let dt = t0.elapsed().as_secs_f64();
+                let dim = emb.len() / batch_size;
+                for (i, p) in token_items.into_iter().enumerate() {
+                    let e = emb[i * dim..(i + 1) * dim].to_vec();
+                    ready.push((p, e, dt / b as f64));
+                }
+            }
+            Err(err) => {
+                log::error!("embed batch failed: {err:#}");
+                for _ in &token_items {
+                    metrics.record_error();
+                }
+                return;
+            }
+        }
+    }
+    // Quantise queries and hand to workers.
+    for (p, emb, embed_s) in ready {
+        let q = crate::retrieval::quant::quantize(&emb, 1, emb.len(), cfg.scheme);
+        let item = WorkItem { pending: p, q_int: q.values, embed_s };
+        if work_tx.send(item).is_err() {
+            metrics.record_error();
+        }
+    }
+}
+
+fn worker_loop(
+    work_rx: Arc<Mutex<Receiver<WorkItem>>>,
+    engine: Arc<dyn Engine>,
+    metrics: Arc<Metrics>,
+    seed: u64,
+) {
+    let mut rng = Pcg::new(seed);
+    loop {
+        let item = {
+            let guard = work_rx.lock().unwrap();
+            guard.recv()
+        };
+        let Ok(item) = item else { return };
+        let t0 = Instant::now();
+        let (topk, stats) = engine.retrieve(&item.q_int, item.pending.req.k, &mut rng);
+        let retrieve_s = t0.elapsed().as_secs_f64();
+        let resp = Response {
+            id: item.pending.req.id,
+            topk,
+            stats,
+            embed_s: item.embed_s,
+            retrieve_s,
+            total_s: item.pending.submitted.elapsed().as_secs_f64(),
+        };
+        metrics.record(&resp);
+        let _ = item.pending.resp_tx.send(resp);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Coordinator integration tests (with PJRT) live in rust/tests/;
+    // unit coverage for batcher/metrics in their modules.
+}

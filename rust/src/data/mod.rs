@@ -1,0 +1,25 @@
+//! Synthetic BEIR-like datasets (the paper's Sec IV.A software setup).
+//!
+//! The paper evaluates retrieval precision on five BEIR datasets embedded
+//! with all-MiniLM / SentenceBERT at dimension 512. Neither the corpora
+//! nor the embedding model are available offline, so — per the DESIGN.md
+//! substitution rule — we generate corpora whose *embedding geometry*
+//! matches what the precision experiments actually exercise: topic
+//! clusters on the unit sphere, queries generated near their relevant
+//! documents, with per-dataset difficulty calibrated so the FP32 P@k
+//! falls in the paper's range. Document counts match the paper's
+//! embedding-size column (MB at FP32/512-dim).
+//!
+//! * [`registry`] — per-dataset descriptors (doc counts, difficulty).
+//! * [`synth`]    — the embedding-space generator + qrels.
+//! * [`text`]     — the token-level front-end for the end-to-end demo:
+//!   synthetic token corpora hashed to bag-of-words vectors and embedded
+//!   through the AOT-compiled MLP (the all-MiniLM stand-in), so the
+//!   serving path exercises text -> embed -> retrieve.
+
+pub mod registry;
+pub mod synth;
+pub mod text;
+
+pub use registry::{dataset_by_name, paper_datasets, DatasetSpec};
+pub use synth::{SynthDataset, SynthParams};

@@ -1,0 +1,176 @@
+//! Dataset registry: the paper's five BEIR datasets as synthetic specs.
+//!
+//! Document counts are derived from Table II's FP32 embedding sizes at
+//! dim 512 (`n = MB * 1e6 / (512 * 4)`); query counts follow the BEIR
+//! test splits. Difficulty knobs (cluster count, noise levels, relevant
+//! docs per query) are calibrated so the FP32 P@k lands near the paper's
+//! values — the experiments then measure the *relative* effect of
+//! quantisation and sensing errors, which is what Table II / Fig 6 test.
+
+use crate::data::synth::SynthParams;
+
+/// A dataset descriptor.
+#[derive(Debug, Clone)]
+pub struct DatasetSpec {
+    pub name: &'static str,
+    pub n_docs: usize,
+    pub n_queries: usize,
+    pub dim: usize,
+    /// Table II FP32 embedding size (MB), for the size columns.
+    pub fp32_mb: f64,
+    pub params: SynthParams,
+    /// Sampling factor applied in the paper to fit DIRC (TREC-COVID 16x,
+    /// SciDocs 3x).
+    pub sample_factor: usize,
+}
+
+impl DatasetSpec {
+    /// Embedding size in MB at a given bits-per-dim.
+    pub fn embedding_mb(&self, bits: usize) -> f64 {
+        self.n_docs as f64 * self.dim as f64 * bits as f64 / 8.0 / 1e6
+    }
+}
+
+/// The paper's five datasets (Table II rows).
+pub fn paper_datasets() -> Vec<DatasetSpec> {
+    vec![
+        DatasetSpec {
+            name: "scifact",
+            n_docs: 3706,
+            n_queries: 300,
+            dim: 512,
+            fp32_mb: 7.59,
+            params: SynthParams {
+                topics: 128,
+                doc_noise: 0.55,
+                rels_per_query: 1,
+                extra_rel_range: 0,
+                query_noise: 0.6,
+                confuse: 1.5,
+                aniso: 1.0,
+                seed: 0x5C1F,
+            },
+            sample_factor: 1,
+        },
+        DatasetSpec {
+            name: "nfcorpus",
+            n_docs: 2597,
+            n_queries: 323,
+            dim: 512,
+            fp32_mb: 5.32,
+            params: SynthParams {
+                topics: 32,
+                doc_noise: 0.60,
+                rels_per_query: 6,
+                extra_rel_range: 10,
+                query_noise: 0.6,
+                confuse: 1.8,
+                aniso: 1.0,
+                seed: 0x4FC0,
+            },
+            sample_factor: 1,
+        },
+        DatasetSpec {
+            name: "trec-covid",
+            n_docs: 7656,
+            n_queries: 50,
+            dim: 512,
+            fp32_mb: 15.68,
+            params: SynthParams {
+                topics: 24,
+                doc_noise: 0.55,
+                rels_per_query: 6,
+                extra_rel_range: 8,
+                query_noise: 0.6,
+                confuse: 1.2,
+                aniso: 1.0,
+                seed: 0x7C0D,
+            },
+            sample_factor: 16,
+        },
+        DatasetSpec {
+            name: "arguana",
+            n_docs: 6206,
+            n_queries: 1406,
+            dim: 512,
+            fp32_mb: 12.71,
+            params: SynthParams {
+                topics: 256,
+                doc_noise: 1.3,
+                rels_per_query: 1,
+                extra_rel_range: 0,
+                query_noise: 0.6,
+                confuse: 3.1,
+                aniso: 1.0,
+                seed: 0xA26A,
+            },
+            sample_factor: 1,
+        },
+        DatasetSpec {
+            name: "scidocs",
+            n_docs: 6118,
+            n_queries: 1000,
+            dim: 512,
+            fp32_mb: 12.53,
+            params: SynthParams {
+                topics: 96,
+                doc_noise: 0.58,
+                rels_per_query: 3,
+                extra_rel_range: 4,
+                query_noise: 0.6,
+                confuse: 2.6,
+                aniso: 1.0,
+                seed: 0x5CD0,
+            },
+            sample_factor: 3,
+        },
+    ]
+}
+
+/// Look up a dataset by name.
+pub fn dataset_by_name(name: &str) -> Option<DatasetSpec> {
+    paper_datasets().into_iter().find(|d| d.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn five_paper_datasets() {
+        let ds = paper_datasets();
+        assert_eq!(ds.len(), 5);
+        let names: Vec<&str> = ds.iter().map(|d| d.name).collect();
+        assert_eq!(names, vec!["scifact", "nfcorpus", "trec-covid", "arguana", "scidocs"]);
+    }
+
+    #[test]
+    fn doc_counts_match_table2_sizes() {
+        // n = fp32_mb * 1e6 / 2048 within rounding.
+        for d in paper_datasets() {
+            let derived = d.fp32_mb * 1e6 / (d.dim as f64 * 4.0);
+            let err = (d.n_docs as f64 - derived).abs() / derived;
+            assert!(err < 0.01, "{}: {} vs {}", d.name, d.n_docs, derived);
+            // And the embedding_mb accessor reproduces the table columns.
+            assert!((d.embedding_mb(32) - d.fp32_mb).abs() < 0.02, "{}", d.name);
+            assert!((d.embedding_mb(8) - d.fp32_mb / 4.0).abs() < 0.01);
+            assert!((d.embedding_mb(4) - d.fp32_mb / 8.0).abs() < 0.01);
+        }
+    }
+
+    #[test]
+    fn lookup_works() {
+        assert!(dataset_by_name("scifact").is_some());
+        assert!(dataset_by_name("msmarco").is_none());
+    }
+
+    #[test]
+    fn int8_databases_fit_dirc_with_sampling() {
+        // The paper stores all INT8 embeddings on the 4 MB chip, sampling
+        // TREC-COVID by 16 and SciDocs by 3.
+        for d in paper_datasets() {
+            let mb = d.embedding_mb(8);
+            assert!(mb < 4.0, "{}: {} MB INT8 exceeds chip", d.name, mb);
+        }
+    }
+}

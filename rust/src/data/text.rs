@@ -1,0 +1,184 @@
+//! Token-level front-end for the end-to-end serving demo.
+//!
+//! Generates synthetic "documents" as token-id sequences from per-topic
+//! Zipfian vocabularies, hashes them into the fixed bag-of-words feature
+//! space the AOT-compiled MLP embedder consumes (`embed_mlp_*` artifacts,
+//! vocab 2048), and produces queries as keyword samples from a pivot
+//! document. This makes the serving path exercise the full RAG front:
+//! text -> hashed BoW -> PJRT embed -> quantise -> DIRC retrieval.
+
+use crate::util::rng::Pcg;
+
+/// Must match `python/compile/model.py::EMBED_VOCAB`.
+pub const HASH_BUCKETS: usize = 2048;
+
+/// A synthetic text corpus.
+#[derive(Debug, Clone)]
+pub struct TextCorpus {
+    /// Token-id documents.
+    pub docs: Vec<Vec<u32>>,
+    /// Queries (token-id keyword lists).
+    pub queries: Vec<Vec<u32>>,
+    /// Pivot document per query (the relevant doc for the demo).
+    pub query_pivot: Vec<u32>,
+}
+
+/// Corpus generation knobs.
+#[derive(Debug, Clone)]
+pub struct TextParams {
+    pub n_docs: usize,
+    pub n_queries: usize,
+    pub topics: usize,
+    /// Tokens per document.
+    pub doc_len: usize,
+    /// Keywords per query.
+    pub query_len: usize,
+    /// Global vocabulary size (token-id space; > HASH_BUCKETS to force
+    /// hashing collisions like a real hashed-BoW front-end).
+    pub vocab: u32,
+    pub seed: u64,
+}
+
+impl Default for TextParams {
+    fn default() -> Self {
+        TextParams {
+            n_docs: 1024,
+            n_queries: 64,
+            topics: 32,
+            doc_len: 64,
+            query_len: 8,
+            vocab: 50_000,
+            seed: 0x7E47,
+        }
+    }
+}
+
+impl TextCorpus {
+    pub fn generate(p: &TextParams) -> TextCorpus {
+        let mut rng = Pcg::new(p.seed);
+        // Per-topic vocab: a contiguous band of token space + shared
+        // common words (ids 0..200, Zipf-heavy).
+        let band = (p.vocab - 200) / p.topics as u32;
+        let mut docs = Vec::with_capacity(p.n_docs);
+        let mut doc_topic = Vec::with_capacity(p.n_docs);
+        for _ in 0..p.n_docs {
+            let t = rng.index(p.topics) as u32;
+            let mut toks = Vec::with_capacity(p.doc_len);
+            for _ in 0..p.doc_len {
+                let tok = if rng.f64() < 0.3 {
+                    // Common word, Zipf-ish via squaring.
+                    (rng.f64() * rng.f64() * 200.0) as u32
+                } else {
+                    200 + t * band + rng.below(band)
+                };
+                toks.push(tok);
+            }
+            docs.push(toks);
+            doc_topic.push(t);
+        }
+        let mut queries = Vec::with_capacity(p.n_queries);
+        let mut query_pivot = Vec::with_capacity(p.n_queries);
+        for _ in 0..p.n_queries {
+            let pivot = rng.index(p.n_docs);
+            // Keywords: sample rare (topic) tokens from the pivot doc.
+            let rare: Vec<u32> = docs[pivot].iter().copied().filter(|&t| t >= 200).collect();
+            let mut kw = Vec::with_capacity(p.query_len);
+            for _ in 0..p.query_len {
+                if rare.is_empty() {
+                    kw.push(docs[pivot][rng.index(docs[pivot].len())]);
+                } else {
+                    kw.push(rare[rng.index(rare.len())]);
+                }
+            }
+            queries.push(kw);
+            query_pivot.push(pivot as u32);
+        }
+        TextCorpus { docs, queries, query_pivot }
+    }
+}
+
+/// FNV-1a token hash into the embedder's bucket space.
+#[inline]
+pub fn hash_token(tok: u32) -> usize {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for byte in tok.to_le_bytes() {
+        h ^= byte as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    (h % HASH_BUCKETS as u64) as usize
+}
+
+/// Hashed, L1-normalised bag-of-words feature vector (what the MLP
+/// embedder consumes).
+pub fn bow_features(tokens: &[u32]) -> Vec<f32> {
+    let mut v = vec![0f32; HASH_BUCKETS];
+    for &t in tokens {
+        v[hash_token(t)] += 1.0;
+    }
+    let total: f32 = v.iter().sum();
+    if total > 0.0 {
+        let inv = 1.0 / total;
+        for x in v.iter_mut() {
+            *x *= inv;
+        }
+    }
+    v
+}
+
+/// Batch BoW features, row-major `[n][HASH_BUCKETS]`.
+pub fn bow_batch(docs: &[Vec<u32>]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(docs.len() * HASH_BUCKETS);
+    for d in docs {
+        out.extend(bow_features(d));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_shapes() {
+        let p = TextParams { n_docs: 50, n_queries: 5, ..TextParams::default() };
+        let c = TextCorpus::generate(&p);
+        assert_eq!(c.docs.len(), 50);
+        assert_eq!(c.queries.len(), 5);
+        assert!(c.docs.iter().all(|d| d.len() == p.doc_len));
+        assert!(c.query_pivot.iter().all(|&d| (d as usize) < 50));
+    }
+
+    #[test]
+    fn bow_normalised_and_bucketed() {
+        let v = bow_features(&[1, 2, 3, 1]);
+        assert_eq!(v.len(), HASH_BUCKETS);
+        let sum: f32 = v.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-5);
+        assert_eq!(bow_features(&[]).iter().sum::<f32>(), 0.0);
+    }
+
+    #[test]
+    fn hash_deterministic_in_range() {
+        for t in 0..1000u32 {
+            let h = hash_token(t);
+            assert!(h < HASH_BUCKETS);
+            assert_eq!(h, hash_token(t));
+        }
+    }
+
+    #[test]
+    fn query_bow_overlaps_pivot_doc() {
+        let p = TextParams { n_docs: 100, n_queries: 20, ..TextParams::default() };
+        let c = TextCorpus::generate(&p);
+        for q in 0..20 {
+            let qv = bow_features(&c.queries[q]);
+            let dv = bow_features(&c.docs[c.query_pivot[q] as usize]);
+            let overlap: f32 = qv
+                .iter()
+                .zip(dv.iter())
+                .map(|(&a, &b)| if a > 0.0 && b > 0.0 { 1.0 } else { 0.0 })
+                .sum();
+            assert!(overlap >= 1.0, "query {q} shares no buckets with pivot");
+        }
+    }
+}

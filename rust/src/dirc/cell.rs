@@ -1,0 +1,233 @@
+//! One DIRC cell at full fidelity (Fig 3c): an 8x8 MLC ReRAM subarray
+//! (64 devices = 128 bits) behind a single 1-bit SRAM cell, with the
+//! differential sensing circuit in between.
+//!
+//! This is the validation-grade model: it instantiates every ReRAM device
+//! with its sampled resistance and runs the analog race per read. The
+//! macro-scale simulator ([`crate::dirc::macro_`]) uses the statistical
+//! path derived from the same variation model; `tests/` cross-validate
+//! the two (the statistical rates must match the analog cell's empirical
+//! rates).
+
+use crate::dirc::device::{MlcLevel, ReramDevice};
+use crate::dirc::remap::Layout;
+use crate::dirc::sensing::{sense_lsb, sense_msb};
+use crate::dirc::variation::{VariationModel, SUB_CELLS, SUB_COLS};
+use crate::util::rng::Pcg;
+
+/// A full-fidelity DIRC cell instance.
+pub struct DircCell {
+    devices: Vec<ReramDevice>,     // 64 MLC devices, row-major
+    mismatch: [f64; SUB_CELLS],    // frozen MOS mismatch per position
+    variation: VariationModel,
+    /// True stored word values (for error accounting), sign-extended.
+    true_words: Vec<i8>,
+}
+
+impl DircCell {
+    /// Program `words` (length = layout.words, each within the layout's
+    /// bit range) into the subarray under `layout`.
+    pub fn program(
+        words: &[i8],
+        layout: &Layout,
+        variation: &VariationModel,
+        rng: &mut Pcg,
+    ) -> DircCell {
+        assert_eq!(words.len(), layout.words, "word count mismatch");
+        let lo = -(1i16 << (layout.bits - 1));
+        let hi = (1i16 << (layout.bits - 1)) - 1;
+        for &w in words {
+            assert!(
+                (w as i16) >= lo && (w as i16) <= hi,
+                "word {w} outside INT{} range",
+                layout.bits
+            );
+        }
+
+        // Gather the two bit planes per MLC position.
+        let mut msb_bits = [false; SUB_CELLS];
+        let mut lsb_bits = [false; SUB_CELLS];
+        for (w, &val) in words.iter().enumerate() {
+            for b in 0..layout.bits {
+                let bit = (val >> b) & 1 != 0;
+                let slot = layout.slot(w, b);
+                if slot.msb {
+                    msb_bits[slot.pos as usize] = bit;
+                } else {
+                    lsb_bits[slot.pos as usize] = bit;
+                }
+            }
+        }
+
+        let devices = (0..SUB_CELLS)
+            .map(|p| {
+                let level = MlcLevel::from_bits(msb_bits[p], lsb_bits[p]);
+                ReramDevice::program(level, variation.reram_sigma, rng)
+            })
+            .collect();
+
+        DircCell {
+            devices,
+            mismatch: variation.freeze_mismatch(rng),
+            variation: variation.clone(),
+            true_words: words.to_vec(),
+        }
+    }
+
+    /// Sense one bit (word, bit) through the analog race. Each call is an
+    /// independent sensing event (fresh transient noise), as in hardware
+    /// where every plane load re-runs the race.
+    pub fn sense_bit(&self, layout: &Layout, word: usize, bit: usize, rng: &mut Pcg) -> bool {
+        let slot = layout.slot(word, bit);
+        let (row, col) = (slot.row(), slot.col());
+        let env = self.variation.env(row, col, &self.mismatch);
+        let dev = &self.devices[slot.pos as usize];
+        let msb = sense_msb(dev, &env, rng);
+        if slot.msb {
+            msb
+        } else {
+            sense_lsb(dev, msb, &env, rng)
+        }
+    }
+
+    /// Sense a full word (bit-by-bit, as the QS dataflow does across
+    /// plane loads).
+    pub fn sense_word(&self, layout: &Layout, word: usize, rng: &mut Pcg) -> i8 {
+        let mut v: i16 = 0;
+        for b in 0..layout.bits {
+            if self.sense_bit(layout, word, b, rng) {
+                v |= 1 << b;
+            }
+        }
+        // Sign-extend from layout.bits.
+        let shift = 16 - layout.bits;
+        ((v << shift) >> shift) as i8
+    }
+
+    /// The true stored word (ground truth for error accounting).
+    pub fn true_word(&self, word: usize) -> i8 {
+        self.true_words[word]
+    }
+
+    /// Empirical per-bit error rate over `trials` independent senses.
+    pub fn empirical_bit_error(
+        &self,
+        layout: &Layout,
+        word: usize,
+        bit: usize,
+        trials: usize,
+        rng: &mut Pcg,
+    ) -> f64 {
+        let truth = (self.true_words[word] >> bit) & 1 != 0;
+        let errs = (0..trials)
+            .filter(|_| self.sense_bit(layout, word, bit, rng) != truth)
+            .count();
+        errs as f64 / trials as f64
+    }
+
+    /// Reference to the programmed devices (used by layout-aware tests).
+    pub fn device_at(&self, row: usize, col: usize) -> &ReramDevice {
+        &self.devices[row * SUB_COLS + col]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dirc::remap::RemapStrategy;
+    use crate::dirc::variation::VariationModel;
+
+    fn test_words() -> Vec<i8> {
+        vec![
+            0, 1, -1, 127, -128, 42, -42, 85, -86, 7, -8, 100, -100, 63, -64, 3,
+        ]
+    }
+
+    fn quiet_variation() -> VariationModel {
+        VariationModel {
+            reram_sigma: 0.01,
+            sense_noise_us: 1e-6,
+            sense_noise_per_dist: 0.0,
+            mos_mismatch_us: 1e-6,
+            ..VariationModel::default()
+        }
+    }
+
+    #[test]
+    fn quiet_cell_reads_back_exactly() {
+        let map = quiet_variation().extract_error_map(10, 1);
+        for strat in [RemapStrategy::Interleaved, RemapStrategy::ErrorAware] {
+            let layout = Layout::build(8, strat, &map);
+            let mut rng = Pcg::new(2);
+            let words = test_words();
+            let cell = DircCell::program(&words, &layout, &quiet_variation(), &mut rng);
+            for (w, &want) in words.iter().enumerate() {
+                assert_eq!(cell.sense_word(&layout, w, &mut rng), want, "word {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn int4_cell_roundtrip() {
+        let map = quiet_variation().extract_error_map(10, 1);
+        let layout = Layout::build(4, RemapStrategy::ErrorAware, &map);
+        let words: Vec<i8> = (0..32).map(|i| (i % 16) as i8 - 8).collect();
+        let mut rng = Pcg::new(3);
+        let cell = DircCell::program(&words, &layout, &quiet_variation(), &mut rng);
+        for (w, &want) in words.iter().enumerate() {
+            assert_eq!(cell.sense_word(&layout, w, &mut rng), want, "word {w}");
+        }
+    }
+
+    #[test]
+    fn noisy_cell_occasionally_flips_lsb_slots() {
+        let variation = VariationModel { corner: 3.0, ..VariationModel::default() };
+        let map = variation.extract_error_map(60, 4);
+        let layout = Layout::build(8, RemapStrategy::Interleaved, &map);
+        let mut rng = Pcg::new(5);
+        let cell = DircCell::program(&test_words(), &layout, &variation, &mut rng);
+        let mut total_err = 0.0;
+        for w in 0..16 {
+            for b in 0..8 {
+                total_err += cell.empirical_bit_error(&layout, w, b, 60, &mut rng);
+            }
+        }
+        assert!(total_err > 0.0, "hot corner should produce some flips");
+    }
+
+    #[test]
+    fn msb_mapped_bits_far_more_reliable_than_lsb_mapped() {
+        // Under the error-aware layout at an elevated corner, the bits
+        // mapped to the MSB plane (4..8) must see far fewer flips in
+        // aggregate than the LSB-mapped bits (0..4).
+        let variation = VariationModel { corner: 2.0, ..VariationModel::default() };
+        let map = variation.extract_error_map(60, 6);
+        let layout = Layout::build(8, RemapStrategy::ErrorAware, &map);
+        let mut rng = Pcg::new(7);
+        let cell = DircCell::program(&test_words(), &layout, &variation, &mut rng);
+        let (mut msb_err, mut lsb_err) = (0.0, 0.0);
+        for w in 0..16 {
+            for b in 0..8 {
+                let e = cell.empirical_bit_error(&layout, w, b, 150, &mut rng);
+                if b >= 4 {
+                    msb_err += e;
+                } else {
+                    lsb_err += e;
+                }
+            }
+        }
+        assert!(
+            msb_err < lsb_err * 0.25 + 1e-9,
+            "msb total {msb_err} vs lsb total {lsb_err}"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "word count mismatch")]
+    fn program_rejects_wrong_word_count() {
+        let map = quiet_variation().extract_error_map(5, 1);
+        let layout = Layout::build(8, RemapStrategy::Interleaved, &map);
+        let mut rng = Pcg::new(1);
+        DircCell::program(&[0i8; 7], &layout, &quiet_variation(), &mut rng);
+    }
+}

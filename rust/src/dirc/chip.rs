@@ -1,0 +1,402 @@
+//! The DIRC-RAG chip (Fig 3a): sixteen cores operating in parallel on a
+//! broadcast query, a norm unit, the SRAM result buffer, and the Global
+//! Top-k Comparator — plus the cycle/energy accounting of one query.
+
+use crate::constants::{MACRO_DIM, NUM_CORES};
+use crate::dirc::core::DircCore;
+use crate::dirc::detect::ResensePolicy;
+use crate::dirc::macro_::{MacroConfig, SenseStats};
+use crate::dirc::remap::RemapStrategy;
+use crate::dirc::variation::{ErrorMap, VariationModel};
+use crate::retrieval::quant::Quantized;
+use crate::retrieval::score::{norm_i8, Metric};
+use crate::retrieval::topk::{merge_local, ScoredDoc};
+use crate::sim::cycles::CycleModel;
+use crate::sim::energy::{EnergyEvents, EnergyModel};
+use crate::util::rng::Pcg;
+
+/// Chip-level configuration.
+#[derive(Debug, Clone)]
+pub struct ChipConfig {
+    pub bits: usize,
+    pub dim: usize,
+    pub metric: Metric,
+    /// Enable the ΣD error-detection circuit.
+    pub detect: bool,
+    pub remap: RemapStrategy,
+    pub resense: ResensePolicy,
+    /// Number of cores (16 on the paper's chip; smaller for tests).
+    pub cores: usize,
+    /// Monte-Carlo points for the error-map extraction.
+    pub map_points: usize,
+    /// Variation model (process corner etc.).
+    pub variation: VariationModel,
+    pub seed: u64,
+}
+
+impl ChipConfig {
+    pub fn paper_default(dim: usize, metric: Metric) -> ChipConfig {
+        ChipConfig {
+            bits: 8,
+            dim,
+            metric,
+            detect: true,
+            remap: RemapStrategy::ErrorAware,
+            resense: ResensePolicy::default(),
+            cores: NUM_CORES,
+            map_points: 1000,
+            variation: VariationModel::default(),
+            seed: 0xD12C_0001,
+        }
+    }
+
+    fn macro_cfg(&self) -> MacroConfig {
+        MacroConfig {
+            bits: self.bits,
+            dim: self.dim,
+            detect: self.detect,
+            remap: self.remap,
+            resense: self.resense,
+        }
+    }
+
+    /// Chip document capacity.
+    pub fn capacity_docs(&self) -> usize {
+        self.cores * self.macro_cfg().capacity_docs()
+    }
+}
+
+/// Per-query statistics: sensing, cycles, energy, latency.
+#[derive(Debug, Clone)]
+pub struct QueryStats {
+    pub sense: SenseStats,
+    pub cycles: u64,
+    pub latency_s: f64,
+    pub energy_j: f64,
+    /// Documents scored across all cores.
+    pub docs_scored: u64,
+}
+
+/// Fold one core's sense statistics into the chip aggregate.
+fn merge_sense_stats(agg: &mut SenseStats, s: &SenseStats) {
+    agg.planes += s.planes;
+    agg.dirty_planes += s.dirty_planes;
+    agg.detect_checks += s.detect_checks;
+    agg.caught += s.caught;
+    agg.resenses += s.resenses;
+    agg.escaped += s.escaped;
+    agg.flips += s.flips;
+    agg.max_column_resenses = agg.max_column_resenses.max(s.max_column_resenses);
+}
+
+/// The chip simulator.
+pub struct DircChip {
+    pub cfg: ChipConfig,
+    cores: Vec<DircCore>,
+    map: ErrorMap,
+    cycle_model: CycleModel,
+    energy_model: EnergyModel,
+    n_docs: usize,
+}
+
+impl DircChip {
+    /// Build a chip from a quantised database. Documents are distributed
+    /// round-robin in contiguous blocks: core `c` holds docs
+    /// `[c*per_core, (c+1)*per_core)`.
+    pub fn build(cfg: ChipConfig, db: &Quantized) -> DircChip {
+        assert_eq!(db.dim, cfg.dim);
+        assert_eq!(db.scheme.bits(), cfg.bits, "db precision != chip precision");
+        assert!(
+            db.n <= cfg.capacity_docs(),
+            "{} docs exceed chip capacity {}",
+            db.n,
+            cfg.capacity_docs()
+        );
+        let map = cfg.variation.extract_error_map(cfg.map_points, cfg.seed);
+        let per_core = db.n.div_ceil(cfg.cores);
+        let mut cores = Vec::with_capacity(cfg.cores);
+        for c in 0..cfg.cores {
+            let lo = (c * per_core).min(db.n);
+            let hi = ((c + 1) * per_core).min(db.n);
+            let docs = &db.values[lo * db.dim..hi * db.dim];
+            let norms = &db.norms[lo..hi];
+            let ids: Vec<u64> = (lo as u64..hi as u64).collect();
+            cores.push(DircCore::program(cfg.macro_cfg(), docs, norms, &ids, &map));
+        }
+        DircChip {
+            cfg,
+            cores,
+            map,
+            cycle_model: CycleModel::default(),
+            energy_model: EnergyModel::default(),
+            n_docs: db.n,
+        }
+    }
+
+    pub fn n_docs(&self) -> usize {
+        self.n_docs
+    }
+
+    pub fn error_map(&self) -> &ErrorMap {
+        &self.map
+    }
+
+    pub fn cores(&self) -> &[DircCore] {
+        &self.cores
+    }
+
+    /// Deterministic per-(query, core) sensing stream. `fork` does not
+    /// advance the parent generator, so callers must draw a fresh nonce
+    /// per query (as [`DircChip::query`] does) to decorrelate queries.
+    pub fn core_stream(qnonce: u64, core: usize) -> Pcg {
+        Pcg::new(qnonce ^ (core as u64).wrapping_mul(0x9E3779B97F4A7C15))
+    }
+
+    /// Sensing + accounting only: returns each core's surviving flips and
+    /// the full query statistics, without computing functional scores.
+    /// The serving engine pairs this with a single PJRT score pass (see
+    /// `coordinator::engine::ServingEngine`), avoiding the duplicate
+    /// clean-score computation `query` would do. Consumes the same rng
+    /// stream as [`DircChip::query`], so flips are identical for a shared
+    /// outer generator.
+    pub fn sense_pass(
+        &self,
+        k: usize,
+        rng: &mut Pcg,
+    ) -> (Vec<Vec<crate::dirc::macro_::Flip>>, QueryStats) {
+        let qnonce = rng.next_u64();
+        let mut agg = SenseStats::default();
+        let mut used_slots = Vec::with_capacity(self.cores.len());
+        let mut stalls = Vec::with_capacity(self.cores.len());
+        let mut per_core_flips = Vec::with_capacity(self.cores.len());
+        let mut docs_scored = 0u64;
+        for (c, core) in self.cores.iter().enumerate() {
+            let mut core_rng = Self::core_stream(qnonce, c);
+            let (flips, stats) = core.macro_().sense(&mut core_rng);
+            docs_scored += core.n_docs() as u64;
+            merge_sense_stats(&mut agg, &stats);
+            used_slots.push(core.used_slots());
+            stalls.push(stats.max_column_resenses);
+            per_core_flips.push(flips);
+        }
+        let stats = self.assemble_stats(agg, &used_slots, &stalls, k, docs_scored);
+        (per_core_flips, stats)
+    }
+
+    /// Execute one query: broadcast to all cores, local top-k per core,
+    /// global merge; account cycles and energy.
+    pub fn query(&self, q: &[i8], k: usize, rng: &mut Pcg) -> (Vec<ScoredDoc>, QueryStats) {
+        assert_eq!(q.len(), self.cfg.dim);
+        let qnonce = rng.next_u64();
+        let q_norm = norm_i8(q);
+
+        let mut locals = Vec::with_capacity(self.cores.len());
+        let mut agg = SenseStats::default();
+        let mut used_slots = Vec::with_capacity(self.cores.len());
+        let mut stalls = Vec::with_capacity(self.cores.len());
+        let mut docs_scored = 0u64;
+
+        for (c, core) in self.cores.iter().enumerate() {
+            let mut core_rng = Self::core_stream(qnonce, c);
+            let res = core.query(q, q_norm, self.cfg.metric, k, &mut core_rng);
+            docs_scored += core.n_docs() as u64;
+            merge_sense_stats(&mut agg, &res.stats);
+            used_slots.push(res.used_slots);
+            stalls.push(res.stats.max_column_resenses);
+            locals.push(res.local_topk);
+        }
+
+        let merged = merge_local(&locals, k);
+        let stats = self.assemble_stats(agg, &used_slots, &stalls, k, docs_scored);
+        (merged, stats)
+    }
+
+    /// Convert aggregated sense statistics + occupancy into the cycle and
+    /// energy census of one query.
+    fn assemble_stats(
+        &self,
+        agg: SenseStats,
+        used_slots: &[usize],
+        stalls: &[u64],
+        k: usize,
+        docs_scored: u64,
+    ) -> QueryStats {
+        let qc = self.cycle_model.chip_query(
+            used_slots,
+            self.cfg.bits,
+            self.cfg.detect,
+            stalls,
+            k,
+        );
+        let cycles = qc.total();
+        let latency_s = self.cycle_model.seconds(cycles);
+
+        // Energy events: per-macro plane loads are planes/128 plane-rows
+        // (SenseStats counts column planes).
+        let mac_cycles_total: u64 = used_slots
+            .iter()
+            .map(|&s| (s * self.cfg.bits * self.cfg.bits) as u64)
+            .sum();
+        let ev = EnergyEvents {
+            mac_cycles_total,
+            plane_loads_total: agg.planes / MACRO_DIM as u64,
+            resense_planes_total: agg.resenses,
+            detect_checks_total: agg.detect_checks,
+            dim: self.cfg.dim,
+            docs_scored,
+            global_candidates: (self.cores.len() * k) as u64,
+            elapsed_s: latency_s,
+        };
+        let energy_j = self.energy_model.query_energy(&ev).total_j();
+        QueryStats { sense: agg, cycles, latency_s, energy_j, docs_scored }
+    }
+
+    /// Clean (error-free) global top-k — the retrieval-precision oracle.
+    pub fn clean_query(&self, q: &[i8], k: usize) -> Vec<ScoredDoc> {
+        let q_norm = norm_i8(q);
+        let locals: Vec<Vec<ScoredDoc>> = self
+            .cores
+            .iter()
+            .map(|core| {
+                let scores = core.clean_scores(q, q_norm, self.cfg.metric);
+                let mut topk = crate::retrieval::topk::TopK::new(k);
+                for (i, &s) in scores.iter().enumerate() {
+                    // Clean path shares the id layout with the erroneous
+                    // path: contiguous per core.
+                    topk.push(ScoredDoc {
+                        doc_id: self.core_doc_base(core) + i as u64,
+                        score: s,
+                    });
+                }
+                topk.into_sorted()
+            })
+            .collect();
+        merge_local(&locals, k)
+    }
+
+    fn core_doc_base(&self, core: &DircCore) -> u64 {
+        // Reconstruct the base id from the stored ids (contiguous blocks).
+        core.doc_base()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::retrieval::quant::{quantize, random_unit_rows, QuantScheme};
+
+    fn build(n: usize, dim: usize, cores: usize, detect: bool) -> (DircChip, Vec<f32>) {
+        let mut rng = Pcg::new(9);
+        let fp = random_unit_rows(n, dim, &mut rng);
+        let db = quantize(&fp, n, dim, QuantScheme::Int8);
+        let cfg = ChipConfig {
+            cores,
+            map_points: 60,
+            detect,
+            ..ChipConfig::paper_default(dim, Metric::Cosine)
+        };
+        (DircChip::build(cfg, &db), fp)
+    }
+
+    #[test]
+    fn query_returns_k_sorted_unique() {
+        let (chip, _) = build(600, 128, 4, true);
+        let mut rng = Pcg::new(1);
+        let q: Vec<i8> = (0..128).map(|_| rng.int_in(-128, 127) as i8).collect();
+        let (top, stats) = chip.query(&q, 10, &mut rng);
+        assert_eq!(top.len(), 10);
+        for w in top.windows(2) {
+            assert!(w[0].score >= w[1].score);
+        }
+        let mut ids: Vec<u64> = top.iter().map(|d| d.doc_id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 10);
+        assert_eq!(stats.docs_scored, 600);
+        assert!(stats.latency_s > 0.0 && stats.energy_j > 0.0);
+    }
+
+    #[test]
+    fn clean_query_finds_planted_neighbour() {
+        let (chip, fp) = build(400, 128, 4, true);
+        // Query = slightly perturbed copy of doc 123.
+        let mut rng = Pcg::new(2);
+        let dim = 128;
+        let qf: Vec<f32> = (0..dim)
+            .map(|j| fp[123 * dim + j] + 0.02 * rng.normal() as f32)
+            .collect();
+        let qq = quantize(&qf, 1, dim, QuantScheme::Int8);
+        let top = chip.clean_query(qq.row(0), 3);
+        assert_eq!(top[0].doc_id, 123);
+    }
+
+    #[test]
+    fn noisy_query_mostly_agrees_with_clean() {
+        let (chip, _) = build(512, 128, 4, true);
+        let mut rng = Pcg::new(3);
+        let q: Vec<i8> = (0..128).map(|_| rng.int_in(-128, 127) as i8).collect();
+        let clean: Vec<u64> = chip.clean_query(&q, 10).iter().map(|d| d.doc_id).collect();
+        let (noisy, _) = chip.query(&q, 10, &mut rng);
+        let noisy_ids: Vec<u64> = noisy.iter().map(|d| d.doc_id).collect();
+        let overlap = clean.iter().filter(|id| noisy_ids.contains(id)).count();
+        assert!(overlap >= 8, "overlap {overlap}/10");
+    }
+
+    #[test]
+    fn table1_conditions_latency_energy() {
+        // Full 4 MB: 8192 docs x 512 dim INT8 on 16 cores.
+        let n = 8192;
+        let dim = 512;
+        let mut rng = Pcg::new(4);
+        // Cheap synthetic data (unit rows are expensive at this size).
+        let fp: Vec<f32> = (0..n * dim).map(|_| rng.normal() as f32 * 0.05).collect();
+        let db = quantize(&fp, n, dim, QuantScheme::Int8);
+        let cfg = ChipConfig {
+            map_points: 60,
+            ..ChipConfig::paper_default(dim, Metric::Mips)
+        };
+        assert_eq!(cfg.capacity_docs(), 8192);
+        let chip = DircChip::build(cfg, &db);
+        let q: Vec<i8> = (0..dim).map(|_| rng.int_in(-128, 127) as i8).collect();
+        let (_, stats) = chip.query(&q, 10, &mut rng);
+        let lat_us = stats.latency_s * 1e6;
+        let e_uj = stats.energy_j * 1e6;
+        assert!((5.0..6.3).contains(&lat_us), "latency {lat_us} µs");
+        assert!((0.80..1.15).contains(&e_uj), "energy {e_uj} µJ");
+    }
+
+    #[test]
+    fn latency_scales_linearly_with_db() {
+        let dim = 512;
+        let mk = |n: usize| {
+            let mut rng = Pcg::new(5);
+            let fp: Vec<f32> = (0..n * dim).map(|_| rng.normal() as f32 * 0.05).collect();
+            let db = quantize(&fp, n, dim, QuantScheme::Int8);
+            let cfg = ChipConfig {
+                map_points: 40,
+                ..ChipConfig::paper_default(dim, Metric::Mips)
+            };
+            DircChip::build(cfg, &db)
+        };
+        let mut rng = Pcg::new(6);
+        let q: Vec<i8> = (0..dim).map(|_| rng.int_in(-128, 127) as i8).collect();
+        let full = mk(8192).query(&q, 10, &mut rng).1;
+        let half = mk(4096).query(&q, 10, &mut rng).1;
+        let ratio = half.latency_s / full.latency_s;
+        assert!((0.45..0.75).contains(&ratio), "latency ratio {ratio}");
+        let eratio = half.energy_j / full.energy_j;
+        assert!((0.40..0.75).contains(&eratio), "energy ratio {eratio}");
+    }
+
+    #[test]
+    #[should_panic(expected = "exceed chip capacity")]
+    fn overcapacity_rejected() {
+        let mut rng = Pcg::new(7);
+        let dim = 512;
+        let n = 9000;
+        let fp: Vec<f32> = (0..n * dim).map(|_| rng.normal() as f32).collect();
+        let db = quantize(&fp, n, dim, QuantScheme::Int8);
+        let cfg = ChipConfig { map_points: 10, ..ChipConfig::paper_default(dim, Metric::Mips) };
+        DircChip::build(cfg, &db);
+    }
+}

@@ -1,0 +1,266 @@
+//! One DIRC column at bit level (Fig 3b / Fig 4): 128 cells' SRAM bits,
+//! 128 NOR-gate bit multipliers, a 128-input sign-less carry-save adder,
+//! and the shift accumulator.
+//!
+//! This module is the *bit-exact* digital datapath: given sensed document
+//! bit-planes and a serial query, it executes the query-stationary
+//! schedule cycle by cycle and returns both the MAC results and the cycle
+//! census. The macro-level simulator computes the same arithmetic
+//! vectorially; `tests/` pin the two against each other and against the
+//! Pallas oracle semantics.
+
+use crate::constants::MACRO_DIM;
+
+/// Bit weight of position `b` in a signed `bits`-wide two's-complement
+/// word (matches `python/compile/kernels/ref.py::bit_weight`).
+#[inline]
+pub fn bit_weight(b: usize, bits: usize) -> i32 {
+    if b == bits - 1 {
+        -(1i32 << b)
+    } else {
+        1i32 << b
+    }
+}
+
+/// 128-input sign-less carry-save adder: reduces 128 one-bit inputs to a
+/// sum via a Wallace-style CSA tree of full adders, then a final ripple
+/// add. Built structurally (3:2 compressors) to mirror the paper's adder,
+/// not as a popcount intrinsic; tests pin it against `count_ones`.
+pub fn csa_reduce_128(bits: &[bool; MACRO_DIM]) -> u32 {
+    // Represent partial results as weighted bit vectors; repeatedly apply
+    // 3:2 compression per weight until <= 2 numbers remain, then add.
+    // Weights start at 1 (all inputs weight 2^0).
+    let mut layers: Vec<Vec<u8>> = vec![bits.iter().map(|&b| b as u8).collect()];
+    // layers[w] = list of bits of weight 2^w awaiting compression.
+    loop {
+        let mut next: Vec<Vec<u8>> = vec![Vec::new(); layers.len() + 1];
+        let mut any_compressed = false;
+        for (w, col) in layers.iter().enumerate() {
+            let mut i = 0;
+            while i + 2 < col.len() {
+                // Full adder: three bits of weight w -> sum bit (w) +
+                // carry bit (w+1).
+                let (a, b, c) = (col[i], col[i + 1], col[i + 2]);
+                let sum = a ^ b ^ c;
+                let carry = (a & b) | (b & c) | (a & c);
+                next[w].push(sum);
+                next[w + 1].push(carry);
+                i += 3;
+                any_compressed = true;
+            }
+            while i < col.len() {
+                next[w].push(col[i]);
+                i += 1;
+            }
+        }
+        while next.last().is_some_and(|v| v.is_empty()) {
+            next.pop();
+        }
+        layers = next;
+        if !any_compressed {
+            break;
+        }
+        if layers.iter().all(|col| col.len() <= 2) {
+            break;
+        }
+    }
+    // Final carry-propagate add: interpret remaining bits by weight.
+    let mut total: u32 = 0;
+    for (w, col) in layers.iter().enumerate() {
+        for &bit in col {
+            total += (bit as u32) << w;
+        }
+    }
+    total
+}
+
+/// The accumulator register of one column: accumulates CSA partial sums
+/// with the QS shift weights.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Accumulator {
+    acc: i64,
+}
+
+impl Accumulator {
+    pub fn clear(&mut self) {
+        self.acc = 0;
+    }
+
+    /// One MAC cycle: fold in a CSA output for bit pair (d_bit, q_bit).
+    #[inline]
+    pub fn accumulate(&mut self, csa_sum: u32, d_bit: usize, q_bit: usize, bits: usize) {
+        let w = bit_weight(d_bit, bits) as i64 * bit_weight(q_bit, bits) as i64;
+        self.acc += csa_sum as i64 * w;
+    }
+
+    pub fn value(&self) -> i64 {
+        self.acc
+    }
+}
+
+/// Cycle census of one column pass (Fig 4 bottom-right).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ColumnCycles {
+    pub sense_cycles: u64,
+    pub detect_cycles: u64,
+    pub mac_cycles: u64,
+    pub resense_cycles: u64,
+}
+
+impl ColumnCycles {
+    pub fn total(&self) -> u64 {
+        self.sense_cycles + self.detect_cycles + self.mac_cycles + self.resense_cycles
+    }
+}
+
+/// Execute the QS schedule for one column, bit-exactly.
+///
+/// `doc_planes[w]` is the sensed value array (one `bits`-wide word per
+/// cell row; rows beyond `dims` are zero-padded), `query` the stationary
+/// query (length = dims <= 128). Returns per-word MACs plus the census.
+/// `detect` adds one detection cycle per plane (the re-sense loop lives in
+/// the macro simulator where flips are injected; here planes are given).
+pub fn run_column_pass(
+    doc_words: &[[i8; MACRO_DIM]],
+    query: &[i8],
+    bits: usize,
+    detect: bool,
+) -> (Vec<i64>, ColumnCycles) {
+    assert!(query.len() <= MACRO_DIM);
+    let mut cycles = ColumnCycles::default();
+    let mut results = Vec::with_capacity(doc_words.len());
+
+    for words in doc_words {
+        let mut acc = Accumulator::default();
+        for d_bit in 0..bits {
+            // Sense the (word, d_bit) plane into SRAM: 1 cycle.
+            cycles.sense_cycles += 1;
+            let mut plane = [false; MACRO_DIM];
+            for (row, &w) in words.iter().enumerate() {
+                plane[row] = (w >> d_bit) & 1 != 0;
+            }
+            if detect {
+                cycles.detect_cycles += 1;
+            }
+            // MAC cycles: one per query bit.
+            for q_bit in 0..bits {
+                let mut gated = [false; MACRO_DIM];
+                for (row, &q) in query.iter().enumerate() {
+                    // NOR-multiplier: AND of document bit and query bit.
+                    gated[row] = plane[row] && ((q >> q_bit) & 1 != 0);
+                }
+                let csa = csa_reduce_128(&gated);
+                acc.accumulate(csa, d_bit, q_bit, bits);
+                cycles.mac_cycles += 1;
+            }
+        }
+        results.push(acc.value());
+    }
+    (results, cycles)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{cases, forall, gen_usize};
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn csa_matches_popcount() {
+        let mut rng = Pcg::new(1);
+        for _ in 0..200 {
+            let mut bits = [false; MACRO_DIM];
+            for b in bits.iter_mut() {
+                *b = rng.f64() < 0.5;
+            }
+            let want = bits.iter().filter(|&&b| b).count() as u32;
+            assert_eq!(csa_reduce_128(&bits), want);
+        }
+    }
+
+    #[test]
+    fn csa_extremes() {
+        assert_eq!(csa_reduce_128(&[false; MACRO_DIM]), 0);
+        assert_eq!(csa_reduce_128(&[true; MACRO_DIM]), MACRO_DIM as u32);
+    }
+
+    #[test]
+    fn prop_csa_correct_for_any_density() {
+        forall(cases(60), gen_usize(0, MACRO_DIM), |&ones| {
+            let mut bits = [false; MACRO_DIM];
+            for b in bits.iter_mut().take(ones) {
+                *b = true;
+            }
+            csa_reduce_128(&bits) == ones as u32
+        });
+    }
+
+    fn rand_words(rng: &mut Pcg, n: usize, dims: usize, bits: usize) -> Vec<[i8; MACRO_DIM]> {
+        let lo = -(1i64 << (bits - 1));
+        let hi = (1i64 << (bits - 1)) - 1;
+        (0..n)
+            .map(|_| {
+                let mut w = [0i8; MACRO_DIM];
+                for slot in w.iter_mut().take(dims) {
+                    *slot = rng.int_in(lo, hi) as i8;
+                }
+                w
+            })
+            .collect()
+    }
+
+    #[test]
+    fn column_pass_matches_integer_dot() {
+        let mut rng = Pcg::new(9);
+        for bits in [4usize, 8] {
+            let dims = 128;
+            let docs = rand_words(&mut rng, 16, dims, bits);
+            let lo = -(1i64 << (bits - 1));
+            let hi = (1i64 << (bits - 1)) - 1;
+            let query: Vec<i8> = (0..dims).map(|_| rng.int_in(lo, hi) as i8).collect();
+            let (got, _) = run_column_pass(&docs, &query, bits, false);
+            for (w, words) in docs.iter().enumerate() {
+                let want: i64 = words
+                    .iter()
+                    .zip(query.iter())
+                    .map(|(&d, &q)| d as i64 * q as i64)
+                    .sum();
+                assert_eq!(got[w], want, "bits {bits} word {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn column_pass_cycle_budget_matches_fig4() {
+        // 16 INT8 words: 128 sense + 128 detect + 1024 MAC = 1280 cycles.
+        let docs = vec![[0i8; MACRO_DIM]; 16];
+        let query = vec![0i8; MACRO_DIM];
+        let (_, cycles) = run_column_pass(&docs, &query, 8, true);
+        assert_eq!(cycles.sense_cycles, 128);
+        assert_eq!(cycles.detect_cycles, 128);
+        assert_eq!(cycles.mac_cycles, 1024);
+        assert_eq!(cycles.total(), 1280);
+    }
+
+    #[test]
+    fn column_pass_short_dims_zero_padded() {
+        let mut docs = vec![[0i8; MACRO_DIM]; 1];
+        docs[0][0] = 5;
+        docs[0][1] = -3;
+        let query = vec![2i8, 4];
+        let (got, _) = run_column_pass(&docs, &query, 8, false);
+        assert_eq!(got[0], 5 * 2 + (-3) * 4);
+    }
+
+    #[test]
+    fn accumulator_weights() {
+        let mut acc = Accumulator::default();
+        // d bit 7 (weight -128) x q bit 0 (weight 1), csa sum 3.
+        acc.accumulate(3, 7, 0, 8);
+        assert_eq!(acc.value(), 3 * -128);
+        acc.clear();
+        acc.accumulate(2, 3, 3, 4);
+        // INT4: bit 3 is the sign bit, weight -8; (-8 * -8) = 64.
+        assert_eq!(acc.value(), 2 * 64);
+    }
+}

@@ -1,0 +1,194 @@
+//! A DIRC-RAG core (Fig 3a, right): one DIRC macro plus the ReRAM buffer
+//! holding document norms and global indices, the cosine calculator
+//! (bypassed for MIPS), and the local top-k comparator.
+
+use crate::dirc::macro_::{DircMacro, MacroConfig, SenseStats};
+use crate::dirc::variation::ErrorMap;
+use crate::retrieval::score::{finalize_scores, Metric};
+use crate::retrieval::topk::{ScoredDoc, TopK};
+use crate::util::rng::Pcg;
+
+/// One core: macro + norm/index ReRAM buffer + cosine calc + local top-k.
+pub struct DircCore {
+    macro_: DircMacro,
+    /// Stored integer-domain document norms (ReRAM buffer).
+    d_norms: Vec<f32>,
+    /// Global document ids (ReRAM buffer).
+    doc_ids: Vec<u64>,
+}
+
+/// Result of one core-local query pass.
+#[derive(Debug, Clone)]
+pub struct CoreResult {
+    pub local_topk: Vec<ScoredDoc>,
+    pub stats: SenseStats,
+    /// Word slots actually occupied (drives the cycle model).
+    pub used_slots: usize,
+}
+
+impl DircCore {
+    /// Program the core. `docs` is row-major `[n][dim]`; `norms` and `ids`
+    /// are per-document (norms are integer-domain L2, computed offline
+    /// from the true quantised values, exactly as the paper stores them).
+    pub fn program(
+        cfg: MacroConfig,
+        docs: &[i8],
+        norms: &[f32],
+        ids: &[u64],
+        map: &ErrorMap,
+    ) -> DircCore {
+        let n = ids.len();
+        assert_eq!(norms.len(), n);
+        assert_eq!(docs.len(), n * cfg.dim);
+        DircCore {
+            macro_: DircMacro::program(cfg, docs, n, map),
+            d_norms: norms.to_vec(),
+            doc_ids: ids.to_vec(),
+        }
+    }
+
+    pub fn n_docs(&self) -> usize {
+        self.macro_.n_docs()
+    }
+
+    pub fn macro_(&self) -> &DircMacro {
+        &self.macro_
+    }
+
+    /// First stored global doc id (ids are contiguous per core).
+    pub fn doc_base(&self) -> u64 {
+        self.doc_ids.first().copied().unwrap_or(0)
+    }
+
+    /// Word slots in use. Documents are striped across the 128 columns in
+    /// fold-sized slot groups, so every column sees `ceil(n/128)` doc
+    /// groups; the lock-step schedule only walks occupied slots.
+    pub fn used_slots(&self) -> usize {
+        let fold = self.macro_.cfg.fold();
+        self.n_docs().div_ceil(crate::constants::MACRO_DIM) * fold
+    }
+
+    /// Execute one query against this core: sense (with error injection),
+    /// MAC, metric finalisation, local top-k.
+    pub fn query(
+        &self,
+        q: &[i8],
+        q_norm: f64,
+        metric: Metric,
+        k: usize,
+        rng: &mut Pcg,
+    ) -> CoreResult {
+        let (ips, stats) = self.macro_.sensed_scores(q, rng);
+        let scores = finalize_scores(
+            &ips,
+            metric,
+            if metric == Metric::Cosine { Some(&self.d_norms) } else { None },
+            q_norm,
+        );
+        let mut topk = TopK::new(k);
+        for (i, &s) in scores.iter().enumerate() {
+            topk.push(ScoredDoc { doc_id: self.doc_ids[i], score: s });
+        }
+        CoreResult { local_topk: topk.into_sorted(), stats, used_slots: self.used_slots() }
+    }
+
+    /// Clean (error-free) scores for validation.
+    pub fn clean_scores(&self, q: &[i8], q_norm: f64, metric: Metric) -> Vec<f64> {
+        let ips = self.macro_.clean_scores(q);
+        finalize_scores(
+            &ips,
+            metric,
+            if metric == Metric::Cosine { Some(&self.d_norms) } else { None },
+            q_norm,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dirc::detect::ResensePolicy;
+    use crate::dirc::remap::RemapStrategy;
+    use crate::dirc::variation::VariationModel;
+    use crate::retrieval::score::norm_i8;
+
+    fn map() -> ErrorMap {
+        VariationModel::default().extract_error_map(80, 21)
+    }
+
+    fn cfg(dim: usize) -> MacroConfig {
+        MacroConfig {
+            bits: 8,
+            dim,
+            detect: true,
+            remap: RemapStrategy::ErrorAware,
+            resense: ResensePolicy::default(),
+        }
+    }
+
+    fn build_core(n: usize, dim: usize, seed: u64, map: &ErrorMap) -> (DircCore, Vec<i8>) {
+        let mut rng = Pcg::new(seed);
+        let docs: Vec<i8> = (0..n * dim).map(|_| rng.int_in(-128, 127) as i8).collect();
+        let norms: Vec<f32> = (0..n)
+            .map(|i| norm_i8(&docs[i * dim..(i + 1) * dim]) as f32)
+            .collect();
+        let ids: Vec<u64> = (0..n as u64).map(|i| 1000 + i).collect();
+        (DircCore::program(cfg(dim), &docs, &norms, &ids, map), docs)
+    }
+
+    #[test]
+    fn local_topk_uses_global_ids() {
+        let m = map();
+        let (core, _) = build_core(100, 128, 1, &m);
+        let mut rng = Pcg::new(2);
+        let q: Vec<i8> = (0..128).map(|_| rng.int_in(-128, 127) as i8).collect();
+        let res = core.query(&q, norm_i8(&q), Metric::Mips, 5, &mut rng);
+        assert_eq!(res.local_topk.len(), 5);
+        for d in &res.local_topk {
+            assert!((1000..1100).contains(&d.doc_id));
+        }
+    }
+
+    #[test]
+    fn clean_query_matches_reference_topk() {
+        let m = map();
+        let (core, docs) = build_core(200, 128, 3, &m);
+        let mut rng = Pcg::new(4);
+        let q: Vec<i8> = (0..128).map(|_| rng.int_in(-128, 127) as i8).collect();
+        let clean = core.clean_scores(&q, norm_i8(&q), Metric::Mips);
+        let want: Vec<i64> =
+            crate::retrieval::score::mips_scores(&docs, 200, 128, &q);
+        for (a, b) in clean.iter().zip(want.iter()) {
+            assert_eq!(*a, *b as f64);
+        }
+    }
+
+    #[test]
+    fn cosine_scores_bounded_and_ranked() {
+        let m = map();
+        let (core, _) = build_core(64, 256, 5, &m);
+        let mut rng = Pcg::new(6);
+        let q: Vec<i8> = (0..256).map(|_| rng.int_in(-128, 127) as i8).collect();
+        let res = core.query(&q, norm_i8(&q), Metric::Cosine, 10, &mut rng);
+        for w in res.local_topk.windows(2) {
+            assert!(w[0].score >= w[1].score);
+        }
+        // Sensing errors perturb the numerator only; small overshoot past
+        // |1| is possible but must stay tiny.
+        for d in &res.local_topk {
+            assert!(d.score.abs() < 1.05);
+        }
+    }
+
+    #[test]
+    fn used_slots_scales_with_occupancy() {
+        let m = map();
+        // dim 512, fold 4, 4 docs/column, 128 columns.
+        let (full, _) = build_core(512, 512, 7, &m);
+        assert_eq!(full.used_slots(), 16);
+        let (half, _) = build_core(256, 512, 8, &m);
+        assert_eq!(half.used_slots(), 8);
+        let (tiny, _) = build_core(100, 512, 9, &m);
+        assert_eq!(tiny.used_slots(), 4);
+    }
+}

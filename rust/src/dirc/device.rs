@@ -1,0 +1,166 @@
+//! MLC ReRAM device model.
+//!
+//! Four resistance levels per cell (2 bits), geometric spacing, lognormal
+//! device deviation (the paper's sigma = 0.1 convention), and the three
+//! reference resistances used by the differential sensing scheme
+//! (Fig 3c): `R_L` between L0/L1, `R_M` between L1/L2, `R_H` between
+//! L2/L3. The ReRAM compact model follows the HRS/LRS ratio conventions
+//! of Yao et al. (the paper's ref [25]): LRS ~ 5 kΩ and a 27x HRS/LRS
+//! window split geometrically.
+
+use crate::util::rng::Pcg;
+
+/// Number of MLC levels (2 bits per cell).
+pub const NUM_LEVELS: usize = 4;
+
+/// Nominal level resistances (ohm): 3x geometric spacing from 5 kΩ.
+pub const LEVEL_OHM: [f64; NUM_LEVELS] = [5.0e3, 15.0e3, 45.0e3, 135.0e3];
+
+/// A 2-bit MLC level. Encoding: level index == (msb << 1) | lsb, i.e. the
+/// resistance grows monotonically with the stored 2-bit value.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MlcLevel {
+    L0 = 0,
+    L1 = 1,
+    L2 = 2,
+    L3 = 3,
+}
+
+impl MlcLevel {
+    pub fn from_bits(msb: bool, lsb: bool) -> MlcLevel {
+        match (msb, lsb) {
+            (false, false) => MlcLevel::L0,
+            (false, true) => MlcLevel::L1,
+            (true, false) => MlcLevel::L2,
+            (true, true) => MlcLevel::L3,
+        }
+    }
+
+    pub fn from_index(i: usize) -> MlcLevel {
+        match i {
+            0 => MlcLevel::L0,
+            1 => MlcLevel::L1,
+            2 => MlcLevel::L2,
+            3 => MlcLevel::L3,
+            _ => panic!("MLC level index {i} out of range"),
+        }
+    }
+
+    pub fn msb(self) -> bool {
+        (self as usize) & 0b10 != 0
+    }
+
+    pub fn lsb(self) -> bool {
+        (self as usize) & 0b01 != 0
+    }
+
+    /// Nominal (median) resistance of this level.
+    pub fn nominal_ohm(self) -> f64 {
+        LEVEL_OHM[self as usize]
+    }
+}
+
+/// Reference resistances: geometric midpoints between adjacent levels.
+#[derive(Debug, Clone, Copy)]
+pub struct References {
+    /// Between L0 and L1 — LSB reference when MSB = 0.
+    pub r_l: f64,
+    /// Between L1 and L2 — the MSB reference.
+    pub r_m: f64,
+    /// Between L2 and L3 — LSB reference when MSB = 1.
+    pub r_h: f64,
+}
+
+impl Default for References {
+    fn default() -> Self {
+        References {
+            r_l: (LEVEL_OHM[0] * LEVEL_OHM[1]).sqrt(),
+            r_m: (LEVEL_OHM[1] * LEVEL_OHM[2]).sqrt(),
+            r_h: (LEVEL_OHM[2] * LEVEL_OHM[3]).sqrt(),
+        }
+    }
+}
+
+/// One programmed ReRAM device instance: its level plus the sampled
+/// (process-frozen) deviation from nominal.
+#[derive(Debug, Clone, Copy)]
+pub struct ReramDevice {
+    pub level: MlcLevel,
+    /// Actual resistance after lognormal deviation (ohm).
+    pub actual_ohm: f64,
+}
+
+impl ReramDevice {
+    /// Program a device to `level` with lognormal deviation `sigma`
+    /// (log-domain; the paper uses sigma = 0.1).
+    pub fn program(level: MlcLevel, sigma: f64, rng: &mut Pcg) -> ReramDevice {
+        ReramDevice { level, actual_ohm: rng.lognormal(level.nominal_ohm(), sigma) }
+    }
+
+    /// An ideal (deviation-free) device.
+    pub fn ideal(level: MlcLevel) -> ReramDevice {
+        ReramDevice { level, actual_ohm: level.nominal_ohm() }
+    }
+
+    pub fn conductance_us(&self) -> f64 {
+        1.0e6 / self.actual_ohm
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_bit_roundtrip() {
+        for i in 0..NUM_LEVELS {
+            let l = MlcLevel::from_index(i);
+            assert_eq!(MlcLevel::from_bits(l.msb(), l.lsb()), l);
+            assert_eq!(l as usize, i);
+        }
+    }
+
+    #[test]
+    fn levels_monotone_in_resistance() {
+        for i in 1..NUM_LEVELS {
+            assert!(LEVEL_OHM[i] > LEVEL_OHM[i - 1]);
+        }
+    }
+
+    #[test]
+    fn references_separate_levels() {
+        let r = References::default();
+        assert!(LEVEL_OHM[0] < r.r_l && r.r_l < LEVEL_OHM[1]);
+        assert!(LEVEL_OHM[1] < r.r_m && r.r_m < LEVEL_OHM[2]);
+        assert!(LEVEL_OHM[2] < r.r_h && r.r_h < LEVEL_OHM[3]);
+    }
+
+    #[test]
+    fn programming_deviation_is_lognormal_around_nominal() {
+        let mut rng = Pcg::new(7);
+        let n = 20_000;
+        let mut ratios: Vec<f64> = (0..n)
+            .map(|_| {
+                ReramDevice::program(MlcLevel::L1, 0.1, &mut rng).actual_ohm
+                    / LEVEL_OHM[1]
+            })
+            .collect();
+        ratios.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = ratios[n / 2];
+        assert!((med - 1.0).abs() < 0.02, "median ratio {med}");
+        // ~68% within one sigma (e^{±0.1}).
+        let within: usize = ratios
+            .iter()
+            .filter(|&&r| r > (-0.1f64).exp() && r < (0.1f64).exp())
+            .count();
+        let frac = within as f64 / n as f64;
+        assert!((0.64..0.72).contains(&frac), "1-sigma fraction {frac}");
+    }
+
+    #[test]
+    fn ideal_device_exact() {
+        let d = ReramDevice::ideal(MlcLevel::L3);
+        assert_eq!(d.actual_ohm, 135.0e3);
+        assert!((d.conductance_us() - 1.0e6 / 135.0e3).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,635 @@
+//! The 128x128 DIRC macro (Fig 3b) — statistical simulator.
+//!
+//! Geometry. Each of the 128 columns contains 128 DIRC cells; each cell
+//! stores `words_per_cell = 128/bits` words (16 INT8 / 32 INT4), one word
+//! per *word slot*. Word slot `w` of a column therefore holds a dim-128
+//! slice: element `row` of the slice lives in cell `row`. A document of
+//! dimension `dim = fold * 128` occupies `fold` consecutive word slots;
+//! a column holds `words_per_cell / fold` documents and the macro holds
+//! `128 * words_per_cell / fold` of them (e.g. 512 INT8 docs at dim 512 —
+//! 16 macros x 512 docs x 512 B = 4 MB, Table I).
+//!
+//! Sensing. For every (word slot, bit) the query-stationary schedule loads
+//! one bit-plane from ReRAM into the SRAM plane. The per-plane flip
+//! probability comes from the Fig-5a error map through the active
+//! [`Layout`]; flips are drawn by geometric skipping over the macro-wide
+//! plane stream (cheap at realistic error rates). With detection enabled,
+//! each column plane's flip tally is classified against the ΣD LUT and
+//! caught planes re-sense.
+//!
+//! Functional split. Clean scores are computed by the score backend (Rust
+//! exact dot or the PJRT executable of the L2 graph); sensing errors are
+//! applied as exact *score corrections*: a flip of bit `b` of element `j`
+//! of doc `d` changes the score by `±2^b * q[j]` (sign from the true bit
+//! and two's-complement weight). Stored norms are computed offline from
+//! true data, so — as in the paper — cosine denominators do *not* see
+//! sensing errors. The bit-exact column datapath
+//! ([`crate::dirc::column`]) cross-validates this arithmetic in tests.
+
+use crate::constants::MACRO_DIM;
+use crate::dirc::column::bit_weight;
+use crate::dirc::detect::{DSumLut, DetectOutcome, ResensePolicy};
+use crate::dirc::remap::{Layout, RemapStrategy};
+use crate::dirc::variation::ErrorMap;
+use crate::util::rng::Pcg;
+
+/// Static configuration of one macro.
+#[derive(Debug, Clone)]
+pub struct MacroConfig {
+    /// Word precision: 8 (INT8) or 4 (INT4).
+    pub bits: usize,
+    /// Embedding dimension; must be a multiple of 128.
+    pub dim: usize,
+    /// Enable the ΣD error-detection + re-sense loop.
+    pub detect: bool,
+    pub remap: RemapStrategy,
+    pub resense: ResensePolicy,
+}
+
+impl MacroConfig {
+    pub fn fold(&self) -> usize {
+        self.dim / MACRO_DIM
+    }
+
+    /// Words per cell: 128 stored bits per DIRC cell / word width.
+    pub fn words_per_cell(&self) -> usize {
+        crate::dirc::remap::SLOTS_PER_CELL / self.bits
+    }
+
+    pub fn docs_per_column(&self) -> usize {
+        self.words_per_cell() / self.fold()
+    }
+
+    /// Document capacity of one macro.
+    pub fn capacity_docs(&self) -> usize {
+        MACRO_DIM * self.docs_per_column()
+    }
+}
+
+/// One injected (surviving) bit flip, in document coordinates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Flip {
+    /// Local document index within the macro.
+    pub doc: u32,
+    /// Element index within the document.
+    pub elem: u32,
+    /// Bit position within the word.
+    pub bit: u8,
+    /// True stored bit value (flip direction: true means 1 -> 0).
+    pub was_one: bool,
+}
+
+impl Flip {
+    /// Exact value delta of this flip on the stored word.
+    #[inline]
+    pub fn value_delta(&self, bits: usize) -> i32 {
+        let w = bit_weight(self.bit as usize, bits);
+        if self.was_one {
+            -w
+        } else {
+            w
+        }
+    }
+}
+
+/// Per-query sensing statistics (drives the cycle/energy model).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SenseStats {
+    /// Bit-planes sensed (first attempts).
+    pub planes: u64,
+    /// Planes that had at least one flip on the final accepted sense.
+    pub dirty_planes: u64,
+    /// Detection comparisons performed.
+    pub detect_checks: u64,
+    /// Planes caught by ΣD mismatch (each triggers a re-sense).
+    pub caught: u64,
+    /// Re-sense operations performed (<= caught * max_retries).
+    pub resenses: u64,
+    /// Planes whose flips escaped detection (compensating flips).
+    pub escaped: u64,
+    /// Total surviving flips (after detection/re-sensing).
+    pub flips: u64,
+    /// Max re-senses charged to a single column (lockstep stall model).
+    pub max_column_resenses: u64,
+}
+
+/// The DIRC macro simulator.
+pub struct DircMacro {
+    pub cfg: MacroConfig,
+    layout: Layout,
+    /// Flip probability per (word slot, bit): layout x error map.
+    plane_rate: Vec<f64>,
+    /// True quantized document values, row-major [n_docs][dim].
+    docs: Vec<i8>,
+    n_docs: usize,
+    /// ΣD LUTs, one per column (precomputed offline, as in the paper).
+    luts: Vec<DSumLut>,
+}
+
+impl DircMacro {
+    /// Program a macro with up to `capacity_docs` documents. `docs` is
+    /// row-major `[n_docs][dim]`, values within the INT`bits` range.
+    pub fn program(cfg: MacroConfig, docs: &[i8], n_docs: usize, map: &ErrorMap) -> DircMacro {
+        assert_eq!(cfg.dim % MACRO_DIM, 0, "dim must be a multiple of 128");
+        assert_eq!(docs.len(), n_docs * cfg.dim);
+        assert!(
+            n_docs <= cfg.capacity_docs(),
+            "{} docs exceed macro capacity {}",
+            n_docs,
+            cfg.capacity_docs()
+        );
+        let lo = -(1i16 << (cfg.bits - 1));
+        let hi = (1i16 << (cfg.bits - 1)) - 1;
+        debug_assert!(docs.iter().all(|&v| (v as i16) >= lo && (v as i16) <= hi));
+
+        let layout = Layout::build(cfg.bits, cfg.remap, map);
+        let words = cfg.words_per_cell();
+        let plane_rate: Vec<f64> = (0..words)
+            .flat_map(|w| (0..cfg.bits).map(move |b| (w, b)))
+            .map(|(w, b)| layout.bit_error_rate(map, w, b))
+            .collect();
+
+        let mut m = DircMacro {
+            cfg,
+            layout,
+            plane_rate,
+            docs: docs.to_vec(),
+            n_docs,
+            luts: Vec::new(),
+        };
+        m.luts = m.precompute_luts();
+        m
+    }
+
+    fn precompute_luts(&self) -> Vec<DSumLut> {
+        let words = self.cfg.words_per_cell();
+        let bits = self.cfg.bits;
+        (0..MACRO_DIM)
+            .map(|col| {
+                DSumLut::precompute(words, bits, |w, b| {
+                    let mut sum = 0u16;
+                    for row in 0..MACRO_DIM {
+                        if let Some((doc, elem)) = self.doc_elem(col, w, row) {
+                            let v = self.docs[doc * self.cfg.dim + elem];
+                            if (v >> b) & 1 != 0 {
+                                sum += 1;
+                            }
+                        }
+                    }
+                    sum
+                })
+            })
+            .collect()
+    }
+
+    /// Inverse layout: (column, word slot, row) -> (doc, element), or None
+    /// for unoccupied storage. Documents are *striped* across columns
+    /// (doc `d` of slot-group `g = d / 128` sits in column `d % 128`), so
+    /// partial occupancy shortens every column's pass equally — the
+    /// mechanism behind the paper's linear latency/energy scaling.
+    #[inline]
+    fn doc_elem(&self, col: usize, word: usize, row: usize) -> Option<(usize, usize)> {
+        let fold = self.cfg.fold();
+        let group = word / fold;
+        let doc = group * MACRO_DIM + col;
+        if doc >= self.n_docs {
+            return None;
+        }
+        let elem = (word % fold) * MACRO_DIM + row;
+        Some((doc, elem))
+    }
+
+    pub fn n_docs(&self) -> usize {
+        self.n_docs
+    }
+
+    pub fn docs(&self) -> &[i8] {
+        &self.docs
+    }
+
+    pub fn layout(&self) -> &Layout {
+        &self.layout
+    }
+
+    /// Word slots the QS schedule actually walks: occupied slot groups
+    /// (striped across columns) times the dimension fold.
+    pub fn used_words(&self) -> usize {
+        self.n_docs.div_ceil(MACRO_DIM) * self.cfg.fold()
+    }
+
+    /// Clean (error-free) integer MIPS scores — the macro's ideal output.
+    pub fn clean_scores(&self, query: &[i8]) -> Vec<i64> {
+        assert_eq!(query.len(), self.cfg.dim);
+        (0..self.n_docs)
+            .map(|d| {
+                let row = &self.docs[d * self.cfg.dim..(d + 1) * self.cfg.dim];
+                row.iter().zip(query).map(|(&a, &b)| a as i64 * b as i64).sum()
+            })
+            .collect()
+    }
+
+    /// Simulate the sensing phase of one query: draw per-plane flips,
+    /// run detection/re-sense, and return the surviving flips + stats.
+    ///
+    /// Planes are streamed macro-wide per (word slot, bit): the flip
+    /// stream covers columns x rows = 128 x 128 positions, walked by
+    /// geometric skipping so cost is O(#flips), not O(bits stored).
+    pub fn sense(&self, rng: &mut Pcg) -> (Vec<Flip>, SenseStats) {
+        let words = self.used_words();
+        let bits = self.cfg.bits;
+        let mut stats = SenseStats::default();
+        let mut flips: Vec<Flip> = Vec::new();
+        let mut col_resenses = vec![0u64; MACRO_DIM];
+        let stream_len = MACRO_DIM * MACRO_DIM; // columns x rows
+
+        for w in 0..words {
+            for b in 0..bits {
+                stats.planes += MACRO_DIM as u64;
+                if self.cfg.detect {
+                    stats.detect_checks += MACRO_DIM as u64;
+                }
+                let p = self.plane_rate[w * bits + b];
+                if p <= 0.0 {
+                    continue;
+                }
+                // First-pass flips for this plane class across all columns.
+                let mut positions = geometric_walk(stream_len, p, rng);
+                if positions.is_empty() {
+                    continue;
+                }
+                // Group by column; positions are ascending so columns come
+                // grouped already (pos / 128 is monotone).
+                let mut i = 0;
+                while i < positions.len() {
+                    let col = positions[i] / MACRO_DIM;
+                    let mut j = i;
+                    while j < positions.len() && positions[j] / MACRO_DIM == col {
+                        j += 1;
+                    }
+                    let plane_positions = &positions[i..j];
+                    i = j;
+                    self.settle_column_plane(
+                        col,
+                        w,
+                        b,
+                        plane_positions,
+                        rng,
+                        &mut flips,
+                        &mut stats,
+                        &mut col_resenses,
+                    );
+                }
+                positions.clear();
+            }
+        }
+        stats.max_column_resenses = col_resenses.iter().copied().max().unwrap_or(0);
+        (flips, stats)
+    }
+
+    /// Detection/re-sense loop for one column plane whose first sense
+    /// produced `first_positions` (stream positions within this plane
+    /// class). Surviving flips are appended to `flips`.
+    #[allow(clippy::too_many_arguments)]
+    fn settle_column_plane(
+        &self,
+        col: usize,
+        word: usize,
+        bit: usize,
+        first_positions: &[usize],
+        rng: &mut Pcg,
+        flips: &mut Vec<Flip>,
+        stats: &mut SenseStats,
+        col_resenses: &mut [u64],
+    ) {
+        let p = self.plane_rate[word * self.cfg.bits + bit];
+        // Current attempt's flip rows within the column plane.
+        let mut rows: Vec<usize> = first_positions.iter().map(|&s| s % MACRO_DIM).collect();
+        let mut attempts = 0usize;
+
+        loop {
+            // Resolve flip directions from true data; flips on unoccupied
+            // rows have no functional effect but still perturb ΣD of the
+            // plane only if the row is occupied (unoccupied rows are not
+            // wired to stored words — treat as no-flip).
+            let mut resolved: Vec<Flip> = Vec::with_capacity(rows.len());
+            let (mut up, mut down) = (0u16, 0u16);
+            for &row in &rows {
+                if let Some((doc, elem)) = self.doc_elem(col, word, row) {
+                    let v = self.docs[doc * self.cfg.dim + elem];
+                    let was_one = (v >> bit) & 1 != 0;
+                    if was_one {
+                        down += 1;
+                    } else {
+                        up += 1;
+                    }
+                    resolved.push(Flip {
+                        doc: doc as u32,
+                        elem: elem as u32,
+                        bit: bit as u8,
+                        was_one,
+                    });
+                }
+            }
+
+            if !self.cfg.detect || resolved.is_empty() {
+                if !resolved.is_empty() {
+                    stats.dirty_planes += 1;
+                    stats.flips += resolved.len() as u64;
+                    flips.extend(resolved);
+                }
+                return;
+            }
+
+            match self.luts[col].classify(word, bit, up, down) {
+                DetectOutcome::Clean => return,
+                DetectOutcome::Escaped => {
+                    stats.escaped += 1;
+                    stats.dirty_planes += 1;
+                    stats.flips += resolved.len() as u64;
+                    flips.extend(resolved);
+                    return;
+                }
+                DetectOutcome::Caught => {
+                    stats.caught += 1;
+                    if attempts >= self.cfg.resense.max_retries {
+                        // Accept the erroneous plane (bounded retries).
+                        stats.dirty_planes += 1;
+                        stats.flips += resolved.len() as u64;
+                        flips.extend(resolved);
+                        return;
+                    }
+                    attempts += 1;
+                    stats.resenses += 1;
+                    col_resenses[col] += 1;
+                    // Re-sense this column plane only: fresh 128-bit draw.
+                    rows = geometric_walk(MACRO_DIM, p, rng);
+                    if rows.is_empty() {
+                        return; // clean re-sense
+                    }
+                }
+            }
+        }
+    }
+
+    /// Exact score corrections for a set of flips under `query`:
+    /// delta_score[doc] += value_delta(flip) * q[elem].
+    pub fn score_corrections(&self, flips: &[Flip], query: &[i8]) -> Vec<(u32, i64)> {
+        let mut out: Vec<(u32, i64)> = Vec::with_capacity(flips.len());
+        for f in flips {
+            let dq = f.value_delta(self.cfg.bits) as i64 * query[f.elem as usize] as i64;
+            out.push((f.doc, dq));
+        }
+        out
+    }
+
+    /// Sensed (erroneous) scores: clean scores + corrections. This is what
+    /// the hardware actually outputs for one query.
+    pub fn sensed_scores(&self, query: &[i8], rng: &mut Pcg) -> (Vec<i64>, SenseStats) {
+        let mut scores = self.clean_scores(query);
+        let (flips, stats) = self.sense(rng);
+        for (doc, dq) in self.score_corrections(&flips, query) {
+            scores[doc as usize] += dq;
+        }
+        (scores, stats)
+    }
+
+    /// Materialise the sensed document matrix for a flip set (validation
+    /// path — cross-checked against `score_corrections` in tests).
+    pub fn apply_flips_to_matrix(&self, flips: &[Flip]) -> Vec<i8> {
+        let mut m = self.docs.clone();
+        for f in flips {
+            let idx = f.doc as usize * self.cfg.dim + f.elem as usize;
+            m[idx] ^= 1 << f.bit;
+        }
+        m
+    }
+}
+
+/// Geometric-skipping walk: positions of Bernoulli(p) successes in a
+/// stream of `len` trials, in ascending order. O(#successes) expected.
+pub fn geometric_walk(len: usize, p: f64, rng: &mut Pcg) -> Vec<usize> {
+    debug_assert!((0.0..=1.0).contains(&p));
+    let mut out = Vec::new();
+    if p <= 0.0 || len == 0 {
+        return out;
+    }
+    if p >= 1.0 {
+        out.extend(0..len);
+        return out;
+    }
+    let log1mp = (1.0 - p).ln();
+    let mut pos: f64 = 0.0;
+    loop {
+        // Skip ~Geometric(p): floor(ln U / ln(1-p)).
+        let u = 1.0 - rng.f64(); // in (0, 1]
+        pos += (u.ln() / log1mp).floor();
+        if pos >= len as f64 {
+            return out;
+        }
+        out.push(pos as usize);
+        pos += 1.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dirc::variation::VariationModel;
+
+    fn small_map(corner: f64) -> ErrorMap {
+        VariationModel { corner, ..VariationModel::default() }.extract_error_map(150, 11)
+    }
+
+    fn cfg(bits: usize, dim: usize, detect: bool) -> MacroConfig {
+        MacroConfig {
+            bits,
+            dim,
+            detect,
+            remap: RemapStrategy::ErrorAware,
+            resense: ResensePolicy::default(),
+        }
+    }
+
+    fn rand_docs(n: usize, dim: usize, bits: usize, seed: u64) -> Vec<i8> {
+        let mut rng = Pcg::new(seed);
+        let lo = -(1i64 << (bits - 1));
+        let hi = (1i64 << (bits - 1)) - 1;
+        (0..n * dim).map(|_| rng.int_in(lo, hi) as i8).collect()
+    }
+
+    #[test]
+    fn geometry_capacity() {
+        assert_eq!(cfg(8, 128, true).capacity_docs(), 2048);
+        assert_eq!(cfg(8, 512, true).capacity_docs(), 512);
+        assert_eq!(cfg(4, 512, true).capacity_docs(), 1024);
+        assert_eq!(cfg(8, 1024, true).capacity_docs(), 256);
+        // 2 Mb NVM per macro regardless of precision.
+        let c = cfg(8, 512, true);
+        assert_eq!(
+            c.capacity_docs() * c.dim * c.bits,
+            crate::constants::MACRO_NVM_BITS
+        );
+    }
+
+    #[test]
+    fn clean_scores_match_naive_dot() {
+        let map = small_map(1.0);
+        let (n, dim) = (64, 128);
+        let docs = rand_docs(n, dim, 8, 1);
+        let m = DircMacro::program(cfg(8, dim, false), &docs, n, &map);
+        let mut rng = Pcg::new(2);
+        let q: Vec<i8> = (0..dim).map(|_| rng.int_in(-128, 127) as i8).collect();
+        let scores = m.clean_scores(&q);
+        for d in 0..n {
+            let want: i64 = (0..dim).map(|j| docs[d * dim + j] as i64 * q[j] as i64).sum();
+            assert_eq!(scores[d], want);
+        }
+    }
+
+    #[test]
+    fn corrections_equal_materialised_rescore() {
+        // The exact-correction fast path must equal scoring the flipped
+        // matrix directly.
+        let map = small_map(4.0); // hot corner: plenty of flips
+        let (n, dim) = (32, 256);
+        let docs = rand_docs(n, dim, 8, 3);
+        let m = DircMacro::program(cfg(8, dim, false), &docs, n, &map);
+        let mut rng = Pcg::new(4);
+        let q: Vec<i8> = (0..dim).map(|_| rng.int_in(-128, 127) as i8).collect();
+
+        let (flips, stats) = m.sense(&mut rng);
+        assert!(stats.flips > 0, "hot corner must flip something");
+        let mut fast = m.clean_scores(&q);
+        for (doc, dq) in m.score_corrections(&flips, &q) {
+            fast[doc as usize] += dq;
+        }
+        let flipped = m.apply_flips_to_matrix(&flips);
+        for d in 0..n {
+            let want: i64 = (0..dim).map(|j| flipped[d * dim + j] as i64 * q[j] as i64).sum();
+            assert_eq!(fast[d], want, "doc {d}");
+        }
+    }
+
+    #[test]
+    fn detection_reduces_surviving_flips() {
+        // At a moderately elevated corner, re-sensing converges: detection
+        // must remove the large majority of flips. (At extreme corners
+        // multi-flip planes dominate, half of which are sum-preserving
+        // escapes, and detection saturates — by design; see the fig6
+        // bench for the full corner sweep.)
+        let map = small_map(1.0);
+        // Full occupancy so all 16 word slots (and thus the whole error
+        // map, not just the best positions) are exercised.
+        let (n, dim) = (2048, 128);
+        let docs = rand_docs(n, dim, 8, 5);
+        let m_off = DircMacro::program(cfg(8, dim, false), &docs, n, &map);
+        let m_on = DircMacro::program(cfg(8, dim, true), &docs, n, &map);
+        let (mut off_flips, mut on_flips) = (0u64, 0u64);
+        for seed in 0..20 {
+            let mut r1 = Pcg::new(100 + seed);
+            let mut r2 = Pcg::new(100 + seed);
+            off_flips += m_off.sense(&mut r1).1.flips;
+            let (_, s_on) = m_on.sense(&mut r2);
+            on_flips += s_on.flips;
+        }
+        assert!(off_flips > 0, "corner too quiet for the test to be meaningful");
+        assert!(
+            on_flips * 4 < off_flips,
+            "detection should remove most flips: {on_flips} vs {off_flips}"
+        );
+    }
+
+    #[test]
+    fn detection_catches_all_single_flip_planes() {
+        // With detection on, surviving dirty planes must be Escaped (>= 2
+        // compensating flips) or retry-exhausted; a single flip always
+        // changes the sum, so every surviving plane has >= 2 flips unless
+        // retries were exhausted.
+        let map = small_map(2.0);
+        let (n, dim) = (128, 128);
+        let docs = rand_docs(n, dim, 8, 6);
+        let m = DircMacro::program(cfg(8, dim, true), &docs, n, &map);
+        let mut rng = Pcg::new(7);
+        let (flips, stats) = m.sense(&mut rng);
+        if stats.resenses < (stats.caught) * m.cfg.resense.max_retries as u64 {
+            // No retry exhaustion anywhere: every surviving flip plane
+            // escaped, hence sum-preserving, hence flips come in pairs.
+            assert_eq!(flips.len() as u64, stats.flips);
+            assert_eq!(stats.escaped > 0, stats.flips > 0);
+        }
+    }
+
+    #[test]
+    fn int4_macro_roundtrip() {
+        let map = small_map(1.0);
+        let (n, dim) = (64, 128);
+        let docs = rand_docs(n, dim, 4, 8);
+        let m = DircMacro::program(cfg(4, dim, true), &docs, n, &map);
+        let mut rng = Pcg::new(9);
+        let q: Vec<i8> = (0..dim).map(|_| rng.int_in(-8, 7) as i8).collect();
+        let (scores, _) = m.sensed_scores(&q, &mut rng);
+        assert_eq!(scores.len(), n);
+    }
+
+    #[test]
+    fn geometric_walk_statistics() {
+        let mut rng = Pcg::new(10);
+        let (len, p, reps) = (10_000usize, 0.01f64, 200usize);
+        let mut total = 0usize;
+        for _ in 0..reps {
+            let w = geometric_walk(len, p, &mut rng);
+            for pair in w.windows(2) {
+                assert!(pair[0] < pair[1], "ascending, distinct");
+            }
+            assert!(w.iter().all(|&x| x < len));
+            total += w.len();
+        }
+        let mean = total as f64 / reps as f64;
+        let want = len as f64 * p;
+        assert!((mean - want).abs() < want * 0.1, "mean {mean} want {want}");
+    }
+
+    #[test]
+    fn geometric_walk_edge_cases() {
+        let mut rng = Pcg::new(11);
+        assert!(geometric_walk(100, 0.0, &mut rng).is_empty());
+        assert_eq!(geometric_walk(5, 1.0, &mut rng), vec![0, 1, 2, 3, 4]);
+        assert!(geometric_walk(0, 0.5, &mut rng).is_empty());
+    }
+
+    #[test]
+    fn error_aware_survives_better_than_naive() {
+        // End-to-end: at the same corner, naive layout corrupts scores
+        // much more than error-aware (the Fig 6 mechanism).
+        let map = small_map(3.0);
+        let (n, dim) = (128, 128);
+        let docs = rand_docs(n, dim, 8, 12);
+        let mk = |remap| {
+            DircMacro::program(
+                MacroConfig { remap, ..cfg(8, dim, false) },
+                &docs,
+                n,
+                &map,
+            )
+        };
+        let m_naive = mk(RemapStrategy::Interleaved);
+        let m_aware = mk(RemapStrategy::ErrorAware);
+        let mut rng = Pcg::new(13);
+        let q: Vec<i8> = (0..dim).map(|_| rng.int_in(-128, 127) as i8).collect();
+        let clean = m_naive.clean_scores(&q);
+        let mut err_naive = 0f64;
+        let mut err_aware = 0f64;
+        for seed in 0..30 {
+            let mut r = Pcg::new(1000 + seed);
+            let (s, _) = m_naive.sensed_scores(&q, &mut r);
+            err_naive += s.iter().zip(&clean).map(|(a, b)| (a - b).abs() as f64).sum::<f64>();
+            let mut r = Pcg::new(1000 + seed);
+            let (s, _) = m_aware.sensed_scores(&q, &mut r);
+            err_aware += s.iter().zip(&clean).map(|(a, b)| (a - b).abs() as f64).sum::<f64>();
+        }
+        assert!(
+            err_aware * 2.0 < err_naive,
+            "aware {err_aware} vs naive {err_naive}"
+        );
+    }
+}

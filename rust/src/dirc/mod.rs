@@ -1,0 +1,43 @@
+//! The DIRC hardware model — the paper's Section III, as a behavioural and
+//! bit-exact simulator.
+//!
+//! Bottom-up structure, mirroring Fig. 3:
+//!
+//! * [`device`]   — MLC ReRAM device model: 4 resistance levels, lognormal
+//!   deviation, reference cells (Fig 3c, top).
+//! * [`variation`]— spatial variation model of the 8x8 subarray and the
+//!   Monte-Carlo extraction of the LSB error map (Fig 5a).
+//! * [`sensing`]  — the differential sensing race (latch + precharge, MSB
+//!   then reference-selected LSB; Fig 3c, middle).
+//! * [`cell`]     — one DIRC cell: 8x8 MLC subarray + 1-bit SRAM, 128 bits
+//!   of storage behind one compute bit.
+//! * [`remap`]    — bit-wise data remapping strategies (naive vs
+//!   error-aware; Sec III.C).
+//! * [`detect`]   — the ΣD-LUT error-detection circuit + re-sense policy
+//!   (Fig 5b).
+//! * [`column`]   — one DIRC column: 128 cells, NOR multipliers, 128-input
+//!   carry-save adder, accumulator; bit-exact QS MAC (Fig 4).
+//! * [`macro_`]   — the 128x128 DIRC macro: document layout (dimension
+//!   folding, INT4 packing), sensing with error injection, detection,
+//!   score computation.
+//! * [`core`]     — a DIRC-RAG core: macro + norm/index ReRAM buffer +
+//!   cosine calculator + local top-k (Fig 3a, right).
+//! * [`chip`]     — the 16-core DIRC-RAG chip: query broadcast, norm unit,
+//!   SRAM result buffer, global top-k.
+
+pub mod cell;
+pub mod chip;
+pub mod column;
+pub mod core;
+pub mod detect;
+pub mod device;
+pub mod macro_;
+pub mod remap;
+pub mod sensing;
+pub mod variation;
+pub mod write;
+
+pub use chip::{ChipConfig, DircChip, QueryStats};
+pub use device::{MlcLevel, ReramDevice};
+pub use remap::RemapStrategy;
+pub use variation::{ErrorMap, VariationModel};

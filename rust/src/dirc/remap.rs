@@ -1,0 +1,280 @@
+//! Bit-wise data remapping (paper Sec III.C, "Error-Aware Bitwise
+//! Mapping").
+//!
+//! A DIRC cell's 8x8 MLC subarray stores 128 bits: 64 MSB slots (the
+//! reliable bit of each MLC cell) and 64 LSB slots. Those 128 bits hold 16
+//! INT8 words (or 32 INT4 words). The *layout* decides which word-bit
+//! lands on which slot — identical across all cells of a column, so the
+//! layout is a per-macro (indeed per-chip) decision.
+//!
+//! Strategies:
+//!
+//! * [`RemapStrategy::Interleaved`] — the naive layout: word bits fill
+//!   cells in order, so even bits land on LSB slots and odd bits on MSB
+//!   slots. High-weight bits (e.g. bit 6, weight 64) sit on error-prone
+//!   LSB positions: the baseline the paper improves on.
+//! * [`RemapStrategy::Random`] — randomised slot assignment (ablation).
+//! * [`RemapStrategy::ErrorAware`] — the paper's scheme: the top half of
+//!   each word (bits B/2..B, including the sign) maps to MSB slots (100%
+//!   reliable), and the low half maps to LSB slots ordered by the Fig-5a
+//!   error map: the most significant of the low bits goes to the most
+//!   reliable positions, the least significant to the worst.
+
+use crate::dirc::variation::{ErrorMap, SUB_CELLS, SUB_COLS};
+use crate::util::rng::Pcg;
+
+/// Total bit slots per DIRC cell (8x8 MLC x 2 bits).
+pub const SLOTS_PER_CELL: usize = SUB_CELLS * 2;
+
+/// One physical bit slot inside the subarray.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Slot {
+    /// MLC cell position, row-major in the 8x8 subarray.
+    pub pos: u8,
+    /// True = the MSB plane of the MLC cell, false = LSB plane.
+    pub msb: bool,
+}
+
+impl Slot {
+    pub fn row(self) -> usize {
+        self.pos as usize / SUB_COLS
+    }
+
+    pub fn col(self) -> usize {
+        self.pos as usize % SUB_COLS
+    }
+}
+
+/// The remapping strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RemapStrategy {
+    Interleaved,
+    Random { seed: u64 },
+    ErrorAware,
+}
+
+/// A concrete layout: word x bit -> slot, plus the inverse.
+#[derive(Debug, Clone)]
+pub struct Layout {
+    /// Word bit-width (8 or 4).
+    pub bits: usize,
+    /// Words per cell (128 / bits).
+    pub words: usize,
+    slot_of: Vec<Slot>,              // index = word * bits + bit
+    word_bit_of: Vec<(u16, u8)>,     // index = slot linear id (pos*2 + msb)
+    pub strategy: RemapStrategy,
+}
+
+impl Layout {
+    /// Build a layout for `bits`-wide words under `strategy`, using the
+    /// extracted error `map` (needed by `ErrorAware`; others ignore it).
+    pub fn build(bits: usize, strategy: RemapStrategy, map: &ErrorMap) -> Layout {
+        assert!(bits == 4 || bits == 8, "INT4/INT8 only");
+        let words = SLOTS_PER_CELL / bits;
+        let mut slot_of = vec![Slot { pos: 0, msb: false }; SLOTS_PER_CELL];
+
+        match strategy {
+            RemapStrategy::Interleaved => {
+                // Word bits fill consecutive (cell, plane) slots: bit b of
+                // word w -> linear slot w*bits + b; even linear index = LSB
+                // plane of cell (idx/2), odd = MSB plane.
+                for w in 0..words {
+                    for b in 0..bits {
+                        let lin = w * bits + b;
+                        slot_of[lin] = Slot { pos: (lin / 2) as u8, msb: lin % 2 == 1 };
+                    }
+                }
+            }
+            RemapStrategy::Random { seed } => {
+                let mut all: Vec<Slot> = (0..SUB_CELLS)
+                    .flat_map(|p| {
+                        [Slot { pos: p as u8, msb: false }, Slot { pos: p as u8, msb: true }]
+                    })
+                    .collect();
+                let mut rng = Pcg::new(seed);
+                rng.shuffle(&mut all);
+                slot_of.copy_from_slice(&all);
+            }
+            RemapStrategy::ErrorAware => {
+                // High half of each word -> MSB slots (positions in
+                // reliability order too, though they are all ~perfect);
+                // low half -> LSB slots by ascending error rate, most
+                // significant low bit first.
+                let by_rel = map.positions_by_reliability();
+                let high_bits = bits / 2; // bits [bits/2, bits)
+                // MSB plane: words*high_bits == 64 assignments.
+                let mut msb_iter = by_rel.iter();
+                for b in (high_bits..bits).rev() {
+                    for w in 0..words {
+                        let &(r, c) = msb_iter.next().expect("enough MSB slots");
+                        slot_of[w * bits + b] =
+                            Slot { pos: (r * SUB_COLS + c) as u8, msb: true };
+                    }
+                }
+                // LSB plane: bit (high_bits-1) of every word gets the most
+                // reliable LSB positions, ... bit 0 the worst.
+                let mut lsb_iter = by_rel.iter();
+                for b in (0..high_bits).rev() {
+                    for w in 0..words {
+                        let &(r, c) = lsb_iter.next().expect("enough LSB slots");
+                        slot_of[w * bits + b] =
+                            Slot { pos: (r * SUB_COLS + c) as u8, msb: false };
+                    }
+                }
+            }
+        }
+
+        // Inverse map + bijection check.
+        let mut word_bit_of = vec![(u16::MAX, u8::MAX); SLOTS_PER_CELL];
+        for w in 0..words {
+            for b in 0..bits {
+                let s = slot_of[w * bits + b];
+                let lin = s.pos as usize * 2 + s.msb as usize;
+                assert_eq!(
+                    word_bit_of[lin],
+                    (u16::MAX, u8::MAX),
+                    "layout not a bijection: slot {s:?} double-booked"
+                );
+                word_bit_of[lin] = (w as u16, b as u8);
+            }
+        }
+
+        Layout { bits, words, slot_of, word_bit_of, strategy }
+    }
+
+    /// Physical slot of bit `b` of word `w`.
+    #[inline]
+    pub fn slot(&self, word: usize, bit: usize) -> Slot {
+        self.slot_of[word * self.bits + bit]
+    }
+
+    /// Inverse: which (word, bit) lives at a slot.
+    pub fn word_bit(&self, slot: Slot) -> (usize, usize) {
+        let (w, b) = self.word_bit_of[slot.pos as usize * 2 + slot.msb as usize];
+        (w as usize, b as usize)
+    }
+
+    /// Per-(word, bit) raw sensing error rate under the error map: MSB
+    /// slots use the map's MSB rate, LSB slots the LSB rate.
+    pub fn bit_error_rate(&self, map: &ErrorMap, word: usize, bit: usize) -> f64 {
+        let s = self.slot(word, bit);
+        if s.msb {
+            map.msb[s.row()][s.col()]
+        } else {
+            map.lsb[s.row()][s.col()]
+        }
+    }
+
+    /// Expected |value error| per stored word under the map: the sum over
+    /// bits of rate * weight. The figure of merit the remap minimises.
+    pub fn expected_value_error(&self, map: &ErrorMap) -> f64 {
+        (0..self.words)
+            .map(|w| {
+                (0..self.bits)
+                    .map(|b| self.bit_error_rate(map, w, b) * (1u64 << b) as f64)
+                    .sum::<f64>()
+            })
+            .sum::<f64>()
+            / self.words as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dirc::variation::VariationModel;
+    use crate::util::prop::{cases, forall, gen_usize};
+
+    fn map() -> ErrorMap {
+        VariationModel::default().extract_error_map(150, 77)
+    }
+
+    #[test]
+    fn all_strategies_are_bijections() {
+        // Layout::build panics internally if not a bijection; also verify
+        // the inverse agrees.
+        let m = map();
+        for bits in [4usize, 8] {
+            for strat in [
+                RemapStrategy::Interleaved,
+                RemapStrategy::Random { seed: 5 },
+                RemapStrategy::ErrorAware,
+            ] {
+                let l = Layout::build(bits, strat, &m);
+                assert_eq!(l.words * l.bits, SLOTS_PER_CELL);
+                for w in 0..l.words {
+                    for b in 0..l.bits {
+                        assert_eq!(l.word_bit(l.slot(w, b)), (w, b));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn error_aware_puts_high_bits_on_msb_plane() {
+        let m = map();
+        let l = Layout::build(8, RemapStrategy::ErrorAware, &m);
+        for w in 0..l.words {
+            for b in 4..8 {
+                assert!(l.slot(w, b).msb, "word {w} bit {b} not on MSB plane");
+            }
+            for b in 0..4 {
+                assert!(!l.slot(w, b).msb);
+            }
+        }
+    }
+
+    #[test]
+    fn error_aware_orders_low_bits_by_reliability() {
+        let m = map();
+        let l = Layout::build(8, RemapStrategy::ErrorAware, &m);
+        // Average error rate of bit-3 positions must not exceed bit-0's.
+        let avg = |bit: usize| -> f64 {
+            (0..l.words).map(|w| l.bit_error_rate(&m, w, bit)).sum::<f64>() / l.words as f64
+        };
+        assert!(avg(3) <= avg(2) + 1e-12);
+        assert!(avg(2) <= avg(1) + 1e-12);
+        assert!(avg(1) <= avg(0) + 1e-12);
+    }
+
+    #[test]
+    fn error_aware_beats_naive_on_expected_error() {
+        let m = map();
+        let naive = Layout::build(8, RemapStrategy::Interleaved, &m).expected_value_error(&m);
+        let aware = Layout::build(8, RemapStrategy::ErrorAware, &m).expected_value_error(&m);
+        assert!(
+            aware < naive * 0.5,
+            "error-aware {aware} should be well under naive {naive}"
+        );
+    }
+
+    #[test]
+    fn int4_layout_geometry() {
+        let m = map();
+        let l = Layout::build(4, RemapStrategy::ErrorAware, &m);
+        assert_eq!(l.words, 32);
+        for w in 0..32 {
+            assert!(l.slot(w, 3).msb && l.slot(w, 2).msb);
+            assert!(!l.slot(w, 1).msb && !l.slot(w, 0).msb);
+        }
+    }
+
+    #[test]
+    fn prop_random_layouts_always_bijective() {
+        let m = map();
+        forall(cases(25), gen_usize(0, 10_000), |&seed| {
+            let l = Layout::build(8, RemapStrategy::Random { seed: seed as u64 }, &m);
+            let mut seen = std::collections::HashSet::new();
+            for w in 0..l.words {
+                for b in 0..l.bits {
+                    let s = l.slot(w, b);
+                    if !seen.insert((s.pos, s.msb)) {
+                        return false;
+                    }
+                }
+            }
+            seen.len() == SLOTS_PER_CELL
+        });
+    }
+}

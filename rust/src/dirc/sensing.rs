@@ -1,0 +1,214 @@
+//! The differential sensing race (Fig 3c, middle).
+//!
+//! Read procedure per the paper:
+//!
+//! 1. `Latch` is disabled, breaking the SRAM feedback loop; `Precharge`
+//!    pulls both internal nodes Q/QB to VDD/2.
+//! 2. The selected WL/BL ground the read bitline through the addressed
+//!    ReRAM; the reference WL grounds the reference bitline through a
+//!    reference ReRAM. `Latch` re-enables the feedback loop and the two
+//!    bitlines race: the lower-resistance (higher-conductance) side
+//!    discharges first and the latch resolves.
+//! 3. MSB sense: reference `R_M`. If the cell resistance is below `R_M`
+//!    the Q node discharges (MSB = 0 side wins), else Q charges to VDD.
+//! 4. LSB sense (`LSBEn`): the MSB result selects `R_L` or `R_H` via the
+//!    M/MB mux, and the race repeats.
+//!
+//! Behaviourally, the race outcome is decided by the *conductance margin*
+//! between the cell branch and the reference branch, perturbed by latch
+//! noise + frozen MOS mismatch. The spatially varying parasitics come from
+//! [`crate::dirc::variation::VariationModel`].
+
+use crate::dirc::device::{References, ReramDevice};
+use crate::util::rng::Pcg;
+
+/// Electrical environment of one sensing operation at one position.
+#[derive(Debug, Clone, Copy)]
+pub struct SenseEnv {
+    /// Series parasitic resistance on the cell branch (ohm).
+    pub r_par_ohm: f64,
+    /// Transient comparator noise sigma (µS, conductance domain).
+    pub noise_sigma_us: f64,
+    /// Frozen MOS-mismatch offset (µS) — biases the latch trip point.
+    pub mismatch_us: f64,
+    pub references: References,
+}
+
+/// Branch conductance in µS: resistance in series with the parasitic.
+#[inline]
+fn branch_conductance_us(r_ohm: f64, r_par_ohm: f64) -> f64 {
+    1.0e6 / (r_ohm + r_par_ohm)
+}
+
+/// Resolve one differential race. Returns `true` if the *reference* branch
+/// discharges faster, i.e. the cell resistance reads as "above reference".
+///
+/// The reference branch is routed through matched parasitics (the
+/// reference column sits inside the subarray, Fig 3c top-right), so both
+/// branches share `r_par_ohm`; the asymmetric spatial term shows up as
+/// noise/mismatch on the latch instead.
+#[inline]
+pub fn race_reads_above(
+    dev: &ReramDevice,
+    r_ref_ohm: f64,
+    env: &SenseEnv,
+    rng: &mut Pcg,
+) -> bool {
+    let g_cell = branch_conductance_us(dev.actual_ohm, env.r_par_ohm);
+    let g_ref = branch_conductance_us(r_ref_ohm, env.r_par_ohm);
+    let noise = rng.normal_ms(env.mismatch_us, env.noise_sigma_us);
+    // Cell discharges faster when its conductance (plus latch offset)
+    // exceeds the reference's: that is a "below reference" read.
+    g_cell + noise < g_ref
+}
+
+/// MSB sense: one race against `R_M`. MSB = 1 means "high resistance half"
+/// (levels L2/L3), consistent with [`crate::dirc::device::MlcLevel`].
+#[inline]
+pub fn sense_msb(dev: &ReramDevice, env: &SenseEnv, rng: &mut Pcg) -> bool {
+    race_reads_above(dev, env.references.r_m, env, rng)
+}
+
+/// LSB sense: the previous MSB result selects the reference (M/MB mux),
+/// then one more race. LSB = 1 means "upper level within the half".
+#[inline]
+pub fn sense_lsb(dev: &ReramDevice, msb: bool, env: &SenseEnv, rng: &mut Pcg) -> bool {
+    let r_ref = if msb { env.references.r_h } else { env.references.r_l };
+    race_reads_above(dev, r_ref, env, rng)
+}
+
+/// Full 2-bit read: MSB race then reference-selected LSB race. Returns
+/// (msb, lsb).
+pub fn sense_level(dev: &ReramDevice, env: &SenseEnv, rng: &mut Pcg) -> (bool, bool) {
+    let msb = sense_msb(dev, env, rng);
+    let lsb = sense_lsb(dev, msb, env, rng);
+    (msb, lsb)
+}
+
+/// Analytic per-read error probability for a race with margin `delta_us`
+/// (µS) under `noise_sigma_us`: P(N(mismatch, sigma) crosses the margin).
+/// Used by tests and the statistical fast path to cross-check the MC.
+pub fn race_error_probability(delta_us: f64, mismatch_us: f64, noise_sigma_us: f64) -> f64 {
+    // Error iff noise pushes the comparison across the margin:
+    // margin + N(mismatch, sigma) < 0, N ~ normal.
+    let z = (delta_us + mismatch_us) / noise_sigma_us;
+    0.5 * erfc_approx(z / std::f64::consts::SQRT_2)
+}
+
+/// Abramowitz-Stegun 7.1.26 complementary error function (|eps| < 1.5e-7).
+pub fn erfc_approx(x: f64) -> f64 {
+    let sign_neg = x < 0.0;
+    let ax = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * ax);
+    let poly = t
+        * (0.254829592
+            + t * (-0.284496736 + t * (1.421413741 + t * (-1.453152027 + t * 1.061405429))));
+    let erf = 1.0 - poly * (-ax * ax).exp();
+    let erfc = 1.0 - erf;
+    if sign_neg {
+        2.0 - erfc
+    } else {
+        erfc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dirc::device::{MlcLevel, ReramDevice};
+
+    fn quiet_env() -> SenseEnv {
+        SenseEnv {
+            r_par_ohm: 200.0,
+            noise_sigma_us: 1e-9,
+            mismatch_us: 0.0,
+            references: References::default(),
+        }
+    }
+
+    #[test]
+    fn noiseless_read_is_exact_for_all_levels() {
+        let env = quiet_env();
+        let mut rng = Pcg::new(1);
+        for i in 0..4 {
+            let level = MlcLevel::from_index(i);
+            let dev = ReramDevice::ideal(level);
+            let (msb, lsb) = sense_level(&dev, &env, &mut rng);
+            assert_eq!((msb, lsb), (level.msb(), level.lsb()), "level {level:?}");
+        }
+    }
+
+    #[test]
+    fn noiseless_read_survives_typical_deviation() {
+        // sigma = 0.1 lognormal keeps levels inside their reference bands
+        // nearly always; with no comparator noise reads stay exact.
+        let env = quiet_env();
+        let mut rng = Pcg::new(2);
+        let mut errors = 0;
+        let trials = 4000;
+        for t in 0..trials {
+            let level = MlcLevel::from_index(t % 4);
+            let dev = ReramDevice::program(level, 0.1, &mut rng);
+            let (msb, lsb) = sense_level(&dev, &env, &mut rng);
+            if (msb, lsb) != (level.msb(), level.lsb()) {
+                errors += 1;
+            }
+        }
+        assert!(errors <= 2, "errors {errors}/{trials}");
+    }
+
+    #[test]
+    fn high_noise_causes_errors() {
+        let env = SenseEnv { noise_sigma_us: 40.0, ..quiet_env() };
+        let mut rng = Pcg::new(3);
+        let mut errors = 0;
+        for t in 0..2000 {
+            let level = MlcLevel::from_index(t % 4);
+            let dev = ReramDevice::ideal(level);
+            let (msb, lsb) = sense_level(&dev, &env, &mut rng);
+            if (msb, lsb) != (level.msb(), level.lsb()) {
+                errors += 1;
+            }
+        }
+        assert!(errors > 100, "expected plentiful errors, got {errors}");
+    }
+
+    #[test]
+    fn msb_margin_beats_lsb_margin() {
+        // The L2/L3 LSB race has the smallest worst-case conductance
+        // margin — that's why the paper's MSB is 100% reliable while LSBs
+        // are not. Compare worst-case margins over both sides of each
+        // reference.
+        let refs = References::default();
+        let g = |r: f64| 1.0e6 / (r + 200.0);
+        let msb_margin =
+            (g(15.0e3) - g(refs.r_m)).abs().min((g(45.0e3) - g(refs.r_m)).abs());
+        let lsb_hi_margin =
+            (g(45.0e3) - g(refs.r_h)).abs().min((g(135.0e3) - g(refs.r_h)).abs());
+        assert!(
+            msb_margin > 2.5 * lsb_hi_margin,
+            "msb {msb_margin} vs lsb-hi {lsb_hi_margin}"
+        );
+    }
+
+    #[test]
+    fn analytic_probability_matches_mc() {
+        let delta = 2.0;
+        let sigma = 1.5;
+        let p = race_error_probability(delta, 0.0, sigma);
+        let mut rng = Pcg::new(11);
+        let n = 200_000;
+        let hits = (0..n)
+            .filter(|_| rng.normal_ms(0.0, sigma) < -delta)
+            .count();
+        let emp = hits as f64 / n as f64;
+        assert!((p - emp).abs() < 0.004, "analytic {p} vs mc {emp}");
+    }
+
+    #[test]
+    fn erfc_sane() {
+        assert!((erfc_approx(0.0) - 1.0).abs() < 1e-6);
+        assert!(erfc_approx(3.0) < 2.3e-5);
+        assert!((erfc_approx(-3.0) - 2.0).abs() < 2.3e-5);
+    }
+}

@@ -1,0 +1,269 @@
+//! Spatial variation model of the 8x8 MLC subarray and the Monte-Carlo
+//! extraction of the bit-wise spatial error map (paper Fig 5a).
+//!
+//! The paper's 1000-point post-layout Monte-Carlo found that (a) the MSB of
+//! the MLC read is 100% reliable thanks to its large signal margin, and
+//! (b) the LSB error rate has a spatial pattern: cells close to the two
+//! VSS power rails (left and right subarray edges) read reliably, cells
+//! far from the readout circuit (which sits on the right side, with the
+//! SRAM) read worst.
+//!
+//! We reproduce the mechanism behaviourally: each subarray position gets a
+//! series parasitic resistance that grows with distance from its VSS rail
+//! and a sensing-noise sigma that grows with distance from the readout
+//! circuit, plus a per-position MOS-mismatch offset frozen at "fabrication"
+//! time. [`VariationModel::extract_error_map`] then runs the same
+//! 1000-point MC the paper describes and yields the per-position LSB/MSB
+//! error rates that drive the error-aware remapping.
+
+use crate::dirc::device::{MlcLevel, References, ReramDevice, NUM_LEVELS};
+use crate::dirc::sensing::{sense_lsb, sense_msb, SenseEnv};
+use crate::util::rng::Pcg;
+
+/// Subarray geometry: 8x8 MLC positions.
+pub const SUB_ROWS: usize = 8;
+pub const SUB_COLS: usize = 8;
+pub const SUB_CELLS: usize = SUB_ROWS * SUB_COLS;
+
+/// Physical/electrical variation parameters. Defaults are calibrated so
+/// the extracted map matches the paper's regime: MSB error ~ 0, LSB error
+/// rates spanning roughly 1e-4 .. 1e-2 across the subarray at nominal
+/// conditions (0.8 V, 250 MHz, sigma = 0.1).
+#[derive(Debug, Clone)]
+pub struct VariationModel {
+    /// Lognormal ReRAM deviation (log-domain sigma). Paper: 0.1.
+    pub reram_sigma: f64,
+    /// Base series parasitic resistance (ohm).
+    pub r_par_base: f64,
+    /// Parasitic growth per unit distance-to-VSS-rail (ohm).
+    pub r_par_per_dist: f64,
+    /// Base sensing comparator noise, in microsiemens (conductance-domain).
+    pub sense_noise_us: f64,
+    /// Noise growth per unit distance-to-readout.
+    pub sense_noise_per_dist: f64,
+    /// MOS mismatch: per-position frozen offset sigma (microsiemens).
+    pub mos_mismatch_us: f64,
+    /// Global noise multiplier — the "process corner" knob used by the
+    /// error-optimisation experiments (1.0 = paper's nominal corner).
+    pub corner: f64,
+}
+
+impl Default for VariationModel {
+    fn default() -> Self {
+        VariationModel {
+            reram_sigma: 0.1,
+            r_par_base: 200.0,
+            r_par_per_dist: 350.0,
+            sense_noise_us: 1.35,
+            sense_noise_per_dist: 0.065,
+            mos_mismatch_us: 0.25,
+            corner: 1.0,
+        }
+    }
+}
+
+impl VariationModel {
+    /// Distance (in cell pitches) from a column to its nearest VSS rail.
+    /// Rails run along the left and right subarray edges.
+    pub fn dist_to_vss(col: usize) -> f64 {
+        (col.min(SUB_COLS - 1 - col)) as f64
+    }
+
+    /// Distance from a position to the readout circuit, which sits at the
+    /// right edge next to the SRAM (Fig 5a): dominated by column distance,
+    /// with a weaker row term (the sensing circuit is mid-height).
+    pub fn dist_to_readout(row: usize, col: usize) -> f64 {
+        let dc = (SUB_COLS - 1 - col) as f64;
+        let dr = (row as f64 - (SUB_ROWS as f64 - 1.0) / 2.0).abs() / 2.0;
+        dc + dr
+    }
+
+    /// Series parasitic resistance for a position (ohm).
+    pub fn r_parasitic(&self, _row: usize, col: usize) -> f64 {
+        self.r_par_base + self.r_par_per_dist * Self::dist_to_vss(col)
+    }
+
+    /// Sensing noise sigma (µS) for a position, before MOS mismatch.
+    pub fn noise_sigma_us(&self, row: usize, col: usize) -> f64 {
+        self.corner
+            * (self.sense_noise_us
+                + self.sense_noise_per_dist * Self::dist_to_readout(row, col))
+    }
+
+    /// Freeze per-position MOS mismatch offsets for one subarray instance.
+    /// These model threshold-voltage mismatch of the latch transistors: a
+    /// fixed signed conductance bias per position.
+    pub fn freeze_mismatch(&self, rng: &mut Pcg) -> [f64; SUB_CELLS] {
+        let mut out = [0.0; SUB_CELLS];
+        for slot in out.iter_mut() {
+            *slot = rng.normal_ms(0.0, self.mos_mismatch_us * self.corner);
+        }
+        out
+    }
+
+    /// Sensing environment for a position given frozen mismatch.
+    pub fn env(&self, row: usize, col: usize, mismatch: &[f64; SUB_CELLS]) -> SenseEnv {
+        SenseEnv {
+            r_par_ohm: self.r_parasitic(row, col),
+            noise_sigma_us: self.noise_sigma_us(row, col),
+            mismatch_us: mismatch[row * SUB_COLS + col],
+            references: References::default(),
+        }
+    }
+
+    /// The paper's 1000-point Monte-Carlo (Fig 5a): per position, program
+    /// each of the four levels with fresh lognormal deviation + fresh
+    /// transient noise, sense MSB and LSB, and tally error rates.
+    pub fn extract_error_map(&self, points: usize, seed: u64) -> ErrorMap {
+        let mut lsb = [[0.0f64; SUB_COLS]; SUB_ROWS];
+        let mut msb = [[0.0f64; SUB_COLS]; SUB_ROWS];
+        let mut rng = Pcg::new(seed);
+        // Mismatch is re-frozen per MC point (each point is a different
+        // fabricated instance), matching post-layout MC methodology.
+        for row in 0..SUB_ROWS {
+            for col in 0..SUB_COLS {
+                let mut lsb_err = 0usize;
+                let mut msb_err = 0usize;
+                let mut trials = 0usize;
+                for _ in 0..points {
+                    let mismatch = self.freeze_mismatch(&mut rng);
+                    let env = self.env(row, col, &mismatch);
+                    for li in 0..NUM_LEVELS {
+                        let level = MlcLevel::from_index(li);
+                        let dev = ReramDevice::program(level, self.reram_sigma, &mut rng);
+                        let got_msb = sense_msb(&dev, &env, &mut rng);
+                        if got_msb != level.msb() {
+                            msb_err += 1;
+                            // LSB sensing uses the (wrong) MSB result to
+                            // select its reference, compounding the error.
+                        }
+                        let got_lsb = sense_lsb(&dev, got_msb, &env, &mut rng);
+                        if got_lsb != level.lsb() {
+                            lsb_err += 1;
+                        }
+                        trials += 1;
+                    }
+                }
+                lsb[row][col] = lsb_err as f64 / trials as f64;
+                msb[row][col] = msb_err as f64 / trials as f64;
+            }
+        }
+        ErrorMap { lsb, msb, points }
+    }
+}
+
+/// The extracted bit-wise spatial error map (Fig 5a).
+#[derive(Debug, Clone)]
+pub struct ErrorMap {
+    pub lsb: [[f64; SUB_COLS]; SUB_ROWS],
+    pub msb: [[f64; SUB_COLS]; SUB_ROWS],
+    pub points: usize,
+}
+
+impl ErrorMap {
+    /// LSB error rate at a position.
+    pub fn lsb_at(&self, row: usize, col: usize) -> f64 {
+        self.lsb[row][col]
+    }
+
+    /// Mean LSB error rate over the subarray.
+    pub fn lsb_mean(&self) -> f64 {
+        self.lsb.iter().flatten().sum::<f64>() / SUB_CELLS as f64
+    }
+
+    /// Max MSB error rate (paper: exactly 0 at the nominal corner).
+    pub fn msb_max(&self) -> f64 {
+        self.msb.iter().flatten().cloned().fold(0.0, f64::max)
+    }
+
+    /// Positions sorted by ascending LSB error rate (ties broken by
+    /// row-major index for determinism). This ordering drives the
+    /// error-aware remap: best positions get the most significant of the
+    /// LSB-mapped bits.
+    pub fn positions_by_reliability(&self) -> Vec<(usize, usize)> {
+        let mut pos: Vec<(usize, usize)> = (0..SUB_ROWS)
+            .flat_map(|r| (0..SUB_COLS).map(move |c| (r, c)))
+            .collect();
+        pos.sort_by(|&(r1, c1), &(r2, c2)| {
+            self.lsb[r1][c1]
+                .partial_cmp(&self.lsb[r2][c2])
+                .unwrap()
+                .then((r1 * SUB_COLS + c1).cmp(&(r2 * SUB_COLS + c2)))
+        });
+        pos
+    }
+
+    /// Render the LSB map as the paper renders Fig 5a (per-mille units).
+    pub fn render_lsb(&self) -> String {
+        let mut s = String::from("LSB error rate (x1e-3), readout/SRAM at right edge:\n");
+        for row in 0..SUB_ROWS {
+            for col in 0..SUB_COLS {
+                s.push_str(&format!("{:6.2} ", self.lsb[row][col] * 1e3));
+            }
+            s.push('\n');
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_map() -> ErrorMap {
+        VariationModel::default().extract_error_map(120, 42)
+    }
+
+    #[test]
+    fn msb_reliable_lsb_not() {
+        let map = quick_map();
+        assert!(map.msb_max() < 2e-3, "MSB err {}", map.msb_max());
+        assert!(map.lsb_mean() > 1e-4, "LSB mean {}", map.lsb_mean());
+        assert!(map.lsb_mean() < 5e-2, "LSB mean {}", map.lsb_mean());
+    }
+
+    #[test]
+    fn spatial_gradient_matches_paper() {
+        // Cells near the VSS rails (edge columns) and near the readout
+        // (right side) beat the far-left / center-column cells.
+        let map = quick_map();
+        let right_edge: f64 = (0..SUB_ROWS).map(|r| map.lsb[r][7]).sum();
+        let left_inner: f64 = (0..SUB_ROWS).map(|r| map.lsb[r][2]).sum();
+        assert!(
+            right_edge < left_inner,
+            "right {right_edge} vs inner-left {left_inner}"
+        );
+    }
+
+    #[test]
+    fn reliability_order_sorted() {
+        let map = quick_map();
+        let pos = map.positions_by_reliability();
+        assert_eq!(pos.len(), SUB_CELLS);
+        for w in pos.windows(2) {
+            assert!(map.lsb_at(w[0].0, w[0].1) <= map.lsb_at(w[1].0, w[1].1));
+        }
+    }
+
+    #[test]
+    fn map_extraction_deterministic() {
+        let m1 = VariationModel::default().extract_error_map(50, 9);
+        let m2 = VariationModel::default().extract_error_map(50, 9);
+        assert_eq!(m1.lsb, m2.lsb);
+    }
+
+    #[test]
+    fn worse_corner_worse_errors() {
+        let nominal = VariationModel::default().extract_error_map(100, 3);
+        let hot = VariationModel { corner: 2.5, ..VariationModel::default() }
+            .extract_error_map(100, 3);
+        assert!(hot.lsb_mean() > nominal.lsb_mean() * 1.5);
+    }
+
+    #[test]
+    fn render_contains_grid() {
+        let map = quick_map();
+        let s = map.render_lsb();
+        assert_eq!(s.lines().count(), SUB_ROWS + 1);
+    }
+}

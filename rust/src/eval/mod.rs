@@ -1,0 +1,6 @@
+//! Retrieval evaluation harness: Precision@k over generated datasets
+//! (Table II, Table III's P@3 column, Fig 6).
+
+pub mod precision;
+
+pub use precision::{evaluate, precision_at_k, PrecisionReport};

@@ -1,0 +1,110 @@
+//! Precision@k (the paper's retrieval metric, Sec IV.A).
+//!
+//! `P@k = |top-k ∩ relevant| / k`, averaged over queries — "the
+//! proportion of relevant documents in the top-k results".
+
+use crate::retrieval::topk::ScoredDoc;
+
+/// P@k for one ranked result list against its qrels.
+pub fn precision_at_k(ranked: &[ScoredDoc], rels: &[u32], k: usize) -> f64 {
+    assert!(k > 0);
+    let hits = ranked
+        .iter()
+        .take(k)
+        .filter(|d| rels.binary_search(&(d.doc_id as u32)).is_ok())
+        .count();
+    hits as f64 / k as f64
+}
+
+/// Averaged P@{1,3,5} over a query set.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PrecisionReport {
+    pub p_at_1: f64,
+    pub p_at_3: f64,
+    pub p_at_5: f64,
+    pub n_queries: usize,
+}
+
+impl PrecisionReport {
+    pub fn get(&self, k: usize) -> f64 {
+        match k {
+            1 => self.p_at_1,
+            3 => self.p_at_3,
+            5 => self.p_at_5,
+            _ => panic!("report holds P@1/3/5 only"),
+        }
+    }
+}
+
+/// Run `retrieve(query_index) -> ranked docs` over all queries and
+/// average. `retrieve` must return at least 5 results (or all docs).
+pub fn evaluate(
+    n_queries: usize,
+    qrels: &[Vec<u32>],
+    mut retrieve: impl FnMut(usize) -> Vec<ScoredDoc>,
+) -> PrecisionReport {
+    assert_eq!(qrels.len(), n_queries);
+    assert!(n_queries > 0);
+    let (mut p1, mut p3, mut p5) = (0.0, 0.0, 0.0);
+    for q in 0..n_queries {
+        let ranked = retrieve(q);
+        p1 += precision_at_k(&ranked, &qrels[q], 1);
+        p3 += precision_at_k(&ranked, &qrels[q], 3);
+        p5 += precision_at_k(&ranked, &qrels[q], 5);
+    }
+    let n = n_queries as f64;
+    PrecisionReport { p_at_1: p1 / n, p_at_3: p3 / n, p_at_5: p5 / n, n_queries }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc(id: u64, score: f64) -> ScoredDoc {
+        ScoredDoc { doc_id: id, score }
+    }
+
+    #[test]
+    fn exact_hits() {
+        let ranked = vec![doc(5, 3.0), doc(2, 2.0), doc(9, 1.0)];
+        let rels = vec![2, 5];
+        assert_eq!(precision_at_k(&ranked, &rels, 1), 1.0);
+        assert_eq!(precision_at_k(&ranked, &rels, 3), 2.0 / 3.0);
+    }
+
+    #[test]
+    fn no_hits() {
+        let ranked = vec![doc(1, 1.0)];
+        assert_eq!(precision_at_k(&ranked, &[7, 8], 1), 0.0);
+    }
+
+    #[test]
+    fn short_result_list() {
+        // Fewer than k results: missing slots count as misses.
+        let ranked = vec![doc(7, 1.0)];
+        assert_eq!(precision_at_k(&ranked, &[7], 5), 0.2);
+    }
+
+    #[test]
+    fn evaluate_averages() {
+        let qrels = vec![vec![0], vec![1]];
+        let rep = evaluate(2, &qrels, |q| {
+            if q == 0 {
+                vec![doc(0, 1.0), doc(9, 0.5), doc(8, 0.4), doc(7, 0.3), doc(6, 0.2)]
+            } else {
+                vec![doc(9, 1.0), doc(1, 0.5), doc(8, 0.4), doc(7, 0.3), doc(6, 0.2)]
+            }
+        });
+        assert_eq!(rep.p_at_1, 0.5);
+        assert!((rep.p_at_3 - (1.0 / 3.0 + 1.0 / 3.0) / 2.0).abs() < 1e-12);
+        assert_eq!(rep.n_queries, 2);
+        assert_eq!(rep.get(1), rep.p_at_1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn get_rejects_other_k() {
+        let rep = PrecisionReport { p_at_1: 0.0, p_at_3: 0.0, p_at_5: 0.0, n_queries: 1 };
+        rep.get(10);
+    }
+}

@@ -1,0 +1,78 @@
+//! # DIRC-RAG — edge RAG acceleration with digital in-ReRAM computation
+//!
+//! Full-system reproduction of *DIRC-RAG: Accelerating Edge RAG with Robust
+//! High-Density and High-Loading-Bandwidth Digital In-ReRAM Computation*
+//! (CS.AR 2025).
+//!
+//! The crate is the Layer-3 coordinator of a three-layer stack:
+//!
+//! * **L1** — the DIRC column digital MAC as a Pallas kernel
+//!   (`python/compile/kernels/bitserial.py`), lowered at build time.
+//! * **L2** — the JAX retrieval graphs (`python/compile/model.py`), lowered
+//!   once by `python/compile/aot.py` to HLO text under `artifacts/`.
+//! * **L3** — this crate: the DIRC hardware behavioural + cycle/energy
+//!   simulator, error-aware optimisation, quantisation, datasets and BEIR
+//!   style evaluation, baselines, the PJRT runtime that executes the AOT
+//!   artifacts, and the serving coordinator. Python never runs at serve
+//!   time.
+//!
+//! Module map (see DESIGN.md for the full system inventory):
+//!
+//! * [`util`] — dependency-free substrates: PRNG, CLI, JSON, config,
+//!   thread pool, property-testing mini-framework.
+//! * [`dirc`] — the paper's hardware: MLC ReRAM device model, differential
+//!   sensing, variation Monte-Carlo, DIRC cell/column/macro/core/chip,
+//!   error detection and error-aware bit remapping.
+//! * [`sim`] — cycle-accurate query-stationary dataflow and energy/area
+//!   models (Table I derivations).
+//! * [`retrieval`] — quantisation, scoring references, top-k machinery.
+//! * [`runtime`] — PJRT client wrapper: artifact registry, executable
+//!   cache, typed execution.
+//! * [`coordinator`] — the serving system: router, batcher, worker pool,
+//!   metrics.
+//! * [`baseline`] — GPU cost model (Table III), WS/IS CIM dataflow models
+//!   (Sec III.B ablation), CIM technology comparison (Fig 2).
+//! * [`data`] — synthetic BEIR-like corpora and the embedding front-end.
+//! * [`eval`] — Precision@k evaluation harness (Table II, Fig 6).
+//! * [`bench`] — the statistics harness used by `cargo bench`
+//!   (criterion replacement; see DESIGN.md environment substitutions).
+
+pub mod baseline;
+pub mod bench;
+pub mod coordinator;
+pub mod data;
+pub mod dirc;
+pub mod eval;
+pub mod retrieval;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Paper constants that recur across modules (Table I).
+pub mod constants {
+    /// Chip clock frequency (Hz).
+    pub const FREQ_HZ: f64 = 250.0e6;
+    /// Supply voltage (V).
+    pub const VDD: f64 = 0.8;
+    /// DIRC macro geometry: cells per column == columns per macro.
+    pub const MACRO_DIM: usize = 128;
+    /// ReRAM bits behind each SRAM bit (8x8 MLC subarray, 2 bits/cell).
+    pub const BITS_PER_CELL: usize = 128;
+    /// Number of DIRC-RAG cores (macros) on the chip.
+    pub const NUM_CORES: usize = 16;
+    /// NVM storage per macro (bits): 128 x 128 x 128 = 2 Mib.
+    pub const MACRO_NVM_BITS: usize = MACRO_DIM * MACRO_DIM * BITS_PER_CELL;
+    /// Total chip NVM (bytes): 16 macros x 2 Mib = 4 MiB.
+    pub const TOTAL_NVM_BYTES: usize = NUM_CORES * MACRO_NVM_BITS / 8;
+    /// Macro area (mm^2), paper Table I.
+    pub const MACRO_AREA_MM2: f64 = 0.34;
+    /// Full chip area (mm^2), paper Table I.
+    pub const CHIP_AREA_MM2: f64 = 6.18;
+    /// Paper's macro energy efficiency (TOPS/W).
+    pub const MACRO_TOPS_PER_W: f64 = 1176.0;
+    /// Paper's macro area efficiency (TOPS/mm^2).
+    pub const MACRO_TOPS_PER_MM2: f64 = 24.9;
+}

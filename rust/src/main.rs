@@ -1,0 +1,245 @@
+//! `dirc-rag` — the DIRC-RAG leader binary.
+//!
+//! Subcommands:
+//!
+//! * `spec`     — print the derived Table I spec sheet.
+//! * `map`      — extract and print the Fig 5a LSB spatial error map.
+//! * `eval`     — run retrieval-precision evaluation on a dataset
+//!   (Table II / Fig 6 conditions).
+//! * `serve`    — run the serving demo: synthetic text corpus, PJRT
+//!   embedding + retrieval, throughput/latency report.
+//! * `datasets` — list the registered datasets.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use dirc_rag::coordinator::{Coordinator, Query, ServingEngine};
+use dirc_rag::data::text::{TextCorpus, TextParams};
+use dirc_rag::data::{dataset_by_name, paper_datasets, SynthDataset};
+use dirc_rag::dirc::chip::ChipConfig;
+use dirc_rag::dirc::variation::VariationModel;
+use dirc_rag::dirc::{DircChip, RemapStrategy};
+use dirc_rag::eval::evaluate;
+use dirc_rag::retrieval::quant::{quantize, QuantScheme};
+use dirc_rag::retrieval::score::Metric;
+use dirc_rag::runtime::PjrtRuntime;
+use dirc_rag::sim::ChipSpec;
+use dirc_rag::util::cli::Command;
+use dirc_rag::util::rng::Pcg;
+
+fn cli() -> Command {
+    Command::new("dirc-rag", "DIRC-RAG edge retrieval accelerator (reproduction)")
+        .sub(Command::new("spec", "print the derived Table I spec sheet"))
+        .sub(
+            Command::new("map", "extract the Fig 5a LSB spatial error map")
+                .opt("points", "1000", "Monte-Carlo points per position")
+                .opt("corner", "1.0", "process-corner noise multiplier")
+                .opt("seed", "42", "RNG seed"),
+        )
+        .sub(
+            Command::new("eval", "retrieval precision on a dataset")
+                .opt("dataset", "scifact", "scifact|nfcorpus|trec-covid|arguana|scidocs")
+                .opt("quant", "int8", "fp32|int8|int4")
+                .opt("queries", "0", "query cap (0 = all)")
+                .opt("corner", "1.0", "process corner for sensing errors")
+                .opt("remap", "error-aware", "interleaved|random|error-aware")
+                .flag("no-detect", "disable the ΣD error-detection circuit")
+                .flag("errors", "inject sensing errors (hardware path)"),
+        )
+        .sub(
+            Command::new("serve", "end-to-end serving demo")
+                .opt("docs", "2048", "corpus size")
+                .opt("queries", "256", "queries to submit")
+                .opt("workers", "0", "retrieval worker threads (0 = config)")
+                .opt("config", "", "TOML config overlay (configs/*.toml)")
+                .opt("k", "5", "top-k"),
+        )
+        .sub(Command::new("datasets", "list registered datasets"))
+}
+
+fn main() -> Result<()> {
+    let parsed = cli().parse_env()?;
+    if let Some(help) = &parsed.help {
+        println!("{help}");
+        return Ok(());
+    }
+    let sub = parsed
+        .subcommand()
+        .ok_or_else(|| anyhow!("missing subcommand\n\n{}", cli().help_text()))?;
+    if let Some(help) = &sub.help {
+        println!("{help}");
+        return Ok(());
+    }
+    match sub.command {
+        "spec" => cmd_spec(),
+        "map" => cmd_map(sub.get_usize("points")?, sub.get_f64("corner")?, sub.get_u64("seed")?),
+        "eval" => cmd_eval(sub),
+        "serve" => cmd_serve(sub),
+        "datasets" => cmd_datasets(),
+        other => Err(anyhow!("unhandled subcommand {other}")),
+    }
+}
+
+fn cmd_spec() -> Result<()> {
+    print!("{}", ChipSpec::derive().render());
+    Ok(())
+}
+
+fn cmd_map(points: usize, corner: f64, seed: u64) -> Result<()> {
+    let model = VariationModel { corner, ..VariationModel::default() };
+    let map = model.extract_error_map(points, seed);
+    print!("{}", map.render_lsb());
+    println!(
+        "mean LSB error {:.3e}, max MSB error {:.3e} ({} MC points/position)",
+        map.lsb_mean(),
+        map.msb_max(),
+        points
+    );
+    Ok(())
+}
+
+fn cmd_eval(sub: &dirc_rag::util::cli::Parsed) -> Result<()> {
+    let name = sub.get("dataset")?;
+    let spec = dataset_by_name(name).ok_or_else(|| anyhow!("unknown dataset {name:?}"))?;
+    let scheme = match sub.get("quant")? {
+        "fp32" => QuantScheme::Fp32,
+        "int8" => QuantScheme::Int8,
+        "int4" => QuantScheme::Int4,
+        other => return Err(anyhow!("unknown quant {other:?}")),
+    };
+    let remap = match sub.get("remap")? {
+        "interleaved" => RemapStrategy::Interleaved,
+        "random" => RemapStrategy::Random { seed: 1 },
+        "error-aware" => RemapStrategy::ErrorAware,
+        other => return Err(anyhow!("unknown remap {other:?}")),
+    };
+    let corner = sub.get_f64("corner")?;
+    let with_errors = sub.has_flag("errors");
+    let detect = !sub.has_flag("no-detect");
+    let cap = sub.get_usize("queries")?;
+
+    let ds = SynthDataset::generate(spec.n_docs, spec.n_queries, spec.dim, &spec.params);
+    let n_queries = if cap == 0 { ds.n_queries() } else { cap.min(ds.n_queries()) };
+
+    let report = if scheme == QuantScheme::Fp32 {
+        // Software FP32 baseline (no hardware in the loop).
+        evaluate(n_queries, &ds.qrels[..n_queries], |qi| {
+            let scores = dirc_rag::retrieval::score::fp_scores(
+                &ds.docs, ds.n_docs, ds.dim, ds.query(qi), Metric::Cosine,
+            );
+            dirc_rag::retrieval::topk::topk_from_scores(&scores, 0, 5)
+        })
+    } else {
+        let db = quantize(&ds.docs, ds.n_docs, ds.dim, scheme);
+        let cfg = ChipConfig {
+            bits: scheme.bits(),
+            detect,
+            remap,
+            variation: VariationModel { corner, ..VariationModel::default() },
+            map_points: 300,
+            ..ChipConfig::paper_default(spec.dim, Metric::Cosine)
+        };
+        let chip = DircChip::build(cfg, &db);
+        let mut rng = Pcg::new(7);
+        evaluate(n_queries, &ds.qrels[..n_queries], |qi| {
+            let qq = quantize(ds.query(qi), 1, ds.dim, scheme);
+            if with_errors {
+                chip.query(&qq.values, 5, &mut rng).0
+            } else {
+                chip.clean_query(&qq.values, 5)
+            }
+        })
+    };
+
+    println!(
+        "{name} [{}] {} queries: P@1 {:.4}  P@3 {:.4}  P@5 {:.4}",
+        scheme.name(),
+        report.n_queries,
+        report.p_at_1,
+        report.p_at_3,
+        report.p_at_5
+    );
+    Ok(())
+}
+
+fn cmd_serve(sub: &dirc_rag::util::cli::Parsed) -> Result<()> {
+    use dirc_rag::coordinator::configfile;
+
+    let n_docs = sub.get_usize("docs")?;
+    let n_queries = sub.get_usize("queries")?;
+    let k = sub.get_usize("k")?;
+
+    // Layered config: configs/default.toml <- --config <- flags.
+    let overlay = Some(sub.get("config")?).filter(|s| !s.is_empty());
+    let file_cfg = configfile::load_layered(overlay)?;
+    let mut coord_cfg = configfile::coordinator_config(&file_cfg)?;
+    let workers = sub.get_usize("workers")?;
+    if workers > 0 {
+        coord_cfg.workers = workers;
+    }
+
+    let runtime = Arc::new(PjrtRuntime::from_default_artifacts()?);
+    let corpus = TextCorpus::generate(&TextParams {
+        n_docs,
+        n_queries,
+        ..TextParams::default()
+    });
+
+    // Offline: embed the corpus through the AOT MLP in batches of 32.
+    eprintln!("embedding {n_docs} documents through the AOT MLP...");
+    let dim = runtime.artifact("embed_mlp_b32")?.outputs[0].shape[1];
+    let mut docs_fp = Vec::with_capacity(n_docs * dim);
+    for chunk in corpus.docs.chunks(32) {
+        let feats = dirc_rag::data::text::bow_batch(chunk);
+        let mut padded = feats;
+        padded.resize(32 * dirc_rag::data::text::HASH_BUCKETS, 0.0);
+        let emb = runtime.embed(&padded, 32)?;
+        docs_fp.extend_from_slice(&emb[..chunk.len() * dim]);
+    }
+    let db = quantize(&docs_fp, n_docs, dim, QuantScheme::Int8);
+
+    let mut chip_cfg = configfile::chip_config(&file_cfg)?;
+    chip_cfg.dim = dim; // the embedder's output dimension wins
+    chip_cfg.map_points = chip_cfg.map_points.min(300); // demo-sized MC
+    let engine = Arc::new(ServingEngine::new(chip_cfg, &db, Arc::clone(&runtime))?);
+    let coord = Coordinator::start(engine, Arc::clone(&runtime), coord_cfg);
+
+    eprintln!("serving {n_queries} token queries...");
+    let mut rxs = Vec::new();
+    for q in 0..n_queries {
+        let (_, rx) = coord.submit(Query::Tokens(corpus.queries[q % corpus.queries.len()].clone()), k)?;
+        rxs.push((q, rx));
+    }
+    let mut hits = 0usize;
+    for (q, rx) in rxs {
+        let resp = rx.recv().map_err(|_| anyhow!("response channel closed"))?;
+        let pivot = corpus.query_pivot[q % corpus.query_pivot.len()] as u64;
+        if resp.topk.iter().any(|d| d.doc_id == pivot) {
+            hits += 1;
+        }
+    }
+    let snap = coord.shutdown();
+    println!("{}", snap.render());
+    println!(
+        "pivot recall@{k}: {:.3} over {n_queries} queries",
+        hits as f64 / n_queries as f64
+    );
+    Ok(())
+}
+
+fn cmd_datasets() -> Result<()> {
+    println!("{:<12} {:>8} {:>8} {:>10} {:>10} {:>10}", "dataset", "docs", "queries", "FP32 MB", "INT8 MB", "INT4 MB");
+    for d in paper_datasets() {
+        println!(
+            "{:<12} {:>8} {:>8} {:>10.2} {:>10.2} {:>10.2}",
+            d.name,
+            d.n_docs,
+            d.n_queries,
+            d.embedding_mb(32),
+            d.embedding_mb(8),
+            d.embedding_mb(4)
+        );
+    }
+    Ok(())
+}

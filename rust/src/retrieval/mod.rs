@@ -1,0 +1,9 @@
+//! Retrieval primitives: quantisation, scoring references, top-k.
+
+pub mod quant;
+pub mod score;
+pub mod topk;
+
+pub use quant::{QuantScheme, Quantized};
+pub use score::Metric;
+pub use topk::{ScoredDoc, TopK};

@@ -1,0 +1,224 @@
+//! INT8/INT4 embedding quantisation (the paper's HW/SW co-design knob,
+//! Sec IV.C / Table II).
+//!
+//! Symmetric per-tensor quantisation in the style of Jacob et al. (the
+//! paper's ref [27]): a single scale maps FP32 embeddings onto the signed
+//! integer grid; queries and documents are quantised with their own
+//! scales. Inner products in the integer domain are exact; cosine uses
+//! stored integer-domain norms, so the scales cancel and need not be
+//! carried into the hardware at all — matching the paper's design where
+//! the macro sees only INT4/8 words.
+
+use crate::util::rng::Pcg;
+
+/// Quantisation scheme.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum QuantScheme {
+    Int8,
+    Int4,
+    /// FP32 passthrough — the software baseline column of Table II.
+    Fp32,
+}
+
+impl QuantScheme {
+    pub fn bits(self) -> usize {
+        match self {
+            QuantScheme::Int8 => 8,
+            QuantScheme::Int4 => 4,
+            QuantScheme::Fp32 => 32,
+        }
+    }
+
+    pub fn qmax(self) -> i32 {
+        match self {
+            QuantScheme::Int8 => 127,
+            QuantScheme::Int4 => 7,
+            QuantScheme::Fp32 => panic!("FP32 has no integer grid"),
+        }
+    }
+
+    pub fn qmin(self) -> i32 {
+        match self {
+            QuantScheme::Int8 => -128,
+            QuantScheme::Int4 => -8,
+            QuantScheme::Fp32 => panic!("FP32 has no integer grid"),
+        }
+    }
+
+    /// Bytes per element as stored in the DIRC macro.
+    pub fn stored_bytes_per_dim(self) -> f64 {
+        self.bits() as f64 / 8.0
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            QuantScheme::Int8 => "INT8",
+            QuantScheme::Int4 => "INT4",
+            QuantScheme::Fp32 => "FP32",
+        }
+    }
+}
+
+/// A quantised embedding matrix: values + the shared scale + per-row
+/// integer-domain L2 norms (what the core's ReRAM buffer stores).
+#[derive(Debug, Clone)]
+pub struct Quantized {
+    pub scheme: QuantScheme,
+    pub n: usize,
+    pub dim: usize,
+    /// Row-major [n][dim] integer values (within the scheme's range).
+    pub values: Vec<i8>,
+    /// The FP scale: fp_value ~ scale * int_value.
+    pub scale: f32,
+    /// Integer-domain L2 norms per row.
+    pub norms: Vec<f32>,
+}
+
+/// Quantise a row-major FP32 matrix `[n][dim]` symmetrically.
+pub fn quantize(x: &[f32], n: usize, dim: usize, scheme: QuantScheme) -> Quantized {
+    assert_eq!(x.len(), n * dim);
+    assert!(scheme != QuantScheme::Fp32, "quantize() needs an integer scheme");
+    let absmax = x.iter().fold(0f32, |m, &v| m.max(v.abs()));
+    let scale = if absmax > 0.0 { absmax / scheme.qmax() as f32 } else { 1.0 };
+    let inv = 1.0 / scale;
+    let (qmin, qmax) = (scheme.qmin() as f32, scheme.qmax() as f32);
+    let values: Vec<i8> = x
+        .iter()
+        .map(|&v| (v * inv).round().clamp(qmin, qmax) as i8)
+        .collect();
+    let norms = (0..n)
+        .map(|i| {
+            let row = &values[i * dim..(i + 1) * dim];
+            (row.iter().map(|&v| (v as i32 * v as i32) as f64).sum::<f64>() as f32).sqrt()
+        })
+        .collect();
+    Quantized { scheme, n, dim, values, scale, norms }
+}
+
+impl Quantized {
+    pub fn row(&self, i: usize) -> &[i8] {
+        &self.values[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// De-quantise back to FP32 (for error analysis).
+    pub fn dequantize(&self) -> Vec<f32> {
+        self.values.iter().map(|&v| v as f32 * self.scale).collect()
+    }
+
+    /// Stored size in bytes as laid out in the macro.
+    pub fn stored_bytes(&self) -> usize {
+        (self.n * self.dim * self.scheme.bits()).div_ceil(8)
+    }
+}
+
+/// Quantisation SNR (dB) between an FP32 matrix and its quantised form —
+/// used by tests and the Table II analysis.
+pub fn quant_snr_db(x: &[f32], q: &Quantized) -> f64 {
+    let deq = q.dequantize();
+    let sig: f64 = x.iter().map(|&v| (v as f64).powi(2)).sum();
+    let err: f64 = x
+        .iter()
+        .zip(deq.iter())
+        .map(|(&a, &b)| ((a - b) as f64).powi(2))
+        .sum();
+    if err == 0.0 {
+        f64::INFINITY
+    } else {
+        10.0 * (sig / err).log10()
+    }
+}
+
+/// Generate a unit-norm Gaussian matrix (test helper shared by modules).
+pub fn random_unit_rows(n: usize, dim: usize, rng: &mut Pcg) -> Vec<f32> {
+    let mut x = vec![0f32; n * dim];
+    for i in 0..n {
+        let row = &mut x[i * dim..(i + 1) * dim];
+        let mut norm = 0f64;
+        for v in row.iter_mut() {
+            *v = rng.normal() as f32;
+            norm += (*v as f64).powi(2);
+        }
+        let inv = 1.0 / (norm.sqrt() as f32).max(1e-12);
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn values_in_range() {
+        let mut rng = Pcg::new(1);
+        let x = random_unit_rows(32, 64, &mut rng);
+        for scheme in [QuantScheme::Int8, QuantScheme::Int4] {
+            let q = quantize(&x, 32, 64, scheme);
+            assert!(q
+                .values
+                .iter()
+                .all(|&v| (v as i32) >= scheme.qmin() && (v as i32) <= scheme.qmax()));
+        }
+    }
+
+    #[test]
+    fn absmax_maps_to_qmax() {
+        let x = vec![0.0f32, -0.5, 1.0, 0.25];
+        let q = quantize(&x, 1, 4, QuantScheme::Int8);
+        assert_eq!(q.values[2], 127);
+        assert_eq!(q.values[1], -64);
+    }
+
+    #[test]
+    fn int8_snr_beats_int4() {
+        let mut rng = Pcg::new(2);
+        let x = random_unit_rows(64, 128, &mut rng);
+        let s8 = quant_snr_db(&x, &quantize(&x, 64, 128, QuantScheme::Int8));
+        let s4 = quant_snr_db(&x, &quantize(&x, 64, 128, QuantScheme::Int4));
+        assert!(s8 > s4 + 15.0, "INT8 {s8} dB vs INT4 {s4} dB");
+        assert!(s8 > 35.0);
+    }
+
+    #[test]
+    fn norms_match_rows() {
+        let mut rng = Pcg::new(3);
+        let x = random_unit_rows(8, 16, &mut rng);
+        let q = quantize(&x, 8, 16, QuantScheme::Int8);
+        for i in 0..8 {
+            let want: f64 = q.row(i).iter().map(|&v| (v as f64).powi(2)).sum::<f64>().sqrt();
+            assert!((q.norms[i] as f64 - want).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn stored_bytes_accounting() {
+        let mut rng = Pcg::new(4);
+        let x = random_unit_rows(10, 512, &mut rng);
+        assert_eq!(quantize(&x, 10, 512, QuantScheme::Int8).stored_bytes(), 5120);
+        assert_eq!(quantize(&x, 10, 512, QuantScheme::Int4).stored_bytes(), 2560);
+    }
+
+    #[test]
+    fn zero_matrix_safe() {
+        let x = vec![0f32; 16];
+        let q = quantize(&x, 2, 8, QuantScheme::Int8);
+        assert!(q.values.iter().all(|&v| v == 0));
+        assert_eq!(q.norms, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn cosine_preserved_through_quantisation() {
+        // Quantised cosine ~ FP cosine for INT8.
+        let mut rng = Pcg::new(5);
+        let x = random_unit_rows(2, 256, &mut rng);
+        let q = quantize(&x, 2, 256, QuantScheme::Int8);
+        let ip_fp: f64 = (0..256).map(|j| (x[j] * x[256 + j]) as f64).sum();
+        let ip_q: f64 = (0..256)
+            .map(|j| q.values[j] as f64 * q.values[256 + j] as f64)
+            .sum();
+        let cos_q = ip_q / (q.norms[0] as f64 * q.norms[1] as f64);
+        assert!((cos_q - ip_fp).abs() < 0.02, "fp {ip_fp} q {cos_q}");
+    }
+}

@@ -1,0 +1,179 @@
+//! Scoring: exact integer MIPS / cosine references (Sec II.A).
+//!
+//! These are the L3-side reference implementations — the same arithmetic
+//! the AOT-compiled L2 graph performs — used by the hardware simulator's
+//! clean path, the baselines, and as the oracle in integration tests
+//! against the PJRT runtime.
+
+/// Retrieval metric (Fig 1 / Sec II.A).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Metric {
+    /// Maximum Inner Product Search: raw integer dot products.
+    Mips,
+    /// Cosine similarity: dot / (|d| * |q|), with stored document norms.
+    Cosine,
+}
+
+impl Metric {
+    pub fn name(self) -> &'static str {
+        match self {
+            Metric::Mips => "mips",
+            Metric::Cosine => "cosine",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Metric> {
+        match s {
+            "mips" => Some(Metric::Mips),
+            "cosine" => Some(Metric::Cosine),
+            _ => None,
+        }
+    }
+}
+
+/// Exact integer inner product.
+#[inline]
+pub fn dot_i8(d: &[i8], q: &[i8]) -> i64 {
+    debug_assert_eq!(d.len(), q.len());
+    // Accumulate in i32 blocks for autovectorisation, widen to i64 at
+    // block boundaries (a 512-dim INT8 dot fits i32 comfortably: max
+    // 128*128*512 = 2^23).
+    let mut total: i64 = 0;
+    for (dc, qc) in d.chunks(4096).zip(q.chunks(4096)) {
+        let mut acc: i32 = 0;
+        for (&a, &b) in dc.iter().zip(qc.iter()) {
+            acc += a as i32 * b as i32;
+        }
+        total += acc as i64;
+    }
+    total
+}
+
+/// Integer MIPS scores of a query against a row-major matrix.
+pub fn mips_scores(docs: &[i8], n: usize, dim: usize, q: &[i8]) -> Vec<i64> {
+    assert_eq!(docs.len(), n * dim);
+    assert_eq!(q.len(), dim);
+    (0..n).map(|i| dot_i8(&docs[i * dim..(i + 1) * dim], q)).collect()
+}
+
+/// L2 norm of an integer vector.
+pub fn norm_i8(v: &[i8]) -> f64 {
+    (v.iter().map(|&x| (x as i64 * x as i64) as f64).sum::<f64>()).sqrt()
+}
+
+/// Convert integer inner products to the metric's score domain.
+pub fn finalize_scores(
+    ips: &[i64],
+    metric: Metric,
+    d_norms: Option<&[f32]>,
+    q_norm: f64,
+) -> Vec<f64> {
+    match metric {
+        Metric::Mips => ips.iter().map(|&v| v as f64).collect(),
+        Metric::Cosine => {
+            let norms = d_norms.expect("cosine needs stored document norms");
+            assert_eq!(norms.len(), ips.len());
+            ips.iter()
+                .zip(norms.iter())
+                .map(|(&ip, &dn)| {
+                    let denom = (dn as f64 * q_norm).max(1e-12);
+                    ip as f64 / denom
+                })
+                .collect()
+        }
+    }
+}
+
+/// FP32 reference scores (the Table II FP32 baseline).
+pub fn fp_scores(docs: &[f32], n: usize, dim: usize, q: &[f32], metric: Metric) -> Vec<f64> {
+    assert_eq!(docs.len(), n * dim);
+    assert_eq!(q.len(), dim);
+    let qn: f64 = q.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+    (0..n)
+        .map(|i| {
+            let row = &docs[i * dim..(i + 1) * dim];
+            let ip: f64 = row.iter().zip(q).map(|(&a, &b)| a as f64 * b as f64).sum();
+            match metric {
+                Metric::Mips => ip,
+                Metric::Cosine => {
+                    let dn: f64 = row.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+                    ip / (dn * qn).max(1e-12)
+                }
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn dot_matches_naive() {
+        let mut rng = Pcg::new(1);
+        for len in [0usize, 1, 7, 512, 5000] {
+            let a: Vec<i8> = (0..len).map(|_| rng.int_in(-128, 127) as i8).collect();
+            let b: Vec<i8> = (0..len).map(|_| rng.int_in(-128, 127) as i8).collect();
+            let want: i64 = a.iter().zip(&b).map(|(&x, &y)| x as i64 * y as i64).sum();
+            assert_eq!(dot_i8(&a, &b), want, "len {len}");
+        }
+    }
+
+    #[test]
+    fn dot_extremes_no_overflow() {
+        let a = vec![-128i8; 4096];
+        let b = vec![-128i8; 4096];
+        assert_eq!(dot_i8(&a, &b), 128 * 128 * 4096);
+    }
+
+    #[test]
+    fn cosine_scores_bounded() {
+        let mut rng = Pcg::new(2);
+        let (n, dim) = (50, 64);
+        let docs: Vec<i8> = (0..n * dim).map(|_| rng.int_in(-128, 127) as i8).collect();
+        let q: Vec<i8> = (0..dim).map(|_| rng.int_in(-128, 127) as i8).collect();
+        let ips = mips_scores(&docs, n, dim, &q);
+        let norms: Vec<f32> = (0..n)
+            .map(|i| norm_i8(&docs[i * dim..(i + 1) * dim]) as f32)
+            .collect();
+        let scores = finalize_scores(&ips, Metric::Cosine, Some(&norms), norm_i8(&q));
+        for &s in &scores {
+            assert!(s.abs() <= 1.0 + 1e-6, "cosine {s}");
+        }
+    }
+
+    #[test]
+    fn self_cosine_is_one() {
+        let v: Vec<i8> = vec![3, -4, 5, 100, -7, 0, 1, 2];
+        let ips = mips_scores(&v, 1, 8, &v);
+        let norms = [norm_i8(&v) as f32];
+        let s = finalize_scores(&ips, Metric::Cosine, Some(&norms), norm_i8(&v));
+        assert!((s[0] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn metric_parse_roundtrip() {
+        assert_eq!(Metric::parse("mips"), Some(Metric::Mips));
+        assert_eq!(Metric::parse("cosine"), Some(Metric::Cosine));
+        assert_eq!(Metric::parse("dot"), None);
+        assert_eq!(Metric::Cosine.name(), "cosine");
+    }
+
+    #[test]
+    fn fp_and_int_agree_on_easy_data() {
+        // Integer cosine over quantised data tracks FP cosine.
+        let mut rng = Pcg::new(3);
+        let (n, dim) = (20, 128);
+        let fp = crate::retrieval::quant::random_unit_rows(n, dim, &mut rng);
+        let qv = crate::retrieval::quant::random_unit_rows(1, dim, &mut rng);
+        let dq = crate::retrieval::quant::quantize(&fp, n, dim, crate::retrieval::QuantScheme::Int8);
+        let qq = crate::retrieval::quant::quantize(&qv, 1, dim, crate::retrieval::QuantScheme::Int8);
+        let ips = mips_scores(&dq.values, n, dim, qq.row(0));
+        let int_cos = finalize_scores(&ips, Metric::Cosine, Some(&dq.norms), norm_i8(qq.row(0)));
+        let fp_cos = fp_scores(&fp, n, dim, &qv, Metric::Cosine);
+        for i in 0..n {
+            assert!((int_cos[i] - fp_cos[i]).abs() < 0.03, "doc {i}");
+        }
+    }
+}

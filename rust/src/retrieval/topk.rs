@@ -1,0 +1,244 @@
+//! Top-k machinery: the per-core local top-k comparator and the global
+//! top-k merge (Fig 3a).
+//!
+//! [`TopK`] is a bounded min-heap over (score, doc) pairs with
+//! deterministic tie-breaking (lower doc id wins), streaming one candidate
+//! per push — the same behaviour as the hardware comparator that consumes
+//! one score per cycle. [`merge_local`] implements the Global Top-k
+//! Comparator over the SRAM-buffered per-core results.
+
+use std::cmp::Ordering;
+
+/// One scored document.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScoredDoc {
+    pub doc_id: u64,
+    pub score: f64,
+}
+
+impl ScoredDoc {
+    /// Descending score, ascending doc id on ties — total order (scores
+    /// are finite by construction).
+    fn cmp_rank(&self, other: &Self) -> Ordering {
+        other
+            .score
+            .partial_cmp(&self.score)
+            .expect("non-finite score")
+            .then(self.doc_id.cmp(&other.doc_id))
+    }
+}
+
+/// Bounded top-k selector (min-heap of size k).
+#[derive(Debug, Clone)]
+pub struct TopK {
+    k: usize,
+    /// Min-heap by rank order: heap[0] is the *worst* of the kept set.
+    heap: Vec<ScoredDoc>,
+}
+
+impl TopK {
+    pub fn new(k: usize) -> TopK {
+        assert!(k > 0, "k must be positive");
+        TopK { k, heap: Vec::with_capacity(k) }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Stream in one candidate.
+    pub fn push(&mut self, cand: ScoredDoc) {
+        debug_assert!(cand.score.is_finite(), "non-finite score");
+        if self.heap.len() < self.k {
+            self.heap.push(cand);
+            self.sift_up(self.heap.len() - 1);
+        } else if cand.cmp_rank(&self.heap[0]) == Ordering::Less {
+            // cand ranks strictly better than the current worst.
+            self.heap[0] = cand;
+            self.sift_down(0);
+        }
+    }
+
+    /// Worst kept candidate (the admission threshold once full).
+    pub fn threshold(&self) -> Option<ScoredDoc> {
+        self.heap.first().copied()
+    }
+
+    /// Drain into rank order (best first).
+    pub fn into_sorted(mut self) -> Vec<ScoredDoc> {
+        self.heap.sort_by(|a, b| a.cmp_rank(b));
+        self.heap
+    }
+
+    // heap[i] is worse than its children under rank order (min-heap on
+    // "goodness" == max-heap on badness).
+    fn worse(&self, a: usize, b: usize) -> bool {
+        self.heap[a].cmp_rank(&self.heap[b]) == Ordering::Greater
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if self.worse(i, parent) {
+                self.heap.swap(i, parent);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        loop {
+            let (l, r) = (2 * i + 1, 2 * i + 2);
+            let mut worst = i;
+            if l < self.heap.len() && self.worse(l, worst) {
+                worst = l;
+            }
+            if r < self.heap.len() && self.worse(r, worst) {
+                worst = r;
+            }
+            if worst == i {
+                break;
+            }
+            self.heap.swap(i, worst);
+            i = worst;
+        }
+    }
+}
+
+/// Select top-k from a full score slice (reference path; also used by the
+/// baselines). `doc_base` offsets local indices into global doc ids.
+pub fn topk_from_scores(scores: &[f64], doc_base: u64, k: usize) -> Vec<ScoredDoc> {
+    let mut t = TopK::new(k);
+    for (i, &s) in scores.iter().enumerate() {
+        t.push(ScoredDoc { doc_id: doc_base + i as u64, score: s });
+    }
+    t.into_sorted()
+}
+
+/// The Global Top-k Comparator: merge per-core local top-k lists.
+pub fn merge_local(locals: &[Vec<ScoredDoc>], k: usize) -> Vec<ScoredDoc> {
+    let mut t = TopK::new(k);
+    for local in locals {
+        for &cand in local {
+            t.push(cand);
+        }
+    }
+    t.into_sorted()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{cases, forall, gen_pair, gen_usize, gen_vec, gen_i64};
+    use crate::util::rng::Pcg;
+
+    fn brute_force(scores: &[f64], k: usize) -> Vec<ScoredDoc> {
+        let mut all: Vec<ScoredDoc> = scores
+            .iter()
+            .enumerate()
+            .map(|(i, &s)| ScoredDoc { doc_id: i as u64, score: s })
+            .collect();
+        all.sort_by(|a, b| a.cmp_rank(b));
+        all.truncate(k);
+        all
+    }
+
+    #[test]
+    fn matches_brute_force() {
+        let mut rng = Pcg::new(1);
+        for _ in 0..50 {
+            let n = 1 + rng.index(500);
+            let k = 1 + rng.index(20);
+            let scores: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let got = topk_from_scores(&scores, 0, k);
+            let want = brute_force(&scores, k.min(n));
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn deterministic_tie_break() {
+        let scores = vec![1.0, 2.0, 2.0, 2.0, 0.5];
+        let got = topk_from_scores(&scores, 0, 2);
+        assert_eq!(got[0].doc_id, 1);
+        assert_eq!(got[1].doc_id, 2);
+    }
+
+    #[test]
+    fn k_larger_than_n() {
+        let got = topk_from_scores(&[3.0, 1.0], 0, 10);
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].doc_id, 0);
+    }
+
+    #[test]
+    fn merge_equals_global_selection() {
+        let mut rng = Pcg::new(2);
+        for _ in 0..30 {
+            let cores = 1 + rng.index(16);
+            let per_core = 1 + rng.index(100);
+            let k = 1 + rng.index(10);
+            let mut all_scores = Vec::new();
+            let mut locals = Vec::new();
+            for c in 0..cores {
+                let scores: Vec<f64> = (0..per_core).map(|_| rng.normal()).collect();
+                let base = (c * per_core) as u64;
+                // Local top-k must keep at least k candidates for the
+                // merge to be lossless.
+                locals.push(topk_from_scores(&scores, base, k));
+                all_scores.extend(scores);
+            }
+            let got = merge_local(&locals, k);
+            let want = brute_force(&all_scores, k.min(all_scores.len()));
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn threshold_is_admission_bar() {
+        let mut t = TopK::new(3);
+        for (i, s) in [5.0, 1.0, 3.0, 4.0].iter().enumerate() {
+            t.push(ScoredDoc { doc_id: i as u64, score: *s });
+        }
+        let th = t.threshold().unwrap();
+        assert_eq!(th.score, 3.0);
+        let sorted = t.into_sorted();
+        assert_eq!(sorted.iter().map(|d| d.doc_id).collect::<Vec<_>>(), vec![0, 3, 2]);
+    }
+
+    #[test]
+    fn prop_topk_sorted_and_bounded() {
+        let gen = gen_pair(gen_vec(gen_i64(-1000, 1000), 1, 300), gen_usize(1, 20));
+        forall(cases(150), gen, |(vals, k)| {
+            let scores: Vec<f64> = vals.iter().map(|&v| v as f64).collect();
+            let got = topk_from_scores(&scores, 0, *k);
+            if got.len() != (*k).min(scores.len()) {
+                return false;
+            }
+            // Sorted by rank.
+            for w in got.windows(2) {
+                if w[0].cmp_rank(&w[1]) == std::cmp::Ordering::Greater {
+                    return false;
+                }
+            }
+            // Exactly the brute-force set.
+            got == brute_force(&scores, (*k).min(scores.len()))
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "k must be positive")]
+    fn zero_k_rejected() {
+        TopK::new(0);
+    }
+}

@@ -1,0 +1,399 @@
+//! PJRT executor: compile-once cache + typed execution entry points.
+//!
+//! Pattern follows `/opt/xla-example/load_hlo/`: HLO **text** is parsed by
+//! `HloModuleProto::from_text_file` (the text parser reassigns the 64-bit
+//! instruction ids jax >= 0.5 emits that xla_extension 0.5.1 rejects),
+//! compiled once per artifact on the PJRT CPU client, and executed with
+//! `Literal`/`PjRtBuffer` arguments.
+//!
+//! Hot-path note: document blocks are uploaded once as device-resident
+//! [`ResidentDb`] buffers; per query only the (tiny) query vector crosses
+//! the host boundary — the Rust analogue of the chip's "documents stay in
+//! ReRAM" property. See EXPERIMENTS.md §Perf for the measured effect.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::runtime::manifest::{ArtifactMeta, Manifest};
+
+/// The PJRT runtime: one CPU client + executable cache.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    /// Device-resident embedder weights (w1, b1, w2, b2), uploaded lazily
+    /// from `embed_weights.bin`.
+    embed_weights: Mutex<Option<std::sync::Arc<Vec<xla::PjRtBuffer>>>>,
+}
+
+/// A document block resident on the PJRT device, paired with its artifact.
+pub struct ResidentDb {
+    pub artifact: String,
+    pub n: usize,
+    pub dim: usize,
+    /// Padded block rows (>= n).
+    pub block_n: usize,
+    buffers: Vec<xla::PjRtBuffer>,
+}
+
+impl PjrtRuntime {
+    /// Create a runtime over an artifacts directory.
+    pub fn new(dir: impl AsRef<std::path::Path>) -> Result<PjrtRuntime> {
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtRuntime {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+            embed_weights: Mutex::new(None),
+        })
+    }
+
+    /// Create from the default artifacts location.
+    pub fn from_default_artifacts() -> Result<PjrtRuntime> {
+        Self::new(crate::runtime::artifacts_dir())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch cached) an artifact by name.
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let meta = self.manifest.get(name)?;
+        let path = meta
+            .file
+            .to_str()
+            .ok_or_else(|| anyhow!("non-UTF8 artifact path"))?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact {name}"))?,
+        );
+        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    // ---------------------------------------------------------------
+    // Typed entry points.
+    // ---------------------------------------------------------------
+
+    /// Upload a quantised document block for a score/top-k artifact.
+    /// `docs` is row-major `[n][dim]` i8 values (padded with zeros up to
+    /// the artifact's block size). For cosine artifacts, `norms` must be
+    /// given (padded rows get norm 1 to avoid 0/0; their scores are 0).
+    pub fn upload_db(
+        &self,
+        artifact: &str,
+        docs: &[i8],
+        n: usize,
+        dim: usize,
+        norms: Option<&[f32]>,
+    ) -> Result<ResidentDb> {
+        let meta = self.manifest.get(artifact)?;
+        let block_n = meta.meta_usize("n").ok_or_else(|| anyhow!("artifact has no n"))?;
+        let a_dim = meta.meta_usize("dim").ok_or_else(|| anyhow!("artifact has no dim"))?;
+        if dim != a_dim {
+            bail!("dim {dim} != artifact dim {a_dim}");
+        }
+        if n > block_n {
+            bail!("n {n} exceeds artifact block {block_n}");
+        }
+        assert_eq!(docs.len(), n * dim);
+
+        // Widen i8 -> i32 (the xla crate's native literal types).
+        let mut wide = vec![0i32; block_n * dim];
+        for (i, &v) in docs.iter().enumerate() {
+            wide[i] = v as i32;
+        }
+        let d_buf = self
+            .client
+            .buffer_from_host_buffer::<i32>(&wide, &[block_n, dim], None)?;
+        let mut buffers = vec![d_buf];
+
+        let kind = meta.meta_str("kind").unwrap_or("");
+        if kind.starts_with("cosine") {
+            let norms = norms.ok_or_else(|| anyhow!("cosine artifact needs norms"))?;
+            assert_eq!(norms.len(), n);
+            let mut padded = vec![1.0f32; block_n];
+            padded[..n].copy_from_slice(norms);
+            buffers.push(
+                self.client
+                    .buffer_from_host_buffer::<f32>(&padded, &[block_n], None)?,
+            );
+        }
+        Ok(ResidentDb { artifact: artifact.to_string(), n, dim, block_n, buffers })
+    }
+
+    /// MIPS scores of one query against a resident block: returns the
+    /// first `db.n` scores.
+    pub fn mips_scores(&self, db: &ResidentDb, q: &[i8]) -> Result<Vec<i32>> {
+        assert_eq!(q.len(), db.dim);
+        let exe = self.load(&db.artifact)?;
+        let q_wide: Vec<i32> = q.iter().map(|&v| v as i32).collect();
+        let q_buf = self
+            .client
+            .buffer_from_host_buffer::<i32>(&q_wide, &[db.dim], None)?;
+        let args: Vec<&xla::PjRtBuffer> = db.buffers.iter().chain(std::iter::once(&q_buf)).collect();
+        let result = exe.execute_b(&args)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        let mut scores = out.to_vec::<i32>()?;
+        scores.truncate(db.n);
+        Ok(scores)
+    }
+
+    /// Fused score + local top-k against a resident block. For cosine
+    /// artifacts, pass the query norm; returns (scores, local indices)
+    /// with padded rows filtered out.
+    pub fn topk(
+        &self,
+        db: &ResidentDb,
+        q: &[i8],
+        q_norm: Option<f32>,
+    ) -> Result<Vec<(f32, u32)>> {
+        assert_eq!(q.len(), db.dim);
+        let meta = self.manifest.get(&db.artifact)?;
+        let kind = meta.meta_str("kind").unwrap_or("");
+        let exe = self.load(&db.artifact)?;
+        let q_wide: Vec<i32> = q.iter().map(|&v| v as i32).collect();
+        let q_buf = self
+            .client
+            .buffer_from_host_buffer::<i32>(&q_wide, &[db.dim], None)?;
+        // Argument order matches the L2 graph signatures:
+        //   mips_topk(d, q); cosine_topk(d, q, d_norm, q_norm).
+        let qn_buf;
+        let mut args: Vec<&xla::PjRtBuffer> = vec![&db.buffers[0], &q_buf];
+        if kind.starts_with("cosine") {
+            let qn = q_norm.ok_or_else(|| anyhow!("cosine artifact needs q_norm"))?;
+            qn_buf = self
+                .client
+                .buffer_from_host_buffer::<f32>(&[qn], &[], None)?;
+            args.push(&db.buffers[1]);
+            args.push(&qn_buf);
+        }
+        let result = exe.execute_b(&args)?[0][0].to_literal_sync()?;
+        let (vals, idx) = result.to_tuple2()?;
+        let vals = vals.to_vec::<f32>()?;
+        let idx = idx.to_vec::<i32>()?;
+        Ok(vals
+            .into_iter()
+            .zip(idx)
+            .filter(|&(_, i)| (i as usize) < db.n)
+            .map(|(v, i)| (v, i as u32))
+            .collect())
+    }
+
+    /// Upload (once) the embedder weights from `embed_weights.bin`:
+    /// f32-LE `w1[vocab,hidden] | b1[hidden] | w2[hidden,dim] | b2[dim]`.
+    fn embed_weight_buffers(&self) -> Result<std::sync::Arc<Vec<xla::PjRtBuffer>>> {
+        if let Some(w) = self.embed_weights.lock().unwrap().as_ref() {
+            return Ok(w.clone());
+        }
+        let meta = self
+            .manifest
+            .artifacts
+            .iter()
+            .find(|a| a.meta_str("kind") == Some("embed"))
+            .ok_or_else(|| anyhow!("no embed artifact in manifest"))?;
+        let vocab = meta.meta_usize("vocab").ok_or_else(|| anyhow!("embed meta missing vocab"))?;
+        let hidden = meta.meta_usize("hidden").ok_or_else(|| anyhow!("embed meta missing hidden"))?;
+        let dim = meta.meta_usize("dim").ok_or_else(|| anyhow!("embed meta missing dim"))?;
+        let file = meta
+            .meta_str("weights_file")
+            .unwrap_or("embed_weights.bin");
+        let path = self.manifest.dir.join(file);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading embed weights {}", path.display()))?;
+        let want = (vocab * hidden + hidden + hidden * dim + dim) * 4;
+        if bytes.len() != want {
+            bail!("embed weights: {} bytes, expected {want}", bytes.len());
+        }
+        let floats: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let mut off = 0usize;
+        let mut take = |len: usize, dims: &[usize]| -> Result<xla::PjRtBuffer> {
+            let slice = &floats[off..off + len];
+            off += len;
+            Ok(self.client.buffer_from_host_buffer::<f32>(slice, dims, None)?)
+        };
+        let bufs = vec![
+            take(vocab * hidden, &[vocab, hidden])?,
+            take(hidden, &[hidden])?,
+            take(hidden * dim, &[hidden, dim])?,
+            take(dim, &[dim])?,
+        ];
+        let arc = std::sync::Arc::new(bufs);
+        *self.embed_weights.lock().unwrap() = Some(arc.clone());
+        Ok(arc)
+    }
+
+    /// Run the embedding MLP on a batch of hashed-BoW features.
+    /// `x` is row-major `[batch][vocab]`; returns `[batch][dim]`.
+    pub fn embed(&self, x: &[f32], batch: usize) -> Result<Vec<f32>> {
+        let name = format!("embed_mlp_b{batch}");
+        let meta = self.manifest.get(&name)?;
+        let vocab = meta.inputs[0].shape[1];
+        assert_eq!(x.len(), batch * vocab, "feature width mismatch");
+        let exe = self.load(&name)?;
+        let weights = self.embed_weight_buffers()?;
+        let x_buf = self
+            .client
+            .buffer_from_host_buffer::<f32>(x, &[batch, vocab], None)?;
+        let mut args: Vec<&xla::PjRtBuffer> = vec![&x_buf];
+        args.extend(weights.iter());
+        let result = exe.execute_b(&args)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Which embed batch sizes are available.
+    pub fn embed_batches(&self) -> Vec<usize> {
+        self.manifest
+            .artifacts
+            .iter()
+            .filter(|a| a.meta_str("kind") == Some("embed"))
+            .filter_map(|a| a.meta_usize("batch"))
+            .collect()
+    }
+
+    /// Artifact metadata accessor.
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.manifest.get(name)
+    }
+}
+
+// The runtime holds FFI pointers managed by xla_extension; the underlying
+// PJRT CPU client is thread-safe for compilation and execution, and the
+// cache is mutex-guarded. Used by the coordinator to share one runtime
+// across worker threads.
+unsafe impl Send for PjrtRuntime {}
+unsafe impl Sync for PjrtRuntime {}
+unsafe impl Send for ResidentDb {}
+unsafe impl Sync for ResidentDb {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::retrieval::score;
+    use crate::util::rng::Pcg;
+
+    fn runtime() -> Option<PjrtRuntime> {
+        let dir = crate::runtime::artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(PjrtRuntime::new(dir).expect("runtime"))
+    }
+
+    #[test]
+    fn mips_scores_match_rust_reference() {
+        let Some(rt) = runtime() else { return };
+        let (n, dim) = (100, 64);
+        let mut rng = Pcg::new(1);
+        let docs: Vec<i8> = (0..n * dim).map(|_| rng.int_in(-128, 127) as i8).collect();
+        let q: Vec<i8> = (0..dim).map(|_| rng.int_in(-128, 127) as i8).collect();
+        let db = rt.upload_db("mips_dot_int8_128x64", &docs, n, dim, None).unwrap();
+        let got = rt.mips_scores(&db, &q).unwrap();
+        let want = score::mips_scores(&docs, n, dim, &q);
+        assert_eq!(got.len(), n);
+        for i in 0..n {
+            assert_eq!(got[i] as i64, want[i], "doc {i}");
+        }
+    }
+
+    #[test]
+    fn bitserial_artifact_matches_dot_artifact() {
+        let Some(rt) = runtime() else { return };
+        let (n, dim) = (128, 64);
+        let mut rng = Pcg::new(2);
+        let docs: Vec<i8> = (0..n * dim).map(|_| rng.int_in(-128, 127) as i8).collect();
+        let q: Vec<i8> = (0..dim).map(|_| rng.int_in(-128, 127) as i8).collect();
+        let db_dot = rt.upload_db("mips_dot_int8_128x64", &docs, n, dim, None).unwrap();
+        let db_bs = rt.upload_db("mips_bitserial_int8_128x64", &docs, n, dim, None).unwrap();
+        assert_eq!(
+            rt.mips_scores(&db_dot, &q).unwrap(),
+            rt.mips_scores(&db_bs, &q).unwrap()
+        );
+    }
+
+    #[test]
+    fn topk_artifact_selects_best() {
+        let Some(rt) = runtime() else { return };
+        let (n, dim) = (128, 64);
+        let mut rng = Pcg::new(3);
+        let docs: Vec<i8> = (0..n * dim).map(|_| rng.int_in(-128, 127) as i8).collect();
+        let q: Vec<i8> = (0..dim).map(|_| rng.int_in(-128, 127) as i8).collect();
+        let db = rt.upload_db("mips_topk_int8_128x64_k5", &docs, n, dim, None).unwrap();
+        let top = rt.topk(&db, &q, None).unwrap();
+        assert_eq!(top.len(), 5);
+        let want = score::mips_scores(&docs, n, dim, &q);
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by_key(|&i| -want[i]);
+        let got_ids: Vec<u32> = top.iter().map(|&(_, i)| i).collect();
+        let want_ids: Vec<u32> = order[..5].iter().map(|&i| i as u32).collect();
+        // Ties may reorder; compare score sets.
+        let got_scores: Vec<i64> = top.iter().map(|&(v, _)| v as i64).collect();
+        let want_scores: Vec<i64> = order[..5].iter().map(|&i| want[i]).collect();
+        assert_eq!(got_scores, want_scores, "got ids {got_ids:?} want {want_ids:?}");
+    }
+
+    #[test]
+    fn cosine_topk_with_padding() {
+        let Some(rt) = runtime() else { return };
+        let (n, dim) = (90, 64); // padded to 128
+        let mut rng = Pcg::new(4);
+        let docs: Vec<i8> = (0..n * dim).map(|_| rng.int_in(-128, 127) as i8).collect();
+        let q: Vec<i8> = (0..dim).map(|_| rng.int_in(-128, 127) as i8).collect();
+        let norms: Vec<f32> = (0..n)
+            .map(|i| score::norm_i8(&docs[i * dim..(i + 1) * dim]) as f32)
+            .collect();
+        let db = rt
+            .upload_db("cosine_topk_int8_128x64_k5", &docs, n, dim, Some(&norms))
+            .unwrap();
+        let qn = score::norm_i8(&q) as f32;
+        let top = rt.topk(&db, &q, Some(qn)).unwrap();
+        assert!(!top.is_empty() && top.len() <= 5);
+        for &(v, i) in &top {
+            assert!((i as usize) < n, "padded row leaked: {i}");
+            assert!(v.abs() <= 1.0 + 1e-5);
+        }
+    }
+
+    #[test]
+    fn embed_runs_and_normalises() {
+        let Some(rt) = runtime() else { return };
+        let vocab = rt.artifact("embed_mlp_b1").unwrap().inputs[0].shape[1];
+        let mut rng = Pcg::new(5);
+        let x: Vec<f32> = (0..vocab).map(|_| rng.f32()).collect();
+        let e = rt.embed(&x, 1).unwrap();
+        let dim = rt.artifact("embed_mlp_b1").unwrap().outputs[0].shape[1];
+        assert_eq!(e.len(), dim);
+        let n: f64 = e.iter().map(|&v| (v as f64).powi(2)).sum();
+        assert!((n - 1.0).abs() < 1e-4, "norm^2 {n}");
+    }
+
+    #[test]
+    fn executable_cache_reuses() {
+        let Some(rt) = runtime() else { return };
+        assert_eq!(rt.cached(), 0);
+        rt.load("mips_dot_int8_128x64").unwrap();
+        rt.load("mips_dot_int8_128x64").unwrap();
+        assert_eq!(rt.cached(), 1);
+    }
+}

@@ -1,0 +1,213 @@
+//! Typed view of the AOT artifact manifest.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Tensor dtype as named in the manifest.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    I32,
+    F32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "int32" | "i32" => Ok(Dtype::I32),
+            "float32" | "f32" => Ok(Dtype::F32),
+            other => bail!("unsupported dtype {other:?}"),
+        }
+    }
+}
+
+/// One tensor spec.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let dtype = Dtype::parse(j.req("dtype")?.as_str()?)?;
+        let shape = j
+            .req("shape")?
+            .as_arr()?
+            .iter()
+            .map(|d| d.as_usize())
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TensorSpec { dtype, shape })
+    }
+}
+
+/// One artifact entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// Free-form metadata (kind, n, dim, bits, k, ...).
+    pub meta: BTreeMap<String, Json>,
+}
+
+impl ArtifactMeta {
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key).and_then(|v| v.as_usize().ok())
+    }
+
+    pub fn meta_str(&self, key: &str) -> Option<&str> {
+        self.meta.get(key).and_then(|v| v.as_str().ok())
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+        let version = j.req("version")?.as_usize()?;
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let mut artifacts = Vec::new();
+        for entry in j.req("artifacts")?.as_arr()? {
+            let name = entry.req("name")?.as_str()?.to_string();
+            let file = dir.join(entry.req("file")?.as_str()?);
+            if !file.exists() {
+                bail!("artifact file missing: {}", file.display());
+            }
+            let inputs = entry
+                .req("inputs")?
+                .as_arr()?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = entry
+                .req("outputs")?
+                .as_arr()?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let meta = match entry.get("meta") {
+                Some(Json::Obj(m)) => m.clone(),
+                _ => BTreeMap::new(),
+            };
+            artifacts.push(ArtifactMeta { name, file, inputs, outputs, meta });
+        }
+        Ok(Manifest { dir, artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))
+    }
+
+    /// Find the smallest score/top-k artifact of `kind` that fits
+    /// `(n, dim)` (block padding happens on the caller side).
+    pub fn best_block(&self, kind: &str, n: usize, dim: usize) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .filter(|a| {
+                a.meta_str("kind") == Some(kind)
+                    && a.meta_usize("dim") == Some(dim)
+                    && a.meta_usize("n").is_some_and(|an| an >= n)
+            })
+            .min_by_key(|a| a.meta_usize("n").unwrap())
+            .ok_or_else(|| {
+                anyhow!("no {kind:?} artifact covers n={n}, dim={dim} (rebuild artifacts?)")
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_fake_manifest(dir: &Path, entries: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("m.hlo.txt"), "HloModule fake").unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            format!(r#"{{"version": 1, "artifacts": [{entries}]}}"#),
+        )
+        .unwrap();
+    }
+
+    const ENTRY: &str = r#"{
+        "name": "mips_dot_int8_128x64", "file": "m.hlo.txt",
+        "inputs": [{"dtype": "int32", "shape": [128, 64]},
+                   {"dtype": "int32", "shape": [64]}],
+        "outputs": [{"dtype": "i32", "shape": [128]}],
+        "meta": {"kind": "mips", "bits": 8, "n": 128, "dim": 64}
+    }"#;
+
+    #[test]
+    fn parses_entries() {
+        let dir = std::env::temp_dir().join("dirc_manifest_test_1");
+        write_fake_manifest(&dir, ENTRY);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = m.get("mips_dot_int8_128x64").unwrap();
+        assert_eq!(a.inputs[0].shape, vec![128, 64]);
+        assert_eq!(a.inputs[0].dtype, Dtype::I32);
+        assert_eq!(a.outputs[0].elements(), 128);
+        assert_eq!(a.meta_usize("n"), Some(128));
+        assert_eq!(a.meta_str("kind"), Some("mips"));
+    }
+
+    #[test]
+    fn best_block_picks_smallest_fit() {
+        let e2 = ENTRY.replace("128x64", "512x64").replace("\"n\": 128", "\"n\": 512");
+        let dir = std::env::temp_dir().join("dirc_manifest_test_2");
+        write_fake_manifest(&dir, &format!("{ENTRY}, {e2}"));
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.best_block("mips", 100, 64).unwrap().meta_usize("n"), Some(128));
+        assert_eq!(m.best_block("mips", 200, 64).unwrap().meta_usize("n"), Some(512));
+        assert!(m.best_block("mips", 600, 64).is_err());
+        assert!(m.best_block("mips", 10, 99).is_err());
+    }
+
+    #[test]
+    fn missing_file_rejected() {
+        let dir = std::env::temp_dir().join("dirc_manifest_test_3");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"version": 1, "artifacts": [{"name": "x", "file": "nope.hlo.txt",
+               "inputs": [], "outputs": [], "meta": {}}]}"#,
+        )
+        .unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_built() {
+        let dir = crate::runtime::artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return; // artifacts not built in this environment
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.artifacts.len() >= 10);
+        assert!(m.get("embed_mlp_b1").is_ok());
+    }
+}

@@ -1,0 +1,35 @@
+//! The PJRT runtime: loads the AOT-compiled HLO text artifacts produced
+//! by `python/compile/aot.py` and executes them from the serve path.
+//!
+//! * [`manifest`] — typed view of `artifacts/manifest.json`.
+//! * [`executor`] — PJRT CPU client wrapper with a compile-once
+//!   executable cache and typed execution entry points (scores, fused
+//!   top-k, embedding).
+//!
+//! Python runs only at `make artifacts` time; this module is the entire
+//! runtime dependency on the compile path.
+
+pub mod executor;
+pub mod manifest;
+
+pub use executor::{PjrtRuntime, ResidentDb};
+pub use manifest::{ArtifactMeta, Manifest};
+
+/// Default artifacts directory, overridable with `DIRC_ARTIFACTS`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("DIRC_ARTIFACTS") {
+        return p.into();
+    }
+    // Walk up from CWD looking for artifacts/manifest.json (covers
+    // `cargo test`/`cargo bench` execution from target subdirs).
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !dir.pop() {
+            return "artifacts".into();
+        }
+    }
+}

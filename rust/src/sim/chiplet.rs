@@ -1,0 +1,121 @@
+//! Chiplet scale-out model (paper Sec IV.B, second scaling solution):
+//! "scaling-up by leveraging chiplet technology to integrate multiple
+//! DIRC-RAG chips into a larger-scale system."
+//!
+//! Each chiplet is a full DIRC-RAG chip (4 MB NVM); a package-level
+//! interconnect broadcasts the query embedding to every chiplet and a
+//! package top-k comparator merges the per-chip results. Latency adds
+//! the broadcast + merge tail; energy adds D2D link traffic — both tiny
+//! next to the in-chip retrieval, which is the point: capacity scales
+//! near-linearly at near-constant latency.
+
+use crate::constants::{NUM_CORES, TOTAL_NVM_BYTES};
+use crate::sim::cycles::CycleModel;
+use crate::sim::energy::{table1_events, EnergyModel};
+
+/// Package-level interconnect parameters (UCIe-class D2D link).
+#[derive(Debug, Clone)]
+pub struct ChipletModel {
+    /// Chiplets in the package.
+    pub chiplets: usize,
+    /// D2D link bandwidth per chiplet (bytes/s).
+    pub d2d_bw: f64,
+    /// D2D energy per byte moved (J) — ~0.5 pJ/bit UCIe-class.
+    pub d2d_j_per_byte: f64,
+    /// Package top-k merge: cycles per candidate at the chip clock.
+    pub merge_per_entry: u64,
+}
+
+impl Default for ChipletModel {
+    fn default() -> Self {
+        ChipletModel {
+            chiplets: 4,
+            d2d_bw: 32.0e9,
+            d2d_j_per_byte: 4.0e-12,
+            merge_per_entry: 1,
+        }
+    }
+}
+
+/// Scale-out cost summary for one query.
+#[derive(Debug, Clone, Copy)]
+pub struct PackageQuery {
+    pub capacity_bytes: usize,
+    pub latency_s: f64,
+    pub energy_j: f64,
+    /// Fraction of latency spent in the interconnect + merge tail.
+    pub overhead_frac: f64,
+}
+
+impl ChipletModel {
+    /// One query against a fully occupied package: each chiplet runs the
+    /// Table-I retrieval in parallel; the package pays query broadcast
+    /// (dim bytes to every chiplet) and the final merge.
+    pub fn package_query(&self, dim: usize, k: usize) -> PackageQuery {
+        let cyc = CycleModel::default();
+        let en = EnergyModel::default();
+
+        let qc = cyc.chip_query(&[16; NUM_CORES], 8, true, &[0; NUM_CORES], k);
+        let chip_latency = cyc.seconds(qc.total());
+        let chip_energy = en.query_energy(&table1_events(chip_latency)).total_j();
+
+        let bcast_bytes = dim * self.chiplets;
+        let bcast_s = dim as f64 / self.d2d_bw; // links fan out in parallel
+        let result_bytes = self.chiplets * k * 8; // (score, id) pairs back
+        let collect_s = result_bytes as f64 / (self.d2d_bw * self.chiplets as f64);
+        let merge_s =
+            cyc.seconds(self.merge_per_entry * (self.chiplets * k) as u64);
+        let overhead_s = bcast_s + collect_s + merge_s;
+
+        let latency = chip_latency + overhead_s;
+        let energy = chip_energy * self.chiplets as f64
+            + (bcast_bytes + result_bytes) as f64 * self.d2d_j_per_byte;
+        PackageQuery {
+            capacity_bytes: TOTAL_NVM_BYTES * self.chiplets,
+            latency_s: latency,
+            energy_j: energy,
+            overhead_frac: overhead_s / latency,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capacity_scales_linearly() {
+        for n in [1usize, 2, 4, 8, 16] {
+            let m = ChipletModel { chiplets: n, ..ChipletModel::default() };
+            let p = m.package_query(512, 10);
+            assert_eq!(p.capacity_bytes, n * TOTAL_NVM_BYTES);
+        }
+    }
+
+    #[test]
+    fn latency_nearly_flat_with_chiplets() {
+        let one = ChipletModel { chiplets: 1, ..ChipletModel::default() }
+            .package_query(512, 10);
+        let sixteen = ChipletModel { chiplets: 16, ..ChipletModel::default() }
+            .package_query(512, 10);
+        // 16x capacity for <20% latency growth.
+        assert!(sixteen.latency_s < one.latency_s * 1.2,
+            "1: {} 16: {}", one.latency_s, sixteen.latency_s);
+    }
+
+    #[test]
+    fn energy_scales_with_active_chiplets() {
+        let one = ChipletModel { chiplets: 1, ..ChipletModel::default() }
+            .package_query(512, 10);
+        let four = ChipletModel { chiplets: 4, ..ChipletModel::default() }
+            .package_query(512, 10);
+        let ratio = four.energy_j / one.energy_j;
+        assert!((3.8..4.3).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn interconnect_overhead_is_small() {
+        let p = ChipletModel::default().package_query(512, 10);
+        assert!(p.overhead_frac < 0.15, "overhead {}", p.overhead_frac);
+    }
+}

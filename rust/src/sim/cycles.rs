@@ -1,0 +1,186 @@
+//! The query-stationary cycle model (Fig 4).
+//!
+//! Per macro pass over `S` *used* word slots at precision `B`:
+//!
+//! * sensing:   `S * B` cycles (one bit-plane load each, all 128 columns
+//!   and all 128 cells of a column in parallel — the "one-cycle loading"
+//!   the DIRC cell provides);
+//! * detection: `S * B` cycles when enabled (adder reuse, Fig 5b);
+//! * MAC:       `S * B * B` cycles (Q is bit-serial too);
+//! * re-sense:  2 cycles per re-sense (sense + re-check) charged at the
+//!   lock-step stall of the worst column.
+//!
+//! Paper's Fig 4 example: S=16, B=8, detection on -> 128 + 128 + 1024 =
+//! 1280 cycles (~1300 with pipeline fill), 5.2 µs at 250 MHz. Chip-level
+//! latency adds the norm unit, local top-k drain and the global top-k
+//! merge: ~5.6 µs for a full 4 MB retrieval (Table I).
+
+use crate::constants::{FREQ_HZ, NUM_CORES};
+
+/// Tunable overheads of the chip-level pipeline (cycles).
+#[derive(Debug, Clone)]
+pub struct CycleModel {
+    /// Query norm computation (pipelined over the query stream).
+    pub norm_unit: u64,
+    /// Local top-k drain at end of a core's pass.
+    pub local_topk_drain_per_k: u64,
+    /// Global top-k comparator: cycles per candidate entry.
+    pub global_topk_per_entry: u64,
+    /// Pipeline fill / control overhead per query.
+    pub pipeline_fill: u64,
+    /// Cycles charged per re-sense event (sense + re-detect).
+    pub per_resense: u64,
+    pub freq_hz: f64,
+}
+
+impl Default for CycleModel {
+    fn default() -> Self {
+        CycleModel {
+            norm_unit: 32,
+            local_topk_drain_per_k: 1,
+            global_topk_per_entry: 1,
+            pipeline_fill: 8,
+            per_resense: 2,
+            freq_hz: FREQ_HZ,
+        }
+    }
+}
+
+/// Cycle census of one chip-level query.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct QueryCycles {
+    pub sense: u64,
+    pub detect: u64,
+    pub mac: u64,
+    pub resense_stall: u64,
+    pub norm_unit: u64,
+    pub topk: u64,
+    pub pipeline: u64,
+}
+
+impl QueryCycles {
+    pub fn total(&self) -> u64 {
+        self.sense + self.detect + self.mac + self.resense_stall + self.norm_unit
+            + self.topk
+            + self.pipeline
+    }
+}
+
+impl CycleModel {
+    /// Macro-pass cycles for `used_slots` word slots at `bits` precision.
+    pub fn macro_pass(&self, used_slots: usize, bits: usize, detect: bool) -> QueryCycles {
+        let s = used_slots as u64;
+        let b = bits as u64;
+        QueryCycles {
+            sense: s * b,
+            detect: if detect { s * b } else { 0 },
+            mac: s * b * b,
+            ..QueryCycles::default()
+        }
+    }
+
+    /// Chip-level query cycles. Cores run in parallel: the slowest core
+    /// (most used slots, worst re-sense stall) gates latency; the serial
+    /// tail is the norm unit (overlapped up-front, charged once) plus the
+    /// global top-k merge over `cores * k` candidates.
+    pub fn chip_query(
+        &self,
+        used_slots_per_core: &[usize],
+        bits: usize,
+        detect: bool,
+        max_column_resenses_per_core: &[u64],
+        k: usize,
+    ) -> QueryCycles {
+        assert_eq!(used_slots_per_core.len(), max_column_resenses_per_core.len());
+        let mut worst = QueryCycles::default();
+        let mut worst_total = 0u64;
+        for (i, &slots) in used_slots_per_core.iter().enumerate() {
+            let mut qc = self.macro_pass(slots, bits, detect);
+            qc.resense_stall = max_column_resenses_per_core[i] * self.per_resense;
+            if qc.total() >= worst_total {
+                worst_total = qc.total();
+                worst = qc;
+            }
+        }
+        worst.norm_unit = self.norm_unit;
+        worst.topk = self.local_topk_drain_per_k * k as u64
+            + self.global_topk_per_entry * (NUM_CORES * k) as u64 / 2;
+        worst.pipeline = self.pipeline_fill;
+        worst
+    }
+
+    /// Convert cycles to seconds at the model clock.
+    pub fn seconds(&self, cycles: u64) -> f64 {
+        cycles as f64 / self.freq_hz
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig4_column_pass_budget() {
+        // 16 INT8 embeddings, detection on: 128 + 128 + 1024 = 1280.
+        let m = CycleModel::default();
+        let qc = m.macro_pass(16, 8, true);
+        assert_eq!(qc.sense, 128);
+        assert_eq!(qc.detect, 128);
+        assert_eq!(qc.mac, 1024);
+        assert_eq!(qc.total(), 1280);
+        // ~5.2 us at 250 MHz, as the paper states.
+        let t = m.seconds(qc.total());
+        assert!((t - 5.12e-6).abs() < 0.1e-6, "{t}");
+    }
+
+    #[test]
+    fn table1_full_chip_latency() {
+        // Full 4 MB retrieval, dim 512 INT8: all 16 slots used everywhere.
+        let m = CycleModel::default();
+        let slots = [16usize; 16];
+        let stalls = [2u64; 16];
+        let qc = m.chip_query(&slots, 8, true, &stalls, 10);
+        let t_us = m.seconds(qc.total()) * 1e6;
+        // Paper Table I: 5.6 us/query. Model must land within 10%.
+        assert!((t_us - 5.6).abs() < 0.56, "latency {t_us} us");
+    }
+
+    #[test]
+    fn latency_scales_with_occupancy() {
+        let m = CycleModel::default();
+        let full = m.chip_query(&[16; 16], 8, true, &[0; 16], 10).total();
+        let half = m.chip_query(&[8; 16], 8, true, &[0; 16], 10).total();
+        let fixed = m.norm_unit + m.pipeline_fill + 10 + 80;
+        assert!(half < full);
+        // Variable part halves exactly.
+        assert_eq!((full - fixed) / 2, half - fixed);
+    }
+
+    #[test]
+    fn int4_pass_cheaper_than_int8() {
+        let m = CycleModel::default();
+        // Same doc count: INT4 halves both plane count per word and MAC
+        // cycles per plane -> 16 INT4 slots cost 1/4 of 16 INT8 slots in
+        // MAC cycles.
+        let i8c = m.macro_pass(16, 8, false).mac;
+        let i4c = m.macro_pass(16, 4, false).mac;
+        assert_eq!(i4c * 4, i8c);
+    }
+
+    #[test]
+    fn slowest_core_gates() {
+        let m = CycleModel::default();
+        let mut slots = [4usize; 16];
+        slots[7] = 16;
+        let qc = m.chip_query(&slots, 8, true, &[0; 16], 10);
+        assert_eq!(qc.mac, 1024);
+    }
+
+    #[test]
+    fn resense_stall_counted() {
+        let m = CycleModel::default();
+        let a = m.chip_query(&[16; 16], 8, true, &[0; 16], 10).total();
+        let b = m.chip_query(&[16; 16], 8, true, &[5; 16], 10).total();
+        assert_eq!(b - a, 5 * m.per_resense);
+    }
+}

@@ -1,0 +1,18 @@
+//! Cycle-accurate dataflow and energy/area models.
+//!
+//! * [`cycles`] — the bit-level query-stationary schedule of Fig 4 turned
+//!   into a cycle census, including re-sense stalls and the chip-level
+//!   norm-unit / top-k overheads.
+//! * [`energy`] — per-component energy model calibrated to Table I
+//!   (1176 TOPS/W macro efficiency, 0.956 µJ per 4 MB query).
+//! * [`spec`]   — the Table I derivations (density, TOPS, areas) from
+//!   first principles, asserted against the paper's numbers in tests.
+
+pub mod chiplet;
+pub mod cycles;
+pub mod energy;
+pub mod spec;
+
+pub use cycles::{CycleModel, QueryCycles};
+pub use energy::{EnergyModel, QueryEnergy};
+pub use spec::ChipSpec;

@@ -1,0 +1,162 @@
+//! Table I — the DIRC-RAG spec sheet, derived from first principles.
+//!
+//! Every row of Table I is computed from the geometry + model constants
+//! rather than hard-coded, so the spec stays consistent with the
+//! simulator; tests assert each row against the paper's numbers.
+
+use crate::constants::*;
+use crate::sim::cycles::CycleModel;
+use crate::sim::energy::{table1_events, EnergyModel};
+
+/// The derived spec sheet.
+#[derive(Debug, Clone)]
+pub struct ChipSpec {
+    pub process: &'static str,
+    pub area_mm2: f64,
+    pub freq_hz: f64,
+    pub voltage: f64,
+    pub precisions: &'static str,
+    pub dim_range: (usize, usize),
+    pub macro_size_bits: usize,
+    pub macro_area_mm2: f64,
+    pub macro_tops_per_w: f64,
+    pub macro_tops_per_mm2: f64,
+    pub macro_nvm_bits: usize,
+    pub total_nvm_bytes: usize,
+    pub memory_density_mb_per_mm2: f64,
+    pub chip_tops: f64,
+    pub retrieval_latency_s: f64,
+    pub energy_per_query_j: f64,
+}
+
+impl ChipSpec {
+    /// Derive the spec under the default cycle/energy models.
+    pub fn derive() -> ChipSpec {
+        let cyc = CycleModel::default();
+        let en = EnergyModel::default();
+
+        // Throughput: cells x 2 ops x f, per macro and chip.
+        let macro_ops_per_cycle = (MACRO_DIM * MACRO_DIM * 2) as f64;
+        let macro_tops = macro_ops_per_cycle * FREQ_HZ / 1e12;
+        let chip_tops = macro_tops * NUM_CORES as f64;
+
+        // Full-capacity INT8 dim-512 query (Table I conditions).
+        let qc = cyc.chip_query(&[16; NUM_CORES], 8, true, &[0; NUM_CORES], 10);
+        let latency = cyc.seconds(qc.total());
+        let energy = en.query_energy(&table1_events(latency)).total_j();
+
+        ChipSpec {
+            process: "TSMC40nm (modeled)",
+            area_mm2: CHIP_AREA_MM2,
+            freq_hz: FREQ_HZ,
+            voltage: VDD,
+            precisions: "INT4/8",
+            dim_range: (128, 1024),
+            macro_size_bits: MACRO_DIM * MACRO_DIM,
+            macro_area_mm2: MACRO_AREA_MM2,
+            macro_tops_per_w: en.macro_tops_per_w(),
+            macro_tops_per_mm2: macro_tops / MACRO_AREA_MM2,
+            macro_nvm_bits: MACRO_NVM_BITS,
+            total_nvm_bytes: TOTAL_NVM_BYTES,
+            memory_density_mb_per_mm2: (TOTAL_NVM_BYTES as f64 * 8.0 / 1e6)
+                / CHIP_AREA_MM2,
+            chip_tops,
+            retrieval_latency_s: latency,
+            energy_per_query_j: energy,
+        }
+    }
+
+    /// Render as the Table I layout.
+    pub fn render(&self) -> String {
+        format!(
+            concat!(
+                "Process              | {}\n",
+                "DIRC-RAG Area        | {:.2} mm^2\n",
+                "Frequency            | {:.0} MHz\n",
+                "Voltage              | {:.1} V\n",
+                "Precisions           | {}\n",
+                "Embedding Dimension  | {}~{}\n",
+                "Macro Size           | {} Kb\n",
+                "Macro Area           | {:.2} mm^2\n",
+                "Macro Efficiency     | {:.0} TOPS/W, {:.1} TOPS/mm^2\n",
+                "Macro NVM Storage    | {} Mb\n",
+                "Total NVM Storage    | {} MB\n",
+                "Total Memory Density | {:.3} Mb/mm^2\n",
+                "Retrieval Latency    | {:.1} us (4MB retrieval)\n",
+                "Energy/Query         | {:.3} uJ (4MB retrieval)\n",
+            ),
+            self.process,
+            self.area_mm2,
+            self.freq_hz / 1e6,
+            self.voltage,
+            self.precisions,
+            self.dim_range.0,
+            self.dim_range.1,
+            self.macro_size_bits / 1024,
+            self.macro_area_mm2,
+            self.macro_tops_per_w,
+            self.macro_tops_per_mm2,
+            self.macro_nvm_bits / (1 << 20),
+            self.total_nvm_bytes / (1 << 20),
+            self.memory_density_mb_per_mm2,
+            self.retrieval_latency_s * 1e6,
+            self.energy_per_query_j * 1e6,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn within(got: f64, want: f64, tol_frac: f64) -> bool {
+        (got - want).abs() <= want.abs() * tol_frac
+    }
+
+    #[test]
+    fn table1_rows_match_paper() {
+        let s = ChipSpec::derive();
+        // Geometry rows are exact.
+        assert_eq!(s.macro_size_bits, 16 * 1024);
+        assert_eq!(s.macro_nvm_bits, 2 * 1024 * 1024);
+        assert_eq!(s.total_nvm_bytes, 4 * 1024 * 1024);
+        // Derived rows within tolerance of the paper.
+        assert!(within(s.chip_tops, 131.0, 0.02), "TOPS {}", s.chip_tops);
+        assert!(
+            within(s.macro_tops_per_w, 1176.0, 0.02),
+            "TOPS/W {}",
+            s.macro_tops_per_w
+        );
+        assert!(
+            within(s.macro_tops_per_mm2, 24.9, 0.05),
+            "TOPS/mm2 {}",
+            s.macro_tops_per_mm2
+        );
+        assert!(
+            within(s.memory_density_mb_per_mm2, 5.178, 0.06),
+            "density {}",
+            s.memory_density_mb_per_mm2
+        );
+        assert!(
+            within(s.retrieval_latency_s, 5.6e-6, 0.1),
+            "latency {}",
+            s.retrieval_latency_s
+        );
+        assert!(
+            within(s.energy_per_query_j, 0.956e-6, 0.1),
+            "energy {}",
+            s.energy_per_query_j
+        );
+    }
+
+    #[test]
+    fn render_contains_all_rows() {
+        let s = ChipSpec::derive().render();
+        for key in [
+            "Process", "Frequency", "Precisions", "Macro Efficiency",
+            "Total Memory Density", "Retrieval Latency", "Energy/Query",
+        ] {
+            assert!(s.contains(key), "missing {key}");
+        }
+    }
+}

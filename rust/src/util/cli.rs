@@ -1,0 +1,294 @@
+//! Declarative CLI argument parser (offline replacement for `clap`).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value` options
+//! with defaults, typed accessors, and generated `--help` text. Used by
+//! `rust/src/main.rs` and the example binaries.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Specification of one option.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// A command (or subcommand) specification.
+#[derive(Debug, Clone, Default)]
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    opts: Vec<OptSpec>,
+    subs: Vec<Command>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Command { name, about, opts: Vec::new(), subs: Vec::new() }
+    }
+
+    /// `--key <value>` option with a default.
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: Some(default), is_flag: false });
+        self
+    }
+
+    /// Required `--key <value>` option.
+    pub fn opt_req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_flag: false });
+        self
+    }
+
+    /// Boolean `--flag`.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    pub fn sub(mut self, sub: Command) -> Self {
+        self.subs.push(sub);
+        self
+    }
+
+    /// Render help text.
+    pub fn help_text(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {} ", self.name, self.about, self.name);
+        if !self.subs.is_empty() {
+            s.push_str("<SUBCOMMAND> ");
+        }
+        s.push_str("[OPTIONS]\n");
+        if !self.subs.is_empty() {
+            s.push_str("\nSUBCOMMANDS:\n");
+            for sub in &self.subs {
+                s.push_str(&format!("  {:<18} {}\n", sub.name, sub.about));
+            }
+        }
+        if !self.opts.is_empty() {
+            s.push_str("\nOPTIONS:\n");
+            for o in &self.opts {
+                let head = if o.is_flag {
+                    format!("--{}", o.name)
+                } else {
+                    format!("--{} <v>", o.name)
+                };
+                let dfl = o
+                    .default
+                    .map(|d| format!(" [default: {d}]"))
+                    .unwrap_or_default();
+                s.push_str(&format!("  {head:<22} {}{dfl}\n", o.help));
+            }
+        }
+        s.push_str("  --help                 print this help\n");
+        s
+    }
+
+    /// Parse a raw argv (without the program name).
+    pub fn parse(&self, argv: &[String]) -> Result<Parsed> {
+        // Subcommand dispatch: first non-flag token selects a subcommand.
+        if !self.subs.is_empty() {
+            match argv.first().map(String::as_str) {
+                Some("--help") | Some("-h") | None => {
+                    return Ok(Parsed {
+                        command: self.name,
+                        help: Some(self.help_text()),
+                        values: BTreeMap::new(),
+                        flags: Vec::new(),
+                        sub: None,
+                    });
+                }
+                Some(tok) => {
+                    let sub = self
+                        .subs
+                        .iter()
+                        .find(|s| s.name == tok)
+                        .ok_or_else(|| anyhow!("unknown subcommand {tok:?}\n\n{}", self.help_text()))?;
+                    let inner = sub.parse(&argv[1..])?;
+                    return Ok(Parsed {
+                        command: self.name,
+                        help: inner.help.clone(),
+                        values: BTreeMap::new(),
+                        flags: Vec::new(),
+                        sub: Some(Box::new(inner)),
+                    });
+                }
+            }
+        }
+
+        let mut values: BTreeMap<&'static str, String> = BTreeMap::new();
+        let mut flags: Vec<&'static str> = Vec::new();
+        for o in &self.opts {
+            if let Some(d) = o.default {
+                values.insert(o.name, d.to_string());
+            }
+        }
+
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if tok == "--help" || tok == "-h" {
+                return Ok(Parsed {
+                    command: self.name,
+                    help: Some(self.help_text()),
+                    values,
+                    flags,
+                    sub: None,
+                });
+            }
+            let stripped = tok
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow!("unexpected positional argument {tok:?}"))?;
+            let (key, inline_val) = match stripped.split_once('=') {
+                Some((k, v)) => (k, Some(v.to_string())),
+                None => (stripped, None),
+            };
+            let spec = self
+                .opts
+                .iter()
+                .find(|o| o.name == key)
+                .ok_or_else(|| anyhow!("unknown option --{key}\n\n{}", self.help_text()))?;
+            if spec.is_flag {
+                if inline_val.is_some() {
+                    bail!("flag --{key} takes no value");
+                }
+                flags.push(spec.name);
+                i += 1;
+            } else {
+                let val = match inline_val {
+                    Some(v) => v,
+                    None => {
+                        i += 1;
+                        argv.get(i)
+                            .cloned()
+                            .ok_or_else(|| anyhow!("option --{key} requires a value"))?
+                    }
+                };
+                values.insert(spec.name, val);
+                i += 1;
+            }
+        }
+
+        // Check required options.
+        for o in &self.opts {
+            if !o.is_flag && o.default.is_none() && !values.contains_key(o.name) {
+                bail!("missing required option --{}\n\n{}", o.name, self.help_text());
+            }
+        }
+
+        Ok(Parsed { command: self.name, help: None, values, flags, sub: None })
+    }
+
+    /// Parse `std::env::args()`.
+    pub fn parse_env(&self) -> Result<Parsed> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        self.parse(&argv)
+    }
+}
+
+/// Result of parsing.
+#[derive(Debug)]
+pub struct Parsed {
+    pub command: &'static str,
+    /// If set, the user asked for help — print it and exit.
+    pub help: Option<String>,
+    values: BTreeMap<&'static str, String>,
+    flags: Vec<&'static str>,
+    sub: Option<Box<Parsed>>,
+}
+
+impl Parsed {
+    pub fn subcommand(&self) -> Option<&Parsed> {
+        self.sub.as_deref()
+    }
+
+    pub fn get(&self, name: &str) -> Result<&str> {
+        self.values
+            .get(name)
+            .map(String::as_str)
+            .ok_or_else(|| anyhow!("option --{name} not provided"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize> {
+        let s = self.get(name)?;
+        s.parse().map_err(|e| anyhow!("--{name}={s:?}: {e}"))
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64> {
+        let s = self.get(name)?;
+        s.parse().map_err(|e| anyhow!("--{name}={s:?}: {e}"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64> {
+        let s = self.get(name)?;
+        s.parse().map_err(|e| anyhow!("--{name}={s:?}: {e}"))
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.contains(&name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("dirc-rag", "test")
+            .opt("db-mb", "4", "database size MB")
+            .opt("metric", "cosine", "cosine|mips")
+            .opt_req("dataset", "dataset name")
+            .flag("verbose", "chatty")
+    }
+
+    fn args(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let p = cmd().parse(&args(&["--dataset", "scifact", "--db-mb=8"])).unwrap();
+        assert_eq!(p.get("db-mb").unwrap(), "8");
+        assert_eq!(p.get_usize("db-mb").unwrap(), 8);
+        assert_eq!(p.get("metric").unwrap(), "cosine");
+        assert_eq!(p.get("dataset").unwrap(), "scifact");
+        assert!(!p.has_flag("verbose"));
+    }
+
+    #[test]
+    fn flags() {
+        let p = cmd().parse(&args(&["--dataset", "x", "--verbose"])).unwrap();
+        assert!(p.has_flag("verbose"));
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(cmd().parse(&args(&[])).is_err());
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(cmd().parse(&args(&["--dataset", "x", "--nope", "1"])).is_err());
+    }
+
+    #[test]
+    fn help_flag() {
+        let p = cmd().parse(&args(&["--help"])).unwrap();
+        assert!(p.help.is_some());
+        assert!(p.help.unwrap().contains("OPTIONS"));
+    }
+
+    #[test]
+    fn subcommands() {
+        let root = Command::new("root", "r")
+            .sub(Command::new("serve", "serving").opt("port", "8080", "port"))
+            .sub(Command::new("bench", "benches"));
+        let p = root.parse(&args(&["serve", "--port", "9000"])).unwrap();
+        let sub = p.subcommand().unwrap();
+        assert_eq!(sub.command, "serve");
+        assert_eq!(sub.get_usize("port").unwrap(), 9000);
+        assert!(root.parse(&args(&["nope"])).is_err());
+    }
+}

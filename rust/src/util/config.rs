@@ -1,0 +1,302 @@
+//! Typed configuration system over a TOML-subset parser (offline
+//! replacement for `serde` + `toml`).
+//!
+//! Supports `[section]` / `[section.sub]` tables, string / integer / float /
+//! boolean scalars, arrays of scalars, and `#` comments — the subset needed
+//! by `configs/*.toml`. Values are addressed by dotted path
+//! (`"chip.num_cores"`), with typed accessors and defaults.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// A scalar or array config value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    fn parse(raw: &str) -> Result<Value> {
+        let raw = raw.trim();
+        if raw.is_empty() {
+            bail!("empty value");
+        }
+        if let Some(inner) = raw.strip_prefix('[') {
+            let inner = inner
+                .strip_suffix(']')
+                .ok_or_else(|| anyhow!("unterminated array {raw:?}"))?;
+            let mut items = Vec::new();
+            for part in split_top_level(inner) {
+                let part = part.trim();
+                if !part.is_empty() {
+                    items.push(Value::parse(part)?);
+                }
+            }
+            return Ok(Value::Arr(items));
+        }
+        if (raw.starts_with('"') && raw.ends_with('"') && raw.len() >= 2)
+            || (raw.starts_with('\'') && raw.ends_with('\'') && raw.len() >= 2)
+        {
+            return Ok(Value::Str(raw[1..raw.len() - 1].to_string()));
+        }
+        match raw {
+            "true" => return Ok(Value::Bool(true)),
+            "false" => return Ok(Value::Bool(false)),
+            _ => {}
+        }
+        if let Ok(i) = raw.replace('_', "").parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+        if let Ok(f) = raw.replace('_', "").parse::<f64>() {
+            return Ok(Value::Float(f));
+        }
+        bail!("cannot parse value {raw:?} (strings need quotes)")
+    }
+}
+
+/// Split an array body on top-level commas (no nested arrays needed, but
+/// respect quoted strings).
+fn split_top_level(s: &str) -> Vec<String> {
+    let mut parts = Vec::new();
+    let mut cur = String::new();
+    let mut in_str: Option<char> = None;
+    for c in s.chars() {
+        match in_str {
+            Some(q) => {
+                cur.push(c);
+                if c == q {
+                    in_str = None;
+                }
+            }
+            None => match c {
+                '"' | '\'' => {
+                    in_str = Some(c);
+                    cur.push(c);
+                }
+                ',' => {
+                    parts.push(std::mem::take(&mut cur));
+                }
+                c => cur.push(c),
+            },
+        }
+    }
+    if !cur.trim().is_empty() {
+        parts.push(cur);
+    }
+    parts
+}
+
+/// Strip a trailing `#` comment, respecting quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str: Option<char> = None;
+    for (i, c) in line.char_indices() {
+        match in_str {
+            Some(q) if c == q => in_str = None,
+            Some(_) => {}
+            None => match c {
+                '"' | '\'' => in_str = Some(c),
+                '#' => return &line[..i],
+                _ => {}
+            },
+        }
+    }
+    line
+}
+
+/// A parsed configuration: flat map from dotted path to value.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    values: BTreeMap<String, Value>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw_line) in text.lines().enumerate() {
+            let line = strip_comment(raw_line).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(head) = line.strip_prefix('[') {
+                let head = head
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow!("line {}: bad section header", lineno + 1))?;
+                section = head.trim().to_string();
+                if section.is_empty() {
+                    bail!("line {}: empty section name", lineno + 1);
+                }
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+            let key = k.trim();
+            if key.is_empty() {
+                bail!("line {}: empty key", lineno + 1);
+            }
+            let path = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            let val = Value::parse(v)
+                .with_context(|| format!("line {}: key {path:?}", lineno + 1))?;
+            if values.insert(path.clone(), val).is_some() {
+                bail!("line {}: duplicate key {path:?}", lineno + 1);
+            }
+        }
+        Ok(Config { values })
+    }
+
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Config> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parsing config {}", path.display()))
+    }
+
+    pub fn get(&self, path: &str) -> Option<&Value> {
+        self.values.get(path)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(String::as_str)
+    }
+
+    pub fn str_or(&self, path: &str, default: &str) -> String {
+        match self.get(path) {
+            Some(Value::Str(s)) => s.clone(),
+            _ => default.to_string(),
+        }
+    }
+
+    pub fn int_or(&self, path: &str, default: i64) -> i64 {
+        match self.get(path) {
+            Some(Value::Int(i)) => *i,
+            Some(Value::Float(f)) if f.fract() == 0.0 => *f as i64,
+            _ => default,
+        }
+    }
+
+    pub fn usize_or(&self, path: &str, default: usize) -> usize {
+        self.int_or(path, default as i64).max(0) as usize
+    }
+
+    pub fn float_or(&self, path: &str, default: f64) -> f64 {
+        match self.get(path) {
+            Some(Value::Float(f)) => *f,
+            Some(Value::Int(i)) => *i as f64,
+            _ => default,
+        }
+    }
+
+    pub fn bool_or(&self, path: &str, default: bool) -> bool {
+        match self.get(path) {
+            Some(Value::Bool(b)) => *b,
+            _ => default,
+        }
+    }
+
+    pub fn require_str(&self, path: &str) -> Result<String> {
+        match self.get(path) {
+            Some(Value::Str(s)) => Ok(s.clone()),
+            Some(other) => bail!("config key {path:?}: expected string, got {other:?}"),
+            None => bail!("config key {path:?} missing"),
+        }
+    }
+
+    /// Typed array accessor (ints).
+    pub fn int_arr(&self, path: &str) -> Result<Vec<i64>> {
+        match self.get(path) {
+            Some(Value::Arr(items)) => items
+                .iter()
+                .map(|v| match v {
+                    Value::Int(i) => Ok(*i),
+                    other => bail!("config key {path:?}: non-int array item {other:?}"),
+                })
+                .collect(),
+            Some(other) => bail!("config key {path:?}: expected array, got {other:?}"),
+            None => bail!("config key {path:?} missing"),
+        }
+    }
+
+    /// Merge another config over this one (other wins).
+    pub fn overlay(&mut self, other: &Config) {
+        for (k, v) in &other.values {
+            self.values.insert(k.clone(), v.clone());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# chip-level knobs
+title = "dirc-rag"
+
+[chip]
+num_cores = 16
+freq_mhz = 250.0
+enable_detection = true
+dims = [128, 256, 512, 1024]
+
+[chip.energy]
+mac_fj = 3.2          # per bit-MAC
+"#;
+
+    #[test]
+    fn parse_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.require_str("title").unwrap(), "dirc-rag");
+        assert_eq!(c.usize_or("chip.num_cores", 0), 16);
+        assert_eq!(c.float_or("chip.freq_mhz", 0.0), 250.0);
+        assert!(c.bool_or("chip.enable_detection", false));
+        assert_eq!(c.int_arr("chip.dims").unwrap(), vec![128, 256, 512, 1024]);
+        assert_eq!(c.float_or("chip.energy.mac_fj", 0.0), 3.2);
+    }
+
+    #[test]
+    fn defaults_on_missing() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.usize_or("nope", 7), 7);
+        assert_eq!(c.str_or("nope", "x"), "x");
+        assert!(c.require_str("nope").is_err());
+    }
+
+    #[test]
+    fn comments_and_underscored_numbers() {
+        let c = Config::parse("n = 1_000_000 # one million\ns = \"a # not comment\"").unwrap();
+        assert_eq!(c.int_or("n", 0), 1_000_000);
+        assert_eq!(c.require_str("s").unwrap(), "a # not comment");
+    }
+
+    #[test]
+    fn duplicate_key_rejected() {
+        assert!(Config::parse("a = 1\na = 2").is_err());
+    }
+
+    #[test]
+    fn bad_value_rejected() {
+        assert!(Config::parse("a = not_quoted").is_err());
+        assert!(Config::parse("[unclosed\na=1").is_err());
+    }
+
+    #[test]
+    fn overlay_wins() {
+        let mut base = Config::parse("a = 1\nb = 2").unwrap();
+        let over = Config::parse("b = 9\nc = 3").unwrap();
+        base.overlay(&over);
+        assert_eq!(base.int_or("a", 0), 1);
+        assert_eq!(base.int_or("b", 0), 9);
+        assert_eq!(base.int_or("c", 0), 3);
+    }
+}

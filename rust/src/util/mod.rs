@@ -1,0 +1,14 @@
+//! Dependency-free substrates.
+//!
+//! The offline build environment provides no `rand`, `clap`, `serde`,
+//! `tokio`, `criterion` or `proptest`; these modules implement the subset
+//! of each that the rest of the crate needs (see DESIGN.md, "Environment
+//! substitutions").
+
+pub mod cli;
+pub mod config;
+pub mod json;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,198 @@
+//! Worker thread pool + scoped parallel map (offline replacement for the
+//! parts of `tokio`/`rayon` the coordinator needs).
+//!
+//! The serving coordinator is thread-based: PJRT execution is a blocking
+//! FFI call, so an async runtime would only add overhead around a
+//! fundamentally synchronous hot path. The pool gives us:
+//!
+//! * [`ThreadPool`] — fixed workers consuming boxed jobs from an injector
+//!   channel (used by the coordinator's per-core executors), and
+//! * [`parallel_map`] — a scoped fork-join over a slice (used by the
+//!   Monte-Carlo sweeps and dataset generation).
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A fixed-size worker pool. Jobs are executed FIFO; `join` blocks until
+/// all submitted jobs have completed.
+pub struct ThreadPool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    pending: Arc<(Mutex<usize>, std::sync::Condvar)>,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize) -> Self {
+        assert!(threads > 0);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let pending = Arc::new((Mutex::new(0usize), std::sync::Condvar::new()));
+        let workers = (0..threads)
+            .map(|i| {
+                let rx: Arc<Mutex<Receiver<Job>>> = Arc::clone(&rx);
+                let pending = Arc::clone(&pending);
+                std::thread::Builder::new()
+                    .name(format!("dirc-pool-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => {
+                                job();
+                                let (lock, cv) = &*pending;
+                                let mut n = lock.lock().unwrap();
+                                *n -= 1;
+                                if *n == 0 {
+                                    cv.notify_all();
+                                }
+                            }
+                            Err(_) => break, // pool dropped
+                        }
+                    })
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), workers, pending }
+    }
+
+    /// Number of worker threads.
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Submit a job.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        {
+            let (lock, _) = &*self.pending;
+            *lock.lock().unwrap() += 1;
+        }
+        self.tx
+            .as_ref()
+            .expect("pool already shut down")
+            .send(Box::new(f))
+            .expect("pool workers gone");
+    }
+
+    /// Block until every submitted job has finished.
+    pub fn join(&self) {
+        let (lock, cv) = &*self.pending;
+        let mut n = lock.lock().unwrap();
+        while *n > 0 {
+            n = cv.wait(n).unwrap();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.tx.take(); // close channel; workers exit on recv Err
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Scoped fork-join: apply `f(index, &item)` to every item, `threads`-wide,
+/// and collect results in input order. Panics in workers propagate.
+pub fn parallel_map<T: Sync, R: Send>(
+    items: &[T],
+    threads: usize,
+    f: impl Fn(usize, &T) -> R + Sync,
+) -> Vec<R> {
+    let threads = threads.max(1).min(items.len().max(1));
+    if threads == 1 || items.len() <= 1 {
+        return items.iter().enumerate().map(|(i, x)| f(i, x)).collect();
+    }
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let mut out: Vec<Option<R>> = (0..items.len()).map(|_| None).collect();
+    let out_slots: Vec<Mutex<&mut Option<R>>> =
+        out.iter_mut().map(Mutex::new).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let r = f(i, &items[i]);
+                **out_slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    drop(out_slots);
+    out.into_iter().map(|o| o.expect("worker filled slot")).collect()
+}
+
+/// Default worker count: physical parallelism minus one for the leader,
+/// clamped to [1, 16].
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get().saturating_sub(1))
+        .unwrap_or(4)
+        .clamp(1, 16)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..1000 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.join();
+        assert_eq!(counter.load(Ordering::Relaxed), 1000);
+    }
+
+    #[test]
+    fn pool_join_then_more_jobs() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for round in 0..3 {
+            for _ in 0..50 {
+                let c = Arc::clone(&counter);
+                pool.execute(move || {
+                    c.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+            pool.join();
+            assert_eq!(counter.load(Ordering::Relaxed), (round + 1) * 50);
+        }
+    }
+
+    #[test]
+    fn parallel_map_order_preserved() {
+        let items: Vec<usize> = (0..257).collect();
+        let out = parallel_map(&items, 8, |i, &x| {
+            assert_eq!(i, x);
+            x * 2
+        });
+        assert_eq!(out, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_map_single_thread_fallback() {
+        let items = vec![1, 2, 3];
+        let out = parallel_map(&items, 1, |_, &x| x + 1);
+        assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn parallel_map_empty() {
+        let items: Vec<u32> = vec![];
+        let out: Vec<u32> = parallel_map(&items, 4, |_, &x| x);
+        assert!(out.is_empty());
+    }
+}

@@ -1,0 +1,262 @@
+//! Mini property-testing framework (offline replacement for `proptest`).
+//!
+//! Provides seeded generators and a `forall` runner with greedy input
+//! shrinking for the coordinator-invariant property tests (routing,
+//! batching, top-k, remapping). Failures print the seed and the shrunk
+//! counterexample; re-running with the same seed reproduces the failure.
+//!
+//! ```ignore
+//! forall(cases(200), gen_vec(gen_i64(-128, 127), 1..512), |v| {
+//!     check_some_invariant(v)
+//! });
+//! ```
+
+use std::fmt::Debug;
+
+use crate::util::rng::Pcg;
+
+/// A reusable generator: draws a value and offers shrink candidates.
+pub struct Gen<T> {
+    draw: Box<dyn Fn(&mut Pcg) -> T>,
+    shrink: Box<dyn Fn(&T) -> Vec<T>>,
+}
+
+impl<T: Clone + 'static> Gen<T> {
+    pub fn new(
+        draw: impl Fn(&mut Pcg) -> T + 'static,
+        shrink: impl Fn(&T) -> Vec<T> + 'static,
+    ) -> Self {
+        Gen { draw: Box::new(draw), shrink: Box::new(shrink) }
+    }
+
+    pub fn draw(&self, rng: &mut Pcg) -> T {
+        (self.draw)(rng)
+    }
+
+    pub fn shrinks(&self, v: &T) -> Vec<T> {
+        (self.shrink)(v)
+    }
+
+    /// Map the generated value (shrinking is lost across the mapping).
+    pub fn map<U: Clone + 'static>(self, f: impl Fn(T) -> U + 'static) -> Gen<U> {
+        Gen::new(move |rng| f(self.draw(rng)), |_| Vec::new())
+    }
+}
+
+/// Integer generator in `[lo, hi]`, shrinking toward zero / lo.
+pub fn gen_i64(lo: i64, hi: i64) -> Gen<i64> {
+    assert!(lo <= hi);
+    let anchor = if lo <= 0 && hi >= 0 { 0 } else { lo };
+    Gen::new(
+        move |rng| rng.int_in(lo, hi),
+        move |&v| {
+            let mut cands = Vec::new();
+            if v != anchor {
+                cands.push(anchor);
+                let mid = anchor + (v - anchor) / 2;
+                if mid != v && mid != anchor {
+                    cands.push(mid);
+                }
+                let step = if v > anchor { v - 1 } else { v + 1 };
+                if step != anchor {
+                    cands.push(step);
+                }
+            }
+            cands
+        },
+    )
+}
+
+/// usize generator in `[lo, hi]`, shrinking toward lo.
+pub fn gen_usize(lo: usize, hi: usize) -> Gen<usize> {
+    gen_i64(lo as i64, hi as i64).map(|v| v as usize)
+}
+
+/// f64 generator in `[lo, hi)`, shrinking toward lo.
+pub fn gen_f64(lo: f64, hi: f64) -> Gen<f64> {
+    assert!(lo < hi);
+    Gen::new(
+        move |rng| lo + (hi - lo) * rng.f64(),
+        move |&v| {
+            if (v - lo).abs() > 1e-12 {
+                vec![lo, lo + (v - lo) / 2.0]
+            } else {
+                Vec::new()
+            }
+        },
+    )
+}
+
+/// Vector generator with length in `len_range`; shrinks by halving the
+/// vector and by shrinking single elements.
+pub fn gen_vec<T: Clone + 'static>(
+    elem: Gen<T>,
+    len_lo: usize,
+    len_hi: usize,
+) -> Gen<Vec<T>> {
+    assert!(len_lo <= len_hi);
+    let elem = std::rc::Rc::new(elem);
+    let elem2 = std::rc::Rc::clone(&elem);
+    Gen::new(
+        move |rng| {
+            let len = rng.int_in(len_lo as i64, len_hi as i64) as usize;
+            (0..len).map(|_| elem.draw(rng)).collect()
+        },
+        move |v: &Vec<T>| {
+            let mut cands = Vec::new();
+            if v.len() > len_lo {
+                // Drop the back half, drop one element.
+                let keep = (v.len() / 2).max(len_lo);
+                cands.push(v[..keep].to_vec());
+                let mut minus_one = v.clone();
+                minus_one.pop();
+                cands.push(minus_one);
+            }
+            // Shrink the first shrinkable element.
+            for (i, x) in v.iter().enumerate().take(8) {
+                for sx in elem2.shrinks(x) {
+                    let mut w = v.clone();
+                    w[i] = sx;
+                    cands.push(w);
+                    break;
+                }
+            }
+            cands
+        },
+    )
+}
+
+/// Pair generator.
+pub fn gen_pair<A: Clone + 'static, B: Clone + 'static>(
+    ga: Gen<A>,
+    gb: Gen<B>,
+) -> Gen<(A, B)> {
+    let ga = std::rc::Rc::new(ga);
+    let gb = std::rc::Rc::new(gb);
+    let (ga2, gb2) = (std::rc::Rc::clone(&ga), std::rc::Rc::clone(&gb));
+    Gen::new(
+        move |rng| (ga.draw(rng), gb.draw(rng)),
+        move |(a, b)| {
+            let mut cands: Vec<(A, B)> = Vec::new();
+            for sa in ga2.shrinks(a) {
+                cands.push((sa, b.clone()));
+            }
+            for sb in gb2.shrinks(b) {
+                cands.push((a.clone(), sb));
+            }
+            cands
+        },
+    )
+}
+
+/// Property-run configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_steps: usize,
+}
+
+/// Default configuration: override the seed with `DIRC_PROP_SEED`.
+pub fn cases(n: usize) -> PropConfig {
+    let seed = std::env::var("DIRC_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xD12C_u64 ^ 0x5EED);
+    PropConfig { cases: n, seed, max_shrink_steps: 200 }
+}
+
+/// Run `prop` against `cfg.cases` generated inputs; on failure, shrink and
+/// panic with the minimal counterexample found.
+pub fn forall<T: Clone + Debug + 'static>(
+    cfg: PropConfig,
+    gen: Gen<T>,
+    prop: impl Fn(&T) -> bool,
+) {
+    let mut rng = Pcg::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let input = gen.draw(&mut rng);
+        if prop(&input) {
+            continue;
+        }
+        // Shrink.
+        let mut best = input;
+        let mut steps = 0;
+        'outer: while steps < cfg.max_shrink_steps {
+            for cand in gen.shrinks(&best) {
+                steps += 1;
+                if !prop(&cand) {
+                    best = cand;
+                    continue 'outer;
+                }
+                if steps >= cfg.max_shrink_steps {
+                    break;
+                }
+            }
+            break;
+        }
+        panic!(
+            "property failed (case {case}, seed {:#x}); shrunk counterexample:\n{best:?}",
+            cfg.seed
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall(cases(100), gen_i64(-100, 100), |&v| v >= -100 && v <= 100);
+    }
+
+    #[test]
+    fn failing_property_shrinks() {
+        // Property "v < 50" fails for v >= 50; the shrinker should find a
+        // counterexample well below the max.
+        let result = std::panic::catch_unwind(|| {
+            forall(cases(200), gen_i64(0, 1000), |&v| v < 50);
+        });
+        let msg = match result {
+            Err(e) => *e.downcast::<String>().expect("panic payload"),
+            Ok(()) => panic!("property should have failed"),
+        };
+        assert!(msg.contains("counterexample"), "{msg}");
+        let val: i64 = msg
+            .rsplit_once('\n')
+            .map(|(_, last)| last.trim().parse().expect("numeric counterexample"))
+            .unwrap();
+        assert!((50..=75).contains(&val), "poorly shrunk: {val}");
+    }
+
+    #[test]
+    fn vec_gen_respects_len_bounds() {
+        let g = gen_vec(gen_i64(0, 9), 2, 17);
+        let mut rng = Pcg::new(1);
+        for _ in 0..100 {
+            let v = g.draw(&mut rng);
+            assert!((2..=17).contains(&v.len()));
+            assert!(v.iter().all(|&x| (0..=9).contains(&x)));
+        }
+    }
+
+    #[test]
+    fn vec_shrinks_reduce_length() {
+        let g = gen_vec(gen_i64(0, 9), 0, 32);
+        let v: Vec<i64> = (0..16).map(|i| i % 10).collect();
+        let shrinks = g.shrinks(&v);
+        assert!(shrinks.iter().any(|s| s.len() < v.len()));
+    }
+
+    #[test]
+    fn pair_gen_draws_and_shrinks() {
+        let g = gen_pair(gen_i64(0, 10), gen_f64(0.0, 1.0));
+        let mut rng = Pcg::new(2);
+        let (a, b) = g.draw(&mut rng);
+        assert!((0..=10).contains(&a));
+        assert!((0.0..1.0).contains(&b));
+        let shrinks = g.shrinks(&(5, 0.5));
+        assert!(!shrinks.is_empty());
+    }
+}

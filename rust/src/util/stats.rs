@@ -1,0 +1,187 @@
+//! Summary statistics shared by the bench harness, the evaluator and the
+//! coordinator's latency metrics.
+
+/// Online mean/variance accumulator (Welford).
+#[derive(Debug, Clone, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
+/// Batch summary over a sample: min/max/mean/median/p95/p99.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub min: f64,
+    pub max: f64,
+    pub mean: f64,
+    pub median: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub stddev: f64,
+}
+
+impl Summary {
+    pub fn of(samples: &[f64]) -> Summary {
+        assert!(!samples.is_empty(), "Summary::of on empty sample");
+        let mut sorted: Vec<f64> = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).expect("NaN in samples"));
+        let mut w = Welford::default();
+        for &x in samples {
+            w.push(x);
+        }
+        Summary {
+            n: sorted.len(),
+            min: sorted[0],
+            max: *sorted.last().unwrap(),
+            mean: w.mean(),
+            median: percentile_sorted(&sorted, 50.0),
+            p95: percentile_sorted(&sorted, 95.0),
+            p99: percentile_sorted(&sorted, 99.0),
+            stddev: w.stddev(),
+        }
+    }
+}
+
+/// Linear-interpolated percentile of a pre-sorted sample.
+pub fn percentile_sorted(sorted: &[f64], pct: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let rank = (pct / 100.0) * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = rank - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// Histogram with fixed bucket width, for latency distributions.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    bucket_width: f64,
+    buckets: Vec<u64>,
+    overflow: u64,
+    count: u64,
+}
+
+impl Histogram {
+    pub fn new(bucket_width: f64, buckets: usize) -> Self {
+        assert!(bucket_width > 0.0 && buckets > 0);
+        Histogram { bucket_width, buckets: vec![0; buckets], overflow: 0, count: 0 }
+    }
+
+    pub fn record(&mut self, x: f64) {
+        self.count += 1;
+        let idx = (x / self.bucket_width) as usize;
+        if x < 0.0 || idx >= self.buckets.len() {
+            self.overflow += 1;
+        } else {
+            self.buckets[idx] += 1;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Approximate percentile from buckets (upper bucket edge).
+    pub fn percentile(&self, pct: f64) -> f64 {
+        let target = ((pct / 100.0) * self.count as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return (i + 1) as f64 * self.bucket_width;
+            }
+        }
+        f64::INFINITY
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_naive() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let mut w = Welford::default();
+        for &x in &xs {
+            w.push(x);
+        }
+        assert!((w.mean() - 50.5).abs() < 1e-9);
+        let naive_var = xs.iter().map(|x| (x - 50.5).powi(2)).sum::<f64>() / 99.0;
+        assert!((w.variance() - naive_var).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_of_known_sample() {
+        let xs: Vec<f64> = (0..=100).map(|i| i as f64).collect();
+        let s = Summary::of(&xs);
+        assert_eq!(s.min, 0.0);
+        assert_eq!(s.max, 100.0);
+        assert_eq!(s.median, 50.0);
+        assert_eq!(s.p95, 95.0);
+        assert!((s.mean - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = vec![0.0, 10.0];
+        assert_eq!(percentile_sorted(&xs, 50.0), 5.0);
+        assert_eq!(percentile_sorted(&xs, 0.0), 0.0);
+        assert_eq!(percentile_sorted(&xs, 100.0), 10.0);
+    }
+
+    #[test]
+    fn histogram_percentile() {
+        let mut h = Histogram::new(1.0, 100);
+        for i in 0..100 {
+            h.record(i as f64 + 0.5);
+        }
+        let p50 = h.percentile(50.0);
+        assert!((49.0..=51.0).contains(&p50), "{p50}");
+        assert_eq!(h.count(), 100);
+    }
+
+    #[test]
+    fn histogram_overflow() {
+        let mut h = Histogram::new(1.0, 4);
+        h.record(10.0);
+        h.record(-1.0);
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.percentile(99.0), f64::INFINITY);
+    }
+}

@@ -1,0 +1,191 @@
+//! Cross-layer integration tests: PJRT runtime x DIRC simulator x
+//! coordinator. These need `make artifacts` to have run; they skip (with
+//! a note) when artifacts are absent so `cargo test` stays meaningful in
+//! a cold checkout.
+
+use std::sync::Arc;
+
+use dirc_rag::coordinator::{
+    Coordinator, CoordinatorConfig, Engine, Query, ServingEngine, SimEngine,
+};
+use dirc_rag::data::text::{bow_batch, TextCorpus, TextParams, HASH_BUCKETS};
+use dirc_rag::data::{SynthDataset, SynthParams};
+use dirc_rag::dirc::chip::ChipConfig;
+use dirc_rag::retrieval::quant::{quantize, QuantScheme, Quantized};
+use dirc_rag::retrieval::score::Metric;
+use dirc_rag::runtime::PjrtRuntime;
+use dirc_rag::util::rng::Pcg;
+
+fn runtime() -> Option<Arc<PjrtRuntime>> {
+    let dir = dirc_rag::runtime::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping integration test: artifacts not built");
+        return None;
+    }
+    Some(Arc::new(PjrtRuntime::new(dir).expect("runtime")))
+}
+
+fn small_db(n: usize, dim: usize, seed: u64) -> Quantized {
+    let mut rng = Pcg::new(seed);
+    let fp = dirc_rag::retrieval::quant::random_unit_rows(n, dim, &mut rng);
+    quantize(&fp, n, dim, QuantScheme::Int8)
+}
+
+fn test_chip_cfg(dim: usize) -> ChipConfig {
+    ChipConfig {
+        cores: 4,
+        map_points: 60,
+        ..ChipConfig::paper_default(dim, Metric::Cosine)
+    }
+}
+
+/// The serving engine (PJRT scores + correction replay) must produce
+/// *identical* rankings to the pure simulator given the same rng stream.
+#[test]
+fn serving_engine_matches_sim_engine_exactly() {
+    let Some(rt) = runtime() else { return };
+    let db = small_db(700, 512, 1);
+    let sim = SimEngine::new(test_chip_cfg(512), &db);
+    let srv = ServingEngine::new(test_chip_cfg(512), &db, rt).expect("serving engine");
+
+    for qseed in 0..10u64 {
+        let mut rng = Pcg::new(100 + qseed);
+        let q: Vec<i8> = (0..512).map(|_| rng.int_in(-128, 127) as i8).collect();
+        let mut r1 = Pcg::new(7 + qseed);
+        let mut r2 = Pcg::new(7 + qseed);
+        let (top_sim, stats_sim) = sim.retrieve(&q, 10, &mut r1);
+        let (top_srv, stats_srv) = srv.retrieve(&q, 10, &mut r2);
+        let ids_sim: Vec<u64> = top_sim.iter().map(|d| d.doc_id).collect();
+        let ids_srv: Vec<u64> = top_srv.iter().map(|d| d.doc_id).collect();
+        assert_eq!(ids_sim, ids_srv, "query {qseed}");
+        for (a, b) in top_sim.iter().zip(top_srv.iter()) {
+            assert!((a.score - b.score).abs() < 1e-9, "query {qseed}");
+        }
+        assert_eq!(stats_sim.sense.flips, stats_srv.sense.flips);
+    }
+}
+
+/// Clean-path equivalence: PJRT block scores == Rust reference scores for
+/// every core block of a chip-sized database.
+#[test]
+fn pjrt_blocks_match_reference_scores() {
+    let Some(rt) = runtime() else { return };
+    let (n, dim) = (1000, 512);
+    let db = small_db(n, dim, 2);
+    let mut rng = Pcg::new(3);
+    let q: Vec<i8> = (0..dim).map(|_| rng.int_in(-128, 127) as i8).collect();
+
+    let art = rt.manifest().best_block("mips", 250, dim).unwrap().name.clone();
+    for c in 0..4 {
+        let lo = c * 250;
+        let hi = (lo + 250).min(n);
+        let block = &db.values[lo * dim..hi * dim];
+        let resident = rt.upload_db(&art, block, hi - lo, dim, None).unwrap();
+        let got = rt.mips_scores(&resident, &q).unwrap();
+        let want = dirc_rag::retrieval::score::mips_scores(block, hi - lo, dim, &q);
+        for i in 0..(hi - lo) {
+            assert_eq!(got[i] as i64, want[i], "core {c} doc {i}");
+        }
+    }
+}
+
+/// Full coordinator pass over token queries: every request answered, ids
+/// valid, metrics consistent.
+#[test]
+fn coordinator_serves_token_queries() {
+    let Some(rt) = runtime() else { return };
+    let corpus = TextCorpus::generate(&TextParams {
+        n_docs: 256,
+        n_queries: 24,
+        ..TextParams::default()
+    });
+    let dim = rt.artifact("embed_mlp_b32").unwrap().outputs[0].shape[1];
+    let mut docs_fp = Vec::new();
+    for chunk in corpus.docs.chunks(32) {
+        let mut feats = bow_batch(chunk);
+        feats.resize(32 * HASH_BUCKETS, 0.0);
+        let emb = rt.embed(&feats, 32).unwrap();
+        docs_fp.extend_from_slice(&emb[..chunk.len() * dim]);
+    }
+    let db = quantize(&docs_fp, 256, dim, QuantScheme::Int8);
+    let engine = Arc::new(ServingEngine::new(test_chip_cfg(dim), &db, Arc::clone(&rt)).unwrap());
+    let coord = Coordinator::start(engine, rt, CoordinatorConfig {
+        workers: 2,
+        ..CoordinatorConfig::default()
+    });
+
+    let mut rxs = Vec::new();
+    for q in 0..24 {
+        let (id, rx) = coord
+            .submit(Query::Tokens(corpus.queries[q].clone()), 5)
+            .unwrap();
+        rxs.push((id, rx));
+    }
+    let mut seen = std::collections::HashSet::new();
+    for (id, rx) in rxs {
+        let resp = rx.recv().expect("response");
+        assert_eq!(resp.id, id);
+        assert_eq!(resp.topk.len(), 5);
+        assert!(resp.topk.iter().all(|d| (d.doc_id as usize) < 256));
+        assert!(resp.stats.latency_s > 0.0);
+        seen.insert(id);
+    }
+    assert_eq!(seen.len(), 24);
+    let snap = coord.shutdown();
+    assert_eq!(snap.served, 24);
+    assert_eq!(snap.errors, 0);
+}
+
+/// Pre-embedded queries bypass the embedder and still serve.
+#[test]
+fn coordinator_serves_embedding_queries() {
+    let Some(rt) = runtime() else { return };
+    let dim = 512;
+    let db = small_db(300, dim, 4);
+    let engine = Arc::new(ServingEngine::new(test_chip_cfg(dim), &db, Arc::clone(&rt)).unwrap());
+    let coord = Coordinator::start(engine, rt, CoordinatorConfig::default());
+    let mut rng = Pcg::new(5);
+    let emb: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+    let (_, rx) = coord.submit(Query::Embedding(emb), 3).unwrap();
+    let resp = rx.recv().unwrap();
+    assert_eq!(resp.topk.len(), 3);
+    assert_eq!(resp.embed_s, 0.0);
+    coord.shutdown();
+}
+
+/// Retrieval quality end-to-end: the simulator engine on a calibrated
+/// dataset must beat chance by a wide margin, and detection + remap must
+/// hold precision near the clean reference at the nominal corner.
+#[test]
+fn sim_engine_preserves_precision_at_nominal_corner() {
+    let params = SynthParams {
+        topics: 32,
+        doc_noise: 0.6,
+        rels_per_query: 1,
+        extra_rel_range: 1,
+        query_noise: 0.5,
+        confuse: 0.8,
+        aniso: 1.0,
+        seed: 11,
+    };
+    let ds = SynthDataset::generate(1500, 60, 512, &params);
+    let db = quantize(&ds.docs, 1500, 512, QuantScheme::Int8);
+    let chip = dirc_rag::dirc::chip::DircChip::build(test_chip_cfg(512), &db);
+
+    let clean = dirc_rag::eval::evaluate(60, &ds.qrels, |qi| {
+        let q = quantize(ds.query(qi), 1, 512, QuantScheme::Int8);
+        chip.clean_query(&q.values, 5)
+    });
+    let mut rng = Pcg::new(13);
+    let noisy = dirc_rag::eval::evaluate(60, &ds.qrels, |qi| {
+        let q = quantize(ds.query(qi), 1, 512, QuantScheme::Int8);
+        chip.query(&q.values, 5, &mut rng).0
+    });
+    assert!(clean.p_at_1 > 0.5, "dataset too hard: {}", clean.p_at_1);
+    assert!(
+        noisy.p_at_1 >= clean.p_at_1 - 0.05,
+        "nominal-corner errors must not dent precision: clean {} noisy {}",
+        clean.p_at_1,
+        noisy.p_at_1
+    );
+}

@@ -1,0 +1,283 @@
+//! System-level property tests (the proptest-style suite): invariants of
+//! routing/striping, batching, detection, correction exactness and
+//! quantisation, over randomly generated configurations.
+
+use dirc_rag::coordinator::batcher::{BatchPolicy, Batcher};
+use dirc_rag::dirc::chip::{ChipConfig, DircChip};
+use dirc_rag::dirc::detect::DSumLut;
+use dirc_rag::dirc::macro_::{geometric_walk, DircMacro, MacroConfig};
+use dirc_rag::dirc::remap::{Layout, RemapStrategy, SLOTS_PER_CELL};
+use dirc_rag::dirc::variation::VariationModel;
+use dirc_rag::dirc::detect::ResensePolicy;
+use dirc_rag::retrieval::quant::{quantize, QuantScheme};
+use dirc_rag::retrieval::score::Metric;
+use dirc_rag::util::prop::{cases, forall, gen_pair, gen_usize};
+use dirc_rag::util::rng::Pcg;
+
+fn rand_docs(n: usize, dim: usize, bits: usize, seed: u64) -> Vec<i8> {
+    let mut rng = Pcg::new(seed);
+    let lo = -(1i64 << (bits - 1));
+    let hi = (1i64 << (bits - 1)) - 1;
+    (0..n * dim).map(|_| rng.int_in(lo, hi) as i8).collect()
+}
+
+/// Striping invariant: every (doc, element) maps to exactly one physical
+/// (column, word, row) and back, for random occupancy/dim/precision.
+#[test]
+fn prop_macro_layout_is_injective() {
+    let map = VariationModel::default().extract_error_map(30, 1);
+    forall(
+        cases(12),
+        gen_pair(gen_usize(1, 4), gen_usize(0, 2)),
+        |&(fold, bits_sel)| {
+            let bits = if bits_sel == 0 { 4 } else { 8 };
+            let dim = fold * 128;
+            let cfg = MacroConfig {
+                bits,
+                dim,
+                detect: false,
+                remap: RemapStrategy::ErrorAware,
+                resense: ResensePolicy::default(),
+            };
+            let cap = cfg.capacity_docs();
+            let n = (cap / 3).max(1);
+            let docs = rand_docs(n, dim, bits, 7);
+            let m = DircMacro::program(cfg, &docs, n, &map);
+            // Round-trip through flips: flipping bit b of (doc, elem) and
+            // materialising must change exactly that value.
+            let mut rng = Pcg::new(9);
+            for _ in 0..50 {
+                let doc = rng.index(n) as u32;
+                let elem = rng.index(dim) as u32;
+                let bit = rng.index(bits) as u8;
+                let val = docs[doc as usize * dim + elem as usize];
+                let flip = dirc_rag::dirc::macro_::Flip {
+                    doc,
+                    elem,
+                    bit,
+                    was_one: (val >> bit) & 1 != 0,
+                };
+                let out = m.apply_flips_to_matrix(&[flip]);
+                let mut diff = 0;
+                for (i, (&a, &b)) in out.iter().zip(docs.iter()).enumerate() {
+                    if a != b {
+                        diff += 1;
+                        if i != doc as usize * dim + elem as usize {
+                            return false;
+                        }
+                    }
+                }
+                if diff != 1 {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
+
+/// Correction exactness over random flip sets: clean + corrections ==
+/// rescoring the flipped matrix, for arbitrary (n, dim, query).
+#[test]
+fn prop_score_corrections_exact() {
+    let map = VariationModel { corner: 4.0, ..VariationModel::default() }
+        .extract_error_map(60, 3);
+    forall(cases(10), gen_usize(1, 6), |&groups| {
+        let dim = 128;
+        let n = groups * 64;
+        let docs = rand_docs(n, dim, 8, groups as u64);
+        let cfg = MacroConfig {
+            bits: 8,
+            dim,
+            detect: false,
+            remap: RemapStrategy::Interleaved,
+            resense: ResensePolicy::default(),
+        };
+        let m = DircMacro::program(cfg, &docs, n, &map);
+        let mut rng = Pcg::new(groups as u64 + 100);
+        let q: Vec<i8> = (0..dim).map(|_| rng.int_in(-128, 127) as i8).collect();
+        let (flips, _) = m.sense(&mut rng);
+        let mut fast = m.clean_scores(&q);
+        for (doc, dq) in m.score_corrections(&flips, &q) {
+            fast[doc as usize] += dq;
+        }
+        let flipped = m.apply_flips_to_matrix(&flips);
+        (0..n).all(|d| {
+            let want: i64 = (0..dim).map(|j| flipped[d * dim + j] as i64 * q[j] as i64).sum();
+            fast[d] == want
+        })
+    });
+}
+
+/// Detection soundness: a plane with an odd number of flips is always
+/// caught (sum cannot be preserved).
+#[test]
+fn prop_odd_flip_counts_always_caught() {
+    forall(
+        cases(200),
+        gen_pair(gen_usize(0, 64), gen_usize(0, 64)),
+        |&(up, down)| {
+            let lut = DSumLut::precompute(16, 8, |_, _| 64);
+            let outcome = lut.classify(3, 2, up as u16, down as u16);
+            if (up + down) % 2 == 1 {
+                outcome == dirc_rag::dirc::detect::DetectOutcome::Caught
+            } else if up + down == 0 {
+                outcome == dirc_rag::dirc::detect::DetectOutcome::Clean
+            } else if up == down {
+                outcome == dirc_rag::dirc::detect::DetectOutcome::Escaped
+            } else {
+                outcome == dirc_rag::dirc::detect::DetectOutcome::Caught
+            }
+        },
+    );
+}
+
+/// Batcher conservation: across any push/flush interleaving, every item
+/// comes out exactly once and batch sizes respect the policy.
+#[test]
+fn prop_batcher_conserves_items() {
+    forall(cases(60), gen_usize(1, 300), |&n| {
+        let policy = BatchPolicy {
+            sizes: vec![1, 32],
+            max_wait: std::time::Duration::from_secs(3600),
+        };
+        let mut b = Batcher::new(policy);
+        let mut out: Vec<usize> = Vec::new();
+        for i in 0..n {
+            b.push(i);
+            if b.should_flush() {
+                let batch = b.take_batch();
+                if batch.is_empty() || batch.len() > 32 {
+                    return false;
+                }
+                out.extend(batch);
+            }
+        }
+        while !b.is_empty() {
+            out.extend(b.take_batch());
+        }
+        out.sort_unstable();
+        out == (0..n).collect::<Vec<_>>()
+    });
+}
+
+/// Geometric walk == Bernoulli stream, statistically: mean count within
+/// 5 sigma for random (len, p).
+#[test]
+fn prop_geometric_walk_unbiased() {
+    forall(
+        cases(20),
+        gen_pair(gen_usize(100, 20_000), gen_usize(1, 200)),
+        |&(len, pmil)| {
+            let p = pmil as f64 / 2000.0; // up to 10%
+            let mut rng = Pcg::new((len * pmil) as u64);
+            let reps = 40;
+            let mut total = 0usize;
+            for _ in 0..reps {
+                total += geometric_walk(len, p, &mut rng).len();
+            }
+            let mean = total as f64 / reps as f64;
+            let want = len as f64 * p;
+            let sigma = (len as f64 * p * (1.0 - p) / reps as f64).sqrt();
+            (mean - want).abs() < 5.0 * sigma + 1.0
+        },
+    );
+}
+
+/// Chip routing: global top-k ids are always valid, unique, sorted by
+/// score, for random db sizes and k.
+#[test]
+fn prop_chip_topk_wellformed() {
+    let build_cache: std::cell::RefCell<Option<(usize, DircChip)>> =
+        std::cell::RefCell::new(None);
+    forall(cases(8), gen_pair(gen_usize(100, 900), gen_usize(1, 20)), |&(n, k)| {
+        {
+            let mut cache = build_cache.borrow_mut();
+            let rebuild = !matches!(&*cache, Some((cn, _)) if *cn == n);
+            if rebuild {
+                let docs = rand_docs(n, 128, 8, n as u64);
+                let fp: Vec<f32> = docs.iter().map(|&v| v as f32 / 128.0).collect();
+                let db = quantize(&fp, n, 128, QuantScheme::Int8);
+                let cfg = ChipConfig {
+                    cores: 4,
+                    map_points: 25,
+                    ..ChipConfig::paper_default(128, Metric::Mips)
+                };
+                *cache = Some((n, DircChip::build(cfg, &db)));
+            }
+        }
+        let cache = build_cache.borrow();
+        let chip = &cache.as_ref().unwrap().1;
+        let mut rng = Pcg::new(k as u64);
+        let q: Vec<i8> = (0..128).map(|_| rng.int_in(-128, 127) as i8).collect();
+        let (top, stats) = chip.query(&q, k, &mut rng);
+        if top.len() != k.min(n) {
+            return false;
+        }
+        let mut ids: Vec<u64> = top.iter().map(|d| d.doc_id).collect();
+        if !ids.iter().all(|&i| (i as usize) < n) {
+            return false;
+        }
+        ids.sort_unstable();
+        ids.dedup();
+        if ids.len() != top.len() {
+            return false;
+        }
+        if !top.windows(2).all(|w| w[0].score >= w[1].score) {
+            return false;
+        }
+        stats.docs_scored as usize == n
+    });
+}
+
+/// Quantisation bounds for arbitrary scale data.
+#[test]
+fn prop_quantisation_in_range_any_scale() {
+    forall(cases(40), gen_pair(gen_usize(1, 64), gen_usize(0, 12)), |&(n, mag)| {
+        let dim = 32;
+        let scale = 10f32.powi(mag as i32 - 6);
+        let mut rng = Pcg::new((n + mag) as u64);
+        let x: Vec<f32> = (0..n * dim).map(|_| rng.normal() as f32 * scale).collect();
+        for scheme in [QuantScheme::Int8, QuantScheme::Int4] {
+            let q = quantize(&x, n, dim, scheme);
+            if !q
+                .values
+                .iter()
+                .all(|&v| (v as i32) >= scheme.qmin() && (v as i32) <= scheme.qmax())
+            {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+/// Remap bijection for arbitrary random seeds and both precisions
+/// (system-level re-statement of the module-level property).
+#[test]
+fn prop_remap_bijective_all_strategies() {
+    let map = VariationModel::default().extract_error_map(30, 5);
+    forall(cases(30), gen_pair(gen_usize(0, 1_000_000), gen_usize(0, 1)), |&(seed, b)| {
+        let bits = if b == 0 { 4 } else { 8 };
+        for strat in [
+            RemapStrategy::Interleaved,
+            RemapStrategy::Random { seed: seed as u64 },
+            RemapStrategy::ErrorAware,
+        ] {
+            let l = Layout::build(bits, strat, &map);
+            let mut seen = std::collections::HashSet::new();
+            for w in 0..l.words {
+                for bit in 0..l.bits {
+                    let s = l.slot(w, bit);
+                    if !seen.insert((s.pos, s.msb)) || l.word_bit(s) != (w, bit) {
+                        return false;
+                    }
+                }
+            }
+            if seen.len() != SLOTS_PER_CELL {
+                return false;
+            }
+        }
+        true
+    });
+}
