@@ -1,0 +1,113 @@
+//! Parallel sharded query execution: thread-count scaling of the chip's
+//! per-core job fan-out, plus the queries × cores batch matrix on the
+//! shared thread pool. Proves the parallel path buys near-linear speedup
+//! while staying bit-identical to the serial walk.
+//!
+//! ```bash
+//! cargo bench --bench parallel_scaling
+//! ```
+
+use std::sync::Arc;
+
+use dirc_rag::bench::{fmt_duration, Bench, Table};
+use dirc_rag::dirc::chip::{ChipConfig, DircChip};
+use dirc_rag::retrieval::quant::{quantize, QuantScheme};
+use dirc_rag::retrieval::score::Metric;
+use dirc_rag::util::pool::ThreadPool;
+use dirc_rag::util::rng::Pcg;
+
+fn main() {
+    // Full 4 MB chip: 8192 docs x 512 dims INT8 on 16 cores.
+    let (n, dim) = (8192usize, 512usize);
+    let mut rng = Pcg::new(1);
+    let fp: Vec<f32> = (0..n * dim).map(|_| rng.normal() as f32 * 0.05).collect();
+    let db = quantize(&fp, n, dim, QuantScheme::Int8);
+    let cfg = ChipConfig { map_points: 80, ..ChipConfig::paper_default(dim, Metric::Mips) };
+    let chip = Arc::new(DircChip::build(cfg, &db));
+    let q: Vec<i8> = (0..dim).map(|_| rng.int_in(-128, 127) as i8).collect();
+
+    // Correctness first: the parallel path must be bit-identical to the
+    // serial path before any of the timings below mean anything.
+    {
+        let mut r1 = Pcg::new(9);
+        let mut r2 = Pcg::new(9);
+        let (top_s, stats_s) = chip.query(&q, 10, &mut r1);
+        let (top_p, stats_p) = chip.query_on(&q, 10, &mut r2, 4);
+        assert_eq!(top_s, top_p, "parallel ranking diverged from serial");
+        assert_eq!(stats_s.cycles, stats_p.cycles);
+        assert_eq!(stats_s.sense, stats_p.sense);
+    }
+
+    let mut b = Bench::new();
+    let thread_counts = [1usize, 2, 4, 8, 16];
+    let mut medians: Vec<(usize, f64)> = Vec::new();
+    for &threads in &thread_counts {
+        let r = b.run(&format!("single query (16 cores), {threads} threads"), || {
+            let mut r = Pcg::new(2);
+            chip.query_on(&q, 10, &mut r, threads).1.cycles
+        });
+        medians.push((threads, r.summary.median));
+    }
+
+    // Batch throughput: 32 queries serial vs the queries x cores matrix.
+    let mut qrng = Pcg::new(3);
+    let queries: Vec<Vec<i8>> = (0..32)
+        .map(|_| (0..dim).map(|_| qrng.int_in(-128, 127) as i8).collect())
+        .collect();
+    let serial_batch = b
+        .run("batch of 32 queries, serial loop", || {
+            let mut r = Pcg::new(4);
+            queries
+                .iter()
+                .map(|q| chip.query(q, 10, &mut r).1.cycles)
+                .sum::<u64>()
+        })
+        .summary
+        .median;
+    let pool = ThreadPool::new(4);
+    let matrix_batch = b
+        .run("batch of 32 queries, 4-worker pool (queries x cores matrix)", || {
+            let mut r = Pcg::new(4);
+            DircChip::query_batch(&chip, &pool, &queries, 10, &mut r).len()
+        })
+        .summary
+        .median;
+
+    let base = medians[0].1;
+    let mut t = Table::new(&["threads", "median/query", "speedup vs 1 thread"]);
+    for &(threads, median) in &medians {
+        t.row(&[
+            threads.to_string(),
+            fmt_duration(median),
+            format!("{:.2}x", base / median),
+        ]);
+    }
+    println!("\n=== parallel_scaling: single-query core-shard fan-out ===");
+    t.print();
+    println!(
+        "batch of 32: serial {} vs pooled matrix {} ({:.2}x)",
+        fmt_duration(serial_batch),
+        fmt_duration(matrix_batch),
+        serial_batch / matrix_batch
+    );
+
+    let four = medians
+        .iter()
+        .find(|(threads, _)| *threads == 4)
+        .map(|&(_, m)| m)
+        .unwrap();
+    let speedup = base / four;
+    println!("single-query speedup at 4 threads: {speedup:.2}x");
+    let host_cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+    if host_cores >= 4 {
+        assert!(
+            speedup >= 2.0,
+            "expected >=2x single-query speedup at 4 threads on a {host_cores}-core host, \
+             got {speedup:.2}x"
+        );
+    } else {
+        eprintln!("(host has only {host_cores} cores; skipping the >=2x speedup assertion)");
+    }
+
+    b.report("parallel_scaling");
+}

@@ -1,4 +1,4 @@
-//! Embed-batch assembly.
+//! Embed-batch assembly and the retrieve-side batch drain.
 //!
 //! The AOT embedder artifacts come in fixed batch sizes (1 and 32); the
 //! batcher groups queued token-queries into the largest available batch,
@@ -6,7 +6,16 @@
 //! the deadline — the standard dynamic-batching policy of serving systems
 //! (vLLM-style), applied to the embedding front-end that dominates host
 //! work in DIRC-RAG serving.
+//!
+//! [`recv_batch`] is the *retrieval*-side counterpart: workers block for
+//! one ready query, then greedily drain whatever else is already queued
+//! (never waiting), and hand the whole batch to
+//! [`crate::coordinator::engine::Engine::retrieve_batch`] — which, on a
+//! pooled engine, pipelines it across the DIRC cores as a queries × cores
+//! job matrix instead of one query at a time. Work-conserving by
+//! construction: an empty queue never delays the first query.
 
+use std::sync::mpsc::{Receiver, TryRecvError};
 use std::time::{Duration, Instant};
 
 /// Batching policy.
@@ -100,6 +109,21 @@ impl<T> Batcher<T> {
     }
 }
 
+/// Block for one item, then drain up to `max - 1` more *already-queued*
+/// items without waiting. Returns `None` when the channel is closed and
+/// empty. `max` is clamped to at least 1.
+pub fn recv_batch<T>(rx: &Receiver<T>, max: usize) -> Option<Vec<T>> {
+    let first = rx.recv().ok()?;
+    let mut batch = vec![first];
+    while batch.len() < max.max(1) {
+        match rx.try_recv() {
+            Ok(item) => batch.push(item),
+            Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+        }
+    }
+    Some(batch)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -158,5 +182,38 @@ mod tests {
         let b: Batcher<u32> = Batcher::new(policy(0));
         assert!(!b.should_flush());
         assert!(b.time_to_deadline().is_none());
+    }
+
+    #[test]
+    fn recv_batch_drains_ready_items() {
+        let (tx, rx) = std::sync::mpsc::channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let batch = recv_batch(&rx, 4).unwrap();
+        assert_eq!(batch, vec![0, 1, 2, 3]);
+        let batch = recv_batch(&rx, 100).unwrap();
+        assert_eq!(batch, vec![4, 5, 6, 7, 8, 9]);
+        drop(tx);
+        assert!(recv_batch(&rx, 4).is_none());
+    }
+
+    #[test]
+    fn recv_batch_returns_partial_on_disconnect() {
+        let (tx, rx) = std::sync::mpsc::channel();
+        tx.send(1u32).unwrap();
+        tx.send(2).unwrap();
+        drop(tx);
+        assert_eq!(recv_batch(&rx, 8).unwrap(), vec![1, 2]);
+        assert!(recv_batch(&rx, 8).is_none());
+    }
+
+    #[test]
+    fn recv_batch_clamps_max() {
+        let (tx, rx) = std::sync::mpsc::channel();
+        tx.send(7u32).unwrap();
+        tx.send(8).unwrap();
+        assert_eq!(recv_batch(&rx, 0).unwrap(), vec![7]);
+        drop(tx);
     }
 }

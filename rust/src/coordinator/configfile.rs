@@ -79,16 +79,25 @@ pub fn coordinator_config(cfg: &Config) -> Result<CoordinatorConfig> {
             ),
         },
         scheme: parse_quant(&cfg.str_or("serving.query_quant", "int8"))?,
+        retrieve_batch: cfg.usize_or("serving.retrieve_batch", 8).max(1),
         seed: cfg.int_or("chip.seed", 0xC00D) as u64,
     })
 }
 
-/// Load `configs/default.toml` (if present) layered under `path`.
+/// Load the default config (if present) layered under `path`. The default
+/// is probed relative to the current directory (`configs/` for runs from
+/// `rust/`, `rust/configs/` for runs from the workspace root) and finally
+/// at the crate's own manifest directory, so `cargo run` finds the
+/// shipped operating point from either level.
 pub fn load_layered(path: Option<&str>) -> Result<Config> {
     let mut cfg = Config::default();
-    let default_path = std::path::Path::new("configs/default.toml");
-    if default_path.exists() {
-        cfg = Config::from_file(default_path)?;
+    let candidates = [
+        std::path::PathBuf::from("configs/default.toml"),
+        std::path::PathBuf::from("rust/configs/default.toml"),
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs/default.toml"),
+    ];
+    if let Some(found) = candidates.iter().find(|p| p.exists()) {
+        cfg = Config::from_file(found)?;
     }
     if let Some(p) = path {
         cfg.overlay(&Config::from_file(p)?);
@@ -140,6 +149,12 @@ query_quant = "int4"
         assert_eq!(c.workers, 5);
         assert_eq!(c.batch.sizes, vec![1, 8, 32]);
         assert_eq!(c.scheme, QuantScheme::Int4);
+        assert_eq!(c.retrieve_batch, 8); // default when absent
+
+        let cfg = Config::parse("[serving]\nretrieve_batch = 16").unwrap();
+        assert_eq!(coordinator_config(&cfg).unwrap().retrieve_batch, 16);
+        let cfg = Config::parse("[serving]\nretrieve_batch = 0").unwrap();
+        assert_eq!(coordinator_config(&cfg).unwrap().retrieve_batch, 1);
     }
 
     #[test]

@@ -10,6 +10,15 @@
 //! cycle/energy accounting come from the chip simulator, finalisation
 //! (cosine, top-k merge) runs in Rust. Results are bit-identical to
 //! `SimEngine` by construction — asserted in `rust/tests/`.
+//!
+//! Both engines optionally share a [`ThreadPool`]: with a pool attached,
+//! every per-core shard job — single queries included — runs on the
+//! pool's workers, and [`Engine::retrieve_batch`] pipelines whole batches
+//! as a queries × cores job matrix ([`DircChip::query_batch`]). With or
+//! without a pool, results are bit-identical to the serial path — the
+//! determinism contract documented in [`crate::dirc::chip`].
+
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -18,12 +27,36 @@ use crate::retrieval::quant::Quantized;
 use crate::retrieval::score::{finalize_scores, norm_i8, Metric};
 use crate::retrieval::topk::{ScoredDoc, TopK};
 use crate::runtime::{PjrtRuntime, ResidentDb};
+use crate::util::pool::ThreadPool;
 use crate::util::rng::Pcg;
 
 /// A retrieval engine: quantised query in, ranked documents + hardware
 /// stats out.
 pub trait Engine: Send + Sync {
     fn retrieve(&self, q: &[i8], k: usize, rng: &mut Pcg) -> (Vec<ScoredDoc>, QueryStats);
+
+    /// Retrieve a batch of queries. The contract is bit-identical results
+    /// to calling [`Engine::retrieve`] once per query in order with the
+    /// same `rng`; the default implementation *is* that serial loop.
+    /// Engines with a thread pool override this to pipeline the batch
+    /// across cores.
+    fn retrieve_batch(
+        &self,
+        queries: &[Vec<i8>],
+        k: usize,
+        rng: &mut Pcg,
+    ) -> Vec<(Vec<ScoredDoc>, QueryStats)> {
+        queries.iter().map(|q| self.retrieve(q, k, rng)).collect()
+    }
+
+    /// How many queued queries this engine can usefully absorb in one
+    /// [`Engine::retrieve_batch`] call. The coordinator's workers drain
+    /// at most this many per dispatch — an engine whose batch path is the
+    /// default serial loop reports 1, keeping one-query-per-worker
+    /// fan-out instead of serialising a burst onto a single worker.
+    fn batch_capacity(&self) -> usize {
+        1
+    }
 
     fn dim(&self) -> usize;
 
@@ -32,12 +65,22 @@ pub trait Engine: Send + Sync {
 
 /// Pure-simulator engine.
 pub struct SimEngine {
-    chip: DircChip,
+    chip: Arc<DircChip>,
+    pool: Option<Arc<ThreadPool>>,
 }
 
 impl SimEngine {
     pub fn new(cfg: ChipConfig, db: &Quantized) -> SimEngine {
-        SimEngine { chip: DircChip::build(cfg, db) }
+        Self::with_pool(cfg, db, None)
+    }
+
+    /// Build with a shared thread pool for parallel sharded execution.
+    pub fn with_pool(
+        cfg: ChipConfig,
+        db: &Quantized,
+        pool: Option<Arc<ThreadPool>>,
+    ) -> SimEngine {
+        SimEngine { chip: Arc::new(DircChip::build(cfg, db)), pool }
     }
 
     pub fn chip(&self) -> &DircChip {
@@ -47,7 +90,38 @@ impl SimEngine {
 
 impl Engine for SimEngine {
     fn retrieve(&self, q: &[i8], k: usize, rng: &mut Pcg) -> (Vec<ScoredDoc>, QueryStats) {
-        self.chip.query(q, k, rng)
+        match &self.pool {
+            // A single query is a batch of one: its per-core jobs run on
+            // the shared pool (no per-call thread spawning).
+            Some(pool) => {
+                let batch = [q.to_vec()];
+                let mut out = DircChip::query_batch(&self.chip, pool, &batch, k, rng);
+                out.pop().expect("one result for one query")
+            }
+            None => self.chip.query_on(q, k, rng, 1),
+        }
+    }
+
+    fn retrieve_batch(
+        &self,
+        queries: &[Vec<i8>],
+        k: usize,
+        rng: &mut Pcg,
+    ) -> Vec<(Vec<ScoredDoc>, QueryStats)> {
+        match &self.pool {
+            Some(pool) => DircChip::query_batch(&self.chip, pool, queries, k, rng),
+            None => queries.iter().map(|q| self.retrieve(q, k, rng)).collect(),
+        }
+    }
+
+    fn batch_capacity(&self) -> usize {
+        // The queries x cores matrix absorbs arbitrarily large batches;
+        // without a pool the batch path is the serial loop.
+        if self.pool.is_some() {
+            usize::MAX
+        } else {
+            1
+        }
     }
 
     fn dim(&self) -> usize {
@@ -66,10 +140,11 @@ impl Engine for SimEngine {
 /// execution of a whole-database `mips_plain` block (a single fused XLA
 /// dot), followed by exact flip corrections, metric finalisation and one
 /// top-k in Rust. Compared to the original per-core exec fan-out this cut
-/// retrieve latency ~14x (EXPERIMENTS.md §Perf).
+/// retrieve latency ~14x (EXPERIMENTS.md §Perf). With a pool attached,
+/// the sense pass shards across cores in parallel.
 pub struct ServingEngine {
-    chip: DircChip,
-    runtime: std::sync::Arc<PjrtRuntime>,
+    chip: Arc<DircChip>,
+    runtime: Arc<PjrtRuntime>,
     /// The whole database, resident on the PJRT device.
     block: ResidentDb,
     /// Stored norms (all docs, for cosine finalisation).
@@ -77,6 +152,7 @@ pub struct ServingEngine {
     /// Doc-id base per core (for flip corrections).
     bases: Vec<u64>,
     metric: Metric,
+    pool: Option<Arc<ThreadPool>>,
 }
 
 impl ServingEngine {
@@ -85,10 +161,20 @@ impl ServingEngine {
     pub fn new(
         cfg: ChipConfig,
         db: &Quantized,
-        runtime: std::sync::Arc<PjrtRuntime>,
+        runtime: Arc<PjrtRuntime>,
+    ) -> Result<ServingEngine> {
+        Self::with_pool(cfg, db, runtime, None)
+    }
+
+    /// Build with a shared thread pool for the parallel sense pass.
+    pub fn with_pool(
+        cfg: ChipConfig,
+        db: &Quantized,
+        runtime: Arc<PjrtRuntime>,
+        pool: Option<Arc<ThreadPool>>,
     ) -> Result<ServingEngine> {
         let metric = cfg.metric;
-        let chip = DircChip::build(cfg, db);
+        let chip = Arc::new(DircChip::build(cfg, db));
         let artifact = runtime
             .manifest()
             .best_block("mips_plain", db.n.max(1), db.dim)?
@@ -106,6 +192,7 @@ impl ServingEngine {
             norms: db.norms.clone(),
             bases,
             metric,
+            pool,
         })
     }
 
@@ -122,8 +209,12 @@ impl Engine for ServingEngine {
     fn retrieve(&self, q: &[i8], k: usize, rng: &mut Pcg) -> (Vec<ScoredDoc>, QueryStats) {
         let q_norm = norm_i8(q);
 
-        // Hardware pass: sensing + accounting (no functional compute).
-        let (per_core_flips, stats) = self.chip.sense_pass(k, rng);
+        // Hardware pass: sensing + accounting (no functional compute),
+        // sharded across cores on the shared pool when one is attached.
+        let (per_core_flips, stats) = match &self.pool {
+            Some(pool) => DircChip::sense_pass_pool(&self.chip, pool, k, rng),
+            None => self.chip.sense_pass(k, rng),
+        };
 
         // Functional pass: one PJRT execution for the whole database.
         let ips = self
@@ -193,6 +284,47 @@ mod tests {
         assert!(stats.latency_s > 0.0);
         assert_eq!(eng.n_docs(), 300);
         assert_eq!(eng.dim(), 128);
+    }
+
+    #[test]
+    fn pooled_engine_matches_serial_engine() {
+        let q = db(320, 128, 3);
+        let serial = SimEngine::new(cfg(128, 4), &q);
+        let pool = Arc::new(ThreadPool::new(4));
+        let pooled = SimEngine::with_pool(cfg(128, 4), &q, Some(pool));
+        for seed in 0..4u64 {
+            let mut rng = Pcg::new(50 + seed);
+            let qv: Vec<i8> = (0..128).map(|_| rng.int_in(-128, 127) as i8).collect();
+            let mut r1 = Pcg::new(seed);
+            let mut r2 = Pcg::new(seed);
+            let (t1, s1) = serial.retrieve(&qv, 7, &mut r1);
+            let (t2, s2) = pooled.retrieve(&qv, 7, &mut r2);
+            assert_eq!(t1, t2);
+            assert_eq!(s1.sense, s2.sense);
+            assert_eq!(s1.cycles, s2.cycles);
+        }
+    }
+
+    #[test]
+    fn batch_matches_serial_stream() {
+        let q = db(300, 128, 5);
+        let pool = Arc::new(ThreadPool::new(3));
+        let pooled = SimEngine::with_pool(cfg(128, 4), &q, Some(pool));
+        let serial = SimEngine::new(cfg(128, 4), &q);
+        let mut qrng = Pcg::new(9);
+        let queries: Vec<Vec<i8>> = (0..9)
+            .map(|_| (0..128).map(|_| qrng.int_in(-128, 127) as i8).collect())
+            .collect();
+        let mut r1 = Pcg::new(77);
+        let mut r2 = Pcg::new(77);
+        let want: Vec<_> = queries.iter().map(|q| serial.retrieve(q, 5, &mut r1)).collect();
+        let got = pooled.retrieve_batch(&queries, 5, &mut r2);
+        assert_eq!(got.len(), want.len());
+        for (qi, ((gt, gs), (wt, ws))) in got.iter().zip(want.iter()).enumerate() {
+            assert_eq!(gt, wt, "query {qi}");
+            assert_eq!(gs.sense, ws.sense, "query {qi}");
+            assert_eq!(gs.cycles, ws.cycles, "query {qi}");
+        }
     }
 
     // ServingEngine vs SimEngine equivalence lives in rust/tests/

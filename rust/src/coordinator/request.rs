@@ -28,7 +28,10 @@ pub struct Response {
     pub stats: QueryStats,
     /// Host wall-clock: embed time (s), shared across the batch.
     pub embed_s: f64,
-    /// Host wall-clock: retrieval compute (s).
+    /// Host wall-clock: retrieval compute (s). When a worker dispatches a
+    /// drained batch through `Engine::retrieve_batch`, this is the batch
+    /// wall-clock divided evenly across its responses, not a per-query
+    /// measurement.
     pub retrieve_s: f64,
     /// End-to-end host latency from submission (s).
     pub total_s: f64,

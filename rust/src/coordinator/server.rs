@@ -36,6 +36,14 @@ pub struct CoordinatorConfig {
     pub batch: BatchPolicy,
     /// Quantisation applied to query embeddings (must match the DB).
     pub scheme: QuantScheme,
+    /// Max queries a retrieval worker drains per dispatch, further capped
+    /// by [`Engine::batch_capacity`]. Only engines whose batch path
+    /// actually pipelines (a pooled `SimEngine`: queries × cores job
+    /// matrix) absorb more than one; engines with a serial batch path
+    /// (including `ServingEngine`, whose PJRT execution is one blocking
+    /// FFI call per query) report capacity 1 and keep one-query-per-worker
+    /// fan-out. 1 forces strict one-at-a-time dispatch everywhere.
+    pub retrieve_batch: usize,
     pub seed: u64,
 }
 
@@ -45,6 +53,7 @@ impl Default for CoordinatorConfig {
             workers: crate::util::pool::default_threads().min(4),
             batch: BatchPolicy::default(),
             scheme: QuantScheme::Int8,
+            retrieve_batch: 8,
             seed: 0xC00D,
         }
     }
@@ -109,10 +118,11 @@ impl Coordinator {
             let work_rx = Arc::clone(&work_rx);
             let metrics2 = Arc::clone(&metrics);
             let seed = cfg.seed ^ (w as u64) << 32;
+            let batch_max = cfg.retrieve_batch.max(1);
             threads.push(
                 std::thread::Builder::new()
                     .name(format!("dirc-worker-{w}"))
-                    .spawn(move || worker_loop(work_rx, engine, metrics2, seed))
+                    .spawn(move || worker_loop(work_rx, engine, metrics2, seed, batch_max))
                     .expect("spawn worker"),
             );
         }
@@ -257,7 +267,7 @@ fn flush(
                 }
             }
             Err(err) => {
-                log::error!("embed batch failed: {err:#}");
+                eprintln!("dirc-ingest: embed batch failed: {err:#}");
                 for _ in &token_items {
                     metrics.record_error();
                 }
@@ -280,27 +290,54 @@ fn worker_loop(
     engine: Arc<dyn Engine>,
     metrics: Arc<Metrics>,
     seed: u64,
+    batch_max: usize,
 ) {
     let mut rng = Pcg::new(seed);
+    // Engines whose batch path is a serial loop report capacity 1, so a
+    // burst still fans out one query per worker instead of serialising
+    // onto whichever worker drained it first.
+    let batch_max = batch_max.min(engine.batch_capacity()).max(1);
     loop {
-        let item = {
+        // Block for one query, drain whatever else is already queued
+        // (work-conserving — see `batcher::recv_batch`), then dispatch
+        // runs of equal k through the engine's batch path so a pooled
+        // engine can pipeline them across the DIRC cores.
+        let items = {
             let guard = work_rx.lock().unwrap();
-            guard.recv()
+            crate::coordinator::batcher::recv_batch(&guard, batch_max)
         };
-        let Ok(item) = item else { return };
-        let t0 = Instant::now();
-        let (topk, stats) = engine.retrieve(&item.q_int, item.pending.req.k, &mut rng);
-        let retrieve_s = t0.elapsed().as_secs_f64();
-        let resp = Response {
-            id: item.pending.req.id,
-            topk,
-            stats,
-            embed_s: item.embed_s,
-            retrieve_s,
-            total_s: item.pending.submitted.elapsed().as_secs_f64(),
-        };
-        metrics.record(&resp);
-        let _ = item.pending.resp_tx.send(resp);
+        let Some(items) = items else { return };
+        let mut items = std::collections::VecDeque::from(items);
+        while !items.is_empty() {
+            let k = items[0].pending.req.k;
+            let mut group = Vec::new();
+            while items.front().is_some_and(|it| it.pending.req.k == k) {
+                group.push(items.pop_front().unwrap());
+            }
+            let queries: Vec<Vec<i8>> = group.iter().map(|it| it.q_int.clone()).collect();
+            let t0 = Instant::now();
+            let results = engine.retrieve_batch(&queries, k, &mut rng);
+            let retrieve_s = t0.elapsed().as_secs_f64() / group.len() as f64;
+            // A short result set would silently hang the dropped clients
+            // on their response channels — fail loudly instead.
+            assert_eq!(
+                results.len(),
+                group.len(),
+                "engine.retrieve_batch broke its one-result-per-query contract"
+            );
+            for (item, (topk, stats)) in group.into_iter().zip(results) {
+                let resp = Response {
+                    id: item.pending.req.id,
+                    topk,
+                    stats,
+                    embed_s: item.embed_s,
+                    retrieve_s,
+                    total_s: item.pending.submitted.elapsed().as_secs_f64(),
+                };
+                metrics.record(&resp);
+                let _ = item.pending.resp_tx.send(resp);
+            }
+        }
     }
 }
 

@@ -1,11 +1,35 @@
 //! The DIRC-RAG chip (Fig 3a): sixteen cores operating in parallel on a
 //! broadcast query, a norm unit, the SRAM result buffer, and the Global
 //! Top-k Comparator — plus the cycle/energy accounting of one query.
+//!
+//! ## Parallel sharded execution
+//!
+//! The hardware's defining property — all cores score their document
+//! shards concurrently under the query-stationary dataflow — is mirrored
+//! in the simulator: each core's MAC + sensing-error injection + local
+//! top-k is an independent job ([`DircChip::run_core_query`]), fanned out
+//! over [`crate::util::pool::parallel_map`] by [`DircChip::query_on`] or
+//! over a shared [`crate::util::pool::ThreadPool`] as a queries × cores
+//! job matrix by [`DircChip::query_batch`].
+//!
+//! **Determinism contract.** Parallel execution is bit-identical to the
+//! serial walk (asserted by golden-vector tests in `rust/tests/`):
+//!
+//! 1. every (query, core) pair senses from its own RNG stream,
+//!    [`Pcg::keyed`]`(query_nonce, core)`, so flips never depend on
+//!    scheduling;
+//! 2. per-core statistics merge through associative, commutative folds
+//!    ([`SenseStats::merge`], [`crate::sim::cycles::worst_core`]) and the
+//!    final reduction sorts shards by core index
+//!    ([`DircChip::finish_query`]);
+//! 3. the global top-k merge breaks score ties by lower doc id
+//!    ([`crate::retrieval::topk`]), so duplicate scores cannot reorder
+//!    under concurrency.
 
 use crate::constants::{MACRO_DIM, NUM_CORES};
 use crate::dirc::core::DircCore;
 use crate::dirc::detect::ResensePolicy;
-use crate::dirc::macro_::{MacroConfig, SenseStats};
+use crate::dirc::macro_::{Flip, MacroConfig, SenseStats};
 use crate::dirc::remap::RemapStrategy;
 use crate::dirc::variation::{ErrorMap, VariationModel};
 use crate::retrieval::quant::Quantized;
@@ -13,6 +37,7 @@ use crate::retrieval::score::{norm_i8, Metric};
 use crate::retrieval::topk::{merge_local, ScoredDoc};
 use crate::sim::cycles::CycleModel;
 use crate::sim::energy::{EnergyEvents, EnergyModel};
+use crate::util::pool::{parallel_map, ThreadPool};
 use crate::util::rng::Pcg;
 
 /// Chip-level configuration.
@@ -77,16 +102,23 @@ pub struct QueryStats {
     pub docs_scored: u64,
 }
 
-/// Fold one core's sense statistics into the chip aggregate.
-fn merge_sense_stats(agg: &mut SenseStats, s: &SenseStats) {
-    agg.planes += s.planes;
-    agg.dirty_planes += s.dirty_planes;
-    agg.detect_checks += s.detect_checks;
-    agg.caught += s.caught;
-    agg.resenses += s.resenses;
-    agg.escaped += s.escaped;
-    agg.flips += s.flips;
-    agg.max_column_resenses = agg.max_column_resenses.max(s.max_column_resenses);
+/// One core's independent contribution to a query — everything the chip
+/// needs to reduce per-core shard results into the global answer. The
+/// reduction ([`DircChip::finish_query`]) sorts by `core`, so outcomes may
+/// arrive in any order (e.g. off a thread pool).
+#[derive(Debug, Clone)]
+pub struct CoreOutcome {
+    /// Which core produced this outcome.
+    pub core: usize,
+    /// The core's local top-k (empty for sense-only passes).
+    pub local_topk: Vec<ScoredDoc>,
+    pub stats: SenseStats,
+    /// Word slots actually occupied (drives the cycle model).
+    pub used_slots: usize,
+    /// Worst single-column re-sense stall (lock-step latency model).
+    pub max_column_resenses: u64,
+    /// Documents this core scored.
+    pub n_docs: u64,
 }
 
 /// The chip simulator.
@@ -145,11 +177,81 @@ impl DircChip {
         &self.cores
     }
 
-    /// Deterministic per-(query, core) sensing stream. `fork` does not
-    /// advance the parent generator, so callers must draw a fresh nonce
-    /// per query (as [`DircChip::query`] does) to decorrelate queries.
+    /// Deterministic per-(query, core) sensing stream: [`Pcg::keyed`] on
+    /// the query nonce and core index. Callers draw one fresh nonce per
+    /// query (as [`DircChip::query_on`] does) to decorrelate queries; the
+    /// derivation itself is pinned by `rust/tests/determinism.rs`.
     pub fn core_stream(qnonce: u64, core: usize) -> Pcg {
-        Pcg::new(qnonce ^ (core as u64).wrapping_mul(0x9E3779B97F4A7C15))
+        Pcg::keyed(qnonce, core as u64)
+    }
+
+    /// Core `c`'s share of one query: MAC + sensing-error injection +
+    /// local top-k, on its own [`Pcg::keyed`] stream. Independent of every
+    /// other core, so it can run as a job on any thread.
+    pub fn run_core_query(
+        &self,
+        c: usize,
+        q: &[i8],
+        q_norm: f64,
+        k: usize,
+        qnonce: u64,
+    ) -> CoreOutcome {
+        let core = &self.cores[c];
+        let mut core_rng = Self::core_stream(qnonce, c);
+        let res = core.query(q, q_norm, self.cfg.metric, k, &mut core_rng);
+        CoreOutcome {
+            core: c,
+            local_topk: res.local_topk,
+            used_slots: res.used_slots,
+            max_column_resenses: res.stats.max_column_resenses,
+            n_docs: core.n_docs() as u64,
+            stats: res.stats,
+        }
+    }
+
+    /// Core `c`'s sensing-only share of one query (flips + statistics, no
+    /// functional compute). Same RNG stream as [`DircChip::run_core_query`],
+    /// so flips are identical for the same `qnonce`.
+    pub fn run_core_sense(&self, c: usize, qnonce: u64) -> (Vec<Flip>, CoreOutcome) {
+        let core = &self.cores[c];
+        let mut core_rng = Self::core_stream(qnonce, c);
+        let (flips, stats) = core.macro_().sense(&mut core_rng);
+        let outcome = CoreOutcome {
+            core: c,
+            local_topk: Vec::new(),
+            used_slots: core.used_slots(),
+            max_column_resenses: stats.max_column_resenses,
+            n_docs: core.n_docs() as u64,
+            stats,
+        };
+        (flips, outcome)
+    }
+
+    /// Deterministic reduction of per-core shard results: sort by core
+    /// index, fold statistics through the associative merges, run the
+    /// Global Top-k Comparator, and account cycles/energy. Outcomes may
+    /// arrive in any order — the result is the same.
+    pub fn finish_query(
+        &self,
+        mut outcomes: Vec<CoreOutcome>,
+        k: usize,
+    ) -> (Vec<ScoredDoc>, QueryStats) {
+        outcomes.sort_by_key(|o| o.core);
+        let mut agg = SenseStats::default();
+        let mut used_slots = Vec::with_capacity(outcomes.len());
+        let mut stalls = Vec::with_capacity(outcomes.len());
+        let mut locals = Vec::with_capacity(outcomes.len());
+        let mut docs_scored = 0u64;
+        for o in outcomes {
+            agg.merge(&o.stats);
+            used_slots.push(o.used_slots);
+            stalls.push(o.max_column_resenses);
+            docs_scored += o.n_docs;
+            locals.push(o.local_topk);
+        }
+        let merged = merge_local(&locals, k);
+        let stats = self.assemble_stats(agg, &used_slots, &stalls, k, docs_scored);
+        (merged, stats)
     }
 
     /// Sensing + accounting only: returns each core's surviving flips and
@@ -159,56 +261,153 @@ impl DircChip {
     /// clean-score computation `query` would do. Consumes the same rng
     /// stream as [`DircChip::query`], so flips are identical for a shared
     /// outer generator.
-    pub fn sense_pass(
+    pub fn sense_pass(&self, k: usize, rng: &mut Pcg) -> (Vec<Vec<Flip>>, QueryStats) {
+        self.sense_pass_on(k, rng, 1)
+    }
+
+    /// [`DircChip::sense_pass`] with the per-core jobs fanned out over
+    /// `threads` workers. Bit-identical to the serial pass for any thread
+    /// count; flips are returned in core order.
+    pub fn sense_pass_on(
         &self,
         k: usize,
         rng: &mut Pcg,
-    ) -> (Vec<Vec<crate::dirc::macro_::Flip>>, QueryStats) {
+        threads: usize,
+    ) -> (Vec<Vec<Flip>>, QueryStats) {
         let qnonce = rng.next_u64();
-        let mut agg = SenseStats::default();
-        let mut used_slots = Vec::with_capacity(self.cores.len());
-        let mut stalls = Vec::with_capacity(self.cores.len());
-        let mut per_core_flips = Vec::with_capacity(self.cores.len());
-        let mut docs_scored = 0u64;
-        for (c, core) in self.cores.iter().enumerate() {
-            let mut core_rng = Self::core_stream(qnonce, c);
-            let (flips, stats) = core.macro_().sense(&mut core_rng);
-            docs_scored += core.n_docs() as u64;
-            merge_sense_stats(&mut agg, &stats);
-            used_slots.push(core.used_slots());
-            stalls.push(stats.max_column_resenses);
+        let cores: Vec<usize> = (0..self.cores.len()).collect();
+        let results = parallel_map(&cores, threads, |_, &c| self.run_core_sense(c, qnonce));
+        let mut per_core_flips = Vec::with_capacity(results.len());
+        let mut outcomes = Vec::with_capacity(results.len());
+        for (flips, outcome) in results {
             per_core_flips.push(flips);
+            outcomes.push(outcome);
         }
-        let stats = self.assemble_stats(agg, &used_slots, &stalls, k, docs_scored);
+        let (_, stats) = self.finish_query(outcomes, k);
         (per_core_flips, stats)
     }
 
     /// Execute one query: broadcast to all cores, local top-k per core,
-    /// global merge; account cycles and energy.
+    /// global merge; account cycles and energy. Serial reference path —
+    /// equivalent to [`DircChip::query_on`] with one thread.
     pub fn query(&self, q: &[i8], k: usize, rng: &mut Pcg) -> (Vec<ScoredDoc>, QueryStats) {
+        self.query_on(q, k, rng, 1)
+    }
+
+    /// Execute one query with the per-core shard jobs fanned out over
+    /// `threads` workers via [`parallel_map`]. Bit-identical to the serial
+    /// path for any thread count (see the module docs for the contract;
+    /// golden-vector tests in `rust/tests/` pin it).
+    pub fn query_on(
+        &self,
+        q: &[i8],
+        k: usize,
+        rng: &mut Pcg,
+        threads: usize,
+    ) -> (Vec<ScoredDoc>, QueryStats) {
         assert_eq!(q.len(), self.cfg.dim);
         let qnonce = rng.next_u64();
         let q_norm = norm_i8(q);
+        let cores: Vec<usize> = (0..self.cores.len()).collect();
+        let outcomes =
+            parallel_map(&cores, threads, |_, &c| self.run_core_query(c, q, q_norm, k, qnonce));
+        self.finish_query(outcomes, k)
+    }
 
-        let mut locals = Vec::with_capacity(self.cores.len());
-        let mut agg = SenseStats::default();
-        let mut used_slots = Vec::with_capacity(self.cores.len());
-        let mut stalls = Vec::with_capacity(self.cores.len());
-        let mut docs_scored = 0u64;
-
-        for (c, core) in self.cores.iter().enumerate() {
-            let mut core_rng = Self::core_stream(qnonce, c);
-            let res = core.query(q, q_norm, self.cfg.metric, k, &mut core_rng);
-            docs_scored += core.n_docs() as u64;
-            merge_sense_stats(&mut agg, &res.stats);
-            used_slots.push(res.used_slots);
-            stalls.push(res.stats.max_column_resenses);
-            locals.push(res.local_topk);
+    /// Pipeline a batch of queries across the cores as a queries × cores
+    /// job matrix on a shared [`ThreadPool`]: every (query, core) pair is
+    /// one independent job, so a batch keeps all workers busy even when a
+    /// single query cannot (core counts smaller than the pool, stragglers
+    /// on skewed shards). Results are bit-identical to calling
+    /// [`DircChip::query`] once per query with the same `rng`: nonces are
+    /// drawn serially in query order up front, and each query's shards
+    /// reduce through [`DircChip::finish_query`].
+    ///
+    /// `chip` is taken as an `Arc` so the jobs are `'static` for the pool.
+    pub fn query_batch(
+        chip: &std::sync::Arc<DircChip>,
+        pool: &ThreadPool,
+        queries: &[Vec<i8>],
+        k: usize,
+        rng: &mut Pcg,
+    ) -> Vec<(Vec<ScoredDoc>, QueryStats)> {
+        let n_cores = chip.cores.len();
+        if queries.is_empty() {
+            return Vec::new();
         }
+        // Draw nonces in query order — the exact stream a serial loop of
+        // `query` calls would consume from `rng`.
+        let prepared: std::sync::Arc<Vec<(Vec<i8>, f64, u64)>> = std::sync::Arc::new(
+            queries
+                .iter()
+                .map(|q| {
+                    assert_eq!(q.len(), chip.cfg.dim);
+                    (q.clone(), norm_i8(q), rng.next_u64())
+                })
+                .collect(),
+        );
+        let (tx, rx) = std::sync::mpsc::channel::<(usize, CoreOutcome)>();
+        for qi in 0..queries.len() {
+            for c in 0..n_cores {
+                let chip = std::sync::Arc::clone(chip);
+                let prepared = std::sync::Arc::clone(&prepared);
+                let tx = tx.clone();
+                pool.execute(move || {
+                    let (q, q_norm, nonce) = &prepared[qi];
+                    let out = chip.run_core_query(c, q, *q_norm, k, *nonce);
+                    let _ = tx.send((qi, out));
+                });
+            }
+        }
+        drop(tx); // receivers below terminate once every job's sender drops
+        let mut per_query: Vec<Vec<CoreOutcome>> =
+            (0..queries.len()).map(|_| Vec::with_capacity(n_cores)).collect();
+        for (qi, outcome) in rx {
+            per_query[qi].push(outcome);
+        }
+        assert!(
+            per_query.iter().all(|o| o.len() == n_cores),
+            "a core job died before reporting (pool panic?)"
+        );
+        per_query.into_iter().map(|outcomes| chip.finish_query(outcomes, k)).collect()
+    }
 
-        let merged = merge_local(&locals, k);
-        let stats = self.assemble_stats(agg, &used_slots, &stalls, k, docs_scored);
-        (merged, stats)
+    /// Sense-only pool variant: one query's per-core sensing jobs fanned
+    /// out on a shared [`ThreadPool`] (the serving engine's hot path).
+    /// Bit-identical to [`DircChip::sense_pass`]; flips return in core
+    /// order.
+    pub fn sense_pass_pool(
+        chip: &std::sync::Arc<DircChip>,
+        pool: &ThreadPool,
+        k: usize,
+        rng: &mut Pcg,
+    ) -> (Vec<Vec<Flip>>, QueryStats) {
+        let qnonce = rng.next_u64();
+        let n_cores = chip.cores.len();
+        let (tx, rx) = std::sync::mpsc::channel::<(usize, (Vec<Flip>, CoreOutcome))>();
+        for c in 0..n_cores {
+            let chip = std::sync::Arc::clone(chip);
+            let tx = tx.clone();
+            pool.execute(move || {
+                let _ = tx.send((c, chip.run_core_sense(c, qnonce)));
+            });
+        }
+        drop(tx);
+        let mut slots: Vec<Option<(Vec<Flip>, CoreOutcome)>> =
+            (0..n_cores).map(|_| None).collect();
+        for (c, result) in rx {
+            slots[c] = Some(result);
+        }
+        let mut per_core_flips = Vec::with_capacity(n_cores);
+        let mut outcomes = Vec::with_capacity(n_cores);
+        for slot in slots {
+            let (flips, outcome) =
+                slot.expect("a core sense job died before reporting (pool panic?)");
+            per_core_flips.push(flips);
+            outcomes.push(outcome);
+        }
+        let (_, stats) = chip.finish_query(outcomes, k);
+        (per_core_flips, stats)
     }
 
     /// Convert aggregated sense statistics + occupancy into the cycle and
@@ -314,6 +513,25 @@ mod tests {
         assert_eq!(ids.len(), 10);
         assert_eq!(stats.docs_scored, 600);
         assert!(stats.latency_s > 0.0 && stats.energy_j > 0.0);
+    }
+
+    #[test]
+    fn parallel_query_matches_serial_in_module() {
+        // Module-level smoke check; exhaustive golden-vector coverage
+        // (seeds x core counts x tie-heavy data) lives in rust/tests/.
+        let (chip, _) = build(600, 128, 4, true);
+        for seed in 0..3u64 {
+            let mut rng = Pcg::new(40 + seed);
+            let q: Vec<i8> = (0..128).map(|_| rng.int_in(-128, 127) as i8).collect();
+            let mut r1 = Pcg::new(seed);
+            let mut r2 = Pcg::new(seed);
+            let (top_s, stats_s) = chip.query(&q, 10, &mut r1);
+            let (top_p, stats_p) = chip.query_on(&q, 10, &mut r2, 4);
+            assert_eq!(top_s, top_p);
+            assert_eq!(stats_s.sense, stats_p.sense);
+            assert_eq!(stats_s.cycles, stats_p.cycles);
+            assert_eq!(stats_s.energy_j.to_bits(), stats_p.energy_j.to_bits());
+        }
     }
 
     #[test]

@@ -113,6 +113,25 @@ pub struct SenseStats {
     pub max_column_resenses: u64,
 }
 
+impl SenseStats {
+    /// Fold another shard's statistics into this one.
+    ///
+    /// Every field is a sum except `max_column_resenses`, which is a max —
+    /// both associative *and* commutative, so per-core statistics can be
+    /// merged in any order or grouping (the contract the parallel sharded
+    /// query path relies on; asserted in tests).
+    pub fn merge(&mut self, s: &SenseStats) {
+        self.planes += s.planes;
+        self.dirty_planes += s.dirty_planes;
+        self.detect_checks += s.detect_checks;
+        self.caught += s.caught;
+        self.resenses += s.resenses;
+        self.escaped += s.escaped;
+        self.flips += s.flips;
+        self.max_column_resenses = self.max_column_resenses.max(s.max_column_resenses);
+    }
+}
+
 /// The DIRC macro simulator.
 pub struct DircMacro {
     pub cfg: MacroConfig,
@@ -455,6 +474,39 @@ mod tests {
         let lo = -(1i64 << (bits - 1));
         let hi = (1i64 << (bits - 1)) - 1;
         (0..n * dim).map(|_| rng.int_in(lo, hi) as i8).collect()
+    }
+
+    #[test]
+    fn sense_stats_merge_is_associative_and_commutative() {
+        let mut rng = Pcg::new(31);
+        let mut rand_stats = || SenseStats {
+            planes: rng.next_u32() as u64 % 1000,
+            dirty_planes: rng.next_u32() as u64 % 100,
+            detect_checks: rng.next_u32() as u64 % 1000,
+            caught: rng.next_u32() as u64 % 50,
+            resenses: rng.next_u32() as u64 % 50,
+            escaped: rng.next_u32() as u64 % 20,
+            flips: rng.next_u32() as u64 % 200,
+            max_column_resenses: rng.next_u32() as u64 % 9,
+        };
+        for _ in 0..50 {
+            let (a, b, c) = (rand_stats(), rand_stats(), rand_stats());
+            // (a + b) + c == a + (b + c)
+            let mut left = a.clone();
+            left.merge(&b);
+            left.merge(&c);
+            let mut bc = b.clone();
+            bc.merge(&c);
+            let mut right = a.clone();
+            right.merge(&bc);
+            assert_eq!(left, right);
+            // a + b == b + a
+            let mut ab = a.clone();
+            ab.merge(&b);
+            let mut ba = b.clone();
+            ba.merge(&a);
+            assert_eq!(ab, ba);
+        }
     }
 
     #[test]

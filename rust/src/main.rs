@@ -202,7 +202,17 @@ fn cmd_serve(sub: &dirc_rag::util::cli::Parsed) -> Result<()> {
     let mut chip_cfg = configfile::chip_config(&file_cfg)?;
     chip_cfg.dim = dim; // the embedder's output dimension wins
     chip_cfg.map_points = chip_cfg.map_points.min(300); // demo-sized MC
-    let engine = Arc::new(ServingEngine::new(chip_cfg, &db, Arc::clone(&runtime))?);
+    // Shared pool: per-core shard jobs of the sense pass (and, for a
+    // SimEngine, the queries x cores batch matrix) fan out over this.
+    let pool = Arc::new(dirc_rag::util::pool::ThreadPool::new(
+        dirc_rag::util::pool::default_threads(),
+    ));
+    let engine = Arc::new(ServingEngine::with_pool(
+        chip_cfg,
+        &db,
+        Arc::clone(&runtime),
+        Some(pool),
+    )?);
     let coord = Coordinator::start(engine, Arc::clone(&runtime), coord_cfg);
 
     eprintln!("serving {n_queries} token queries...");

@@ -78,6 +78,18 @@ impl TopK {
         self.heap
     }
 
+    /// Absorb another selector's survivors. Because the rank order is
+    /// total (ties broken by lower doc id) and `push` keeps exactly the k
+    /// best under it, absorbing is associative and commutative over any
+    /// partition of the candidate stream — shard-local top-k selectors can
+    /// merge in any order and still equal one global selector (the
+    /// parallel merge contract; asserted by the property tests below).
+    pub fn absorb(&mut self, other: &TopK) {
+        for &cand in &other.heap {
+            self.push(cand);
+        }
+    }
+
     // heap[i] is worse than its children under rank order (min-heap on
     // "goodness" == max-heap on badness).
     fn worse(&self, a: usize, b: usize) -> bool {
@@ -240,5 +252,88 @@ mod tests {
     #[should_panic(expected = "k must be positive")]
     fn zero_k_rejected() {
         TopK::new(0);
+    }
+
+    /// Property: `merge_local` over any sharding of a duplicate-heavy
+    /// score stream equals the sort-based oracle over the whole stream.
+    /// Scores are drawn from a tiny integer grid so ties are the common
+    /// case, not the corner case.
+    #[test]
+    fn prop_merge_local_equals_sort_oracle_under_ties() {
+        let gen = gen_pair(
+            gen_vec(gen_i64(-3, 3), 1, 240),
+            gen_pair(gen_usize(1, 8), gen_usize(1, 12)),
+        );
+        forall(cases(150), gen, |(vals, (cores, k))| {
+            let scores: Vec<f64> = vals.iter().map(|&v| v as f64).collect();
+            let chunk = scores.len().div_ceil(*cores);
+            let locals: Vec<Vec<ScoredDoc>> = scores
+                .chunks(chunk)
+                .enumerate()
+                .map(|(c, s)| topk_from_scores(s, (c * chunk) as u64, *k))
+                .collect();
+            merge_local(&locals, *k) == brute_force(&scores, (*k).min(scores.len()))
+        });
+    }
+
+    /// Property: shard-local `TopK` selectors absorbed in any order equal
+    /// one global selector fed the whole stream.
+    #[test]
+    fn prop_absorb_equals_global_selection() {
+        let gen = gen_pair(gen_vec(gen_i64(-5, 5), 1, 200), gen_usize(1, 9));
+        forall(cases(120), gen, |(vals, k)| {
+            let scores: Vec<f64> = vals.iter().map(|&v| v as f64).collect();
+            let mut global = TopK::new(*k);
+            for (i, &s) in scores.iter().enumerate() {
+                global.push(ScoredDoc { doc_id: i as u64, score: s });
+            }
+            // Three shards, absorbed back-to-front.
+            let chunk = scores.len().div_ceil(3);
+            let mut shards: Vec<TopK> = scores
+                .chunks(chunk)
+                .enumerate()
+                .map(|(c, s)| {
+                    let mut t = TopK::new(*k);
+                    for (i, &v) in s.iter().enumerate() {
+                        t.push(ScoredDoc { doc_id: (c * chunk + i) as u64, score: v });
+                    }
+                    t
+                })
+                .collect();
+            let mut merged = shards.pop().unwrap();
+            while let Some(shard) = shards.pop() {
+                merged.absorb(&shard);
+            }
+            merged.into_sorted() == global.into_sorted()
+        });
+    }
+
+    /// Property: under duplicate scores the deterministic tie-break holds
+    /// everywhere — results are sorted by (score desc, doc id asc), and no
+    /// excluded document could displace an included one under that order.
+    #[test]
+    fn prop_tie_break_lower_doc_id_wins() {
+        let gen = gen_pair(gen_vec(gen_i64(0, 2), 1, 120), gen_usize(1, 10));
+        forall(cases(150), gen, |(vals, k)| {
+            let scores: Vec<f64> = vals.iter().map(|&v| v as f64).collect();
+            let got = topk_from_scores(&scores, 0, *k);
+            for w in got.windows(2) {
+                let ordered = w[0].score > w[1].score
+                    || (w[0].score == w[1].score && w[0].doc_id < w[1].doc_id);
+                if !ordered {
+                    return false;
+                }
+            }
+            let kept: std::collections::HashSet<u64> =
+                got.iter().map(|d| d.doc_id).collect();
+            let Some(worst) = got.last() else { return scores.is_empty() };
+            // Every excluded doc must rank strictly worse than the worst
+            // kept doc: lower score, or equal score with a higher id.
+            scores.iter().enumerate().all(|(i, &s)| {
+                kept.contains(&(i as u64))
+                    || s < worst.score
+                    || (s == worst.score && (i as u64) > worst.doc_id)
+            })
+        });
     }
 }

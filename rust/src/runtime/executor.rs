@@ -17,6 +17,10 @@ use std::sync::Mutex;
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::runtime::manifest::{ArtifactMeta, Manifest};
+// The offline environment has no `xla` bindings; the stub exposes the
+// same API and fails client creation with a clear message. Point this
+// alias at the real crate to re-enable the PJRT backend.
+use crate::runtime::xla_stub as xla;
 
 /// The PJRT runtime: one CPU client + executable cache.
 pub struct PjrtRuntime {

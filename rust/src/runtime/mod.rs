@@ -11,6 +11,7 @@
 
 pub mod executor;
 pub mod manifest;
+pub mod xla_stub;
 
 pub use executor::{PjrtRuntime, ResidentDb};
 pub use manifest::{ArtifactMeta, Manifest};

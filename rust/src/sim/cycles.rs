@@ -15,7 +15,7 @@
 //! latency adds the norm unit, local top-k drain and the global top-k
 //! merge: ~5.6 µs for a full 4 MB retrieval (Table I).
 
-use crate::constants::{FREQ_HZ, NUM_CORES};
+use crate::constants::FREQ_HZ;
 
 /// Tunable overheads of the chip-level pipeline (cycles).
 #[derive(Debug, Clone)]
@@ -79,10 +79,38 @@ impl CycleModel {
         }
     }
 
+    /// One core's full cycle census for a query: the macro pass plus the
+    /// lock-step stall of its worst column's re-senses. Independent per
+    /// core, so cores can be costed on any thread in any order.
+    pub fn core_pass(
+        &self,
+        used_slots: usize,
+        bits: usize,
+        detect: bool,
+        max_column_resenses: u64,
+    ) -> QueryCycles {
+        let mut qc = self.macro_pass(used_slots, bits, detect);
+        qc.resense_stall = max_column_resenses * self.per_resense;
+        qc
+    }
+
+    /// Add the chip-level serial tail to the gating core's census: the
+    /// norm unit (overlapped up-front, charged once), the local top-k
+    /// drain, and the global top-k merge over `cores * k` candidates.
+    /// `cores` is the chip's configured core count (16 on the paper's
+    /// chip; the merge sees only as many candidate lists as exist).
+    pub fn finish_chip(&self, mut worst: QueryCycles, cores: usize, k: usize) -> QueryCycles {
+        worst.norm_unit = self.norm_unit;
+        worst.topk = self.local_topk_drain_per_k * k as u64
+            + self.global_topk_per_entry * (cores * k) as u64 / 2;
+        worst.pipeline = self.pipeline_fill;
+        worst
+    }
+
     /// Chip-level query cycles. Cores run in parallel: the slowest core
-    /// (most used slots, worst re-sense stall) gates latency; the serial
-    /// tail is the norm unit (overlapped up-front, charged once) plus the
-    /// global top-k merge over `cores * k` candidates.
+    /// (most used slots, worst re-sense stall) gates latency — an
+    /// associative [`worst_core`] fold, so the reduction gives the same
+    /// answer whatever order per-core results arrive in.
     pub fn chip_query(
         &self,
         used_slots_per_core: &[usize],
@@ -92,26 +120,34 @@ impl CycleModel {
         k: usize,
     ) -> QueryCycles {
         assert_eq!(used_slots_per_core.len(), max_column_resenses_per_core.len());
-        let mut worst = QueryCycles::default();
-        let mut worst_total = 0u64;
-        for (i, &slots) in used_slots_per_core.iter().enumerate() {
-            let mut qc = self.macro_pass(slots, bits, detect);
-            qc.resense_stall = max_column_resenses_per_core[i] * self.per_resense;
-            if qc.total() >= worst_total {
-                worst_total = qc.total();
-                worst = qc;
-            }
-        }
-        worst.norm_unit = self.norm_unit;
-        worst.topk = self.local_topk_drain_per_k * k as u64
-            + self.global_topk_per_entry * (NUM_CORES * k) as u64 / 2;
-        worst.pipeline = self.pipeline_fill;
-        worst
+        let worst = used_slots_per_core
+            .iter()
+            .zip(max_column_resenses_per_core)
+            .map(|(&slots, &stall)| self.core_pass(slots, bits, detect, stall))
+            .fold(QueryCycles::default(), worst_core);
+        self.finish_chip(worst, used_slots_per_core.len(), k)
     }
 
     /// Convert cycles to seconds at the model clock.
     pub fn seconds(&self, cycles: u64) -> f64 {
         cycles as f64 / self.freq_hz
+    }
+}
+
+/// Associative, commutative max of two per-core censuses: the one that
+/// gates chip latency wins. The comparison is a *total* order (total
+/// cycles first, then each component lexicographically), so two censuses
+/// compare equal only when they are identical — which makes the fold
+/// independent of arrival order and grouping, the property the parallel
+/// per-core stats merge relies on (asserted in tests).
+pub fn worst_core(a: QueryCycles, b: QueryCycles) -> QueryCycles {
+    let key = |q: &QueryCycles| {
+        (q.total(), q.sense, q.detect, q.mac, q.resense_stall, q.norm_unit, q.topk, q.pipeline)
+    };
+    if key(&b) > key(&a) {
+        b
+    } else {
+        a
     }
 }
 
@@ -174,6 +210,43 @@ mod tests {
         slots[7] = 16;
         let qc = m.chip_query(&slots, 8, true, &[0; 16], 10);
         assert_eq!(qc.mac, 1024);
+    }
+
+    #[test]
+    fn worst_core_fold_is_order_independent() {
+        // The gating-core reduction must not care how per-core results
+        // are ordered or grouped — required for the parallel query path.
+        let m = CycleModel::default();
+        let cores: Vec<QueryCycles> = (0..16)
+            .map(|i| m.core_pass(1 + (i * 7) % 16, 8, i % 2 == 0, (i % 5) as u64))
+            .collect();
+        let forward = cores.iter().copied().fold(QueryCycles::default(), worst_core);
+        let reverse = cores.iter().rev().copied().fold(QueryCycles::default(), worst_core);
+        assert_eq!(forward, reverse);
+        // Tree-shaped grouping: fold halves independently, then combine.
+        let left = cores[..8].iter().copied().fold(QueryCycles::default(), worst_core);
+        let right = cores[8..].iter().copied().fold(QueryCycles::default(), worst_core);
+        assert_eq!(forward, worst_core(left, right));
+        // Interleaved grouping.
+        let even = cores.iter().step_by(2).copied().fold(QueryCycles::default(), worst_core);
+        let odd = cores.iter().skip(1).step_by(2).copied().fold(QueryCycles::default(), worst_core);
+        assert_eq!(forward, worst_core(odd, even));
+    }
+
+    #[test]
+    fn core_pass_plus_finish_equals_chip_query() {
+        let m = CycleModel::default();
+        let slots = [3usize, 16, 7, 16];
+        let stalls = [4u64, 0, 2, 1];
+        let folded = slots
+            .iter()
+            .zip(&stalls)
+            .map(|(&s, &st)| m.core_pass(s, 8, true, st))
+            .fold(QueryCycles::default(), worst_core);
+        assert_eq!(
+            m.finish_chip(folded, slots.len(), 10),
+            m.chip_query(&slots, 8, true, &stalls, 10)
+        );
     }
 
     #[test]

@@ -6,22 +6,55 @@
 //! fundamentally synchronous hot path. The pool gives us:
 //!
 //! * [`ThreadPool`] — fixed workers consuming boxed jobs from an injector
-//!   channel (used by the coordinator's per-core executors), and
+//!   channel (shared by the retrieval engines for the queries × cores job
+//!   matrix of the batched query path), and
 //! * [`parallel_map`] — a scoped fork-join over a slice (used by the
+//!   per-core shard execution of [`crate::dirc::chip::DircChip`], the
 //!   Monte-Carlo sweeps and dataset generation).
+//!
+//! ## Join protocol
+//!
+//! `join` waits on a `(Mutex<usize>, Condvar)` pending counter. The
+//! counter is incremented *before* a job is enqueued and decremented by a
+//! drop guard *after* it ran — including when the job panicked, so a
+//! panicking job can never wedge `join` (the original implementation
+//! leaked the decrement on unwind and deadlocked every later `join`).
+//! Panics are swallowed per-job and tallied; [`ThreadPool::panicked`]
+//! exposes the count so tests and callers can surface them. `join` only
+//! covers jobs submitted before it started; submissions racing with a
+//! `join` from another thread may or may not be included — callers that
+//! need a strict barrier must order their submits before the join.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
 /// A fixed-size worker pool. Jobs are executed FIFO; `join` blocks until
-/// all submitted jobs have completed.
+/// all submitted jobs have completed (panicking jobs included).
 pub struct ThreadPool {
     tx: Option<Sender<Job>>,
     workers: Vec<JoinHandle<()>>,
-    pending: Arc<(Mutex<usize>, std::sync::Condvar)>,
+    pending: Arc<(Mutex<usize>, Condvar)>,
+    panicked: Arc<AtomicUsize>,
+}
+
+/// Decrements the pending counter when dropped, so the count stays
+/// correct even if the job unwinds.
+struct PendingGuard<'a>(&'a (Mutex<usize>, Condvar));
+
+impl Drop for PendingGuard<'_> {
+    fn drop(&mut self) {
+        let (lock, cv) = self.0;
+        let mut n = lock.lock().unwrap();
+        *n -= 1;
+        if *n == 0 {
+            cv.notify_all();
+        }
+    }
 }
 
 impl ThreadPool {
@@ -29,11 +62,13 @@ impl ThreadPool {
         assert!(threads > 0);
         let (tx, rx) = channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
-        let pending = Arc::new((Mutex::new(0usize), std::sync::Condvar::new()));
+        let pending = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let panicked = Arc::new(AtomicUsize::new(0));
         let workers = (0..threads)
             .map(|i| {
                 let rx: Arc<Mutex<Receiver<Job>>> = Arc::clone(&rx);
                 let pending = Arc::clone(&pending);
+                let panicked = Arc::clone(&panicked);
                 std::thread::Builder::new()
                     .name(format!("dirc-pool-{i}"))
                     .spawn(move || loop {
@@ -43,12 +78,9 @@ impl ThreadPool {
                         };
                         match job {
                             Ok(job) => {
-                                job();
-                                let (lock, cv) = &*pending;
-                                let mut n = lock.lock().unwrap();
-                                *n -= 1;
-                                if *n == 0 {
-                                    cv.notify_all();
+                                let _guard = PendingGuard(&pending);
+                                if catch_unwind(AssertUnwindSafe(job)).is_err() {
+                                    panicked.fetch_add(1, Ordering::Relaxed);
                                 }
                             }
                             Err(_) => break, // pool dropped
@@ -57,7 +89,7 @@ impl ThreadPool {
                     .expect("spawn pool worker")
             })
             .collect();
-        ThreadPool { tx: Some(tx), workers, pending }
+        ThreadPool { tx: Some(tx), workers, pending, panicked }
     }
 
     /// Number of worker threads.
@@ -71,14 +103,24 @@ impl ThreadPool {
             let (lock, _) = &*self.pending;
             *lock.lock().unwrap() += 1;
         }
-        self.tx
+        // Until the job is enqueued, this guard owns the decrement: if the
+        // send fails (or the expect below unwinds), it rolls the counter
+        // back so a concurrent `join` cannot hang on a job that never ran.
+        // On success the worker's own guard takes over.
+        let rollback = PendingGuard(&self.pending);
+        let sent = self
+            .tx
             .as_ref()
             .expect("pool already shut down")
-            .send(Box::new(f))
-            .expect("pool workers gone");
+            .send(Box::new(f));
+        match sent {
+            Ok(()) => std::mem::forget(rollback),
+            Err(_) => panic!("pool workers gone"), // rollback drops here
+        }
     }
 
-    /// Block until every submitted job has finished.
+    /// Block until every submitted job has finished (including jobs that
+    /// panicked — see [`ThreadPool::panicked`]).
     pub fn join(&self) {
         let (lock, cv) = &*self.pending;
         let mut n = lock.lock().unwrap();
@@ -86,11 +128,16 @@ impl ThreadPool {
             n = cv.wait(n).unwrap();
         }
     }
+
+    /// Number of jobs that panicked since the pool was created.
+    pub fn panicked(&self) -> usize {
+        self.panicked.load(Ordering::Relaxed)
+    }
 }
 
 impl Drop for ThreadPool {
     fn drop(&mut self) {
-        self.tx.take(); // close channel; workers exit on recv Err
+        self.tx.take(); // close channel; workers drain the queue then exit
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
@@ -108,14 +155,14 @@ pub fn parallel_map<T: Sync, R: Send>(
     if threads == 1 || items.len() <= 1 {
         return items.iter().enumerate().map(|(i, x)| f(i, x)).collect();
     }
-    let next = std::sync::atomic::AtomicUsize::new(0);
+    let next = AtomicUsize::new(0);
     let mut out: Vec<Option<R>> = (0..items.len()).map(|_| None).collect();
     let out_slots: Vec<Mutex<&mut Option<R>>> =
         out.iter_mut().map(Mutex::new).collect();
     std::thread::scope(|scope| {
         for _ in 0..threads {
             scope.spawn(|| loop {
-                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                let i = next.fetch_add(1, Ordering::Relaxed);
                 if i >= items.len() {
                     break;
                 }
@@ -170,6 +217,62 @@ mod tests {
             pool.join();
             assert_eq!(counter.load(Ordering::Relaxed), (round + 1) * 50);
         }
+    }
+
+    #[test]
+    fn join_survives_panicking_jobs() {
+        // The regression this module's join protocol fixes: a panicking
+        // job must still decrement the pending counter, or join() hangs.
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for i in 0..40 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                if i % 4 == 0 {
+                    panic!("job {i} exploded");
+                }
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.join();
+        assert_eq!(counter.load(Ordering::Relaxed), 30);
+        assert_eq!(pool.panicked(), 10);
+        // The pool stays usable afterwards.
+        let c = Arc::clone(&counter);
+        pool.execute(move || {
+            c.fetch_add(1, Ordering::Relaxed);
+        });
+        pool.join();
+        assert_eq!(counter.load(Ordering::Relaxed), 31);
+    }
+
+    #[test]
+    fn stress_concurrent_submitters_and_join() {
+        // Hammer the pending counter from many submitter threads while
+        // the main thread joins repeatedly; every job must be counted
+        // exactly once and join must never hang or return early.
+        let pool = Arc::new(ThreadPool::new(4));
+        let counter = Arc::new(AtomicUsize::new(0));
+        let submitters: Vec<_> = (0..8)
+            .map(|_| {
+                let pool = Arc::clone(&pool);
+                let counter = Arc::clone(&counter);
+                std::thread::spawn(move || {
+                    for _ in 0..250 {
+                        let c = Arc::clone(&counter);
+                        pool.execute(move || {
+                            c.fetch_add(1, Ordering::Relaxed);
+                        });
+                    }
+                })
+            })
+            .collect();
+        for s in submitters {
+            s.join().unwrap();
+        }
+        pool.join();
+        assert_eq!(counter.load(Ordering::Relaxed), 8 * 250);
+        assert_eq!(pool.panicked(), 0);
     }
 
     #[test]

@@ -46,6 +46,32 @@ impl Pcg {
         rng
     }
 
+    /// Split off a deterministic child stream for a parallel shard.
+    ///
+    /// Identical to [`Pcg::fork`]; this is the parent-based counterpart
+    /// of [`Pcg::keyed`] (which the chip's per-core streams use) for
+    /// callers that hold a generator rather than a raw nonce. Splitting
+    /// does not advance the parent, and `split(i)` yields the same stream
+    /// no matter how many other lanes were split before it or on which
+    /// thread it runs. The derivation is **pinned by regression tests**
+    /// (`tests/` + `split_stream_values_pinned` below): changing it would
+    /// silently change every ranking produced under sensing errors.
+    #[inline]
+    pub fn split(&self, lane: u64) -> Pcg {
+        self.fork(lane)
+    }
+
+    /// Keyed stream constructor: an independent generator for
+    /// `(nonce, lane)`, without a parent generator. The per-core sensing
+    /// streams of the DIRC chip are `keyed(query_nonce, core)`, so every
+    /// (query, core) pair draws from its own stream regardless of
+    /// execution order — the determinism contract of the parallel
+    /// sharded query path. Also pinned by regression tests.
+    #[inline]
+    pub fn keyed(nonce: u64, lane: u64) -> Pcg {
+        Pcg::new(nonce ^ lane.wrapping_mul(0x9E3779B97F4A7C15))
+    }
+
     #[inline]
     pub fn next_u32(&mut self) -> u32 {
         let old = self.state;
@@ -186,6 +212,57 @@ mod tests {
         let mut b = root.fork(1);
         let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
         assert!(same < 4);
+    }
+
+    #[test]
+    fn split_is_fork() {
+        let root = Pcg::new(123);
+        for lane in [0u64, 1, 7, 0xFFFF_FFFF_FFFF_FFFF] {
+            let mut a = root.split(lane);
+            let mut b = root.fork(lane);
+            for _ in 0..16 {
+                assert_eq!(a.next_u64(), b.next_u64());
+            }
+        }
+    }
+
+    #[test]
+    fn split_stream_values_pinned() {
+        // Golden values (independently computed from the PCG-XSH-RR /
+        // SplitMix64 definitions). If any of these change, per-core
+        // seeding changed and every error-injected ranking with it —
+        // that must never happen silently between PRs.
+        let mut r = Pcg::new(0);
+        assert_eq!(
+            [r.next_u32(), r.next_u32(), r.next_u32(), r.next_u32()],
+            [0x8a5d_ea50, 0x8b65_b731, 0xa3f9_6e62, 0xc354_6b80]
+        );
+        let mut r = Pcg::new(42);
+        assert_eq!(
+            [r.next_u32(), r.next_u32(), r.next_u32(), r.next_u32()],
+            [0xffb9_6e1c, 0xa3fa_3404, 0xd934_78f7, 0xbdfc_1488]
+        );
+        let mut f = Pcg::new(7).split(0);
+        assert_eq!([f.next_u32(), f.next_u32()], [0x1e34_b72e, 0xc369_ba32]);
+        let mut f = Pcg::new(7).split(1);
+        assert_eq!([f.next_u32(), f.next_u32()], [0xdc91_4696, 0x18d0_d2b8]);
+        let mut f = Pcg::new(7).split(0xDEAD_BEEF);
+        assert_eq!([f.next_u32(), f.next_u32()], [0xf5fc_d08d, 0x43aa_f370]);
+    }
+
+    #[test]
+    fn keyed_stream_values_pinned() {
+        let nonce = 0x0123_4567_89AB_CDEF;
+        let want: [[u32; 2]; 4] = [
+            [0x5641_5adc, 0xbc31_383a],
+            [0x8b0a_9b5f, 0x4ad4_5190],
+            [0x5fe3_8620, 0x6aca_a1ef],
+            [0xa771_b852, 0x8ee4_a590],
+        ];
+        for (lane, w) in want.iter().enumerate() {
+            let mut k = Pcg::keyed(nonce, lane as u64);
+            assert_eq!([k.next_u32(), k.next_u32()], *w, "lane {lane}");
+        }
     }
 
     #[test]

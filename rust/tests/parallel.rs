@@ -1,0 +1,199 @@
+//! Golden-vector tests for the parallel sharded query path: the parallel
+//! per-core execution (`query_on`, `sense_pass_on`, `query_batch`) must be
+//! **bit-identical** to the serial walk — same doc ids, same score bits,
+//! same sense statistics, same cycle/energy accounting — across seeds,
+//! core counts, metrics, thread counts and tie-heavy score distributions.
+
+use std::sync::Arc;
+
+use dirc_rag::coordinator::{Engine, SimEngine};
+use dirc_rag::dirc::chip::{ChipConfig, DircChip, QueryStats};
+use dirc_rag::retrieval::quant::{quantize, random_unit_rows, QuantScheme, Quantized};
+use dirc_rag::retrieval::score::{norm_i8, Metric};
+use dirc_rag::util::pool::ThreadPool;
+use dirc_rag::util::rng::Pcg;
+
+fn assert_stats_identical(a: &QueryStats, b: &QueryStats, ctx: &str) {
+    assert_eq!(a.sense, b.sense, "{ctx}: sense stats");
+    assert_eq!(a.cycles, b.cycles, "{ctx}: cycles");
+    assert_eq!(a.docs_scored, b.docs_scored, "{ctx}: docs_scored");
+    assert_eq!(a.latency_s.to_bits(), b.latency_s.to_bits(), "{ctx}: latency bits");
+    assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits(), "{ctx}: energy bits");
+}
+
+fn build_chip(n: usize, dim: usize, cores: usize, seed: u64, metric: Metric) -> DircChip {
+    let mut rng = Pcg::new(seed);
+    let fp = random_unit_rows(n, dim, &mut rng);
+    let db = quantize(&fp, n, dim, QuantScheme::Int8);
+    let cfg = ChipConfig {
+        cores,
+        map_points: 40,
+        ..ChipConfig::paper_default(dim, metric)
+    };
+    DircChip::build(cfg, &db)
+}
+
+/// A database whose quantised values come from {-1, 0, 1}, so integer MIPS
+/// scores collide constantly — the distribution that stresses top-k
+/// tie-breaking across the merge.
+fn tie_heavy_db(n: usize, dim: usize, seed: u64) -> Quantized {
+    let mut rng = Pcg::new(seed);
+    let values: Vec<i8> = (0..n * dim).map(|_| rng.int_in(-1, 1) as i8).collect();
+    let norms: Vec<f32> = (0..n)
+        .map(|i| norm_i8(&values[i * dim..(i + 1) * dim]) as f32)
+        .collect();
+    Quantized { scheme: QuantScheme::Int8, n, dim, values, scale: 1.0, norms }
+}
+
+#[test]
+fn parallel_query_bit_identical_across_seeds_and_core_counts() {
+    let dim = 128;
+    for &cores in &[1usize, 2, 4, 8] {
+        for metric in [Metric::Mips, Metric::Cosine] {
+            let chip = build_chip(400, dim, cores, 11, metric);
+            for qseed in 0..3u64 {
+                let mut qrng = Pcg::new(900 + qseed);
+                let q: Vec<i8> = (0..dim).map(|_| qrng.int_in(-128, 127) as i8).collect();
+                let mut r_serial = Pcg::new(qseed);
+                let (top_s, stats_s) = chip.query(&q, 10, &mut r_serial);
+                for &threads in &[2usize, 4, 8] {
+                    let mut r_par = Pcg::new(qseed);
+                    let (top_p, stats_p) = chip.query_on(&q, 10, &mut r_par, threads);
+                    let ctx = format!(
+                        "cores={cores} metric={metric:?} qseed={qseed} threads={threads}"
+                    );
+                    assert_eq!(top_s, top_p, "{ctx}: ranking");
+                    for (a, b) in top_s.iter().zip(top_p.iter()) {
+                        assert_eq!(a.score.to_bits(), b.score.to_bits(), "{ctx}: score bits");
+                    }
+                    assert_stats_identical(&stats_s, &stats_p, &ctx);
+                    // Both paths must leave the caller rng in the same
+                    // position (one nonce drawn per query).
+                    assert_eq!(r_serial.clone().next_u64(), r_par.clone().next_u64(), "{ctx}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn parallel_query_bit_identical_on_tie_heavy_scores() {
+    let (n, dim) = (512, 128);
+    let db = tie_heavy_db(n, dim, 21);
+    for &cores in &[2usize, 4, 8] {
+        let cfg = ChipConfig {
+            cores,
+            map_points: 40,
+            ..ChipConfig::paper_default(dim, Metric::Mips)
+        };
+        let chip = DircChip::build(cfg, &db);
+        for qseed in 0..4u64 {
+            // Tiny-valued queries -> massively duplicated integer scores.
+            let mut qrng = Pcg::new(300 + qseed);
+            let q: Vec<i8> = (0..dim).map(|_| qrng.int_in(-1, 1) as i8).collect();
+            let mut r1 = Pcg::new(qseed);
+            let mut r2 = Pcg::new(qseed);
+            let (top_s, stats_s) = chip.query(&q, 16, &mut r1);
+            let (top_p, stats_p) = chip.query_on(&q, 16, &mut r2, 4);
+            let ctx = format!("tie-heavy cores={cores} qseed={qseed}");
+            assert_eq!(top_s, top_p, "{ctx}");
+            assert_stats_identical(&stats_s, &stats_p, &ctx);
+            // Ties really are present, and broken by lower doc id.
+            for w in top_s.windows(2) {
+                if w[0].score == w[1].score {
+                    assert!(w[0].doc_id < w[1].doc_id, "{ctx}: tie-break order");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn sense_pass_parallel_matches_serial_flips() {
+    let chip = build_chip(600, 128, 4, 31, Metric::Cosine);
+    for qseed in 0..3u64 {
+        let mut r1 = Pcg::new(qseed);
+        let mut r2 = Pcg::new(qseed);
+        let (flips_s, stats_s) = chip.sense_pass(10, &mut r1);
+        let (flips_p, stats_p) = chip.sense_pass_on(10, &mut r2, 4);
+        assert_eq!(flips_s, flips_p, "qseed={qseed}: per-core flips");
+        assert_stats_identical(&stats_s, &stats_p, &format!("sense qseed={qseed}"));
+    }
+}
+
+#[test]
+fn query_batch_matches_serial_query_stream() {
+    let chip = Arc::new(build_chip(400, 128, 4, 41, Metric::Mips));
+    let pool = ThreadPool::new(4);
+    let mut qrng = Pcg::new(5);
+    let queries: Vec<Vec<i8>> = (0..11)
+        .map(|_| (0..128).map(|_| qrng.int_in(-128, 127) as i8).collect())
+        .collect();
+    let mut r_serial = Pcg::new(123);
+    let mut r_batch = Pcg::new(123);
+    let want: Vec<_> = queries.iter().map(|q| chip.query(q, 10, &mut r_serial)).collect();
+    let got = DircChip::query_batch(&chip, &pool, &queries, 10, &mut r_batch);
+    assert_eq!(got.len(), want.len());
+    for (qi, ((gt, gs), (wt, ws))) in got.iter().zip(want.iter()).enumerate() {
+        assert_eq!(gt, wt, "query {qi}: ranking");
+        assert_stats_identical(gs, ws, &format!("batch query {qi}"));
+    }
+    // Both paths consumed the same nonce stream.
+    assert_eq!(r_serial.next_u64(), r_batch.next_u64());
+    assert_eq!(pool.panicked(), 0);
+}
+
+#[test]
+fn query_batch_empty_and_single() {
+    let chip = Arc::new(build_chip(200, 128, 2, 51, Metric::Mips));
+    let pool = ThreadPool::new(2);
+    let mut rng = Pcg::new(1);
+    assert!(DircChip::query_batch(&chip, &pool, &[], 5, &mut rng).is_empty());
+    let q: Vec<i8> = (0..128).map(|_| rng.int_in(-128, 127) as i8).collect();
+    let mut r1 = Pcg::new(2);
+    let mut r2 = Pcg::new(2);
+    let want = chip.query(&q, 5, &mut r1);
+    let got = DircChip::query_batch(&chip, &pool, std::slice::from_ref(&q), 5, &mut r2);
+    assert_eq!(got.len(), 1);
+    assert_eq!(got[0].0, want.0);
+}
+
+#[test]
+fn pooled_sim_engine_end_to_end_identical() {
+    let mut rng = Pcg::new(61);
+    let fp = random_unit_rows(384, 128, &mut rng);
+    let db = quantize(&fp, 384, 128, QuantScheme::Int8);
+    let cfg = || ChipConfig {
+        cores: 4,
+        map_points: 40,
+        ..ChipConfig::paper_default(128, Metric::Cosine)
+    };
+    let serial = SimEngine::new(cfg(), &db);
+    let pool = Arc::new(ThreadPool::new(4));
+    let pooled = SimEngine::with_pool(cfg(), &db, Some(Arc::clone(&pool)));
+
+    let mut qrng = Pcg::new(7);
+    let queries: Vec<Vec<i8>> = (0..6)
+        .map(|_| (0..128).map(|_| qrng.int_in(-128, 127) as i8).collect())
+        .collect();
+
+    // Single-query path.
+    for (qi, q) in queries.iter().enumerate() {
+        let mut r1 = Pcg::new(qi as u64);
+        let mut r2 = Pcg::new(qi as u64);
+        let (t1, s1) = serial.retrieve(q, 5, &mut r1);
+        let (t2, s2) = pooled.retrieve(q, 5, &mut r2);
+        assert_eq!(t1, t2, "query {qi}");
+        assert_stats_identical(&s1, &s2, &format!("engine query {qi}"));
+    }
+
+    // Batch path vs the default serial stream.
+    let mut r1 = Pcg::new(99);
+    let mut r2 = Pcg::new(99);
+    let want = Engine::retrieve_batch(&serial, &queries, 5, &mut r1);
+    let got = pooled.retrieve_batch(&queries, 5, &mut r2);
+    for (qi, ((gt, gs), (wt, ws))) in got.iter().zip(want.iter()).enumerate() {
+        assert_eq!(gt, wt, "batch query {qi}");
+        assert_stats_identical(gs, ws, &format!("engine batch query {qi}"));
+    }
+}
