@@ -17,18 +17,39 @@
 //! as a queries × cores job matrix ([`DircChip::query_batch`]). With or
 //! without a pool, results are bit-identical to the serial path — the
 //! determinism contract documented in [`crate::dirc::chip`].
+//!
+//! ## Online mutation (snapshot swap)
+//!
+//! Both engines support [`Engine::mutate`]: the chip lives behind an
+//! `RwLock<Arc<DircChip>>` snapshot. Queries clone the `Arc` and run
+//! entirely lock-free on the snapshot; a mutation clones the chip struct
+//! (cheap — cores are `Arc`s, so only *touched* cores deep-copy), applies
+//! the write through the pulse-accurate [`crate::dirc::write::WriteModel`]
+//! path, and publishes the new snapshot. Queries already in flight on
+//! untouched cores proceed in parallel with the write — the
+//! query-stationary dataflow is never disturbed mid-query.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, RwLock};
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
-use crate::dirc::chip::{ChipConfig, DircChip, QueryStats};
-use crate::retrieval::quant::Quantized;
+use crate::coordinator::request::Mutation;
+use crate::dirc::chip::{ChipConfig, DircChip, DocPayload, MutationStats, QueryStats};
+use crate::retrieval::quant::{QuantScheme, Quantized};
 use crate::retrieval::score::{finalize_scores, norm_i8, Metric};
 use crate::retrieval::topk::{ScoredDoc, TopK};
 use crate::runtime::{PjrtRuntime, ResidentDb};
 use crate::util::pool::ThreadPool;
 use crate::util::rng::Pcg;
+
+/// Result of one engine-level mutation.
+#[derive(Debug, Clone, Default)]
+pub struct MutationOutcome {
+    /// Global ids assigned to added documents.
+    pub added_ids: Vec<u64>,
+    /// Measured write accounting from the chip.
+    pub stats: MutationStats,
+}
 
 /// A retrieval engine: quantised query in, ranked documents + hardware
 /// stats out.
@@ -58,14 +79,84 @@ pub trait Engine: Send + Sync {
         1
     }
 
+    /// Apply a corpus mutation (add/delete/update documents) to the live
+    /// chip. Engines that serve a static corpus keep the default, which
+    /// refuses (callers observe the `Err` through the mutation-response
+    /// channel).
+    fn mutate(&self, _m: &Mutation, _rng: &mut Pcg) -> Result<MutationOutcome> {
+        bail!("this engine serves a static corpus (no online mutation path)")
+    }
+
     fn dim(&self) -> usize;
 
     fn n_docs(&self) -> usize;
 }
 
+/// Quantise FP32 mutation payloads onto the chip's *frozen* integer
+/// grid: the corpus scale was fixed at build time, and integer MIPS
+/// scores are only comparable across documents that share it (cosine
+/// would survive a per-batch scale through the stored norms, but MIPS
+/// would not), so new payloads map through `chip.quant_scale()` with
+/// saturation at the scheme's range. Integer-domain norms per row, as
+/// the core's ReRAM buffer stores them.
+fn quantize_payloads<'a>(
+    embs: impl Iterator<Item = &'a [f32]>,
+    chip: &DircChip,
+) -> Result<Vec<DocPayload>> {
+    let dim = chip.cfg.dim;
+    let scheme = match chip.cfg.bits {
+        4 => QuantScheme::Int4,
+        8 => QuantScheme::Int8,
+        other => bail!("chip precision INT{other} has no ingest quantiser"),
+    };
+    let inv = 1.0 / chip.quant_scale();
+    let (qmin, qmax) = (scheme.qmin() as f32, scheme.qmax() as f32);
+    embs.map(|e| {
+        if e.len() != dim {
+            bail!("mutation doc dim {} != chip dim {dim}", e.len());
+        }
+        let values: Vec<i8> = e
+            .iter()
+            .map(|&v| (v * inv).round().clamp(qmin, qmax) as i8)
+            .collect();
+        Ok(DocPayload::from_values(values))
+    })
+    .collect()
+}
+
+/// Apply one mutation to a chip (shared by both engines).
+fn apply_mutation(chip: &mut DircChip, m: &Mutation, rng: &mut Pcg) -> Result<MutationOutcome> {
+    match m {
+        Mutation::Add { docs } => {
+            let payloads = quantize_payloads(docs.iter().map(Vec::as_slice), chip)?;
+            let (added_ids, stats) = chip.add_docs(&payloads, rng)?;
+            Ok(MutationOutcome { added_ids, stats })
+        }
+        Mutation::Delete { ids } => {
+            let stats = chip.delete_docs(ids);
+            Ok(MutationOutcome { added_ids: Vec::new(), stats })
+        }
+        Mutation::Update { docs } => {
+            let payloads =
+                quantize_payloads(docs.iter().map(|(_, e)| e.as_slice()), chip)?;
+            let updates: Vec<(u64, DocPayload)> = docs
+                .iter()
+                .zip(payloads)
+                .map(|(&(id, _), p)| (id, p))
+                .collect();
+            let stats = chip.update_docs(&updates, rng)?;
+            Ok(MutationOutcome { added_ids: Vec::new(), stats })
+        }
+    }
+}
+
 /// Pure-simulator engine.
 pub struct SimEngine {
-    chip: Arc<DircChip>,
+    chip: RwLock<Arc<DircChip>>,
+    /// Serialises mutations so the whole clone-mutate-publish sequence
+    /// can run without holding the snapshot lock (queries only contend
+    /// with the final pointer swap).
+    mutate_lock: Mutex<()>,
     pool: Option<Arc<ThreadPool>>,
 }
 
@@ -80,25 +171,32 @@ impl SimEngine {
         db: &Quantized,
         pool: Option<Arc<ThreadPool>>,
     ) -> SimEngine {
-        SimEngine { chip: Arc::new(DircChip::build(cfg, db)), pool }
+        SimEngine {
+            chip: RwLock::new(Arc::new(DircChip::build(cfg, db))),
+            mutate_lock: Mutex::new(()),
+            pool,
+        }
     }
 
-    pub fn chip(&self) -> &DircChip {
-        &self.chip
+    /// The current chip snapshot. Mutations swap the snapshot; a held
+    /// `Arc` keeps observing the pre-mutation corpus.
+    pub fn chip(&self) -> Arc<DircChip> {
+        self.chip.read().unwrap().clone()
     }
 }
 
 impl Engine for SimEngine {
     fn retrieve(&self, q: &[i8], k: usize, rng: &mut Pcg) -> (Vec<ScoredDoc>, QueryStats) {
+        let chip = self.chip();
         match &self.pool {
             // A single query is a batch of one: its per-core jobs run on
             // the shared pool (no per-call thread spawning).
             Some(pool) => {
                 let batch = [q.to_vec()];
-                let mut out = DircChip::query_batch(&self.chip, pool, &batch, k, rng);
+                let mut out = DircChip::query_batch(&chip, pool, &batch, k, rng);
                 out.pop().expect("one result for one query")
             }
-            None => self.chip.query_on(q, k, rng, 1),
+            None => chip.query_on(q, k, rng, 1),
         }
     }
 
@@ -108,9 +206,10 @@ impl Engine for SimEngine {
         k: usize,
         rng: &mut Pcg,
     ) -> Vec<(Vec<ScoredDoc>, QueryStats)> {
+        let chip = self.chip();
         match &self.pool {
-            Some(pool) => DircChip::query_batch(&self.chip, pool, queries, k, rng),
-            None => queries.iter().map(|q| self.retrieve(q, k, rng)).collect(),
+            Some(pool) => DircChip::query_batch(&chip, pool, queries, k, rng),
+            None => queries.iter().map(|q| chip.query_on(q, k, rng, 1)).collect(),
         }
     }
 
@@ -124,12 +223,69 @@ impl Engine for SimEngine {
         }
     }
 
+    fn mutate(&self, m: &Mutation, rng: &mut Pcg) -> Result<MutationOutcome> {
+        // Writers serialise on mutate_lock; the simulated write-verify
+        // loop runs on a private clone, so concurrent queries keep
+        // reading their snapshot until the O(1) pointer swap below.
+        let _writer = self.mutate_lock.lock().unwrap();
+        // Copy-on-write: the struct clone shares every core through its
+        // Arc; only cores the mutation touches deep-copy inside.
+        let mut next = DircChip::clone(&self.chip());
+        let out = apply_mutation(&mut next, m, rng)?;
+        *self.chip.write().unwrap() = Arc::new(next);
+        Ok(out)
+    }
+
     fn dim(&self) -> usize {
-        self.chip.cfg.dim
+        self.chip().cfg.dim
     }
 
     fn n_docs(&self) -> usize {
-        self.chip.n_docs()
+        self.chip().n_docs()
+    }
+}
+
+/// The serving engine's swappable state: one chip snapshot plus the
+/// PJRT-resident document block and the flat slot-indexed views derived
+/// from it (rebuilt on every mutation).
+struct ServeState {
+    chip: Arc<DircChip>,
+    /// The whole database (every slot, tombstones included), resident on
+    /// the PJRT device.
+    block: ResidentDb,
+    /// Global doc id per slot.
+    ids: Vec<u64>,
+    /// Slot validity (tombstone filter for the top-k).
+    live: Vec<bool>,
+    /// Stored norms per slot (cosine finalisation).
+    norms: Vec<f32>,
+    /// Flat slot offset of each core's block (for flip corrections).
+    offsets: Vec<usize>,
+}
+
+impl ServeState {
+    fn build(chip: Arc<DircChip>, runtime: &PjrtRuntime) -> Result<ServeState> {
+        let dim = chip.cfg.dim;
+        let mut values: Vec<i8> = Vec::new();
+        let mut ids = Vec::new();
+        let mut live = Vec::new();
+        let mut norms = Vec::new();
+        let mut offsets = Vec::with_capacity(chip.cores().len());
+        for core in chip.cores() {
+            offsets.push(ids.len());
+            values.extend_from_slice(core.macro_().docs());
+            ids.extend_from_slice(core.doc_ids());
+            live.extend_from_slice(core.live());
+            norms.extend_from_slice(core.norms());
+        }
+        let n_slots = ids.len();
+        let artifact = runtime
+            .manifest()
+            .best_block("mips_plain", n_slots.max(1), dim)?
+            .name
+            .clone();
+        let block = runtime.upload_db(&artifact, &values, n_slots, dim, None)?;
+        Ok(ServeState { chip, block, ids, live, norms, offsets })
     }
 }
 
@@ -142,15 +298,18 @@ impl Engine for SimEngine {
 /// top-k in Rust. Compared to the original per-core exec fan-out this cut
 /// retrieve latency ~14x (EXPERIMENTS.md §Perf). With a pool attached,
 /// the sense pass shards across cores in parallel.
+///
+/// Mutations re-program the chip snapshot and re-upload the resident
+/// block (the device copy must track the NVM contents); queries holding
+/// the read lock drain first, so the PJRT scores and the chip flips are
+/// always taken from the same corpus version.
 pub struct ServingEngine {
-    chip: Arc<DircChip>,
+    state: RwLock<ServeState>,
+    /// Serialises mutations; the expensive chip re-program + PJRT block
+    /// re-upload happen outside the state lock (queries only contend
+    /// with the final state swap).
+    mutate_lock: Mutex<()>,
     runtime: Arc<PjrtRuntime>,
-    /// The whole database, resident on the PJRT device.
-    block: ResidentDb,
-    /// Stored norms (all docs, for cosine finalisation).
-    norms: Vec<f32>,
-    /// Doc-id base per core (for flip corrections).
-    bases: Vec<u64>,
     metric: Metric,
     pool: Option<Arc<ThreadPool>>,
 }
@@ -175,29 +334,19 @@ impl ServingEngine {
     ) -> Result<ServingEngine> {
         let metric = cfg.metric;
         let chip = Arc::new(DircChip::build(cfg, db));
-        let artifact = runtime
-            .manifest()
-            .best_block("mips_plain", db.n.max(1), db.dim)?
-            .name
-            .clone();
-        let block = runtime.upload_db(&artifact, &db.values, db.n, db.dim, None)?;
-        let per_core = db.n.div_ceil(chip.cores().len());
-        let bases = (0..chip.cores().len())
-            .map(|c| ((c * per_core).min(db.n)) as u64)
-            .collect();
+        let state = ServeState::build(chip, &runtime)?;
         Ok(ServingEngine {
-            chip,
+            state: RwLock::new(state),
+            mutate_lock: Mutex::new(()),
             runtime,
-            block,
-            norms: db.norms.clone(),
-            bases,
             metric,
             pool,
         })
     }
 
-    pub fn chip(&self) -> &DircChip {
-        &self.chip
+    /// The current chip snapshot.
+    pub fn chip(&self) -> Arc<DircChip> {
+        self.state.read().unwrap().chip.clone()
     }
 
     pub fn runtime(&self) -> &PjrtRuntime {
@@ -208,25 +357,28 @@ impl ServingEngine {
 impl Engine for ServingEngine {
     fn retrieve(&self, q: &[i8], k: usize, rng: &mut Pcg) -> (Vec<ScoredDoc>, QueryStats) {
         let q_norm = norm_i8(q);
+        // Hold the read lock across the whole pass: the PJRT block and
+        // the chip snapshot must come from the same corpus version.
+        let state = self.state.read().unwrap();
 
         // Hardware pass: sensing + accounting (no functional compute),
         // sharded across cores on the shared pool when one is attached.
         let (per_core_flips, stats) = match &self.pool {
-            Some(pool) => DircChip::sense_pass_pool(&self.chip, pool, k, rng),
-            None => self.chip.sense_pass(k, rng),
+            Some(pool) => DircChip::sense_pass_pool(&state.chip, pool, k, rng),
+            None => state.chip.sense_pass(k, rng),
         };
 
         // Functional pass: one PJRT execution for the whole database.
         let ips = self
             .runtime
-            .mips_scores(&self.block, q)
+            .mips_scores(&state.block, q)
             .expect("PJRT execution failed on the serve path");
         let mut ips: Vec<i64> = ips.into_iter().map(|v| v as i64).collect();
 
-        // Exact flip corrections, offset into the global doc space.
+        // Exact flip corrections, offset into the flat slot space.
         for (c, flips) in per_core_flips.iter().enumerate() {
-            let core = &self.chip.cores()[c];
-            let base = self.bases[c] as usize;
+            let core = &state.chip.cores()[c];
+            let base = state.offsets[c];
             for (doc, dq) in core.macro_().score_corrections(flips, q) {
                 ips[base + doc as usize] += dq;
             }
@@ -235,22 +387,38 @@ impl Engine for ServingEngine {
         let scores = finalize_scores(
             &ips,
             self.metric,
-            if self.metric == Metric::Cosine { Some(&self.norms) } else { None },
+            if self.metric == Metric::Cosine { Some(&state.norms) } else { None },
             q_norm,
         );
         let mut topk = TopK::new(k);
         for (i, &s) in scores.iter().enumerate() {
-            topk.push(ScoredDoc { doc_id: i as u64, score: s });
+            if state.live[i] {
+                topk.push(ScoredDoc { doc_id: state.ids[i], score: s });
+            }
         }
         (topk.into_sorted(), stats)
     }
 
+    fn mutate(&self, m: &Mutation, rng: &mut Pcg) -> Result<MutationOutcome> {
+        // Writers serialise here; the chip re-program and the full
+        // PJRT block re-upload run without the state lock so in-flight
+        // queries never stall behind a device upload — only the final
+        // swap takes the write lock.
+        let _writer = self.mutate_lock.lock().unwrap();
+        let base = self.state.read().unwrap().chip.clone();
+        let mut next = DircChip::clone(&base);
+        let out = apply_mutation(&mut next, m, rng)?;
+        let next_state = ServeState::build(Arc::new(next), &self.runtime)?;
+        *self.state.write().unwrap() = next_state;
+        Ok(out)
+    }
+
     fn dim(&self) -> usize {
-        self.chip.cfg.dim
+        self.state.read().unwrap().chip.cfg.dim
     }
 
     fn n_docs(&self) -> usize {
-        self.chip.n_docs()
+        self.state.read().unwrap().chip.n_docs()
     }
 }
 
@@ -325,6 +493,31 @@ mod tests {
             assert_eq!(gs.sense, ws.sense, "query {qi}");
             assert_eq!(gs.cycles, ws.cycles, "query {qi}");
         }
+    }
+
+    #[test]
+    fn sim_engine_mutation_swaps_snapshot() {
+        let q = db(200, 128, 7);
+        let eng = SimEngine::new(cfg(128, 4), &q);
+        let before = eng.chip();
+        let mut rng = Pcg::new(11);
+        let new_doc: Vec<f32> = (0..128).map(|i| ((i % 7) as f32 - 3.0) / 10.0).collect();
+        let out = eng
+            .mutate(&Mutation::Add { docs: vec![new_doc] }, &mut rng)
+            .expect("mutation");
+        assert_eq!(out.added_ids, vec![200]);
+        assert_eq!(out.stats.docs_added, 1);
+        assert!(out.stats.write_pulses > 0);
+        // Old snapshot unchanged; new one sees the doc.
+        assert_eq!(before.n_docs(), 200);
+        assert_eq!(eng.n_docs(), 201);
+
+        let del = eng
+            .mutate(&Mutation::Delete { ids: vec![200, 9999] }, &mut rng)
+            .expect("delete");
+        assert_eq!(del.stats.docs_deleted, 1);
+        assert_eq!(del.stats.missing_ids, 1);
+        assert_eq!(eng.n_docs(), 200);
     }
 
     // ServingEngine vs SimEngine equivalence lives in rust/tests/

@@ -26,6 +26,12 @@ struct Inner {
     sim_energy_j: Welford,
     sim_flips: u64,
     sim_resenses: u64,
+    mutations: u64,
+    docs_written: u64,
+    docs_deleted: u64,
+    cells_written: u64,
+    write_energy_j: f64,
+    write_time_s: f64,
 }
 
 /// Snapshot of metrics at a point in time.
@@ -43,6 +49,17 @@ pub struct Snapshot {
     pub sim_energy_mean_j: f64,
     pub sim_flips: u64,
     pub sim_resenses: u64,
+    /// Mutation batches applied through the serve-mode mutation channel.
+    pub mutations: u64,
+    /// Documents programmed (adds + updates).
+    pub docs_written: u64,
+    /// Documents tombstoned.
+    pub docs_deleted: u64,
+    /// MLC cells re-programmed.
+    pub cells_written: u64,
+    /// Simulated write energy (J) and serialised write time (s), summed.
+    pub write_energy_j: f64,
+    pub write_time_s: f64,
 }
 
 impl Default for Metrics {
@@ -65,6 +82,12 @@ impl Metrics {
                 sim_energy_j: Welford::default(),
                 sim_flips: 0,
                 sim_resenses: 0,
+                mutations: 0,
+                docs_written: 0,
+                docs_deleted: 0,
+                cells_written: 0,
+                write_energy_j: 0.0,
+                write_time_s: 0.0,
             }),
             started: Instant::now(),
         }
@@ -88,6 +111,18 @@ impl Metrics {
         self.inner.lock().unwrap().errors += 1;
     }
 
+    /// Record one applied mutation batch (measured write accounting).
+    pub fn record_mutation(&self, stats: &crate::dirc::chip::MutationStats) {
+        let mut m = self.inner.lock().unwrap();
+        m.mutations += 1;
+        m.docs_written += (stats.docs_added + stats.docs_updated) as u64;
+        m.docs_deleted += stats.docs_deleted as u64;
+        let total = stats.total();
+        m.cells_written += total.cells_written as u64;
+        m.write_energy_j += total.energy_j;
+        m.write_time_s += total.time_s;
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         let m = self.inner.lock().unwrap();
         let uptime = self.started.elapsed().as_secs_f64();
@@ -104,6 +139,12 @@ impl Metrics {
             sim_energy_mean_j: m.sim_energy_j.mean(),
             sim_flips: m.sim_flips,
             sim_resenses: m.sim_resenses,
+            mutations: m.mutations,
+            docs_written: m.docs_written,
+            docs_deleted: m.docs_deleted,
+            cells_written: m.cells_written,
+            write_energy_j: m.write_energy_j,
+            write_time_s: m.write_time_s,
         }
     }
 }
@@ -117,6 +158,8 @@ impl Snapshot {
                 "(embed {:.3} ms, retrieve {:.3} ms)\n",
                 "simulated chip: latency {:.2} µs/query, energy {:.3} µJ/query, ",
                 "{} flips, {} re-senses\n",
+                "ingest: {} mutations ({} docs written, {} deleted, {} cells), ",
+                "write cost {:.1} µJ / {:.3} ms\n",
             ),
             self.served,
             self.errors,
@@ -130,6 +173,12 @@ impl Snapshot {
             self.sim_energy_mean_j * 1e6,
             self.sim_flips,
             self.sim_resenses,
+            self.mutations,
+            self.docs_written,
+            self.docs_deleted,
+            self.cells_written,
+            self.write_energy_j * 1e6,
+            self.write_time_s * 1e3,
         )
     }
 }
@@ -172,5 +221,32 @@ mod tests {
         assert_eq!(s.sim_flips, 30);
         assert_eq!(s.sim_resenses, 10);
         assert!(s.render().contains("served=10"));
+    }
+
+    #[test]
+    fn record_mutation_accumulates() {
+        use crate::dirc::chip::MutationStats;
+        use crate::dirc::write::UpdateCost;
+        let m = Metrics::new();
+        let stats = MutationStats {
+            docs_added: 2,
+            docs_updated: 1,
+            docs_deleted: 3,
+            per_core: vec![
+                UpdateCost { time_s: 1e-3, energy_j: 2e-6, cells_written: 100 },
+                UpdateCost { time_s: 2e-3, energy_j: 3e-6, cells_written: 50 },
+            ],
+            ..MutationStats::default()
+        };
+        m.record_mutation(&stats);
+        m.record_mutation(&stats);
+        let s = m.snapshot();
+        assert_eq!(s.mutations, 2);
+        assert_eq!(s.docs_written, 6);
+        assert_eq!(s.docs_deleted, 6);
+        assert_eq!(s.cells_written, 300);
+        assert!((s.write_energy_j - 10e-6).abs() < 1e-12);
+        assert!((s.write_time_s - 6e-3).abs() < 1e-12);
+        assert!(s.render().contains("2 mutations"));
     }
 }

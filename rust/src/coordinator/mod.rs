@@ -21,6 +21,6 @@ pub mod metrics;
 pub mod request;
 pub mod server;
 
-pub use engine::{Engine, ServingEngine, SimEngine};
-pub use request::{Query, Request, Response};
+pub use engine::{Engine, MutationOutcome, ServingEngine, SimEngine};
+pub use request::{Mutation, MutationResponse, Query, Request, RequestKind, Response};
 pub use server::{Coordinator, CoordinatorConfig};

@@ -1,6 +1,6 @@
 //! Request/response types of the serving path.
 
-use crate::dirc::chip::QueryStats;
+use crate::dirc::chip::{MutationStats, QueryStats};
 use crate::retrieval::topk::ScoredDoc;
 
 /// Query payload: either raw text tokens (embedded on-path through the
@@ -11,12 +11,49 @@ pub enum Query {
     Embedding(Vec<f32>),
 }
 
-/// One retrieval request.
+/// A corpus mutation: live document writes on the serving chip. Document
+/// payloads arrive as FP32 embeddings **in the same space as the corpus
+/// the chip was built from**: the engine quantises them onto the chip's
+/// frozen build-time grid (`DircChip::quant_scale`), with integer-domain
+/// norms, so integer MIPS scores stay comparable across resident and
+/// ingested documents. Components far outside the original corpus range
+/// saturate at the scheme's limits.
+#[derive(Debug, Clone)]
+pub enum Mutation {
+    /// Ingest new documents; ids are assigned by the chip and returned in
+    /// the [`MutationResponse`].
+    Add { docs: Vec<Vec<f32>> },
+    /// Tombstone resident documents by global id.
+    Delete { ids: Vec<u64> },
+    /// Re-program resident documents in place.
+    Update { docs: Vec<(u64, Vec<f32>)> },
+}
+
+impl Mutation {
+    /// Documents this mutation touches (for admission/metrics).
+    pub fn n_docs(&self) -> usize {
+        match self {
+            Mutation::Add { docs } => docs.len(),
+            Mutation::Delete { ids } => ids.len(),
+            Mutation::Update { docs } => docs.len(),
+        }
+    }
+}
+
+/// What a request asks the coordinator to do.
+#[derive(Debug, Clone)]
+pub enum RequestKind {
+    /// Retrieve the top-k documents for a query.
+    Retrieve { query: Query, k: usize },
+    /// Apply a corpus mutation through the serve-mode mutation channel.
+    Mutate(Mutation),
+}
+
+/// One coordinator request.
 #[derive(Debug, Clone)]
 pub struct Request {
     pub id: u64,
-    pub query: Query,
-    pub k: usize,
+    pub kind: RequestKind,
 }
 
 /// The response: ranked documents + hardware accounting + wall times.
@@ -37,6 +74,22 @@ pub struct Response {
     pub total_s: f64,
 }
 
+/// The mutation response: assigned ids + the measured write accounting.
+#[derive(Debug, Clone)]
+pub struct MutationResponse {
+    pub id: u64,
+    /// Global ids assigned to `Mutation::Add` documents (empty otherwise).
+    pub added_ids: Vec<u64>,
+    /// Measured write cost (pulses, cycles, per-macro energy/time).
+    pub stats: MutationStats,
+    /// Host wall-clock spent waiting for a query-idle admission window.
+    pub queued_s: f64,
+    /// Host wall-clock of the engine mutation itself.
+    pub apply_s: f64,
+    /// End-to-end host latency from submission (s).
+    pub total_s: f64,
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -52,5 +105,23 @@ mod tests {
             }
             _ => unreachable!(),
         }
+    }
+
+    #[test]
+    fn mutation_doc_counts() {
+        assert_eq!(Mutation::Add { docs: vec![vec![0.0; 4]; 3] }.n_docs(), 3);
+        assert_eq!(Mutation::Delete { ids: vec![1, 2] }.n_docs(), 2);
+        assert_eq!(Mutation::Update { docs: vec![(7, vec![0.0; 4])] }.n_docs(), 1);
+    }
+
+    #[test]
+    fn request_kinds() {
+        let r = Request {
+            id: 1,
+            kind: RequestKind::Retrieve { query: Query::Embedding(vec![0.0; 2]), k: 5 },
+        };
+        let m = Request { id: 2, kind: RequestKind::Mutate(Mutation::Delete { ids: vec![9] }) };
+        assert!(matches!(r.kind, RequestKind::Retrieve { k: 5, .. }));
+        assert!(matches!(m.kind, RequestKind::Mutate(Mutation::Delete { .. })));
     }
 }

@@ -1,29 +1,44 @@
 //! The coordinator server: ingest thread (embed batching + quantisation)
-//! feeding a pool of retrieval workers, with shared metrics and graceful
-//! shutdown. Thread-based by design: PJRT execution is a blocking FFI
-//! call, so threads + channels beat an async runtime here (see DESIGN.md
-//! environment substitutions).
+//! feeding a pool of retrieval workers, plus the serve-mode mutation
+//! channel, with shared metrics and graceful shutdown. Thread-based by
+//! design: PJRT execution is a blocking FFI call, so threads + channels
+//! beat an async runtime here (see DESIGN.md environment substitutions).
 //!
 //! Topology:
 //!
 //! ```text
-//!  submit() -> ingest queue -> [ingest thread: batcher -> PJRT embed ->
-//!      quantise] -> work queue -> [N retrieval workers: Engine] ->
-//!      per-request response channel
+//!  submit()          -> ingest queue -> [ingest thread: batcher -> PJRT
+//!      embed -> quantise] -> work queue -> [N retrieval workers: Engine]
+//!      -> per-request response channel
+//!  submit_mutation() -> mutation queue -> [mutation worker: admission
+//!      policy -> Engine::mutate] -> per-request mutation response channel
 //! ```
+//!
+//! ## Mutation/query interleaving contract
+//!
+//! The mutation worker admits a write only into a *query-idle* window: it
+//! waits until no retrieval work is in flight (`inflight == 0`), bounded
+//! by `mutation_max_defer` so a saturated chip cannot starve ingest
+//! forever. Because the engines swap corpus snapshots (see
+//! [`crate::coordinator::engine`]), queries that raced past admission
+//! keep executing on the pre-mutation snapshot — on untouched cores they
+//! share even the storage — and every query observes exactly one corpus
+//! version. Mutations apply in submission order (single worker).
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
 use crate::coordinator::batcher::{BatchPolicy, Batcher};
 use crate::coordinator::engine::Engine;
 use crate::coordinator::metrics::{Metrics, Snapshot};
-use crate::coordinator::request::{Query, Request, Response};
+use crate::coordinator::request::{
+    Mutation, MutationResponse, Query, Request, RequestKind, Response,
+};
 use crate::data::text::{bow_features, HASH_BUCKETS};
 use crate::retrieval::quant::QuantScheme;
 use crate::runtime::PjrtRuntime;
@@ -44,6 +59,10 @@ pub struct CoordinatorConfig {
     /// FFI call per query) report capacity 1 and keep one-query-per-worker
     /// fan-out. 1 forces strict one-at-a-time dispatch everywhere.
     pub retrieve_batch: usize,
+    /// Longest a mutation defers waiting for a query-idle window before
+    /// it is admitted anyway (anti-starvation bound of the admission
+    /// policy).
+    pub mutation_max_defer: Duration,
     pub seed: u64,
 }
 
@@ -54,6 +73,7 @@ impl Default for CoordinatorConfig {
             batch: BatchPolicy::default(),
             scheme: QuantScheme::Int8,
             retrieve_batch: 8,
+            mutation_max_defer: Duration::from_millis(20),
             seed: 0xC00D,
         }
     }
@@ -68,16 +88,28 @@ struct Pending {
 struct WorkItem {
     pending: Pending,
     q_int: Vec<i8>,
+    k: usize,
     embed_s: f64,
+}
+
+struct MutPending {
+    req: Request,
+    submitted: Instant,
+    resp_tx: Sender<MutationResponse>,
 }
 
 /// Running coordinator handle.
 pub struct Coordinator {
     ingest_tx: Option<Sender<Pending>>,
+    mutation_tx: Option<Sender<MutPending>>,
     threads: Vec<JoinHandle<()>>,
     metrics: Arc<Metrics>,
     next_id: AtomicU64,
     stop: Arc<AtomicBool>,
+    /// Accepted retrievals not yet answered — counted from `submit`
+    /// (before the ingest thread even sees them, so queued-but-undrained
+    /// queries are visible to the mutation admission policy).
+    inflight: Arc<AtomicU64>,
 }
 
 impl Coordinator {
@@ -88,25 +120,43 @@ impl Coordinator {
         runtime: Arc<PjrtRuntime>,
         cfg: CoordinatorConfig,
     ) -> Coordinator {
+        Self::start_inner(engine, Some(runtime), cfg)
+    }
+
+    /// Start without a PJRT runtime: pre-embedded queries
+    /// ([`Query::Embedding`]) and the mutation channel work as usual;
+    /// token queries fail (recorded as errors). This is how the pure
+    /// simulator serves when the PJRT backend is not compiled in.
+    pub fn start_sim(engine: Arc<dyn Engine>, cfg: CoordinatorConfig) -> Coordinator {
+        Self::start_inner(engine, None, cfg)
+    }
+
+    fn start_inner(
+        engine: Arc<dyn Engine>,
+        runtime: Option<Arc<PjrtRuntime>>,
+        cfg: CoordinatorConfig,
+    ) -> Coordinator {
         let metrics = Arc::new(Metrics::new());
         let stop = Arc::new(AtomicBool::new(false));
+        let inflight = Arc::new(AtomicU64::new(0));
         let (ingest_tx, ingest_rx) = channel::<Pending>();
         let (work_tx, work_rx) = channel::<WorkItem>();
+        let (mutation_tx, mutation_rx) = channel::<MutPending>();
         let work_rx = Arc::new(Mutex::new(work_rx));
 
         let mut threads = Vec::new();
 
         // Ingest thread: batches token queries through the embedder.
         {
-            let runtime = Arc::clone(&runtime);
             let cfg2 = cfg.clone();
             let stop2 = Arc::clone(&stop);
             let metrics2 = Arc::clone(&metrics);
+            let inflight2 = Arc::clone(&inflight);
             threads.push(
                 std::thread::Builder::new()
                     .name("dirc-ingest".into())
                     .spawn(move || {
-                        ingest_loop(ingest_rx, work_tx, runtime, cfg2, stop2, metrics2)
+                        ingest_loop(ingest_rx, work_tx, runtime, cfg2, stop2, metrics2, inflight2)
                     })
                     .expect("spawn ingest"),
             );
@@ -117,39 +167,90 @@ impl Coordinator {
             let engine = Arc::clone(&engine);
             let work_rx = Arc::clone(&work_rx);
             let metrics2 = Arc::clone(&metrics);
+            let inflight2 = Arc::clone(&inflight);
             let seed = cfg.seed ^ (w as u64) << 32;
             let batch_max = cfg.retrieve_batch.max(1);
             threads.push(
                 std::thread::Builder::new()
                     .name(format!("dirc-worker-{w}"))
-                    .spawn(move || worker_loop(work_rx, engine, metrics2, seed, batch_max))
+                    .spawn(move || {
+                        worker_loop(work_rx, engine, metrics2, inflight2, seed, batch_max)
+                    })
                     .expect("spawn worker"),
+            );
+        }
+
+        // Mutation worker: single thread so mutations apply in submission
+        // order, gated by the query-idle admission policy.
+        {
+            let engine = Arc::clone(&engine);
+            let metrics2 = Arc::clone(&metrics);
+            let inflight2 = Arc::clone(&inflight);
+            let stop2 = Arc::clone(&stop);
+            let max_defer = cfg.mutation_max_defer;
+            let seed = cfg.seed ^ 0x9E37_79B9_7F4A_7C15;
+            threads.push(
+                std::thread::Builder::new()
+                    .name("dirc-mutation".into())
+                    .spawn(move || {
+                        mutation_loop(mutation_rx, engine, metrics2, inflight2, stop2, max_defer, seed)
+                    })
+                    .expect("spawn mutation worker"),
             );
         }
 
         Coordinator {
             ingest_tx: Some(ingest_tx),
+            mutation_tx: Some(mutation_tx),
             threads,
             metrics,
             next_id: AtomicU64::new(1),
             stop,
+            inflight,
         }
     }
 
-    /// Submit a request; returns the response channel.
+    /// Submit a retrieval request; returns the response channel.
     pub fn submit(&self, query: Query, k: usize) -> Result<(u64, Receiver<Response>)> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (resp_tx, resp_rx) = channel();
         let pending = Pending {
-            req: Request { id, query, k },
+            req: Request { id, kind: RequestKind::Retrieve { query, k } },
             submitted: Instant::now(),
             resp_tx,
         };
-        self.ingest_tx
+        // Count the query in flight from acceptance, so a mutation
+        // racing a just-submitted burst sees it before the ingest
+        // thread drains the queue.
+        self.inflight.fetch_add(1, Ordering::SeqCst);
+        let sent = self
+            .ingest_tx
+            .as_ref()
+            .ok_or_else(|| anyhow!("coordinator stopped"))
+            .and_then(|tx| tx.send(pending).map_err(|_| anyhow!("ingest thread gone")));
+        if let Err(e) = sent {
+            self.inflight.fetch_sub(1, Ordering::SeqCst);
+            return Err(e);
+        }
+        Ok((id, resp_rx))
+    }
+
+    /// Submit a corpus mutation on the serve-mode mutation channel;
+    /// returns the mutation-response channel. The write is admitted into
+    /// the next query-idle window (bounded by `mutation_max_defer`).
+    pub fn submit_mutation(&self, mutation: Mutation) -> Result<(u64, Receiver<MutationResponse>)> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (resp_tx, resp_rx) = channel();
+        let pending = MutPending {
+            req: Request { id, kind: RequestKind::Mutate(mutation) },
+            submitted: Instant::now(),
+            resp_tx,
+        };
+        self.mutation_tx
             .as_ref()
             .ok_or_else(|| anyhow!("coordinator stopped"))?
             .send(pending)
-            .map_err(|_| anyhow!("ingest thread gone"))?;
+            .map_err(|_| anyhow!("mutation worker gone"))?;
         Ok((id, resp_rx))
     }
 
@@ -157,10 +258,12 @@ impl Coordinator {
         self.metrics.snapshot()
     }
 
-    /// Graceful shutdown: drain queues, stop threads.
+    /// Graceful shutdown: drain queues — in-flight mutation requests
+    /// included — then stop threads and return the final snapshot.
     pub fn shutdown(mut self) -> Snapshot {
         self.stop.store(true, Ordering::SeqCst);
         self.ingest_tx.take(); // close ingest channel
+        self.mutation_tx.take(); // close mutation channel (worker drains it)
         for t in self.threads.drain(..) {
             let _ = t.join();
         }
@@ -172,19 +275,22 @@ impl Drop for Coordinator {
     fn drop(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
         self.ingest_tx.take();
+        self.mutation_tx.take();
         for t in self.threads.drain(..) {
             let _ = t.join();
         }
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn ingest_loop(
     rx: Receiver<Pending>,
     work_tx: Sender<WorkItem>,
-    runtime: Arc<PjrtRuntime>,
+    runtime: Option<Arc<PjrtRuntime>>,
     cfg: CoordinatorConfig,
     stop: Arc<AtomicBool>,
     metrics: Arc<Metrics>,
+    inflight: Arc<AtomicU64>,
 ) {
     let mut batcher: Batcher<Pending> = Batcher::new(cfg.batch.clone());
     loop {
@@ -193,18 +299,19 @@ fn ingest_loop(
             .time_to_deadline()
             .unwrap_or(std::time::Duration::from_millis(50));
         match rx.recv_timeout(timeout) {
+            // Already counted in flight by `submit` (acceptance time).
             Ok(p) => batcher.push(p),
             Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
             Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
                 // Drain what's left, then exit.
                 while !batcher.is_empty() {
-                    flush(&mut batcher, &work_tx, &runtime, &cfg, &metrics);
+                    flush(&mut batcher, &work_tx, runtime.as_deref(), &cfg, &metrics, &inflight);
                 }
                 return;
             }
         }
         while batcher.should_flush() || (stop.load(Ordering::SeqCst) && !batcher.is_empty()) {
-            flush(&mut batcher, &work_tx, &runtime, &cfg, &metrics);
+            flush(&mut batcher, &work_tx, runtime.as_deref(), &cfg, &metrics, &inflight);
         }
     }
 }
@@ -212,33 +319,54 @@ fn ingest_loop(
 fn flush(
     batcher: &mut Batcher<Pending>,
     work_tx: &Sender<WorkItem>,
-    runtime: &PjrtRuntime,
+    runtime: Option<&PjrtRuntime>,
     cfg: &CoordinatorConfig,
     metrics: &Metrics,
+    inflight: &AtomicU64,
 ) {
     let batch = batcher.take_batch();
     if batch.is_empty() {
         return;
     }
+    let drop_inflight = |n: u64| {
+        inflight.fetch_sub(n, Ordering::SeqCst);
+    };
     // Split raw-embedding requests (no embed needed) from token requests.
     let mut token_items: Vec<Pending> = Vec::new();
     let mut ready: Vec<(Pending, Vec<f32>, f64)> = Vec::new();
     for p in batch {
-        match &p.req.query {
-            Query::Embedding(e) => {
+        match &p.req.kind {
+            RequestKind::Retrieve { query: Query::Embedding(e), .. } => {
                 let e = e.clone();
                 ready.push((p, e, 0.0));
             }
-            Query::Tokens(_) => token_items.push(p),
+            RequestKind::Retrieve { query: Query::Tokens(_), .. } => token_items.push(p),
+            RequestKind::Mutate(_) => {
+                unreachable!("mutations route through the mutation channel")
+            }
         }
     }
+    if !token_items.is_empty() && runtime.is_none() {
+        // No embedder available: fail the token queries but still serve
+        // any pre-embedded queries sharing the batch.
+        eprintln!(
+            "dirc-ingest: {} token queries dropped (no PJRT runtime for embedding)",
+            token_items.len()
+        );
+        for _ in &token_items {
+            metrics.record_error();
+        }
+        drop_inflight(token_items.len() as u64);
+        token_items.clear();
+    }
     if !token_items.is_empty() {
+        let runtime = runtime.expect("token items cleared when runtime is absent");
         let t0 = Instant::now();
         let feats: Vec<f32> = token_items
             .iter()
-            .flat_map(|p| match &p.req.query {
-                Query::Tokens(toks) => bow_features(toks),
-                Query::Embedding(_) => unreachable!(),
+            .flat_map(|p| match &p.req.kind {
+                RequestKind::Retrieve { query: Query::Tokens(toks), .. } => bow_features(toks),
+                _ => unreachable!(),
             })
             .collect();
         let b = token_items.len();
@@ -267,20 +395,29 @@ fn flush(
                 }
             }
             Err(err) => {
+                // Fail ONLY the token queries; the pre-embedded queries
+                // in `ready` still dispatch below (an early return here
+                // would drop them AND leak their inflight counts,
+                // permanently degrading the mutation admission policy).
                 eprintln!("dirc-ingest: embed batch failed: {err:#}");
                 for _ in &token_items {
                     metrics.record_error();
                 }
-                return;
+                drop_inflight(token_items.len() as u64);
             }
         }
     }
     // Quantise queries and hand to workers.
     for (p, emb, embed_s) in ready {
         let q = crate::retrieval::quant::quantize(&emb, 1, emb.len(), cfg.scheme);
-        let item = WorkItem { pending: p, q_int: q.values, embed_s };
+        let k = match &p.req.kind {
+            RequestKind::Retrieve { k, .. } => *k,
+            RequestKind::Mutate(_) => unreachable!(),
+        };
+        let item = WorkItem { pending: p, q_int: q.values, k, embed_s };
         if work_tx.send(item).is_err() {
             metrics.record_error();
+            drop_inflight(1);
         }
     }
 }
@@ -289,6 +426,7 @@ fn worker_loop(
     work_rx: Arc<Mutex<Receiver<WorkItem>>>,
     engine: Arc<dyn Engine>,
     metrics: Arc<Metrics>,
+    inflight: Arc<AtomicU64>,
     seed: u64,
     batch_max: usize,
 ) {
@@ -309,9 +447,9 @@ fn worker_loop(
         let Some(items) = items else { return };
         let mut items = std::collections::VecDeque::from(items);
         while !items.is_empty() {
-            let k = items[0].pending.req.k;
+            let k = items[0].k;
             let mut group = Vec::new();
-            while items.front().is_some_and(|it| it.pending.req.k == k) {
+            while items.front().is_some_and(|it| it.k == k) {
                 group.push(items.pop_front().unwrap());
             }
             let queries: Vec<Vec<i8>> = group.iter().map(|it| it.q_int.clone()).collect();
@@ -336,6 +474,62 @@ fn worker_loop(
                 };
                 metrics.record(&resp);
                 let _ = item.pending.resp_tx.send(resp);
+                inflight.fetch_sub(1, Ordering::SeqCst);
+            }
+        }
+    }
+}
+
+/// The mutation worker: applies writes in submission order, each admitted
+/// into a query-idle window (no retrieval work in flight), bounded by
+/// `max_defer` so ingest cannot starve under sustained query load. On
+/// shutdown the channel closes and the loop drains every queued mutation
+/// before exiting — `Coordinator::shutdown` therefore returns only after
+/// all accepted mutations have been applied and answered.
+fn mutation_loop(
+    rx: Receiver<MutPending>,
+    engine: Arc<dyn Engine>,
+    metrics: Arc<Metrics>,
+    inflight: Arc<AtomicU64>,
+    stop: Arc<AtomicBool>,
+    max_defer: Duration,
+    seed: u64,
+) {
+    let mut rng = Pcg::new(seed);
+    while let Ok(mp) = rx.recv() {
+        // Admission policy: wait for the in-flight query count to drain
+        // to zero (writes slot into query-idle macro cycles), give up
+        // after `max_defer`, and admit immediately on shutdown so the
+        // drain cannot deadlock against queued queries.
+        let wait0 = Instant::now();
+        while inflight.load(Ordering::SeqCst) > 0
+            && wait0.elapsed() < max_defer
+            && !stop.load(Ordering::SeqCst)
+        {
+            std::thread::sleep(Duration::from_micros(100));
+        }
+        let queued_s = mp.submitted.elapsed().as_secs_f64();
+        let RequestKind::Mutate(mutation) = &mp.req.kind else {
+            unreachable!("retrievals route through the ingest channel")
+        };
+        let t1 = Instant::now();
+        match engine.mutate(mutation, &mut rng) {
+            Ok(out) => {
+                metrics.record_mutation(&out.stats);
+                let resp = MutationResponse {
+                    id: mp.req.id,
+                    added_ids: out.added_ids,
+                    stats: out.stats,
+                    queued_s,
+                    apply_s: t1.elapsed().as_secs_f64(),
+                    total_s: mp.submitted.elapsed().as_secs_f64(),
+                };
+                let _ = mp.resp_tx.send(resp);
+            }
+            Err(err) => {
+                eprintln!("dirc-mutation: request {} failed: {err:#}", mp.req.id);
+                metrics.record_error();
+                // Dropping resp_tx closes the client's channel.
             }
         }
     }
@@ -344,5 +538,7 @@ fn worker_loop(
 #[cfg(test)]
 mod tests {
     // Coordinator integration tests (with PJRT) live in rust/tests/;
-    // unit coverage for batcher/metrics in their modules.
+    // runtime-free coordinator + mutation-channel coverage in
+    // rust/tests/mutation.rs; unit coverage for batcher/metrics in their
+    // modules.
 }

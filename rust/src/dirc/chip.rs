@@ -26,12 +26,18 @@
 //!    ([`crate::retrieval::topk`]), so duplicate scores cannot reorder
 //!    under concurrency.
 
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
 use crate::constants::{MACRO_DIM, NUM_CORES};
 use crate::dirc::core::DircCore;
 use crate::dirc::detect::ResensePolicy;
-use crate::dirc::macro_::{Flip, MacroConfig, SenseStats};
+use crate::dirc::macro_::{DocWrite, Flip, MacroConfig, SenseStats};
 use crate::dirc::remap::RemapStrategy;
 use crate::dirc::variation::{ErrorMap, VariationModel};
+use crate::dirc::write::{UpdateCost, WriteModel};
 use crate::retrieval::quant::Quantized;
 use crate::retrieval::score::{norm_i8, Metric};
 use crate::retrieval::topk::{merge_local, ScoredDoc};
@@ -56,6 +62,12 @@ pub struct ChipConfig {
     pub map_points: usize,
     /// Variation model (process corner etc.).
     pub variation: VariationModel,
+    /// Program-and-verify model for online document writes.
+    pub write: WriteModel,
+    /// Program pulses absorbed since the last error-map extraction above
+    /// which stale map rows are lazily re-characterised (and the layouts
+    /// of the touched macros re-derived) before the next mutation.
+    pub wear_refresh_pulses: u64,
     pub seed: u64,
 }
 
@@ -71,6 +83,8 @@ impl ChipConfig {
             cores: NUM_CORES,
             map_points: 1000,
             variation: VariationModel::default(),
+            write: WriteModel::default(),
+            wear_refresh_pulses: 50_000_000,
             seed: 0xD12C_0001,
         }
     }
@@ -122,13 +136,39 @@ pub struct CoreOutcome {
 }
 
 /// The chip simulator.
+///
+/// Cores sit behind `Arc` so a mutation can copy-on-write only the
+/// macros it touches: the serving engines keep whole-chip snapshots
+/// (`Arc<DircChip>`) for lock-free queries, and
+/// [`DircChip::clone`] + [`DircChip::add_docs`] /
+/// [`DircChip::update_docs`] / [`DircChip::delete_docs`] produce the next
+/// snapshot sharing every untouched core's storage with the previous one.
+#[derive(Clone)]
 pub struct DircChip {
     pub cfg: ChipConfig,
-    cores: Vec<DircCore>,
+    cores: Vec<Arc<DircCore>>,
     map: ErrorMap,
     cycle_model: CycleModel,
     energy_model: EnergyModel,
+    /// Live documents (tombstoned slots excluded).
     n_docs: usize,
+    /// The corpus quantisation scale (fp ≈ scale * int). The integer
+    /// grid is frozen at build time; online ingest must quantise new
+    /// payloads onto THIS grid or integer MIPS scores would not be
+    /// comparable across documents.
+    quant_scale: f32,
+    /// Global id -> core index for the online mutation path.
+    doc_core: HashMap<u64, u32>,
+    /// Next id handed to an added document.
+    next_doc_id: u64,
+    /// Subarray rows invalidated by writes since the last map refresh.
+    stale_rows: u8,
+    /// Cores whose macros were written since the last map refresh.
+    stale_cores: Vec<bool>,
+    /// Total chip wear at the last map refresh (pulse count).
+    wear_at_refresh: u64,
+    /// Monotone epoch counter salting the refresh characterisation seed.
+    map_epoch: u64,
 }
 
 impl DircChip {
@@ -147,14 +187,19 @@ impl DircChip {
         let map = cfg.variation.extract_error_map(cfg.map_points, cfg.seed);
         let per_core = db.n.div_ceil(cfg.cores);
         let mut cores = Vec::with_capacity(cfg.cores);
+        let mut doc_core = HashMap::with_capacity(db.n);
         for c in 0..cfg.cores {
             let lo = (c * per_core).min(db.n);
             let hi = ((c + 1) * per_core).min(db.n);
             let docs = &db.values[lo * db.dim..hi * db.dim];
             let norms = &db.norms[lo..hi];
             let ids: Vec<u64> = (lo as u64..hi as u64).collect();
-            cores.push(DircCore::program(cfg.macro_cfg(), docs, norms, &ids, &map));
+            for &id in &ids {
+                doc_core.insert(id, c as u32);
+            }
+            cores.push(Arc::new(DircCore::program(cfg.macro_cfg(), docs, norms, &ids, &map)));
         }
+        let stale_cores = vec![false; cfg.cores];
         DircChip {
             cfg,
             cores,
@@ -162,6 +207,13 @@ impl DircChip {
             cycle_model: CycleModel::default(),
             energy_model: EnergyModel::default(),
             n_docs: db.n,
+            quant_scale: db.scale,
+            doc_core,
+            next_doc_id: db.n as u64,
+            stale_rows: 0,
+            stale_cores,
+            wear_at_refresh: 0,
+            map_epoch: 0,
         }
     }
 
@@ -169,11 +221,16 @@ impl DircChip {
         self.n_docs
     }
 
+    /// The frozen corpus quantisation scale (fp ≈ scale * int).
+    pub fn quant_scale(&self) -> f32 {
+        self.quant_scale
+    }
+
     pub fn error_map(&self) -> &ErrorMap {
         &self.map
     }
 
-    pub fn cores(&self) -> &[DircCore] {
+    pub fn cores(&self) -> &[Arc<DircCore>] {
         &self.cores
     }
 
@@ -459,23 +516,313 @@ impl DircChip {
             .map(|core| {
                 let scores = core.clean_scores(q, q_norm, self.cfg.metric);
                 let mut topk = crate::retrieval::topk::TopK::new(k);
+                // Clean path shares the id layout (and the tombstone
+                // filter) with the erroneous path.
                 for (i, &s) in scores.iter().enumerate() {
-                    // Clean path shares the id layout with the erroneous
-                    // path: contiguous per core.
-                    topk.push(ScoredDoc {
-                        doc_id: self.core_doc_base(core) + i as u64,
-                        score: s,
-                    });
+                    if core.live()[i] {
+                        topk.push(ScoredDoc { doc_id: core.doc_ids()[i], score: s });
+                    }
                 }
                 topk.into_sorted()
             })
             .collect();
         merge_local(&locals, k)
     }
+}
 
-    fn core_doc_base(&self, core: &DircCore) -> u64 {
-        // Reconstruct the base id from the stored ids (contiguous blocks).
-        core.doc_base()
+/// One document entering the chip through the online-ingest path:
+/// quantised values + the stored integer-domain norm.
+#[derive(Debug, Clone)]
+pub struct DocPayload {
+    pub values: Vec<i8>,
+    pub norm: f32,
+}
+
+impl DocPayload {
+    /// Payload with the norm computed from the values, with the exact
+    /// rounding sequence of [`crate::retrieval::quant::quantize`]
+    /// (f64 sum -> f32 -> sqrt), so a doc ingested online carries a
+    /// bit-identical stored norm to the same doc present at build time.
+    pub fn from_values(values: Vec<i8>) -> DocPayload {
+        let norm = (values
+            .iter()
+            .map(|&v| (v as i32 * v as i32) as f64)
+            .sum::<f64>() as f32)
+            .sqrt();
+        DocPayload { values, norm }
+    }
+}
+
+/// Measured accounting of one mutation batch: write-verify pulses from
+/// the actual program loops, converted to time/energy through the
+/// cycle/energy models (`UpdateCost` is *measured* here, not the
+/// expected-pulse formula of [`WriteModel::database_write_cost`] — the
+/// formula survives only as the estimate for layout-migration rewrites).
+#[derive(Debug, Clone, Default)]
+pub struct MutationStats {
+    pub docs_added: usize,
+    pub docs_updated: usize,
+    pub docs_deleted: usize,
+    /// Delete/update targets that were not resident.
+    pub missing_ids: usize,
+    /// Program pulses actually issued (energy view).
+    pub write_pulses: u64,
+    /// Serialised write cycles at the chip clock (latency view;
+    /// word-line-parallel cells collapse to their worst verify loop).
+    pub write_cycles: u64,
+    /// Per-core write costs; `total()` is their sum.
+    pub per_core: Vec<UpdateCost>,
+    /// Error-map rows lazily re-characterised by this batch.
+    pub map_rows_refreshed: usize,
+    /// Macros whose bit-wise remap layout was re-derived.
+    pub layouts_rederived: usize,
+}
+
+impl MutationStats {
+    /// Total cost: the sum of the per-macro costs.
+    pub fn total(&self) -> UpdateCost {
+        let mut t = UpdateCost::default();
+        for c in &self.per_core {
+            t.accumulate(c);
+        }
+        t
+    }
+
+    /// Fold another batch's accounting into this one.
+    pub fn merge(&mut self, o: &MutationStats) {
+        self.docs_added += o.docs_added;
+        self.docs_updated += o.docs_updated;
+        self.docs_deleted += o.docs_deleted;
+        self.missing_ids += o.missing_ids;
+        self.write_pulses += o.write_pulses;
+        self.write_cycles += o.write_cycles;
+        if self.per_core.len() < o.per_core.len() {
+            self.per_core.resize(o.per_core.len(), UpdateCost::default());
+        }
+        for (mine, theirs) in self.per_core.iter_mut().zip(&o.per_core) {
+            mine.accumulate(theirs);
+        }
+        self.map_rows_refreshed += o.map_rows_refreshed;
+        self.layouts_rederived += o.layouts_rederived;
+    }
+}
+
+/// Online corpus mutation: live document writes on a serving chip.
+///
+/// All three entry points take `&mut self`; the serving engines keep the
+/// chip behind a snapshot swap (clone, mutate the clone — copy-on-write
+/// per core through the `Arc`s — publish), so queries on untouched cores
+/// never contend with a write. Mutation is deterministic given the rng:
+/// the same batch applied to two equal chips yields bit-identical state.
+impl DircChip {
+    fn core_mut(&mut self, c: usize) -> &mut DircCore {
+        Arc::make_mut(&mut self.cores[c])
+    }
+
+    /// Total program pulses absorbed by all macros since fabrication.
+    pub fn total_wear(&self) -> u64 {
+        self.cores.iter().map(|c| c.macro_().total_wear()).sum()
+    }
+
+    /// Subarray rows currently invalidated by writes (bit `r` = row `r`).
+    pub fn stale_rows(&self) -> u8 {
+        self.stale_rows
+    }
+
+    /// How many lazy map re-characterisations have run.
+    pub fn map_epoch(&self) -> u64 {
+        self.map_epoch
+    }
+
+    fn new_stats(&self) -> MutationStats {
+        MutationStats {
+            per_core: vec![UpdateCost::default(); self.cores.len()],
+            ..MutationStats::default()
+        }
+    }
+
+    /// Convert one doc write's pulse tallies into measured cost and mark
+    /// the wear-invalidated state.
+    fn account_write(&mut self, c: usize, w: &DocWrite, stats: &mut MutationStats) {
+        let cycles = self.cycle_model.write_cycles(w.lockstep_pulses);
+        let cost = UpdateCost {
+            time_s: self.cycle_model.seconds(cycles),
+            energy_j: self.energy_model.write_energy(w.total_pulses),
+            cells_written: w.cells,
+        };
+        stats.per_core[c].accumulate(&cost);
+        stats.write_pulses += w.total_pulses;
+        stats.write_cycles += cycles;
+        self.stale_rows |= w.touched_rows;
+        self.stale_cores[c] = true;
+    }
+
+    /// Lazy error-map maintenance: once accumulated wear since the last
+    /// characterisation crosses the configured threshold, re-run the
+    /// Fig-5a Monte-Carlo for the invalidated subarray rows and re-derive
+    /// the bit-wise remap layout of every touched macro (costing the
+    /// implied data migration with the expected-pulse estimate).
+    fn maybe_refresh(&mut self, stats: &mut MutationStats) {
+        if self.stale_rows == 0 {
+            return;
+        }
+        if self.total_wear() - self.wear_at_refresh < self.cfg.wear_refresh_pulses {
+            return;
+        }
+        self.force_refresh(stats);
+    }
+
+    /// Force the lazy refresh now (regardless of the wear threshold).
+    /// No-op when nothing is stale. Returns the refresh accounting.
+    pub fn refresh_stale(&mut self) -> MutationStats {
+        let mut stats = self.new_stats();
+        if self.stale_rows != 0 {
+            self.force_refresh(&mut stats);
+        }
+        stats
+    }
+
+    fn force_refresh(&mut self, stats: &mut MutationStats) {
+        self.map_epoch += 1;
+        let seed = self.cfg.seed ^ self.map_epoch.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        stats.map_rows_refreshed += self.cfg.variation.refresh_error_map_rows(
+            &mut self.map,
+            self.stale_rows,
+            self.cfg.map_points,
+            seed,
+        );
+        let map = self.map.clone();
+        for c in 0..self.cores.len() {
+            if !self.stale_cores[c] {
+                continue;
+            }
+            let core = Arc::make_mut(&mut self.cores[c]);
+            core.macro_mut().rebuild_layout(&map);
+            // The re-derived layout moves bits between physical slots, so
+            // the macro's occupied cells migrate: estimated with the
+            // expected-pulse formula (a background rewrite, not a
+            // per-cell verify loop we simulate).
+            let occupied_bytes = core.n_docs() * self.cfg.dim * self.cfg.bits / 8;
+            let migration = self.cfg.write.database_write_cost(occupied_bytes.max(1), 1);
+            stats.per_core[c].accumulate(&migration);
+            stats.layouts_rederived += 1;
+            self.stale_cores[c] = false;
+        }
+        self.stale_rows = 0;
+        self.wear_at_refresh = self.total_wear();
+    }
+
+    /// Admit new documents: least-loaded core first (lowest index on
+    /// ties), tombstoned slots reused before fresh appends, cells
+    /// programmed through the pulse-accurate write-verify loop. Returns
+    /// the assigned global ids alongside the measured accounting.
+    ///
+    /// All-or-nothing: capacity and payload shapes are validated before
+    /// any cell is programmed, so an `Err` leaves the chip untouched (a
+    /// failed batch can be retried without double-ingesting a prefix).
+    pub fn add_docs(
+        &mut self,
+        docs: &[DocPayload],
+        rng: &mut Pcg,
+    ) -> Result<(Vec<u64>, MutationStats)> {
+        for p in docs {
+            if p.values.len() != self.cfg.dim {
+                bail!("doc dim {} != chip dim {}", p.values.len(), self.cfg.dim);
+            }
+        }
+        if self.n_docs + docs.len() > self.cfg.capacity_docs() {
+            bail!(
+                "chip full: {} live docs + {} adds exceeds capacity {}",
+                self.n_docs,
+                docs.len(),
+                self.cfg.capacity_docs()
+            );
+        }
+        let mut stats = self.new_stats();
+        self.maybe_refresh(&mut stats);
+        // Scan occupancy once and track it incrementally — a bulk ingest
+        // must not rescan every core's live bitmap per document.
+        let mut live_counts: Vec<usize> = self.cores.iter().map(|c| c.n_live()).collect();
+        let mut free: Vec<bool> = self.cores.iter().map(|c| c.has_free_slot()).collect();
+        let mut ids = Vec::with_capacity(docs.len());
+        for p in docs {
+            let c = (0..self.cores.len())
+                .filter(|&c| free[c])
+                .min_by_key(|&c| (live_counts[c], c))
+                .expect("capacity pre-check guarantees a free core");
+            let id = self.next_doc_id;
+            self.next_doc_id += 1;
+            let (_, w) = Arc::make_mut(&mut self.cores[c])
+                .add_doc(id, &p.values, p.norm, &self.cfg.write, rng)
+                .expect("placement chose a core without a free slot");
+            live_counts[c] += 1;
+            free[c] = self.cores[c].has_free_slot();
+            self.doc_core.insert(id, c as u32);
+            self.n_docs += 1;
+            self.account_write(c, &w, &mut stats);
+            stats.docs_added += 1;
+            ids.push(id);
+        }
+        Ok((ids, stats))
+    }
+
+    /// Re-program resident documents in place. Unknown ids are counted
+    /// in `missing_ids` and skipped.
+    pub fn update_docs(
+        &mut self,
+        updates: &[(u64, DocPayload)],
+        rng: &mut Pcg,
+    ) -> Result<MutationStats> {
+        // Validate shapes before programming anything, so an `Err` never
+        // leaves a partially-applied batch behind.
+        for (_, p) in updates {
+            if p.values.len() != self.cfg.dim {
+                bail!("doc dim {} != chip dim {}", p.values.len(), self.cfg.dim);
+            }
+        }
+        let mut stats = self.new_stats();
+        self.maybe_refresh(&mut stats);
+        for (id, p) in updates {
+            let Some(&c) = self.doc_core.get(id) else {
+                stats.missing_ids += 1;
+                continue;
+            };
+            let c = c as usize;
+            let local = self.cores[c]
+                .find_doc(*id)
+                .expect("doc index points at a core that lost the doc");
+            let w = Arc::make_mut(&mut self.cores[c]).write_local(
+                local,
+                &p.values,
+                p.norm,
+                &self.cfg.write,
+                rng,
+            );
+            self.account_write(c, &w, &mut stats);
+            stats.docs_updated += 1;
+        }
+        Ok(stats)
+    }
+
+    /// Tombstone resident documents (index-buffer invalidation only — no
+    /// program pulses; the slot's cells keep their data until an add
+    /// reuses them). Unknown ids are counted in `missing_ids`.
+    pub fn delete_docs(&mut self, ids: &[u64]) -> MutationStats {
+        let mut stats = self.new_stats();
+        for id in ids {
+            let Some(c) = self.doc_core.remove(id) else {
+                stats.missing_ids += 1;
+                continue;
+            };
+            let c = c as usize;
+            let local = self.cores[c]
+                .find_doc(*id)
+                .expect("doc index points at a core that lost the doc");
+            self.core_mut(c).delete_local(local);
+            self.n_docs -= 1;
+            stats.docs_deleted += 1;
+        }
+        stats
     }
 }
 

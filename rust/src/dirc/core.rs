@@ -2,19 +2,29 @@
 //! holding document norms and global indices, the cosine calculator
 //! (bypassed for MIPS), and the local top-k comparator.
 
-use crate::dirc::macro_::{DircMacro, MacroConfig, SenseStats};
+use crate::dirc::macro_::{DircMacro, DocWrite, MacroConfig, SenseStats};
 use crate::dirc::variation::ErrorMap;
+use crate::dirc::write::WriteModel;
 use crate::retrieval::score::{finalize_scores, Metric};
 use crate::retrieval::topk::{ScoredDoc, TopK};
 use crate::util::rng::Pcg;
 
 /// One core: macro + norm/index ReRAM buffer + cosine calc + local top-k.
+///
+/// Online mutations (see [`crate::dirc::chip::DircChip`]) tombstone
+/// deleted slots rather than compacting: the cells keep their stale data
+/// (they are still sensed — the word-slot walk is positional), but the
+/// index buffer marks them dead so they never enter the local top-k, and
+/// the next add re-programs the slot in place.
+#[derive(Clone)]
 pub struct DircCore {
     macro_: DircMacro,
     /// Stored integer-domain document norms (ReRAM buffer).
     d_norms: Vec<f32>,
     /// Global document ids (ReRAM buffer).
     doc_ids: Vec<u64>,
+    /// Slot validity (index-buffer tombstones for deleted docs).
+    live: Vec<bool>,
 }
 
 /// Result of one core-local query pass.
@@ -44,6 +54,7 @@ impl DircCore {
             macro_: DircMacro::program(cfg, docs, n, map),
             d_norms: norms.to_vec(),
             doc_ids: ids.to_vec(),
+            live: vec![true; n],
         }
     }
 
@@ -55,9 +66,88 @@ impl DircCore {
         &self.macro_
     }
 
-    /// First stored global doc id (ids are contiguous per core).
-    pub fn doc_base(&self) -> u64 {
-        self.doc_ids.first().copied().unwrap_or(0)
+    pub fn macro_mut(&mut self) -> &mut DircMacro {
+        &mut self.macro_
+    }
+
+    /// Stored global doc ids, one per slot (tombstoned slots included).
+    pub fn doc_ids(&self) -> &[u64] {
+        &self.doc_ids
+    }
+
+    /// Stored integer-domain norms, one per slot.
+    pub fn norms(&self) -> &[f32] {
+        &self.d_norms
+    }
+
+    /// Slot validity flags (false = tombstoned).
+    pub fn live(&self) -> &[bool] {
+        &self.live
+    }
+
+    /// Live (non-tombstoned) documents on this core.
+    pub fn n_live(&self) -> usize {
+        self.live.iter().filter(|&&l| l).count()
+    }
+
+    /// Locate a live document by global id.
+    pub fn find_doc(&self, id: u64) -> Option<usize> {
+        self.doc_ids
+            .iter()
+            .zip(&self.live)
+            .position(|(&d, &l)| l && d == id)
+    }
+
+    /// Whether this core can accept one more document (a tombstoned slot
+    /// to reuse, or spare macro capacity to append into).
+    pub fn has_free_slot(&self) -> bool {
+        self.live.iter().any(|&l| !l) || self.n_docs() < self.macro_.cfg.capacity_docs()
+    }
+
+    /// Re-program slot `local` with a new document (in-place update).
+    pub fn write_local(
+        &mut self,
+        local: usize,
+        values: &[i8],
+        norm: f32,
+        wm: &WriteModel,
+        rng: &mut Pcg,
+    ) -> DocWrite {
+        self.d_norms[local] = norm;
+        self.macro_.write_doc(local, values, wm, rng)
+    }
+
+    /// Admit a new document under global id `id`: reuse the lowest
+    /// tombstoned slot, else append. Returns `None` when the core is
+    /// full.
+    pub fn add_doc(
+        &mut self,
+        id: u64,
+        values: &[i8],
+        norm: f32,
+        wm: &WriteModel,
+        rng: &mut Pcg,
+    ) -> Option<(usize, DocWrite)> {
+        if let Some(local) = self.live.iter().position(|&l| !l) {
+            self.doc_ids[local] = id;
+            self.live[local] = true;
+            let w = self.write_local(local, values, norm, wm, rng);
+            return Some((local, w));
+        }
+        if self.n_docs() >= self.macro_.cfg.capacity_docs() {
+            return None;
+        }
+        let w = self.macro_.append_doc(values, wm, rng);
+        self.doc_ids.push(id);
+        self.d_norms.push(norm);
+        self.live.push(true);
+        Some((self.n_docs() - 1, w))
+    }
+
+    /// Tombstone slot `local` (index-buffer invalidation; no cell
+    /// writes — the ReRAM keeps its data until the slot is reused).
+    pub fn delete_local(&mut self, local: usize) {
+        self.live[local] = false;
     }
 
     /// Word slots in use. Documents are striped across the 128 columns in
@@ -87,7 +177,9 @@ impl DircCore {
         );
         let mut topk = TopK::new(k);
         for (i, &s) in scores.iter().enumerate() {
-            topk.push(ScoredDoc { doc_id: self.doc_ids[i], score: s });
+            if self.live[i] {
+                topk.push(ScoredDoc { doc_id: self.doc_ids[i], score: s });
+            }
         }
         CoreResult { local_topk: topk.into_sorted(), stats, used_slots: self.used_slots() }
     }

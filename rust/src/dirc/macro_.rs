@@ -29,8 +29,10 @@
 use crate::constants::MACRO_DIM;
 use crate::dirc::column::bit_weight;
 use crate::dirc::detect::{DSumLut, DetectOutcome, ResensePolicy};
-use crate::dirc::remap::{Layout, RemapStrategy};
-use crate::dirc::variation::ErrorMap;
+use crate::dirc::device::MlcLevel;
+use crate::dirc::remap::{Layout, RemapStrategy, Slot};
+use crate::dirc::variation::{ErrorMap, SUB_CELLS};
+use crate::dirc::write::WriteModel;
 use crate::util::rng::Pcg;
 
 /// Static configuration of one macro.
@@ -132,7 +134,37 @@ impl SenseStats {
     }
 }
 
+/// Raw pulse tallies of one document write (program-and-verify over the
+/// doc's MLC cells). The chip converts these into an
+/// [`crate::dirc::write::UpdateCost`] through the cycle/energy models, so
+/// write cost is *measured* from the actual verify loop, not the
+/// expected-pulse formula.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DocWrite {
+    /// Program pulses issued across all cells (energy view).
+    pub total_pulses: u64,
+    /// Serialised pulse steps: cells at the same subarray position across
+    /// the macro's 128 rows program word-line-parallel, so each position
+    /// costs its worst cell's verify loop (latency view).
+    pub lockstep_pulses: u64,
+    /// MLC cells re-programmed.
+    pub cells: usize,
+    /// Subarray rows touched (bit `r` = row `r`) — invalidates the
+    /// spatial error map rows for lazy re-extraction.
+    pub touched_rows: u8,
+}
+
+impl DocWrite {
+    pub fn accumulate(&mut self, other: &DocWrite) {
+        self.total_pulses += other.total_pulses;
+        self.lockstep_pulses += other.lockstep_pulses;
+        self.cells += other.cells;
+        self.touched_rows |= other.touched_rows;
+    }
+}
+
 /// The DIRC macro simulator.
+#[derive(Clone)]
 pub struct DircMacro {
     pub cfg: MacroConfig,
     layout: Layout,
@@ -143,6 +175,10 @@ pub struct DircMacro {
     n_docs: usize,
     /// ΣD LUTs, one per column (precomputed offline, as in the paper).
     luts: Vec<DSumLut>,
+    /// Program-pulse wear per subarray position (row-major 8x8), summed
+    /// over every cell of the macro — the endurance ledger behind the
+    /// lazy error-map invalidation.
+    wear: Vec<u64>,
 }
 
 impl DircMacro {
@@ -175,30 +211,33 @@ impl DircMacro {
             docs: docs.to_vec(),
             n_docs,
             luts: Vec::new(),
+            wear: vec![0; SUB_CELLS],
         };
         m.luts = m.precompute_luts();
         m
     }
 
-    fn precompute_luts(&self) -> Vec<DSumLut> {
-        let words = self.cfg.words_per_cell();
-        let bits = self.cfg.bits;
-        (0..MACRO_DIM)
-            .map(|col| {
-                DSumLut::precompute(words, bits, |w, b| {
-                    let mut sum = 0u16;
-                    for row in 0..MACRO_DIM {
-                        if let Some((doc, elem)) = self.doc_elem(col, w, row) {
-                            let v = self.docs[doc * self.cfg.dim + elem];
-                            if (v >> b) & 1 != 0 {
-                                sum += 1;
-                            }
-                        }
+    /// The ΣD LUT of one column from the current document matrix — the
+    /// single source of the per-plane true sums, shared by build-time
+    /// precompute and the online write path's refresh (they must never
+    /// diverge or detection desynchronises from the stored data).
+    fn column_lut(&self, col: usize) -> DSumLut {
+        DSumLut::precompute(self.cfg.words_per_cell(), self.cfg.bits, |w, b| {
+            let mut sum = 0u16;
+            for row in 0..MACRO_DIM {
+                if let Some((doc, elem)) = self.doc_elem(col, w, row) {
+                    let v = self.docs[doc * self.cfg.dim + elem];
+                    if (v >> b) & 1 != 0 {
+                        sum += 1;
                     }
-                    sum
-                })
-            })
-            .collect()
+                }
+            }
+            sum
+        })
+    }
+
+    fn precompute_luts(&self) -> Vec<DSumLut> {
+        (0..MACRO_DIM).map(|col| self.column_lut(col)).collect()
     }
 
     /// Inverse layout: (column, word slot, row) -> (doc, element), or None
@@ -421,6 +460,134 @@ impl DircMacro {
             m[idx] ^= 1 << f.bit;
         }
         m
+    }
+
+    // ---------------------------------------------------------------
+    // Online write path (live corpus mutation).
+    // ---------------------------------------------------------------
+
+    /// Per-position program-pulse wear, row-major over the 8x8 subarray.
+    pub fn wear(&self) -> &[u64] {
+        &self.wear
+    }
+
+    /// Total program pulses absorbed by this macro since fabrication.
+    pub fn total_wear(&self) -> u64 {
+        self.wear.iter().sum()
+    }
+
+    /// Unique subarray positions occupied by one document's bit planes
+    /// under the current layout. A doc owns `fold` word slots x `bits`
+    /// planes; an MLC write re-programs the whole cell (both planes —
+    /// read-modify-write for a cohabiting bit of another document), so
+    /// positions are deduplicated.
+    fn doc_positions(&self, local: usize) -> Vec<u8> {
+        let fold = self.cfg.fold();
+        let group = local / MACRO_DIM;
+        let mut pos: Vec<u8> = (group * fold..(group + 1) * fold)
+            .flat_map(|w| (0..self.cfg.bits).map(move |b| (w, b)))
+            .map(|(w, b)| self.layout.slot(w, b).pos)
+            .collect();
+        pos.sort_unstable();
+        pos.dedup();
+        pos
+    }
+
+    /// The MLC level cell (`col`, `row`, subarray position `pos`) must
+    /// hold given the current document matrix: both planes of the cell
+    /// resolved through the layout inverse (unoccupied storage reads 0).
+    fn cell_level(&self, col: usize, row: usize, pos: u8) -> MlcLevel {
+        let bit_at = |msb: bool| -> bool {
+            let (w, b) = self.layout.word_bit(Slot { pos, msb });
+            match self.doc_elem(col, w, row) {
+                Some((doc, elem)) => (self.docs[doc * self.cfg.dim + elem] >> b) & 1 != 0,
+                None => false,
+            }
+        };
+        MlcLevel::from_bits(bit_at(true), bit_at(false))
+    }
+
+    /// Program document slot `local` to `values` with the pulse-accurate
+    /// write-verify loop: every MLC cell holding one of the doc's bits is
+    /// re-programmed through [`WriteModel::program_cell`], wear counters
+    /// advance by the pulses actually issued, and the doc's column ΣD LUT
+    /// is recomputed. Returns the raw pulse tallies (the chip converts
+    /// them to time/energy through the cycle/energy models).
+    pub fn write_doc(
+        &mut self,
+        local: usize,
+        values: &[i8],
+        wm: &WriteModel,
+        rng: &mut Pcg,
+    ) -> DocWrite {
+        assert!(local < self.n_docs, "doc slot {local} out of range {}", self.n_docs);
+        assert_eq!(values.len(), self.cfg.dim);
+        let lo = -(1i16 << (self.cfg.bits - 1));
+        let hi = (1i16 << (self.cfg.bits - 1)) - 1;
+        debug_assert!(values.iter().all(|&v| (v as i16) >= lo && (v as i16) <= hi));
+
+        // Commit the new data first — the verify loop programs against it.
+        self.docs[local * self.cfg.dim..(local + 1) * self.cfg.dim].copy_from_slice(values);
+
+        let col = local % MACRO_DIM;
+        let positions = self.doc_positions(local);
+        let mut out = DocWrite::default();
+        for &pos in &positions {
+            // All 128 cells of this position class program word-line
+            // parallel; the lock-step latency is the worst verify loop.
+            let mut worst = 0u64;
+            for row in 0..MACRO_DIM {
+                let level = self.cell_level(col, row, pos);
+                let w = wm.program_cell(level, rng);
+                out.total_pulses += w.pulses as u64;
+                worst = worst.max(w.pulses as u64);
+                self.wear[pos as usize] += w.pulses as u64;
+            }
+            out.lockstep_pulses += worst;
+            out.cells += MACRO_DIM;
+            out.touched_rows |= 1u8 << (pos as usize / crate::dirc::variation::SUB_COLS);
+        }
+        self.refresh_column_lut(col);
+        out
+    }
+
+    /// Append a new document at the next free slot (grows `n_docs`) and
+    /// program it. Panics if the macro is at capacity — callers route
+    /// placement (the chip's admission layer reuses tombstoned slots
+    /// before appending).
+    pub fn append_doc(&mut self, values: &[i8], wm: &WriteModel, rng: &mut Pcg) -> DocWrite {
+        assert!(
+            self.n_docs < self.cfg.capacity_docs(),
+            "macro full: {} docs",
+            self.n_docs
+        );
+        self.docs.extend(std::iter::repeat(0i8).take(self.cfg.dim));
+        self.n_docs += 1;
+        self.write_doc(self.n_docs - 1, values, wm, rng)
+    }
+
+    /// Recompute the ΣD LUT of one column after a write (the per-plane
+    /// true sums detection compares against).
+    fn refresh_column_lut(&mut self, col: usize) {
+        let lut = self.column_lut(col);
+        self.luts[col] = lut;
+    }
+
+    /// Re-derive the bit-wise remap layout against a (refreshed) error
+    /// map and rebuild the per-plane flip rates. The ΣD LUTs are
+    /// layout-independent (they index by (word, bit)), so only the
+    /// physical slot assignment and its error exposure change. The
+    /// physical data migration this implies is costed by the caller.
+    pub fn rebuild_layout(&mut self, map: &ErrorMap) {
+        let layout = self.layout.rederive(map);
+        let words = self.cfg.words_per_cell();
+        let bits = self.cfg.bits;
+        let plane_rate: Vec<f64> = (0..words)
+            .flat_map(|w| (0..bits).map(move |b| (w, b)))
+            .map(|(w, b)| layout.bit_error_rate(map, w, b))
+            .collect();
+        self.layout = layout;
+        self.plane_rate = plane_rate;
     }
 }
 

@@ -37,7 +37,8 @@ pub mod sensing;
 pub mod variation;
 pub mod write;
 
-pub use chip::{ChipConfig, DircChip, QueryStats};
+pub use chip::{ChipConfig, DircChip, DocPayload, MutationStats, QueryStats};
 pub use device::{MlcLevel, ReramDevice};
 pub use remap::RemapStrategy;
 pub use variation::{ErrorMap, VariationModel};
+pub use write::{SramFallbackModel, UpdateCost, WriteModel};

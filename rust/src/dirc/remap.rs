@@ -142,6 +142,15 @@ impl Layout {
         Layout { bits, words, slot_of, word_bit_of, strategy }
     }
 
+    /// Re-derive this layout against a refreshed error map (same width
+    /// and strategy). Under `ErrorAware` the slot assignment follows the
+    /// map's reliability ordering, so a lazily-refreshed map generally
+    /// yields a *different* layout — the online-ingest path calls this
+    /// after wear invalidation and re-programs the touched subarrays.
+    pub fn rederive(&self, map: &ErrorMap) -> Layout {
+        Layout::build(self.bits, self.strategy, map)
+    }
+
     /// Physical slot of bit `b` of word `w`.
     #[inline]
     pub fn slot(&self, word: usize, bit: usize) -> Slot {

@@ -111,6 +111,38 @@ impl VariationModel {
         }
     }
 
+    /// One position's Monte-Carlo tally: `points` fabricated instances,
+    /// each programming all four levels and sensing MSB then LSB. Returns
+    /// (lsb error rate, msb error rate).
+    fn mc_position(&self, row: usize, col: usize, points: usize, rng: &mut Pcg) -> (f64, f64) {
+        let mut lsb_err = 0usize;
+        let mut msb_err = 0usize;
+        let mut trials = 0usize;
+        for _ in 0..points {
+            // Mismatch is re-frozen per MC point (each point is a
+            // different fabricated instance), matching post-layout MC
+            // methodology.
+            let mismatch = self.freeze_mismatch(rng);
+            let env = self.env(row, col, &mismatch);
+            for li in 0..NUM_LEVELS {
+                let level = MlcLevel::from_index(li);
+                let dev = ReramDevice::program(level, self.reram_sigma, rng);
+                let got_msb = sense_msb(&dev, &env, rng);
+                if got_msb != level.msb() {
+                    msb_err += 1;
+                    // LSB sensing uses the (wrong) MSB result to
+                    // select its reference, compounding the error.
+                }
+                let got_lsb = sense_lsb(&dev, got_msb, &env, rng);
+                if got_lsb != level.lsb() {
+                    lsb_err += 1;
+                }
+                trials += 1;
+            }
+        }
+        (lsb_err as f64 / trials as f64, msb_err as f64 / trials as f64)
+    }
+
     /// The paper's 1000-point Monte-Carlo (Fig 5a): per position, program
     /// each of the four levels with fresh lognormal deviation + fresh
     /// transient noise, sense MSB and LSB, and tally error rates.
@@ -118,37 +150,44 @@ impl VariationModel {
         let mut lsb = [[0.0f64; SUB_COLS]; SUB_ROWS];
         let mut msb = [[0.0f64; SUB_COLS]; SUB_ROWS];
         let mut rng = Pcg::new(seed);
-        // Mismatch is re-frozen per MC point (each point is a different
-        // fabricated instance), matching post-layout MC methodology.
         for row in 0..SUB_ROWS {
             for col in 0..SUB_COLS {
-                let mut lsb_err = 0usize;
-                let mut msb_err = 0usize;
-                let mut trials = 0usize;
-                for _ in 0..points {
-                    let mismatch = self.freeze_mismatch(&mut rng);
-                    let env = self.env(row, col, &mismatch);
-                    for li in 0..NUM_LEVELS {
-                        let level = MlcLevel::from_index(li);
-                        let dev = ReramDevice::program(level, self.reram_sigma, &mut rng);
-                        let got_msb = sense_msb(&dev, &env, &mut rng);
-                        if got_msb != level.msb() {
-                            msb_err += 1;
-                            // LSB sensing uses the (wrong) MSB result to
-                            // select its reference, compounding the error.
-                        }
-                        let got_lsb = sense_lsb(&dev, got_msb, &env, &mut rng);
-                        if got_lsb != level.lsb() {
-                            lsb_err += 1;
-                        }
-                        trials += 1;
-                    }
-                }
-                lsb[row][col] = lsb_err as f64 / trials as f64;
-                msb[row][col] = msb_err as f64 / trials as f64;
+                let (l, m) = self.mc_position(row, col, points, &mut rng);
+                lsb[row][col] = l;
+                msb[row][col] = m;
             }
         }
         ErrorMap { lsb, msb, points }
+    }
+
+    /// Lazily refresh the subarray rows named by `rows_mask` (bit `r` =
+    /// row `r`) of an already-extracted map: the online-ingest path
+    /// invalidates the rows whose cells a document write re-programmed
+    /// (write-verify pulses disturb the very margins the Fig-5a map was
+    /// extracted from), and this re-runs the Monte-Carlo for just those
+    /// rows under a fresh seed — a new characterisation pass, not a
+    /// replay. Returns the number of rows refreshed.
+    pub fn refresh_error_map_rows(
+        &self,
+        map: &mut ErrorMap,
+        rows_mask: u8,
+        points: usize,
+        seed: u64,
+    ) -> usize {
+        let mut rng = Pcg::new(seed);
+        let mut refreshed = 0;
+        for row in 0..SUB_ROWS {
+            if rows_mask & (1 << row) == 0 {
+                continue;
+            }
+            for col in 0..SUB_COLS {
+                let (l, m) = self.mc_position(row, col, points, &mut rng);
+                map.lsb[row][col] = l;
+                map.msb[row][col] = m;
+            }
+            refreshed += 1;
+        }
+        refreshed
     }
 }
 

@@ -108,11 +108,23 @@ impl WriteModel {
 }
 
 /// Cost of a database write / update.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, Default)]
 pub struct UpdateCost {
     pub time_s: f64,
     pub energy_j: f64,
     pub cells_written: usize,
+}
+
+impl UpdateCost {
+    /// Accumulate another cost into this one (writes on different macros
+    /// overlap in time on real hardware; callers that care about
+    /// wall-clock overlap take the max themselves — this is the serial /
+    /// total-work view used by the accounting).
+    pub fn accumulate(&mut self, other: &UpdateCost) {
+        self.time_s += other.time_s;
+        self.energy_j += other.energy_j;
+        self.cells_written += other.cells_written;
+    }
 }
 
 /// The fallback SRAM-CIM mode: the DIRC macro's compute plane used as a
@@ -169,7 +181,26 @@ impl SramFallbackModel {
         db_bytes: usize,
         macros: usize,
     ) -> f64 {
-        let native_write = write.database_write_cost(db_bytes, macros);
+        self.breakeven_queries_at_rate(write, db_bytes, macros, 1.0)
+    }
+
+    /// [`SramFallbackModel::breakeven_queries`] generalised to partial
+    /// updates: each corpus update rewrites only `update_fraction` of the
+    /// database (the online-ingest regime — a handful of documents churn,
+    /// not the whole corpus). Returns the number of queries one update
+    /// must amortise over before native NVM mode beats the fallback;
+    /// monotone non-decreasing in the update rate (more bytes rewritten
+    /// per update -> more queries needed to pay for it).
+    pub fn breakeven_queries_at_rate(
+        &self,
+        write: &WriteModel,
+        db_bytes: usize,
+        macros: usize,
+        update_fraction: f64,
+    ) -> f64 {
+        assert!((0.0..=1.0).contains(&update_fraction));
+        let updated = ((db_bytes as f64 * update_fraction).ceil() as usize).max(1);
+        let native_write = write.database_write_cost(updated, macros);
         let fallback_per_query = self.query_cost(db_bytes * 8, macros, 8);
         native_write.energy_j / fallback_per_query.energy_j.max(1e-30)
     }
@@ -205,7 +236,7 @@ mod tests {
 
     #[test]
     fn full_db_write_is_slow_but_rare() {
-        // Writing 4 MB of NVM takes milliseconds — five orders over the
+        // Writing 4 MB of NVM takes milliseconds — roughly 250x the
         // 5.6 µs query, which is exactly why the QS dataflow targets
         // read-dominated retrieval.
         let m = WriteModel::default();

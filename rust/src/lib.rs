@@ -38,6 +38,25 @@
 //! and (3) the global top-k comparator breaks score ties by lower doc id,
 //! so duplicate scores cannot reorder under concurrency.
 //!
+//! ## Online corpus ingest
+//!
+//! The corpus is live, not rebuilt: [`dirc::chip::DircChip::add_docs`] /
+//! [`dirc::chip::DircChip::update_docs`] /
+//! [`dirc::chip::DircChip::delete_docs`] program MLC cells through the
+//! pulse-accurate [`dirc::write::WriteModel`] verify loop (per-subarray
+//! wear counters, measured [`dirc::write::UpdateCost`] via the
+//! cycle/energy models), tombstone slots in the index buffer, and
+//! lazily re-characterise worn error-map rows + re-derive the
+//! error-aware remap of touched macros. The serving engines expose this
+//! as [`coordinator::engine::Engine::mutate`] behind a snapshot swap
+//! (queries stay lock-free on their corpus version), and the
+//! coordinator threads it through a dedicated mutation channel with a
+//! query-idle admission policy
+//! ([`coordinator::server::Coordinator::submit_mutation`]). See the
+//! README's "Online corpus ingest" section for the interleaving
+//! contract; `rust/tests/precision_regression.rs` pins precision@k
+//! through corpus churn.
+//!
 //! Tier-1 verification: `cargo build --release && cargo test -q` from the
 //! repository root (no artifacts or PJRT backend required — see
 //! [`runtime::xla_stub`]).

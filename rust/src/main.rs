@@ -8,6 +8,9 @@
 //!   (Table II / Fig 6 conditions).
 //! * `serve`    — run the serving demo: synthetic text corpus, PJRT
 //!   embedding + retrieval, throughput/latency report.
+//! * `ingest`   — online corpus-ingest demo: live add/update/delete
+//!   bursts through the serve-mode mutation channel interleaved with
+//!   query traffic (pure simulator; no PJRT needed).
 //! * `datasets` — list the registered datasets.
 
 use std::sync::Arc;
@@ -55,6 +58,18 @@ fn cli() -> Command {
                 .opt("config", "", "TOML config overlay (configs/*.toml)")
                 .opt("k", "5", "top-k"),
         )
+        .sub(
+            Command::new("ingest", "online corpus-ingest demo (no PJRT needed)")
+                .opt("docs", "1024", "initial corpus size")
+                .opt("dim", "256", "embedding dimension (multiple of 128)")
+                .opt("queries", "128", "queries before and after the churn")
+                .opt("adds", "48", "documents added during the churn")
+                .opt("updates", "48", "documents re-programmed in place")
+                .opt("deletes", "24", "documents tombstoned")
+                .opt("k", "5", "top-k")
+                .opt("corner", "1.0", "process-corner noise multiplier")
+                .opt("config", "", "TOML config overlay (configs/*.toml)"),
+        )
         .sub(Command::new("datasets", "list registered datasets"))
 }
 
@@ -76,6 +91,7 @@ fn main() -> Result<()> {
         "map" => cmd_map(sub.get_usize("points")?, sub.get_f64("corner")?, sub.get_u64("seed")?),
         "eval" => cmd_eval(sub),
         "serve" => cmd_serve(sub),
+        "ingest" => cmd_ingest(sub),
         "datasets" => cmd_datasets(),
         other => Err(anyhow!("unhandled subcommand {other}")),
     }
@@ -234,6 +250,147 @@ fn cmd_serve(sub: &dirc_rag::util::cli::Parsed) -> Result<()> {
     println!(
         "pivot recall@{k}: {:.3} over {n_queries} queries",
         hits as f64 / n_queries as f64
+    );
+    Ok(())
+}
+
+fn cmd_ingest(sub: &dirc_rag::util::cli::Parsed) -> Result<()> {
+    use dirc_rag::coordinator::{configfile, CoordinatorConfig, Mutation, SimEngine};
+    use dirc_rag::data::SynthParams;
+
+    let n_docs = sub.get_usize("docs")?;
+    let dim = sub.get_usize("dim")?;
+    let n_queries = sub.get_usize("queries")?;
+    let adds = sub.get_usize("adds")?;
+    let updates = sub.get_usize("updates")?;
+    let deletes = sub.get_usize("deletes")?;
+    let k = sub.get_usize("k")?;
+    let corner = sub.get_f64("corner")?;
+
+    let overlay = Some(sub.get("config")?).filter(|s| !s.is_empty());
+    let file_cfg = configfile::load_layered(overlay)?;
+    let coord_cfg: CoordinatorConfig = configfile::coordinator_config(&file_cfg)?;
+
+    // One embedding space for the resident corpus AND the documents that
+    // will be ingested live: generate both up front, hold back the tail.
+    let params = SynthParams {
+        topics: 32,
+        doc_noise: 0.6,
+        rels_per_query: 1,
+        extra_rel_range: 1,
+        query_noise: 0.5,
+        confuse: 0.6,
+        aniso: 1.0,
+        seed: 41,
+    };
+    let ds = SynthDataset::generate(n_docs + adds, n_queries, dim, &params);
+    let base_fp = &ds.docs[..n_docs * dim];
+
+    // Chip operating point comes from the layered config (default.toml
+    // <- DIRC_CONFIG <- --config), like `serve`; the demo-size knobs
+    // (dim, demo-sized MC cap) and a non-default --corner override it.
+    if dim % 128 != 0 {
+        return Err(anyhow!("--dim must be a multiple of 128"));
+    }
+    let mut chip_cfg = configfile::chip_config(&file_cfg)?;
+    chip_cfg.dim = dim;
+    chip_cfg.map_points = chip_cfg.map_points.min(300);
+    if (corner - 1.0).abs() > f64::EPSILON {
+        chip_cfg.variation.corner = corner;
+    }
+    let scheme = match chip_cfg.bits {
+        4 => QuantScheme::Int4,
+        _ => QuantScheme::Int8,
+    };
+    let db = quantize(base_fp, n_docs, dim, scheme);
+    eprintln!(
+        "building chip: {n_docs} docs x dim {dim} {}, corner {} (capacity {})",
+        scheme.name(),
+        chip_cfg.variation.corner,
+        chip_cfg.capacity_docs()
+    );
+    let pool = Arc::new(dirc_rag::util::pool::ThreadPool::new(
+        dirc_rag::util::pool::default_threads(),
+    ));
+    let engine = Arc::new(SimEngine::with_pool(chip_cfg, &db, Some(pool)));
+    let coord = dirc_rag::coordinator::Coordinator::start_sim(engine, coord_cfg);
+
+    let run_queries = |label: &str| -> Result<f64> {
+        let mut rxs = Vec::new();
+        for q in 0..n_queries {
+            let (_, rx) = coord.submit(Query::Embedding(ds.query(q).to_vec()), k)?;
+            rxs.push((q, rx));
+        }
+        let mut hits = 0usize;
+        for (q, rx) in rxs {
+            let resp = rx.recv().map_err(|_| anyhow!("response channel closed"))?;
+            if resp.topk.iter().any(|d| ds.qrels[q].contains(&(d.doc_id as u32))) {
+                hits += 1;
+            }
+        }
+        let rate = hits as f64 / n_queries as f64;
+        println!("{label}: qrel-hit@{k} {rate:.3} over {n_queries} queries");
+        Ok(rate)
+    };
+
+    let before = run_queries("static corpus")?;
+
+    // Churn burst on the live chip: adds from the held-back tail,
+    // in-place re-writes of resident docs, deletes of docs no query
+    // depends on — all through the serve-mode mutation channel, racing
+    // the admission policy against any in-flight queries.
+    eprintln!("churn: +{adds} docs, ~{updates} rewrites, -{deletes} tombstones...");
+    let mut mrxs = Vec::new();
+    if adds > 0 {
+        let docs: Vec<Vec<f32>> = (0..adds)
+            .map(|i| ds.docs[(n_docs + i) * dim..(n_docs + i + 1) * dim].to_vec())
+            .collect();
+        mrxs.push(coord.submit_mutation(Mutation::Add { docs })?);
+    }
+    if updates > 0 {
+        let docs: Vec<(u64, Vec<f32>)> = (0..updates)
+            .map(|i| {
+                let id = (i * 97 + 13) % n_docs;
+                (id as u64, ds.docs[id * dim..(id + 1) * dim].to_vec())
+            })
+            .collect();
+        mrxs.push(coord.submit_mutation(Mutation::Update { docs })?);
+    }
+    if deletes > 0 {
+        let relevant: std::collections::HashSet<u32> =
+            ds.qrels.iter().flatten().copied().collect();
+        let ids: Vec<u64> = (0..n_docs as u64)
+            .filter(|id| !relevant.contains(&(*id as u32)))
+            .take(deletes)
+            .collect();
+        mrxs.push(coord.submit_mutation(Mutation::Delete { ids })?);
+    }
+    for (_, rx) in mrxs {
+        let resp = rx.recv().map_err(|_| anyhow!("mutation failed (channel closed)"))?;
+        let t = resp.stats.total();
+        println!(
+            "mutation #{}: +{} ~{} -{} docs, {} pulses / {} cells, {:.2} µJ, {:.3} ms write, \
+             {} map rows refreshed, {} layouts re-derived (queued {:.2} ms)",
+            resp.id,
+            resp.stats.docs_added,
+            resp.stats.docs_updated,
+            resp.stats.docs_deleted,
+            resp.stats.write_pulses,
+            t.cells_written,
+            t.energy_j * 1e6,
+            t.time_s * 1e3,
+            resp.stats.map_rows_refreshed,
+            resp.stats.layouts_rederived,
+            resp.queued_s * 1e3,
+        );
+    }
+
+    let after = run_queries("after churn")?;
+    let snap = coord.shutdown();
+    println!("{}", snap.render());
+    println!(
+        "precision drift through churn: {:+.3} (before {before:.3}, after {after:.3})",
+        after - before
     );
     Ok(())
 }

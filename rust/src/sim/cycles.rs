@@ -30,6 +30,10 @@ pub struct CycleModel {
     pub pipeline_fill: u64,
     /// Cycles charged per re-sense event (sense + re-detect).
     pub per_resense: u64,
+    /// Cycles per program-and-verify pulse of the online write path: a
+    /// 100 ns SET/RESET pulse (25 cycles at 250 MHz) plus one verify
+    /// read. Matches `WriteModel::default()`'s `pulse_s + verify_s`.
+    pub write_pulse_cycles: u64,
     pub freq_hz: f64,
 }
 
@@ -41,6 +45,7 @@ impl Default for CycleModel {
             global_topk_per_entry: 1,
             pipeline_fill: 8,
             per_resense: 2,
+            write_pulse_cycles: 26,
             freq_hz: FREQ_HZ,
         }
     }
@@ -126,6 +131,16 @@ impl CycleModel {
             .map(|(&slots, &stall)| self.core_pass(slots, bits, detect, stall))
             .fold(QueryCycles::default(), worst_core);
         self.finish_chip(worst, used_slots_per_core.len(), k)
+    }
+
+    /// Serialised cycles of an online document write that issued
+    /// `lockstep_pulses` program-and-verify steps (word-line-parallel
+    /// cells already collapsed to their worst verify loop by the macro).
+    /// Writes occupy the macro — queries on *other* cores proceed, which
+    /// is exactly the interleaving contract the coordinator's admission
+    /// policy maintains.
+    pub fn write_cycles(&self, lockstep_pulses: u64) -> u64 {
+        lockstep_pulses * self.write_pulse_cycles
     }
 
     /// Convert cycles to seconds at the model clock.
@@ -247,6 +262,22 @@ mod tests {
             m.finish_chip(folded, slots.len(), 10),
             m.chip_query(&slots, 8, true, &stalls, 10)
         );
+    }
+
+    #[test]
+    fn write_pulse_cycles_match_write_model() {
+        // One program-and-verify pulse at the chip clock must cost the
+        // same wall-clock the WriteModel charges (pulse_s + verify_s),
+        // or the measured ingest latency diverges from the write model.
+        let wm = crate::dirc::write::WriteModel::default();
+        let m = CycleModel::default();
+        let model_s = wm.pulse_s + wm.verify_s;
+        let cycle_s = m.seconds(m.write_pulse_cycles);
+        assert!(
+            (cycle_s - model_s).abs() < 1e-12,
+            "write pulse {cycle_s}s at the clock != WriteModel {model_s}s"
+        );
+        assert_eq!(m.write_cycles(7), 7 * m.write_pulse_cycles);
     }
 
     #[test]

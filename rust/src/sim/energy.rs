@@ -35,6 +35,9 @@ pub struct EnergyModel {
     pub norm_mac_j: f64,
     /// Energy per top-k comparator operation.
     pub topk_cmp_j: f64,
+    /// Energy per online-write program pulse incl. its verify read
+    /// (matches `WriteModel::default()`'s `pulse_j + verify_j`).
+    pub write_pulse_j: f64,
     /// Chip-wide static + clock power (W).
     pub static_w: f64,
 }
@@ -47,6 +50,7 @@ impl Default for EnergyModel {
             detect_column_j: 230.0e-15, // 128 adder bit-ops + LUT + compare
             norm_mac_j: 25.0e-15,
             topk_cmp_j: 5.0e-15,
+            write_pulse_j: 2.008e-12,
             static_w: 37.5e-3,
         }
     }
@@ -104,6 +108,14 @@ impl EnergyModel {
             (ev.docs_scored + ev.global_candidates) as f64 * self.topk_cmp_j;
         let static_j = self.static_w * ev.elapsed_s;
         QueryEnergy { mac_j, sense_j, detect_j, norm_j, topk_j, static_j }
+    }
+
+    /// Energy of an online document write that issued `pulses`
+    /// program-and-verify pulses (the measured counterpart of
+    /// [`crate::dirc::write::WriteModel::database_write_cost`]'s
+    /// expected-pulse estimate).
+    pub fn write_energy(&self, pulses: u64) -> f64 {
+        pulses as f64 * self.write_pulse_j
     }
 
     /// The paper's macro-level TOPS/W figure implied by the MAC constant.
@@ -186,6 +198,23 @@ mod tests {
         let uj = m.query_energy(&ev).total_j() * 1e6;
         // Paper Table III: 0.46 µJ. Allow 15%.
         assert!((uj - 0.46).abs() < 0.07, "{uj} µJ");
+    }
+
+    #[test]
+    fn write_pulse_energy_matches_write_model() {
+        // The measured ingest accounting charges write_pulse_j per
+        // program-and-verify pulse; it must equal the WriteModel's own
+        // per-pulse cost or "measured" UpdateCost would diverge from the
+        // model it measures.
+        let wm = crate::dirc::write::WriteModel::default();
+        let m = EnergyModel::default();
+        assert!(
+            (m.write_pulse_j - (wm.pulse_j + wm.verify_j)).abs() < 1e-18,
+            "write_pulse_j {} != WriteModel pulse+verify {}",
+            m.write_pulse_j,
+            wm.pulse_j + wm.verify_j
+        );
+        assert_eq!(m.write_energy(1000), 1000.0 * m.write_pulse_j);
     }
 
     #[test]

@@ -158,6 +158,90 @@ fn query_batch_empty_and_single() {
     assert_eq!(got[0].0, want.0);
 }
 
+/// Mutate-then-query schedule: with online corpus mutations interleaved
+/// between query rounds, the parallel per-core execution must stay
+/// bit-identical to the serial walk. Two identical chips receive the
+/// same mutation stream (adds, in-place updates, tombstones — same
+/// payloads, same write rng); after every round the serial path on one
+/// chip and the threaded paths on the other must agree bit-for-bit.
+#[test]
+fn mutate_then_query_schedule_bit_identical() {
+    use dirc_rag::dirc::chip::DocPayload;
+
+    let (n, dim) = (400, 128);
+    let mut chip_s = build_chip(n, dim, 4, 71, Metric::Cosine);
+    let mut chip_p = build_chip(n, dim, 4, 71, Metric::Cosine);
+
+    // Fresh embeddings to ingest, in the same quantised space.
+    let mut erng = Pcg::new(72);
+    let extra_fp = random_unit_rows(24, dim, &mut erng);
+    let extra = quantize(&extra_fp, 24, dim, QuantScheme::Int8);
+    let payload = |i: usize| DocPayload {
+        values: extra.row(i).to_vec(),
+        norm: extra.norms[i],
+    };
+
+    let mut w_s = Pcg::new(73);
+    let mut w_p = Pcg::new(73);
+    let mut next_extra = 0usize;
+
+    for round in 0..3usize {
+        // Queries on the current corpus: serial vs threaded, same seeds.
+        for qseed in 0..2u64 {
+            let mut qrng = Pcg::new(700 + round as u64 * 10 + qseed);
+            let q: Vec<i8> = (0..dim).map(|_| qrng.int_in(-128, 127) as i8).collect();
+            let mut r1 = Pcg::new(round as u64 * 100 + qseed);
+            let mut r2 = Pcg::new(round as u64 * 100 + qseed);
+            let (top_s, stats_s) = chip_s.query(&q, 10, &mut r1);
+            let (top_p, stats_p) = chip_p.query_on(&q, 10, &mut r2, 4);
+            let ctx = format!("round {round} qseed {qseed}");
+            assert_eq!(top_s, top_p, "{ctx}: ranking");
+            assert_stats_identical(&stats_s, &stats_p, &ctx);
+        }
+
+        // Mutation burst, applied identically to both chips.
+        let adds: Vec<DocPayload> = (0..4).map(|i| payload(next_extra + i)).collect();
+        next_extra += 4;
+        let (ids_s, st_s) = chip_s.add_docs(&adds, &mut w_s).expect("add");
+        let (ids_p, st_p) = chip_p.add_docs(&adds, &mut w_p).expect("add");
+        assert_eq!(ids_s, ids_p, "round {round}: assigned ids diverged");
+        assert_eq!(st_s.write_pulses, st_p.write_pulses, "round {round}: write pulses");
+
+        let upd: Vec<(u64, DocPayload)> = (0..3)
+            .map(|i| ((round * 29 + i * 11) as u64 % n as u64, payload(next_extra + i)))
+            .collect();
+        next_extra += 3;
+        let us = chip_s.update_docs(&upd, &mut w_s).expect("update");
+        let up = chip_p.update_docs(&upd, &mut w_p).expect("update");
+        assert_eq!(us.write_pulses, up.write_pulses);
+        assert_eq!(us.docs_updated, up.docs_updated);
+
+        let dels = [(round * 37 + 5) as u64 % n as u64];
+        let ds_ = chip_s.delete_docs(&dels);
+        let dp_ = chip_p.delete_docs(&dels);
+        assert_eq!(ds_.docs_deleted, dp_.docs_deleted);
+        assert_eq!(chip_s.n_docs(), chip_p.n_docs(), "round {round}: corpus size");
+    }
+
+    // Final corpus: the pooled queries x cores batch matrix must also
+    // match a serial query stream bit-for-bit.
+    let chip_p = Arc::new(chip_p);
+    let pool = ThreadPool::new(4);
+    let mut qrng = Pcg::new(800);
+    let queries: Vec<Vec<i8>> = (0..6)
+        .map(|_| (0..dim).map(|_| qrng.int_in(-128, 127) as i8).collect())
+        .collect();
+    let mut r_serial = Pcg::new(901);
+    let mut r_batch = Pcg::new(901);
+    let want: Vec<_> = queries.iter().map(|q| chip_s.query(q, 10, &mut r_serial)).collect();
+    let got = DircChip::query_batch(&chip_p, &pool, &queries, 10, &mut r_batch);
+    for (qi, ((gt, gs), (wt, ws))) in got.iter().zip(want.iter()).enumerate() {
+        assert_eq!(gt, wt, "post-churn batch query {qi}");
+        assert_stats_identical(gs, ws, &format!("post-churn batch query {qi}"));
+    }
+    assert_eq!(pool.panicked(), 0);
+}
+
 #[test]
 fn pooled_sim_engine_end_to_end_identical() {
     let mut rng = Pcg::new(61);

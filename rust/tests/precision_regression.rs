@@ -1,0 +1,209 @@
+//! End-to-end retrieval-precision regression net.
+//!
+//! The paper's key quality claim is that the hardware path (detect on,
+//! error-aware remap, nominal corner) *maintains* retrieval precision.
+//! The `eval` CLI can show that interactively; this test pins it in the
+//! suite:
+//!
+//! 1. **Golden determinism pin** — the full evaluation (seeded synthetic
+//!    dataset -> quantise -> chip with error injection -> precision@k)
+//!    is re-run from identical seeds and must reproduce bit-for-bit.
+//!    Any change to the dataset generator, quantiser, error-map
+//!    extraction, sensing walk or top-k machinery that shifts results
+//!    trips this immediately. (The authoring environment has no Rust
+//!    toolchain to mint literal golden numbers — see
+//!    `.claude/skills/verify/SKILL.md` — so the pin is the reproduction
+//!    itself plus the bounded windows below; a toolchain session can
+//!    tighten the windows to literals by printing `run_eval`'s output.)
+//! 2. **Bounded windows** — the same clean-floor and noisy-within-0.05
+//!    bounds the tier-1 suite already proves for this exact dataset
+//!    recipe (`tests/integration.rs::sim_engine_preserves_precision_at_
+//!    nominal_corner`), extended to P@{1,5,10}.
+//! 3. **Churn invariance** — after a burst of `update_docs` that
+//!    re-programs 10% of the corpus through the pulse-accurate write
+//!    path (same embeddings: hardware churn, no semantic change),
+//!    precision@{1,5,10} must stay within 1% of the static-corpus
+//!    baseline.
+
+use dirc_rag::data::{SynthDataset, SynthParams};
+use dirc_rag::dirc::chip::{ChipConfig, DircChip, DocPayload};
+use dirc_rag::dirc::RemapStrategy;
+use dirc_rag::eval::precision_at_k;
+use dirc_rag::retrieval::quant::{quantize, QuantScheme};
+use dirc_rag::retrieval::score::Metric;
+use dirc_rag::util::rng::Pcg;
+
+const N_DOCS: usize = 1500;
+const N_QUERIES: usize = 60;
+const DIM: usize = 512;
+
+fn dataset() -> SynthDataset {
+    // Identical recipe to the proven integration-test operating point.
+    let params = SynthParams {
+        topics: 32,
+        doc_noise: 0.6,
+        rels_per_query: 1,
+        extra_rel_range: 1,
+        query_noise: 0.5,
+        confuse: 0.8,
+        aniso: 1.0,
+        seed: 11,
+    };
+    SynthDataset::generate(N_DOCS, N_QUERIES, DIM, &params)
+}
+
+fn chip_cfg() -> ChipConfig {
+    ChipConfig {
+        cores: 4,
+        map_points: 60,
+        ..ChipConfig::paper_default(DIM, Metric::Cosine)
+    }
+}
+
+/// Averaged P@{1,5,10} of the erroneous hardware path (detect on,
+/// error-aware remap), retrieved at k = 10 with a fixed rng stream.
+fn run_eval(chip: &DircChip, ds: &SynthDataset) -> (f64, f64, f64) {
+    let mut rng = Pcg::new(13);
+    let (mut p1, mut p5, mut p10) = (0.0, 0.0, 0.0);
+    for qi in 0..N_QUERIES {
+        let q = quantize(ds.query(qi), 1, DIM, QuantScheme::Int8);
+        let (ranked, _) = chip.query(&q.values, 10, &mut rng);
+        p1 += precision_at_k(&ranked, &ds.qrels[qi], 1);
+        p5 += precision_at_k(&ranked, &ds.qrels[qi], 5);
+        p10 += precision_at_k(&ranked, &ds.qrels[qi], 10);
+    }
+    let n = N_QUERIES as f64;
+    (p1 / n, p5 / n, p10 / n)
+}
+
+/// Clean-oracle P@1 (the software reference the hardware must track).
+fn run_clean_p1(chip: &DircChip, ds: &SynthDataset) -> f64 {
+    let mut p1 = 0.0;
+    for qi in 0..N_QUERIES {
+        let q = quantize(ds.query(qi), 1, DIM, QuantScheme::Int8);
+        let ranked = chip.clean_query(&q.values, 10);
+        p1 += precision_at_k(&ranked, &ds.qrels[qi], 1);
+    }
+    p1 / N_QUERIES as f64
+}
+
+#[test]
+fn precision_at_k_pinned_and_bounded() {
+    let ds = dataset();
+    let db = quantize(&ds.docs, N_DOCS, DIM, QuantScheme::Int8);
+    let cfg = chip_cfg();
+    assert!(cfg.detect, "the regression net pins the detect-on path");
+    assert_eq!(cfg.remap, RemapStrategy::ErrorAware);
+    let chip = DircChip::build(cfg, &db);
+
+    let (p1, p5, p10) = run_eval(&chip, &ds);
+
+    // Golden determinism pin: a from-scratch rebuild reproduces every
+    // bit of the evaluation.
+    let chip2 = DircChip::build(chip_cfg(), &db);
+    let (q1, q5, q10) = run_eval(&chip2, &ds);
+    assert_eq!(p1.to_bits(), q1.to_bits(), "P@1 not reproducible");
+    assert_eq!(p5.to_bits(), q5.to_bits(), "P@5 not reproducible");
+    assert_eq!(p10.to_bits(), q10.to_bits(), "P@10 not reproducible");
+
+    // Bounded windows: hardware tracks the clean oracle (the bound the
+    // suite already proves for this recipe at P@1), and the ranked-list
+    // identities hold (top-1 ⊆ top-5 ⊆ top-10 => hit counts monotone).
+    let clean_p1 = run_clean_p1(&chip, &ds);
+    assert!(clean_p1 > 0.5, "dataset too hard: clean P@1 {clean_p1}");
+    assert!(
+        p1 >= clean_p1 - 0.05,
+        "nominal-corner errors dented precision: clean {clean_p1} noisy {p1}"
+    );
+    assert!(p5 * 5.0 >= p1 - 1e-9, "hits@5 < hits@1");
+    assert!(p10 * 10.0 >= p5 * 5.0 - 1e-9, "hits@10 < hits@5");
+    assert!(p1 > 0.0 && p1 <= 1.0 && p5 <= 1.0 && p10 <= 1.0);
+}
+
+#[test]
+fn precision_survives_update_burst_within_one_percent() {
+    let ds = dataset();
+    let db = quantize(&ds.docs, N_DOCS, DIM, QuantScheme::Int8);
+    let mut chip = DircChip::build(chip_cfg(), &db);
+
+    let baseline = run_eval(&chip, &ds);
+
+    // Churn burst: re-program 10% of the corpus in place through the
+    // pulse-accurate write path (same quantised embeddings — hardware
+    // churn without semantic drift, the contract a live index must hold).
+    //
+    // Scope note: this burst stays under the wear-refresh threshold, so
+    // it gates the *write path* — stored-value integrity and ΣD-LUT
+    // resynchronisation (a wrong LUT changes the detect/re-sense flip
+    // stream and trips the 1% bound; corrupted values shift the clean
+    // scores and trip it too). The error-map refresh + layout
+    // re-derivation path is exercised separately by
+    // `precision_survives_forced_map_refresh` below, whose bound is
+    // necessarily looser (a refreshed map legitimately changes the flip
+    // stream).
+    let ids: Vec<u64> = (0..(N_DOCS as u64 / 10)).map(|i| (i * 7) % N_DOCS as u64).collect();
+    let updates: Vec<(u64, DocPayload)> = ids
+        .iter()
+        .map(|&id| {
+            let i = id as usize;
+            (id, DocPayload { values: db.row(i).to_vec(), norm: db.norms[i] })
+        })
+        .collect();
+    let mut wrng = Pcg::new(99);
+    let stats = chip.update_docs(&updates, &mut wrng).expect("update burst");
+    assert_eq!(stats.docs_updated + stats.missing_ids, updates.len());
+    assert!(stats.missing_ids <= ids.len() - 100, "most ids must be resident");
+    assert!(stats.write_pulses > 0, "the burst must actually program cells");
+    assert!(chip.total_wear() > 0);
+
+    let after = run_eval(&chip, &ds);
+    for (k, b, a) in [
+        (1, baseline.0, after.0),
+        (5, baseline.1, after.1),
+        (10, baseline.2, after.2),
+    ] {
+        assert!(
+            (a - b).abs() <= 0.01 + 1e-12,
+            "P@{k} drifted past 1% through corpus churn: {b} -> {a}"
+        );
+    }
+}
+
+/// Churn that crosses the wear threshold: the burst forces the lazy
+/// error-map re-characterisation and the error-aware layout
+/// re-derivation of every touched macro, then re-evaluates. The clean
+/// oracle is unchanged by a refresh (stored values are identical), so
+/// the hardware path must still track it — with double the margin the
+/// static-corpus suite proves, because a refreshed map legitimately
+/// yields a different (same-distribution) flip stream.
+#[test]
+fn precision_survives_forced_map_refresh() {
+    let ds = dataset();
+    let db = quantize(&ds.docs, N_DOCS, DIM, QuantScheme::Int8);
+    let cfg = ChipConfig {
+        // Any wear at all triggers the refresh on the next mutation.
+        wear_refresh_pulses: 1,
+        ..chip_cfg()
+    };
+    let mut chip = DircChip::build(cfg, &db);
+
+    let updates: Vec<(u64, DocPayload)> = (0..40u64)
+        .map(|id| (id, DocPayload { values: db.row(id as usize).to_vec(), norm: db.norms[id as usize] }))
+        .collect();
+    let mut wrng = Pcg::new(101);
+    // First burst marks rows stale; second one refreshes + re-lays-out.
+    chip.update_docs(&updates, &mut wrng).expect("first burst");
+    let stats = chip.update_docs(&updates, &mut wrng).expect("second burst");
+    assert!(stats.map_rows_refreshed > 0, "burst must re-characterise the map");
+    assert!(stats.layouts_rederived >= 1, "touched macros must re-derive layouts");
+    assert!(chip.map_epoch() >= 1);
+
+    let clean_p1 = run_clean_p1(&chip, &ds);
+    let (p1, p5, p10) = run_eval(&chip, &ds);
+    assert!(clean_p1 > 0.5, "refresh must not disturb stored values: {clean_p1}");
+    assert!(
+        p1 >= clean_p1 - 0.10,
+        "post-refresh hardware path lost the clean oracle: clean {clean_p1} noisy {p1}"
+    );
+    assert!(p5 * 5.0 >= p1 - 1e-9 && p10 * 10.0 >= p5 * 5.0 - 1e-9);
+}

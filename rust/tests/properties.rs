@@ -3,12 +3,14 @@
 //! quantisation, over randomly generated configurations.
 
 use dirc_rag::coordinator::batcher::{BatchPolicy, Batcher};
-use dirc_rag::dirc::chip::{ChipConfig, DircChip};
+use dirc_rag::dirc::chip::{ChipConfig, DircChip, DocPayload};
 use dirc_rag::dirc::detect::DSumLut;
+use dirc_rag::dirc::device::MlcLevel;
 use dirc_rag::dirc::macro_::{geometric_walk, DircMacro, MacroConfig};
 use dirc_rag::dirc::remap::{Layout, RemapStrategy, SLOTS_PER_CELL};
 use dirc_rag::dirc::variation::VariationModel;
 use dirc_rag::dirc::detect::ResensePolicy;
+use dirc_rag::dirc::write::{SramFallbackModel, WriteModel};
 use dirc_rag::retrieval::quant::{quantize, QuantScheme};
 use dirc_rag::retrieval::score::Metric;
 use dirc_rag::util::prop::{cases, forall, gen_pair, gen_usize};
@@ -249,6 +251,135 @@ fn prop_quantisation_in_range_any_scale() {
             }
         }
         true
+    });
+}
+
+/// Write path: `program_cell` always terminates within the model's pulse
+/// budget, lands the device on the requested MLC level, and its measured
+/// time/energy are exactly the per-pulse costs times the pulses issued —
+/// for arbitrary target levels and per-pulse yields.
+#[test]
+fn prop_program_cell_bounded_and_hits_target() {
+    forall(
+        cases(60),
+        gen_pair(gen_usize(0, 3), gen_usize(5, 95)),
+        |&(level_idx, yield_pct)| {
+            let wm = WriteModel {
+                pulse_yield: yield_pct as f64 / 100.0,
+                ..WriteModel::default()
+            };
+            let level = MlcLevel::from_index(level_idx);
+            let mut rng = Pcg::new((level_idx * 100 + yield_pct) as u64);
+            for _ in 0..25 {
+                let w = wm.program_cell(level, &mut rng);
+                if w.pulses < 1 || w.pulses > wm.max_pulses {
+                    return false;
+                }
+                if w.device.level != level {
+                    return false;
+                }
+                let want_t = w.pulses as f64 * (wm.pulse_s + wm.verify_s);
+                let want_e = w.pulses as f64 * (wm.pulse_j + wm.verify_j);
+                if (w.time_s - want_t).abs() > 1e-15 || (w.energy_j - want_e).abs() > 1e-18 {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
+
+/// The native/fallback breakeven is monotone in the update rate: the
+/// larger the fraction of the database each update rewrites, the more
+/// queries the write must amortise over before native NVM mode wins.
+#[test]
+fn prop_breakeven_monotone_in_update_rate() {
+    forall(
+        cases(40),
+        gen_pair(gen_usize(1, 8), gen_usize(1, 16)),
+        |&(mb, macros)| {
+            let f = SramFallbackModel::default();
+            let w = WriteModel::default();
+            let db_bytes = mb << 20;
+            let mut prev = 0.0f64;
+            for pct in [1usize, 5, 10, 25, 50, 75, 100] {
+                let be = f.breakeven_queries_at_rate(&w, db_bytes, macros, pct as f64 / 100.0);
+                if be < prev - 1e-12 || !be.is_finite() || be < 0.0 {
+                    return false;
+                }
+                prev = be;
+            }
+            // Full-rate form agrees with the original breakeven.
+            let full = f.breakeven_queries_at_rate(&w, db_bytes, macros, 1.0);
+            (full - f.breakeven_queries(&w, db_bytes, macros)).abs() < 1e-12
+        },
+    );
+}
+
+/// `MutationStats` accounting: applying a batch equals applying its
+/// documents one at a time over the same rng stream — per-core costs,
+/// totals, and the total() == sum(per_core) identity all agree exactly.
+#[test]
+fn prop_update_cost_totals_equal_per_macro_sum() {
+    // One base chip, cloned per case (cheap: cores are shared via Arc
+    // until a write touches them).
+    let map_docs = rand_docs(64, 128, 8, 77);
+    let fp: Vec<f32> = map_docs.iter().map(|&v| v as f32 / 128.0).collect();
+    let db = quantize(&fp, 64, 128, QuantScheme::Int8);
+    let base = DircChip::build(
+        ChipConfig {
+            cores: 2,
+            map_points: 25,
+            ..ChipConfig::paper_default(128, Metric::Mips)
+        },
+        &db,
+    );
+    forall(cases(10), gen_pair(gen_usize(1, 5), gen_usize(0, 1000)), |&(n_upd, seed)| {
+        let updates: Vec<(u64, DocPayload)> = (0..n_upd)
+            .map(|i| {
+                let id = ((seed + i * 13) % 64) as u64;
+                (id, DocPayload { values: db.row(id as usize).to_vec(), norm: db.norms[id as usize] })
+            })
+            .collect();
+
+        let mut chip_batch = base.clone();
+        let mut chip_single = base.clone();
+        let mut r1 = Pcg::new(seed as u64);
+        let mut r2 = Pcg::new(seed as u64);
+
+        let batch = chip_batch.update_docs(&updates, &mut r1).unwrap();
+        let mut folded = dirc_rag::dirc::chip::MutationStats::default();
+        for u in &updates {
+            let s = chip_single.update_docs(std::slice::from_ref(u), &mut r2).unwrap();
+            folded.merge(&s);
+        }
+
+        // Batch == singles over the same rng stream.
+        if batch.write_pulses != folded.write_pulses
+            || batch.write_cycles != folded.write_cycles
+            || batch.docs_updated != folded.docs_updated
+        {
+            return false;
+        }
+        if batch.per_core.len() != folded.per_core.len() {
+            return false;
+        }
+        for (a, b) in batch.per_core.iter().zip(&folded.per_core) {
+            if a.cells_written != b.cells_written
+                || (a.energy_j - b.energy_j).abs() > 1e-18
+                || (a.time_s - b.time_s).abs() > 1e-15
+            {
+                return false;
+            }
+        }
+        // total() is exactly the per-core sum.
+        let t = batch.total();
+        let sum_cells: usize = batch.per_core.iter().map(|c| c.cells_written).sum();
+        let sum_e: f64 = batch.per_core.iter().map(|c| c.energy_j).sum();
+        let sum_t: f64 = batch.per_core.iter().map(|c| c.time_s).sum();
+        t.cells_written == sum_cells
+            && (t.energy_j - sum_e).abs() < 1e-18
+            && (t.time_s - sum_t).abs() < 1e-15
     });
 }
 
