@@ -1,0 +1,250 @@
+//! Two-stage cluster-pruned retrieval on the synthetic 4 MB corpus:
+//! exhaustive vs centroid-prefiltered queries on the same chip, with the
+//! modeled per-query cycle/energy accounting and the measured recall
+//! side by side. Emits the `BENCH_4.json` trajectory artifact (override
+//! the path with `DIRC_BENCH_OUT`).
+//!
+//! ```bash
+//! cargo bench --bench cluster_pruning
+//! ```
+//!
+//! Gates (deterministic — all modeled metrics come from the simulator):
+//!
+//! * `nprobe = n_clusters` is bit-identical to the exhaustive path;
+//! * at the default `nprobe`, summed per-query sense work drops >= 3x;
+//! * pruned recall@10 against the exhaustive ranking stays high (the
+//!   hard 2% P@k gate lives in `tests/precision_regression.rs`).
+
+use std::sync::Arc;
+
+use dirc_rag::bench::{fmt_duration, Bench, Table};
+use dirc_rag::data::{SynthDataset, SynthParams};
+use dirc_rag::dirc::chip::{ChipConfig, DircChip};
+use dirc_rag::eval::precision_at_k;
+use dirc_rag::retrieval::cluster::ClusterPolicy;
+use dirc_rag::retrieval::quant::{quantize, QuantScheme};
+use dirc_rag::retrieval::score::Metric;
+use dirc_rag::retrieval::Prune;
+use dirc_rag::util::json::Json;
+use dirc_rag::util::pool::ThreadPool;
+use dirc_rag::util::rng::Pcg;
+
+const N_CLUSTERS: usize = 128;
+
+/// Modeled + measured census of one evaluation sweep.
+#[derive(Default, Clone)]
+struct Sweep {
+    work_cycles: f64,
+    cycles: f64,
+    energy_j: f64,
+    latency_s: f64,
+    macros_sensed: f64,
+    p1: f64,
+    p5: f64,
+    p10: f64,
+    topk: Vec<Vec<u64>>,
+}
+
+fn sweep(chip: &DircChip, ds: &SynthDataset, n_queries: usize, prune: Prune) -> Sweep {
+    let mut rng = Pcg::new(17);
+    let mut s = Sweep::default();
+    for qi in 0..n_queries {
+        let q = quantize(ds.query(qi), 1, ds.dim, QuantScheme::Int8);
+        let (ranked, stats) = chip.query_opt(&q.values, 10, prune, &mut rng, 1);
+        s.work_cycles += stats.work_cycles as f64;
+        s.cycles += stats.cycles as f64;
+        s.energy_j += stats.energy_j;
+        s.latency_s += stats.latency_s;
+        s.macros_sensed += stats.macros_sensed as f64;
+        s.p1 += precision_at_k(&ranked, &ds.qrels[qi], 1);
+        s.p5 += precision_at_k(&ranked, &ds.qrels[qi], 5);
+        s.p10 += precision_at_k(&ranked, &ds.qrels[qi], 10);
+        s.topk.push(ranked.iter().map(|d| d.doc_id).collect());
+    }
+    let n = n_queries as f64;
+    s.work_cycles /= n;
+    s.cycles /= n;
+    s.energy_j /= n;
+    s.latency_s /= n;
+    s.macros_sensed /= n;
+    s.p1 /= n;
+    s.p5 /= n;
+    s.p10 /= n;
+    s
+}
+
+fn sweep_json(s: &Sweep) -> Json {
+    Json::obj(vec![
+        ("work_cycles_per_query", Json::num(s.work_cycles)),
+        ("latency_cycles_per_query", Json::num(s.cycles)),
+        ("energy_uj_per_query", Json::num(s.energy_j * 1e6)),
+        ("latency_us_per_query", Json::num(s.latency_s * 1e6)),
+        ("macros_sensed_avg", Json::num(s.macros_sensed)),
+        ("p_at_1", Json::num(s.p1)),
+        ("p_at_5", Json::num(s.p5)),
+        ("p_at_10", Json::num(s.p10)),
+    ])
+}
+
+fn main() {
+    let fast = std::env::var("DIRC_BENCH_FAST").ok().as_deref() == Some("1");
+    // Full 4 MB chip: 8192 docs x 512 dims INT8 on 16 cores, with real
+    // topic structure so measured recall means something.
+    let (n, dim) = (8192usize, 512usize);
+    let n_queries = if fast { 24 } else { 64 };
+    let params = SynthParams {
+        topics: 32,
+        doc_noise: 0.6,
+        rels_per_query: 1,
+        extra_rel_range: 1,
+        query_noise: 0.5,
+        confuse: 0.6,
+        aniso: 1.0,
+        seed: 4141,
+    };
+    eprintln!("generating {n} x {dim} corpus + building clustered chip...");
+    let ds = SynthDataset::generate(n, n_queries, dim, &params);
+    let db = quantize(&ds.docs, n, dim, QuantScheme::Int8);
+    let cfg = ChipConfig {
+        map_points: if fast { 40 } else { 80 },
+        cluster: ClusterPolicy { n_clusters: N_CLUSTERS, nprobe: 4, kmeans_iters: 8 },
+        ..ChipConfig::paper_default(dim, Metric::Cosine)
+    };
+    let chip = Arc::new(DircChip::build(cfg, &db));
+    assert_eq!(db.stored_bytes(), 4 << 20, "corpus must be exactly 4 MB INT8");
+
+    // Correctness gate before any numbers: probing every centroid must
+    // reproduce the exhaustive path bit-for-bit.
+    {
+        let q = quantize(ds.query(0), 1, dim, QuantScheme::Int8);
+        let mut r1 = Pcg::new(5);
+        let mut r2 = Pcg::new(5);
+        let (top_full, stats_full) = chip.query_opt(&q.values, 10, Prune::None, &mut r1, 1);
+        let (top_all, stats_all) =
+            chip.query_opt(&q.values, 10, Prune::Probe(N_CLUSTERS), &mut r2, 1);
+        assert_eq!(top_full, top_all, "nprobe = n_clusters diverged from exhaustive");
+        assert_eq!(stats_full.cycles, stats_all.cycles);
+        assert_eq!(stats_full.energy_j.to_bits(), stats_all.energy_j.to_bits());
+    }
+
+    let exhaustive = sweep(&chip, &ds, n_queries, Prune::None);
+    let pruned = sweep(&chip, &ds, n_queries, Prune::Default);
+
+    // Recall of the pruned run against the exhaustive ranking (same rng
+    // stream -> identical sensing flips; the difference is purely the
+    // candidate restriction).
+    let recall10: f64 = exhaustive
+        .topk
+        .iter()
+        .zip(&pruned.topk)
+        .map(|(f, p)| f.iter().filter(|id| p.contains(id)).count() as f64 / f.len() as f64)
+        .sum::<f64>()
+        / exhaustive.topk.len() as f64;
+
+    let work_ratio = exhaustive.work_cycles / pruned.work_cycles;
+    let energy_ratio = exhaustive.energy_j / pruned.energy_j;
+    let latency_ratio = exhaustive.latency_s / pruned.latency_s;
+
+    let mut t = Table::new(&["path", "work cyc/q", "energy µJ/q", "latency µs/q", "P@10"]);
+    t.row(&[
+        "exhaustive".into(),
+        format!("{:.0}", exhaustive.work_cycles),
+        format!("{:.3}", exhaustive.energy_j * 1e6),
+        format!("{:.2}", exhaustive.latency_s * 1e6),
+        format!("{:.4}", exhaustive.p10),
+    ]);
+    t.row(&[
+        format!("pruned ({N_CLUSTERS}c/np4)"),
+        format!("{:.0}", pruned.work_cycles),
+        format!("{:.3}", pruned.energy_j * 1e6),
+        format!("{:.2}", pruned.latency_s * 1e6),
+        format!("{:.4}", pruned.p10),
+    ]);
+    println!("\n=== cluster_pruning: exhaustive vs two-stage on the 4 MB corpus ===");
+    t.print();
+    println!(
+        "sense-work saving {work_ratio:.2}x, energy saving {energy_ratio:.2}x, \
+         latency ratio {latency_ratio:.2}x, macros sensed {:.1}/16, \
+         recall@10 vs exhaustive {recall10:.4}",
+        pruned.macros_sensed
+    );
+
+    // Host-side throughput: the skipped (query, core) jobs never reach
+    // the pool, so pruning also buys wall-clock on the simulator.
+    let mut b = Bench::new();
+    let pool = ThreadPool::new(4);
+    let queries: Vec<Vec<i8>> = (0..n_queries)
+        .map(|qi| quantize(ds.query(qi), 1, dim, QuantScheme::Int8).values)
+        .collect();
+    let host_full = b
+        .run("batch exhaustive (pool of 4)", || {
+            let mut r = Pcg::new(9);
+            DircChip::query_batch_opt(&chip, &pool, &queries, 10, Prune::None, &mut r).len()
+        })
+        .summary
+        .median;
+    let host_pruned = b
+        .run("batch pruned (pool of 4)", || {
+            let mut r = Pcg::new(9);
+            DircChip::query_batch_opt(&chip, &pool, &queries, 10, Prune::Default, &mut r).len()
+        })
+        .summary
+        .median;
+    println!(
+        "host wall-clock per batch: exhaustive {} vs pruned {} ({:.2}x)",
+        fmt_duration(host_full),
+        fmt_duration(host_pruned),
+        host_full / host_pruned
+    );
+
+    // The acceptance gates (all modeled -> deterministic, not flaky).
+    assert!(
+        work_ratio >= 3.0,
+        "default-nprobe pruning must drop modeled sense work >= 3x, got {work_ratio:.2}x"
+    );
+    assert!(
+        recall10 >= 0.8,
+        "pruned recall@10 vs exhaustive collapsed: {recall10:.3}"
+    );
+
+    // Default to the workspace root (cargo runs bench binaries with the
+    // package dir — rust/ — as CWD, so a bare relative path would land
+    // the artifact in the wrong place and break the CI upload).
+    let out = std::env::var("DIRC_BENCH_OUT")
+        .unwrap_or_else(|_| concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_4.json").into());
+    let json = Json::obj(vec![
+        ("bench", Json::str("cluster_pruning")),
+        (
+            "corpus",
+            Json::obj(vec![
+                ("docs", Json::num(n as f64)),
+                ("dim", Json::num(dim as f64)),
+                ("stored_mb", Json::num(db.stored_bytes() as f64 / (1 << 20) as f64)),
+                ("queries", Json::num(n_queries as f64)),
+            ]),
+        ),
+        (
+            "config",
+            Json::obj(vec![
+                ("n_clusters", Json::num(N_CLUSTERS as f64)),
+                ("nprobe", Json::num(4.0)),
+                ("cores", Json::num(16.0)),
+            ]),
+        ),
+        ("exhaustive", sweep_json(&exhaustive)),
+        ("pruned", sweep_json(&pruned)),
+        (
+            "savings",
+            Json::obj(vec![
+                ("work_ratio", Json::num(work_ratio)),
+                ("energy_ratio", Json::num(energy_ratio)),
+                ("latency_ratio", Json::num(latency_ratio)),
+                ("recall_at_10_vs_exhaustive", Json::num(recall10)),
+            ]),
+        ),
+    ]);
+    std::fs::write(&out, json.to_string_pretty()).expect("write bench artifact");
+    println!("wrote {out}");
+
+    b.report("cluster_pruning");
+}

@@ -9,6 +9,7 @@ use crate::dirc::chip::ChipConfig;
 use crate::dirc::detect::ResensePolicy;
 use crate::dirc::variation::VariationModel;
 use crate::dirc::RemapStrategy;
+use crate::retrieval::cluster::ClusterPolicy;
 use crate::retrieval::quant::QuantScheme;
 use crate::retrieval::score::Metric;
 use crate::util::config::Config;
@@ -53,11 +54,27 @@ pub fn chip_config(cfg: &Config) -> Result<ChipConfig> {
         reram_sigma: cfg.float_or("variation.reram_sigma", 0.1),
         ..VariationModel::default()
     };
+    chip.cluster = ClusterPolicy {
+        n_clusters: cfg.usize_or("prune.n_clusters", chip.cluster.n_clusters),
+        nprobe: cfg.usize_or("prune.nprobe", chip.cluster.nprobe),
+        kmeans_iters: cfg.usize_or("prune.kmeans_iters", chip.cluster.kmeans_iters),
+    };
     if chip.bits != 4 && chip.bits != 8 {
         return Err(anyhow!("chip.bits must be 4 or 8"));
     }
     if chip.dim % 128 != 0 {
         return Err(anyhow!("chip.dim must be a multiple of 128"));
+    }
+    if chip.cluster.n_clusters > 4096 {
+        return Err(anyhow!("prune.n_clusters must be <= 4096"));
+    }
+    if chip.cluster.n_clusters == 1 {
+        // ClusterPolicy::enabled() needs >= 2 clusters; accepting 1 here
+        // would silently build an exhaustive chip under pruning knobs.
+        return Err(anyhow!("prune.n_clusters must be 0 (off) or >= 2"));
+    }
+    if chip.cluster.n_clusters > 0 && chip.cluster.nprobe == 0 {
+        return Err(anyhow!("prune.nprobe must be >= 1 when clustering is on"));
     }
     Ok(chip)
 }
@@ -83,6 +100,11 @@ pub fn coordinator_config(cfg: &Config) -> Result<CoordinatorConfig> {
         mutation_max_defer: std::time::Duration::from_millis(
             cfg.int_or("serving.mutation_max_defer_ms", 20).max(0) as u64,
         ),
+        // 0 (or absent) = defer to the chip's own pruning policy.
+        nprobe: match cfg.usize_or("serving.nprobe", 0) {
+            0 => None,
+            p => Some(p),
+        },
         seed: cfg.int_or("chip.seed", 0xC00D) as u64,
     })
 }
@@ -189,6 +211,35 @@ query_quant = "int4"
             coordinator_config(&cfg).unwrap().mutation_max_defer,
             std::time::Duration::from_millis(7)
         );
+    }
+
+    #[test]
+    fn prune_knobs_bind_and_validate() {
+        // Defaults: clustering off, nprobe 4, 8 Lloyd iterations.
+        let cfg = Config::parse("").unwrap();
+        let chip = chip_config(&cfg).unwrap();
+        assert_eq!(chip.cluster.n_clusters, 0);
+        assert_eq!(chip.cluster.nprobe, 4);
+        assert_eq!(chip.cluster.kmeans_iters, 8);
+        assert_eq!(coordinator_config(&cfg).unwrap().nprobe, None);
+
+        let cfg = Config::parse(
+            "[prune]\nn_clusters = 64\nnprobe = 6\nkmeans_iters = 12\n[serving]\nnprobe = 3",
+        )
+        .unwrap();
+        let chip = chip_config(&cfg).unwrap();
+        assert_eq!(chip.cluster.n_clusters, 64);
+        assert_eq!(chip.cluster.nprobe, 6);
+        assert_eq!(chip.cluster.kmeans_iters, 12);
+        assert_eq!(coordinator_config(&cfg).unwrap().nprobe, Some(3));
+
+        // Invalid combinations are rejected.
+        let bad = Config::parse("[prune]\nn_clusters = 8192").unwrap();
+        assert!(chip_config(&bad).is_err());
+        let bad = Config::parse("[prune]\nn_clusters = 16\nnprobe = 0").unwrap();
+        assert!(chip_config(&bad).is_err());
+        let bad = Config::parse("[prune]\nn_clusters = 1").unwrap();
+        assert!(chip_config(&bad).is_err(), "n_clusters = 1 would silently disable pruning");
     }
 
     #[test]

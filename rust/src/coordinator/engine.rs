@@ -35,6 +35,7 @@ use anyhow::{bail, Result};
 
 use crate::coordinator::request::Mutation;
 use crate::dirc::chip::{ChipConfig, DircChip, DocPayload, MutationStats, QueryStats};
+use crate::retrieval::cluster::Prune;
 use crate::retrieval::quant::{QuantScheme, Quantized};
 use crate::retrieval::score::{finalize_scores, norm_i8, Metric};
 use crate::retrieval::topk::{ScoredDoc, TopK};
@@ -54,7 +55,26 @@ pub struct MutationOutcome {
 /// A retrieval engine: quantised query in, ranked documents + hardware
 /// stats out.
 pub trait Engine: Send + Sync {
+    /// Retrieve under the engine's default pruning policy
+    /// ([`Prune::Default`] — exhaustive unless the chip was built with a
+    /// cluster index).
     fn retrieve(&self, q: &[i8], k: usize, rng: &mut Pcg) -> (Vec<ScoredDoc>, QueryStats);
+
+    /// Retrieve under an explicit [`Prune`] policy (the per-request
+    /// `nprobe` override of the serving path). The policy is advisory:
+    /// an engine without a two-stage index serves exhaustively — which is
+    /// exactly what every policy degenerates to on such a corpus — so
+    /// the default implementation ignores it.
+    fn retrieve_opt(
+        &self,
+        q: &[i8],
+        k: usize,
+        prune: Prune,
+        rng: &mut Pcg,
+    ) -> (Vec<ScoredDoc>, QueryStats) {
+        let _ = prune;
+        self.retrieve(q, k, rng)
+    }
 
     /// Retrieve a batch of queries. The contract is bit-identical results
     /// to calling [`Engine::retrieve`] once per query in order with the
@@ -68,6 +88,19 @@ pub trait Engine: Send + Sync {
         rng: &mut Pcg,
     ) -> Vec<(Vec<ScoredDoc>, QueryStats)> {
         queries.iter().map(|q| self.retrieve(q, k, rng)).collect()
+    }
+
+    /// [`Engine::retrieve_batch`] under an explicit [`Prune`] policy;
+    /// same bit-identity contract against a serial loop of
+    /// [`Engine::retrieve_opt`] calls.
+    fn retrieve_batch_opt(
+        &self,
+        queries: &[Vec<i8>],
+        k: usize,
+        prune: Prune,
+        rng: &mut Pcg,
+    ) -> Vec<(Vec<ScoredDoc>, QueryStats)> {
+        queries.iter().map(|q| self.retrieve_opt(q, k, prune, rng)).collect()
     }
 
     /// How many queued queries this engine can usefully absorb in one
@@ -187,16 +220,26 @@ impl SimEngine {
 
 impl Engine for SimEngine {
     fn retrieve(&self, q: &[i8], k: usize, rng: &mut Pcg) -> (Vec<ScoredDoc>, QueryStats) {
+        self.retrieve_opt(q, k, Prune::Default, rng)
+    }
+
+    fn retrieve_opt(
+        &self,
+        q: &[i8],
+        k: usize,
+        prune: Prune,
+        rng: &mut Pcg,
+    ) -> (Vec<ScoredDoc>, QueryStats) {
         let chip = self.chip();
         match &self.pool {
             // A single query is a batch of one: its per-core jobs run on
             // the shared pool (no per-call thread spawning).
             Some(pool) => {
                 let batch = [q.to_vec()];
-                let mut out = DircChip::query_batch(&chip, pool, &batch, k, rng);
+                let mut out = DircChip::query_batch_opt(&chip, pool, &batch, k, prune, rng);
                 out.pop().expect("one result for one query")
             }
-            None => chip.query_on(q, k, rng, 1),
+            None => chip.query_opt(q, k, prune, rng, 1),
         }
     }
 
@@ -206,10 +249,20 @@ impl Engine for SimEngine {
         k: usize,
         rng: &mut Pcg,
     ) -> Vec<(Vec<ScoredDoc>, QueryStats)> {
+        self.retrieve_batch_opt(queries, k, Prune::Default, rng)
+    }
+
+    fn retrieve_batch_opt(
+        &self,
+        queries: &[Vec<i8>],
+        k: usize,
+        prune: Prune,
+        rng: &mut Pcg,
+    ) -> Vec<(Vec<ScoredDoc>, QueryStats)> {
         let chip = self.chip();
         match &self.pool {
-            Some(pool) => DircChip::query_batch(&chip, pool, queries, k, rng),
-            None => queries.iter().map(|q| chip.query_on(q, k, rng, 1)).collect(),
+            Some(pool) => DircChip::query_batch_opt(&chip, pool, queries, k, prune, rng),
+            None => queries.iter().map(|q| chip.query_opt(q, k, prune, rng, 1)).collect(),
         }
     }
 
@@ -356,26 +409,48 @@ impl ServingEngine {
 
 impl Engine for ServingEngine {
     fn retrieve(&self, q: &[i8], k: usize, rng: &mut Pcg) -> (Vec<ScoredDoc>, QueryStats) {
+        self.retrieve_opt(q, k, Prune::Default, rng)
+    }
+
+    fn retrieve_opt(
+        &self,
+        q: &[i8],
+        k: usize,
+        prune: Prune,
+        rng: &mut Pcg,
+    ) -> (Vec<ScoredDoc>, QueryStats) {
         let q_norm = norm_i8(q);
         // Hold the read lock across the whole pass: the PJRT block and
         // the chip snapshot must come from the same corpus version.
         let state = self.state.read().unwrap();
 
+        // Centroid prefilter: one macro mask for the sense pass AND the
+        // top-k filter below — both stages must see the same selection or
+        // the engine would return docs whose macros never sensed.
+        let mask = state.chip.macro_mask(q, prune);
+
         // Hardware pass: sensing + accounting (no functional compute),
-        // sharded across cores on the shared pool when one is attached.
+        // sharded across cores on the shared pool when one is attached;
+        // masked-out macros skip their sense pass entirely.
         let (per_core_flips, stats) = match &self.pool {
-            Some(pool) => DircChip::sense_pass_pool(&state.chip, pool, k, rng),
-            None => state.chip.sense_pass(k, rng),
+            Some(pool) => {
+                DircChip::sense_pass_pool_masked(&state.chip, pool, k, rng, mask.as_deref())
+            }
+            None => state.chip.sense_pass_masked(k, rng, 1, mask.as_deref()),
         };
 
         // Functional pass: one PJRT execution for the whole database.
+        // (The fused dot costs one device pass either way; pruning's
+        // modeled saving is the chip's, the host-side saving is the
+        // skipped sense simulation + smaller top-k scan below.)
         let ips = self
             .runtime
             .mips_scores(&state.block, q)
             .expect("PJRT execution failed on the serve path");
         let mut ips: Vec<i64> = ips.into_iter().map(|v| v as i64).collect();
 
-        // Exact flip corrections, offset into the flat slot space.
+        // Exact flip corrections, offset into the flat slot space
+        // (skipped macros returned no flips).
         for (c, flips) in per_core_flips.iter().enumerate() {
             let core = &state.chip.cores()[c];
             let base = state.offsets[c];
@@ -390,10 +465,21 @@ impl Engine for ServingEngine {
             if self.metric == Metric::Cosine { Some(&state.norms) } else { None },
             q_norm,
         );
+        // Top-k over the sensed cores' slots only — the same candidate
+        // set the simulator's pruned merge sees, so SimEngine and
+        // ServingEngine stay bit-identical under every policy.
         let mut topk = TopK::new(k);
-        for (i, &s) in scores.iter().enumerate() {
-            if state.live[i] {
-                topk.push(ScoredDoc { doc_id: state.ids[i], score: s });
+        for (c, core) in state.chip.cores().iter().enumerate() {
+            if let Some(m) = &mask {
+                if !m[c] {
+                    continue;
+                }
+            }
+            let base = state.offsets[c];
+            for i in base..base + core.doc_ids().len() {
+                if state.live[i] {
+                    topk.push(ScoredDoc { doc_id: state.ids[i], score: scores[i] });
+                }
             }
         }
         (topk.into_sorted(), stats)
@@ -518,6 +604,46 @@ mod tests {
         assert_eq!(del.stats.docs_deleted, 1);
         assert_eq!(del.stats.missing_ids, 1);
         assert_eq!(eng.n_docs(), 200);
+    }
+
+    #[test]
+    fn pruned_engine_paths_identical_and_cheaper() {
+        let q = db(320, 128, 9);
+        let mk_cfg = || ChipConfig {
+            cluster: crate::retrieval::cluster::ClusterPolicy {
+                n_clusters: 8,
+                nprobe: 2,
+                kmeans_iters: 6,
+            },
+            ..cfg(128, 4)
+        };
+        let serial = SimEngine::new(mk_cfg(), &q);
+        let pool = Arc::new(ThreadPool::new(4));
+        let pooled = SimEngine::with_pool(mk_cfg(), &q, Some(pool));
+        let mut qrng = Pcg::new(70);
+        for seed in 0..4u64 {
+            let qv: Vec<i8> = (0..128).map(|_| qrng.int_in(-128, 127) as i8).collect();
+            for prune in [Prune::None, Prune::Default, Prune::Probe(3)] {
+                let mut r1 = Pcg::new(seed);
+                let mut r2 = Pcg::new(seed);
+                let (t1, s1) = serial.retrieve_opt(&qv, 5, prune, &mut r1);
+                let (t2, s2) = pooled.retrieve_opt(&qv, 5, prune, &mut r2);
+                assert_eq!(t1, t2, "{prune:?}");
+                assert_eq!(s1.cycles, s2.cycles, "{prune:?}");
+                assert_eq!(s1.work_cycles, s2.work_cycles, "{prune:?}");
+                assert_eq!(s1.macros_sensed, s2.macros_sensed, "{prune:?}");
+            }
+            // Default policy (nprobe 2 of 8) must skip work whenever the
+            // mask excludes a core.
+            let mut r1 = Pcg::new(seed);
+            let mut r2 = Pcg::new(seed);
+            let (_, full) = serial.retrieve_opt(&qv, 5, Prune::None, &mut r1);
+            let (_, pruned) = serial.retrieve_opt(&qv, 5, Prune::Default, &mut r2);
+            assert!(pruned.work_cycles <= full.work_cycles);
+            if pruned.macros_skipped > 0 {
+                assert!(pruned.energy_j < full.energy_j);
+            }
+        }
     }
 
     // ServingEngine vs SimEngine equivalence lives in rust/tests/

@@ -197,6 +197,9 @@ mod tests {
             stats: QueryStats {
                 sense: SenseStats { flips: 3, resenses: 1, ..SenseStats::default() },
                 cycles: 1400,
+                work_cycles: 20480,
+                macros_sensed: 16,
+                macros_skipped: 0,
                 latency_s: 5.6e-6,
                 energy_j: 0.95e-6,
                 docs_scored: 100,

@@ -43,8 +43,12 @@ impl Mutation {
 /// What a request asks the coordinator to do.
 #[derive(Debug, Clone)]
 pub enum RequestKind {
-    /// Retrieve the top-k documents for a query.
-    Retrieve { query: Query, k: usize },
+    /// Retrieve the top-k documents for a query. `nprobe` overrides the
+    /// two-stage pruning aggressiveness for this request alone: `None`
+    /// defers to the coordinator's configured default (which itself
+    /// defers to the chip's `cluster.nprobe`), `Some(p)` probes exactly
+    /// `p` centroids — `Some(p >= n_clusters)` is the exhaustive path.
+    Retrieve { query: Query, k: usize, nprobe: Option<usize> },
     /// Apply a corpus mutation through the serve-mode mutation channel.
     Mutate(Mutation),
 }
@@ -118,10 +122,23 @@ mod tests {
     fn request_kinds() {
         let r = Request {
             id: 1,
-            kind: RequestKind::Retrieve { query: Query::Embedding(vec![0.0; 2]), k: 5 },
+            kind: RequestKind::Retrieve {
+                query: Query::Embedding(vec![0.0; 2]),
+                k: 5,
+                nprobe: None,
+            },
         };
         let m = Request { id: 2, kind: RequestKind::Mutate(Mutation::Delete { ids: vec![9] }) };
-        assert!(matches!(r.kind, RequestKind::Retrieve { k: 5, .. }));
+        assert!(matches!(r.kind, RequestKind::Retrieve { k: 5, nprobe: None, .. }));
         assert!(matches!(m.kind, RequestKind::Mutate(Mutation::Delete { .. })));
+        let p = Request {
+            id: 3,
+            kind: RequestKind::Retrieve {
+                query: Query::Embedding(vec![0.0; 2]),
+                k: 5,
+                nprobe: Some(2),
+            },
+        };
+        assert!(matches!(p.kind, RequestKind::Retrieve { nprobe: Some(2), .. }));
     }
 }

@@ -40,6 +40,7 @@ use crate::coordinator::request::{
     Mutation, MutationResponse, Query, Request, RequestKind, Response,
 };
 use crate::data::text::{bow_features, HASH_BUCKETS};
+use crate::retrieval::cluster::Prune;
 use crate::retrieval::quant::QuantScheme;
 use crate::runtime::PjrtRuntime;
 use crate::util::rng::Pcg;
@@ -63,6 +64,11 @@ pub struct CoordinatorConfig {
     /// it is admitted anyway (anti-starvation bound of the admission
     /// policy).
     pub mutation_max_defer: Duration,
+    /// Default two-stage pruning for requests that carry no per-request
+    /// `nprobe` override: `None` defers to the chip's own policy
+    /// (`Prune::Default` — exhaustive on a chip without clusters),
+    /// `Some(p)` probes `p` centroids.
+    pub nprobe: Option<usize>,
     pub seed: u64,
 }
 
@@ -74,6 +80,7 @@ impl Default for CoordinatorConfig {
             scheme: QuantScheme::Int8,
             retrieve_batch: 8,
             mutation_max_defer: Duration::from_millis(20),
+            nprobe: None,
             seed: 0xC00D,
         }
     }
@@ -89,6 +96,9 @@ struct WorkItem {
     pending: Pending,
     q_int: Vec<i8>,
     k: usize,
+    /// Pruning policy resolved at ingest (request override, else the
+    /// coordinator default, else the chip's own default).
+    prune: Prune,
     embed_s: f64,
 }
 
@@ -210,12 +220,25 @@ impl Coordinator {
         }
     }
 
-    /// Submit a retrieval request; returns the response channel.
+    /// Submit a retrieval request; returns the response channel. Served
+    /// under the configured default pruning policy.
     pub fn submit(&self, query: Query, k: usize) -> Result<(u64, Receiver<Response>)> {
+        self.submit_opt(query, k, None)
+    }
+
+    /// [`Coordinator::submit`] with a per-request `nprobe` override for
+    /// the two-stage pruned retrieval path (`None` = configured default;
+    /// `Some(p >= n_clusters)` forces the exhaustive path).
+    pub fn submit_opt(
+        &self,
+        query: Query,
+        k: usize,
+        nprobe: Option<usize>,
+    ) -> Result<(u64, Receiver<Response>)> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (resp_tx, resp_rx) = channel();
         let pending = Pending {
-            req: Request { id, kind: RequestKind::Retrieve { query, k } },
+            req: Request { id, kind: RequestKind::Retrieve { query, k, nprobe } },
             submitted: Instant::now(),
             resp_tx,
         };
@@ -410,11 +433,17 @@ fn flush(
     // Quantise queries and hand to workers.
     for (p, emb, embed_s) in ready {
         let q = crate::retrieval::quant::quantize(&emb, 1, emb.len(), cfg.scheme);
-        let k = match &p.req.kind {
-            RequestKind::Retrieve { k, .. } => *k,
+        let (k, nprobe) = match &p.req.kind {
+            RequestKind::Retrieve { k, nprobe, .. } => (*k, *nprobe),
             RequestKind::Mutate(_) => unreachable!(),
         };
-        let item = WorkItem { pending: p, q_int: q.values, k, embed_s };
+        // Per-request override wins, then the coordinator default, then
+        // the chip's own policy.
+        let prune = match nprobe.or(cfg.nprobe) {
+            Some(p) => Prune::Probe(p),
+            None => Prune::Default,
+        };
+        let item = WorkItem { pending: p, q_int: q.values, k, prune, embed_s };
         if work_tx.send(item).is_err() {
             metrics.record_error();
             drop_inflight(1);
@@ -438,8 +467,9 @@ fn worker_loop(
     loop {
         // Block for one query, drain whatever else is already queued
         // (work-conserving — see `batcher::recv_batch`), then dispatch
-        // runs of equal k through the engine's batch path so a pooled
-        // engine can pipeline them across the DIRC cores.
+        // runs of equal (k, prune policy) through the engine's batch
+        // path so a pooled engine can pipeline them across the DIRC
+        // cores.
         let items = {
             let guard = work_rx.lock().unwrap();
             crate::coordinator::batcher::recv_batch(&guard, batch_max)
@@ -448,13 +478,14 @@ fn worker_loop(
         let mut items = std::collections::VecDeque::from(items);
         while !items.is_empty() {
             let k = items[0].k;
+            let prune = items[0].prune;
             let mut group = Vec::new();
-            while items.front().is_some_and(|it| it.k == k) {
+            while items.front().is_some_and(|it| it.k == k && it.prune == prune) {
                 group.push(items.pop_front().unwrap());
             }
             let queries: Vec<Vec<i8>> = group.iter().map(|it| it.q_int.clone()).collect();
             let t0 = Instant::now();
-            let results = engine.retrieve_batch(&queries, k, &mut rng);
+            let results = engine.retrieve_batch_opt(&queries, k, prune, &mut rng);
             let retrieve_s = t0.elapsed().as_secs_f64() / group.len() as f64;
             // A short result set would silently hang the dropped clients
             // on their response channels — fail loudly instead.

@@ -38,6 +38,7 @@ use crate::dirc::macro_::{DocWrite, Flip, MacroConfig, SenseStats};
 use crate::dirc::remap::RemapStrategy;
 use crate::dirc::variation::{ErrorMap, VariationModel};
 use crate::dirc::write::{UpdateCost, WriteModel};
+use crate::retrieval::cluster::{kmeans, Centroids, ClusterPolicy, Prune};
 use crate::retrieval::quant::Quantized;
 use crate::retrieval::score::{norm_i8, Metric};
 use crate::retrieval::topk::{merge_local, ScoredDoc};
@@ -68,6 +69,12 @@ pub struct ChipConfig {
     /// which stale map rows are lazily re-characterised (and the layouts
     /// of the touched macros re-derived) before the next mutation.
     pub wear_refresh_pulses: u64,
+    /// Two-stage (cluster-pruned) retrieval knobs: `n_clusters == 0`
+    /// keeps the exhaustive paper path; otherwise `DircChip::build` runs
+    /// k-means over the quantised corpus, lays documents out
+    /// cluster-contiguous, and queries may skip macros hosting no probed
+    /// cluster (see [`Prune`]).
+    pub cluster: ClusterPolicy,
     pub seed: u64,
 }
 
@@ -85,6 +92,7 @@ impl ChipConfig {
             variation: VariationModel::default(),
             write: WriteModel::default(),
             wear_refresh_pulses: 50_000_000,
+            cluster: ClusterPolicy::default(),
             seed: 0xD12C_0001,
         }
     }
@@ -109,10 +117,21 @@ impl ChipConfig {
 #[derive(Debug, Clone)]
 pub struct QueryStats {
     pub sense: SenseStats,
+    /// Latency view: worst sensed core + serial tail (+ centroid-select
+    /// overhead on a pruned query).
     pub cycles: u64,
+    /// Work view: sense + detect + MAC + stall cycles summed across the
+    /// macros that actually ran — the quantity macro skipping shrinks
+    /// (latency barely moves: parallel cores, the worst sensed macro
+    /// still gates it).
+    pub work_cycles: u64,
+    /// Macros that ran a sense pass for this query.
+    pub macros_sensed: u32,
+    /// Macros skipped by the cluster prefilter (0 on the exhaustive path).
+    pub macros_skipped: u32,
     pub latency_s: f64,
     pub energy_j: f64,
-    /// Documents scored across all cores.
+    /// Documents scored across the sensed cores.
     pub docs_scored: u64,
 }
 
@@ -133,6 +152,70 @@ pub struct CoreOutcome {
     pub max_column_resenses: u64,
     /// Documents this core scored.
     pub n_docs: u64,
+    /// Whether the cluster prefilter skipped this macro (no sense pass,
+    /// no candidates, zero cost).
+    pub skipped: bool,
+}
+
+/// The chip's two-stage retrieval index: frozen build-time centroids plus
+/// a per-core bitset of the clusters each core currently hosts (live
+/// documents only — the mutation path keeps it in sync).
+#[derive(Clone)]
+pub struct ClusterIndex {
+    /// Frozen centroid table, shared across mutation snapshots.
+    centroids: Arc<Centroids>,
+    /// `core_clusters[c]` is a bitset over cluster ids: bit `j` set iff
+    /// core `c` holds at least one live document of cluster `j`.
+    core_clusters: Vec<Vec<u64>>,
+}
+
+impl ClusterIndex {
+    fn new(centroids: Arc<Centroids>, cores: usize) -> ClusterIndex {
+        let words = centroids.n_clusters.div_ceil(64);
+        ClusterIndex { centroids, core_clusters: vec![vec![0u64; words]; cores] }
+    }
+
+    pub fn n_clusters(&self) -> usize {
+        self.centroids.n_clusters
+    }
+
+    pub fn centroids(&self) -> &Centroids {
+        &self.centroids
+    }
+
+    /// Whether core `c` hosts at least one live document of `cluster`.
+    pub fn core_has(&self, c: usize, cluster: u32) -> bool {
+        self.core_clusters[c][cluster as usize / 64] >> (cluster as usize % 64) & 1 != 0
+    }
+
+    fn set(&mut self, c: usize, cluster: u32) {
+        self.core_clusters[c][cluster as usize / 64] |= 1 << (cluster as usize % 64);
+    }
+
+    /// Recompute core `c`'s bitset from its slot assignments + tombstone
+    /// filter (used after deletes and cluster-changing updates).
+    fn rebuild_core(&mut self, c: usize, slot_cluster: &[u32], live: &[bool]) {
+        let words = &mut self.core_clusters[c];
+        words.iter_mut().for_each(|w| *w = 0);
+        for (&cl, &l) in slot_cluster.iter().zip(live) {
+            if l {
+                words[cl as usize / 64] |= 1 << (cl as usize % 64);
+            }
+        }
+    }
+
+    /// The per-core macro mask implied by a set of probed clusters:
+    /// `true` = the core hosts at least one of them and must sense.
+    fn core_mask(&self, clusters: &[u32]) -> Vec<bool> {
+        self.core_clusters
+            .iter()
+            .map(|words| {
+                clusters
+                    .iter()
+                    .any(|&cl| words[cl as usize / 64] >> (cl as usize % 64) & 1 != 0)
+            })
+            .collect()
+    }
 }
 
 /// The chip simulator.
@@ -147,6 +230,8 @@ pub struct CoreOutcome {
 pub struct DircChip {
     pub cfg: ChipConfig,
     cores: Vec<Arc<DircCore>>,
+    /// Two-stage retrieval index (None = exhaustive chip).
+    clusters: Option<ClusterIndex>,
     map: ErrorMap,
     cycle_model: CycleModel,
     energy_model: EnergyModel,
@@ -172,9 +257,19 @@ pub struct DircChip {
 }
 
 impl DircChip {
-    /// Build a chip from a quantised database. Documents are distributed
-    /// round-robin in contiguous blocks: core `c` holds docs
-    /// `[c*per_core, (c+1)*per_core)`.
+    /// Build a chip from a quantised database.
+    ///
+    /// Without clustering (`cfg.cluster.n_clusters == 0`) documents are
+    /// distributed in contiguous id-order blocks: core `c` holds docs
+    /// `[c*per_core, (c+1)*per_core)` — the paper's layout.
+    ///
+    /// With clustering, a deterministic k-means
+    /// ([`crate::retrieval::cluster::kmeans`]) assigns every document a
+    /// cluster and the layout becomes **cluster-contiguous**: documents
+    /// are placed sorted by `(cluster, id)`, so each macro serves as few
+    /// clusters as possible and a probed-cluster set selects few macros.
+    /// Global doc ids are preserved (only slot positions change), so
+    /// results and tombstoning are unaffected by the permutation.
     pub fn build(cfg: ChipConfig, db: &Quantized) -> DircChip {
         assert_eq!(db.dim, cfg.dim);
         assert_eq!(db.scheme.bits(), cfg.bits, "db precision != chip precision");
@@ -185,24 +280,57 @@ impl DircChip {
             cfg.capacity_docs()
         );
         let map = cfg.variation.extract_error_map(cfg.map_points, cfg.seed);
+        let clustering = if cfg.cluster.enabled(db.n) {
+            Some(kmeans(
+                &db.values,
+                db.n,
+                db.dim,
+                cfg.cluster.n_clusters,
+                cfg.cluster.kmeans_iters,
+            ))
+        } else {
+            None
+        };
+        // Placement order: id order when exhaustive, (cluster, id) when
+        // clustered (stable in id, so same-cluster docs keep id order).
+        let mut order: Vec<usize> = (0..db.n).collect();
+        if let Some(cl) = &clustering {
+            order.sort_by_key(|&i| (cl.assign[i], i));
+        }
         let per_core = db.n.div_ceil(cfg.cores);
         let mut cores = Vec::with_capacity(cfg.cores);
         let mut doc_core = HashMap::with_capacity(db.n);
+        let mut index = clustering
+            .as_ref()
+            .map(|cl| ClusterIndex::new(Arc::new(cl.centroids.clone()), cfg.cores));
         for c in 0..cfg.cores {
             let lo = (c * per_core).min(db.n);
             let hi = ((c + 1) * per_core).min(db.n);
-            let docs = &db.values[lo * db.dim..hi * db.dim];
-            let norms = &db.norms[lo..hi];
-            let ids: Vec<u64> = (lo as u64..hi as u64).collect();
-            for &id in &ids {
-                doc_core.insert(id, c as u32);
+            let slots = &order[lo..hi];
+            let mut docs = Vec::with_capacity(slots.len() * db.dim);
+            let mut norms = Vec::with_capacity(slots.len());
+            let mut ids = Vec::with_capacity(slots.len());
+            for &i in slots {
+                docs.extend_from_slice(db.row(i));
+                norms.push(db.norms[i]);
+                ids.push(i as u64);
+                doc_core.insert(i as u64, c as u32);
             }
-            cores.push(Arc::new(DircCore::program(cfg.macro_cfg(), docs, norms, &ids, &map)));
+            let mut core = DircCore::program(cfg.macro_cfg(), &docs, &norms, &ids, &map);
+            if let (Some(cl), Some(index)) = (&clustering, index.as_mut()) {
+                let slot_clusters: Vec<u32> = slots.iter().map(|&i| cl.assign[i]).collect();
+                for &cluster in &slot_clusters {
+                    index.set(c, cluster);
+                }
+                core.set_slot_clusters(slot_clusters);
+            }
+            cores.push(Arc::new(core));
         }
         let stale_cores = vec![false; cfg.cores];
         DircChip {
             cfg,
             cores,
+            clusters: index,
             map,
             cycle_model: CycleModel::default(),
             energy_model: EnergyModel::default(),
@@ -234,6 +362,40 @@ impl DircChip {
         &self.cores
     }
 
+    /// The two-stage retrieval index (None on an exhaustive chip).
+    pub fn cluster_index(&self) -> Option<&ClusterIndex> {
+        self.clusters.as_ref()
+    }
+
+    /// Resolve a [`Prune`] policy into the per-core macro mask of one
+    /// query: `Some(mask)` with `mask[c] == false` for every macro the
+    /// centroid prefilter skips, `None` for the exhaustive path.
+    ///
+    /// `None` is returned — and the query is **bit-identical** to the
+    /// paper path, select overhead included — whenever the chip has no
+    /// cluster index, the policy is [`Prune::None`], the effective
+    /// `nprobe` covers every centroid, or the mask would select no macro
+    /// at all (every probed centroid empty; falling back to exhaustive
+    /// beats returning nothing).
+    pub fn macro_mask(&self, q: &[i8], prune: Prune) -> Option<Vec<bool>> {
+        let index = self.clusters.as_ref()?;
+        let nprobe = match prune {
+            Prune::None => return None,
+            Prune::Default => self.cfg.cluster.nprobe,
+            Prune::Probe(p) => p,
+        };
+        if nprobe == 0 || nprobe >= index.n_clusters() {
+            return None;
+        }
+        let probed = index.centroids().top_for_query(q, self.cfg.metric, nprobe);
+        let mask = index.core_mask(&probed);
+        if mask.iter().any(|&m| m) {
+            Some(mask)
+        } else {
+            None
+        }
+    }
+
     /// Deterministic per-(query, core) sensing stream: [`Pcg::keyed`] on
     /// the query nonce and core index. Callers draw one fresh nonce per
     /// query (as [`DircChip::query_on`] does) to decorrelate queries; the
@@ -263,6 +425,21 @@ impl DircChip {
             max_column_resenses: res.stats.max_column_resenses,
             n_docs: core.n_docs() as u64,
             stats: res.stats,
+            skipped: false,
+        }
+    }
+
+    /// The zero-cost outcome of a macro the cluster prefilter skipped:
+    /// no sense pass, no candidates, no cycles, no energy events.
+    fn skipped_outcome(&self, c: usize) -> CoreOutcome {
+        CoreOutcome {
+            core: c,
+            local_topk: Vec::new(),
+            stats: SenseStats::default(),
+            used_slots: 0,
+            max_column_resenses: 0,
+            n_docs: 0,
+            skipped: true,
         }
     }
 
@@ -280,6 +457,7 @@ impl DircChip {
             max_column_resenses: stats.max_column_resenses,
             n_docs: core.n_docs() as u64,
             stats,
+            skipped: false,
         };
         (flips, outcome)
     }
@@ -290,8 +468,21 @@ impl DircChip {
     /// arrive in any order — the result is the same.
     pub fn finish_query(
         &self,
+        outcomes: Vec<CoreOutcome>,
+        k: usize,
+    ) -> (Vec<ScoredDoc>, QueryStats) {
+        self.finish_query_pruned(outcomes, k, false)
+    }
+
+    /// [`DircChip::finish_query`] with the pruning flag of the query:
+    /// when `pruned`, the centroid-select overhead is charged and the
+    /// merge tail covers only the macros that ran. Skipped outcomes
+    /// contribute zero slots/stats, so the folds are unchanged.
+    pub fn finish_query_pruned(
+        &self,
         mut outcomes: Vec<CoreOutcome>,
         k: usize,
+        pruned: bool,
     ) -> (Vec<ScoredDoc>, QueryStats) {
         outcomes.sort_by_key(|o| o.core);
         let mut agg = SenseStats::default();
@@ -299,15 +490,20 @@ impl DircChip {
         let mut stalls = Vec::with_capacity(outcomes.len());
         let mut locals = Vec::with_capacity(outcomes.len());
         let mut docs_scored = 0u64;
+        let mut sensed = 0usize;
         for o in outcomes {
             agg.merge(&o.stats);
             used_slots.push(o.used_slots);
             stalls.push(o.max_column_resenses);
             docs_scored += o.n_docs;
+            if !o.skipped {
+                sensed += 1;
+            }
             locals.push(o.local_topk);
         }
         let merged = merge_local(&locals, k);
-        let stats = self.assemble_stats(agg, &used_slots, &stalls, k, docs_scored);
+        let stats =
+            self.assemble_stats(agg, &used_slots, &stalls, k, docs_scored, sensed, pruned);
         (merged, stats)
     }
 
@@ -331,22 +527,42 @@ impl DircChip {
         rng: &mut Pcg,
         threads: usize,
     ) -> (Vec<Vec<Flip>>, QueryStats) {
+        self.sense_pass_masked(k, rng, threads, None)
+    }
+
+    /// [`DircChip::sense_pass_on`] under a per-core macro mask (the
+    /// serving engine's pruned path — it owns the mask because the PJRT
+    /// score pass and the top-k filter must see the same selection).
+    /// Masked-out macros return no flips and cost nothing; `None` is the
+    /// exhaustive pass, bit-identical to [`DircChip::sense_pass`].
+    pub fn sense_pass_masked(
+        &self,
+        k: usize,
+        rng: &mut Pcg,
+        threads: usize,
+        mask: Option<&[bool]>,
+    ) -> (Vec<Vec<Flip>>, QueryStats) {
         let qnonce = rng.next_u64();
         let cores: Vec<usize> = (0..self.cores.len()).collect();
-        let results = parallel_map(&cores, threads, |_, &c| self.run_core_sense(c, qnonce));
+        let results = parallel_map(&cores, threads, |_, &c| match mask {
+            Some(m) if !m[c] => (Vec::new(), self.skipped_outcome(c)),
+            _ => self.run_core_sense(c, qnonce),
+        });
         let mut per_core_flips = Vec::with_capacity(results.len());
         let mut outcomes = Vec::with_capacity(results.len());
         for (flips, outcome) in results {
             per_core_flips.push(flips);
             outcomes.push(outcome);
         }
-        let (_, stats) = self.finish_query(outcomes, k);
+        let (_, stats) = self.finish_query_pruned(outcomes, k, mask.is_some());
         (per_core_flips, stats)
     }
 
     /// Execute one query: broadcast to all cores, local top-k per core,
     /// global merge; account cycles and energy. Serial reference path —
-    /// equivalent to [`DircChip::query_on`] with one thread.
+    /// equivalent to [`DircChip::query_on`] with one thread. Uses the
+    /// chip's default pruning policy ([`Prune::Default`]): exhaustive on
+    /// a chip without clusters, `cfg.cluster.nprobe` centroids otherwise.
     pub fn query(&self, q: &[i8], k: usize, rng: &mut Pcg) -> (Vec<ScoredDoc>, QueryStats) {
         self.query_on(q, k, rng, 1)
     }
@@ -362,13 +578,35 @@ impl DircChip {
         rng: &mut Pcg,
         threads: usize,
     ) -> (Vec<ScoredDoc>, QueryStats) {
+        self.query_opt(q, k, Prune::Default, rng, threads)
+    }
+
+    /// Execute one query under an explicit [`Prune`] policy: the centroid
+    /// prefilter selects `nprobe` clusters, every macro hosting none of
+    /// them skips its sense pass entirely (the query register is already
+    /// stationary, so a skipped macro is a skipped pass — zero cycles,
+    /// zero energy events), and the skipped senses are accounted in
+    /// [`QueryStats`]. The mask never consumes query RNG, so the caller's
+    /// stream position is policy-independent, and `nprobe >= n_clusters`
+    /// is bit-identical to [`Prune::None`].
+    pub fn query_opt(
+        &self,
+        q: &[i8],
+        k: usize,
+        prune: Prune,
+        rng: &mut Pcg,
+        threads: usize,
+    ) -> (Vec<ScoredDoc>, QueryStats) {
         assert_eq!(q.len(), self.cfg.dim);
+        let mask = self.macro_mask(q, prune);
         let qnonce = rng.next_u64();
         let q_norm = norm_i8(q);
         let cores: Vec<usize> = (0..self.cores.len()).collect();
-        let outcomes =
-            parallel_map(&cores, threads, |_, &c| self.run_core_query(c, q, q_norm, k, qnonce));
-        self.finish_query(outcomes, k)
+        let outcomes = parallel_map(&cores, threads, |_, &c| match &mask {
+            Some(m) if !m[c] => self.skipped_outcome(c),
+            _ => self.run_core_query(c, q, q_norm, k, qnonce),
+        });
+        self.finish_query_pruned(outcomes, k, mask.is_some())
     }
 
     /// Pipeline a batch of queries across the cores as a queries × cores
@@ -381,6 +619,7 @@ impl DircChip {
     /// reduce through [`DircChip::finish_query`].
     ///
     /// `chip` is taken as an `Arc` so the jobs are `'static` for the pool.
+    /// Uses the chip's default pruning policy, like [`DircChip::query`].
     pub fn query_batch(
         chip: &std::sync::Arc<DircChip>,
         pool: &ThreadPool,
@@ -388,12 +627,31 @@ impl DircChip {
         k: usize,
         rng: &mut Pcg,
     ) -> Vec<(Vec<ScoredDoc>, QueryStats)> {
+        Self::query_batch_opt(chip, pool, queries, k, Prune::Default, rng)
+    }
+
+    /// [`DircChip::query_batch`] under an explicit [`Prune`] policy.
+    /// Masked-out (query, core) pairs never become pool jobs — the skip
+    /// saves host work exactly where it saves modeled chip work — and the
+    /// result stays bit-identical to a serial loop of
+    /// [`DircChip::query_opt`] calls with the same `rng`.
+    pub fn query_batch_opt(
+        chip: &std::sync::Arc<DircChip>,
+        pool: &ThreadPool,
+        queries: &[Vec<i8>],
+        k: usize,
+        prune: Prune,
+        rng: &mut Pcg,
+    ) -> Vec<(Vec<ScoredDoc>, QueryStats)> {
         let n_cores = chip.cores.len();
         if queries.is_empty() {
             return Vec::new();
         }
-        // Draw nonces in query order — the exact stream a serial loop of
-        // `query` calls would consume from `rng`.
+        // Per-query macro masks (no RNG involved), then nonces in query
+        // order — the exact stream a serial loop of `query_opt` calls
+        // would consume from `rng`.
+        let masks: Vec<Option<Vec<bool>>> =
+            queries.iter().map(|q| chip.macro_mask(q, prune)).collect();
         let prepared: std::sync::Arc<Vec<(Vec<i8>, f64, u64)>> = std::sync::Arc::new(
             queries
                 .iter()
@@ -404,8 +662,16 @@ impl DircChip {
                 .collect(),
         );
         let (tx, rx) = std::sync::mpsc::channel::<(usize, CoreOutcome)>();
+        let mut per_query: Vec<Vec<CoreOutcome>> =
+            (0..queries.len()).map(|_| Vec::with_capacity(n_cores)).collect();
         for qi in 0..queries.len() {
             for c in 0..n_cores {
+                if let Some(m) = &masks[qi] {
+                    if !m[c] {
+                        per_query[qi].push(chip.skipped_outcome(c));
+                        continue;
+                    }
+                }
                 let chip = std::sync::Arc::clone(chip);
                 let prepared = std::sync::Arc::clone(&prepared);
                 let tx = tx.clone();
@@ -417,8 +683,6 @@ impl DircChip {
             }
         }
         drop(tx); // receivers below terminate once every job's sender drops
-        let mut per_query: Vec<Vec<CoreOutcome>> =
-            (0..queries.len()).map(|_| Vec::with_capacity(n_cores)).collect();
         for (qi, outcome) in rx {
             per_query[qi].push(outcome);
         }
@@ -426,7 +690,11 @@ impl DircChip {
             per_query.iter().all(|o| o.len() == n_cores),
             "a core job died before reporting (pool panic?)"
         );
-        per_query.into_iter().map(|outcomes| chip.finish_query(outcomes, k)).collect()
+        per_query
+            .into_iter()
+            .zip(&masks)
+            .map(|(outcomes, mask)| chip.finish_query_pruned(outcomes, k, mask.is_some()))
+            .collect()
     }
 
     /// Sense-only pool variant: one query's per-core sensing jobs fanned
@@ -439,10 +707,31 @@ impl DircChip {
         k: usize,
         rng: &mut Pcg,
     ) -> (Vec<Vec<Flip>>, QueryStats) {
+        Self::sense_pass_pool_masked(chip, pool, k, rng, None)
+    }
+
+    /// [`DircChip::sense_pass_pool`] under a per-core macro mask (see
+    /// [`DircChip::sense_pass_masked`]); masked-out macros never become
+    /// pool jobs.
+    pub fn sense_pass_pool_masked(
+        chip: &std::sync::Arc<DircChip>,
+        pool: &ThreadPool,
+        k: usize,
+        rng: &mut Pcg,
+        mask: Option<&[bool]>,
+    ) -> (Vec<Vec<Flip>>, QueryStats) {
         let qnonce = rng.next_u64();
         let n_cores = chip.cores.len();
         let (tx, rx) = std::sync::mpsc::channel::<(usize, (Vec<Flip>, CoreOutcome))>();
+        let mut slots: Vec<Option<(Vec<Flip>, CoreOutcome)>> =
+            (0..n_cores).map(|_| None).collect();
         for c in 0..n_cores {
+            if let Some(m) = mask {
+                if !m[c] {
+                    slots[c] = Some((Vec::new(), chip.skipped_outcome(c)));
+                    continue;
+                }
+            }
             let chip = std::sync::Arc::clone(chip);
             let tx = tx.clone();
             pool.execute(move || {
@@ -450,8 +739,6 @@ impl DircChip {
             });
         }
         drop(tx);
-        let mut slots: Vec<Option<(Vec<Flip>, CoreOutcome)>> =
-            (0..n_cores).map(|_| None).collect();
         for (c, result) in rx {
             slots[c] = Some(result);
         }
@@ -463,12 +750,15 @@ impl DircChip {
             per_core_flips.push(flips);
             outcomes.push(outcome);
         }
-        let (_, stats) = chip.finish_query(outcomes, k);
+        let (_, stats) = chip.finish_query_pruned(outcomes, k, mask.is_some());
         (per_core_flips, stats)
     }
 
     /// Convert aggregated sense statistics + occupancy into the cycle and
-    /// energy census of one query.
+    /// energy census of one query. `sensed` counts the macros that ran;
+    /// `pruned` charges the centroid-prefilter overhead (cycles + MACs)
+    /// when the cluster mask was applied.
+    #[allow(clippy::too_many_arguments)]
     fn assemble_stats(
         &self,
         agg: SenseStats,
@@ -476,19 +766,32 @@ impl DircChip {
         stalls: &[u64],
         k: usize,
         docs_scored: u64,
+        sensed: usize,
+        pruned: bool,
     ) -> QueryStats {
-        let qc = self.cycle_model.chip_query(
+        let n_clusters = if pruned {
+            self.clusters.as_ref().map_or(0, |ci| ci.n_clusters())
+        } else {
+            0
+        };
+        let select = self.cycle_model.prune_select(n_clusters);
+        let qc = self.cycle_model.chip_query_pruned(
             used_slots,
             self.cfg.bits,
             self.cfg.detect,
             stalls,
             k,
+            sensed,
+            select,
         );
         let cycles = qc.total();
+        let work_cycles =
+            self.cycle_model.chip_work(used_slots, self.cfg.bits, self.cfg.detect, stalls);
         let latency_s = self.cycle_model.seconds(cycles);
 
         // Energy events: per-macro plane loads are planes/128 plane-rows
-        // (SenseStats counts column planes).
+        // (SenseStats counts column planes). Skipped macros contributed
+        // no slots and no sense statistics, so they cost nothing here.
         let mac_cycles_total: u64 = used_slots
             .iter()
             .map(|&s| (s * self.cfg.bits * self.cfg.bits) as u64)
@@ -500,20 +803,46 @@ impl DircChip {
             detect_checks_total: agg.detect_checks,
             dim: self.cfg.dim,
             docs_scored,
-            global_candidates: (self.cores.len() * k) as u64,
+            global_candidates: (sensed * k) as u64,
+            centroid_macs: (n_clusters * self.cfg.dim) as u64,
             elapsed_s: latency_s,
         };
         let energy_j = self.energy_model.query_energy(&ev).total_j();
-        QueryStats { sense: agg, cycles, latency_s, energy_j, docs_scored }
+        QueryStats {
+            sense: agg,
+            cycles,
+            work_cycles,
+            macros_sensed: sensed as u32,
+            macros_skipped: (used_slots.len() - sensed) as u32,
+            latency_s,
+            energy_j,
+            docs_scored,
+        }
     }
 
     /// Clean (error-free) global top-k — the retrieval-precision oracle.
+    /// Always exhaustive: the oracle ranks the whole corpus.
     pub fn clean_query(&self, q: &[i8], k: usize) -> Vec<ScoredDoc> {
+        self.clean_query_opt(q, k, Prune::None)
+    }
+
+    /// Clean scores under a [`Prune`] policy: the error-free counterpart
+    /// of [`DircChip::query_opt`], restricted to the macros the centroid
+    /// prefilter selects. Used by the evaluation harness to separate the
+    /// pruning recall loss from the sensing-error recall loss.
+    pub fn clean_query_opt(&self, q: &[i8], k: usize, prune: Prune) -> Vec<ScoredDoc> {
         let q_norm = norm_i8(q);
+        let mask = self.macro_mask(q, prune);
         let locals: Vec<Vec<ScoredDoc>> = self
             .cores
             .iter()
-            .map(|core| {
+            .enumerate()
+            .map(|(c, core)| {
+                if let Some(m) = &mask {
+                    if !m[c] {
+                        return Vec::new();
+                    }
+                }
                 let scores = core.clean_scores(q, q_norm, self.cfg.metric);
                 let mut topk = crate::retrieval::topk::TopK::new(k);
                 // Clean path shares the id layout (and the tombstone
@@ -698,8 +1027,12 @@ impl DircChip {
             }
             let core = Arc::make_mut(&mut self.cores[c]);
             core.macro_mut().rebuild_layout(&map);
-            // The re-derived layout moves bits between physical slots, so
-            // the macro's occupied cells migrate: estimated with the
+            // The re-derived layout moves bits between *physical cell
+            // slots* only — the document -> word-slot mapping (and with
+            // it the cluster-contiguous placement and every hosted-
+            // cluster bitset) is untouched, so wear-triggered rederive
+            // preserves cluster contiguity by construction.
+            // The macro's occupied cells migrate: estimated with the
             // expected-pulse formula (a background rewrite, not a
             // per-cell verify loop we simulate).
             let occupied_bytes = core.n_docs() * self.cfg.dim * self.cfg.bits / 8;
@@ -712,8 +1045,13 @@ impl DircChip {
         self.wear_at_refresh = self.total_wear();
     }
 
-    /// Admit new documents: least-loaded core first (lowest index on
-    /// ties), tombstoned slots reused before fresh appends, cells
+    /// Admit new documents. Placement is cluster-aware on a clustered
+    /// chip: each document routes to its nearest build-time centroid, and
+    /// among cores with a free slot those already hosting that cluster
+    /// are preferred (keeping the probed-cluster → few-macros property
+    /// under churn), then least-loaded, then lowest index. On an
+    /// exhaustive chip the policy is least-loaded-first exactly as
+    /// before. Tombstoned slots are reused before fresh appends, cells
     /// programmed through the pulse-accurate write-verify loop. Returns
     /// the assigned global ids alongside the measured accounting.
     ///
@@ -746,15 +1084,34 @@ impl DircChip {
         let mut free: Vec<bool> = self.cores.iter().map(|c| c.has_free_slot()).collect();
         let mut ids = Vec::with_capacity(docs.len());
         for p in docs {
+            let cluster = self
+                .clusters
+                .as_ref()
+                .map(|index| index.centroids().nearest(&p.values));
             let c = (0..self.cores.len())
                 .filter(|&c| free[c])
-                .min_by_key(|&c| (live_counts[c], c))
+                .min_by_key(|&c| {
+                    // Cores already serving the doc's cluster sort first
+                    // (`false < true`); the load/index tie-break follows.
+                    let misses_cluster = match (cluster, &self.clusters) {
+                        (Some(cl), Some(index)) => !index.core_has(c, cl),
+                        _ => false,
+                    };
+                    (misses_cluster, live_counts[c], c)
+                })
                 .expect("capacity pre-check guarantees a free core");
             let id = self.next_doc_id;
             self.next_doc_id += 1;
-            let (_, w) = Arc::make_mut(&mut self.cores[c])
+            let (local, w) = Arc::make_mut(&mut self.cores[c])
                 .add_doc(id, &p.values, p.norm, &self.cfg.write, rng)
                 .expect("placement chose a core without a free slot");
+            if let Some(cl) = cluster {
+                Arc::make_mut(&mut self.cores[c]).set_slot_cluster(local, cl);
+                self.clusters
+                    .as_mut()
+                    .expect("cluster routed on a clustered chip")
+                    .set(c, cl);
+            }
             live_counts[c] += 1;
             free[c] = self.cores[c].has_free_slot();
             self.doc_core.insert(id, c as u32);
@@ -767,7 +1124,12 @@ impl DircChip {
     }
 
     /// Re-program resident documents in place. Unknown ids are counted
-    /// in `missing_ids` and skipped.
+    /// in `missing_ids` and skipped. On a clustered chip the re-written
+    /// document is re-routed: its slot re-stamps to the nearest centroid
+    /// of the *new* payload, and the core's hosted-cluster set refreshes
+    /// when that assignment moved (the slot itself never moves — strict
+    /// contiguity degrades gracefully under churn; correctness rides on
+    /// the hosted-cluster sets, not on contiguity).
     pub fn update_docs(
         &mut self,
         updates: &[(u64, DocPayload)],
@@ -782,6 +1144,10 @@ impl DircChip {
         }
         let mut stats = self.new_stats();
         self.maybe_refresh(&mut stats);
+        // Bitsets are not consulted inside the loop, so cluster-moving
+        // updates only mark their core and one O(slots) rebuild per
+        // touched core runs after the batch (same batching as deletes).
+        let mut moved: Vec<bool> = vec![false; self.cores.len()];
         for (id, p) in updates {
             let Some(&c) = self.doc_core.get(id) else {
                 stats.missing_ids += 1;
@@ -798,17 +1164,36 @@ impl DircChip {
                 &self.cfg.write,
                 rng,
             );
+            if let Some(index) = &self.clusters {
+                let cluster = index.centroids().nearest(&p.values);
+                if self.cores[c].slot_clusters().get(local) != Some(&cluster) {
+                    Arc::make_mut(&mut self.cores[c]).set_slot_cluster(local, cluster);
+                    moved[c] = true;
+                }
+            }
             self.account_write(c, &w, &mut stats);
             stats.docs_updated += 1;
+        }
+        if self.clusters.is_some() {
+            for c in 0..moved.len() {
+                if moved[c] {
+                    self.refresh_core_clusters(c);
+                }
+            }
         }
         Ok(stats)
     }
 
     /// Tombstone resident documents (index-buffer invalidation only — no
     /// program pulses; the slot's cells keep their data until an add
-    /// reuses them). Unknown ids are counted in `missing_ids`.
+    /// reuses them). Unknown ids are counted in `missing_ids`. On a
+    /// clustered chip a delete stays within its cluster: the tombstone
+    /// removes the slot from the live set and the core's hosted-cluster
+    /// set refreshes, so a core whose last document of a cluster died
+    /// stops sensing for that cluster's probes.
     pub fn delete_docs(&mut self, ids: &[u64]) -> MutationStats {
         let mut stats = self.new_stats();
+        let mut touched: Vec<bool> = vec![false; self.cores.len()];
         for id in ids {
             let Some(c) = self.doc_core.remove(id) else {
                 stats.missing_ids += 1;
@@ -819,10 +1204,27 @@ impl DircChip {
                 .find_doc(*id)
                 .expect("doc index points at a core that lost the doc");
             self.core_mut(c).delete_local(local);
+            touched[c] = true;
             self.n_docs -= 1;
             stats.docs_deleted += 1;
         }
+        if self.clusters.is_some() {
+            for c in 0..touched.len() {
+                if touched[c] {
+                    self.refresh_core_clusters(c);
+                }
+            }
+        }
         stats
+    }
+
+    /// Recompute core `c`'s hosted-cluster bitset from its slot stamps
+    /// and tombstone filter. No-op on an exhaustive chip.
+    fn refresh_core_clusters(&mut self, c: usize) {
+        if let Some(index) = self.clusters.as_mut() {
+            let core = &self.cores[c];
+            index.rebuild_core(c, core.slot_clusters(), core.live());
+        }
     }
 }
 
@@ -951,6 +1353,197 @@ mod tests {
         assert!((0.45..0.75).contains(&ratio), "latency ratio {ratio}");
         let eratio = half.energy_j / full.energy_j;
         assert!((0.40..0.75).contains(&eratio), "energy ratio {eratio}");
+    }
+
+    fn build_clustered(
+        n: usize,
+        dim: usize,
+        cores: usize,
+        n_clusters: usize,
+        nprobe: usize,
+    ) -> DircChip {
+        let mut rng = Pcg::new(19);
+        let fp = random_unit_rows(n, dim, &mut rng);
+        let db = quantize(&fp, n, dim, QuantScheme::Int8);
+        let cfg = ChipConfig {
+            cores,
+            map_points: 40,
+            cluster: crate::retrieval::cluster::ClusterPolicy {
+                n_clusters,
+                nprobe,
+                kmeans_iters: 6,
+            },
+            ..ChipConfig::paper_default(dim, Metric::Mips)
+        };
+        DircChip::build(cfg, &db)
+    }
+
+    #[test]
+    fn clustered_layout_is_cluster_contiguous_partition() {
+        let chip = build_clustered(300, 128, 4, 8, 4);
+        let index = chip.cluster_index().expect("clustered chip");
+        assert_eq!(index.n_clusters(), 8);
+        let mut seen_ids = std::collections::HashSet::new();
+        for (c, core) in chip.cores().iter().enumerate() {
+            let clusters = core.slot_clusters();
+            assert_eq!(clusters.len(), core.doc_ids().len());
+            // Cluster-contiguous: non-decreasing cluster ids within a core.
+            for w in clusters.windows(2) {
+                assert!(w[0] <= w[1], "core {c} not cluster-contiguous");
+            }
+            for (slot, &cl) in clusters.iter().enumerate() {
+                assert!((cl as usize) < 8);
+                assert!(index.core_has(c, cl), "hosted-cluster bitset missed a slot");
+                assert!(seen_ids.insert(core.doc_ids()[slot]), "doc placed twice");
+            }
+        }
+        assert_eq!(seen_ids.len(), 300, "layout must place every doc exactly once");
+    }
+
+    #[test]
+    fn clustered_clean_query_matches_exhaustive_layout() {
+        // The cluster permutation moves slots, not results: clean top-k
+        // (ids and score bits) is identical to an unclustered build of
+        // the same database.
+        let mut rng = Pcg::new(19);
+        let fp = random_unit_rows(300, 128, &mut rng);
+        let db = quantize(&fp, 300, 128, QuantScheme::Int8);
+        let base = ChipConfig {
+            cores: 4,
+            map_points: 40,
+            ..ChipConfig::paper_default(128, Metric::Mips)
+        };
+        let plain = DircChip::build(base.clone(), &db);
+        let clustered = DircChip::build(
+            ChipConfig {
+                cluster: crate::retrieval::cluster::ClusterPolicy {
+                    n_clusters: 8,
+                    nprobe: 4,
+                    kmeans_iters: 6,
+                },
+                ..base
+            },
+            &db,
+        );
+        let mut qrng = Pcg::new(23);
+        for _ in 0..5 {
+            let q: Vec<i8> = (0..128).map(|_| qrng.int_in(-128, 127) as i8).collect();
+            let a = plain.clean_query(&q, 10);
+            let b = clustered.clean_query(&q, 10);
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn full_nprobe_bit_identical_to_exhaustive() {
+        let chip = build_clustered(400, 128, 4, 8, 4);
+        let mut rng = Pcg::new(29);
+        let q: Vec<i8> = (0..128).map(|_| rng.int_in(-128, 127) as i8).collect();
+        assert!(chip.macro_mask(&q, Prune::Probe(8)).is_none());
+        assert!(chip.macro_mask(&q, Prune::None).is_none());
+        let mut r1 = Pcg::new(7);
+        let mut r2 = Pcg::new(7);
+        let (top_full, stats_full) = chip.query_opt(&q, 10, Prune::None, &mut r1, 1);
+        let (top_all, stats_all) = chip.query_opt(&q, 10, Prune::Probe(8), &mut r2, 1);
+        assert_eq!(top_full, top_all);
+        assert_eq!(stats_full.cycles, stats_all.cycles);
+        assert_eq!(stats_full.energy_j.to_bits(), stats_all.energy_j.to_bits());
+        assert_eq!(stats_full.macros_skipped, 0);
+    }
+
+    #[test]
+    fn pruned_query_skips_macros_and_accounts_them() {
+        let chip = build_clustered(400, 128, 4, 8, 4);
+        let mut rng = Pcg::new(31);
+        let q: Vec<i8> = (0..128).map(|_| rng.int_in(-128, 127) as i8).collect();
+        let mut r1 = Pcg::new(3);
+        let mut r2 = Pcg::new(3);
+        let (_, full) = chip.query_opt(&q, 10, Prune::None, &mut r1, 1);
+        let (top, pruned) = chip.query_opt(&q, 10, Prune::Probe(1), &mut r2, 1);
+        // Caller rng position is policy-independent.
+        assert_eq!(r1.next_u64(), r2.next_u64());
+        assert!(!top.is_empty());
+        assert_eq!(pruned.macros_sensed + pruned.macros_skipped, 4);
+        if pruned.macros_skipped > 0 {
+            assert!(pruned.work_cycles < full.work_cycles, "skipped senses must shrink work");
+            assert!(pruned.energy_j < full.energy_j, "skipped senses must shrink energy");
+            assert!(pruned.docs_scored < full.docs_scored);
+        }
+        // Pruned candidates are a subset of the full clean ranking's doc
+        // universe scored on the sensed cores only.
+        let sensed_docs: u64 = chip
+            .cores()
+            .iter()
+            .enumerate()
+            .filter(|(c, _)| {
+                chip.macro_mask(&q, Prune::Probe(1)).map_or(true, |m| m[*c])
+            })
+            .map(|(_, core)| core.n_docs() as u64)
+            .sum();
+        assert_eq!(pruned.docs_scored, sensed_docs);
+    }
+
+    #[test]
+    fn cluster_aware_adds_follow_their_centroid() {
+        let mut chip = build_clustered(300, 128, 4, 8, 4);
+        let mut rng = Pcg::new(37);
+        // Re-ingest a copy of an existing doc: it must land on a core
+        // already hosting that doc's cluster (free slots exist everywhere
+        // at 300/512 occupancy).
+        let src_core = 2usize;
+        let src = chip.cores()[src_core].clone();
+        let payload = DocPayload {
+            values: src.macro_().docs()[..128].to_vec(),
+            norm: src.norms()[0],
+        };
+        let cluster = chip
+            .cluster_index()
+            .unwrap()
+            .centroids()
+            .nearest(&payload.values);
+        // Cores hosting the cluster *before* the add: routing must pick
+        // one of them (free slots exist everywhere at this occupancy).
+        let hosting_before: Vec<usize> = (0..chip.cores().len())
+            .filter(|&c| chip.cluster_index().unwrap().core_has(c, cluster))
+            .collect();
+        assert!(!hosting_before.is_empty());
+        let (ids, stats) = chip.add_docs(&[payload], &mut rng).expect("add");
+        assert_eq!(stats.docs_added, 1);
+        let c = chip.doc_core[&ids[0]] as usize;
+        assert!(
+            hosting_before.contains(&c),
+            "add routed to core {c}, which did not host cluster {cluster}"
+        );
+        let local = chip.cores()[c].find_doc(ids[0]).unwrap();
+        assert_eq!(chip.cores()[c].slot_clusters()[local], cluster);
+    }
+
+    #[test]
+    fn delete_updates_hosted_cluster_sets() {
+        let mut chip = build_clustered(200, 128, 4, 8, 4);
+        // Pick a (core, cluster) pair and delete every live doc of that
+        // cluster on that core: the bitset must clear.
+        let (c, cluster) = {
+            let core = &chip.cores()[0];
+            (0usize, core.slot_clusters()[0])
+        };
+        let victims: Vec<u64> = {
+            let core = &chip.cores()[c];
+            core.doc_ids()
+                .iter()
+                .zip(core.slot_clusters())
+                .zip(core.live())
+                .filter(|((_, &cl), &l)| l && cl == cluster)
+                .map(|((&id, _), _)| id)
+                .collect()
+        };
+        assert!(!victims.is_empty());
+        let stats = chip.delete_docs(&victims);
+        assert_eq!(stats.docs_deleted, victims.len());
+        assert!(
+            !chip.cluster_index().unwrap().core_has(c, cluster),
+            "bitset must drop a cluster whose last live doc died"
+        );
     }
 
     #[test]

@@ -25,6 +25,13 @@ pub struct DircCore {
     doc_ids: Vec<u64>,
     /// Slot validity (index-buffer tombstones for deleted docs).
     live: Vec<bool>,
+    /// Per-slot cluster assignment of the two-stage retrieval index
+    /// (parallel to `doc_ids`; empty when the chip was built without
+    /// clustering). Maintained by the chip's mutation path: adds stamp
+    /// the routed cluster, updates re-stamp the nearest centroid of the
+    /// new payload; a tombstoned slot keeps its stale stamp, which the
+    /// `live` filter masks.
+    slot_cluster: Vec<u32>,
 }
 
 /// Result of one core-local query pass.
@@ -55,6 +62,7 @@ impl DircCore {
             d_norms: norms.to_vec(),
             doc_ids: ids.to_vec(),
             live: vec![true; n],
+            slot_cluster: Vec::new(),
         }
     }
 
@@ -88,6 +96,27 @@ impl DircCore {
     /// Live (non-tombstoned) documents on this core.
     pub fn n_live(&self) -> usize {
         self.live.iter().filter(|&&l| l).count()
+    }
+
+    /// Per-slot cluster assignments (empty when the chip was built
+    /// without clustering; see the field docs for staleness rules).
+    pub fn slot_clusters(&self) -> &[u32] {
+        &self.slot_cluster
+    }
+
+    /// Install the build-time per-slot cluster assignments.
+    pub fn set_slot_clusters(&mut self, clusters: Vec<u32>) {
+        assert_eq!(clusters.len(), self.doc_ids.len());
+        self.slot_cluster = clusters;
+    }
+
+    /// Stamp slot `local`'s cluster (mutation path; grows the vector when
+    /// an append created the slot).
+    pub fn set_slot_cluster(&mut self, local: usize, cluster: u32) {
+        if self.slot_cluster.len() <= local {
+            self.slot_cluster.resize(local + 1, 0);
+        }
+        self.slot_cluster[local] = cluster;
     }
 
     /// Locate a live document by global id.

@@ -57,6 +57,22 @@
 //! contract; `rust/tests/precision_regression.rs` pins precision@k
 //! through corpus churn.
 //!
+//! ## Two-stage cluster-pruned retrieval
+//!
+//! Exhaustive queries cost O(corpus); the IVF-style two-stage path
+//! ([`retrieval::cluster`]) costs O(probed fraction): a deterministic
+//! build-time k-means assigns every document a cluster,
+//! [`dirc::chip::DircChip::build`] lays documents out
+//! cluster-contiguous, and a query probes its top-`nprobe` centroids and
+//! skips every macro hosting none of them
+//! ([`dirc::chip::DircChip::query_opt`] and the [`retrieval::Prune`]
+//! policy, threaded through both engines, the coordinator's per-request
+//! `nprobe` override, and the `eval`/`serve` CLI). Skipped senses are
+//! accounted by [`sim::cycles`]/[`sim::energy`];
+//! `nprobe = n_clusters` is bit-identical to the exhaustive path, and
+//! `rust/tests/precision_regression.rs` gates pruned P@{1,5,10} within
+//! 2% of exhaustive at the default `nprobe`.
+//!
 //! Tier-1 verification: `cargo build --release && cargo test -q` from the
 //! repository root (no artifacts or PJRT backend required — see
 //! [`runtime::xla_stub`]).

@@ -26,6 +26,7 @@ use dirc_rag::dirc::{DircChip, RemapStrategy};
 use dirc_rag::eval::evaluate;
 use dirc_rag::retrieval::quant::{quantize, QuantScheme};
 use dirc_rag::retrieval::score::Metric;
+use dirc_rag::retrieval::Prune;
 use dirc_rag::runtime::PjrtRuntime;
 use dirc_rag::sim::ChipSpec;
 use dirc_rag::util::cli::Command;
@@ -47,6 +48,8 @@ fn cli() -> Command {
                 .opt("queries", "0", "query cap (0 = all)")
                 .opt("corner", "1.0", "process corner for sensing errors")
                 .opt("remap", "error-aware", "interleaved|random|error-aware")
+                .opt("clusters", "0", "two-stage pruning: k-means centroids (0 = off)")
+                .opt("nprobe", "0", "centroids probed per query (0 = chip default)")
                 .flag("no-detect", "disable the ΣD error-detection circuit")
                 .flag("errors", "inject sensing errors (hardware path)"),
         )
@@ -56,6 +59,7 @@ fn cli() -> Command {
                 .opt("queries", "256", "queries to submit")
                 .opt("workers", "0", "retrieval worker threads (0 = config)")
                 .opt("config", "", "TOML config overlay (configs/*.toml)")
+                .opt("nprobe", "0", "two-stage pruning default (0 = chip policy)")
                 .opt("k", "5", "top-k"),
         )
         .sub(
@@ -134,40 +138,68 @@ fn cmd_eval(sub: &dirc_rag::util::cli::Parsed) -> Result<()> {
     let with_errors = sub.has_flag("errors");
     let detect = !sub.has_flag("no-detect");
     let cap = sub.get_usize("queries")?;
+    let clusters = sub.get_usize("clusters")?;
+    let nprobe = sub.get_usize("nprobe")?;
 
     let ds = SynthDataset::generate(spec.n_docs, spec.n_queries, spec.dim, &spec.params);
     let n_queries = if cap == 0 { ds.n_queries() } else { cap.min(ds.n_queries()) };
 
-    let report = if scheme == QuantScheme::Fp32 {
+    if scheme == QuantScheme::Fp32 {
         // Software FP32 baseline (no hardware in the loop).
-        evaluate(n_queries, &ds.qrels[..n_queries], |qi| {
+        let report = evaluate(n_queries, &ds.qrels[..n_queries], |qi| {
             let scores = dirc_rag::retrieval::score::fp_scores(
                 &ds.docs, ds.n_docs, ds.dim, ds.query(qi), Metric::Cosine,
             );
             dirc_rag::retrieval::topk::topk_from_scores(&scores, 0, 5)
-        })
-    } else {
-        let db = quantize(&ds.docs, ds.n_docs, ds.dim, scheme);
-        let cfg = ChipConfig {
-            bits: scheme.bits(),
-            detect,
-            remap,
-            variation: VariationModel { corner, ..VariationModel::default() },
-            map_points: 300,
-            ..ChipConfig::paper_default(spec.dim, Metric::Cosine)
-        };
-        let chip = DircChip::build(cfg, &db);
+        });
+        println!(
+            "{name} [FP32] {} queries: P@1 {:.4}  P@3 {:.4}  P@5 {:.4}",
+            report.n_queries, report.p_at_1, report.p_at_3, report.p_at_5
+        );
+        return Ok(());
+    }
+
+    let db = quantize(&ds.docs, ds.n_docs, ds.dim, scheme);
+    let cfg = ChipConfig {
+        bits: scheme.bits(),
+        detect,
+        remap,
+        variation: VariationModel { corner, ..VariationModel::default() },
+        map_points: 300,
+        cluster: dirc_rag::retrieval::ClusterPolicy {
+            n_clusters: clusters,
+            nprobe: if nprobe > 0 { nprobe } else { 4 },
+            kmeans_iters: 8,
+        },
+        ..ChipConfig::paper_default(spec.dim, Metric::Cosine)
+    };
+    let chip = DircChip::build(cfg, &db);
+
+    // One evaluation pass under a pruning policy, accumulating the
+    // modeled hardware accounting alongside precision (errors path only;
+    // the clean path has no hardware census).
+    let run = |prune: Prune| {
         let mut rng = Pcg::new(7);
-        evaluate(n_queries, &ds.qrels[..n_queries], |qi| {
+        let acc = std::cell::RefCell::new((0u64, 0u64, 0.0f64, 0.0f64, 0u64));
+        let report = evaluate(n_queries, &ds.qrels[..n_queries], |qi| {
             let qq = quantize(ds.query(qi), 1, ds.dim, scheme);
             if with_errors {
-                chip.query(&qq.values, 5, &mut rng).0
+                let (ranked, stats) = chip.query_opt(&qq.values, 5, prune, &mut rng, 1);
+                let mut a = acc.borrow_mut();
+                a.0 += stats.work_cycles;
+                a.1 += stats.cycles;
+                a.2 += stats.energy_j;
+                a.3 += stats.latency_s;
+                a.4 += stats.macros_sensed as u64;
+                ranked
             } else {
-                chip.clean_query(&qq.values, 5)
+                chip.clean_query_opt(&qq.values, 5, prune)
             }
-        })
+        });
+        (report, acc.into_inner())
     };
 
+    let (report, full_acc) = run(Prune::None);
     println!(
         "{name} [{}] {} queries: P@1 {:.4}  P@3 {:.4}  P@5 {:.4}",
         scheme.name(),
@@ -176,6 +208,38 @@ fn cmd_eval(sub: &dirc_rag::util::cli::Parsed) -> Result<()> {
         report.p_at_3,
         report.p_at_5
     );
+
+    if chip.cluster_index().is_some() {
+        // Second pass with the centroid prefilter live: report measured
+        // precision next to the modeled work/energy/latency saving.
+        let (pruned, acc) = run(Prune::Default);
+        println!(
+            "pruned [{} clusters, nprobe {}]: P@1 {:.4}  P@3 {:.4}  P@5 {:.4}",
+            clusters,
+            chip.cfg.cluster.nprobe,
+            pruned.p_at_1,
+            pruned.p_at_3,
+            pruned.p_at_5
+        );
+        if with_errors {
+            let n = n_queries as f64;
+            println!(
+                "modeled per query: sense-work {:.0} -> {:.0} cycles ({:.2}x), \
+                 energy {:.3} -> {:.3} µJ ({:.2}x), latency {:.2} -> {:.2} µs, \
+                 macros sensed {:.1}/{}",
+                full_acc.0 as f64 / n,
+                acc.0 as f64 / n,
+                full_acc.0 as f64 / acc.0.max(1) as f64,
+                full_acc.2 / n * 1e6,
+                acc.2 / n * 1e6,
+                full_acc.2 / acc.2.max(1e-30),
+                full_acc.3 / n * 1e6,
+                acc.3 / n * 1e6,
+                acc.4 as f64 / n,
+                chip.cfg.cores,
+            );
+        }
+    }
     Ok(())
 }
 
@@ -193,6 +257,10 @@ fn cmd_serve(sub: &dirc_rag::util::cli::Parsed) -> Result<()> {
     let workers = sub.get_usize("workers")?;
     if workers > 0 {
         coord_cfg.workers = workers;
+    }
+    let nprobe = sub.get_usize("nprobe")?;
+    if nprobe > 0 {
+        coord_cfg.nprobe = Some(nprobe);
     }
 
     let runtime = Arc::new(PjrtRuntime::from_default_artifacts()?);

@@ -1,0 +1,338 @@
+//! Two-stage cluster-pruned retrieval: the IVF-style centroid prefilter.
+//!
+//! Exhaustive retrieval senses every macro on every query, so per-query
+//! cost grows linearly with the corpus — the wall every edge corpus
+//! beyond a few MB runs into. The paper's query-stationary dataflow makes
+//! *macro-granular* work-skipping essentially free (the query register is
+//! already stationary; a skipped macro is simply a skipped sense pass),
+//! and cluster-pruned online indexes (EdgeRAG, arXiv 2412.21023) are the
+//! standard edge-RAG trade of a bounded recall loss for a large
+//! latency/energy win.
+//!
+//! This module provides the software half of that trade:
+//!
+//! * [`kmeans`] — deterministic Lloyd k-means over the *quantised* corpus
+//!   (the integer grid the macro actually stores), run once at chip-build
+//!   time. No RNG: centroids initialise from evenly-strided documents and
+//!   every reduction is a sequential fold, so the same corpus always
+//!   yields the same [`Clustering`] — the determinism contract of the
+//!   whole retrieval stack extends to the index build.
+//! * [`Centroids`] — the frozen centroid table: nearest-centroid routing
+//!   for online ingest and metric-aware top-`nprobe` selection for
+//!   queries (ties broken by lower cluster id, the same total-order
+//!   convention as the top-k machinery).
+//! * [`Prune`] — the per-query policy the chip's query paths accept.
+//!
+//! The hardware half (cluster-contiguous document layout, the per-core
+//! macro bitmask, skipped-sense cycle/energy accounting) lives in
+//! [`crate::dirc::chip`] and [`crate::sim`].
+
+use crate::retrieval::score::Metric;
+
+/// Per-query pruning policy of the two-stage retrieval path.
+///
+/// On a chip built without clustering every variant degenerates to the
+/// exhaustive paper path; `Probe(nprobe >= n_clusters)` is likewise
+/// exhaustive — and **bit-identical** to [`Prune::None`], a property the
+/// test net pins.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Prune {
+    /// Sense every macro (the exhaustive paper path).
+    None,
+    /// Probe the chip's configured default number of centroids
+    /// ([`ClusterPolicy::nprobe`]).
+    Default,
+    /// Probe exactly this many top centroids.
+    Probe(usize),
+}
+
+/// Chip-level clustering knobs (carried by
+/// [`crate::dirc::chip::ChipConfig`]).
+#[derive(Debug, Clone)]
+pub struct ClusterPolicy {
+    /// Number of k-means centroids built over the corpus at chip-build
+    /// time; `0` disables two-stage retrieval entirely (exhaustive
+    /// layout and queries — the paper's operating point).
+    pub n_clusters: usize,
+    /// Centroids probed by [`Prune::Default`].
+    pub nprobe: usize,
+    /// Lloyd iterations of the build-time k-means.
+    pub kmeans_iters: usize,
+}
+
+impl Default for ClusterPolicy {
+    fn default() -> Self {
+        ClusterPolicy { n_clusters: 0, nprobe: 4, kmeans_iters: 8 }
+    }
+}
+
+impl ClusterPolicy {
+    /// Whether clustering is active for a corpus of `n` documents (at
+    /// least two clusters, and at least one document per cluster).
+    pub fn enabled(&self, n: usize) -> bool {
+        self.n_clusters >= 2 && self.n_clusters <= n
+    }
+}
+
+/// The frozen centroid table: FP32 means of the quantised document
+/// vectors, plus cached squared norms for nearest-centroid routing.
+///
+/// Centroids are fixed at build time (standard IVF practice): online
+/// mutations route documents to the *nearest existing* centroid rather
+/// than re-clustering, so the index degrades gracefully under churn and
+/// two chips that apply the same mutation stream stay bit-identical.
+#[derive(Debug, Clone)]
+pub struct Centroids {
+    pub n_clusters: usize,
+    pub dim: usize,
+    /// Row-major `[n_clusters][dim]` centroid values.
+    pub values: Vec<f32>,
+    /// Per-centroid squared L2 norms (`|c|^2`).
+    pub sq_norms: Vec<f32>,
+}
+
+impl Centroids {
+    fn from_values(values: Vec<f32>, n_clusters: usize, dim: usize) -> Centroids {
+        let sq_norms = (0..n_clusters)
+            .map(|j| {
+                values[j * dim..(j + 1) * dim]
+                    .iter()
+                    .map(|&v| (v as f64).powi(2))
+                    .sum::<f64>() as f32
+            })
+            .collect();
+        Centroids { n_clusters, dim, values, sq_norms }
+    }
+
+    /// Centroid `j`'s values.
+    pub fn row(&self, j: usize) -> &[f32] {
+        &self.values[j * self.dim..(j + 1) * self.dim]
+    }
+
+    /// `q . c_j` in f64 (sequential fold — deterministic).
+    fn dot(&self, j: usize, v: &[i8]) -> f64 {
+        self.row(j)
+            .iter()
+            .zip(v.iter())
+            .map(|(&c, &x)| c as f64 * x as f64)
+            .sum()
+    }
+
+    /// Nearest centroid of a quantised document (squared-L2; ties break
+    /// to the lower cluster id). Used to route online ingest.
+    pub fn nearest(&self, doc: &[i8]) -> u32 {
+        assert_eq!(doc.len(), self.dim);
+        let mut best = 0usize;
+        let mut best_d = f64::INFINITY;
+        for j in 0..self.n_clusters {
+            // argmin |d - c|^2 == argmin (|c|^2 - 2 d.c); |d|^2 is constant.
+            let d = self.sq_norms[j] as f64 - 2.0 * self.dot(j, doc);
+            if d < best_d {
+                best_d = d;
+                best = j;
+            }
+        }
+        best as u32
+    }
+
+    /// The top-`nprobe` centroids for a query under the retrieval metric:
+    /// raw dot products for MIPS, norm-corrected dots for cosine (the
+    /// query norm is a common factor and cancels). Returned sorted by
+    /// (score desc, cluster id asc) — a total order, so the selection is
+    /// deterministic and the selected set for `nprobe` is always a prefix
+    /// of the selected set for `nprobe + 1` (recall\@k is therefore
+    /// monotone in `nprobe`; pinned by the property tests).
+    pub fn top_for_query(&self, q: &[i8], metric: Metric, nprobe: usize) -> Vec<u32> {
+        assert_eq!(q.len(), self.dim);
+        let mut scored: Vec<(f64, u32)> = (0..self.n_clusters)
+            .map(|j| {
+                let ip = self.dot(j, q);
+                let s = match metric {
+                    Metric::Mips => ip,
+                    Metric::Cosine => ip / (self.sq_norms[j] as f64).sqrt().max(1e-12),
+                };
+                (s, j as u32)
+            })
+            .collect();
+        scored.sort_by(|a, b| {
+            b.0.partial_cmp(&a.0)
+                .expect("non-finite centroid score")
+                .then(a.1.cmp(&b.1))
+        });
+        scored.truncate(nprobe.min(self.n_clusters));
+        scored.into_iter().map(|(_, j)| j).collect()
+    }
+}
+
+/// A build-time clustering of the corpus: the centroid table plus each
+/// document's cluster assignment (`assign[i]` for document row `i`).
+#[derive(Debug, Clone)]
+pub struct Clustering {
+    pub centroids: Centroids,
+    pub assign: Vec<u32>,
+}
+
+/// Deterministic Lloyd k-means over a row-major `[n][dim]` quantised
+/// matrix.
+///
+/// * init: centroid `j` starts at document `floor(j*n/k)` (evenly
+///   strided — no RNG, so the index build shares the simulator's
+///   reproducibility contract);
+/// * assign: squared-L2 nearest centroid, ties to the lower id, f64
+///   accumulation in index order;
+/// * update: f64 mean of the assigned documents; a cluster that loses
+///   all members keeps its previous centroid (it can still be probed —
+///   a wasted probe, not an error);
+/// * stop: after `iters` rounds or the first round with no reassignment.
+pub fn kmeans(values: &[i8], n: usize, dim: usize, k: usize, iters: usize) -> Clustering {
+    assert!(n > 0 && k >= 1 && k <= n, "kmeans needs 1 <= k <= n");
+    assert_eq!(values.len(), n * dim);
+    let mut cvals: Vec<f32> = Vec::with_capacity(k * dim);
+    for j in 0..k {
+        let d = j * n / k;
+        cvals.extend(values[d * dim..(d + 1) * dim].iter().map(|&v| v as f32));
+    }
+    let mut centroids = Centroids::from_values(cvals, k, dim);
+    let mut assign = vec![0u32; n];
+    for _ in 0..iters.max(1) {
+        // Assignment pass.
+        let mut changed = 0usize;
+        for i in 0..n {
+            let a = centroids.nearest(&values[i * dim..(i + 1) * dim]);
+            if assign[i] != a {
+                assign[i] = a;
+                changed += 1;
+            }
+        }
+        // Update pass: f64 sums in document order.
+        let mut sums = vec![0f64; k * dim];
+        let mut counts = vec![0u64; k];
+        for i in 0..n {
+            let j = assign[i] as usize;
+            counts[j] += 1;
+            let row = &values[i * dim..(i + 1) * dim];
+            for (s, &v) in sums[j * dim..(j + 1) * dim].iter_mut().zip(row) {
+                *s += v as f64;
+            }
+        }
+        for j in 0..k {
+            if counts[j] == 0 {
+                continue; // empty cluster keeps its previous centroid
+            }
+            let inv = 1.0 / counts[j] as f64;
+            for (c, s) in centroids.values[j * dim..(j + 1) * dim]
+                .iter_mut()
+                .zip(&sums[j * dim..(j + 1) * dim])
+            {
+                *c = (s * inv) as f32;
+            }
+        }
+        centroids = Centroids::from_values(centroids.values, k, dim);
+        if changed == 0 {
+            break;
+        }
+    }
+    // Final assignment against the last centroid update, so `assign` and
+    // `centroids` are mutually consistent.
+    for i in 0..n {
+        assign[i] = centroids.nearest(&values[i * dim..(i + 1) * dim]);
+    }
+    Clustering { centroids, assign }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    /// Two well-separated blobs on the integer grid.
+    fn blobs(n_per: usize, dim: usize, seed: u64) -> Vec<i8> {
+        let mut rng = Pcg::new(seed);
+        let mut v = Vec::with_capacity(2 * n_per * dim);
+        for blob in 0..2 {
+            let base: i64 = if blob == 0 { 60 } else { -60 };
+            for _ in 0..n_per {
+                for _ in 0..dim {
+                    v.push((base + rng.int_in(-5, 5)) as i8);
+                }
+            }
+        }
+        v
+    }
+
+    #[test]
+    fn kmeans_separates_blobs() {
+        let (n_per, dim) = (40, 16);
+        let v = blobs(n_per, dim, 1);
+        let cl = kmeans(&v, 2 * n_per, dim, 2, 10);
+        // Every blob lands in one cluster, and the clusters differ.
+        let first = cl.assign[0];
+        assert!(cl.assign[..n_per].iter().all(|&a| a == first));
+        let second = cl.assign[n_per];
+        assert!(cl.assign[n_per..].iter().all(|&a| a == second));
+        assert_ne!(first, second);
+    }
+
+    #[test]
+    fn kmeans_deterministic() {
+        let v = blobs(30, 8, 2);
+        let a = kmeans(&v, 60, 8, 4, 8);
+        let b = kmeans(&v, 60, 8, 4, 8);
+        assert_eq!(a.assign, b.assign);
+        for (x, y) in a.centroids.values.iter().zip(&b.centroids.values) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn assignment_is_nearest_centroid() {
+        let v = blobs(25, 8, 3);
+        let cl = kmeans(&v, 50, 8, 3, 6);
+        for i in 0..50 {
+            assert_eq!(cl.assign[i], cl.centroids.nearest(&v[i * 8..(i + 1) * 8]));
+            assert!((cl.assign[i] as usize) < cl.centroids.n_clusters);
+        }
+    }
+
+    #[test]
+    fn top_for_query_prefix_nested_and_tie_broken() {
+        let v = blobs(40, 16, 4);
+        let cl = kmeans(&v, 80, 16, 8, 8);
+        let mut rng = Pcg::new(5);
+        for metric in [Metric::Mips, Metric::Cosine] {
+            for _ in 0..10 {
+                let q: Vec<i8> = (0..16).map(|_| rng.int_in(-128, 127) as i8).collect();
+                let mut prev: Vec<u32> = Vec::new();
+                for nprobe in 1..=8 {
+                    let sel = cl.centroids.top_for_query(&q, metric, nprobe);
+                    assert_eq!(sel.len(), nprobe);
+                    // Unique ids within range.
+                    let mut s = sel.clone();
+                    s.sort_unstable();
+                    s.dedup();
+                    assert_eq!(s.len(), nprobe);
+                    // Prefix-nested in nprobe.
+                    assert_eq!(&sel[..prev.len()], &prev[..]);
+                    prev = sel;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn nprobe_clamped_to_n_clusters() {
+        let v = blobs(10, 8, 6);
+        let cl = kmeans(&v, 20, 8, 3, 5);
+        let q = vec![1i8; 8];
+        assert_eq!(cl.centroids.top_for_query(&q, Metric::Mips, 100).len(), 3);
+    }
+
+    #[test]
+    fn policy_enablement() {
+        let p = ClusterPolicy::default();
+        assert!(!p.enabled(1000), "clustering is off by default");
+        let on = ClusterPolicy { n_clusters: 8, ..ClusterPolicy::default() };
+        assert!(on.enabled(100));
+        assert!(!on.enabled(7), "fewer docs than clusters disables");
+    }
+}

@@ -1,9 +1,12 @@
-//! Retrieval primitives: quantisation, scoring references, top-k.
+//! Retrieval primitives: quantisation, scoring references, top-k, and
+//! the cluster-pruned (IVF-style) two-stage index.
 
+pub mod cluster;
 pub mod quant;
 pub mod score;
 pub mod topk;
 
+pub use cluster::{Centroids, ClusterPolicy, Clustering, Prune};
 pub use quant::{QuantScheme, Quantized};
 pub use score::Metric;
 pub use topk::{ScoredDoc, TopK};

@@ -34,6 +34,14 @@ pub struct CycleModel {
     /// 100 ns SET/RESET pulse (25 cycles at 250 MHz) plus one verify
     /// read. Matches `WriteModel::default()`'s `pulse_s + verify_s`.
     pub write_pulse_cycles: u64,
+    /// Centroid-prefilter stage of the two-stage (cluster-pruned)
+    /// retrieval path: cycles per centroid scored. Modeled as a dim-wide
+    /// INT8 dot-product tree in the style of the norm unit — one centroid
+    /// per cycle, streaming against the stationary query register.
+    pub prune_select_per_centroid: u64,
+    /// Fixed fill/drain of the centroid-select stage (top-nprobe sort
+    /// network + mask broadcast to the cores).
+    pub prune_select_fixed: u64,
     pub freq_hz: f64,
 }
 
@@ -46,6 +54,8 @@ impl Default for CycleModel {
             pipeline_fill: 8,
             per_resense: 2,
             write_pulse_cycles: 26,
+            prune_select_per_centroid: 1,
+            prune_select_fixed: 16,
             freq_hz: FREQ_HZ,
         }
     }
@@ -61,6 +71,9 @@ pub struct QueryCycles {
     pub norm_unit: u64,
     pub topk: u64,
     pub pipeline: u64,
+    /// Centroid-prefilter stage of a cluster-pruned query (0 on the
+    /// exhaustive path — `nprobe >= n_clusters` stays bit-identical).
+    pub select: u64,
 }
 
 impl QueryCycles {
@@ -68,6 +81,7 @@ impl QueryCycles {
         self.sense + self.detect + self.mac + self.resense_stall + self.norm_unit
             + self.topk
             + self.pipeline
+            + self.select
     }
 }
 
@@ -104,12 +118,38 @@ impl CycleModel {
     /// drain, and the global top-k merge over `cores * k` candidates.
     /// `cores` is the chip's configured core count (16 on the paper's
     /// chip; the merge sees only as many candidate lists as exist).
-    pub fn finish_chip(&self, mut worst: QueryCycles, cores: usize, k: usize) -> QueryCycles {
+    pub fn finish_chip(&self, worst: QueryCycles, cores: usize, k: usize) -> QueryCycles {
+        self.finish_chip_pruned(worst, cores, k, 0)
+    }
+
+    /// [`CycleModel::finish_chip`] for the cluster-pruned path: the
+    /// global merge sees only the `sensed_cores` candidate lists that
+    /// actually ran, and the centroid-select stage (see
+    /// [`CycleModel::prune_select`]) is charged up front — it gates the
+    /// macro bitmask, so it cannot overlap the sense passes.
+    pub fn finish_chip_pruned(
+        &self,
+        mut worst: QueryCycles,
+        sensed_cores: usize,
+        k: usize,
+        select: u64,
+    ) -> QueryCycles {
         worst.norm_unit = self.norm_unit;
         worst.topk = self.local_topk_drain_per_k * k as u64
-            + self.global_topk_per_entry * (cores * k) as u64 / 2;
+            + self.global_topk_per_entry * (sensed_cores * k) as u64 / 2;
         worst.pipeline = self.pipeline_fill;
+        worst.select = select;
         worst
+    }
+
+    /// Cycles of the centroid-prefilter stage: score `n_clusters`
+    /// centroids against the stationary query, sort the top-nprobe and
+    /// broadcast the macro bitmask. Zero when pruning is off.
+    pub fn prune_select(&self, n_clusters: usize) -> u64 {
+        if n_clusters == 0 {
+            return 0;
+        }
+        self.prune_select_fixed + self.prune_select_per_centroid * n_clusters as u64
     }
 
     /// Chip-level query cycles. Cores run in parallel: the slowest core
@@ -124,13 +164,60 @@ impl CycleModel {
         max_column_resenses_per_core: &[u64],
         k: usize,
     ) -> QueryCycles {
+        self.chip_query_pruned(
+            used_slots_per_core,
+            bits,
+            detect,
+            max_column_resenses_per_core,
+            k,
+            used_slots_per_core.len(),
+            0,
+        )
+    }
+
+    /// [`CycleModel::chip_query`] with skipped senses accounted: skipped
+    /// macros appear as zero-slot entries (they never gate the worst-core
+    /// fold), the merge tail covers only `sensed_cores` candidate lists,
+    /// and the centroid-select overhead is charged when pruning ran.
+    #[allow(clippy::too_many_arguments)]
+    pub fn chip_query_pruned(
+        &self,
+        used_slots_per_core: &[usize],
+        bits: usize,
+        detect: bool,
+        max_column_resenses_per_core: &[u64],
+        k: usize,
+        sensed_cores: usize,
+        select: u64,
+    ) -> QueryCycles {
         assert_eq!(used_slots_per_core.len(), max_column_resenses_per_core.len());
         let worst = used_slots_per_core
             .iter()
             .zip(max_column_resenses_per_core)
             .map(|(&slots, &stall)| self.core_pass(slots, bits, detect, stall))
             .fold(QueryCycles::default(), worst_core);
-        self.finish_chip(worst, used_slots_per_core.len(), k)
+        self.finish_chip_pruned(worst, sensed_cores, k, select)
+    }
+
+    /// The summed macro *work* of one query: sense + detect + MAC +
+    /// re-sense stall cycles added across every macro that ran (skipped
+    /// macros contribute zero-slot passes, i.e. nothing). Latency is the
+    /// worst core ([`CycleModel::chip_query`]); this is the energy-like
+    /// view that macro skipping actually shrinks — the number the
+    /// pruning evaluation reports and gates on.
+    pub fn chip_work(
+        &self,
+        used_slots_per_core: &[usize],
+        bits: usize,
+        detect: bool,
+        max_column_resenses_per_core: &[u64],
+    ) -> u64 {
+        assert_eq!(used_slots_per_core.len(), max_column_resenses_per_core.len());
+        used_slots_per_core
+            .iter()
+            .zip(max_column_resenses_per_core)
+            .map(|(&slots, &stall)| self.core_pass(slots, bits, detect, stall).total())
+            .sum()
     }
 
     /// Serialised cycles of an online document write that issued
@@ -157,7 +244,17 @@ impl CycleModel {
 /// per-core stats merge relies on (asserted in tests).
 pub fn worst_core(a: QueryCycles, b: QueryCycles) -> QueryCycles {
     let key = |q: &QueryCycles| {
-        (q.total(), q.sense, q.detect, q.mac, q.resense_stall, q.norm_unit, q.topk, q.pipeline)
+        (
+            q.total(),
+            q.sense,
+            q.detect,
+            q.mac,
+            q.resense_stall,
+            q.norm_unit,
+            q.topk,
+            q.pipeline,
+            q.select,
+        )
     };
     if key(&b) > key(&a) {
         b
@@ -286,5 +383,70 @@ mod tests {
         let a = m.chip_query(&[16; 16], 8, true, &[0; 16], 10).total();
         let b = m.chip_query(&[16; 16], 8, true, &[5; 16], 10).total();
         assert_eq!(b - a, 5 * m.per_resense);
+    }
+
+    #[test]
+    fn pruned_accounting_matches_exhaustive_when_nothing_skipped() {
+        // sensed == cores, select == 0 must reproduce chip_query exactly
+        // (the nprobe = n_clusters bit-identity at the cycle-model level).
+        let m = CycleModel::default();
+        let slots = [3usize, 16, 7, 16];
+        let stalls = [4u64, 0, 2, 1];
+        assert_eq!(
+            m.chip_query_pruned(&slots, 8, true, &stalls, 10, slots.len(), 0),
+            m.chip_query(&slots, 8, true, &stalls, 10)
+        );
+    }
+
+    #[test]
+    fn skipped_macros_shrink_work_not_worst_core() {
+        let m = CycleModel::default();
+        // 16 cores, 12 skipped (zero slots): latency still gated by the
+        // worst sensed core; work shrinks to the four sensed passes.
+        let mut slots = [0usize; 16];
+        let mut stalls = [0u64; 16];
+        for c in 0..4 {
+            slots[c] = 16;
+            stalls[c] = 1;
+        }
+        let select = m.prune_select(64);
+        let pruned = m.chip_query_pruned(&slots, 8, true, &stalls, 10, 4, select);
+        let full = m.chip_query(&[16; 16], 8, true, &[1; 16], 10);
+        // Same gating macro pass...
+        assert_eq!(pruned.sense, full.sense);
+        assert_eq!(pruned.mac, full.mac);
+        // ...smaller merge tail, plus the select overhead.
+        assert!(pruned.topk < full.topk);
+        assert_eq!(pruned.select, select);
+        // Work view: exactly 4 of 16 macro passes.
+        let work_pruned = m.chip_work(&slots, 8, true, &stalls);
+        let work_full = m.chip_work(&[16; 16], 8, true, &[1; 16]);
+        assert_eq!(work_full, 4 * work_pruned);
+    }
+
+    #[test]
+    fn prune_select_scales_with_clusters() {
+        let m = CycleModel::default();
+        assert_eq!(m.prune_select(0), 0);
+        assert_eq!(
+            m.prune_select(64),
+            m.prune_select_fixed + 64 * m.prune_select_per_centroid
+        );
+        // The select stage must stay small next to a full macro pass, or
+        // two-stage retrieval could never pay for itself.
+        assert!(m.prune_select(128) < m.macro_pass(16, 8, true).total() / 4);
+    }
+
+    #[test]
+    fn chip_work_is_sum_of_core_passes() {
+        let m = CycleModel::default();
+        let slots = [1usize, 4, 9, 16];
+        let stalls = [0u64, 3, 1, 2];
+        let want: u64 = slots
+            .iter()
+            .zip(&stalls)
+            .map(|(&s, &st)| m.core_pass(s, 8, true, st).total())
+            .sum();
+        assert_eq!(m.chip_work(&slots, 8, true, &stalls), want);
     }
 }

@@ -38,6 +38,10 @@ pub struct EnergyModel {
     /// Energy per online-write program pulse incl. its verify read
     /// (matches `WriteModel::default()`'s `pulse_j + verify_j`).
     pub write_pulse_j: f64,
+    /// Energy per centroid-prefilter MAC of the cluster-pruned path: one
+    /// INT8 multiply-accumulate on the digital select unit, ~128 bit-ops
+    /// at the macro's 0.85 fJ/bit-op figure.
+    pub centroid_mac_j: f64,
     /// Chip-wide static + clock power (W).
     pub static_w: f64,
 }
@@ -51,6 +55,7 @@ impl Default for EnergyModel {
             norm_mac_j: 25.0e-15,
             topk_cmp_j: 5.0e-15,
             write_pulse_j: 2.008e-12,
+            centroid_mac_j: 110.0e-15,
             static_w: 37.5e-3,
         }
     }
@@ -64,12 +69,15 @@ pub struct QueryEnergy {
     pub detect_j: f64,
     pub norm_j: f64,
     pub topk_j: f64,
+    /// Centroid-prefilter stage (0 on the exhaustive path).
+    pub prune_j: f64,
     pub static_j: f64,
 }
 
 impl QueryEnergy {
     pub fn total_j(&self) -> f64 {
-        self.mac_j + self.sense_j + self.detect_j + self.norm_j + self.topk_j + self.static_j
+        self.mac_j + self.sense_j + self.detect_j + self.norm_j + self.topk_j + self.prune_j
+            + self.static_j
     }
 }
 
@@ -88,8 +96,11 @@ pub struct EnergyEvents {
     pub dim: usize,
     /// Documents scored (local top-k compares).
     pub docs_scored: u64,
-    /// Global top-k candidates (cores x k).
+    /// Global top-k candidates (sensed cores x k).
     pub global_candidates: u64,
+    /// Centroid-prefilter MACs of a cluster-pruned query
+    /// (`n_clusters * dim`; 0 on the exhaustive path).
+    pub centroid_macs: u64,
     /// Query wall-clock (s) for the static term.
     pub elapsed_s: f64,
 }
@@ -106,8 +117,9 @@ impl EnergyModel {
         let norm_j = ev.dim as f64 * self.norm_mac_j;
         let topk_j =
             (ev.docs_scored + ev.global_candidates) as f64 * self.topk_cmp_j;
+        let prune_j = ev.centroid_macs as f64 * self.centroid_mac_j;
         let static_j = self.static_w * ev.elapsed_s;
-        QueryEnergy { mac_j, sense_j, detect_j, norm_j, topk_j, static_j }
+        QueryEnergy { mac_j, sense_j, detect_j, norm_j, topk_j, prune_j, static_j }
     }
 
     /// Energy of an online document write that issued `pulses`
@@ -136,6 +148,7 @@ pub fn table1_events(elapsed_s: f64) -> EnergyEvents {
         dim: 512,
         docs_scored: 8192,
         global_candidates: (NUM_CORES * 10) as u64,
+        centroid_macs: 0,
         elapsed_s,
     }
 }
@@ -215,6 +228,33 @@ mod tests {
             wm.pulse_j + wm.verify_j
         );
         assert_eq!(m.write_energy(1000), 1000.0 * m.write_pulse_j);
+    }
+
+    #[test]
+    fn pruned_query_saves_energy_despite_select_overhead() {
+        // A pruned 4 MB query sensing 4 of 16 macros: dynamic sense/MAC/
+        // detect events shrink 4x, the centroid prefilter adds its MACs.
+        let m = EnergyModel::default();
+        let full = m.query_energy(&table1_events(5.66e-6));
+        let mut pruned_ev = table1_events(5.9e-6); // select stage lengthens latency a touch
+        pruned_ev.mac_cycles_total /= 4;
+        pruned_ev.plane_loads_total /= 4;
+        pruned_ev.detect_checks_total /= 4;
+        pruned_ev.docs_scored /= 4;
+        pruned_ev.global_candidates /= 4;
+        pruned_ev.centroid_macs = 128 * 512; // 128 centroids, dim 512
+        let pruned = m.query_energy(&pruned_ev);
+        assert!(pruned.prune_j > 0.0);
+        // The prefilter is orders of magnitude cheaper than the senses it
+        // avoids, so total energy must drop by well over 2x.
+        assert!(
+            pruned.total_j() < full.total_j() / 2.0,
+            "pruned {} µJ vs full {} µJ",
+            pruned.total_j() * 1e6,
+            full.total_j() * 1e6
+        );
+        // And the overhead itself stays below 5% of the full-query budget.
+        assert!(pruned.prune_j < 0.05 * full.total_j());
     }
 
     #[test]

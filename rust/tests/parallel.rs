@@ -8,14 +8,19 @@ use std::sync::Arc;
 
 use dirc_rag::coordinator::{Engine, SimEngine};
 use dirc_rag::dirc::chip::{ChipConfig, DircChip, QueryStats};
+use dirc_rag::retrieval::cluster::ClusterPolicy;
 use dirc_rag::retrieval::quant::{quantize, random_unit_rows, QuantScheme, Quantized};
 use dirc_rag::retrieval::score::{norm_i8, Metric};
+use dirc_rag::retrieval::Prune;
 use dirc_rag::util::pool::ThreadPool;
 use dirc_rag::util::rng::Pcg;
 
 fn assert_stats_identical(a: &QueryStats, b: &QueryStats, ctx: &str) {
     assert_eq!(a.sense, b.sense, "{ctx}: sense stats");
     assert_eq!(a.cycles, b.cycles, "{ctx}: cycles");
+    assert_eq!(a.work_cycles, b.work_cycles, "{ctx}: work cycles");
+    assert_eq!(a.macros_sensed, b.macros_sensed, "{ctx}: macros sensed");
+    assert_eq!(a.macros_skipped, b.macros_skipped, "{ctx}: macros skipped");
     assert_eq!(a.docs_scored, b.docs_scored, "{ctx}: docs_scored");
     assert_eq!(a.latency_s.to_bits(), b.latency_s.to_bits(), "{ctx}: latency bits");
     assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits(), "{ctx}: energy bits");
@@ -238,6 +243,140 @@ fn mutate_then_query_schedule_bit_identical() {
     for (qi, ((gt, gs), (wt, ws))) in got.iter().zip(want.iter()).enumerate() {
         assert_eq!(gt, wt, "post-churn batch query {qi}");
         assert_stats_identical(gs, ws, &format!("post-churn batch query {qi}"));
+    }
+    assert_eq!(pool.panicked(), 0);
+}
+
+fn build_pruned_chip(db: &Quantized, cores: usize, n_clusters: usize) -> DircChip {
+    let cfg = ChipConfig {
+        cores,
+        map_points: 40,
+        cluster: ClusterPolicy { n_clusters, nprobe: 2, kmeans_iters: 6 },
+        ..ChipConfig::paper_default(db.dim, Metric::Mips)
+    };
+    DircChip::build(cfg, db)
+}
+
+/// With pruning enabled, serial `query_opt` and the pooled
+/// queries × cores matrix (`query_batch_opt`) must stay bit-identical —
+/// across policies, including on tie-heavy scores where the skipped-core
+/// merge could silently reorder duplicates.
+#[test]
+fn pruned_query_batch_bit_identical_including_ties() {
+    let (n, dim) = (512, 128);
+    for (label, db) in [
+        ("unit-rows", {
+            let mut rng = Pcg::new(81);
+            let fp = random_unit_rows(n, dim, &mut rng);
+            quantize(&fp, n, dim, QuantScheme::Int8)
+        }),
+        ("tie-heavy", tie_heavy_db(n, dim, 82)),
+    ] {
+        let chip = Arc::new(build_pruned_chip(&db, 4, 8));
+        let pool = ThreadPool::new(4);
+        let mut qrng = Pcg::new(83);
+        let queries: Vec<Vec<i8>> = (0..8)
+            .map(|_| (0..dim).map(|_| qrng.int_in(-3, 3) as i8).collect())
+            .collect();
+        for prune in [Prune::Default, Prune::Probe(1), Prune::Probe(8), Prune::None] {
+            let mut r_serial = Pcg::new(84);
+            let mut r_batch = Pcg::new(84);
+            let want: Vec<_> = queries
+                .iter()
+                .map(|q| chip.query_opt(q, 12, prune, &mut r_serial, 1))
+                .collect();
+            let got =
+                DircChip::query_batch_opt(&chip, &pool, &queries, 12, prune, &mut r_batch);
+            assert_eq!(got.len(), want.len());
+            for (qi, ((gt, gs), (wt, ws))) in got.iter().zip(want.iter()).enumerate() {
+                let ctx = format!("{label} {prune:?} query {qi}");
+                assert_eq!(gt, wt, "{ctx}: ranking");
+                for (a, b) in gt.iter().zip(wt.iter()) {
+                    assert_eq!(a.score.to_bits(), b.score.to_bits(), "{ctx}: score bits");
+                }
+                assert_stats_identical(gs, ws, &ctx);
+            }
+            assert_eq!(r_serial.next_u64(), r_batch.next_u64(), "{label} {prune:?}: rng");
+        }
+        assert_eq!(pool.panicked(), 0);
+    }
+}
+
+/// Mutate-then-query interleaving with pruning live: after every
+/// add/update/delete round the pruned serial path and the pruned pooled
+/// batch path agree bit-for-bit (cluster routing and hosted-cluster
+/// bitsets are part of the deterministic state both chips share).
+#[test]
+fn pruned_mutate_then_query_schedule_bit_identical() {
+    use dirc_rag::dirc::chip::DocPayload;
+
+    let (n, dim) = (400, 128);
+    let mut rng = Pcg::new(91);
+    let fp = random_unit_rows(n, dim, &mut rng);
+    let db = quantize(&fp, n, dim, QuantScheme::Int8);
+    let mut chip_s = build_pruned_chip(&db, 4, 8);
+    let mut chip_p = build_pruned_chip(&db, 4, 8);
+
+    let mut erng = Pcg::new(92);
+    let extra_fp = random_unit_rows(18, dim, &mut erng);
+    let extra = quantize(&extra_fp, 18, dim, QuantScheme::Int8);
+    let payload =
+        |i: usize| DocPayload { values: extra.row(i).to_vec(), norm: extra.norms[i] };
+
+    let mut w_s = Pcg::new(93);
+    let mut w_p = Pcg::new(93);
+    let mut next_extra = 0usize;
+
+    for round in 0..3usize {
+        for prune in [Prune::Default, Prune::Probe(5)] {
+            let mut qrng = Pcg::new(940 + round as u64);
+            let q: Vec<i8> = (0..dim).map(|_| qrng.int_in(-128, 127) as i8).collect();
+            let mut r1 = Pcg::new(round as u64 * 31 + 7);
+            let mut r2 = Pcg::new(round as u64 * 31 + 7);
+            let (top_s, stats_s) = chip_s.query_opt(&q, 10, prune, &mut r1, 1);
+            let (top_p, stats_p) = chip_p.query_opt(&q, 10, prune, &mut r2, 4);
+            let ctx = format!("round {round} {prune:?}");
+            assert_eq!(top_s, top_p, "{ctx}: ranking");
+            assert_stats_identical(&stats_s, &stats_p, &ctx);
+        }
+
+        let adds: Vec<DocPayload> = (0..4).map(|i| payload(next_extra + i)).collect();
+        next_extra += 4;
+        let (ids_s, _) = chip_s.add_docs(&adds, &mut w_s).expect("add");
+        let (ids_p, _) = chip_p.add_docs(&adds, &mut w_p).expect("add");
+        assert_eq!(ids_s, ids_p, "round {round}: assigned ids diverged");
+
+        let upd: Vec<(u64, DocPayload)> = (0..2)
+            .map(|i| ((round * 29 + i * 11) as u64 % n as u64, payload(next_extra + i)))
+            .collect();
+        next_extra += 2;
+        chip_s.update_docs(&upd, &mut w_s).expect("update");
+        chip_p.update_docs(&upd, &mut w_p).expect("update");
+
+        let dels = [(round * 37 + 5) as u64 % n as u64];
+        chip_s.delete_docs(&dels);
+        chip_p.delete_docs(&dels);
+        assert_eq!(chip_s.n_docs(), chip_p.n_docs(), "round {round}: corpus size");
+    }
+
+    // Post-churn: pooled batch matrix vs serial stream, pruned.
+    let chip_p = Arc::new(chip_p);
+    let pool = ThreadPool::new(4);
+    let mut qrng = Pcg::new(95);
+    let queries: Vec<Vec<i8>> = (0..5)
+        .map(|_| (0..dim).map(|_| qrng.int_in(-128, 127) as i8).collect())
+        .collect();
+    let mut r_serial = Pcg::new(96);
+    let mut r_batch = Pcg::new(96);
+    let want: Vec<_> = queries
+        .iter()
+        .map(|q| chip_s.query_opt(q, 10, Prune::Default, &mut r_serial, 1))
+        .collect();
+    let got =
+        DircChip::query_batch_opt(&chip_p, &pool, &queries, 10, Prune::Default, &mut r_batch);
+    for (qi, ((gt, gs), (wt, ws))) in got.iter().zip(want.iter()).enumerate() {
+        assert_eq!(gt, wt, "post-churn pruned batch query {qi}");
+        assert_stats_identical(gs, ws, &format!("post-churn pruned batch query {qi}"));
     }
     assert_eq!(pool.panicked(), 0);
 }

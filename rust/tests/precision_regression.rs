@@ -29,8 +29,10 @@ use dirc_rag::data::{SynthDataset, SynthParams};
 use dirc_rag::dirc::chip::{ChipConfig, DircChip, DocPayload};
 use dirc_rag::dirc::RemapStrategy;
 use dirc_rag::eval::precision_at_k;
+use dirc_rag::retrieval::cluster::ClusterPolicy;
 use dirc_rag::retrieval::quant::{quantize, QuantScheme};
 use dirc_rag::retrieval::score::Metric;
+use dirc_rag::retrieval::Prune;
 use dirc_rag::util::rng::Pcg;
 
 const N_DOCS: usize = 1500;
@@ -63,17 +65,31 @@ fn chip_cfg() -> ChipConfig {
 /// Averaged P@{1,5,10} of the erroneous hardware path (detect on,
 /// error-aware remap), retrieved at k = 10 with a fixed rng stream.
 fn run_eval(chip: &DircChip, ds: &SynthDataset) -> (f64, f64, f64) {
+    run_eval_pruned(chip, ds, Prune::None).0
+}
+
+/// [`run_eval`] under an explicit pruning policy; also returns the
+/// summed work cycles and skipped-macro count across the query set
+/// (same rng stream either way — the mask never consumes query RNG).
+fn run_eval_pruned(
+    chip: &DircChip,
+    ds: &SynthDataset,
+    prune: Prune,
+) -> ((f64, f64, f64), (u64, u64)) {
     let mut rng = Pcg::new(13);
     let (mut p1, mut p5, mut p10) = (0.0, 0.0, 0.0);
+    let (mut work, mut skipped) = (0u64, 0u64);
     for qi in 0..N_QUERIES {
         let q = quantize(ds.query(qi), 1, DIM, QuantScheme::Int8);
-        let (ranked, _) = chip.query(&q.values, 10, &mut rng);
+        let (ranked, stats) = chip.query_opt(&q.values, 10, prune, &mut rng, 1);
+        work += stats.work_cycles;
+        skipped += stats.macros_skipped as u64;
         p1 += precision_at_k(&ranked, &ds.qrels[qi], 1);
         p5 += precision_at_k(&ranked, &ds.qrels[qi], 5);
         p10 += precision_at_k(&ranked, &ds.qrels[qi], 10);
     }
     let n = N_QUERIES as f64;
-    (p1 / n, p5 / n, p10 / n)
+    ((p1 / n, p5 / n, p10 / n), (work, skipped))
 }
 
 /// Clean-oracle P@1 (the software reference the hardware must track).
@@ -165,6 +181,97 @@ fn precision_survives_update_burst_within_one_percent() {
         assert!(
             (a - b).abs() <= 0.01 + 1e-12,
             "P@{k} drifted past 1% through corpus churn: {b} -> {a}"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Two-stage cluster-pruned retrieval: the recall/latency gate.
+
+/// Clustering knobs of the pruned gate chip. `Prune::Default` probes the
+/// configured default `nprobe` (4) of these clusters.
+const PRUNE_CLUSTERS: usize = 16;
+
+fn pruned_chip_cfg() -> ChipConfig {
+    ChipConfig {
+        cluster: ClusterPolicy { n_clusters: PRUNE_CLUSTERS, nprobe: 4, kmeans_iters: 8 },
+        ..chip_cfg()
+    }
+}
+
+/// The pinned recall gate: with the centroid prefilter live at the
+/// default `nprobe`, P@{1,5,10} stays within 2% of the exhaustive path
+/// on the same chip — detect on, error-aware remap, identical rng
+/// streams (so the sensing-error flips are bit-identical in both arms
+/// and the measured difference is purely the pruning restriction).
+/// Determinism-pinned like the exhaustive gate: a from-scratch rebuild
+/// (k-means included) reproduces every bit.
+#[test]
+fn pruned_precision_within_two_percent_of_exhaustive() {
+    let ds = dataset();
+    let db = quantize(&ds.docs, N_DOCS, DIM, QuantScheme::Int8);
+    let cfg = pruned_chip_cfg();
+    assert!(cfg.detect, "the gate pins the detect-on path");
+    assert_eq!(cfg.remap, RemapStrategy::ErrorAware);
+    let chip = DircChip::build(cfg, &db);
+    assert!(chip.cluster_index().is_some());
+
+    let (full, (full_work, _)) = run_eval_pruned(&chip, &ds, Prune::None);
+    let (pruned, (pruned_work, skipped)) = run_eval_pruned(&chip, &ds, Prune::Default);
+
+    // Golden determinism pin: rebuild (k-means included) -> same bits.
+    let chip2 = DircChip::build(pruned_chip_cfg(), &db);
+    let (pruned2, (work2, skipped2)) = run_eval_pruned(&chip2, &ds, Prune::Default);
+    assert_eq!(pruned.0.to_bits(), pruned2.0.to_bits(), "pruned P@1 not reproducible");
+    assert_eq!(pruned.1.to_bits(), pruned2.1.to_bits(), "pruned P@5 not reproducible");
+    assert_eq!(pruned.2.to_bits(), pruned2.2.to_bits(), "pruned P@10 not reproducible");
+    assert_eq!((pruned_work, skipped), (work2, skipped2), "work census not reproducible");
+
+    // The 2% recall gate, per k.
+    for (k, f, p) in [(1, full.0, pruned.0), (5, full.1, pruned.1), (10, full.2, pruned.2)] {
+        assert!(
+            (f - p).abs() <= 0.02 + 1e-12,
+            "P@{k} drifted past 2% under default-nprobe pruning: exhaustive {f} pruned {p}"
+        );
+    }
+    // And the prefilter must actually skip sense work to earn its keep.
+    assert!(skipped > 0, "default nprobe must skip at least some macros");
+    assert!(
+        pruned_work < full_work,
+        "pruned sense work {pruned_work} not below exhaustive {full_work}"
+    );
+}
+
+/// The same 2% gate after the PR-2 churn harness: a 10% in-place update
+/// burst through the pulse-accurate write path (same embeddings, so the
+/// cluster routing re-stamps every doc to its existing cluster and the
+/// probed sets are unchanged), then pruned-vs-exhaustive again on the
+/// post-churn chip.
+#[test]
+fn pruned_precision_gate_survives_update_burst() {
+    let ds = dataset();
+    let db = quantize(&ds.docs, N_DOCS, DIM, QuantScheme::Int8);
+    let mut chip = DircChip::build(pruned_chip_cfg(), &db);
+
+    let ids: Vec<u64> = (0..(N_DOCS as u64 / 10)).map(|i| (i * 7) % N_DOCS as u64).collect();
+    let updates: Vec<(u64, DocPayload)> = ids
+        .iter()
+        .map(|&id| {
+            let i = id as usize;
+            (id, DocPayload { values: db.row(i).to_vec(), norm: db.norms[i] })
+        })
+        .collect();
+    let mut wrng = Pcg::new(99);
+    let stats = chip.update_docs(&updates, &mut wrng).expect("update burst");
+    assert!(stats.write_pulses > 0);
+
+    let (full, _) = run_eval_pruned(&chip, &ds, Prune::None);
+    let (pruned, (_, skipped)) = run_eval_pruned(&chip, &ds, Prune::Default);
+    assert!(skipped > 0);
+    for (k, f, p) in [(1, full.0, pruned.0), (5, full.1, pruned.1), (10, full.2, pruned.2)] {
+        assert!(
+            (f - p).abs() <= 0.02 + 1e-12,
+            "post-churn P@{k} drifted past 2% under pruning: exhaustive {f} pruned {p}"
         );
     }
 }
