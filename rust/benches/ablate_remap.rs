@@ -11,9 +11,9 @@ use dirc_rag::dirc::remap::Layout;
 use dirc_rag::dirc::variation::VariationModel;
 use dirc_rag::dirc::RemapStrategy;
 use dirc_rag::eval::evaluate;
+use dirc_rag::retrieval::plan::QueryPlan;
 use dirc_rag::retrieval::quant::{quantize, QuantScheme};
 use dirc_rag::retrieval::score::Metric;
-use dirc_rag::util::rng::Pcg;
 
 fn main() {
     let corner = 2.5;
@@ -48,11 +48,14 @@ fn main() {
             ..ChipConfig::paper_default(spec.dim, Metric::Cosine)
         };
         let chip = DircChip::build(cfg, &db);
-        let mut rng = Pcg::new(9);
-        let rep = evaluate(nq, &ds.qrels[..nq], |qi| {
-            let q = quantize(ds.query(qi), 1, ds.dim, QuantScheme::Int8);
-            chip.query(&q.values, 5, &mut rng).0
-        });
+        // Seed 9: the nonce stream the pre-plan sweep drew from
+        // Pcg::new(9), one nonce per query in order.
+        let queries: Vec<Vec<i8>> = (0..nq)
+            .map(|qi| quantize(ds.query(qi), 1, ds.dim, QuantScheme::Int8).values)
+            .collect();
+        let outs =
+            chip.execute_batch(&queries, &QueryPlan::topk(5).seed(9).build().unwrap());
+        let rep = evaluate(nq, &ds.qrels[..nq], |qi| outs[qi].topk.clone());
         t.row(&[
             name.to_string(),
             format!("{eve:.4}"),

@@ -22,12 +22,12 @@ use dirc_rag::data::{SynthDataset, SynthParams};
 use dirc_rag::dirc::chip::{ChipConfig, DircChip};
 use dirc_rag::eval::precision_at_k;
 use dirc_rag::retrieval::cluster::ClusterPolicy;
+use dirc_rag::retrieval::plan::{QueryPlan, StatsDetail};
 use dirc_rag::retrieval::quant::{quantize, QuantScheme};
 use dirc_rag::retrieval::score::Metric;
 use dirc_rag::retrieval::Prune;
 use dirc_rag::util::json::Json;
 use dirc_rag::util::pool::ThreadPool;
-use dirc_rag::util::rng::Pcg;
 
 const N_CLUSTERS: usize = 128;
 
@@ -45,22 +45,29 @@ struct Sweep {
     topk: Vec<Vec<u64>>,
 }
 
-fn sweep(chip: &DircChip, ds: &SynthDataset, n_queries: usize, prune: Prune) -> Sweep {
-    let mut rng = Pcg::new(17);
+/// The evaluation plan at a pruning policy: seed 17 reproduces the
+/// nonce stream the pre-plan sweep drew from `Pcg::new(17)`, so both
+/// arms (and any rerun) sense identical flips.
+fn sweep_plan(prune: Prune) -> QueryPlan {
+    QueryPlan::topk(10).prune(prune).seed(17).build().expect("sweep plan")
+}
+
+fn sweep(chip: &DircChip, ds: &SynthDataset, queries: &[Vec<i8>], prune: Prune) -> Sweep {
     let mut s = Sweep::default();
-    for qi in 0..n_queries {
-        let q = quantize(ds.query(qi), 1, ds.dim, QuantScheme::Int8);
-        let (ranked, stats) = chip.query_opt(&q.values, 10, prune, &mut rng, 1);
+    let outs = chip.execute_batch(queries, &sweep_plan(prune));
+    for (qi, out) in outs.iter().enumerate() {
+        let (ranked, stats) = (&out.topk, &out.stats);
         s.work_cycles += stats.work_cycles as f64;
         s.cycles += stats.cycles as f64;
         s.energy_j += stats.energy_j;
         s.latency_s += stats.latency_s;
         s.macros_sensed += stats.macros_sensed as f64;
-        s.p1 += precision_at_k(&ranked, &ds.qrels[qi], 1);
-        s.p5 += precision_at_k(&ranked, &ds.qrels[qi], 5);
-        s.p10 += precision_at_k(&ranked, &ds.qrels[qi], 10);
+        s.p1 += precision_at_k(ranked, &ds.qrels[qi], 1);
+        s.p5 += precision_at_k(ranked, &ds.qrels[qi], 5);
+        s.p10 += precision_at_k(ranked, &ds.qrels[qi], 10);
         s.topk.push(ranked.iter().map(|d| d.doc_id).collect());
     }
+    let n_queries = queries.len();
     let n = n_queries as f64;
     s.work_cycles /= n;
     s.cycles /= n;
@@ -113,22 +120,25 @@ fn main() {
     let chip = Arc::new(DircChip::build(cfg, &db));
     assert_eq!(db.stored_bytes(), 4 << 20, "corpus must be exactly 4 MB INT8");
 
+    // The query stream, quantised once and shared by every pass below.
+    let queries: Vec<Vec<i8>> = (0..n_queries)
+        .map(|qi| quantize(ds.query(qi), 1, dim, QuantScheme::Int8).values)
+        .collect();
+
     // Correctness gate before any numbers: probing every centroid must
     // reproduce the exhaustive path bit-for-bit.
     {
-        let q = quantize(ds.query(0), 1, dim, QuantScheme::Int8);
-        let mut r1 = Pcg::new(5);
-        let mut r2 = Pcg::new(5);
-        let (top_full, stats_full) = chip.query_opt(&q.values, 10, Prune::None, &mut r1, 1);
-        let (top_all, stats_all) =
-            chip.query_opt(&q.values, 10, Prune::Probe(N_CLUSTERS), &mut r2, 1);
-        assert_eq!(top_full, top_all, "nprobe = n_clusters diverged from exhaustive");
-        assert_eq!(stats_full.cycles, stats_all.cycles);
-        assert_eq!(stats_full.energy_j.to_bits(), stats_all.energy_j.to_bits());
+        let base = QueryPlan::topk(10).seed(5).build().unwrap();
+        let full = chip.execute(&queries[0], &base.with_prune(Prune::None).unwrap());
+        let all =
+            chip.execute(&queries[0], &base.with_prune(Prune::Probe(N_CLUSTERS)).unwrap());
+        assert_eq!(full.topk, all.topk, "nprobe = n_clusters diverged from exhaustive");
+        assert_eq!(full.stats.cycles, all.stats.cycles);
+        assert_eq!(full.stats.energy_j.to_bits(), all.stats.energy_j.to_bits());
     }
 
-    let exhaustive = sweep(&chip, &ds, n_queries, Prune::None);
-    let pruned = sweep(&chip, &ds, n_queries, Prune::Default);
+    let exhaustive = sweep(&chip, &ds, &queries, Prune::None);
+    let pruned = sweep(&chip, &ds, &queries, Prune::Default);
 
     // Recall of the pruned run against the exhaustive ranking (same rng
     // stream -> identical sensing flips; the difference is purely the
@@ -170,23 +180,31 @@ fn main() {
     );
 
     // Host-side throughput: the skipped (query, core) jobs never reach
-    // the pool, so pruning also buys wall-clock on the simulator.
+    // the pool, so pruning also buys wall-clock on the simulator. The
+    // timing plans run at StatsDetail::Counters — results are identical
+    // (pinned above), the cycle/energy census is pure overhead here.
     let mut b = Bench::new();
-    let pool = ThreadPool::new(4);
-    let queries: Vec<Vec<i8>> = (0..n_queries)
-        .map(|qi| quantize(ds.query(qi), 1, dim, QuantScheme::Int8).values)
-        .collect();
+    let pool = Arc::new(ThreadPool::new(4));
+    let host_plan = |prune: Prune| {
+        QueryPlan::topk(10)
+            .prune(prune)
+            .seed(9)
+            .pool(Arc::clone(&pool))
+            .detail(StatsDetail::Counters)
+            .build()
+            .expect("host timing plan")
+    };
+    let full_plan = host_plan(Prune::None);
     let host_full = b
         .run("batch exhaustive (pool of 4)", || {
-            let mut r = Pcg::new(9);
-            DircChip::query_batch_opt(&chip, &pool, &queries, 10, Prune::None, &mut r).len()
+            chip.execute_batch(&queries, &full_plan).len()
         })
         .summary
         .median;
+    let pruned_plan = host_plan(Prune::Default);
     let host_pruned = b
         .run("batch pruned (pool of 4)", || {
-            let mut r = Pcg::new(9);
-            DircChip::query_batch_opt(&chip, &pool, &queries, 10, Prune::Default, &mut r).len()
+            chip.execute_batch(&queries, &pruned_plan).len()
         })
         .summary
         .median;
@@ -231,6 +249,18 @@ fn main() {
                 ("cores", Json::num(16.0)),
             ]),
         ),
+        // The sweep's QueryPlan, recorded so the trajectory artifact is
+        // self-describing: what k / prune / exec / rng produced it.
+        ("plan", {
+            let plan = sweep_plan(Prune::Default);
+            Json::obj(vec![
+                ("k", Json::num(plan.k() as f64)),
+                ("prune", Json::str(format!("{:?}", plan.prune()))),
+                ("exec", Json::str(plan.exec().name())),
+                ("rng", Json::str(format!("{:?}", plan.rng()))),
+                ("detail", Json::str(format!("{:?}", plan.detail()))),
+            ])
+        }),
         ("exhaustive", sweep_json(&exhaustive)),
         ("pruned", sweep_json(&pruned)),
         (

@@ -11,9 +11,10 @@ use dirc_rag::dirc::chip::{ChipConfig, DircChip};
 use dirc_rag::dirc::variation::VariationModel;
 use dirc_rag::dirc::RemapStrategy;
 use dirc_rag::eval::evaluate;
+use dirc_rag::retrieval::plan::QueryPlan;
 use dirc_rag::retrieval::quant::{quantize, QuantScheme};
 use dirc_rag::retrieval::score::Metric;
-use dirc_rag::util::rng::Pcg;
+use dirc_rag::retrieval::Prune;
 
 fn main() {
     let spec = dataset_by_name("scifact").unwrap();
@@ -24,10 +25,12 @@ fn main() {
     // Clean reference.
     let clean_cfg = ChipConfig { map_points: 150, ..ChipConfig::paper_default(spec.dim, Metric::Cosine) };
     let clean_chip = DircChip::build(clean_cfg, &db);
-    let clean = evaluate(nq, &ds.qrels[..nq], |qi| {
-        let q = quantize(ds.query(qi), 1, ds.dim, QuantScheme::Int8);
-        clean_chip.clean_query(&q.values, 5)
-    });
+    let queries: Vec<Vec<i8>> = (0..nq)
+        .map(|qi| quantize(ds.query(qi), 1, ds.dim, QuantScheme::Int8).values)
+        .collect();
+    let oracle = QueryPlan::topk(5).prune(Prune::None).build().unwrap();
+    let clean =
+        evaluate(nq, &ds.qrels[..nq], |qi| clean_chip.clean_execute(&queries[qi], &oracle));
 
     let corners = [1.0, 2.0, 2.5, 3.0];
     let configs: [(&str, RemapStrategy, bool); 4] = [
@@ -51,11 +54,11 @@ fn main() {
                 ..ChipConfig::paper_default(spec.dim, Metric::Cosine)
             };
             let chip = DircChip::build(cfg, &db);
-            let mut rng = Pcg::new(17);
-            let rep = evaluate(nq, &ds.qrels[..nq], |qi| {
-                let q = quantize(ds.query(qi), 1, ds.dim, QuantScheme::Int8);
-                chip.query(&q.values, 5, &mut rng).0
-            });
+            // Seed 17: the nonce stream the pre-plan sweep drew from
+            // Pcg::new(17), one nonce per query in order.
+            let outs =
+                chip.execute_batch(&queries, &QueryPlan::topk(5).seed(17).build().unwrap());
+            let rep = evaluate(nq, &ds.qrels[..nq], |qi| outs[qi].topk.clone());
             let base = *naive_p1.get_or_insert(rep.p_at_1);
             t.row(&[
                 format!("{corner:.1}x"),

@@ -10,6 +10,7 @@ use std::sync::Arc;
 use dirc_rag::bench::{fmt_si, Bench};
 use dirc_rag::coordinator::{Engine, ServingEngine, SimEngine};
 use dirc_rag::dirc::chip::{ChipConfig, DircChip};
+use dirc_rag::retrieval::plan::QueryPlan;
 use dirc_rag::retrieval::quant::{quantize, QuantScheme};
 use dirc_rag::retrieval::score::{mips_scores, Metric};
 use dirc_rag::retrieval::topk::topk_from_scores;
@@ -45,8 +46,7 @@ fn main() -> anyhow::Result<()> {
         chip.cores()[0].macro_().sense(&mut r).1.flips
     });
     b.run("full chip query (sim engine path)", || {
-        let mut r = Pcg::new(3);
-        chip.query(&q, 10, &mut r).1.cycles
+        chip.execute(&q, &QueryPlan::topk(10).seed(3).build().unwrap()).stats.cycles
     });
 
     // --- PJRT stages (need artifacts). ---
@@ -86,15 +86,15 @@ fn main() -> anyhow::Result<()> {
         b.run("PJRT embed b1", || rt.embed(&feats, 1).unwrap().len());
 
         let sim = SimEngine::new(cfg.clone(), &db);
+        let plan5 = QueryPlan::topk(10).seed(5).build().unwrap();
         b.run("SimEngine.retrieve (4 MB, errors+stats)", || {
-            let mut r = Pcg::new(5);
-            sim.retrieve(&q, 10, &mut r).0.len()
+            sim.retrieve(&q, &plan5).topk.len()
         });
 
         let srv = ServingEngine::new(cfg, &db, Arc::clone(&rt))?;
+        let plan6 = QueryPlan::topk(10).seed(6).build().unwrap();
         b.run("ServingEngine.retrieve (4 MB, PJRT+corrections)", || {
-            let mut r = Pcg::new(6);
-            srv.retrieve(&q, 10, &mut r).0.len()
+            srv.retrieve(&q, &plan6).topk.len()
         });
     } else {
         eprintln!("(artifacts not built: skipping PJRT stages)");

@@ -1,7 +1,7 @@
-//! Parallel sharded query execution: thread-count scaling of the chip's
-//! per-core job fan-out, plus the queries × cores batch matrix on the
-//! shared thread pool. Proves the parallel path buys near-linear speedup
-//! while staying bit-identical to the serial walk.
+//! Parallel sharded plan execution: pool-width scaling of the chip's
+//! per-core job fan-out, plus the queries × cores batch matrix. Proves
+//! pooled `QueryPlan`s buy near-linear speedup while staying
+//! bit-identical to the serial plan.
 //!
 //! ```bash
 //! cargo bench --bench parallel_scaling
@@ -11,6 +11,7 @@ use std::sync::Arc;
 
 use dirc_rag::bench::{fmt_duration, Bench, Table};
 use dirc_rag::dirc::chip::{ChipConfig, DircChip};
+use dirc_rag::retrieval::plan::{Exec, QueryPlan};
 use dirc_rag::retrieval::quant::{quantize, QuantScheme};
 use dirc_rag::retrieval::score::Metric;
 use dirc_rag::util::pool::ThreadPool;
@@ -26,25 +27,33 @@ fn main() {
     let chip = Arc::new(DircChip::build(cfg, &db));
     let q: Vec<i8> = (0..dim).map(|_| rng.int_in(-128, 127) as i8).collect();
 
-    // Correctness first: the parallel path must be bit-identical to the
-    // serial path before any of the timings below mean anything.
+    // Every configuration below is the same validated plan with a
+    // different Exec — the only knob the sweep turns.
+    let base = QueryPlan::topk(10).seed(9).build().unwrap();
+
+    // Correctness first: the pooled plan must be bit-identical to the
+    // serial plan before any of the timings below mean anything.
     {
-        let mut r1 = Pcg::new(9);
-        let mut r2 = Pcg::new(9);
-        let (top_s, stats_s) = chip.query(&q, 10, &mut r1);
-        let (top_p, stats_p) = chip.query_on(&q, 10, &mut r2, 4);
-        assert_eq!(top_s, top_p, "parallel ranking diverged from serial");
-        assert_eq!(stats_s.cycles, stats_p.cycles);
-        assert_eq!(stats_s.sense, stats_p.sense);
+        let pool = Arc::new(ThreadPool::new(4));
+        let s = chip.execute(&q, &base.with_exec(Exec::Serial));
+        let p = chip.execute(&q, &base.with_exec(Exec::Pool(pool)));
+        assert_eq!(s.topk, p.topk, "pooled ranking diverged from serial");
+        assert_eq!(s.stats.cycles, p.stats.cycles);
+        assert_eq!(s.stats.sense, p.stats.sense);
     }
 
     let mut b = Bench::new();
     let thread_counts = [1usize, 2, 4, 8, 16];
+    let timing = base.with_seed(2);
     let mut medians: Vec<(usize, f64)> = Vec::new();
     for &threads in &thread_counts {
+        let plan = if threads == 1 {
+            timing.with_exec(Exec::Serial)
+        } else {
+            timing.with_exec(Exec::Pool(Arc::new(ThreadPool::new(threads))))
+        };
         let r = b.run(&format!("single query (16 cores), {threads} threads"), || {
-            let mut r = Pcg::new(2);
-            chip.query_on(&q, 10, &mut r, threads).1.cycles
+            chip.execute(&q, &plan).stats.cycles
         });
         medians.push((threads, r.summary.median));
     }
@@ -54,32 +63,32 @@ fn main() {
     let queries: Vec<Vec<i8>> = (0..32)
         .map(|_| (0..dim).map(|_| qrng.int_in(-128, 127) as i8).collect())
         .collect();
+    let batch_plan = base.with_seed(4);
     let serial_batch = b
         .run("batch of 32 queries, serial loop", || {
-            let mut r = Pcg::new(4);
-            queries
+            chip.execute_batch(&queries, &batch_plan.with_exec(Exec::Serial))
                 .iter()
-                .map(|q| chip.query(q, 10, &mut r).1.cycles)
+                .map(|o| o.stats.cycles)
                 .sum::<u64>()
         })
         .summary
         .median;
-    let pool = ThreadPool::new(4);
+    let pool = Arc::new(ThreadPool::new(4));
+    let matrix = batch_plan.with_exec(Exec::Pool(Arc::clone(&pool)));
     let matrix_batch = b
         .run("batch of 32 queries, 4-worker pool (queries x cores matrix)", || {
-            let mut r = Pcg::new(4);
-            DircChip::query_batch(&chip, &pool, &queries, 10, &mut r).len()
+            chip.execute_batch(&queries, &matrix).len()
         })
         .summary
         .median;
 
-    let base = medians[0].1;
+    let base_median = medians[0].1;
     let mut t = Table::new(&["threads", "median/query", "speedup vs 1 thread"]);
     for &(threads, median) in &medians {
         t.row(&[
             threads.to_string(),
             fmt_duration(median),
-            format!("{:.2}x", base / median),
+            format!("{:.2}x", base_median / median),
         ]);
     }
     println!("\n=== parallel_scaling: single-query core-shard fan-out ===");
@@ -96,7 +105,7 @@ fn main() {
         .find(|(threads, _)| *threads == 4)
         .map(|&(_, m)| m)
         .unwrap();
-    let speedup = base / four;
+    let speedup = base_median / four;
     println!("single-query speedup at 4 threads: {speedup:.2}x");
     // The hard floor defaults to the 2x contract on developer machines;
     // CI runners are throttled and noisy-neighboured, so the workflow

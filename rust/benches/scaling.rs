@@ -5,6 +5,7 @@ mod common;
 
 use dirc_rag::bench::Table;
 use dirc_rag::dirc::chip::{ChipConfig, DircChip};
+use dirc_rag::retrieval::plan::QueryPlan;
 use dirc_rag::retrieval::quant::{quantize, QuantScheme};
 use dirc_rag::retrieval::score::Metric;
 use dirc_rag::util::rng::Pcg;
@@ -32,8 +33,7 @@ fn main() {
     let mut per_mb: Vec<(f64, f64)> = Vec::new();
     for &n in &sizes {
         let (chip, q) = chip_for(n, dim, QuantScheme::Int8);
-        let mut rng = Pcg::new(1);
-        let (_, stats) = chip.query(&q, 10, &mut rng);
+        let stats = chip.execute(&q, &QueryPlan::topk(10).seed(1).build().unwrap()).stats;
         let mb = (n * dim) as f64 / 1e6;
         t.row(&[
             format!("{:.2} MB", mb),
@@ -58,8 +58,7 @@ fn main() {
     for &d in &[128usize, 256, 512, 1024] {
         let n = 1_048_576 / d; // 1 MiB of INT8
         let (chip, q) = chip_for(n, d, QuantScheme::Int8);
-        let mut rng = Pcg::new(2);
-        let (_, stats) = chip.query(&q, 10, &mut rng);
+        let stats = chip.execute(&q, &QueryPlan::topk(10).seed(2).build().unwrap()).stats;
         t2.row(&[
             d.to_string(),
             n.to_string(),
@@ -73,9 +72,12 @@ fn main() {
     // --- INT4 vs INT8 capacity & cost. ---
     let (chip8, q8) = chip_for(8192, dim, QuantScheme::Int8);
     let (chip4, q4) = chip_for(16384, dim, QuantScheme::Int4);
+    // Streaming contract: two draws of the shared stream, exactly as
+    // the pre-plan API consumed them.
     let mut rng = Pcg::new(3);
-    let s8 = chip8.query(&q8, 10, &mut rng).1;
-    let s4 = chip4.query(&q4, 10, &mut rng).1;
+    let base = QueryPlan::topk(10).build().unwrap();
+    let s8 = chip8.execute(&q8, &base.with_stream(&mut rng)).stats;
+    let s4 = chip4.execute(&q4, &base.with_stream(&mut rng)).stats;
     println!(
         "\nINT4 doubles capacity: {} docs (INT4) vs {} docs (INT8) on the same chip;\n\
          full-chip query: INT4 {:.2} µs / {:.3} µJ vs INT8 {:.2} µs / {:.3} µJ",

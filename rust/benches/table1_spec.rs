@@ -5,6 +5,7 @@ mod common;
 
 use dirc_rag::bench::{Bench, Table};
 use dirc_rag::dirc::chip::{ChipConfig, DircChip};
+use dirc_rag::retrieval::plan::QueryPlan;
 use dirc_rag::retrieval::quant::{quantize, QuantScheme};
 use dirc_rag::retrieval::score::Metric;
 use dirc_rag::sim::ChipSpec;
@@ -61,8 +62,9 @@ fn main() {
     let q: Vec<i8> = (0..dim).map(|_| rng.int_in(-128, 127) as i8).collect();
 
     let mut b = Bench::new();
+    let base = QueryPlan::topk(10).build().unwrap();
     b.run("simulate full 4MB chip query (host)", || {
-        chip.query(&q, 10, &mut rng).1.cycles
+        chip.execute(&q, &base.with_stream(&mut rng)).stats.cycles
     });
     b.report("table1_spec");
 }

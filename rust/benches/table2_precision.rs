@@ -11,7 +11,9 @@ use dirc_rag::bench::Table;
 use dirc_rag::data::paper_datasets;
 use dirc_rag::dirc::chip::{ChipConfig, DircChip};
 use dirc_rag::eval::{evaluate, PrecisionReport};
+use dirc_rag::retrieval::plan::QueryPlan;
 use dirc_rag::retrieval::quant::{quantize, QuantScheme};
+use dirc_rag::retrieval::Prune;
 use dirc_rag::retrieval::score::Metric;
 use dirc_rag::retrieval::topk::topk_from_scores;
 
@@ -52,9 +54,11 @@ fn main() {
                             ..ChipConfig::paper_default(spec.dim, Metric::Cosine)
                         };
                         let chip = DircChip::build(cfg, &db);
+                        let oracle =
+                            QueryPlan::topk(5).prune(Prune::None).build().unwrap();
                         evaluate(nq, &ds.qrels[..nq], |qi| {
                             let q = quantize(ds.query(qi), 1, ds.dim, scheme);
-                            chip.clean_query(&q.values, 5)
+                            chip.clean_execute(&q.values, &oracle)
                         })
                     };
                     (scheme, rep)

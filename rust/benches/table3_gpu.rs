@@ -8,10 +8,10 @@ use dirc_rag::bench::Table;
 use dirc_rag::data::dataset_by_name;
 use dirc_rag::dirc::chip::{ChipConfig, DircChip};
 use dirc_rag::eval::evaluate;
+use dirc_rag::retrieval::plan::QueryPlan;
 use dirc_rag::retrieval::quant::{quantize, QuantScheme};
 use dirc_rag::retrieval::score::Metric;
 use dirc_rag::retrieval::topk::topk_from_scores;
-use dirc_rag::util::rng::Pcg;
 
 fn main() {
     let spec = dataset_by_name("scifact").unwrap();
@@ -25,16 +25,14 @@ fn main() {
         ..ChipConfig::paper_default(spec.dim, Metric::Cosine)
     };
     let chip = DircChip::build(cfg, &db);
-    let mut rng = Pcg::new(3);
-    let mut lat = 0.0;
-    let mut energy = 0.0;
-    let dirc_rep = evaluate(nq, &ds.qrels[..nq], |qi| {
-        let q = quantize(ds.query(qi), 1, ds.dim, QuantScheme::Int8);
-        let (top, stats) = chip.query(&q.values, 5, &mut rng);
-        lat += stats.latency_s;
-        energy += stats.energy_j;
-        top
-    });
+    // Seed 3: the nonce stream the pre-plan run drew from Pcg::new(3).
+    let queries: Vec<Vec<i8>> = (0..nq)
+        .map(|qi| quantize(ds.query(qi), 1, ds.dim, QuantScheme::Int8).values)
+        .collect();
+    let outs = chip.execute_batch(&queries, &QueryPlan::topk(5).seed(3).build().unwrap());
+    let lat: f64 = outs.iter().map(|o| o.stats.latency_s).sum();
+    let energy: f64 = outs.iter().map(|o| o.stats.energy_j).sum();
+    let dirc_rep = evaluate(nq, &ds.qrels[..nq], |qi| outs[qi].topk.clone());
     let dirc_lat = lat / nq as f64;
     let dirc_energy = energy / nq as f64;
 

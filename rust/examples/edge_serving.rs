@@ -23,6 +23,7 @@ use dirc_rag::data::text::{bow_batch, TextCorpus, TextParams, HASH_BUCKETS};
 use dirc_rag::dirc::chip::ChipConfig;
 use dirc_rag::retrieval::quant::{quantize, QuantScheme};
 use dirc_rag::retrieval::score::Metric;
+use dirc_rag::retrieval::QueryPlan;
 use dirc_rag::runtime::PjrtRuntime;
 
 fn main() -> anyhow::Result<()> {
@@ -67,11 +68,13 @@ fn main() -> anyhow::Result<()> {
     );
 
     // --- Fire the query stream (token queries -> on-path embedding). ---
+    // One plan template for the whole stream; each request carries it.
+    let plan = QueryPlan::topk(k).build()?;
     let t1 = Instant::now();
     let mut rxs = Vec::with_capacity(n_queries);
     for qi in 0..n_queries {
         let toks = corpus.queries[qi % corpus.queries.len()].clone();
-        let (_, rx) = coord.submit(Query::Tokens(toks), k)?;
+        let (_, rx) = coord.submit(Query::Tokens(toks), plan.clone())?;
         rxs.push((qi, rx));
     }
     let mut pivot_hits = 0usize;

@@ -15,7 +15,7 @@ use dirc_rag::dirc::RemapStrategy;
 use dirc_rag::eval::evaluate;
 use dirc_rag::retrieval::quant::{quantize, QuantScheme};
 use dirc_rag::retrieval::score::Metric;
-use dirc_rag::util::rng::Pcg;
+use dirc_rag::retrieval::{Prune, QueryPlan};
 
 fn main() {
     // --- Fig 5a: the spatial error map. ---
@@ -46,9 +46,12 @@ fn main() {
     // Clean reference.
     let clean_cfg = ChipConfig { map_points: 400, ..ChipConfig::paper_default(spec.dim, Metric::Cosine) };
     let clean_chip = DircChip::build(clean_cfg, &db);
+    let queries: Vec<Vec<i8>> = (0..n_queries)
+        .map(|qi| quantize(ds.query(qi), 1, ds.dim, QuantScheme::Int8).values)
+        .collect();
+    let oracle = QueryPlan::topk(5).prune(Prune::None).build().expect("oracle plan");
     let clean = evaluate(n_queries, &ds.qrels[..n_queries], |qi| {
-        let q = quantize(ds.query(qi), 1, ds.dim, QuantScheme::Int8);
-        clean_chip.clean_query(&q.values, 5)
+        clean_chip.clean_execute(&queries[qi], &oracle)
     });
     println!(
         "{:<36} P@1 {:.4}  P@3 {:.4}  P@5 {:.4}",
@@ -65,11 +68,11 @@ fn main() {
             ..ChipConfig::paper_default(spec.dim, Metric::Cosine)
         };
         let chip = DircChip::build(cfg, &db);
-        let mut rng = Pcg::new(11);
-        let rep = evaluate(n_queries, &ds.qrels[..n_queries], |qi| {
-            let q = quantize(ds.query(qi), 1, ds.dim, QuantScheme::Int8);
-            chip.query(&q.values, 5, &mut rng).0
-        });
+        // The same seeded plan for every configuration: identical nonce
+        // streams, so the arms differ only by remap/detect.
+        let plan = QueryPlan::topk(5).seed(11).build().expect("eval plan");
+        let outs = chip.execute_batch(&queries, &plan);
+        let rep = evaluate(n_queries, &ds.qrels[..n_queries], |qi| outs[qi].topk.clone());
         let base = *naive_p1.get_or_insert(rep.p_at_1);
         println!(
             "{:<36} P@1 {:.4}  P@3 {:.4}  P@5 {:.4}   ({:+.1}% P@1 vs naive)",

@@ -9,8 +9,8 @@ use dirc_rag::data::{SynthDataset, SynthParams};
 use dirc_rag::dirc::chip::{ChipConfig, DircChip};
 use dirc_rag::retrieval::quant::{quantize, QuantScheme};
 use dirc_rag::retrieval::score::Metric;
+use dirc_rag::retrieval::QueryPlan;
 use dirc_rag::sim::ChipSpec;
-use dirc_rag::util::rng::Pcg;
 
 fn main() {
     // 1. The derived Table I spec sheet.
@@ -43,12 +43,16 @@ fn main() {
     let cfg = ChipConfig { map_points: 500, ..ChipConfig::paper_default(dim, Metric::Cosine) };
     let chip = DircChip::build(cfg, &db);
 
-    // 4. Retrieve.
-    let mut rng = Pcg::new(7);
+    // 4. Retrieve: one validated QueryPlan drives the whole stream
+    //    (top-5, default pruning, seeded rng — fully reproducible).
+    let plan = QueryPlan::topk(5).seed(7).build().expect("k >= 1");
+    let queries: Vec<Vec<i8>> = (0..ds.n_queries())
+        .map(|qi| quantize(ds.query(qi), 1, dim, QuantScheme::Int8).values)
+        .collect();
+    let outs = chip.execute_batch(&queries, &plan);
     let mut hits = 0;
-    for qi in 0..ds.n_queries() {
-        let q = quantize(ds.query(qi), 1, dim, QuantScheme::Int8);
-        let (top, stats) = chip.query(&q.values, 5, &mut rng);
+    for (qi, out) in outs.iter().enumerate() {
+        let (top, stats) = (&out.topk, &out.stats);
         let hit = top.iter().any(|d| ds.qrels[qi].contains(&(d.doc_id as u32)));
         hits += hit as usize;
         if qi < 4 {

@@ -1,5 +1,6 @@
-//! Config-file binding: build [`ChipConfig`] / [`CoordinatorConfig`] from
-//! the TOML-subset files under `configs/` (layered: defaults <- file).
+//! Config-file binding: build [`ChipConfig`] / [`CoordinatorConfig`] /
+//! the serving [`QueryPlan`] template from the TOML-subset files under
+//! `configs/` (layered: defaults <- file).
 
 use anyhow::{anyhow, Result};
 
@@ -9,7 +10,8 @@ use crate::dirc::chip::ChipConfig;
 use crate::dirc::detect::ResensePolicy;
 use crate::dirc::variation::VariationModel;
 use crate::dirc::RemapStrategy;
-use crate::retrieval::cluster::ClusterPolicy;
+use crate::retrieval::cluster::{ClusterPolicy, Prune};
+use crate::retrieval::plan::QueryPlan;
 use crate::retrieval::quant::QuantScheme;
 use crate::retrieval::score::Metric;
 use crate::util::config::Config;
@@ -65,17 +67,10 @@ pub fn chip_config(cfg: &Config) -> Result<ChipConfig> {
     if chip.dim % 128 != 0 {
         return Err(anyhow!("chip.dim must be a multiple of 128"));
     }
-    if chip.cluster.n_clusters > 4096 {
-        return Err(anyhow!("prune.n_clusters must be <= 4096"));
-    }
-    if chip.cluster.n_clusters == 1 {
-        // ClusterPolicy::enabled() needs >= 2 clusters; accepting 1 here
-        // would silently build an exhaustive chip under pruning knobs.
-        return Err(anyhow!("prune.n_clusters must be 0 (off) or >= 2"));
-    }
-    if chip.cluster.n_clusters > 0 && chip.cluster.nprobe == 0 {
-        return Err(anyhow!("prune.nprobe must be >= 1 when clustering is on"));
-    }
+    // The pruning range checks live with the plan machinery
+    // (`ClusterPolicy::validate` in `retrieval::plan`) — one validator
+    // for config binding and plan construction alike.
+    chip.cluster.validate().map_err(|e| anyhow!("[prune]: {e}"))?;
     Ok(chip)
 }
 
@@ -100,13 +95,27 @@ pub fn coordinator_config(cfg: &Config) -> Result<CoordinatorConfig> {
         mutation_max_defer: std::time::Duration::from_millis(
             cfg.int_or("serving.mutation_max_defer_ms", 20).max(0) as u64,
         ),
-        // 0 (or absent) = defer to the chip's own pruning policy.
-        nprobe: match cfg.usize_or("serving.nprobe", 0) {
-            0 => None,
-            p => Some(p),
-        },
         seed: cfg.int_or("chip.seed", 0xC00D) as u64,
     })
+}
+
+/// Build the serving [`QueryPlan`] template from the `[serving]` knobs:
+/// `serving.k` (top-k, default 10) and `serving.nprobe` (0 or absent =
+/// defer to the chip's own pruning policy; `p > 0` probes `p`
+/// centroids). Validation runs through the plan builder's typed errors,
+/// so the config binding and hand-built plans reject exactly the same
+/// inputs. Callers tweak the template per request
+/// ([`QueryPlan::with_k`] / [`QueryPlan::with_prune`]).
+pub fn query_plan(cfg: &Config) -> Result<QueryPlan> {
+    let k = cfg.usize_or("serving.k", 10);
+    let prune = match cfg.usize_or("serving.nprobe", 0) {
+        0 => Prune::Default,
+        p => Prune::Probe(p),
+    };
+    QueryPlan::topk(k)
+        .prune(prune)
+        .build()
+        .map_err(|e| anyhow!("[serving] plan: {e}"))
 }
 
 /// Load the default config (if present) layered under the `DIRC_CONFIG`
@@ -215,31 +224,41 @@ query_quant = "int4"
 
     #[test]
     fn prune_knobs_bind_and_validate() {
-        // Defaults: clustering off, nprobe 4, 8 Lloyd iterations.
+        // Defaults: clustering off, nprobe 4, 8 Lloyd iterations; the
+        // serving plan template defers to the chip's pruning policy.
         let cfg = Config::parse("").unwrap();
         let chip = chip_config(&cfg).unwrap();
         assert_eq!(chip.cluster.n_clusters, 0);
         assert_eq!(chip.cluster.nprobe, 4);
         assert_eq!(chip.cluster.kmeans_iters, 8);
-        assert_eq!(coordinator_config(&cfg).unwrap().nprobe, None);
+        let plan = query_plan(&cfg).unwrap();
+        assert_eq!(plan.k(), 10);
+        assert_eq!(plan.prune(), Prune::Default);
 
         let cfg = Config::parse(
-            "[prune]\nn_clusters = 64\nnprobe = 6\nkmeans_iters = 12\n[serving]\nnprobe = 3",
+            "[prune]\nn_clusters = 64\nnprobe = 6\nkmeans_iters = 12\n\
+             [serving]\nnprobe = 3\nk = 7",
         )
         .unwrap();
         let chip = chip_config(&cfg).unwrap();
         assert_eq!(chip.cluster.n_clusters, 64);
         assert_eq!(chip.cluster.nprobe, 6);
         assert_eq!(chip.cluster.kmeans_iters, 12);
-        assert_eq!(coordinator_config(&cfg).unwrap().nprobe, Some(3));
+        let plan = query_plan(&cfg).unwrap();
+        assert_eq!(plan.k(), 7);
+        assert_eq!(plan.prune(), Prune::Probe(3));
 
-        // Invalid combinations are rejected.
+        // Invalid combinations are rejected — by the shared
+        // `ClusterPolicy::validate` / plan-builder logic, not ad-hoc
+        // range checks.
         let bad = Config::parse("[prune]\nn_clusters = 8192").unwrap();
         assert!(chip_config(&bad).is_err());
         let bad = Config::parse("[prune]\nn_clusters = 16\nnprobe = 0").unwrap();
         assert!(chip_config(&bad).is_err());
         let bad = Config::parse("[prune]\nn_clusters = 1").unwrap();
         assert!(chip_config(&bad).is_err(), "n_clusters = 1 would silently disable pruning");
+        let bad = Config::parse("[serving]\nk = 0").unwrap();
+        assert!(query_plan(&bad).is_err(), "serving.k = 0 must be rejected");
     }
 
     #[test]
@@ -273,6 +292,7 @@ query_quant = "int4"
             let cfg = Config::from_file(&p).unwrap();
             chip_config(&cfg).unwrap();
             coordinator_config(&cfg).unwrap();
+            query_plan(&cfg).unwrap();
         }
     }
 }

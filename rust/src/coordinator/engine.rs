@@ -11,12 +11,17 @@
 //! (cosine, top-k merge) runs in Rust. Results are bit-identical to
 //! `SimEngine` by construction — asserted in `rust/tests/`.
 //!
-//! Both engines optionally share a [`ThreadPool`]: with a pool attached,
-//! every per-core shard job — single queries included — runs on the
-//! pool's workers, and [`Engine::retrieve_batch`] pipelines whole batches
-//! as a queries × cores job matrix ([`DircChip::query_batch`]). With or
-//! without a pool, results are bit-identical to the serial path — the
-//! determinism contract documented in [`crate::dirc::chip`].
+//! Both engines speak the [`QueryPlan`] currency: [`Engine::retrieve`]
+//! executes one plan, [`Engine::retrieve_batch`] a batch (bit-identical
+//! to the serial stream of the same plan). The plan's [`Exec`] resolves
+//! at the engine: [`Exec::Auto`] uses the engine's attached
+//! [`ThreadPool`] when one was configured (every per-core shard job —
+//! single queries included — runs on its workers, and batches pipeline
+//! as a queries × cores job matrix through
+//! [`DircChip::execute_batch`]); [`Exec::Serial`] forces the serial
+//! reference walk; [`Exec::Pool`] supplies an explicit pool. With or
+//! without a pool, results are bit-identical — the determinism contract
+//! documented in [`crate::dirc::chip`].
 //!
 //! ## Online mutation (snapshot swap)
 //!
@@ -34,8 +39,8 @@ use std::sync::{Arc, Mutex, RwLock};
 use anyhow::{bail, Result};
 
 use crate::coordinator::request::Mutation;
-use crate::dirc::chip::{ChipConfig, DircChip, DocPayload, MutationStats, QueryStats};
-use crate::retrieval::cluster::Prune;
+use crate::dirc::chip::{ChipConfig, DircChip, DocPayload, MutationStats};
+use crate::retrieval::plan::{Exec, PlanOutput, QueryPlan};
 use crate::retrieval::quant::{QuantScheme, Quantized};
 use crate::retrieval::score::{finalize_scores, norm_i8, Metric};
 use crate::retrieval::topk::{ScoredDoc, TopK};
@@ -52,55 +57,27 @@ pub struct MutationOutcome {
     pub stats: MutationStats,
 }
 
-/// A retrieval engine: quantised query in, ranked documents + hardware
-/// stats out.
+/// A retrieval engine: quantised query + [`QueryPlan`] in, ranked
+/// documents + hardware stats out.
 pub trait Engine: Send + Sync {
-    /// Retrieve under the engine's default pruning policy
-    /// ([`Prune::Default`] — exhaustive unless the chip was built with a
-    /// cluster index).
-    fn retrieve(&self, q: &[i8], k: usize, rng: &mut Pcg) -> (Vec<ScoredDoc>, QueryStats);
+    /// Execute one plan-driven retrieval. Every knob — `k`, pruning,
+    /// execution shape, rng policy, stats detail — rides in the plan;
+    /// [`Exec::Auto`] resolves to the engine's attached pool (if any).
+    fn retrieve(&self, q: &[i8], plan: &QueryPlan) -> PlanOutput;
 
-    /// Retrieve under an explicit [`Prune`] policy (the per-request
-    /// `nprobe` override of the serving path). The policy is advisory:
-    /// an engine without a two-stage index serves exhaustively — which is
-    /// exactly what every policy degenerates to on such a corpus — so
-    /// the default implementation ignores it.
-    fn retrieve_opt(
-        &self,
-        q: &[i8],
-        k: usize,
-        prune: Prune,
-        rng: &mut Pcg,
-    ) -> (Vec<ScoredDoc>, QueryStats) {
-        let _ = prune;
-        self.retrieve(q, k, rng)
-    }
-
-    /// Retrieve a batch of queries. The contract is bit-identical results
-    /// to calling [`Engine::retrieve`] once per query in order with the
-    /// same `rng`; the default implementation *is* that serial loop.
-    /// Engines with a thread pool override this to pipeline the batch
-    /// across cores.
-    fn retrieve_batch(
-        &self,
-        queries: &[Vec<i8>],
-        k: usize,
-        rng: &mut Pcg,
-    ) -> Vec<(Vec<ScoredDoc>, QueryStats)> {
-        queries.iter().map(|q| self.retrieve(q, k, rng)).collect()
-    }
-
-    /// [`Engine::retrieve_batch`] under an explicit [`Prune`] policy;
-    /// same bit-identity contract against a serial loop of
-    /// [`Engine::retrieve_opt`] calls.
-    fn retrieve_batch_opt(
-        &self,
-        queries: &[Vec<i8>],
-        k: usize,
-        prune: Prune,
-        rng: &mut Pcg,
-    ) -> Vec<(Vec<ScoredDoc>, QueryStats)> {
-        queries.iter().map(|q| self.retrieve_opt(q, k, prune, rng)).collect()
+    /// Retrieve a batch under one plan. The contract is bit-identical
+    /// results to the serial stream: query `i` senses with the `i`-th
+    /// nonce of the plan's rng policy (`plan.nonces(n)`), exactly as a
+    /// loop of [`Engine::retrieve`] calls over per-query nonce plans
+    /// would — which is what this default implementation does. Engines
+    /// with a pooled batch path override it to pipeline across cores.
+    fn retrieve_batch(&self, queries: &[Vec<i8>], plan: &QueryPlan) -> Vec<PlanOutput> {
+        let nonces = plan.nonces(queries.len());
+        queries
+            .iter()
+            .zip(nonces)
+            .map(|(q, nonce)| self.retrieve(q, &plan.with_nonce(nonce)))
+            .collect()
     }
 
     /// How many queued queries this engine can usefully absorb in one
@@ -123,6 +100,16 @@ pub trait Engine: Send + Sync {
     fn dim(&self) -> usize;
 
     fn n_docs(&self) -> usize;
+}
+
+/// Resolve [`Exec::Auto`] against an engine's attached pool: with a pool
+/// configured, Auto plans run on it; explicit `Serial`/`Pool` plans are
+/// honoured as-is.
+fn resolve_exec(plan: &QueryPlan, pool: &Option<Arc<ThreadPool>>) -> QueryPlan {
+    match (plan.exec(), pool) {
+        (Exec::Auto, Some(p)) => plan.with_exec(Exec::Pool(Arc::clone(p))),
+        _ => plan.clone(),
+    }
 }
 
 /// Quantise FP32 mutation payloads onto the chip's *frozen* integer
@@ -198,7 +185,8 @@ impl SimEngine {
         Self::with_pool(cfg, db, None)
     }
 
-    /// Build with a shared thread pool for parallel sharded execution.
+    /// Build with a shared thread pool: [`Exec::Auto`] plans run their
+    /// per-core shard jobs on it.
     pub fn with_pool(
         cfg: ChipConfig,
         db: &Quantized,
@@ -219,51 +207,14 @@ impl SimEngine {
 }
 
 impl Engine for SimEngine {
-    fn retrieve(&self, q: &[i8], k: usize, rng: &mut Pcg) -> (Vec<ScoredDoc>, QueryStats) {
-        self.retrieve_opt(q, k, Prune::Default, rng)
+    fn retrieve(&self, q: &[i8], plan: &QueryPlan) -> PlanOutput {
+        self.chip().execute(q, &resolve_exec(plan, &self.pool))
     }
 
-    fn retrieve_opt(
-        &self,
-        q: &[i8],
-        k: usize,
-        prune: Prune,
-        rng: &mut Pcg,
-    ) -> (Vec<ScoredDoc>, QueryStats) {
-        let chip = self.chip();
-        match &self.pool {
-            // A single query is a batch of one: its per-core jobs run on
-            // the shared pool (no per-call thread spawning).
-            Some(pool) => {
-                let batch = [q.to_vec()];
-                let mut out = DircChip::query_batch_opt(&chip, pool, &batch, k, prune, rng);
-                out.pop().expect("one result for one query")
-            }
-            None => chip.query_opt(q, k, prune, rng, 1),
-        }
-    }
-
-    fn retrieve_batch(
-        &self,
-        queries: &[Vec<i8>],
-        k: usize,
-        rng: &mut Pcg,
-    ) -> Vec<(Vec<ScoredDoc>, QueryStats)> {
-        self.retrieve_batch_opt(queries, k, Prune::Default, rng)
-    }
-
-    fn retrieve_batch_opt(
-        &self,
-        queries: &[Vec<i8>],
-        k: usize,
-        prune: Prune,
-        rng: &mut Pcg,
-    ) -> Vec<(Vec<ScoredDoc>, QueryStats)> {
-        let chip = self.chip();
-        match &self.pool {
-            Some(pool) => DircChip::query_batch_opt(&chip, pool, queries, k, prune, rng),
-            None => queries.iter().map(|q| chip.query_opt(q, k, prune, rng, 1)).collect(),
-        }
+    fn retrieve_batch(&self, queries: &[Vec<i8>], plan: &QueryPlan) -> Vec<PlanOutput> {
+        // One snapshot for the whole batch; under a pool this pipelines
+        // as the queries x cores job matrix.
+        self.chip().execute_batch(queries, &resolve_exec(plan, &self.pool))
     }
 
     fn batch_capacity(&self) -> usize {
@@ -344,13 +295,14 @@ impl ServeState {
 
 /// PJRT-fused serving engine.
 ///
-/// Per query: one `sense_pass` over the chip simulator (flips + full
-/// cycle/energy accounting, no functional compute) and **one** PJRT
-/// execution of a whole-database `mips_plain` block (a single fused XLA
-/// dot), followed by exact flip corrections, metric finalisation and one
-/// top-k in Rust. Compared to the original per-core exec fan-out this cut
-/// retrieve latency ~14x (EXPERIMENTS.md §Perf). With a pool attached,
-/// the sense pass shards across cores in parallel.
+/// Per query: one [`DircChip::sense_execute`] over the chip simulator
+/// (flips + full cycle/energy accounting, no functional compute) and
+/// **one** PJRT execution of a whole-database `mips_plain` block (a
+/// single fused XLA dot), followed by exact flip corrections, metric
+/// finalisation and one top-k in Rust. Compared to the original per-core
+/// exec fan-out this cut retrieve latency ~14x (EXPERIMENTS.md §Perf).
+/// With a pool attached, `Exec::Auto` plans shard the sense pass across
+/// cores in parallel.
 ///
 /// Mutations re-program the chip snapshot and re-upload the resident
 /// block (the device copy must track the NVM contents); queries holding
@@ -408,36 +360,19 @@ impl ServingEngine {
 }
 
 impl Engine for ServingEngine {
-    fn retrieve(&self, q: &[i8], k: usize, rng: &mut Pcg) -> (Vec<ScoredDoc>, QueryStats) {
-        self.retrieve_opt(q, k, Prune::Default, rng)
-    }
-
-    fn retrieve_opt(
-        &self,
-        q: &[i8],
-        k: usize,
-        prune: Prune,
-        rng: &mut Pcg,
-    ) -> (Vec<ScoredDoc>, QueryStats) {
+    fn retrieve(&self, q: &[i8], plan: &QueryPlan) -> PlanOutput {
+        let plan = resolve_exec(plan, &self.pool);
         let q_norm = norm_i8(q);
         // Hold the read lock across the whole pass: the PJRT block and
         // the chip snapshot must come from the same corpus version.
         let state = self.state.read().unwrap();
 
-        // Centroid prefilter: one macro mask for the sense pass AND the
-        // top-k filter below — both stages must see the same selection or
-        // the engine would return docs whose macros never sensed.
-        let mask = state.chip.macro_mask(q, prune);
-
-        // Hardware pass: sensing + accounting (no functional compute),
-        // sharded across cores on the shared pool when one is attached;
-        // masked-out macros skip their sense pass entirely.
-        let (per_core_flips, stats) = match &self.pool {
-            Some(pool) => {
-                DircChip::sense_pass_pool_masked(&state.chip, pool, k, rng, mask.as_deref())
-            }
-            None => state.chip.sense_pass_masked(k, rng, 1, mask.as_deref()),
-        };
+        // Hardware pass: sensing + accounting (no functional compute).
+        // One mask is resolved inside for the sense pass AND returned
+        // for the top-k filter below — both stages must see the same
+        // selection or the engine would return docs whose macros never
+        // sensed.
+        let sense = state.chip.sense_execute(q, &plan);
 
         // Functional pass: one PJRT execution for the whole database.
         // (The fused dot costs one device pass either way; pruning's
@@ -451,7 +386,7 @@ impl Engine for ServingEngine {
 
         // Exact flip corrections, offset into the flat slot space
         // (skipped macros returned no flips).
-        for (c, flips) in per_core_flips.iter().enumerate() {
+        for (c, flips) in sense.flips.iter().enumerate() {
             let core = &state.chip.cores()[c];
             let base = state.offsets[c];
             for (doc, dq) in core.macro_().score_corrections(flips, q) {
@@ -467,10 +402,10 @@ impl Engine for ServingEngine {
         );
         // Top-k over the sensed cores' slots only — the same candidate
         // set the simulator's pruned merge sees, so SimEngine and
-        // ServingEngine stay bit-identical under every policy.
-        let mut topk = TopK::new(k);
+        // ServingEngine stay bit-identical under every plan.
+        let mut topk = TopK::new(plan.k());
         for (c, core) in state.chip.cores().iter().enumerate() {
-            if let Some(m) = &mask {
+            if let Some(m) = &sense.mask {
                 if !m[c] {
                     continue;
                 }
@@ -482,7 +417,7 @@ impl Engine for ServingEngine {
                 }
             }
         }
-        (topk.into_sorted(), stats)
+        PlanOutput { topk: topk.into_sorted(), stats: sense.stats }
     }
 
     fn mutate(&self, m: &Mutation, rng: &mut Pcg) -> Result<MutationOutcome> {
@@ -511,6 +446,7 @@ impl Engine for ServingEngine {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::retrieval::cluster::Prune;
     use crate::retrieval::quant::{quantize, random_unit_rows, QuantScheme};
 
     fn db(n: usize, dim: usize, seed: u64) -> Quantized {
@@ -533,9 +469,10 @@ mod tests {
         let eng = SimEngine::new(cfg(128, 4), &q);
         let mut rng = Pcg::new(2);
         let qv: Vec<i8> = (0..128).map(|_| rng.int_in(-128, 127) as i8).collect();
-        let (top, stats) = eng.retrieve(&qv, 5, &mut rng);
-        assert_eq!(top.len(), 5);
-        assert!(stats.latency_s > 0.0);
+        let plan = QueryPlan::topk(5).seed(2).build().unwrap();
+        let out = eng.retrieve(&qv, &plan);
+        assert_eq!(out.topk.len(), 5);
+        assert!(out.stats.latency_s > 0.0);
         assert_eq!(eng.n_docs(), 300);
         assert_eq!(eng.dim(), 128);
     }
@@ -549,13 +486,14 @@ mod tests {
         for seed in 0..4u64 {
             let mut rng = Pcg::new(50 + seed);
             let qv: Vec<i8> = (0..128).map(|_| rng.int_in(-128, 127) as i8).collect();
-            let mut r1 = Pcg::new(seed);
-            let mut r2 = Pcg::new(seed);
-            let (t1, s1) = serial.retrieve(&qv, 7, &mut r1);
-            let (t2, s2) = pooled.retrieve(&qv, 7, &mut r2);
-            assert_eq!(t1, t2);
-            assert_eq!(s1.sense, s2.sense);
-            assert_eq!(s1.cycles, s2.cycles);
+            // Same plan, two engines: Exec::Auto resolves serial on one
+            // and pooled on the other — results must not move.
+            let plan = QueryPlan::topk(7).seed(seed).build().unwrap();
+            let a = serial.retrieve(&qv, &plan);
+            let b = pooled.retrieve(&qv, &plan);
+            assert_eq!(a.topk, b.topk);
+            assert_eq!(a.stats.sense, b.stats.sense);
+            assert_eq!(a.stats.cycles, b.stats.cycles);
         }
     }
 
@@ -569,16 +507,32 @@ mod tests {
         let queries: Vec<Vec<i8>> = (0..9)
             .map(|_| (0..128).map(|_| qrng.int_in(-128, 127) as i8).collect())
             .collect();
-        let mut r1 = Pcg::new(77);
-        let mut r2 = Pcg::new(77);
-        let want: Vec<_> = queries.iter().map(|q| serial.retrieve(q, 5, &mut r1)).collect();
-        let got = pooled.retrieve_batch(&queries, 5, &mut r2);
+        let plan = QueryPlan::topk(5).seed(77).build().unwrap();
+        // The serial engine's batch is the default per-query nonce loop;
+        // the pooled engine pipelines the queries x cores matrix.
+        let want = serial.retrieve_batch(&queries, &plan);
+        let got = pooled.retrieve_batch(&queries, &plan);
         assert_eq!(got.len(), want.len());
-        for (qi, ((gt, gs), (wt, ws))) in got.iter().zip(want.iter()).enumerate() {
-            assert_eq!(gt, wt, "query {qi}");
-            assert_eq!(gs.sense, ws.sense, "query {qi}");
-            assert_eq!(gs.cycles, ws.cycles, "query {qi}");
+        for (qi, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+            assert_eq!(g.topk, w.topk, "query {qi}");
+            assert_eq!(g.stats.sense, w.stats.sense, "query {qi}");
+            assert_eq!(g.stats.cycles, w.stats.cycles, "query {qi}");
         }
+    }
+
+    #[test]
+    fn serial_exec_forces_serial_on_pooled_engine() {
+        let q = db(256, 128, 6);
+        let pool = Arc::new(ThreadPool::new(4));
+        let pooled = SimEngine::with_pool(cfg(128, 4), &q, Some(pool));
+        let serial = SimEngine::new(cfg(128, 4), &q);
+        let mut rng = Pcg::new(3);
+        let qv: Vec<i8> = (0..128).map(|_| rng.int_in(-128, 127) as i8).collect();
+        let plan = QueryPlan::topk(5).seed(4).serial().build().unwrap();
+        let a = serial.retrieve(&qv, &plan);
+        let b = pooled.retrieve(&qv, &plan);
+        assert_eq!(a.topk, b.topk);
+        assert_eq!(a.stats.cycles, b.stats.cycles);
     }
 
     #[test]
@@ -623,22 +577,21 @@ mod tests {
         let mut qrng = Pcg::new(70);
         for seed in 0..4u64 {
             let qv: Vec<i8> = (0..128).map(|_| qrng.int_in(-128, 127) as i8).collect();
+            let base = QueryPlan::topk(5).seed(seed).build().unwrap();
             for prune in [Prune::None, Prune::Default, Prune::Probe(3)] {
-                let mut r1 = Pcg::new(seed);
-                let mut r2 = Pcg::new(seed);
-                let (t1, s1) = serial.retrieve_opt(&qv, 5, prune, &mut r1);
-                let (t2, s2) = pooled.retrieve_opt(&qv, 5, prune, &mut r2);
-                assert_eq!(t1, t2, "{prune:?}");
-                assert_eq!(s1.cycles, s2.cycles, "{prune:?}");
-                assert_eq!(s1.work_cycles, s2.work_cycles, "{prune:?}");
-                assert_eq!(s1.macros_sensed, s2.macros_sensed, "{prune:?}");
+                let plan = base.with_prune(prune).unwrap();
+                let a = serial.retrieve(&qv, &plan);
+                let b = pooled.retrieve(&qv, &plan);
+                assert_eq!(a.topk, b.topk, "{prune:?}");
+                assert_eq!(a.stats.cycles, b.stats.cycles, "{prune:?}");
+                assert_eq!(a.stats.work_cycles, b.stats.work_cycles, "{prune:?}");
+                assert_eq!(a.stats.macros_sensed, b.stats.macros_sensed, "{prune:?}");
             }
             // Default policy (nprobe 2 of 8) must skip work whenever the
             // mask excludes a core.
-            let mut r1 = Pcg::new(seed);
-            let mut r2 = Pcg::new(seed);
-            let (_, full) = serial.retrieve_opt(&qv, 5, Prune::None, &mut r1);
-            let (_, pruned) = serial.retrieve_opt(&qv, 5, Prune::Default, &mut r2);
+            let full = serial.retrieve(&qv, &base.with_prune(Prune::None).unwrap()).stats;
+            let pruned =
+                serial.retrieve(&qv, &base.with_prune(Prune::Default).unwrap()).stats;
             assert!(pruned.work_cycles <= full.work_cycles);
             if pruned.macros_skipped > 0 {
                 assert!(pruned.energy_j < full.energy_j);

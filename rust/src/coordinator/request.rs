@@ -1,6 +1,7 @@
 //! Request/response types of the serving path.
 
 use crate::dirc::chip::{MutationStats, QueryStats};
+use crate::retrieval::plan::QueryPlan;
 use crate::retrieval::topk::ScoredDoc;
 
 /// Query payload: either raw text tokens (embedded on-path through the
@@ -43,12 +44,17 @@ impl Mutation {
 /// What a request asks the coordinator to do.
 #[derive(Debug, Clone)]
 pub enum RequestKind {
-    /// Retrieve the top-k documents for a query. `nprobe` overrides the
-    /// two-stage pruning aggressiveness for this request alone: `None`
-    /// defers to the coordinator's configured default (which itself
-    /// defers to the chip's `cluster.nprobe`), `Some(p)` probes exactly
-    /// `p` centroids — `Some(p >= n_clusters)` is the exhaustive path.
-    Retrieve { query: Query, k: usize, nprobe: Option<usize> },
+    /// Retrieve under a [`QueryPlan`]: the plan carries every knob of
+    /// this request — `k`, the per-request pruning policy
+    /// (`Prune::Probe(p)` overrides; `Prune::Default` defers to the
+    /// chip's own `cluster.nprobe`; `p >= n_clusters` is the exhaustive
+    /// path), execution shape and stats detail. Workers group queued
+    /// requests for batched dispatch keyed on the plan — `(k, prune)`
+    /// plus matching detail/exec, so no knob is overridden by a
+    /// groupmate's plan. The plan's rng policy is re-stamped by the
+    /// serving worker (see
+    /// [`crate::coordinator::server::Coordinator::submit`]).
+    Retrieve { query: Query, plan: QueryPlan },
     /// Apply a corpus mutation through the serve-mode mutation channel.
     Mutate(Mutation),
 }
@@ -120,25 +126,36 @@ mod tests {
 
     #[test]
     fn request_kinds() {
+        use crate::retrieval::cluster::Prune;
+
         let r = Request {
             id: 1,
             kind: RequestKind::Retrieve {
                 query: Query::Embedding(vec![0.0; 2]),
-                k: 5,
-                nprobe: None,
+                plan: QueryPlan::topk(5).build().unwrap(),
             },
         };
         let m = Request { id: 2, kind: RequestKind::Mutate(Mutation::Delete { ids: vec![9] }) };
-        assert!(matches!(r.kind, RequestKind::Retrieve { k: 5, nprobe: None, .. }));
+        match &r.kind {
+            RequestKind::Retrieve { plan, .. } => {
+                assert_eq!(plan.k(), 5);
+                assert_eq!(plan.prune(), Prune::Default);
+            }
+            RequestKind::Mutate(_) => unreachable!(),
+        }
         assert!(matches!(m.kind, RequestKind::Mutate(Mutation::Delete { .. })));
         let p = Request {
             id: 3,
             kind: RequestKind::Retrieve {
                 query: Query::Embedding(vec![0.0; 2]),
-                k: 5,
-                nprobe: Some(2),
+                plan: QueryPlan::topk(5).nprobe(2).build().unwrap(),
             },
         };
-        assert!(matches!(p.kind, RequestKind::Retrieve { nprobe: Some(2), .. }));
+        match &p.kind {
+            RequestKind::Retrieve { plan, .. } => {
+                assert_eq!(plan.prune(), Prune::Probe(2));
+            }
+            RequestKind::Mutate(_) => unreachable!(),
+        }
     }
 }

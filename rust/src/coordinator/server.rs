@@ -40,7 +40,7 @@ use crate::coordinator::request::{
     Mutation, MutationResponse, Query, Request, RequestKind, Response,
 };
 use crate::data::text::{bow_features, HASH_BUCKETS};
-use crate::retrieval::cluster::Prune;
+use crate::retrieval::plan::QueryPlan;
 use crate::retrieval::quant::QuantScheme;
 use crate::runtime::PjrtRuntime;
 use crate::util::rng::Pcg;
@@ -64,11 +64,6 @@ pub struct CoordinatorConfig {
     /// it is admitted anyway (anti-starvation bound of the admission
     /// policy).
     pub mutation_max_defer: Duration,
-    /// Default two-stage pruning for requests that carry no per-request
-    /// `nprobe` override: `None` defers to the chip's own policy
-    /// (`Prune::Default` — exhaustive on a chip without clusters),
-    /// `Some(p)` probes `p` centroids.
-    pub nprobe: Option<usize>,
     pub seed: u64,
 }
 
@@ -80,7 +75,6 @@ impl Default for CoordinatorConfig {
             scheme: QuantScheme::Int8,
             retrieve_batch: 8,
             mutation_max_defer: Duration::from_millis(20),
-            nprobe: None,
             seed: 0xC00D,
         }
     }
@@ -95,10 +89,9 @@ struct Pending {
 struct WorkItem {
     pending: Pending,
     q_int: Vec<i8>,
-    k: usize,
-    /// Pruning policy resolved at ingest (request override, else the
-    /// coordinator default, else the chip's own default).
-    prune: Prune,
+    /// The request's plan, carried verbatim from `submit` (workers
+    /// group runs of equal `(k, prune)` and re-stamp the rng policy).
+    plan: QueryPlan,
     embed_s: f64,
 }
 
@@ -220,25 +213,23 @@ impl Coordinator {
         }
     }
 
-    /// Submit a retrieval request; returns the response channel. Served
-    /// under the configured default pruning policy.
-    pub fn submit(&self, query: Query, k: usize) -> Result<(u64, Receiver<Response>)> {
-        self.submit_opt(query, k, None)
-    }
-
-    /// [`Coordinator::submit`] with a per-request `nprobe` override for
-    /// the two-stage pruned retrieval path (`None` = configured default;
-    /// `Some(p >= n_clusters)` forces the exhaustive path).
-    pub fn submit_opt(
-        &self,
-        query: Query,
-        k: usize,
-        nprobe: Option<usize>,
-    ) -> Result<(u64, Receiver<Response>)> {
+    /// Submit a retrieval request under a [`QueryPlan`]; returns the
+    /// response channel. The plan travels with the request — workers
+    /// group queued requests by its `(k, prune)` pair and dispatch each
+    /// run through the engine's batch path.
+    ///
+    /// **Rng ownership.** The coordinator owns sensing randomness: the
+    /// plan's rng policy is re-stamped per dispatch from the serving
+    /// worker's deterministic stream (seeded by
+    /// [`CoordinatorConfig::seed`]), so identical requests get
+    /// decorrelated, reproducible flips regardless of arrival
+    /// interleaving. Callers that need caller-controlled rng talk to an
+    /// [`Engine`] directly.
+    pub fn submit(&self, query: Query, plan: QueryPlan) -> Result<(u64, Receiver<Response>)> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (resp_tx, resp_rx) = channel();
         let pending = Pending {
-            req: Request { id, kind: RequestKind::Retrieve { query, k, nprobe } },
+            req: Request { id, kind: RequestKind::Retrieve { query, plan } },
             submitted: Instant::now(),
             resp_tx,
         };
@@ -430,20 +421,15 @@ fn flush(
             }
         }
     }
-    // Quantise queries and hand to workers.
+    // Quantise queries and hand to workers, the request's plan riding
+    // along verbatim.
     for (p, emb, embed_s) in ready {
         let q = crate::retrieval::quant::quantize(&emb, 1, emb.len(), cfg.scheme);
-        let (k, nprobe) = match &p.req.kind {
-            RequestKind::Retrieve { k, nprobe, .. } => (*k, *nprobe),
+        let plan = match &p.req.kind {
+            RequestKind::Retrieve { plan, .. } => plan.clone(),
             RequestKind::Mutate(_) => unreachable!(),
         };
-        // Per-request override wins, then the coordinator default, then
-        // the chip's own policy.
-        let prune = match nprobe.or(cfg.nprobe) {
-            Some(p) => Prune::Probe(p),
-            None => Prune::Default,
-        };
-        let item = WorkItem { pending: p, q_int: q.values, k, prune, embed_s };
+        let item = WorkItem { pending: p, q_int: q.values, plan, embed_s };
         if work_tx.send(item).is_err() {
             metrics.record_error();
             drop_inflight(1);
@@ -467,9 +453,9 @@ fn worker_loop(
     loop {
         // Block for one query, drain whatever else is already queued
         // (work-conserving — see `batcher::recv_batch`), then dispatch
-        // runs of equal (k, prune policy) through the engine's batch
-        // path so a pooled engine can pipeline them across the DIRC
-        // cores.
+        // runs of like-planned requests — keyed straight off each
+        // request's plan — through the engine's batch path so a pooled
+        // engine can pipeline them across the DIRC cores.
         let items = {
             let guard = work_rx.lock().unwrap();
             crate::coordinator::batcher::recv_batch(&guard, batch_max)
@@ -477,15 +463,29 @@ fn worker_loop(
         let Some(items) = items else { return };
         let mut items = std::collections::VecDeque::from(items);
         while !items.is_empty() {
-            let k = items[0].k;
-            let prune = items[0].prune;
+            // Group only requests whose plans can honestly share one
+            // batch dispatch: same (k, prune) — the result-shaping
+            // knobs — and same detail/exec, so no request's census
+            // level or execution shape is silently overridden by the
+            // group head's plan.
+            let head = items[0].plan.clone();
             let mut group = Vec::new();
-            while items.front().is_some_and(|it| it.k == k && it.prune == prune) {
+            while items.front().is_some_and(|it| {
+                it.plan.k() == head.k()
+                    && it.plan.prune() == head.prune()
+                    && it.plan.detail() == head.detail()
+                    && it.plan.exec().same_shape(head.exec())
+            }) {
                 group.push(items.pop_front().unwrap());
             }
             let queries: Vec<Vec<i8>> = group.iter().map(|it| it.q_int.clone()).collect();
+            // The coordinator owns sensing rng: re-stamp the group's
+            // plan from this worker's deterministic stream (one draw per
+            // dispatch), so flips are reproducible yet decorrelated
+            // across dispatches and workers.
+            let plan = head.with_seed(rng.next_u64());
             let t0 = Instant::now();
-            let results = engine.retrieve_batch_opt(&queries, k, prune, &mut rng);
+            let results = engine.retrieve_batch(&queries, &plan);
             let retrieve_s = t0.elapsed().as_secs_f64() / group.len() as f64;
             // A short result set would silently hang the dropped clients
             // on their response channels — fail loudly instead.
@@ -494,11 +494,11 @@ fn worker_loop(
                 group.len(),
                 "engine.retrieve_batch broke its one-result-per-query contract"
             );
-            for (item, (topk, stats)) in group.into_iter().zip(results) {
+            for (item, out) in group.into_iter().zip(results) {
                 let resp = Response {
                     id: item.pending.req.id,
-                    topk,
-                    stats,
+                    topk: out.topk,
+                    stats: out.stats,
                     embed_s: item.embed_s,
                     retrieve_s,
                     total_s: item.pending.submitted.elapsed().as_secs_f64(),

@@ -2,27 +2,44 @@
 //! broadcast query, a norm unit, the SRAM result buffer, and the Global
 //! Top-k Comparator — plus the cycle/energy accounting of one query.
 //!
-//! ## Parallel sharded execution
+//! ## Plan-driven execution
 //!
-//! The hardware's defining property — all cores score their document
-//! shards concurrently under the query-stationary dataflow — is mirrored
-//! in the simulator: each core's MAC + sensing-error injection + local
-//! top-k is an independent job ([`DircChip::run_core_query`]), fanned out
-//! over [`crate::util::pool::parallel_map`] by [`DircChip::query_on`] or
-//! over a shared [`crate::util::pool::ThreadPool`] as a queries × cores
-//! job matrix by [`DircChip::query_batch`].
+//! Every retrieval knob — `k`, the [`Prune`] policy, serial vs pooled
+//! execution, the rng policy, the stats detail level — rides in one
+//! validated [`QueryPlan`], and the chip exposes exactly three
+//! execution entry points driven by it:
 //!
-//! **Determinism contract.** Parallel execution is bit-identical to the
-//! serial walk (asserted by golden-vector tests in `rust/tests/`):
+//! * [`DircChip::execute`] — one query, one [`PlanOutput`];
+//! * [`DircChip::execute_batch`] — a batch, bit-identical to the serial
+//!   query stream (under [`Exec::Pool`] it runs as a queries × cores
+//!   job matrix on the shared pool; skipped macros never become jobs);
+//! * [`DircChip::sense_execute`] — sensing + census only (flips, no
+//!   functional compute), the serving engine's half of a query; returns
+//!   the resolved macro mask so the PJRT score pass and the top-k
+//!   filter see the same selection.
+//!
+//! [`DircChip::clean_execute`] is the error-free oracle counterpart
+//! (ideal readout, no rng, no census) under the same plan vocabulary.
+//!
+//! ## Determinism contract
+//!
+//! Execution shape is a throughput knob, never a semantics knob:
+//! results are bit-identical across [`Exec::Serial`] and any
+//! [`Exec::Pool`], at any pool width and arrival order (asserted by the
+//! golden-vector tests in `rust/tests/`):
 //!
 //! 1. every (query, core) pair senses from its own RNG stream,
-//!    [`Pcg::keyed`]`(query_nonce, core)`, so flips never depend on
-//!    scheduling;
-//! 2. per-core statistics merge through associative, commutative folds
-//!    ([`SenseStats::merge`], [`crate::sim::cycles::worst_core`]) and the
-//!    final reduction sorts shards by core index
+//!    [`Pcg::keyed`]`(query_nonce, core)`, with one nonce per query
+//!    from the plan's [`crate::retrieval::plan::RngPolicy`] — flips
+//!    never depend on scheduling;
+//! 2. the macro mask is resolved **before** the nonce and consumes no
+//!    rng, so the nonce stream position is prune-policy-independent,
+//!    and `nprobe >= n_clusters` is bit-identical to [`Prune::None`];
+//! 3. per-core statistics merge through associative, commutative folds
+//!    ([`SenseStats::merge`], [`crate::sim::cycles::worst_core`]) and
+//!    the final reduction sorts shards by core index
 //!    ([`DircChip::finish_query`]);
-//! 3. the global top-k merge breaks score ties by lower doc id
+//! 4. the global top-k merge breaks score ties by lower doc id
 //!    ([`crate::retrieval::topk`]), so duplicate scores cannot reorder
 //!    under concurrency.
 
@@ -39,12 +56,13 @@ use crate::dirc::remap::RemapStrategy;
 use crate::dirc::variation::{ErrorMap, VariationModel};
 use crate::dirc::write::{UpdateCost, WriteModel};
 use crate::retrieval::cluster::{kmeans, Centroids, ClusterPolicy, Prune};
+use crate::retrieval::plan::{Exec, PlanOutput, QueryPlan, StatsDetail};
 use crate::retrieval::quant::Quantized;
 use crate::retrieval::score::{norm_i8, Metric};
 use crate::retrieval::topk::{merge_local, ScoredDoc};
 use crate::sim::cycles::CycleModel;
 use crate::sim::energy::{EnergyEvents, EnergyModel};
-use crate::util::pool::{parallel_map, ThreadPool};
+use crate::util::pool::ThreadPool;
 use crate::util::rng::Pcg;
 
 /// Chip-level configuration.
@@ -397,16 +415,19 @@ impl DircChip {
     }
 
     /// Deterministic per-(query, core) sensing stream: [`Pcg::keyed`] on
-    /// the query nonce and core index. Callers draw one fresh nonce per
-    /// query (as [`DircChip::query_on`] does) to decorrelate queries; the
-    /// derivation itself is pinned by `rust/tests/determinism.rs`.
+    /// the query nonce and core index. Every query gets one fresh nonce
+    /// from its plan's [`crate::retrieval::plan::RngPolicy`] (see
+    /// [`DircChip::execute`]) to decorrelate queries; the derivation
+    /// itself is pinned by `rust/tests/determinism.rs`.
     pub fn core_stream(qnonce: u64, core: usize) -> Pcg {
         Pcg::keyed(qnonce, core as u64)
     }
 
     /// Core `c`'s share of one query: MAC + sensing-error injection +
     /// local top-k, on its own [`Pcg::keyed`] stream. Independent of every
-    /// other core, so it can run as a job on any thread.
+    /// other core, so it can run as a job on any thread. Exposed (with
+    /// [`DircChip::finish_query`]) as the reference primitive the
+    /// golden-vector equivalence tests rebuild the serial walk from.
     pub fn run_core_query(
         &self,
         c: usize,
@@ -415,23 +436,12 @@ impl DircChip {
         k: usize,
         qnonce: u64,
     ) -> CoreOutcome {
-        let core = &self.cores[c];
-        let mut core_rng = Self::core_stream(qnonce, c);
-        let res = core.query(q, q_norm, self.cfg.metric, k, &mut core_rng);
-        CoreOutcome {
-            core: c,
-            local_topk: res.local_topk,
-            used_slots: res.used_slots,
-            max_column_resenses: res.stats.max_column_resenses,
-            n_docs: core.n_docs() as u64,
-            stats: res.stats,
-            skipped: false,
-        }
+        core_query_job(&self.cores[c], c, q, q_norm, self.cfg.metric, k, qnonce)
     }
 
     /// The zero-cost outcome of a macro the cluster prefilter skipped:
     /// no sense pass, no candidates, no cycles, no energy events.
-    fn skipped_outcome(&self, c: usize) -> CoreOutcome {
+    pub fn skipped_outcome(&self, c: usize) -> CoreOutcome {
         CoreOutcome {
             core: c,
             local_topk: Vec::new(),
@@ -447,19 +457,7 @@ impl DircChip {
     /// functional compute). Same RNG stream as [`DircChip::run_core_query`],
     /// so flips are identical for the same `qnonce`.
     pub fn run_core_sense(&self, c: usize, qnonce: u64) -> (Vec<Flip>, CoreOutcome) {
-        let core = &self.cores[c];
-        let mut core_rng = Self::core_stream(qnonce, c);
-        let (flips, stats) = core.macro_().sense(&mut core_rng);
-        let outcome = CoreOutcome {
-            core: c,
-            local_topk: Vec::new(),
-            used_slots: core.used_slots(),
-            max_column_resenses: stats.max_column_resenses,
-            n_docs: core.n_docs() as u64,
-            stats,
-            skipped: false,
-        };
-        (flips, outcome)
+        core_sense_job(&self.cores[c], c, qnonce)
     }
 
     /// Deterministic reduction of per-core shard results: sort by core
@@ -480,9 +478,22 @@ impl DircChip {
     /// contribute zero slots/stats, so the folds are unchanged.
     pub fn finish_query_pruned(
         &self,
+        outcomes: Vec<CoreOutcome>,
+        k: usize,
+        pruned: bool,
+    ) -> (Vec<ScoredDoc>, QueryStats) {
+        self.finish_query_planned(outcomes, k, pruned, StatsDetail::Full)
+    }
+
+    /// [`DircChip::finish_query_pruned`] at an explicit [`StatsDetail`]
+    /// (the plan paths route here; `Counters` skips the cycle/energy
+    /// model assembly).
+    fn finish_query_planned(
+        &self,
         mut outcomes: Vec<CoreOutcome>,
         k: usize,
         pruned: bool,
+        detail: StatsDetail,
     ) -> (Vec<ScoredDoc>, QueryStats) {
         outcomes.sort_by_key(|o| o.core);
         let mut agg = SenseStats::default();
@@ -502,163 +513,143 @@ impl DircChip {
             locals.push(o.local_topk);
         }
         let merged = merge_local(&locals, k);
-        let stats =
-            self.assemble_stats(agg, &used_slots, &stalls, k, docs_scored, sensed, pruned);
+        let stats = self.assemble_stats(
+            agg, &used_slots, &stalls, k, docs_scored, sensed, pruned, detail,
+        );
         (merged, stats)
     }
 
-    /// Sensing + accounting only: returns each core's surviving flips and
-    /// the full query statistics, without computing functional scores.
-    /// The serving engine pairs this with a single PJRT score pass (see
-    /// `coordinator::engine::ServingEngine`), avoiding the duplicate
-    /// clean-score computation `query` would do. Consumes the same rng
-    /// stream as [`DircChip::query`], so flips are identical for a shared
-    /// outer generator.
-    pub fn sense_pass(&self, k: usize, rng: &mut Pcg) -> (Vec<Vec<Flip>>, QueryStats) {
-        self.sense_pass_on(k, rng, 1)
-    }
-
-    /// [`DircChip::sense_pass`] with the per-core jobs fanned out over
-    /// `threads` workers. Bit-identical to the serial pass for any thread
-    /// count; flips are returned in core order.
-    pub fn sense_pass_on(
-        &self,
-        k: usize,
-        rng: &mut Pcg,
-        threads: usize,
-    ) -> (Vec<Vec<Flip>>, QueryStats) {
-        self.sense_pass_masked(k, rng, threads, None)
-    }
-
-    /// [`DircChip::sense_pass_on`] under a per-core macro mask (the
-    /// serving engine's pruned path — it owns the mask because the PJRT
-    /// score pass and the top-k filter must see the same selection).
-    /// Masked-out macros return no flips and cost nothing; `None` is the
-    /// exhaustive pass, bit-identical to [`DircChip::sense_pass`].
-    pub fn sense_pass_masked(
-        &self,
-        k: usize,
-        rng: &mut Pcg,
-        threads: usize,
-        mask: Option<&[bool]>,
-    ) -> (Vec<Vec<Flip>>, QueryStats) {
-        let qnonce = rng.next_u64();
-        let cores: Vec<usize> = (0..self.cores.len()).collect();
-        let results = parallel_map(&cores, threads, |_, &c| match mask {
-            Some(m) if !m[c] => (Vec::new(), self.skipped_outcome(c)),
-            _ => self.run_core_sense(c, qnonce),
-        });
-        let mut per_core_flips = Vec::with_capacity(results.len());
-        let mut outcomes = Vec::with_capacity(results.len());
-        for (flips, outcome) in results {
-            per_core_flips.push(flips);
-            outcomes.push(outcome);
+    /// Resolve the plan's execution shape at the chip layer: the chip
+    /// owns no pool, so [`Exec::Auto`] runs serial here (engines with an
+    /// attached pool substitute it before the plan reaches the chip).
+    fn plan_pool<'a>(&self, plan: &'a QueryPlan) -> Option<&'a Arc<ThreadPool>> {
+        match plan.exec() {
+            Exec::Pool(pool) => Some(pool),
+            Exec::Auto | Exec::Serial => None,
         }
-        let (_, stats) = self.finish_query_pruned(outcomes, k, mask.is_some());
-        (per_core_flips, stats)
     }
 
-    /// Execute one query: broadcast to all cores, local top-k per core,
-    /// global merge; account cycles and energy. Serial reference path —
-    /// equivalent to [`DircChip::query_on`] with one thread. Uses the
-    /// chip's default pruning policy ([`Prune::Default`]): exhaustive on
-    /// a chip without clusters, `cfg.cluster.nprobe` centroids otherwise.
-    pub fn query(&self, q: &[i8], k: usize, rng: &mut Pcg) -> (Vec<ScoredDoc>, QueryStats) {
-        self.query_on(q, k, rng, 1)
-    }
-
-    /// Execute one query with the per-core shard jobs fanned out over
-    /// `threads` workers via [`parallel_map`]. Bit-identical to the serial
-    /// path for any thread count (see the module docs for the contract;
-    /// golden-vector tests in `rust/tests/` pin it).
-    pub fn query_on(
-        &self,
-        q: &[i8],
-        k: usize,
-        rng: &mut Pcg,
-        threads: usize,
-    ) -> (Vec<ScoredDoc>, QueryStats) {
-        self.query_opt(q, k, Prune::Default, rng, threads)
-    }
-
-    /// Execute one query under an explicit [`Prune`] policy: the centroid
-    /// prefilter selects `nprobe` clusters, every macro hosting none of
-    /// them skips its sense pass entirely (the query register is already
-    /// stationary, so a skipped macro is a skipped pass — zero cycles,
-    /// zero energy events), and the skipped senses are accounted in
-    /// [`QueryStats`]. The mask never consumes query RNG, so the caller's
-    /// stream position is policy-independent, and `nprobe >= n_clusters`
-    /// is bit-identical to [`Prune::None`].
-    pub fn query_opt(
-        &self,
-        q: &[i8],
-        k: usize,
-        prune: Prune,
-        rng: &mut Pcg,
-        threads: usize,
-    ) -> (Vec<ScoredDoc>, QueryStats) {
-        assert_eq!(q.len(), self.cfg.dim);
-        let mask = self.macro_mask(q, prune);
-        let qnonce = rng.next_u64();
-        let q_norm = norm_i8(q);
-        let cores: Vec<usize> = (0..self.cores.len()).collect();
-        let outcomes = parallel_map(&cores, threads, |_, &c| match &mask {
-            Some(m) if !m[c] => self.skipped_outcome(c),
-            _ => self.run_core_query(c, q, q_norm, k, qnonce),
-        });
-        self.finish_query_pruned(outcomes, k, mask.is_some())
-    }
-
-    /// Pipeline a batch of queries across the cores as a queries × cores
-    /// job matrix on a shared [`ThreadPool`]: every (query, core) pair is
-    /// one independent job, so a batch keeps all workers busy even when a
-    /// single query cannot (core counts smaller than the pool, stragglers
-    /// on skewed shards). Results are bit-identical to calling
-    /// [`DircChip::query`] once per query with the same `rng`: nonces are
-    /// drawn serially in query order up front, and each query's shards
-    /// reduce through [`DircChip::finish_query`].
+    /// Execute one query under a [`QueryPlan`]: broadcast to the cores
+    /// the plan's centroid prefilter selects (every macro hosting no
+    /// probed cluster skips its sense pass entirely — the query register
+    /// is already stationary, so a skipped macro is a skipped pass: zero
+    /// cycles, zero energy events, accounted in [`QueryStats`]), local
+    /// top-k per sensed core, global merge, cycle/energy census at the
+    /// plan's [`StatsDetail`].
     ///
-    /// `chip` is taken as an `Arc` so the jobs are `'static` for the pool.
-    /// Uses the chip's default pruning policy, like [`DircChip::query`].
-    pub fn query_batch(
-        chip: &std::sync::Arc<DircChip>,
-        pool: &ThreadPool,
-        queries: &[Vec<i8>],
-        k: usize,
-        rng: &mut Pcg,
-    ) -> Vec<(Vec<ScoredDoc>, QueryStats)> {
-        Self::query_batch_opt(chip, pool, queries, k, Prune::Default, rng)
+    /// The mask is resolved before the nonce and consumes no rng, so the
+    /// nonce is prune-policy-independent and `nprobe >= n_clusters` is
+    /// bit-identical to [`Prune::None`]. Under [`Exec::Pool`] the
+    /// per-core jobs fan out on the shared pool — bit-identical to
+    /// [`Exec::Serial`] by the module's determinism contract.
+    pub fn execute(&self, q: &[i8], plan: &QueryPlan) -> PlanOutput {
+        assert_eq!(q.len(), self.cfg.dim);
+        let mask = self.macro_mask(q, plan.prune());
+        let nonce = plan.first_nonce();
+        let q_norm = norm_i8(q);
+        let k = plan.k();
+        let outcomes = match self.plan_pool(plan) {
+            None => (0..self.cores.len())
+                .map(|c| match &mask {
+                    Some(m) if !m[c] => self.skipped_outcome(c),
+                    _ => self.run_core_query(c, q, q_norm, k, nonce),
+                })
+                .collect(),
+            Some(pool) => {
+                self.pooled_core_outcomes(pool, q, q_norm, k, nonce, mask.as_deref())
+            }
+        };
+        let (topk, stats) =
+            self.finish_query_planned(outcomes, k, mask.is_some(), plan.detail());
+        PlanOutput { topk, stats }
     }
 
-    /// [`DircChip::query_batch`] under an explicit [`Prune`] policy.
-    /// Masked-out (query, core) pairs never become pool jobs — the skip
-    /// saves host work exactly where it saves modeled chip work — and the
-    /// result stays bit-identical to a serial loop of
-    /// [`DircChip::query_opt`] calls with the same `rng`.
-    pub fn query_batch_opt(
-        chip: &std::sync::Arc<DircChip>,
+    /// One query's per-core jobs on a shared pool. Jobs capture only the
+    /// `Arc`'d core they score, so no chip handle is needed for their
+    /// `'static` bound; outcomes arrive in any order (the reduction
+    /// sorts by core index).
+    fn pooled_core_outcomes(
+        &self,
         pool: &ThreadPool,
-        queries: &[Vec<i8>],
+        q: &[i8],
+        q_norm: f64,
         k: usize,
-        prune: Prune,
-        rng: &mut Pcg,
-    ) -> Vec<(Vec<ScoredDoc>, QueryStats)> {
-        let n_cores = chip.cores.len();
+        qnonce: u64,
+        mask: Option<&[bool]>,
+    ) -> Vec<CoreOutcome> {
+        let q: Arc<Vec<i8>> = Arc::new(q.to_vec());
+        let metric = self.cfg.metric;
+        let (tx, rx) = std::sync::mpsc::channel::<CoreOutcome>();
+        let mut outcomes = Vec::with_capacity(self.cores.len());
+        for c in 0..self.cores.len() {
+            if let Some(m) = mask {
+                if !m[c] {
+                    outcomes.push(self.skipped_outcome(c));
+                    continue;
+                }
+            }
+            let core = Arc::clone(&self.cores[c]);
+            let q = Arc::clone(&q);
+            let tx = tx.clone();
+            pool.execute(move || {
+                let _ = tx.send(core_query_job(&core, c, &q, q_norm, metric, k, qnonce));
+            });
+        }
+        drop(tx); // the receiver below terminates once every sender drops
+        for out in rx {
+            outcomes.push(out);
+        }
+        assert_eq!(
+            outcomes.len(),
+            self.cores.len(),
+            "a core job died before reporting (pool panic?)"
+        );
+        outcomes
+    }
+
+    /// Execute a batch of queries under one [`QueryPlan`]. Bit-identical
+    /// to the serial query stream: masks are resolved per query (no rng),
+    /// then nonces are drawn in query order from the plan's rng policy —
+    /// query `i` gets exactly the nonce [`DircChip::execute`] would give
+    /// it as the `i`-th call of that stream.
+    ///
+    /// Under [`Exec::Pool`] the batch runs as a queries × cores job
+    /// matrix: every (query, core) pair is one independent job, so a
+    /// batch keeps all pool workers busy even when a single query cannot
+    /// (core counts smaller than the pool, stragglers on skewed shards).
+    /// Masked-out pairs never become jobs — the skip saves host work
+    /// exactly where it saves modeled chip work.
+    pub fn execute_batch(&self, queries: &[Vec<i8>], plan: &QueryPlan) -> Vec<PlanOutput> {
         if queries.is_empty() {
             return Vec::new();
         }
-        // Per-query macro masks (no RNG involved), then nonces in query
-        // order — the exact stream a serial loop of `query_opt` calls
-        // would consume from `rng`.
+        let nonces = plan.nonces(queries.len());
+        let Some(pool) = self.plan_pool(plan) else {
+            // The serial batch IS the serial stream: one execute per
+            // query over the plan's nonce stream (bit-identical to the
+            // matrix path below by the module's determinism contract).
+            return queries
+                .iter()
+                .zip(&nonces)
+                .map(|(q, &nonce)| self.execute(q, &plan.with_nonce(nonce)))
+                .collect();
+        };
+        for q in queries {
+            assert_eq!(q.len(), self.cfg.dim);
+        }
+        // Masks before nonces: the prefilter consumes no rng, so the
+        // nonce stream is prune-policy-independent (the nonces above
+        // depend only on the rng policy).
         let masks: Vec<Option<Vec<bool>>> =
-            queries.iter().map(|q| chip.macro_mask(q, prune)).collect();
-        let prepared: std::sync::Arc<Vec<(Vec<i8>, f64, u64)>> = std::sync::Arc::new(
+            queries.iter().map(|q| self.macro_mask(q, plan.prune())).collect();
+        let k = plan.k();
+        let n_cores = self.cores.len();
+        let metric = self.cfg.metric;
+        let prepared: Arc<Vec<(Vec<i8>, f64, u64)>> = Arc::new(
             queries
                 .iter()
-                .map(|q| {
-                    assert_eq!(q.len(), chip.cfg.dim);
-                    (q.clone(), norm_i8(q), rng.next_u64())
-                })
+                .zip(&nonces)
+                .map(|(q, &nonce)| (q.clone(), norm_i8(q), nonce))
                 .collect(),
         );
         let (tx, rx) = std::sync::mpsc::channel::<(usize, CoreOutcome)>();
@@ -668,17 +659,16 @@ impl DircChip {
             for c in 0..n_cores {
                 if let Some(m) = &masks[qi] {
                     if !m[c] {
-                        per_query[qi].push(chip.skipped_outcome(c));
+                        per_query[qi].push(self.skipped_outcome(c));
                         continue;
                     }
                 }
-                let chip = std::sync::Arc::clone(chip);
-                let prepared = std::sync::Arc::clone(&prepared);
+                let core = Arc::clone(&self.cores[c]);
+                let prepared = Arc::clone(&prepared);
                 let tx = tx.clone();
                 pool.execute(move || {
                     let (q, q_norm, nonce) = &prepared[qi];
-                    let out = chip.run_core_query(c, q, *q_norm, k, *nonce);
-                    let _ = tx.send((qi, out));
+                    let _ = tx.send((qi, core_query_job(&core, c, q, *q_norm, metric, k, *nonce)));
                 });
             }
         }
@@ -693,71 +683,81 @@ impl DircChip {
         per_query
             .into_iter()
             .zip(&masks)
-            .map(|(outcomes, mask)| chip.finish_query_pruned(outcomes, k, mask.is_some()))
+            .map(|(outcomes, mask)| {
+                let (topk, stats) =
+                    self.finish_query_planned(outcomes, k, mask.is_some(), plan.detail());
+                PlanOutput { topk, stats }
+            })
             .collect()
     }
 
-    /// Sense-only pool variant: one query's per-core sensing jobs fanned
-    /// out on a shared [`ThreadPool`] (the serving engine's hot path).
-    /// Bit-identical to [`DircChip::sense_pass`]; flips return in core
-    /// order.
-    pub fn sense_pass_pool(
-        chip: &std::sync::Arc<DircChip>,
-        pool: &ThreadPool,
-        k: usize,
-        rng: &mut Pcg,
-    ) -> (Vec<Vec<Flip>>, QueryStats) {
-        Self::sense_pass_pool_masked(chip, pool, k, rng, None)
-    }
-
-    /// [`DircChip::sense_pass_pool`] under a per-core macro mask (see
-    /// [`DircChip::sense_pass_masked`]); masked-out macros never become
-    /// pool jobs.
-    pub fn sense_pass_pool_masked(
-        chip: &std::sync::Arc<DircChip>,
-        pool: &ThreadPool,
-        k: usize,
-        rng: &mut Pcg,
-        mask: Option<&[bool]>,
-    ) -> (Vec<Vec<Flip>>, QueryStats) {
-        let qnonce = rng.next_u64();
-        let n_cores = chip.cores.len();
-        let (tx, rx) = std::sync::mpsc::channel::<(usize, (Vec<Flip>, CoreOutcome))>();
-        let mut slots: Vec<Option<(Vec<Flip>, CoreOutcome)>> =
-            (0..n_cores).map(|_| None).collect();
-        for c in 0..n_cores {
-            if let Some(m) = mask {
-                if !m[c] {
-                    slots[c] = Some((Vec::new(), chip.skipped_outcome(c)));
-                    continue;
+    /// Sensing + accounting only — the one masked, pool-aware sense
+    /// path: each selected core's surviving flips plus the full query
+    /// census, without computing functional scores. The serving engine
+    /// pairs this with a single PJRT score pass (see
+    /// `coordinator::engine::ServingEngine`); the resolved macro mask is
+    /// returned so the score pass and the top-k filter see exactly the
+    /// selection that sensed. Consumes the plan's nonce stream exactly
+    /// like [`DircChip::execute`], so flips are identical for the same
+    /// plan.
+    pub fn sense_execute(&self, q: &[i8], plan: &QueryPlan) -> SenseOutput {
+        assert_eq!(q.len(), self.cfg.dim);
+        let mask = self.macro_mask(q, plan.prune());
+        let nonce = plan.first_nonce();
+        let n_cores = self.cores.len();
+        let results: Vec<(Vec<Flip>, CoreOutcome)> = match self.plan_pool(plan) {
+            None => (0..n_cores)
+                .map(|c| match &mask {
+                    Some(m) if !m[c] => (Vec::new(), self.skipped_outcome(c)),
+                    _ => self.run_core_sense(c, nonce),
+                })
+                .collect(),
+            Some(pool) => {
+                let (tx, rx) =
+                    std::sync::mpsc::channel::<(usize, (Vec<Flip>, CoreOutcome))>();
+                let mut slots: Vec<Option<(Vec<Flip>, CoreOutcome)>> =
+                    (0..n_cores).map(|_| None).collect();
+                for c in 0..n_cores {
+                    if let Some(m) = &mask {
+                        if !m[c] {
+                            slots[c] = Some((Vec::new(), self.skipped_outcome(c)));
+                            continue;
+                        }
+                    }
+                    let core = Arc::clone(&self.cores[c]);
+                    let tx = tx.clone();
+                    pool.execute(move || {
+                        let _ = tx.send((c, core_sense_job(&core, c, nonce)));
+                    });
                 }
+                drop(tx);
+                for (c, result) in rx {
+                    slots[c] = Some(result);
+                }
+                slots
+                    .into_iter()
+                    .map(|s| s.expect("a core sense job died before reporting (pool panic?)"))
+                    .collect()
             }
-            let chip = std::sync::Arc::clone(chip);
-            let tx = tx.clone();
-            pool.execute(move || {
-                let _ = tx.send((c, chip.run_core_sense(c, qnonce)));
-            });
-        }
-        drop(tx);
-        for (c, result) in rx {
-            slots[c] = Some(result);
-        }
-        let mut per_core_flips = Vec::with_capacity(n_cores);
+        };
+        let mut flips = Vec::with_capacity(n_cores);
         let mut outcomes = Vec::with_capacity(n_cores);
-        for slot in slots {
-            let (flips, outcome) =
-                slot.expect("a core sense job died before reporting (pool panic?)");
-            per_core_flips.push(flips);
-            outcomes.push(outcome);
+        for (f, o) in results {
+            flips.push(f);
+            outcomes.push(o);
         }
-        let (_, stats) = chip.finish_query_pruned(outcomes, k, mask.is_some());
-        (per_core_flips, stats)
+        let (_, stats) =
+            self.finish_query_planned(outcomes, plan.k(), mask.is_some(), plan.detail());
+        SenseOutput { flips, stats, mask }
     }
 
     /// Convert aggregated sense statistics + occupancy into the cycle and
     /// energy census of one query. `sensed` counts the macros that ran;
     /// `pruned` charges the centroid-prefilter overhead (cycles + MACs)
-    /// when the cluster mask was applied.
+    /// when the cluster mask was applied. At [`StatsDetail::Counters`]
+    /// the model assembly is skipped: sense statistics and the
+    /// scored/sensed/skipped counters stay exact, the cycle/energy/
+    /// latency fields read zero.
     #[allow(clippy::too_many_arguments)]
     fn assemble_stats(
         &self,
@@ -768,7 +768,20 @@ impl DircChip {
         docs_scored: u64,
         sensed: usize,
         pruned: bool,
+        detail: StatsDetail,
     ) -> QueryStats {
+        if detail == StatsDetail::Counters {
+            return QueryStats {
+                sense: agg,
+                cycles: 0,
+                work_cycles: 0,
+                macros_sensed: sensed as u32,
+                macros_skipped: (used_slots.len() - sensed) as u32,
+                latency_s: 0.0,
+                energy_j: 0.0,
+                docs_scored,
+            };
+        }
         let n_clusters = if pruned {
             self.clusters.as_ref().map_or(0, |ci| ci.n_clusters())
         } else {
@@ -820,19 +833,19 @@ impl DircChip {
         }
     }
 
-    /// Clean (error-free) global top-k — the retrieval-precision oracle.
-    /// Always exhaustive: the oracle ranks the whole corpus.
-    pub fn clean_query(&self, q: &[i8], k: usize) -> Vec<ScoredDoc> {
-        self.clean_query_opt(q, k, Prune::None)
-    }
-
-    /// Clean scores under a [`Prune`] policy: the error-free counterpart
-    /// of [`DircChip::query_opt`], restricted to the macros the centroid
-    /// prefilter selects. Used by the evaluation harness to separate the
-    /// pruning recall loss from the sensing-error recall loss.
-    pub fn clean_query_opt(&self, q: &[i8], k: usize, prune: Prune) -> Vec<ScoredDoc> {
+    /// Clean (error-free) global top-k under a [`QueryPlan`] — the
+    /// retrieval-precision oracle, ideal readout (no rng, no census).
+    /// Only the plan's `k` and `prune` apply: under [`Prune::None`] the
+    /// oracle ranks the whole corpus; under a probing policy it is
+    /// restricted to exactly the macros [`DircChip::execute`] would
+    /// sense (the regression net pins clean-pruned == clean-exhaustive
+    /// restricted to the probed macros), separating the pruning recall
+    /// loss from the sensing-error recall loss.
+    pub fn clean_execute(&self, q: &[i8], plan: &QueryPlan) -> Vec<ScoredDoc> {
+        assert_eq!(q.len(), self.cfg.dim);
         let q_norm = norm_i8(q);
-        let mask = self.macro_mask(q, prune);
+        let k = plan.k();
+        let mask = self.macro_mask(q, plan.prune());
         let locals: Vec<Vec<ScoredDoc>> = self
             .cores
             .iter()
@@ -857,6 +870,59 @@ impl DircChip {
             .collect();
         merge_local(&locals, k)
     }
+}
+
+/// What [`DircChip::sense_execute`] returns: per-core surviving flips
+/// (core order; skipped macros contribute an empty vector), the query
+/// census, and the resolved macro mask (`None` = exhaustive) — the same
+/// selection the functional score pass and top-k filter must apply.
+#[derive(Debug, Clone)]
+pub struct SenseOutput {
+    pub flips: Vec<Vec<Flip>>,
+    pub stats: QueryStats,
+    pub mask: Option<Vec<bool>>,
+}
+
+/// One core's share of a query as a free function over its `Arc`'d
+/// storage: pooled execution ships this as a `'static` job capturing
+/// only the [`DircCore`] it scores (never a chip handle).
+fn core_query_job(
+    core: &DircCore,
+    c: usize,
+    q: &[i8],
+    q_norm: f64,
+    metric: Metric,
+    k: usize,
+    qnonce: u64,
+) -> CoreOutcome {
+    let mut core_rng = DircChip::core_stream(qnonce, c);
+    let res = core.query(q, q_norm, metric, k, &mut core_rng);
+    CoreOutcome {
+        core: c,
+        local_topk: res.local_topk,
+        used_slots: res.used_slots,
+        max_column_resenses: res.stats.max_column_resenses,
+        n_docs: core.n_docs() as u64,
+        stats: res.stats,
+        skipped: false,
+    }
+}
+
+/// Sensing-only counterpart of [`core_query_job`] (same rng stream, so
+/// flips are identical for the same nonce).
+fn core_sense_job(core: &DircCore, c: usize, qnonce: u64) -> (Vec<Flip>, CoreOutcome) {
+    let mut core_rng = DircChip::core_stream(qnonce, c);
+    let (flips, stats) = core.macro_().sense(&mut core_rng);
+    let outcome = CoreOutcome {
+        core: c,
+        local_topk: Vec::new(),
+        used_slots: core.used_slots(),
+        max_column_resenses: stats.max_column_resenses,
+        n_docs: core.n_docs() as u64,
+        stats,
+        skipped: false,
+    };
+    (flips, outcome)
 }
 
 /// One document entering the chip through the online-ingest path:
@@ -1246,12 +1312,17 @@ mod tests {
         (DircChip::build(cfg, &db), fp)
     }
 
+    fn oracle(k: usize) -> QueryPlan {
+        QueryPlan::topk(k).prune(Prune::None).build().unwrap()
+    }
+
     #[test]
     fn query_returns_k_sorted_unique() {
         let (chip, _) = build(600, 128, 4, true);
         let mut rng = Pcg::new(1);
         let q: Vec<i8> = (0..128).map(|_| rng.int_in(-128, 127) as i8).collect();
-        let (top, stats) = chip.query(&q, 10, &mut rng);
+        let plan = QueryPlan::topk(10).stream(&mut rng).build().unwrap();
+        let PlanOutput { topk: top, stats } = chip.execute(&q, &plan);
         assert_eq!(top.len(), 10);
         for w in top.windows(2) {
             assert!(w[0].score >= w[1].score);
@@ -1265,26 +1336,48 @@ mod tests {
     }
 
     #[test]
-    fn parallel_query_matches_serial_in_module() {
+    fn pooled_execute_matches_serial_in_module() {
         // Module-level smoke check; exhaustive golden-vector coverage
         // (seeds x core counts x tie-heavy data) lives in rust/tests/.
         let (chip, _) = build(600, 128, 4, true);
+        let pool = Arc::new(ThreadPool::new(4));
         for seed in 0..3u64 {
             let mut rng = Pcg::new(40 + seed);
             let q: Vec<i8> = (0..128).map(|_| rng.int_in(-128, 127) as i8).collect();
-            let mut r1 = Pcg::new(seed);
-            let mut r2 = Pcg::new(seed);
-            let (top_s, stats_s) = chip.query(&q, 10, &mut r1);
-            let (top_p, stats_p) = chip.query_on(&q, 10, &mut r2, 4);
-            assert_eq!(top_s, top_p);
-            assert_eq!(stats_s.sense, stats_p.sense);
-            assert_eq!(stats_s.cycles, stats_p.cycles);
-            assert_eq!(stats_s.energy_j.to_bits(), stats_p.energy_j.to_bits());
+            let serial = QueryPlan::topk(10).seed(seed).serial().build().unwrap();
+            let pooled = QueryPlan::topk(10).seed(seed).pool(Arc::clone(&pool)).build().unwrap();
+            let s = chip.execute(&q, &serial);
+            let p = chip.execute(&q, &pooled);
+            assert_eq!(s.topk, p.topk);
+            assert_eq!(s.stats.sense, p.stats.sense);
+            assert_eq!(s.stats.cycles, p.stats.cycles);
+            assert_eq!(s.stats.energy_j.to_bits(), p.stats.energy_j.to_bits());
         }
     }
 
     #[test]
-    fn clean_query_finds_planted_neighbour() {
+    fn counters_detail_keeps_counts_and_zeroes_models() {
+        let (chip, _) = build(400, 128, 4, true);
+        let mut rng = Pcg::new(8);
+        let q: Vec<i8> = (0..128).map(|_| rng.int_in(-128, 127) as i8).collect();
+        let full = chip.execute(&q, &QueryPlan::topk(10).seed(4).build().unwrap());
+        let lean = chip.execute(
+            &q,
+            &QueryPlan::topk(10).seed(4).detail(StatsDetail::Counters).build().unwrap(),
+        );
+        assert_eq!(full.topk, lean.topk, "detail level must not change results");
+        assert_eq!(full.stats.sense, lean.stats.sense);
+        assert_eq!(full.stats.docs_scored, lean.stats.docs_scored);
+        assert_eq!(full.stats.macros_sensed, lean.stats.macros_sensed);
+        assert_eq!(lean.stats.cycles, 0);
+        assert_eq!(lean.stats.work_cycles, 0);
+        assert_eq!(lean.stats.latency_s, 0.0);
+        assert_eq!(lean.stats.energy_j, 0.0);
+        assert!(full.stats.cycles > 0 && full.stats.energy_j > 0.0);
+    }
+
+    #[test]
+    fn clean_execute_finds_planted_neighbour() {
         let (chip, fp) = build(400, 128, 4, true);
         // Query = slightly perturbed copy of doc 123.
         let mut rng = Pcg::new(2);
@@ -1293,7 +1386,7 @@ mod tests {
             .map(|j| fp[123 * dim + j] + 0.02 * rng.normal() as f32)
             .collect();
         let qq = quantize(&qf, 1, dim, QuantScheme::Int8);
-        let top = chip.clean_query(qq.row(0), 3);
+        let top = chip.clean_execute(qq.row(0), &oracle(3));
         assert_eq!(top[0].doc_id, 123);
     }
 
@@ -1302,8 +1395,10 @@ mod tests {
         let (chip, _) = build(512, 128, 4, true);
         let mut rng = Pcg::new(3);
         let q: Vec<i8> = (0..128).map(|_| rng.int_in(-128, 127) as i8).collect();
-        let clean: Vec<u64> = chip.clean_query(&q, 10).iter().map(|d| d.doc_id).collect();
-        let (noisy, _) = chip.query(&q, 10, &mut rng);
+        let clean: Vec<u64> =
+            chip.clean_execute(&q, &oracle(10)).iter().map(|d| d.doc_id).collect();
+        let plan = QueryPlan::topk(10).stream(&mut rng).build().unwrap();
+        let noisy = chip.execute(&q, &plan).topk;
         let noisy_ids: Vec<u64> = noisy.iter().map(|d| d.doc_id).collect();
         let overlap = clean.iter().filter(|id| noisy_ids.contains(id)).count();
         assert!(overlap >= 8, "overlap {overlap}/10");
@@ -1325,7 +1420,8 @@ mod tests {
         assert_eq!(cfg.capacity_docs(), 8192);
         let chip = DircChip::build(cfg, &db);
         let q: Vec<i8> = (0..dim).map(|_| rng.int_in(-128, 127) as i8).collect();
-        let (_, stats) = chip.query(&q, 10, &mut rng);
+        let plan = QueryPlan::topk(10).stream(&mut rng).build().unwrap();
+        let stats = chip.execute(&q, &plan).stats;
         let lat_us = stats.latency_s * 1e6;
         let e_uj = stats.energy_j * 1e6;
         assert!((5.0..6.3).contains(&lat_us), "latency {lat_us} µs");
@@ -1347,8 +1443,11 @@ mod tests {
         };
         let mut rng = Pcg::new(6);
         let q: Vec<i8> = (0..dim).map(|_| rng.int_in(-128, 127) as i8).collect();
-        let full = mk(8192).query(&q, 10, &mut rng).1;
-        let half = mk(4096).query(&q, 10, &mut rng).1;
+        let base = QueryPlan::topk(10).build().unwrap();
+        // Streaming contract: each call hoists the next draw of the
+        // shared rng, exactly like the pre-plan API consumed it.
+        let full = mk(8192).execute(&q, &base.with_stream(&mut rng)).stats;
+        let half = mk(4096).execute(&q, &base.with_stream(&mut rng)).stats;
         let ratio = half.latency_s / full.latency_s;
         assert!((0.45..0.75).contains(&ratio), "latency ratio {ratio}");
         let eratio = half.energy_j / full.energy_j;
@@ -1401,7 +1500,7 @@ mod tests {
     }
 
     #[test]
-    fn clustered_clean_query_matches_exhaustive_layout() {
+    fn clustered_clean_execute_matches_exhaustive_layout() {
         // The cluster permutation moves slots, not results: clean top-k
         // (ids and score bits) is identical to an unclustered build of
         // the same database.
@@ -1428,8 +1527,8 @@ mod tests {
         let mut qrng = Pcg::new(23);
         for _ in 0..5 {
             let q: Vec<i8> = (0..128).map(|_| qrng.int_in(-128, 127) as i8).collect();
-            let a = plain.clean_query(&q, 10);
-            let b = clustered.clean_query(&q, 10);
+            let a = plain.clean_execute(&q, &oracle(10));
+            let b = clustered.clean_execute(&q, &oracle(10));
             assert_eq!(a, b);
         }
     }
@@ -1441,14 +1540,13 @@ mod tests {
         let q: Vec<i8> = (0..128).map(|_| rng.int_in(-128, 127) as i8).collect();
         assert!(chip.macro_mask(&q, Prune::Probe(8)).is_none());
         assert!(chip.macro_mask(&q, Prune::None).is_none());
-        let mut r1 = Pcg::new(7);
-        let mut r2 = Pcg::new(7);
-        let (top_full, stats_full) = chip.query_opt(&q, 10, Prune::None, &mut r1, 1);
-        let (top_all, stats_all) = chip.query_opt(&q, 10, Prune::Probe(8), &mut r2, 1);
-        assert_eq!(top_full, top_all);
-        assert_eq!(stats_full.cycles, stats_all.cycles);
-        assert_eq!(stats_full.energy_j.to_bits(), stats_all.energy_j.to_bits());
-        assert_eq!(stats_full.macros_skipped, 0);
+        let base = QueryPlan::topk(10).seed(7).build().unwrap();
+        let full = chip.execute(&q, &base.with_prune(Prune::None).unwrap());
+        let all = chip.execute(&q, &base.with_prune(Prune::Probe(8)).unwrap());
+        assert_eq!(full.topk, all.topk);
+        assert_eq!(full.stats.cycles, all.stats.cycles);
+        assert_eq!(full.stats.energy_j.to_bits(), all.stats.energy_j.to_bits());
+        assert_eq!(full.stats.macros_skipped, 0);
     }
 
     #[test]
@@ -1456,12 +1554,12 @@ mod tests {
         let chip = build_clustered(400, 128, 4, 8, 4);
         let mut rng = Pcg::new(31);
         let q: Vec<i8> = (0..128).map(|_| rng.int_in(-128, 127) as i8).collect();
-        let mut r1 = Pcg::new(3);
-        let mut r2 = Pcg::new(3);
-        let (_, full) = chip.query_opt(&q, 10, Prune::None, &mut r1, 1);
-        let (top, pruned) = chip.query_opt(&q, 10, Prune::Probe(1), &mut r2, 1);
-        // Caller rng position is policy-independent.
-        assert_eq!(r1.next_u64(), r2.next_u64());
+        // Same seed -> same nonce stream position under every prune
+        // policy (the mask consumes no rng).
+        let base = QueryPlan::topk(10).seed(3).build().unwrap();
+        let full = chip.execute(&q, &base.with_prune(Prune::None).unwrap()).stats;
+        let out = chip.execute(&q, &base.with_prune(Prune::Probe(1)).unwrap());
+        let (top, pruned) = (out.topk, out.stats);
         assert!(!top.is_empty());
         assert_eq!(pruned.macros_sensed + pruned.macros_skipped, 4);
         if pruned.macros_skipped > 0 {

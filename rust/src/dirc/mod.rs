@@ -37,7 +37,10 @@ pub mod sensing;
 pub mod variation;
 pub mod write;
 
-pub use chip::{ChipConfig, ClusterIndex, DircChip, DocPayload, MutationStats, QueryStats};
+pub use chip::{
+    ChipConfig, ClusterIndex, CoreOutcome, DircChip, DocPayload, MutationStats, QueryStats,
+    SenseOutput,
+};
 pub use device::{MlcLevel, ReramDevice};
 pub use remap::RemapStrategy;
 pub use variation::{ErrorMap, VariationModel};

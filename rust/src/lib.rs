@@ -16,27 +16,60 @@
 //!   artifacts, and the serving coordinator. Python never runs at serve
 //!   time.
 //!
+//! ## The `QueryPlan` execution API
+//!
+//! Every retrieval in the system is driven by one validated
+//! [`retrieval::plan::QueryPlan`] — `k`, the [`retrieval::Prune`]
+//! policy (with per-plan `nprobe` override), the execution shape
+//! ([`retrieval::plan::Exec`]: serial, or a shared
+//! [`util::pool::ThreadPool`]), the rng policy
+//! ([`retrieval::plan::RngPolicy`], a nonce-based contract), and the
+//! stats detail level. Each layer exposes exactly one single-query and
+//! one batch entry point consuming it:
+//!
+//! * chip — [`dirc::chip::DircChip::execute`] /
+//!   [`dirc::chip::DircChip::execute_batch`] (plus
+//!   [`dirc::chip::DircChip::sense_execute`] for the serving engine's
+//!   sense-only half and [`dirc::chip::DircChip::clean_execute`] for
+//!   the error-free oracle);
+//! * engine — [`coordinator::engine::Engine::retrieve`] /
+//!   [`coordinator::engine::Engine::retrieve_batch`];
+//! * coordinator — [`coordinator::server::Coordinator::submit`], whose
+//!   requests carry the plan end-to-end (workers group queued requests
+//!   for batched dispatch keyed on the plan: `(k, prune)` plus
+//!   matching detail/exec).
+//!
+//! ```no_run
+//! # use dirc_rag::retrieval::{Prune, QueryPlan};
+//! let plan = QueryPlan::topk(10).prune(Prune::Probe(4)).seed(7).build()?;
+//! // chip.execute(&q, &plan) / engine.retrieve(&q, &plan) /
+//! // coord.submit(query, plan)
+//! # Ok::<(), dirc_rag::retrieval::PlanError>(())
+//! ```
+//!
 //! ## Parallel query-stationary dataflow
 //!
 //! The paper's throughput claim (131 TOPS, 5.6 µs per 4 MB retrieval)
 //! rests on all 16 DIRC cores scoring their document shards
 //! *concurrently*. The simulator mirrors that: each core's MAC +
 //! sensing-error injection + local top-k is an independent job, fanned
-//! out over [`util::pool::parallel_map`] for a single query
-//! ([`dirc::chip::DircChip::query_on`]) or over a shared
-//! [`util::pool::ThreadPool`] as a queries × cores job matrix for a
-//! batch ([`dirc::chip::DircChip::query_batch`], reached through
-//! [`coordinator::engine::Engine::retrieve_batch`] from the serving
-//! workers).
+//! out over the plan's pool — a whole batch becomes a queries × cores
+//! job matrix, reached through the engines' batch path from the serving
+//! workers.
 //!
-//! **Determinism contract** (pinned by `rust/tests/parallel.rs` and
-//! `rust/tests/determinism.rs`): parallel execution is bit-identical to
-//! the serial walk because (1) every (query, core) pair senses from its
-//! own split RNG stream, [`util::rng::Pcg::keyed`]`(query_nonce, core)`;
-//! (2) per-core statistics merge through associative, commutative folds
-//! ([`dirc::macro_::SenseStats::merge`], [`sim::cycles::worst_core`]);
-//! and (3) the global top-k comparator breaks score ties by lower doc id,
-//! so duplicate scores cannot reorder under concurrency.
+//! **Determinism contract** (pinned by `rust/tests/plan_api.rs`,
+//! `rust/tests/parallel.rs` and `rust/tests/determinism.rs`): execution
+//! shape is a throughput knob, never a semantics knob — results are
+//! bit-identical across serial and pooled plans because (1) every
+//! (query, core) pair senses from its own split RNG stream,
+//! [`util::rng::Pcg::keyed`]`(query_nonce, core)`, with one nonce per
+//! query from the plan's rng policy; (2) the centroid prefilter mask is
+//! resolved before the nonce and consumes no rng, so the nonce stream
+//! is prune-policy-independent; (3) per-core statistics merge through
+//! associative, commutative folds ([`dirc::macro_::SenseStats::merge`],
+//! [`sim::cycles::worst_core`]); and (4) the global top-k comparator
+//! breaks score ties by lower doc id, so duplicate scores cannot
+//! reorder under concurrency.
 //!
 //! ## Online corpus ingest
 //!
@@ -64,10 +97,10 @@
 //! build-time k-means assigns every document a cluster,
 //! [`dirc::chip::DircChip::build`] lays documents out
 //! cluster-contiguous, and a query probes its top-`nprobe` centroids and
-//! skips every macro hosting none of them
-//! ([`dirc::chip::DircChip::query_opt`] and the [`retrieval::Prune`]
-//! policy, threaded through both engines, the coordinator's per-request
-//! `nprobe` override, and the `eval`/`serve` CLI). Skipped senses are
+//! skips every macro hosting none of them (the [`retrieval::Prune`]
+//! policy of its [`retrieval::plan::QueryPlan`], threaded through both
+//! engines, the per-request plan of the coordinator, and the
+//! `eval`/`serve` CLI). Skipped senses are
 //! accounted by [`sim::cycles`]/[`sim::energy`];
 //! `nprobe = n_clusters` is bit-identical to the exhaustive path, and
 //! `rust/tests/precision_regression.rs` gates pruned P@{1,5,10} within
@@ -86,7 +119,8 @@
 //!   error detection and error-aware bit remapping.
 //! * [`sim`] — cycle-accurate query-stationary dataflow and energy/area
 //!   models (Table I derivations).
-//! * [`retrieval`] — quantisation, scoring references, top-k machinery.
+//! * [`retrieval`] — quantisation, scoring references, top-k machinery,
+//!   and the [`retrieval::plan`] execution currency.
 //! * [`runtime`] — PJRT client wrapper: artifact registry, executable
 //!   cache, typed execution.
 //! * [`coordinator`] — the serving system: router, batcher, worker pool,

@@ -26,11 +26,10 @@ use dirc_rag::dirc::{DircChip, RemapStrategy};
 use dirc_rag::eval::evaluate;
 use dirc_rag::retrieval::quant::{quantize, QuantScheme};
 use dirc_rag::retrieval::score::Metric;
-use dirc_rag::retrieval::Prune;
+use dirc_rag::retrieval::{Prune, QueryPlan};
 use dirc_rag::runtime::PjrtRuntime;
 use dirc_rag::sim::ChipSpec;
 use dirc_rag::util::cli::Command;
-use dirc_rag::util::rng::Pcg;
 
 fn cli() -> Command {
     Command::new("dirc-rag", "DIRC-RAG edge retrieval accelerator (reproduction)")
@@ -60,7 +59,7 @@ fn cli() -> Command {
                 .opt("workers", "0", "retrieval worker threads (0 = config)")
                 .opt("config", "", "TOML config overlay (configs/*.toml)")
                 .opt("nprobe", "0", "two-stage pruning default (0 = chip policy)")
-                .opt("k", "5", "top-k"),
+                .opt("k", "0", "top-k (0 = serving.k from the config)"),
         )
         .sub(
             Command::new("ingest", "online corpus-ingest demo (no PJRT needed)")
@@ -70,7 +69,7 @@ fn cli() -> Command {
                 .opt("adds", "48", "documents added during the churn")
                 .opt("updates", "48", "documents re-programmed in place")
                 .opt("deletes", "24", "documents tombstoned")
-                .opt("k", "5", "top-k")
+                .opt("k", "0", "top-k (0 = serving.k from the config)")
                 .opt("corner", "1.0", "process-corner noise multiplier")
                 .opt("config", "", "TOML config overlay (configs/*.toml)"),
         )
@@ -175,28 +174,42 @@ fn cmd_eval(sub: &dirc_rag::util::cli::Parsed) -> Result<()> {
     };
     let chip = DircChip::build(cfg, &db);
 
+    // Quantise the query stream once; both evaluation arms share it.
+    let queries: Vec<Vec<i8>> = (0..n_queries)
+        .map(|qi| quantize(ds.query(qi), 1, ds.dim, scheme).values)
+        .collect();
+
     // One evaluation pass under a pruning policy, accumulating the
     // modeled hardware accounting alongside precision (errors path only;
-    // the clean path has no hardware census).
+    // the clean path has no hardware census). Seeded plan: the whole
+    // sweep is reproducible, and both arms draw identical nonce streams
+    // so their flips differ only by the candidate restriction.
     let run = |prune: Prune| {
-        let mut rng = Pcg::new(7);
-        let acc = std::cell::RefCell::new((0u64, 0u64, 0.0f64, 0.0f64, 0u64));
-        let report = evaluate(n_queries, &ds.qrels[..n_queries], |qi| {
-            let qq = quantize(ds.query(qi), 1, ds.dim, scheme);
-            if with_errors {
-                let (ranked, stats) = chip.query_opt(&qq.values, 5, prune, &mut rng, 1);
-                let mut a = acc.borrow_mut();
-                a.0 += stats.work_cycles;
-                a.1 += stats.cycles;
-                a.2 += stats.energy_j;
-                a.3 += stats.latency_s;
-                a.4 += stats.macros_sensed as u64;
-                ranked
-            } else {
-                chip.clean_query_opt(&qq.values, 5, prune)
+        let plan = QueryPlan::topk(5)
+            .prune(prune)
+            .seed(7)
+            .corpus_hint(ds.n_docs)
+            .build()
+            .expect("eval plan");
+        if with_errors {
+            let outs = chip.execute_batch(&queries, &plan);
+            let mut acc = (0u64, 0u64, 0.0f64, 0.0f64, 0u64);
+            for out in &outs {
+                acc.0 += out.stats.work_cycles;
+                acc.1 += out.stats.cycles;
+                acc.2 += out.stats.energy_j;
+                acc.3 += out.stats.latency_s;
+                acc.4 += out.stats.macros_sensed as u64;
             }
-        });
-        (report, acc.into_inner())
+            let report =
+                evaluate(n_queries, &ds.qrels[..n_queries], |qi| outs[qi].topk.clone());
+            (report, acc)
+        } else {
+            let report = evaluate(n_queries, &ds.qrels[..n_queries], |qi| {
+                chip.clean_execute(&queries[qi], &plan)
+            });
+            (report, (0u64, 0u64, 0.0f64, 0.0f64, 0u64))
+        }
     };
 
     let (report, full_acc) = run(Prune::None);
@@ -248,7 +261,6 @@ fn cmd_serve(sub: &dirc_rag::util::cli::Parsed) -> Result<()> {
 
     let n_docs = sub.get_usize("docs")?;
     let n_queries = sub.get_usize("queries")?;
-    let k = sub.get_usize("k")?;
 
     // Layered config: configs/default.toml <- --config <- flags.
     let overlay = Some(sub.get("config")?).filter(|s| !s.is_empty());
@@ -258,10 +270,19 @@ fn cmd_serve(sub: &dirc_rag::util::cli::Parsed) -> Result<()> {
     if workers > 0 {
         coord_cfg.workers = workers;
     }
+    // The serving QueryPlan template: [serving] knobs from the layered
+    // config, per-run --nprobe/--k flags layered on top (0 = defer to
+    // the config, like --workers).
+    let mut plan = configfile::query_plan(&file_cfg)?;
+    let k_flag = sub.get_usize("k")?;
+    if k_flag > 0 {
+        plan = plan.with_k(k_flag)?;
+    }
     let nprobe = sub.get_usize("nprobe")?;
     if nprobe > 0 {
-        coord_cfg.nprobe = Some(nprobe);
+        plan = plan.with_prune(Prune::Probe(nprobe))?;
     }
+    let k = plan.k();
 
     let runtime = Arc::new(PjrtRuntime::from_default_artifacts()?);
     let corpus = TextCorpus::generate(&TextParams {
@@ -302,7 +323,10 @@ fn cmd_serve(sub: &dirc_rag::util::cli::Parsed) -> Result<()> {
     eprintln!("serving {n_queries} token queries...");
     let mut rxs = Vec::new();
     for q in 0..n_queries {
-        let (_, rx) = coord.submit(Query::Tokens(corpus.queries[q % corpus.queries.len()].clone()), k)?;
+        let (_, rx) = coord.submit(
+            Query::Tokens(corpus.queries[q % corpus.queries.len()].clone()),
+            plan.clone(),
+        )?;
         rxs.push((q, rx));
     }
     let mut hits = 0usize;
@@ -332,7 +356,7 @@ fn cmd_ingest(sub: &dirc_rag::util::cli::Parsed) -> Result<()> {
     let adds = sub.get_usize("adds")?;
     let updates = sub.get_usize("updates")?;
     let deletes = sub.get_usize("deletes")?;
-    let k = sub.get_usize("k")?;
+    let k_flag = sub.get_usize("k")?;
     let corner = sub.get_f64("corner")?;
 
     let overlay = Some(sub.get("config")?).filter(|s| !s.is_empty());
@@ -383,10 +407,18 @@ fn cmd_ingest(sub: &dirc_rag::util::cli::Parsed) -> Result<()> {
     let engine = Arc::new(SimEngine::with_pool(chip_cfg, &db, Some(pool)));
     let coord = dirc_rag::coordinator::Coordinator::start_sim(engine, coord_cfg);
 
+    // Serving plan template from the layered config; --k layers on top
+    // (0 = defer to serving.k).
+    let mut plan = configfile::query_plan(&file_cfg)?;
+    if k_flag > 0 {
+        plan = plan.with_k(k_flag)?;
+    }
+    let k = plan.k();
     let run_queries = |label: &str| -> Result<f64> {
         let mut rxs = Vec::new();
         for q in 0..n_queries {
-            let (_, rx) = coord.submit(Query::Embedding(ds.query(q).to_vec()), k)?;
+            let (_, rx) =
+                coord.submit(Query::Embedding(ds.query(q).to_vec()), plan.clone())?;
             rxs.push((q, rx));
         }
         let mut hits = 0usize;

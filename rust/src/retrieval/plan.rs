@@ -1,0 +1,571 @@
+//! The [`QueryPlan`] — the single execution currency of the retrieval
+//! stack.
+//!
+//! Four PRs of feature growth (thread pooling, cluster pruning,
+//! batching, per-request `nprobe`) each added method variants at the
+//! chip, engine and coordinator layers, leaving a combinatorial API
+//! surface. This module collapses that matrix: **every knob of one
+//! retrieval rides in one validated plan object**, and each layer
+//! exposes exactly one single-query and one batch entry point driven by
+//! it — [`crate::dirc::chip::DircChip::execute`] /
+//! [`crate::dirc::chip::DircChip::execute_batch`],
+//! [`crate::coordinator::engine::Engine::retrieve`] /
+//! [`crate::coordinator::engine::Engine::retrieve_batch`], and
+//! [`crate::coordinator::server::Coordinator::submit`].
+//!
+//! ```no_run
+//! # use dirc_rag::retrieval::plan::{QueryPlan, StatsDetail};
+//! # use dirc_rag::retrieval::Prune;
+//! let plan = QueryPlan::topk(10)       // top-k (validated: k >= 1)
+//!     .prune(Prune::Probe(4))          // per-plan nprobe override
+//!     .seed(7)                         // deterministic rng policy
+//!     .detail(StatsDetail::Full)       // cycle/energy census level
+//!     .build()
+//!     .expect("k >= 1, nprobe >= 1");
+//! # let _ = plan;
+//! ```
+//!
+//! ## The nonce-based rng contract
+//!
+//! Sensing-error injection is the only stochastic element of a query,
+//! and it is keyed entirely by one `u64` **query nonce**: core `c`
+//! senses from [`crate::util::rng::Pcg::keyed`]`(nonce, c)`. The plan's
+//! [`RngPolicy`] says where nonces come from:
+//!
+//! * [`RngPolicy::Seeded`]`(s)` — the call draws its nonces from
+//!   `Pcg::new(s)`, one per query in order. This is bit-identical to
+//!   the pre-plan API invoked with a fresh `&mut Pcg::new(s)`, for a
+//!   single query and for a whole batch (a batch has always equalled
+//!   the serial query stream).
+//! * [`RngPolicy::Nonce`]`(x)` — the *streaming* contract: a caller
+//!   that owns a long-lived `Pcg` hoists one draw into the plan
+//!   ([`PlanBuilder::stream`] / [`QueryPlan::with_stream`], which take
+//!   `rng.next_u64()`), and a single-query call uses `x` verbatim —
+//!   exactly the draw the pre-plan API would have consumed. A batch
+//!   under `Nonce(x)` uses `x` for query 0 and continues with
+//!   `Pcg::new(x)` draws for the rest.
+//!
+//! Two invariants hold under every policy (pinned by
+//! `rust/tests/plan_api.rs`):
+//!
+//! 1. **mask before nonce** — the centroid prefilter mask is resolved
+//!    without consuming any rng, so the nonce stream position is
+//!    plan-(prune-)independent: two plans differing only in `prune`
+//!    produce bit-identical flips on the cores both sense;
+//! 2. **one nonce per query** — regardless of `exec`, `detail` or how
+//!    many macros the mask skips.
+
+use std::fmt;
+use std::sync::Arc;
+
+use crate::dirc::chip::QueryStats;
+use crate::retrieval::cluster::{ClusterPolicy, Prune};
+use crate::retrieval::topk::ScoredDoc;
+use crate::util::pool::ThreadPool;
+use crate::util::rng::Pcg;
+
+/// Hard cap on the centroid count a plan/config may ask for (a 4 MB
+/// chip never usefully exceeds it, and the prefilter cost is linear in
+/// it). Shared by [`ClusterPolicy::validate`] and the config binding.
+pub const MAX_CLUSTERS: usize = 4096;
+
+/// How a plan's per-core shard jobs are scheduled.
+///
+/// Results are **bit-identical** across all variants — execution shape
+/// is a throughput knob, never a semantics knob (the determinism
+/// contract in [`crate::dirc::chip`]).
+#[derive(Clone, Default)]
+pub enum Exec {
+    /// Defer to the executing layer: an engine with an attached thread
+    /// pool uses it; the bare chip runs serial. The right default for
+    /// plans that travel through the coordinator.
+    #[default]
+    Auto,
+    /// Force the serial reference walk, even on a pooled engine.
+    Serial,
+    /// Fan the per-core jobs out on this shared pool (a batch becomes a
+    /// queries × cores job matrix; skipped macros never become jobs).
+    Pool(Arc<ThreadPool>),
+}
+
+impl fmt::Debug for Exec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Exec::Auto => write!(f, "Auto"),
+            Exec::Serial => write!(f, "Serial"),
+            Exec::Pool(p) => write!(f, "Pool({} threads)", p.threads()),
+        }
+    }
+}
+
+impl Exec {
+    /// Short name for artifacts/logs (`BENCH_4.json` records it).
+    pub fn name(&self) -> String {
+        match self {
+            Exec::Auto => "auto".into(),
+            Exec::Serial => "serial".into(),
+            Exec::Pool(p) => format!("pool({})", p.threads()),
+        }
+    }
+
+    /// Whether two exec shapes dispatch identically (pools compare by
+    /// identity — two handles to the same pool are the same shape).
+    /// Used by the coordinator's workers to group only requests whose
+    /// plans can honestly share one batch dispatch.
+    pub fn same_shape(&self, other: &Exec) -> bool {
+        match (self, other) {
+            (Exec::Auto, Exec::Auto) | (Exec::Serial, Exec::Serial) => true,
+            (Exec::Pool(a), Exec::Pool(b)) => Arc::ptr_eq(a, b),
+            _ => false,
+        }
+    }
+}
+
+/// Where a plan's query nonces come from (see the module docs for the
+/// full contract).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RngPolicy {
+    /// Draw one nonce per query from `Pcg::new(seed)` — bit-identical
+    /// to the pre-plan API called with a fresh `&mut Pcg::new(seed)`.
+    Seeded(u64),
+    /// A caller-drawn nonce (`rng.next_u64()` hoisted from a live
+    /// stream): used verbatim by a single-query call.
+    Nonce(u64),
+}
+
+impl Default for RngPolicy {
+    fn default() -> Self {
+        RngPolicy::Seeded(0)
+    }
+}
+
+/// How much of the hardware census a plan's [`QueryStats`] carries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum StatsDetail {
+    /// The full cycle/energy/latency census (the default; every
+    /// equivalence and precision gate runs here).
+    #[default]
+    Full,
+    /// Counters only: sense statistics, docs scored and macro
+    /// sensed/skipped counts are exact, but the cycle/energy/latency
+    /// model assembly is skipped (those fields read zero). For
+    /// host-throughput loops where the census is pure overhead.
+    Counters,
+}
+
+/// Typed validation errors of plan (and pruning-config) construction.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PlanError {
+    /// `k` must be at least 1.
+    ZeroK,
+    /// `Prune::Probe(0)` would silently disable the query; ask for
+    /// `Prune::None` explicitly instead.
+    ZeroNprobe,
+    /// `k` exceeds the corpus size the plan was hinted with.
+    KBeyondCorpus { k: usize, corpus: usize },
+    /// More centroids than [`MAX_CLUSTERS`].
+    TooManyClusters { n_clusters: usize },
+    /// One cluster is indistinguishable from none but reads as "on";
+    /// use 0 (off) or >= 2.
+    SingleCluster,
+    /// A cluster policy with clustering on needs a default `nprobe`
+    /// of at least 1.
+    ZeroDefaultNprobe,
+}
+
+impl fmt::Display for PlanError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PlanError::ZeroK => write!(f, "plan k must be >= 1"),
+            PlanError::ZeroNprobe => {
+                write!(f, "plan nprobe must be >= 1 (use Prune::None for exhaustive)")
+            }
+            PlanError::KBeyondCorpus { k, corpus } => {
+                write!(f, "plan k = {k} exceeds the corpus hint of {corpus} documents")
+            }
+            PlanError::TooManyClusters { n_clusters } => {
+                write!(f, "n_clusters = {n_clusters} exceeds the {MAX_CLUSTERS} cap")
+            }
+            PlanError::SingleCluster => {
+                write!(f, "n_clusters must be 0 (off) or >= 2; 1 would silently disable pruning")
+            }
+            PlanError::ZeroDefaultNprobe => {
+                write!(f, "nprobe must be >= 1 when clustering is on")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PlanError {}
+
+impl ClusterPolicy {
+    /// Validate the chip-level pruning knobs — the one range check the
+    /// config binding and the builders share (the ad-hoc duplicates it
+    /// replaces lived in `coordinator::configfile`).
+    pub fn validate(&self) -> Result<(), PlanError> {
+        if self.n_clusters > MAX_CLUSTERS {
+            return Err(PlanError::TooManyClusters { n_clusters: self.n_clusters });
+        }
+        if self.n_clusters == 1 {
+            return Err(PlanError::SingleCluster);
+        }
+        if self.n_clusters > 0 && self.nprobe == 0 {
+            return Err(PlanError::ZeroDefaultNprobe);
+        }
+        Ok(())
+    }
+}
+
+/// One validated retrieval: top-`k` under a pruning policy, an
+/// execution shape, an rng policy and a stats detail level. Construct
+/// through [`QueryPlan::topk`]; every instance in the system passed
+/// validation.
+#[derive(Debug, Clone)]
+pub struct QueryPlan {
+    k: usize,
+    prune: Prune,
+    exec: Exec,
+    rng: RngPolicy,
+    detail: StatsDetail,
+    /// Carried from the builder so post-build tweaks
+    /// ([`QueryPlan::with_k`]) revalidate against the same bound.
+    corpus_hint: Option<usize>,
+}
+
+impl QueryPlan {
+    /// Start building a top-`k` plan. Defaults: [`Prune::Default`]
+    /// (the chip's own policy — exhaustive without a cluster index),
+    /// [`Exec::Auto`], [`RngPolicy::Seeded`]`(0)`,
+    /// [`StatsDetail::Full`].
+    pub fn topk(k: usize) -> PlanBuilder {
+        PlanBuilder {
+            k,
+            prune: Prune::Default,
+            exec: Exec::Auto,
+            rng: RngPolicy::default(),
+            detail: StatsDetail::default(),
+            corpus_hint: None,
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn prune(&self) -> Prune {
+        self.prune
+    }
+
+    pub fn exec(&self) -> &Exec {
+        &self.exec
+    }
+
+    pub fn rng(&self) -> RngPolicy {
+        self.rng
+    }
+
+    pub fn detail(&self) -> StatsDetail {
+        self.detail
+    }
+
+    /// This plan with [`RngPolicy::Seeded`]`(seed)`.
+    pub fn with_seed(&self, seed: u64) -> QueryPlan {
+        QueryPlan { rng: RngPolicy::Seeded(seed), ..self.clone() }
+    }
+
+    /// This plan with a verbatim nonce ([`RngPolicy::Nonce`]).
+    pub fn with_nonce(&self, nonce: u64) -> QueryPlan {
+        QueryPlan { rng: RngPolicy::Nonce(nonce), ..self.clone() }
+    }
+
+    /// The streaming contract: hoist one draw from the caller's live
+    /// rng into this plan (see the module docs). Advances `rng` by
+    /// exactly one `next_u64`, independent of the plan's other knobs.
+    pub fn with_stream(&self, rng: &mut Pcg) -> QueryPlan {
+        self.with_nonce(rng.next_u64())
+    }
+
+    /// This plan with a different execution shape.
+    pub fn with_exec(&self, exec: Exec) -> QueryPlan {
+        QueryPlan { exec, ..self.clone() }
+    }
+
+    /// This plan with a different stats detail level.
+    pub fn with_detail(&self, detail: StatsDetail) -> QueryPlan {
+        QueryPlan { detail, ..self.clone() }
+    }
+
+    /// This plan with a different `k`, revalidated — including against
+    /// the corpus hint the plan was built with, if any.
+    pub fn with_k(&self, k: usize) -> Result<QueryPlan, PlanError> {
+        if k == 0 {
+            return Err(PlanError::ZeroK);
+        }
+        if let Some(corpus) = self.corpus_hint {
+            if k > corpus {
+                return Err(PlanError::KBeyondCorpus { k, corpus });
+            }
+        }
+        Ok(QueryPlan { k, ..self.clone() })
+    }
+
+    /// This plan with a different pruning policy (revalidated).
+    pub fn with_prune(&self, prune: Prune) -> Result<QueryPlan, PlanError> {
+        if matches!(prune, Prune::Probe(0)) {
+            return Err(PlanError::ZeroNprobe);
+        }
+        Ok(QueryPlan { prune, ..self.clone() })
+    }
+
+    /// The first query nonce of a call under this plan's rng policy —
+    /// the allocation-free single-query case of [`QueryPlan::nonces`]
+    /// (the serving hot path draws exactly one).
+    pub fn first_nonce(&self) -> u64 {
+        match self.rng {
+            RngPolicy::Seeded(s) => Pcg::new(s).next_u64(),
+            RngPolicy::Nonce(x) => x,
+        }
+    }
+
+    /// The query nonces of one `n`-query call under this plan's rng
+    /// policy — the whole rng contract in one place (used by every
+    /// execution layer; pinned by `rust/tests/plan_api.rs`).
+    pub fn nonces(&self, n: usize) -> Vec<u64> {
+        match self.rng {
+            RngPolicy::Seeded(s) => {
+                let mut r = Pcg::new(s);
+                (0..n).map(|_| r.next_u64()).collect()
+            }
+            RngPolicy::Nonce(x) => {
+                let mut v = Vec::with_capacity(n);
+                if n > 0 {
+                    v.push(x);
+                    let mut r = Pcg::new(x);
+                    for _ in 1..n {
+                        v.push(r.next_u64());
+                    }
+                }
+                v
+            }
+        }
+    }
+}
+
+/// Builder for [`QueryPlan`]; [`PlanBuilder::build`] is the single
+/// validation point.
+#[derive(Debug, Clone)]
+pub struct PlanBuilder {
+    k: usize,
+    prune: Prune,
+    exec: Exec,
+    rng: RngPolicy,
+    detail: StatsDetail,
+    corpus_hint: Option<usize>,
+}
+
+impl PlanBuilder {
+    /// Pruning policy ([`Prune::Probe`] carries the per-plan nprobe
+    /// override).
+    pub fn prune(mut self, prune: Prune) -> Self {
+        self.prune = prune;
+        self
+    }
+
+    /// Shorthand for `prune(Prune::Probe(nprobe))`.
+    pub fn nprobe(self, nprobe: usize) -> Self {
+        self.prune(Prune::Probe(nprobe))
+    }
+
+    /// Execution shape.
+    pub fn exec(mut self, exec: Exec) -> Self {
+        self.exec = exec;
+        self
+    }
+
+    /// Shorthand for `exec(Exec::Pool(pool))`.
+    pub fn pool(self, pool: Arc<ThreadPool>) -> Self {
+        self.exec(Exec::Pool(pool))
+    }
+
+    /// Shorthand for `exec(Exec::Serial)`.
+    pub fn serial(self) -> Self {
+        self.exec(Exec::Serial)
+    }
+
+    /// Rng policy.
+    pub fn rng(mut self, rng: RngPolicy) -> Self {
+        self.rng = rng;
+        self
+    }
+
+    /// Shorthand for `rng(RngPolicy::Seeded(seed))`.
+    pub fn seed(self, seed: u64) -> Self {
+        self.rng(RngPolicy::Seeded(seed))
+    }
+
+    /// Shorthand for `rng(RngPolicy::Nonce(nonce))`.
+    pub fn nonce(self, nonce: u64) -> Self {
+        self.rng(RngPolicy::Nonce(nonce))
+    }
+
+    /// The streaming contract: hoist one draw from a live rng (see the
+    /// module docs).
+    pub fn stream(self, rng: &mut Pcg) -> Self {
+        let nonce = rng.next_u64();
+        self.nonce(nonce)
+    }
+
+    /// Stats detail level.
+    pub fn detail(mut self, detail: StatsDetail) -> Self {
+        self.detail = detail;
+        self
+    }
+
+    /// Corpus-size hint: when known, `k` is validated against it.
+    pub fn corpus_hint(mut self, n_docs: usize) -> Self {
+        self.corpus_hint = Some(n_docs);
+        self
+    }
+
+    /// Validate and produce the plan.
+    pub fn build(self) -> Result<QueryPlan, PlanError> {
+        if self.k == 0 {
+            return Err(PlanError::ZeroK);
+        }
+        if matches!(self.prune, Prune::Probe(0)) {
+            return Err(PlanError::ZeroNprobe);
+        }
+        if let Some(corpus) = self.corpus_hint {
+            if self.k > corpus {
+                return Err(PlanError::KBeyondCorpus { k: self.k, corpus });
+            }
+        }
+        Ok(QueryPlan {
+            k: self.k,
+            prune: self.prune,
+            exec: self.exec,
+            rng: self.rng,
+            detail: self.detail,
+            corpus_hint: self.corpus_hint,
+        })
+    }
+}
+
+/// What one plan execution returns: the ranked documents plus the
+/// hardware census (at the plan's [`StatsDetail`]).
+#[derive(Debug, Clone)]
+pub struct PlanOutput {
+    pub topk: Vec<ScoredDoc>,
+    pub stats: QueryStats,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_defaults_and_accessors() {
+        let p = QueryPlan::topk(7).build().unwrap();
+        assert_eq!(p.k(), 7);
+        assert_eq!(p.prune(), Prune::Default);
+        assert!(matches!(p.exec(), Exec::Auto));
+        assert_eq!(p.rng(), RngPolicy::Seeded(0));
+        assert_eq!(p.detail(), StatsDetail::Full);
+    }
+
+    #[test]
+    fn validation_typed_errors() {
+        assert_eq!(QueryPlan::topk(0).build().unwrap_err(), PlanError::ZeroK);
+        assert_eq!(
+            QueryPlan::topk(5).nprobe(0).build().unwrap_err(),
+            PlanError::ZeroNprobe
+        );
+        assert_eq!(
+            QueryPlan::topk(11).corpus_hint(10).build().unwrap_err(),
+            PlanError::KBeyondCorpus { k: 11, corpus: 10 }
+        );
+        assert!(QueryPlan::topk(10).corpus_hint(10).build().is_ok());
+        // Tweaks of a validated plan revalidate.
+        let p = QueryPlan::topk(5).build().unwrap();
+        assert_eq!(p.with_k(0).unwrap_err(), PlanError::ZeroK);
+        assert_eq!(p.with_prune(Prune::Probe(0)).unwrap_err(), PlanError::ZeroNprobe);
+        assert_eq!(p.with_prune(Prune::Probe(3)).unwrap().prune(), Prune::Probe(3));
+        // The corpus hint survives build: with_k revalidates against it.
+        let hinted = QueryPlan::topk(5).corpus_hint(100).build().unwrap();
+        assert_eq!(
+            hinted.with_k(101).unwrap_err(),
+            PlanError::KBeyondCorpus { k: 101, corpus: 100 }
+        );
+        assert_eq!(hinted.with_k(100).unwrap().k(), 100);
+    }
+
+    #[test]
+    fn exec_same_shape() {
+        let pool = Arc::new(ThreadPool::new(2));
+        let other = Arc::new(ThreadPool::new(2));
+        assert!(Exec::Auto.same_shape(&Exec::Auto));
+        assert!(Exec::Serial.same_shape(&Exec::Serial));
+        assert!(!Exec::Auto.same_shape(&Exec::Serial));
+        assert!(Exec::Pool(Arc::clone(&pool)).same_shape(&Exec::Pool(Arc::clone(&pool))));
+        assert!(!Exec::Pool(pool).same_shape(&Exec::Pool(other)));
+    }
+
+    #[test]
+    fn cluster_policy_validator() {
+        assert!(ClusterPolicy::default().validate().is_ok());
+        let ok = ClusterPolicy { n_clusters: 64, nprobe: 4, kmeans_iters: 8 };
+        assert!(ok.validate().is_ok());
+        let too_many = ClusterPolicy { n_clusters: MAX_CLUSTERS + 1, ..ok.clone() };
+        assert_eq!(
+            too_many.validate().unwrap_err(),
+            PlanError::TooManyClusters { n_clusters: MAX_CLUSTERS + 1 }
+        );
+        let one = ClusterPolicy { n_clusters: 1, ..ok.clone() };
+        assert_eq!(one.validate().unwrap_err(), PlanError::SingleCluster);
+        let no_probe = ClusterPolicy { n_clusters: 16, nprobe: 0, ..ok };
+        assert_eq!(no_probe.validate().unwrap_err(), PlanError::ZeroDefaultNprobe);
+    }
+
+    #[test]
+    fn seeded_nonces_match_fresh_pcg_stream() {
+        // The bit-exact bridge to the pre-plan API: Seeded(s) draws the
+        // stream a fresh Pcg::new(s) would have produced.
+        let plan = QueryPlan::topk(5).seed(123).build().unwrap();
+        let mut r = Pcg::new(123);
+        let want: Vec<u64> = (0..4).map(|_| r.next_u64()).collect();
+        assert_eq!(plan.nonces(4), want);
+        assert_eq!(plan.nonces(1), want[..1]);
+        assert_eq!(plan.first_nonce(), want[0]);
+        assert!(plan.nonces(0).is_empty());
+    }
+
+    #[test]
+    fn nonce_policy_verbatim_first_then_derived() {
+        let mut caller = Pcg::new(9);
+        let base = QueryPlan::topk(5).build().unwrap();
+        let plan = base.with_stream(&mut caller);
+        // The caller's stream advanced exactly one draw, and that draw
+        // is the verbatim single-query nonce.
+        let drawn = Pcg::new(9).next_u64();
+        assert_eq!(plan.rng(), RngPolicy::Nonce(drawn));
+        assert_eq!(plan.nonces(1), vec![drawn]);
+        assert_eq!(plan.first_nonce(), drawn);
+        // Batch: verbatim first, Pcg::new(nonce) continuation after.
+        let got = plan.nonces(3);
+        let mut cont = Pcg::new(drawn);
+        assert_eq!(got, vec![drawn, cont.next_u64(), cont.next_u64()]);
+        // Stream hoisting consumes one draw regardless of plan shape.
+        let mut c2 = Pcg::new(9);
+        let _ = base.with_prune(Prune::Probe(3)).unwrap().with_stream(&mut c2);
+        assert_eq!(caller.next_u64(), c2.next_u64());
+    }
+
+    #[test]
+    fn exec_names() {
+        assert_eq!(Exec::Auto.name(), "auto");
+        assert_eq!(Exec::Serial.name(), "serial");
+        let pool = Arc::new(ThreadPool::new(2));
+        assert_eq!(Exec::Pool(pool).name(), "pool(2)");
+        assert_eq!(format!("{:?}", Exec::Serial), "Serial");
+    }
+}

@@ -6,11 +6,14 @@
 //! fundamentally synchronous hot path. The pool gives us:
 //!
 //! * [`ThreadPool`] — fixed workers consuming boxed jobs from an injector
-//!   channel (shared by the retrieval engines for the queries × cores job
-//!   matrix of the batched query path), and
-//! * [`parallel_map`] — a scoped fork-join over a slice (used by the
-//!   per-core shard execution of [`crate::dirc::chip::DircChip`], the
-//!   Monte-Carlo sweeps and dataset generation).
+//!   channel; the execution substrate behind every pooled
+//!   [`crate::retrieval::plan::QueryPlan`] (single queries and the
+//!   queries × cores job matrix of the batched path alike), and
+//! * [`parallel_map`] — a scoped fork-join over a slice. Since the
+//!   plan-driven chip API routed all per-core shard execution through
+//!   the shared pool, nothing on the query path uses it; it stays as a
+//!   standalone substrate for one-shot fan-outs (spawns threads per
+//!   call — prefer the pool for anything hot).
 //!
 //! ## Join protocol
 //!

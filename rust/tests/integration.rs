@@ -11,8 +11,10 @@ use dirc_rag::coordinator::{
 use dirc_rag::data::text::{bow_batch, TextCorpus, TextParams, HASH_BUCKETS};
 use dirc_rag::data::{SynthDataset, SynthParams};
 use dirc_rag::dirc::chip::ChipConfig;
+use dirc_rag::retrieval::plan::QueryPlan;
 use dirc_rag::retrieval::quant::{quantize, QuantScheme, Quantized};
 use dirc_rag::retrieval::score::Metric;
+use dirc_rag::retrieval::Prune;
 use dirc_rag::runtime::PjrtRuntime;
 use dirc_rag::util::rng::Pcg;
 
@@ -51,10 +53,11 @@ fn serving_engine_matches_sim_engine_exactly() {
     for qseed in 0..10u64 {
         let mut rng = Pcg::new(100 + qseed);
         let q: Vec<i8> = (0..512).map(|_| rng.int_in(-128, 127) as i8).collect();
-        let mut r1 = Pcg::new(7 + qseed);
-        let mut r2 = Pcg::new(7 + qseed);
-        let (top_sim, stats_sim) = sim.retrieve(&q, 10, &mut r1);
-        let (top_srv, stats_srv) = srv.retrieve(&q, 10, &mut r2);
+        let plan = QueryPlan::topk(10).seed(7 + qseed).build().unwrap();
+        let out_sim = sim.retrieve(&q, &plan);
+        let out_srv = srv.retrieve(&q, &plan);
+        let (top_sim, stats_sim) = (out_sim.topk, out_sim.stats);
+        let (top_srv, stats_srv) = (out_srv.topk, out_srv.stats);
         let ids_sim: Vec<u64> = top_sim.iter().map(|d| d.doc_id).collect();
         let ids_srv: Vec<u64> = top_srv.iter().map(|d| d.doc_id).collect();
         assert_eq!(ids_sim, ids_srv, "query {qseed}");
@@ -117,7 +120,10 @@ fn coordinator_serves_token_queries() {
     let mut rxs = Vec::new();
     for q in 0..24 {
         let (id, rx) = coord
-            .submit(Query::Tokens(corpus.queries[q].clone()), 5)
+            .submit(
+                Query::Tokens(corpus.queries[q].clone()),
+                QueryPlan::topk(5).build().unwrap(),
+            )
             .unwrap();
         rxs.push((id, rx));
     }
@@ -146,7 +152,9 @@ fn coordinator_serves_embedding_queries() {
     let coord = Coordinator::start(engine, rt, CoordinatorConfig::default());
     let mut rng = Pcg::new(5);
     let emb: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
-    let (_, rx) = coord.submit(Query::Embedding(emb), 3).unwrap();
+    let (_, rx) = coord
+        .submit(Query::Embedding(emb), QueryPlan::topk(3).build().unwrap())
+        .unwrap();
     let resp = rx.recv().unwrap();
     assert_eq!(resp.topk.len(), 3);
     assert_eq!(resp.embed_s, 0.0);
@@ -172,15 +180,17 @@ fn sim_engine_preserves_precision_at_nominal_corner() {
     let db = quantize(&ds.docs, 1500, 512, QuantScheme::Int8);
     let chip = dirc_rag::dirc::chip::DircChip::build(test_chip_cfg(512), &db);
 
+    let queries: Vec<Vec<i8>> = (0..60)
+        .map(|qi| quantize(ds.query(qi), 1, 512, QuantScheme::Int8).values)
+        .collect();
+    let oracle = QueryPlan::topk(5).prune(Prune::None).build().unwrap();
     let clean = dirc_rag::eval::evaluate(60, &ds.qrels, |qi| {
-        let q = quantize(ds.query(qi), 1, 512, QuantScheme::Int8);
-        chip.clean_query(&q.values, 5)
+        chip.clean_execute(&queries[qi], &oracle)
     });
-    let mut rng = Pcg::new(13);
-    let noisy = dirc_rag::eval::evaluate(60, &ds.qrels, |qi| {
-        let q = quantize(ds.query(qi), 1, 512, QuantScheme::Int8);
-        chip.query(&q.values, 5, &mut rng).0
-    });
+    // Seed 13: the nonce stream the pre-plan harness drew from
+    // Pcg::new(13), one nonce per query in order.
+    let outs = chip.execute_batch(&queries, &QueryPlan::topk(5).seed(13).build().unwrap());
+    let noisy = dirc_rag::eval::evaluate(60, &ds.qrels, |qi| outs[qi].topk.clone());
     assert!(clean.p_at_1 > 0.5, "dataset too hard: {}", clean.p_at_1);
     assert!(
         noisy.p_at_1 >= clean.p_at_1 - 0.05,

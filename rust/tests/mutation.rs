@@ -10,14 +10,21 @@ use std::sync::Arc;
 
 use dirc_rag::coordinator::{Coordinator, CoordinatorConfig, Mutation, Query, SimEngine};
 use dirc_rag::dirc::chip::{ChipConfig, DircChip, DocPayload};
+use dirc_rag::retrieval::plan::QueryPlan;
 use dirc_rag::retrieval::quant::{quantize, random_unit_rows, QuantScheme, Quantized};
 use dirc_rag::retrieval::score::Metric;
+use dirc_rag::retrieval::Prune;
 use dirc_rag::util::rng::Pcg;
 
 fn db(n: usize, dim: usize, seed: u64) -> Quantized {
     let mut rng = Pcg::new(seed);
     let fp = random_unit_rows(n, dim, &mut rng);
     quantize(&fp, n, dim, QuantScheme::Int8)
+}
+
+/// The clean-oracle plan (exhaustive, ideal readout) at `k`.
+fn oracle(k: usize) -> QueryPlan {
+    QueryPlan::topk(k).prune(Prune::None).build().unwrap()
 }
 
 fn cfg(dim: usize, cores: usize) -> ChipConfig {
@@ -58,7 +65,7 @@ fn added_doc_is_retrievable_and_costed() {
     // The clean oracle finds each new doc as its own nearest neighbour
     // (cosine 1.0 against itself; random unit rows never tie that).
     for (i, &id) in ids.iter().enumerate() {
-        let top = chip.clean_query(&extra.row(i).to_vec(), 3);
+        let top = chip.clean_execute(extra.row(i), &oracle(3));
         assert_eq!(top[0].doc_id, id, "added doc {id} not top-1 for its own query");
     }
     // Wear is on the ledger and the map rows it touched are flagged.
@@ -73,7 +80,7 @@ fn deleted_doc_never_returned_and_slot_reused() {
 
     // Doc 3 is its own nearest neighbour before deletion.
     let q3 = base.row(3).to_vec();
-    assert_eq!(chip.clean_query(&q3, 1)[0].doc_id, 3);
+    assert_eq!(chip.clean_execute(&q3, &oracle(1))[0].doc_id, 3);
 
     let del = chip.delete_docs(&[3]);
     assert_eq!(del.docs_deleted, 1);
@@ -85,10 +92,10 @@ fn deleted_doc_never_returned_and_slot_reused() {
     assert_eq!(chip.cores()[0].n_live(), 9);
 
     // Never returned again — by the clean oracle or the noisy path.
-    let top = chip.clean_query(&q3, 10);
+    let top = chip.clean_execute(&q3, &oracle(10));
     assert!(top.iter().all(|d| d.doc_id != 3));
-    let mut rng = Pcg::new(7);
-    let (noisy, stats) = chip.query(&q3, 9, &mut rng);
+    let out = chip.execute(&q3, &QueryPlan::topk(9).seed(7).build().unwrap());
+    let (noisy, stats) = (out.topk, out.stats);
     assert!(noisy.iter().all(|d| d.doc_id != 3));
     // The hardware still scores the tombstoned slot (positional walk).
     assert_eq!(stats.docs_scored, 10);
@@ -101,7 +108,7 @@ fn deleted_doc_never_returned_and_slot_reused() {
     assert_eq!(chip.cores()[0].n_docs(), 10, "slot reused, not appended");
     assert_eq!(chip.cores()[0].doc_ids()[3], 10, "lowest tombstone reused");
     assert_eq!(chip.n_docs(), 10);
-    assert_eq!(chip.clean_query(&extra.row(0).to_vec(), 1)[0].doc_id, 10);
+    assert_eq!(chip.clean_execute(extra.row(0), &oracle(1))[0].doc_id, 10);
 }
 
 #[test]
@@ -118,7 +125,7 @@ fn update_reprograms_in_place() {
     assert_eq!(stats.docs_updated, 1);
     assert!(stats.write_pulses > 0);
     assert_eq!(chip.n_docs(), 200, "update does not change the corpus size");
-    assert_eq!(chip.clean_query(&q, 1)[0].doc_id, 42);
+    assert_eq!(chip.clean_execute(&q, &oracle(1))[0].doc_id, 42);
 
     // Unknown ids are counted, not fatal.
     let stats = chip
@@ -182,10 +189,9 @@ fn wear_crosses_threshold_and_lazily_refreshes_map_and_layouts() {
 
     // The chip still answers well-formed queries after re-layout.
     let q = base.row(0).to_vec();
-    let mut qrng = Pcg::new(13);
-    let (top, _) = chip.query(&q, 5, &mut qrng);
+    let top = chip.execute(&q, &QueryPlan::topk(5).seed(13).build().unwrap()).topk;
     assert_eq!(top.len(), 5);
-    assert_eq!(chip.clean_query(&q, 1)[0].doc_id, 0);
+    assert_eq!(chip.clean_execute(&q, &oracle(1))[0].doc_id, 0);
 }
 
 #[test]
@@ -208,13 +214,12 @@ fn mutation_determinism_same_batch_same_state() {
 
     let mut qgen = Pcg::new(40);
     let q: Vec<i8> = (0..128).map(|_| qgen.int_in(-128, 127) as i8).collect();
-    let mut q1 = Pcg::new(41);
-    let mut q2 = Pcg::new(41);
-    let (ta, stats_a) = a.query(&q, 10, &mut q1);
-    let (tb, stats_b) = b.query(&q, 10, &mut q2);
-    assert_eq!(ta, tb);
-    assert_eq!(stats_a.sense, stats_b.sense);
-    assert_eq!(stats_a.cycles, stats_b.cycles);
+    let plan = QueryPlan::topk(10).seed(41).build().unwrap();
+    let oa = a.execute(&q, &plan);
+    let ob = b.execute(&q, &plan);
+    assert_eq!(oa.topk, ob.topk);
+    assert_eq!(oa.stats.sense, ob.stats.sense);
+    assert_eq!(oa.stats.cycles, ob.stats.cycles);
 }
 
 // ---------------------------------------------------------------------
@@ -252,7 +257,7 @@ fn coordinator_serves_queries_and_mutations_without_runtime() {
     // Interleave queries with mutations on the live channel.
     let mut rxs = Vec::new();
     for i in 0..16 {
-        let (id, rx) = coord.submit(Query::Embedding(emb_of(&base, i)), 5).unwrap();
+        let (id, rx) = coord.submit(Query::Embedding(emb_of(&base, i)), oracle(5)).unwrap();
         rxs.push((id, i, rx));
     }
     // Fresh embeddings (not near any query target, so the assertion on
@@ -295,7 +300,7 @@ fn coordinator_serves_queries_and_mutations_without_runtime() {
 #[test]
 fn token_queries_error_cleanly_without_embedder() {
     let (coord, _) = sim_coordinator(64, 128, 1);
-    let (_, rx) = coord.submit(Query::Tokens(vec![1, 2, 3]), 5).unwrap();
+    let (_, rx) = coord.submit(Query::Tokens(vec![1, 2, 3]), oracle(5)).unwrap();
     // The request is dropped (no embedder): the response channel closes.
     assert!(rx.recv().is_err());
     let snap = coord.shutdown();
@@ -312,7 +317,7 @@ fn shutdown_under_load_drains_in_flight_mutations() {
     let mut qrxs = Vec::new();
     for i in 0..48 {
         let (_, rx) = coord
-            .submit(Query::Embedding(emb_of(&base, i % 256)), 5)
+            .submit(Query::Embedding(emb_of(&base, i % 256)), oracle(5))
             .unwrap();
         qrxs.push(rx);
     }
@@ -354,7 +359,7 @@ fn mutation_visible_to_subsequent_queries() {
     let added = mrx.recv().expect("mutation applied");
     assert_eq!(added.added_ids, vec![128]);
 
-    let (_, rx) = coord.submit(Query::Embedding(emb_of(&fresh, 0)), 3).unwrap();
+    let (_, rx) = coord.submit(Query::Embedding(emb_of(&fresh, 0)), oracle(3)).unwrap();
     let resp = rx.recv().expect("query answered");
     assert_eq!(resp.topk[0].doc_id, 128, "new doc must be its own best match");
     coord.shutdown();

@@ -9,8 +9,10 @@ use dirc_rag::dirc::chip::{ChipConfig, DircChip};
 use dirc_rag::dirc::variation::VariationModel;
 use dirc_rag::dirc::RemapStrategy;
 use dirc_rag::eval::evaluate;
+use dirc_rag::retrieval::plan::QueryPlan;
 use dirc_rag::retrieval::quant::{quantize, QuantScheme};
 use dirc_rag::retrieval::score::Metric;
+use dirc_rag::retrieval::Prune;
 use dirc_rag::sim::ChipSpec;
 use dirc_rag::util::rng::Pcg;
 
@@ -39,7 +41,10 @@ fn linear_scaling_with_db_size() {
         let cfg = ChipConfig { map_points: 40, ..ChipConfig::paper_default(dim, Metric::Mips) };
         let chip = DircChip::build(cfg, &db);
         let q: Vec<i8> = (0..dim).map(|_| rng.int_in(-128, 127) as i8).collect();
-        let (_, stats) = chip.query(&q, 10, &mut rng);
+        // Streaming contract: hoist the shared rng's next draw, exactly
+        // as the pre-plan API consumed it.
+        let plan = QueryPlan::topk(10).stream(&mut rng).build().unwrap();
+        let stats = chip.execute(&q, &plan).stats;
         latencies.push(stats.latency_s);
         energies.push(stats.energy_j);
     }
@@ -83,9 +88,10 @@ fn table2_quantisation_shape() {
             ..ChipConfig::paper_default(spec.dim, Metric::Cosine)
         };
         let chip = DircChip::build(cfg, &db);
+        let oracle = QueryPlan::topk(5).prune(Prune::None).build().unwrap();
         evaluate(nq, &ds.qrels[..nq], |qi| {
             let q = quantize(ds.query(qi), 1, ds.dim, scheme);
-            chip.clean_query(&q.values, 5)
+            chip.clean_execute(&q.values, &oracle)
         })
     };
     let int8 = run_quant(QuantScheme::Int8);
@@ -132,11 +138,13 @@ fn fig6_error_optimisation_recovers_precision() {
             ..ChipConfig::paper_default(spec.dim, Metric::Cosine)
         };
         let chip = DircChip::build(cfg, &db);
-        let mut rng = Pcg::new(5);
-        evaluate(nq, &ds.qrels[..nq], |qi| {
-            let q = quantize(ds.query(qi), 1, ds.dim, QuantScheme::Int8);
-            chip.query(&q.values, 5, &mut rng).0
-        })
+        // Seed 5: the nonce stream the pre-plan run drew from
+        // Pcg::new(5), one nonce per query in order.
+        let queries: Vec<Vec<i8>> = (0..nq)
+            .map(|qi| quantize(ds.query(qi), 1, ds.dim, QuantScheme::Int8).values)
+            .collect();
+        let outs = chip.execute_batch(&queries, &QueryPlan::topk(5).seed(5).build().unwrap());
+        evaluate(nq, &ds.qrels[..nq], |qi| outs[qi].topk.clone())
     };
 
     let naive = run(RemapStrategy::Interleaved, false);

@@ -1,14 +1,18 @@
-//! Golden-vector tests for the parallel sharded query path: the parallel
-//! per-core execution (`query_on`, `sense_pass_on`, `query_batch`) must be
-//! **bit-identical** to the serial walk — same doc ids, same score bits,
-//! same sense statistics, same cycle/energy accounting — across seeds,
-//! core counts, metrics, thread counts and tie-heavy score distributions.
+//! Golden-vector tests for the parallel sharded execution of
+//! `QueryPlan`s: pooled execution ([`Exec::Pool`]) must be
+//! **bit-identical** to the serial walk ([`Exec::Serial`]) — same doc
+//! ids, same score bits, same sense statistics, same cycle/energy
+//! accounting — across seeds, core counts, pool widths, metrics,
+//! tie-heavy score distributions, pruning policies and
+//! mutate-then-query schedules. (Old-API equivalence of the plan paths
+//! themselves lives in `rust/tests/plan_api.rs`.)
 
 use std::sync::Arc;
 
 use dirc_rag::coordinator::{Engine, SimEngine};
 use dirc_rag::dirc::chip::{ChipConfig, DircChip, QueryStats};
 use dirc_rag::retrieval::cluster::ClusterPolicy;
+use dirc_rag::retrieval::plan::{Exec, QueryPlan};
 use dirc_rag::retrieval::quant::{quantize, random_unit_rows, QuantScheme, Quantized};
 use dirc_rag::retrieval::score::{norm_i8, Metric};
 use dirc_rag::retrieval::Prune;
@@ -51,30 +55,31 @@ fn tie_heavy_db(n: usize, dim: usize, seed: u64) -> Quantized {
 }
 
 #[test]
-fn parallel_query_bit_identical_across_seeds_and_core_counts() {
+fn pooled_execute_bit_identical_across_seeds_and_core_counts() {
     let dim = 128;
+    let pools: Vec<Arc<ThreadPool>> =
+        [2usize, 4, 8].iter().map(|&t| Arc::new(ThreadPool::new(t))).collect();
     for &cores in &[1usize, 2, 4, 8] {
         for metric in [Metric::Mips, Metric::Cosine] {
             let chip = build_chip(400, dim, cores, 11, metric);
             for qseed in 0..3u64 {
                 let mut qrng = Pcg::new(900 + qseed);
                 let q: Vec<i8> = (0..dim).map(|_| qrng.int_in(-128, 127) as i8).collect();
-                let mut r_serial = Pcg::new(qseed);
-                let (top_s, stats_s) = chip.query(&q, 10, &mut r_serial);
-                for &threads in &[2usize, 4, 8] {
-                    let mut r_par = Pcg::new(qseed);
-                    let (top_p, stats_p) = chip.query_on(&q, 10, &mut r_par, threads);
+                let base = QueryPlan::topk(10).seed(qseed).build().unwrap();
+                let serial = chip.execute(&q, &base.with_exec(Exec::Serial));
+                for pool in &pools {
+                    let pooled =
+                        chip.execute(&q, &base.with_exec(Exec::Pool(Arc::clone(pool))));
                     let ctx = format!(
-                        "cores={cores} metric={metric:?} qseed={qseed} threads={threads}"
+                        "cores={cores} metric={metric:?} qseed={qseed} threads={}",
+                        pool.threads()
                     );
-                    assert_eq!(top_s, top_p, "{ctx}: ranking");
-                    for (a, b) in top_s.iter().zip(top_p.iter()) {
+                    assert_eq!(serial.topk, pooled.topk, "{ctx}: ranking");
+                    for (a, b) in serial.topk.iter().zip(pooled.topk.iter()) {
                         assert_eq!(a.score.to_bits(), b.score.to_bits(), "{ctx}: score bits");
                     }
-                    assert_stats_identical(&stats_s, &stats_p, &ctx);
-                    // Both paths must leave the caller rng in the same
-                    // position (one nonce drawn per query).
-                    assert_eq!(r_serial.clone().next_u64(), r_par.clone().next_u64(), "{ctx}");
+                    assert_stats_identical(&serial.stats, &pooled.stats, &ctx);
+                    assert_eq!(pool.panicked(), 0, "{ctx}");
                 }
             }
         }
@@ -82,9 +87,10 @@ fn parallel_query_bit_identical_across_seeds_and_core_counts() {
 }
 
 #[test]
-fn parallel_query_bit_identical_on_tie_heavy_scores() {
+fn pooled_execute_bit_identical_on_tie_heavy_scores() {
     let (n, dim) = (512, 128);
     let db = tie_heavy_db(n, dim, 21);
+    let pool = Arc::new(ThreadPool::new(4));
     for &cores in &[2usize, 4, 8] {
         let cfg = ChipConfig {
             cores,
@@ -96,79 +102,86 @@ fn parallel_query_bit_identical_on_tie_heavy_scores() {
             // Tiny-valued queries -> massively duplicated integer scores.
             let mut qrng = Pcg::new(300 + qseed);
             let q: Vec<i8> = (0..dim).map(|_| qrng.int_in(-1, 1) as i8).collect();
-            let mut r1 = Pcg::new(qseed);
-            let mut r2 = Pcg::new(qseed);
-            let (top_s, stats_s) = chip.query(&q, 16, &mut r1);
-            let (top_p, stats_p) = chip.query_on(&q, 16, &mut r2, 4);
+            let base = QueryPlan::topk(16).seed(qseed).build().unwrap();
+            let serial = chip.execute(&q, &base.with_exec(Exec::Serial));
+            let pooled = chip.execute(&q, &base.with_exec(Exec::Pool(Arc::clone(&pool))));
             let ctx = format!("tie-heavy cores={cores} qseed={qseed}");
-            assert_eq!(top_s, top_p, "{ctx}");
-            assert_stats_identical(&stats_s, &stats_p, &ctx);
+            assert_eq!(serial.topk, pooled.topk, "{ctx}");
+            assert_stats_identical(&serial.stats, &pooled.stats, &ctx);
             // Ties really are present, and broken by lower doc id.
-            for w in top_s.windows(2) {
+            for w in serial.topk.windows(2) {
                 if w[0].score == w[1].score {
                     assert!(w[0].doc_id < w[1].doc_id, "{ctx}: tie-break order");
                 }
             }
         }
     }
-}
-
-#[test]
-fn sense_pass_parallel_matches_serial_flips() {
-    let chip = build_chip(600, 128, 4, 31, Metric::Cosine);
-    for qseed in 0..3u64 {
-        let mut r1 = Pcg::new(qseed);
-        let mut r2 = Pcg::new(qseed);
-        let (flips_s, stats_s) = chip.sense_pass(10, &mut r1);
-        let (flips_p, stats_p) = chip.sense_pass_on(10, &mut r2, 4);
-        assert_eq!(flips_s, flips_p, "qseed={qseed}: per-core flips");
-        assert_stats_identical(&stats_s, &stats_p, &format!("sense qseed={qseed}"));
-    }
-}
-
-#[test]
-fn query_batch_matches_serial_query_stream() {
-    let chip = Arc::new(build_chip(400, 128, 4, 41, Metric::Mips));
-    let pool = ThreadPool::new(4);
-    let mut qrng = Pcg::new(5);
-    let queries: Vec<Vec<i8>> = (0..11)
-        .map(|_| (0..128).map(|_| qrng.int_in(-128, 127) as i8).collect())
-        .collect();
-    let mut r_serial = Pcg::new(123);
-    let mut r_batch = Pcg::new(123);
-    let want: Vec<_> = queries.iter().map(|q| chip.query(q, 10, &mut r_serial)).collect();
-    let got = DircChip::query_batch(&chip, &pool, &queries, 10, &mut r_batch);
-    assert_eq!(got.len(), want.len());
-    for (qi, ((gt, gs), (wt, ws))) in got.iter().zip(want.iter()).enumerate() {
-        assert_eq!(gt, wt, "query {qi}: ranking");
-        assert_stats_identical(gs, ws, &format!("batch query {qi}"));
-    }
-    // Both paths consumed the same nonce stream.
-    assert_eq!(r_serial.next_u64(), r_batch.next_u64());
     assert_eq!(pool.panicked(), 0);
 }
 
 #[test]
-fn query_batch_empty_and_single() {
-    let chip = Arc::new(build_chip(200, 128, 2, 51, Metric::Mips));
-    let pool = ThreadPool::new(2);
-    let mut rng = Pcg::new(1);
-    assert!(DircChip::query_batch(&chip, &pool, &[], 5, &mut rng).is_empty());
-    let q: Vec<i8> = (0..128).map(|_| rng.int_in(-128, 127) as i8).collect();
-    let mut r1 = Pcg::new(2);
-    let mut r2 = Pcg::new(2);
-    let want = chip.query(&q, 5, &mut r1);
-    let got = DircChip::query_batch(&chip, &pool, std::slice::from_ref(&q), 5, &mut r2);
+fn pooled_sense_execute_matches_serial_flips() {
+    let chip = build_chip(600, 128, 4, 31, Metric::Cosine);
+    let pool = Arc::new(ThreadPool::new(4));
+    for qseed in 0..3u64 {
+        let q: Vec<i8> = {
+            let mut qrng = Pcg::new(40 + qseed);
+            (0..128).map(|_| qrng.int_in(-128, 127) as i8).collect()
+        };
+        let base = QueryPlan::topk(10).seed(qseed).build().unwrap();
+        let serial = chip.sense_execute(&q, &base.with_exec(Exec::Serial));
+        let pooled = chip.sense_execute(&q, &base.with_exec(Exec::Pool(Arc::clone(&pool))));
+        assert_eq!(serial.flips, pooled.flips, "qseed={qseed}: per-core flips");
+        assert_stats_identical(&serial.stats, &pooled.stats, &format!("sense qseed={qseed}"));
+    }
+    assert_eq!(pool.panicked(), 0);
+}
+
+#[test]
+fn execute_batch_matches_serial_query_stream() {
+    let chip = build_chip(400, 128, 4, 41, Metric::Mips);
+    let pool = Arc::new(ThreadPool::new(4));
+    let mut qrng = Pcg::new(5);
+    let queries: Vec<Vec<i8>> = (0..11)
+        .map(|_| (0..128).map(|_| qrng.int_in(-128, 127) as i8).collect())
+        .collect();
+    let plan = QueryPlan::topk(10).seed(123).build().unwrap();
+    // Serial stream: one execute per query over the plan's nonce stream.
+    let want: Vec<_> = queries
+        .iter()
+        .zip(plan.nonces(queries.len()))
+        .map(|(q, nonce)| chip.execute(q, &plan.with_nonce(nonce)))
+        .collect();
+    let got = chip.execute_batch(&queries, &plan.with_exec(Exec::Pool(Arc::clone(&pool))));
+    assert_eq!(got.len(), want.len());
+    for (qi, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+        assert_eq!(g.topk, w.topk, "query {qi}: ranking");
+        assert_stats_identical(&g.stats, &w.stats, &format!("batch query {qi}"));
+    }
+    assert_eq!(pool.panicked(), 0);
+}
+
+#[test]
+fn execute_batch_empty_and_single() {
+    let chip = build_chip(200, 128, 2, 51, Metric::Mips);
+    let pool = Arc::new(ThreadPool::new(2));
+    let plan = QueryPlan::topk(5).seed(2).pool(Arc::clone(&pool)).build().unwrap();
+    assert!(chip.execute_batch(&[], &plan).is_empty());
+    let mut qrng = Pcg::new(1);
+    let q: Vec<i8> = (0..128).map(|_| qrng.int_in(-128, 127) as i8).collect();
+    let want = chip.execute(&q, &QueryPlan::topk(5).seed(2).build().unwrap());
+    let got = chip.execute_batch(std::slice::from_ref(&q), &plan);
     assert_eq!(got.len(), 1);
-    assert_eq!(got[0].0, want.0);
+    assert_eq!(got[0].topk, want.topk);
+    assert_eq!(pool.panicked(), 0);
 }
 
 /// Mutate-then-query schedule: with online corpus mutations interleaved
-/// between query rounds, the parallel per-core execution must stay
-/// bit-identical to the serial walk. Two identical chips receive the
-/// same mutation stream (adds, in-place updates, tombstones — same
-/// payloads, same write rng); after every round the serial path on one
-/// chip and the threaded paths on the other must agree bit-for-bit.
+/// between query rounds, pooled plan execution must stay bit-identical
+/// to the serial walk. Two identical chips receive the same mutation
+/// stream (adds, in-place updates, tombstones — same payloads, same
+/// write rng); after every round the serial plan on one chip and the
+/// pooled plan on the other must agree bit-for-bit.
 #[test]
 fn mutate_then_query_schedule_bit_identical() {
     use dirc_rag::dirc::chip::DocPayload;
@@ -176,6 +189,7 @@ fn mutate_then_query_schedule_bit_identical() {
     let (n, dim) = (400, 128);
     let mut chip_s = build_chip(n, dim, 4, 71, Metric::Cosine);
     let mut chip_p = build_chip(n, dim, 4, 71, Metric::Cosine);
+    let pool = Arc::new(ThreadPool::new(4));
 
     // Fresh embeddings to ingest, in the same quantised space.
     let mut erng = Pcg::new(72);
@@ -191,17 +205,17 @@ fn mutate_then_query_schedule_bit_identical() {
     let mut next_extra = 0usize;
 
     for round in 0..3usize {
-        // Queries on the current corpus: serial vs threaded, same seeds.
+        // Queries on the current corpus: serial vs pooled, same plans.
         for qseed in 0..2u64 {
             let mut qrng = Pcg::new(700 + round as u64 * 10 + qseed);
             let q: Vec<i8> = (0..dim).map(|_| qrng.int_in(-128, 127) as i8).collect();
-            let mut r1 = Pcg::new(round as u64 * 100 + qseed);
-            let mut r2 = Pcg::new(round as u64 * 100 + qseed);
-            let (top_s, stats_s) = chip_s.query(&q, 10, &mut r1);
-            let (top_p, stats_p) = chip_p.query_on(&q, 10, &mut r2, 4);
+            let base =
+                QueryPlan::topk(10).seed(round as u64 * 100 + qseed).build().unwrap();
+            let s = chip_s.execute(&q, &base.with_exec(Exec::Serial));
+            let p = chip_p.execute(&q, &base.with_exec(Exec::Pool(Arc::clone(&pool))));
             let ctx = format!("round {round} qseed {qseed}");
-            assert_eq!(top_s, top_p, "{ctx}: ranking");
-            assert_stats_identical(&stats_s, &stats_p, &ctx);
+            assert_eq!(s.topk, p.topk, "{ctx}: ranking");
+            assert_stats_identical(&s.stats, &p.stats, &ctx);
         }
 
         // Mutation burst, applied identically to both chips.
@@ -229,20 +243,17 @@ fn mutate_then_query_schedule_bit_identical() {
     }
 
     // Final corpus: the pooled queries x cores batch matrix must also
-    // match a serial query stream bit-for-bit.
-    let chip_p = Arc::new(chip_p);
-    let pool = ThreadPool::new(4);
+    // match the serial batch bit-for-bit.
     let mut qrng = Pcg::new(800);
     let queries: Vec<Vec<i8>> = (0..6)
         .map(|_| (0..dim).map(|_| qrng.int_in(-128, 127) as i8).collect())
         .collect();
-    let mut r_serial = Pcg::new(901);
-    let mut r_batch = Pcg::new(901);
-    let want: Vec<_> = queries.iter().map(|q| chip_s.query(q, 10, &mut r_serial)).collect();
-    let got = DircChip::query_batch(&chip_p, &pool, &queries, 10, &mut r_batch);
-    for (qi, ((gt, gs), (wt, ws))) in got.iter().zip(want.iter()).enumerate() {
-        assert_eq!(gt, wt, "post-churn batch query {qi}");
-        assert_stats_identical(gs, ws, &format!("post-churn batch query {qi}"));
+    let plan = QueryPlan::topk(10).seed(901).build().unwrap();
+    let want = chip_s.execute_batch(&queries, &plan.with_exec(Exec::Serial));
+    let got = chip_p.execute_batch(&queries, &plan.with_exec(Exec::Pool(Arc::clone(&pool))));
+    for (qi, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+        assert_eq!(g.topk, w.topk, "post-churn batch query {qi}");
+        assert_stats_identical(&g.stats, &w.stats, &format!("post-churn batch query {qi}"));
     }
     assert_eq!(pool.panicked(), 0);
 }
@@ -257,12 +268,12 @@ fn build_pruned_chip(db: &Quantized, cores: usize, n_clusters: usize) -> DircChi
     DircChip::build(cfg, db)
 }
 
-/// With pruning enabled, serial `query_opt` and the pooled
-/// queries × cores matrix (`query_batch_opt`) must stay bit-identical —
-/// across policies, including on tie-heavy scores where the skipped-core
-/// merge could silently reorder duplicates.
+/// With pruning enabled, the serial plan and the pooled queries × cores
+/// matrix must stay bit-identical — across policies, including on
+/// tie-heavy scores where the skipped-core merge could silently reorder
+/// duplicates.
 #[test]
-fn pruned_query_batch_bit_identical_including_ties() {
+fn pruned_execute_batch_bit_identical_including_ties() {
     let (n, dim) = (512, 128);
     for (label, db) in [
         ("unit-rows", {
@@ -272,40 +283,35 @@ fn pruned_query_batch_bit_identical_including_ties() {
         }),
         ("tie-heavy", tie_heavy_db(n, dim, 82)),
     ] {
-        let chip = Arc::new(build_pruned_chip(&db, 4, 8));
-        let pool = ThreadPool::new(4);
+        let chip = build_pruned_chip(&db, 4, 8);
+        let pool = Arc::new(ThreadPool::new(4));
         let mut qrng = Pcg::new(83);
         let queries: Vec<Vec<i8>> = (0..8)
             .map(|_| (0..dim).map(|_| qrng.int_in(-3, 3) as i8).collect())
             .collect();
         for prune in [Prune::Default, Prune::Probe(1), Prune::Probe(8), Prune::None] {
-            let mut r_serial = Pcg::new(84);
-            let mut r_batch = Pcg::new(84);
-            let want: Vec<_> = queries
-                .iter()
-                .map(|q| chip.query_opt(q, 12, prune, &mut r_serial, 1))
-                .collect();
+            let plan = QueryPlan::topk(12).seed(84).prune(prune).build().unwrap();
+            let want = chip.execute_batch(&queries, &plan.with_exec(Exec::Serial));
             let got =
-                DircChip::query_batch_opt(&chip, &pool, &queries, 12, prune, &mut r_batch);
+                chip.execute_batch(&queries, &plan.with_exec(Exec::Pool(Arc::clone(&pool))));
             assert_eq!(got.len(), want.len());
-            for (qi, ((gt, gs), (wt, ws))) in got.iter().zip(want.iter()).enumerate() {
+            for (qi, (g, w)) in got.iter().zip(want.iter()).enumerate() {
                 let ctx = format!("{label} {prune:?} query {qi}");
-                assert_eq!(gt, wt, "{ctx}: ranking");
-                for (a, b) in gt.iter().zip(wt.iter()) {
+                assert_eq!(g.topk, w.topk, "{ctx}: ranking");
+                for (a, b) in g.topk.iter().zip(w.topk.iter()) {
                     assert_eq!(a.score.to_bits(), b.score.to_bits(), "{ctx}: score bits");
                 }
-                assert_stats_identical(gs, ws, &ctx);
+                assert_stats_identical(&g.stats, &w.stats, &ctx);
             }
-            assert_eq!(r_serial.next_u64(), r_batch.next_u64(), "{label} {prune:?}: rng");
         }
         assert_eq!(pool.panicked(), 0);
     }
 }
 
 /// Mutate-then-query interleaving with pruning live: after every
-/// add/update/delete round the pruned serial path and the pruned pooled
-/// batch path agree bit-for-bit (cluster routing and hosted-cluster
-/// bitsets are part of the deterministic state both chips share).
+/// add/update/delete round the pruned serial plan and the pruned pooled
+/// plan agree bit-for-bit (cluster routing and hosted-cluster bitsets
+/// are part of the deterministic state both chips share).
 #[test]
 fn pruned_mutate_then_query_schedule_bit_identical() {
     use dirc_rag::dirc::chip::DocPayload;
@@ -316,6 +322,7 @@ fn pruned_mutate_then_query_schedule_bit_identical() {
     let db = quantize(&fp, n, dim, QuantScheme::Int8);
     let mut chip_s = build_pruned_chip(&db, 4, 8);
     let mut chip_p = build_pruned_chip(&db, 4, 8);
+    let pool = Arc::new(ThreadPool::new(4));
 
     let mut erng = Pcg::new(92);
     let extra_fp = random_unit_rows(18, dim, &mut erng);
@@ -331,13 +338,16 @@ fn pruned_mutate_then_query_schedule_bit_identical() {
         for prune in [Prune::Default, Prune::Probe(5)] {
             let mut qrng = Pcg::new(940 + round as u64);
             let q: Vec<i8> = (0..dim).map(|_| qrng.int_in(-128, 127) as i8).collect();
-            let mut r1 = Pcg::new(round as u64 * 31 + 7);
-            let mut r2 = Pcg::new(round as u64 * 31 + 7);
-            let (top_s, stats_s) = chip_s.query_opt(&q, 10, prune, &mut r1, 1);
-            let (top_p, stats_p) = chip_p.query_opt(&q, 10, prune, &mut r2, 4);
+            let plan = QueryPlan::topk(10)
+                .seed(round as u64 * 31 + 7)
+                .prune(prune)
+                .build()
+                .unwrap();
+            let s = chip_s.execute(&q, &plan.with_exec(Exec::Serial));
+            let p = chip_p.execute(&q, &plan.with_exec(Exec::Pool(Arc::clone(&pool))));
             let ctx = format!("round {round} {prune:?}");
-            assert_eq!(top_s, top_p, "{ctx}: ranking");
-            assert_stats_identical(&stats_s, &stats_p, &ctx);
+            assert_eq!(s.topk, p.topk, "{ctx}: ranking");
+            assert_stats_identical(&s.stats, &p.stats, &ctx);
         }
 
         let adds: Vec<DocPayload> = (0..4).map(|i| payload(next_extra + i)).collect();
@@ -359,24 +369,17 @@ fn pruned_mutate_then_query_schedule_bit_identical() {
         assert_eq!(chip_s.n_docs(), chip_p.n_docs(), "round {round}: corpus size");
     }
 
-    // Post-churn: pooled batch matrix vs serial stream, pruned.
-    let chip_p = Arc::new(chip_p);
-    let pool = ThreadPool::new(4);
+    // Post-churn: pooled batch matrix vs serial batch, pruned.
     let mut qrng = Pcg::new(95);
     let queries: Vec<Vec<i8>> = (0..5)
         .map(|_| (0..dim).map(|_| qrng.int_in(-128, 127) as i8).collect())
         .collect();
-    let mut r_serial = Pcg::new(96);
-    let mut r_batch = Pcg::new(96);
-    let want: Vec<_> = queries
-        .iter()
-        .map(|q| chip_s.query_opt(q, 10, Prune::Default, &mut r_serial, 1))
-        .collect();
-    let got =
-        DircChip::query_batch_opt(&chip_p, &pool, &queries, 10, Prune::Default, &mut r_batch);
-    for (qi, ((gt, gs), (wt, ws))) in got.iter().zip(want.iter()).enumerate() {
-        assert_eq!(gt, wt, "post-churn pruned batch query {qi}");
-        assert_stats_identical(gs, ws, &format!("post-churn pruned batch query {qi}"));
+    let plan = QueryPlan::topk(10).seed(96).build().unwrap();
+    let want = chip_s.execute_batch(&queries, &plan.with_exec(Exec::Serial));
+    let got = chip_p.execute_batch(&queries, &plan.with_exec(Exec::Pool(Arc::clone(&pool))));
+    for (qi, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+        assert_eq!(g.topk, w.topk, "post-churn pruned batch query {qi}");
+        assert_stats_identical(&g.stats, &w.stats, &format!("post-churn pruned batch query {qi}"));
     }
     assert_eq!(pool.panicked(), 0);
 }
@@ -400,23 +403,23 @@ fn pooled_sim_engine_end_to_end_identical() {
         .map(|_| (0..128).map(|_| qrng.int_in(-128, 127) as i8).collect())
         .collect();
 
-    // Single-query path.
+    // Single-query path: the same Auto plan resolves serial on one
+    // engine and pooled on the other — identical results.
     for (qi, q) in queries.iter().enumerate() {
-        let mut r1 = Pcg::new(qi as u64);
-        let mut r2 = Pcg::new(qi as u64);
-        let (t1, s1) = serial.retrieve(q, 5, &mut r1);
-        let (t2, s2) = pooled.retrieve(q, 5, &mut r2);
-        assert_eq!(t1, t2, "query {qi}");
-        assert_stats_identical(&s1, &s2, &format!("engine query {qi}"));
+        let plan = QueryPlan::topk(5).seed(qi as u64).build().unwrap();
+        let a = serial.retrieve(q, &plan);
+        let b = pooled.retrieve(q, &plan);
+        assert_eq!(a.topk, b.topk, "query {qi}");
+        assert_stats_identical(&a.stats, &b.stats, &format!("engine query {qi}"));
     }
 
-    // Batch path vs the default serial stream.
-    let mut r1 = Pcg::new(99);
-    let mut r2 = Pcg::new(99);
-    let want = Engine::retrieve_batch(&serial, &queries, 5, &mut r1);
-    let got = pooled.retrieve_batch(&queries, 5, &mut r2);
-    for (qi, ((gt, gs), (wt, ws))) in got.iter().zip(want.iter()).enumerate() {
-        assert_eq!(gt, wt, "batch query {qi}");
-        assert_stats_identical(gs, ws, &format!("engine batch query {qi}"));
+    // Batch path vs the serial engine's per-query nonce loop.
+    let plan = QueryPlan::topk(5).seed(99).build().unwrap();
+    let want = serial.retrieve_batch(&queries, &plan);
+    let got = pooled.retrieve_batch(&queries, &plan);
+    for (qi, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+        assert_eq!(g.topk, w.topk, "batch query {qi}");
+        assert_stats_identical(&g.stats, &w.stats, &format!("engine batch query {qi}"));
     }
+    assert_eq!(pool.panicked(), 0);
 }

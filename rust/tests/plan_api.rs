@@ -1,0 +1,621 @@
+//! Golden-vector equivalence net for the `QueryPlan` execution API.
+//!
+//! The variant matrix (`query`/`query_on`/`query_opt`/`query_batch`/
+//! `query_batch_opt`, the `sense_pass*` family, `Engine::retrieve*`,
+//! `submit`/`submit_opt`) was collapsed into plan-driven entry points.
+//! These tests pin that the collapse changed **nothing observable**:
+//!
+//! * a reference implementation of the pre-plan serial walk — rebuilt
+//!   verbatim from the public primitives the old variants were made of
+//!   (`macro_mask` -> nonce -> `run_core_query` per core ->
+//!   `finish_query_pruned`) — must match `execute` bit-for-bit, for
+//!   every rng policy, prune policy, serial and pooled, on smooth and
+//!   tie-heavy score distributions, and through mutate-then-query
+//!   schedules;
+//! * `execute_batch` must equal the serial stream of single-query
+//!   calls (the old `query_batch == loop of query` contract, restated
+//!   in nonce terms);
+//! * plan validation rejects what the old ad-hoc checks rejected, with
+//!   typed errors;
+//! * the clean oracle under a probing plan equals the clean exhaustive
+//!   ranking restricted to the probed macros.
+
+use std::sync::Arc;
+
+use dirc_rag::coordinator::{Coordinator, CoordinatorConfig, Engine, Query, SimEngine};
+use dirc_rag::dirc::chip::{ChipConfig, CoreOutcome, DircChip, QueryStats};
+use dirc_rag::dirc::macro_::SenseStats;
+use dirc_rag::retrieval::cluster::ClusterPolicy;
+use dirc_rag::retrieval::plan::{Exec, PlanError, QueryPlan, RngPolicy, StatsDetail};
+use dirc_rag::retrieval::quant::{quantize, random_unit_rows, QuantScheme, Quantized};
+use dirc_rag::retrieval::score::{norm_i8, Metric};
+use dirc_rag::retrieval::topk::ScoredDoc;
+use dirc_rag::retrieval::Prune;
+use dirc_rag::util::pool::ThreadPool;
+use dirc_rag::util::rng::Pcg;
+
+// ---------------------------------------------------------------------
+// The reference path: the pre-plan serial walk, captured from the old
+// variants before their deletion. Any change to `execute`'s semantics
+// shows up as a diff against this.
+
+/// Zero-cost outcome of a prefilter-skipped macro (the old variants'
+/// `skipped_outcome`).
+fn skipped(c: usize) -> CoreOutcome {
+    CoreOutcome {
+        core: c,
+        local_topk: Vec::new(),
+        stats: SenseStats::default(),
+        used_slots: 0,
+        max_column_resenses: 0,
+        n_docs: 0,
+        skipped: true,
+    }
+}
+
+/// The old `query_opt(q, k, prune, rng, 1)` body: mask before nonce,
+/// one nonce drawn from the caller's stream, per-core serial walk,
+/// deterministic reduction.
+fn reference_query(
+    chip: &DircChip,
+    q: &[i8],
+    k: usize,
+    prune: Prune,
+    rng: &mut Pcg,
+) -> (Vec<ScoredDoc>, QueryStats) {
+    let mask = chip.macro_mask(q, prune);
+    let qnonce = rng.next_u64();
+    let q_norm = norm_i8(q);
+    let outcomes: Vec<CoreOutcome> = (0..chip.cores().len())
+        .map(|c| match &mask {
+            Some(m) if !m[c] => skipped(c),
+            _ => chip.run_core_query(c, q, q_norm, k, qnonce),
+        })
+        .collect();
+    chip.finish_query_pruned(outcomes, k, mask.is_some())
+}
+
+fn assert_stats_identical(a: &QueryStats, b: &QueryStats, ctx: &str) {
+    assert_eq!(a.sense, b.sense, "{ctx}: sense stats");
+    assert_eq!(a.cycles, b.cycles, "{ctx}: cycles");
+    assert_eq!(a.work_cycles, b.work_cycles, "{ctx}: work cycles");
+    assert_eq!(a.macros_sensed, b.macros_sensed, "{ctx}: macros sensed");
+    assert_eq!(a.macros_skipped, b.macros_skipped, "{ctx}: macros skipped");
+    assert_eq!(a.docs_scored, b.docs_scored, "{ctx}: docs scored");
+    assert_eq!(a.latency_s.to_bits(), b.latency_s.to_bits(), "{ctx}: latency bits");
+    assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits(), "{ctx}: energy bits");
+}
+
+fn assert_ranking_identical(a: &[ScoredDoc], b: &[ScoredDoc], ctx: &str) {
+    assert_eq!(a, b, "{ctx}: ranking");
+    for (x, y) in a.iter().zip(b.iter()) {
+        assert_eq!(x.score.to_bits(), y.score.to_bits(), "{ctx}: score bits");
+    }
+}
+
+fn unit_db(n: usize, dim: usize, seed: u64) -> Quantized {
+    let mut rng = Pcg::new(seed);
+    let fp = random_unit_rows(n, dim, &mut rng);
+    quantize(&fp, n, dim, QuantScheme::Int8)
+}
+
+/// {-1, 0, 1}-valued database: integer scores collide constantly, the
+/// distribution that stresses tie-breaking across merges.
+fn tie_heavy_db(n: usize, dim: usize, seed: u64) -> Quantized {
+    let mut rng = Pcg::new(seed);
+    let values: Vec<i8> = (0..n * dim).map(|_| rng.int_in(-1, 1) as i8).collect();
+    let norms: Vec<f32> = (0..n)
+        .map(|i| norm_i8(&values[i * dim..(i + 1) * dim]) as f32)
+        .collect();
+    Quantized { scheme: QuantScheme::Int8, n, dim, values, scale: 1.0, norms }
+}
+
+fn plain_chip(db: &Quantized, cores: usize, metric: Metric) -> DircChip {
+    let cfg = ChipConfig {
+        cores,
+        map_points: 40,
+        ..ChipConfig::paper_default(db.dim, metric)
+    };
+    DircChip::build(cfg, db)
+}
+
+fn clustered_chip(db: &Quantized, cores: usize, n_clusters: usize) -> DircChip {
+    let cfg = ChipConfig {
+        cores,
+        map_points: 40,
+        cluster: ClusterPolicy { n_clusters, nprobe: 2, kmeans_iters: 6 },
+        ..ChipConfig::paper_default(db.dim, Metric::Mips)
+    };
+    DircChip::build(cfg, db)
+}
+
+fn rand_query(dim: usize, lo: i64, hi: i64, seed: u64) -> Vec<i8> {
+    let mut rng = Pcg::new(seed);
+    (0..dim).map(|_| rng.int_in(lo, hi) as i8).collect()
+}
+
+// ---------------------------------------------------------------------
+// execute vs the reference walk.
+
+/// `Seeded(s)` executes exactly like the old API called with a fresh
+/// `&mut Pcg::new(s)` — across metrics, prune policies, serial and
+/// pooled, smooth and tie-heavy scores.
+#[test]
+fn execute_matches_reference_under_seeded_policy() {
+    let pool = Arc::new(ThreadPool::new(4));
+    for (label, db) in [
+        ("unit-rows", unit_db(420, 128, 11)),
+        ("tie-heavy", tie_heavy_db(420, 128, 12)),
+    ] {
+        for metric in [Metric::Mips, Metric::Cosine] {
+            let chip = plain_chip(&db, 4, metric);
+            for seed in 0..3u64 {
+                let q = rand_query(128, -128, 127, 300 + seed);
+                let mut ref_rng = Pcg::new(seed);
+                let (want_top, want_stats) =
+                    reference_query(&chip, &q, 10, Prune::Default, &mut ref_rng);
+                for exec in [Exec::Serial, Exec::Pool(Arc::clone(&pool))] {
+                    let plan =
+                        QueryPlan::topk(10).seed(seed).exec(exec.clone()).build().unwrap();
+                    let got = chip.execute(&q, &plan);
+                    let ctx = format!("{label} {metric:?} seed {seed} {exec:?}");
+                    assert_ranking_identical(&got.topk, &want_top, &ctx);
+                    assert_stats_identical(&got.stats, &want_stats, &ctx);
+                }
+            }
+        }
+    }
+    assert_eq!(pool.panicked(), 0);
+}
+
+/// `Nonce(x)` (the streaming contract) uses the caller's draw verbatim:
+/// hoisting `rng.next_u64()` into the plan reproduces the old
+/// shared-stream call sequence bit-for-bit, including across calls.
+#[test]
+fn execute_matches_reference_under_stream_policy() {
+    let db = unit_db(400, 128, 21);
+    let chip = plain_chip(&db, 4, Metric::Cosine);
+    let base = QueryPlan::topk(8).build().unwrap();
+    // One shared stream driving five consecutive queries, exactly as a
+    // pre-plan caller would have passed `&mut rng` five times.
+    let mut ref_rng = Pcg::new(77);
+    let mut plan_rng = Pcg::new(77);
+    for qi in 0..5u64 {
+        let q = rand_query(128, -128, 127, 500 + qi);
+        let (want_top, want_stats) =
+            reference_query(&chip, &q, 8, Prune::Default, &mut ref_rng);
+        let got = chip.execute(&q, &base.with_stream(&mut plan_rng));
+        let ctx = format!("stream query {qi}");
+        assert_ranking_identical(&got.topk, &want_top, &ctx);
+        assert_stats_identical(&got.stats, &want_stats, &ctx);
+    }
+    // Both streams are left in the same position: one draw per query.
+    assert_eq!(ref_rng.next_u64(), plan_rng.next_u64());
+}
+
+/// Pruned plans match the reference walk under every policy, and the
+/// full-probe plan is bit-identical to the exhaustive one.
+#[test]
+fn pruned_execute_matches_reference_and_full_probe_is_exhaustive() {
+    let db = unit_db(480, 128, 31);
+    let chip = clustered_chip(&db, 4, 8);
+    let pool = Arc::new(ThreadPool::new(4));
+    for seed in 0..3u64 {
+        let q = rand_query(128, -128, 127, 700 + seed);
+        for prune in [Prune::None, Prune::Default, Prune::Probe(1), Prune::Probe(8)] {
+            let mut ref_rng = Pcg::new(seed);
+            let (want_top, want_stats) = reference_query(&chip, &q, 12, prune, &mut ref_rng);
+            for exec in [Exec::Serial, Exec::Pool(Arc::clone(&pool))] {
+                let plan = QueryPlan::topk(12)
+                    .seed(seed)
+                    .prune(prune)
+                    .exec(exec.clone())
+                    .build()
+                    .unwrap();
+                let got = chip.execute(&q, &plan);
+                let ctx = format!("seed {seed} {prune:?} {exec:?}");
+                assert_ranking_identical(&got.topk, &want_top, &ctx);
+                assert_stats_identical(&got.stats, &want_stats, &ctx);
+            }
+        }
+        // Full probe == exhaustive, bit for bit (census included).
+        let base = QueryPlan::topk(12).seed(seed).build().unwrap();
+        let full = chip.execute(&q, &base.with_prune(Prune::None).unwrap());
+        let probe_all = chip.execute(&q, &base.with_prune(Prune::Probe(8)).unwrap());
+        assert_ranking_identical(&full.topk, &probe_all.topk, "full-probe");
+        assert_stats_identical(&full.stats, &probe_all.stats, "full-probe");
+    }
+}
+
+/// The mask never consumes rng: plans differing only in `prune` sense
+/// with identical flips on the cores both run (the old "caller rng
+/// position is policy-independent" guarantee, restated).
+#[test]
+fn nonce_stream_is_prune_policy_independent() {
+    let db = unit_db(480, 128, 41);
+    let chip = clustered_chip(&db, 4, 8);
+    let q = rand_query(128, -128, 127, 900);
+    let base = QueryPlan::topk(10).seed(5).build().unwrap();
+    let full = chip.execute(&q, &base.with_prune(Prune::None).unwrap());
+    let pruned = chip.execute(&q, &base.with_prune(Prune::Probe(1)).unwrap());
+    // Every pruned result must appear in the exhaustive ranking with
+    // the same score bits (same flips on the sensed cores).
+    for d in &pruned.topk {
+        let twin = full.topk.iter().find(|f| f.doc_id == d.doc_id);
+        if let Some(twin) = twin {
+            assert_eq!(twin.score.to_bits(), d.score.to_bits(), "doc {}", d.doc_id);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// execute_batch vs the serial stream.
+
+/// `execute_batch` equals the serial stream of `execute` calls over the
+/// plan's nonce stream — serial and pooled, pruned and exhaustive,
+/// tie-heavy included (the old `query_batch == loop of query` golden).
+#[test]
+fn execute_batch_matches_serial_stream() {
+    let pool = Arc::new(ThreadPool::new(4));
+    for (label, db) in [
+        ("unit-rows", unit_db(512, 128, 51)),
+        ("tie-heavy", tie_heavy_db(512, 128, 52)),
+    ] {
+        let chip = clustered_chip(&db, 4, 8);
+        let queries: Vec<Vec<i8>> =
+            (0..9).map(|i| rand_query(128, -3, 3, 1000 + i)).collect();
+        for prune in [Prune::None, Prune::Default, Prune::Probe(8)] {
+            let plan = QueryPlan::topk(12).seed(84).prune(prune).build().unwrap();
+            // The serial stream: one execute per query, nonce i of the
+            // plan's stream (exactly what the batch must reproduce).
+            let nonces = plan.nonces(queries.len());
+            let want: Vec<_> = queries
+                .iter()
+                .zip(&nonces)
+                .map(|(q, &nonce)| chip.execute(q, &plan.with_nonce(nonce)))
+                .collect();
+            for exec in [Exec::Serial, Exec::Pool(Arc::clone(&pool))] {
+                let got = chip.execute_batch(&queries, &plan.with_exec(exec.clone()));
+                assert_eq!(got.len(), want.len());
+                for (qi, (g, w)) in got.iter().zip(&want).enumerate() {
+                    let ctx = format!("{label} {prune:?} {exec:?} query {qi}");
+                    assert_ranking_identical(&g.topk, &w.topk, &ctx);
+                    assert_stats_identical(&g.stats, &w.stats, &ctx);
+                }
+            }
+        }
+    }
+    assert_eq!(pool.panicked(), 0);
+}
+
+/// Batch edge cases: empty and single-query batches.
+#[test]
+fn execute_batch_empty_and_single() {
+    let db = unit_db(200, 128, 61);
+    let chip = plain_chip(&db, 2, Metric::Mips);
+    let plan = QueryPlan::topk(5).seed(2).build().unwrap();
+    assert!(chip.execute_batch(&[], &plan).is_empty());
+    let q = rand_query(128, -128, 127, 1100);
+    let want = chip.execute(&q, &plan);
+    let got = chip.execute_batch(std::slice::from_ref(&q), &plan);
+    assert_eq!(got.len(), 1);
+    assert_ranking_identical(&got[0].topk, &want.topk, "batch of one");
+    assert_stats_identical(&got[0].stats, &want.stats, "batch of one");
+}
+
+// ---------------------------------------------------------------------
+// Mutate-then-query schedules (streaming rng across corpus versions).
+
+/// Two identical chips, the same mutation stream; between rounds the
+/// reference walk (shared caller rng) and the plan path (stream-hoisted
+/// nonces) must stay bit-identical — the old mutate-then-query golden,
+/// restated for plans.
+#[test]
+fn mutate_then_query_schedule_matches_reference() {
+    use dirc_rag::dirc::chip::DocPayload;
+
+    let (n, dim) = (400, 128);
+    let db = unit_db(n, dim, 71);
+    let mut chip_ref = clustered_chip(&db, 4, 8);
+    let mut chip_plan = clustered_chip(&db, 4, 8);
+
+    let extra = unit_db(18, dim, 72);
+    let payload =
+        |i: usize| DocPayload { values: extra.row(i).to_vec(), norm: extra.norms[i] };
+
+    let mut w_ref = Pcg::new(73);
+    let mut w_plan = Pcg::new(73);
+    let mut q_ref = Pcg::new(74);
+    let mut q_plan = Pcg::new(74);
+    let base = QueryPlan::topk(10).build().unwrap();
+    let mut next_extra = 0usize;
+
+    for round in 0..3usize {
+        for prune in [Prune::Default, Prune::Probe(5)] {
+            let q = rand_query(dim, -128, 127, 1200 + round as u64);
+            let (want_top, want_stats) =
+                reference_query(&chip_ref, &q, 10, prune, &mut q_ref);
+            let plan = base.with_prune(prune).unwrap().with_stream(&mut q_plan);
+            let got = chip_plan.execute(&q, &plan);
+            let ctx = format!("round {round} {prune:?}");
+            assert_ranking_identical(&got.topk, &want_top, &ctx);
+            assert_stats_identical(&got.stats, &want_stats, &ctx);
+        }
+
+        // Identical mutation burst on both chips.
+        let adds: Vec<DocPayload> = (0..4).map(|i| payload(next_extra + i)).collect();
+        next_extra += 4;
+        let (ids_a, _) = chip_ref.add_docs(&adds, &mut w_ref).expect("add");
+        let (ids_b, _) = chip_plan.add_docs(&adds, &mut w_plan).expect("add");
+        assert_eq!(ids_a, ids_b, "round {round}: assigned ids diverged");
+
+        let upd: Vec<(u64, DocPayload)> = (0..2)
+            .map(|i| ((round * 29 + i * 11) as u64 % n as u64, payload(next_extra + i)))
+            .collect();
+        next_extra += 2;
+        chip_ref.update_docs(&upd, &mut w_ref).expect("update");
+        chip_plan.update_docs(&upd, &mut w_plan).expect("update");
+
+        let dels = [(round * 37 + 5) as u64 % n as u64];
+        chip_ref.delete_docs(&dels);
+        chip_plan.delete_docs(&dels);
+        assert_eq!(chip_ref.n_docs(), chip_plan.n_docs(), "round {round}: corpus size");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Engine and coordinator layers.
+
+/// `Engine::retrieve` / `retrieve_batch` on a `SimEngine` equal the
+/// chip-level plan execution — serial engine, pooled engine, and the
+/// explicitly-serial plan on a pooled engine.
+#[test]
+fn engine_layer_matches_chip_layer() {
+    let db = unit_db(384, 128, 81);
+    let mk_cfg = || ChipConfig {
+        cores: 4,
+        map_points: 40,
+        ..ChipConfig::paper_default(128, Metric::Cosine)
+    };
+    let serial = SimEngine::new(mk_cfg(), &db);
+    let pool = Arc::new(ThreadPool::new(4));
+    let pooled = SimEngine::with_pool(mk_cfg(), &db, Some(Arc::clone(&pool)));
+    let reference = DircChip::build(mk_cfg(), &db);
+
+    let queries: Vec<Vec<i8>> = (0..6).map(|i| rand_query(128, -128, 127, 1300 + i)).collect();
+    for (qi, q) in queries.iter().enumerate() {
+        let plan = QueryPlan::topk(5).seed(qi as u64).build().unwrap();
+        let mut ref_rng = Pcg::new(qi as u64);
+        let (want_top, want_stats) =
+            reference_query(&reference, q, 5, Prune::Default, &mut ref_rng);
+        for (engine, label) in
+            [(&serial as &dyn Engine, "serial"), (&pooled as &dyn Engine, "pooled")]
+        {
+            let got = engine.retrieve(q, &plan);
+            let ctx = format!("{label} engine query {qi}");
+            assert_ranking_identical(&got.topk, &want_top, &ctx);
+            assert_stats_identical(&got.stats, &want_stats, &ctx);
+        }
+        let got = pooled.retrieve(q, &plan.with_exec(Exec::Serial));
+        assert_ranking_identical(&got.topk, &want_top, "forced-serial on pooled engine");
+    }
+
+    // Batch: both engines against the chip's batch (already pinned to
+    // the serial stream above).
+    let plan = QueryPlan::topk(5).seed(99).build().unwrap();
+    let want = reference.execute_batch(&queries, &plan);
+    for (engine, label) in
+        [(&serial as &dyn Engine, "serial"), (&pooled as &dyn Engine, "pooled")]
+    {
+        let got = engine.retrieve_batch(&queries, &plan);
+        for (qi, (g, w)) in got.iter().zip(&want).enumerate() {
+            let ctx = format!("{label} engine batch query {qi}");
+            assert_ranking_identical(&g.topk, &w.topk, &ctx);
+            assert_stats_identical(&g.stats, &w.stats, &ctx);
+        }
+    }
+    assert_eq!(pool.panicked(), 0);
+}
+
+/// `Coordinator::submit(query, plan)` honours the plan end-to-end: `k`
+/// sizes the response, per-request prune policies group and dispatch
+/// correctly, and mixed-plan bursts all come back right.
+#[test]
+fn submit_carries_plan_end_to_end() {
+    let db = unit_db(256, 128, 91);
+    let cfg = ChipConfig {
+        cores: 4,
+        map_points: 40,
+        cluster: ClusterPolicy { n_clusters: 8, nprobe: 4, kmeans_iters: 6 },
+        ..ChipConfig::paper_default(128, Metric::Cosine)
+    };
+    let engine = Arc::new(SimEngine::new(cfg, &db));
+    let chip = engine.chip();
+    let coord = Coordinator::start_sim(engine, CoordinatorConfig::default());
+
+    let emb_of = |i: usize| -> Vec<f32> {
+        db.row(i).iter().map(|&v| v as f32 * db.scale).collect()
+    };
+    // A burst mixing k and prune — workers must group by (k, prune) and
+    // still answer every request with its own plan's k.
+    let mut rxs = Vec::new();
+    for i in 0..24usize {
+        let k = if i % 2 == 0 { 5 } else { 3 };
+        let plan = match i % 3 {
+            0 => QueryPlan::topk(k).build().unwrap(),
+            1 => QueryPlan::topk(k).nprobe(2).build().unwrap(),
+            _ => QueryPlan::topk(k).prune(Prune::None).build().unwrap(),
+        };
+        // Whether doc i's macro survives this plan's prefilter is
+        // deterministic — compute it the way the ingest thread will
+        // (same quantisation), so the top-1 assertion below never
+        // hinges on a legitimately-pruned self document.
+        let emb = emb_of(i);
+        let q_int = quantize(&emb, 1, emb.len(), QuantScheme::Int8).values;
+        let self_probed = match chip.macro_mask(&q_int, plan.prune()) {
+            None => true,
+            Some(mask) => chip
+                .cores()
+                .iter()
+                .enumerate()
+                .any(|(c, core)| mask[c] && core.find_doc(i as u64).is_some()),
+        };
+        let (id, rx) = coord.submit(Query::Embedding(emb), plan).unwrap();
+        rxs.push((id, i, k, self_probed, rx));
+    }
+    for (id, i, k, self_probed, rx) in rxs {
+        let resp = rx.recv().expect("query answered");
+        assert_eq!(resp.id, id);
+        assert_eq!(resp.topk.len(), k, "request {i} must honour its plan's k");
+        if self_probed {
+            // A probed corpus row is its own best match under cosine.
+            assert_eq!(resp.topk[0].doc_id, i as u64, "request {i}");
+        }
+    }
+    let snap = coord.shutdown();
+    assert_eq!(snap.served, 24);
+    assert_eq!(snap.errors, 0);
+}
+
+// ---------------------------------------------------------------------
+// Clean oracle under plans.
+
+/// Clean pruned == clean exhaustive restricted to the probed macros
+/// (ideal-readout semantics survive the `clean_execute` collapse).
+#[test]
+fn clean_pruned_equals_clean_exhaustive_restricted() {
+    let db = unit_db(480, 128, 101);
+    let chip = clustered_chip(&db, 4, 8);
+    let n = chip.n_docs();
+    for seed in 0..6u64 {
+        let q = rand_query(128, -128, 127, 1500 + seed);
+        for nprobe in [1usize, 2, 5] {
+            let pruned = chip.clean_execute(
+                &q,
+                &QueryPlan::topk(10).nprobe(nprobe).build().unwrap(),
+            );
+            let full = chip.clean_execute(
+                &q,
+                &QueryPlan::topk(n).prune(Prune::None).build().unwrap(),
+            );
+            let Some(mask) = chip.macro_mask(&q, Prune::Probe(nprobe)) else {
+                // Degenerate mask: the pruned call ran exhaustively.
+                assert_eq!(pruned, full[..10.min(full.len())]);
+                continue;
+            };
+            let probed: std::collections::HashSet<u64> = chip
+                .cores()
+                .iter()
+                .enumerate()
+                .filter(|(c, _)| mask[*c])
+                .flat_map(|(_, core)| {
+                    core.doc_ids()
+                        .iter()
+                        .zip(core.live())
+                        .filter(|(_, &l)| l)
+                        .map(|(&id, _)| id)
+                })
+                .collect();
+            let want: Vec<ScoredDoc> = full
+                .iter()
+                .filter(|d| probed.contains(&d.doc_id))
+                .take(10)
+                .cloned()
+                .collect();
+            assert_eq!(pruned, want, "seed {seed} nprobe {nprobe}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Sense path and stats detail.
+
+/// `sense_execute` flips equal the functional path's flips (same nonce,
+/// same streams), serial == pooled, and the returned mask matches
+/// `macro_mask`.
+#[test]
+fn sense_execute_consistent_serial_and_pooled() {
+    let db = unit_db(400, 128, 111);
+    let chip = clustered_chip(&db, 4, 8);
+    let pool = Arc::new(ThreadPool::new(4));
+    for seed in 0..3u64 {
+        let q = rand_query(128, -128, 127, 1600 + seed);
+        for prune in [Prune::None, Prune::Probe(1)] {
+            let plan = QueryPlan::topk(10).seed(seed).prune(prune).build().unwrap();
+            let serial = chip.sense_execute(&q, &plan);
+            let pooled = chip.sense_execute(&q, &plan.with_exec(Exec::Pool(Arc::clone(&pool))));
+            let ctx = format!("seed {seed} {prune:?}");
+            assert_eq!(serial.flips, pooled.flips, "{ctx}: flips");
+            assert_stats_identical(&serial.stats, &pooled.stats, &ctx);
+            assert_eq!(serial.mask, pooled.mask, "{ctx}: mask");
+            assert_eq!(serial.mask, chip.macro_mask(&q, prune), "{ctx}: mask source");
+            // Masked-out macros contribute no flips.
+            if let Some(m) = &serial.mask {
+                for (c, sensed) in m.iter().enumerate() {
+                    if !sensed {
+                        assert!(serial.flips[c].is_empty(), "{ctx}: core {c}");
+                    }
+                }
+            }
+        }
+    }
+    assert_eq!(pool.panicked(), 0);
+}
+
+/// `StatsDetail::Counters` never changes results or counters, only
+/// zeroes the model fields.
+#[test]
+fn counters_detail_equivalence() {
+    let db = unit_db(320, 128, 121);
+    let chip = plain_chip(&db, 4, Metric::Mips);
+    let q = rand_query(128, -128, 127, 1700);
+    let full = chip.execute(&q, &QueryPlan::topk(10).seed(9).build().unwrap());
+    let lean = chip.execute(
+        &q,
+        &QueryPlan::topk(10).seed(9).detail(StatsDetail::Counters).build().unwrap(),
+    );
+    assert_ranking_identical(&full.topk, &lean.topk, "counters detail");
+    assert_eq!(full.stats.sense, lean.stats.sense);
+    assert_eq!(full.stats.docs_scored, lean.stats.docs_scored);
+    assert_eq!(
+        (full.stats.macros_sensed, full.stats.macros_skipped),
+        (lean.stats.macros_sensed, lean.stats.macros_skipped)
+    );
+    assert_eq!((lean.stats.cycles, lean.stats.work_cycles), (0, 0));
+    assert_eq!(lean.stats.energy_j, 0.0);
+    assert_eq!(lean.stats.latency_s, 0.0);
+}
+
+// ---------------------------------------------------------------------
+// Validation.
+
+#[test]
+fn plan_validation_typed_errors() {
+    assert_eq!(QueryPlan::topk(0).build().unwrap_err(), PlanError::ZeroK);
+    assert_eq!(QueryPlan::topk(5).nprobe(0).build().unwrap_err(), PlanError::ZeroNprobe);
+    assert_eq!(
+        QueryPlan::topk(100).corpus_hint(50).build().unwrap_err(),
+        PlanError::KBeyondCorpus { k: 100, corpus: 50 }
+    );
+    // Errors render human-readably (they surface through anyhow in the
+    // config binding and CLI).
+    assert!(PlanError::ZeroK.to_string().contains("k"));
+    assert!(
+        PlanError::KBeyondCorpus { k: 3, corpus: 2 }.to_string().contains("corpus"),
+    );
+}
+
+/// The plan's rng policy derivations are pinned: `Seeded(s)` is the
+/// `Pcg::new(s)` stream, `Nonce(x)` is verbatim-then-`Pcg::new(x)` — so
+/// the nonce contract can never silently change between PRs.
+#[test]
+fn rng_policy_derivations_pinned() {
+    let plan = QueryPlan::topk(1).seed(42).build().unwrap();
+    let mut r = Pcg::new(42);
+    assert_eq!(plan.nonces(3), vec![r.next_u64(), r.next_u64(), r.next_u64()]);
+
+    let plan = QueryPlan::topk(1).nonce(7).build().unwrap();
+    assert_eq!(plan.rng(), RngPolicy::Nonce(7));
+    let mut cont = Pcg::new(7);
+    assert_eq!(plan.nonces(2), vec![7, cont.next_u64()]);
+}

@@ -30,6 +30,7 @@ use dirc_rag::dirc::chip::{ChipConfig, DircChip, DocPayload};
 use dirc_rag::dirc::RemapStrategy;
 use dirc_rag::eval::precision_at_k;
 use dirc_rag::retrieval::cluster::ClusterPolicy;
+use dirc_rag::retrieval::plan::QueryPlan;
 use dirc_rag::retrieval::quant::{quantize, QuantScheme};
 use dirc_rag::retrieval::score::Metric;
 use dirc_rag::retrieval::Prune;
@@ -63,30 +64,34 @@ fn chip_cfg() -> ChipConfig {
 }
 
 /// Averaged P@{1,5,10} of the erroneous hardware path (detect on,
-/// error-aware remap), retrieved at k = 10 with a fixed rng stream.
+/// error-aware remap), retrieved at k = 10 under a seeded plan.
 fn run_eval(chip: &DircChip, ds: &SynthDataset) -> (f64, f64, f64) {
     run_eval_pruned(chip, ds, Prune::None).0
 }
 
 /// [`run_eval`] under an explicit pruning policy; also returns the
-/// summed work cycles and skipped-macro count across the query set
-/// (same rng stream either way — the mask never consumes query RNG).
+/// summed work cycles and skipped-macro count across the query set.
+/// Seed 13 = the nonce stream the pre-plan harness consumed from
+/// `Pcg::new(13)`; both policies share it (the mask never consumes
+/// query rng), so their flips are bit-identical on the sensed cores.
 fn run_eval_pruned(
     chip: &DircChip,
     ds: &SynthDataset,
     prune: Prune,
 ) -> ((f64, f64, f64), (u64, u64)) {
-    let mut rng = Pcg::new(13);
+    let queries: Vec<Vec<i8>> = (0..N_QUERIES)
+        .map(|qi| quantize(ds.query(qi), 1, DIM, QuantScheme::Int8).values)
+        .collect();
+    let plan = QueryPlan::topk(10).prune(prune).seed(13).build().unwrap();
+    let outs = chip.execute_batch(&queries, &plan);
     let (mut p1, mut p5, mut p10) = (0.0, 0.0, 0.0);
     let (mut work, mut skipped) = (0u64, 0u64);
-    for qi in 0..N_QUERIES {
-        let q = quantize(ds.query(qi), 1, DIM, QuantScheme::Int8);
-        let (ranked, stats) = chip.query_opt(&q.values, 10, prune, &mut rng, 1);
-        work += stats.work_cycles;
-        skipped += stats.macros_skipped as u64;
-        p1 += precision_at_k(&ranked, &ds.qrels[qi], 1);
-        p5 += precision_at_k(&ranked, &ds.qrels[qi], 5);
-        p10 += precision_at_k(&ranked, &ds.qrels[qi], 10);
+    for (qi, out) in outs.iter().enumerate() {
+        work += out.stats.work_cycles;
+        skipped += out.stats.macros_skipped as u64;
+        p1 += precision_at_k(&out.topk, &ds.qrels[qi], 1);
+        p5 += precision_at_k(&out.topk, &ds.qrels[qi], 5);
+        p10 += precision_at_k(&out.topk, &ds.qrels[qi], 10);
     }
     let n = N_QUERIES as f64;
     ((p1 / n, p5 / n, p10 / n), (work, skipped))
@@ -94,10 +99,11 @@ fn run_eval_pruned(
 
 /// Clean-oracle P@1 (the software reference the hardware must track).
 fn run_clean_p1(chip: &DircChip, ds: &SynthDataset) -> f64 {
+    let oracle = QueryPlan::topk(10).prune(Prune::None).build().unwrap();
     let mut p1 = 0.0;
     for qi in 0..N_QUERIES {
         let q = quantize(ds.query(qi), 1, DIM, QuantScheme::Int8);
-        let ranked = chip.clean_query(&q.values, 10);
+        let ranked = chip.clean_execute(&q.values, &oracle);
         p1 += precision_at_k(&ranked, &ds.qrels[qi], 1);
     }
     p1 / N_QUERIES as f64

@@ -5,6 +5,7 @@
 use dirc_rag::coordinator::batcher::{BatchPolicy, Batcher};
 use dirc_rag::dirc::chip::{ChipConfig, DircChip, DocPayload};
 use dirc_rag::retrieval::cluster::ClusterPolicy;
+use dirc_rag::retrieval::plan::QueryPlan;
 use dirc_rag::retrieval::Prune;
 use dirc_rag::dirc::detect::DSumLut;
 use dirc_rag::dirc::device::MlcLevel;
@@ -214,7 +215,9 @@ fn prop_chip_topk_wellformed() {
         let chip = &cache.as_ref().unwrap().1;
         let mut rng = Pcg::new(k as u64);
         let q: Vec<i8> = (0..128).map(|_| rng.int_in(-128, 127) as i8).collect();
-        let (top, stats) = chip.query(&q, k, &mut rng);
+        let plan = QueryPlan::topk(k).stream(&mut rng).build().unwrap();
+        let out = chip.execute(&q, &plan);
+        let (top, stats) = (out.topk, out.stats);
         if top.len() != k.min(n) {
             return false;
         }
@@ -434,12 +437,28 @@ fn prop_pruned_equals_exhaustive_restricted_to_probed() {
         |&(nprobe, (k, seed))| {
             let mut qrng = Pcg::new(seed as u64);
             let q: Vec<i8> = (0..128).map(|_| qrng.int_in(-128, 127) as i8).collect();
-            // Same fresh rng seed -> same query nonce -> identical flips
-            // in both runs; only the candidate set differs.
-            let mut r1 = Pcg::new(seed as u64 + 5000);
-            let mut r2 = Pcg::new(seed as u64 + 5000);
-            let (pruned, _) = chip.query_opt(&q, k, Prune::Probe(nprobe), &mut r1, 1);
-            let (full, _) = chip.query_opt(&q, n, Prune::None, &mut r2, 1);
+            // Same plan seed -> same query nonce -> identical flips in
+            // both runs; only the candidate set differs.
+            let pruned = chip
+                .execute(
+                    &q,
+                    &QueryPlan::topk(k)
+                        .prune(Prune::Probe(nprobe))
+                        .seed(seed as u64 + 5000)
+                        .build()
+                        .unwrap(),
+                )
+                .topk;
+            let full = chip
+                .execute(
+                    &q,
+                    &QueryPlan::topk(n)
+                        .prune(Prune::None)
+                        .seed(seed as u64 + 5000)
+                        .build()
+                        .unwrap(),
+                )
+                .topk;
             let Some(mask) = chip.macro_mask(&q, Prune::Probe(nprobe)) else {
                 // Degenerate mask -> pruned ran exhaustively.
                 return pruned == full[..k.min(full.len())];
@@ -466,8 +485,11 @@ fn prop_recall_monotone_in_nprobe_and_full_probe_exact() {
         let mut qrng = Pcg::new(seed as u64 + 900);
         let q: Vec<i8> = (0..128).map(|_| qrng.int_in(-128, 127) as i8).collect();
         let run = |prune: Prune| {
-            let mut r = Pcg::new(seed as u64);
-            chip.query_opt(&q, k, prune, &mut r, 1)
+            let out = chip.execute(
+                &q,
+                &QueryPlan::topk(k).prune(prune).seed(seed as u64).build().unwrap(),
+            );
+            (out.topk, out.stats)
         };
         let (full, full_stats) = run(Prune::None);
         let full_ids: std::collections::HashSet<u64> =
