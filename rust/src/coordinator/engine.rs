@@ -23,6 +23,14 @@
 //! without a pool, results are bit-identical — the determinism contract
 //! documented in [`crate::dirc::chip`].
 //!
+//! The plan's [`crate::retrieval::plan::ScoreBackend`] resolves inside
+//! the chip the same way: [`SimEngine`] queries score through the packed
+//! bit-plane popcount kernel by default (the element walk stays as the
+//! reference), bit-identical either way. [`ServingEngine`]'s functional
+//! scores come from the PJRT graph — its chip half is sensing-only
+//! ([`DircChip::sense_execute`]), which no backend touches — so the
+//! knob is a no-op there by construction.
+//!
 //! ## Online mutation (snapshot swap)
 //!
 //! Both engines support [`Engine::mutate`]: the chip lives behind an

@@ -465,15 +465,16 @@ fn worker_loop(
         while !items.is_empty() {
             // Group only requests whose plans can honestly share one
             // batch dispatch: same (k, prune) — the result-shaping
-            // knobs — and same detail/exec, so no request's census
-            // level or execution shape is silently overridden by the
-            // group head's plan.
+            // knobs — and same detail/backend/exec, so no request's
+            // census level, scoring backend, or execution shape is
+            // silently overridden by the group head's plan.
             let head = items[0].plan.clone();
             let mut group = Vec::new();
             while items.front().is_some_and(|it| {
                 it.plan.k() == head.k()
                     && it.plan.prune() == head.prune()
                     && it.plan.detail() == head.detail()
+                    && it.plan.backend() == head.backend()
                     && it.plan.exec().same_shape(head.exec())
             }) {
                 group.push(items.pop_front().unwrap());

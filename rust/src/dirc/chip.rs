@@ -25,8 +25,11 @@
 //!
 //! Execution shape is a throughput knob, never a semantics knob:
 //! results are bit-identical across [`Exec::Serial`] and any
-//! [`Exec::Pool`], at any pool width and arrival order (asserted by the
-//! golden-vector tests in `rust/tests/`):
+//! [`Exec::Pool`], at any pool width and arrival order — and across
+//! both [`ScoreBackend`]s (the packed bit-plane popcount kernel of
+//! [`crate::retrieval::packed`] reproduces the cell-walk scores bit for
+//! bit, sensing errors included). Asserted by the golden-vector tests
+//! in `rust/tests/`:
 //!
 //! 1. every (query, core) pair senses from its own RNG stream,
 //!    [`Pcg::keyed`]`(query_nonce, core)`, with one nonce per query
@@ -56,7 +59,8 @@ use crate::dirc::remap::RemapStrategy;
 use crate::dirc::variation::{ErrorMap, VariationModel};
 use crate::dirc::write::{UpdateCost, WriteModel};
 use crate::retrieval::cluster::{kmeans, Centroids, ClusterPolicy, Prune};
-use crate::retrieval::plan::{Exec, PlanOutput, QueryPlan, StatsDetail};
+use crate::retrieval::packed::PackedQuery;
+use crate::retrieval::plan::{Exec, PlanOutput, QueryPlan, ScoreBackend, StatsDetail};
 use crate::retrieval::quant::Quantized;
 use crate::retrieval::score::{norm_i8, Metric};
 use crate::retrieval::topk::{merge_local, ScoredDoc};
@@ -439,6 +443,29 @@ impl DircChip {
         core_query_job(&self.cores[c], c, q, q_norm, self.cfg.metric, k, qnonce)
     }
 
+    /// [`DircChip::run_core_query`] through the packed bit-plane popcount
+    /// kernel ([`ScoreBackend::Packed`]). Same rng stream, same flips,
+    /// same finalisation — bit-identical outcomes by the backend
+    /// contract (`q_packed` must be `q` packed at the chip's bit width).
+    pub fn run_core_query_packed(
+        &self,
+        c: usize,
+        q: &[i8],
+        q_packed: &PackedQuery,
+        q_norm: f64,
+        k: usize,
+        qnonce: u64,
+    ) -> CoreOutcome {
+        core_query_packed_job(&self.cores[c], c, q, q_packed, q_norm, self.cfg.metric, k, qnonce)
+    }
+
+    /// Pack one query for this chip's bit width (the per-query half of
+    /// the [`ScoreBackend::Packed`] path; built once per query and shared
+    /// by every core job).
+    pub fn pack_query(&self, q: &[i8]) -> PackedQuery {
+        PackedQuery::pack(q, self.cfg.bits)
+    }
+
     /// The zero-cost outcome of a macro the cluster prefilter skipped:
     /// no sense pass, no candidates, no cycles, no energy events.
     pub fn skipped_outcome(&self, c: usize) -> CoreOutcome {
@@ -548,16 +575,32 @@ impl DircChip {
         let nonce = plan.first_nonce();
         let q_norm = norm_i8(q);
         let k = plan.k();
+        // Pack once per query (after the mask, before the cores): the
+        // packing consumes no rng, so the backend cannot shift the nonce
+        // stream, and every core job shares the one packed form.
+        let packed = match plan.backend() {
+            ScoreBackend::Packed => Some(Arc::new(self.pack_query(q))),
+            ScoreBackend::Walk => None,
+        };
         let outcomes = match self.plan_pool(plan) {
             None => (0..self.cores.len())
                 .map(|c| match &mask {
                     Some(m) if !m[c] => self.skipped_outcome(c),
-                    _ => self.run_core_query(c, q, q_norm, k, nonce),
+                    _ => match &packed {
+                        Some(qp) => self.run_core_query_packed(c, q, qp, q_norm, k, nonce),
+                        None => self.run_core_query(c, q, q_norm, k, nonce),
+                    },
                 })
                 .collect(),
-            Some(pool) => {
-                self.pooled_core_outcomes(pool, q, q_norm, k, nonce, mask.as_deref())
-            }
+            Some(pool) => self.pooled_core_outcomes(
+                pool,
+                q,
+                packed.as_ref(),
+                q_norm,
+                k,
+                nonce,
+                mask.as_deref(),
+            ),
         };
         let (topk, stats) =
             self.finish_query_planned(outcomes, k, mask.is_some(), plan.detail());
@@ -568,10 +611,12 @@ impl DircChip {
     /// `Arc`'d core they score, so no chip handle is needed for their
     /// `'static` bound; outcomes arrive in any order (the reduction
     /// sorts by core index).
+    #[allow(clippy::too_many_arguments)]
     fn pooled_core_outcomes(
         &self,
         pool: &ThreadPool,
         q: &[i8],
+        packed: Option<&Arc<PackedQuery>>,
         q_norm: f64,
         k: usize,
         qnonce: u64,
@@ -590,9 +635,16 @@ impl DircChip {
             }
             let core = Arc::clone(&self.cores[c]);
             let q = Arc::clone(&q);
+            let packed = packed.map(Arc::clone);
             let tx = tx.clone();
             pool.execute(move || {
-                let _ = tx.send(core_query_job(&core, c, &q, q_norm, metric, k, qnonce));
+                let out = match &packed {
+                    Some(qp) => {
+                        core_query_packed_job(&core, c, &q, qp, q_norm, metric, k, qnonce)
+                    }
+                    None => core_query_job(&core, c, &q, q_norm, metric, k, qnonce),
+                };
+                let _ = tx.send(out);
             });
         }
         drop(tx); // the receiver below terminates once every sender drops
@@ -645,11 +697,21 @@ impl DircChip {
         let k = plan.k();
         let n_cores = self.cores.len();
         let metric = self.cfg.metric;
-        let prepared: Arc<Vec<(Vec<i8>, f64, u64)>> = Arc::new(
+        // Each query is packed once here (when the plan scores packed)
+        // and shared by all its core jobs through the `Arc` — the jobs
+        // themselves allocate nothing on the scoring path (per-worker
+        // thread-local scratch; see `core_query_packed_job`).
+        let prepared: Arc<Vec<(Vec<i8>, Option<PackedQuery>, f64, u64)>> = Arc::new(
             queries
                 .iter()
                 .zip(&nonces)
-                .map(|(q, &nonce)| (q.clone(), norm_i8(q), nonce))
+                .map(|(q, &nonce)| {
+                    let qp = match plan.backend() {
+                        ScoreBackend::Packed => Some(self.pack_query(q)),
+                        ScoreBackend::Walk => None,
+                    };
+                    (q.clone(), qp, norm_i8(q), nonce)
+                })
                 .collect(),
         );
         let (tx, rx) = std::sync::mpsc::channel::<(usize, CoreOutcome)>();
@@ -667,8 +729,14 @@ impl DircChip {
                 let prepared = Arc::clone(&prepared);
                 let tx = tx.clone();
                 pool.execute(move || {
-                    let (q, q_norm, nonce) = &prepared[qi];
-                    let _ = tx.send((qi, core_query_job(&core, c, q, *q_norm, metric, k, *nonce)));
+                    let (q, qp, q_norm, nonce) = &prepared[qi];
+                    let out = match qp {
+                        Some(qp) => {
+                            core_query_packed_job(&core, c, q, qp, *q_norm, metric, k, *nonce)
+                        }
+                        None => core_query_job(&core, c, q, *q_norm, metric, k, *nonce),
+                    };
+                    let _ = tx.send((qi, out));
                 });
             }
         }
@@ -897,6 +965,40 @@ fn core_query_job(
 ) -> CoreOutcome {
     let mut core_rng = DircChip::core_stream(qnonce, c);
     let res = core.query(q, q_norm, metric, k, &mut core_rng);
+    CoreOutcome {
+        core: c,
+        local_topk: res.local_topk,
+        used_slots: res.used_slots,
+        max_column_resenses: res.stats.max_column_resenses,
+        n_docs: core.n_docs() as u64,
+        stats: res.stats,
+        skipped: false,
+    }
+}
+
+/// [`core_query_job`] through the packed bit-plane popcount kernel.
+/// The integer score buffer is a per-worker thread-local, so a batch of
+/// pooled jobs streams over the packed corpus planes with zero per-query
+/// heap allocation — the buffer grows to the largest macro once per
+/// worker and is reused for every subsequent (query, core) job.
+fn core_query_packed_job(
+    core: &DircCore,
+    c: usize,
+    q: &[i8],
+    q_packed: &PackedQuery,
+    q_norm: f64,
+    metric: Metric,
+    k: usize,
+    qnonce: u64,
+) -> CoreOutcome {
+    thread_local! {
+        static SCRATCH: std::cell::RefCell<Vec<i64>> =
+            const { std::cell::RefCell::new(Vec::new()) };
+    }
+    let mut core_rng = DircChip::core_stream(qnonce, c);
+    let res = SCRATCH.with(|s| {
+        core.query_packed(q, q_packed, q_norm, metric, k, &mut core_rng, &mut s.borrow_mut())
+    });
     CoreOutcome {
         core: c,
         local_topk: res.local_topk,

@@ -5,7 +5,8 @@
 use crate::dirc::macro_::{DircMacro, DocWrite, MacroConfig, SenseStats};
 use crate::dirc::variation::ErrorMap;
 use crate::dirc::write::WriteModel;
-use crate::retrieval::score::{finalize_scores, Metric};
+use crate::retrieval::packed::PackedQuery;
+use crate::retrieval::score::{finalize_one, finalize_scores, Metric};
 use crate::retrieval::topk::{ScoredDoc, TopK};
 use crate::util::rng::Pcg;
 
@@ -213,6 +214,35 @@ impl DircCore {
         CoreResult { local_topk: topk.into_sorted(), stats, used_slots: self.used_slots() }
     }
 
+    /// [`DircCore::query`] through the packed bit-plane popcount kernel:
+    /// same sensing rng stream, same flips, same integer inner products,
+    /// same `f64` finalisation ([`finalize_one`]) — bit-identical results
+    /// with zero per-query allocation (`scratch` is the reusable score
+    /// buffer; batch drivers keep one per worker thread).
+    pub fn query_packed(
+        &self,
+        q: &[i8],
+        q_packed: &PackedQuery,
+        q_norm: f64,
+        metric: Metric,
+        k: usize,
+        rng: &mut Pcg,
+        scratch: &mut Vec<i64>,
+    ) -> CoreResult {
+        let stats = self.macro_.sensed_scores_packed_into(q, q_packed, rng, scratch);
+        let mut topk = TopK::new(k);
+        for (i, &ip) in scratch.iter().enumerate() {
+            if self.live[i] {
+                let d_norm = if metric == Metric::Cosine { self.d_norms[i] } else { 0.0 };
+                topk.push(ScoredDoc {
+                    doc_id: self.doc_ids[i],
+                    score: finalize_one(ip, metric, d_norm, q_norm),
+                });
+            }
+        }
+        CoreResult { local_topk: topk.into_sorted(), stats, used_slots: self.used_slots() }
+    }
+
     /// Clean (error-free) scores for validation.
     pub fn clean_scores(&self, q: &[i8], q_norm: f64, metric: Metric) -> Vec<f64> {
         let ips = self.macro_.clean_scores(q);
@@ -298,6 +328,27 @@ mod tests {
         // |1| is possible but must stay tiny.
         for d in &res.local_topk {
             assert!(d.score.abs() < 1.05);
+        }
+    }
+
+    #[test]
+    fn packed_query_bit_identical_to_walk() {
+        let m = map();
+        let (core, _) = build_core(150, 128, 11, &m);
+        let mut rng = Pcg::new(12);
+        let q: Vec<i8> = (0..128).map(|_| rng.int_in(-128, 127) as i8).collect();
+        let qp = PackedQuery::pack(&q, 8);
+        let mut scratch = Vec::new();
+        for metric in [Metric::Mips, Metric::Cosine] {
+            // Same per-query rng stream for both backends.
+            let mut r1 = Pcg::new(99);
+            let mut r2 = Pcg::new(99);
+            let walk = core.query(&q, norm_i8(&q), metric, 7, &mut r1);
+            let packed =
+                core.query_packed(&q, &qp, norm_i8(&q), metric, 7, &mut r2, &mut scratch);
+            assert_eq!(walk.local_topk, packed.local_topk, "{metric:?}");
+            assert_eq!(walk.stats, packed.stats, "{metric:?}");
+            assert_eq!(walk.used_slots, packed.used_slots);
         }
     }
 

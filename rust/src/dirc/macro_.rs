@@ -33,6 +33,7 @@ use crate::dirc::device::MlcLevel;
 use crate::dirc::remap::{Layout, RemapStrategy, Slot};
 use crate::dirc::variation::{ErrorMap, SUB_CELLS};
 use crate::dirc::write::WriteModel;
+use crate::retrieval::packed::{PackedPlanes, PackedQuery};
 use crate::util::rng::Pcg;
 
 /// Static configuration of one macro.
@@ -172,6 +173,12 @@ pub struct DircMacro {
     plane_rate: Vec<f64>,
     /// True quantized document values, row-major [n_docs][dim].
     docs: Vec<i8>,
+    /// The same values packed into per-bit `u64` planes (doc-major,
+    /// built at program time and maintained by every write), so queries
+    /// stream over them with the popcount kernel instead of walking
+    /// `docs` element by element. `docs` stays the source of truth for
+    /// sensing (flip direction resolution) and the ΣD LUTs.
+    planes: PackedPlanes,
     n_docs: usize,
     /// ΣD LUTs, one per column (precomputed offline, as in the paper).
     luts: Vec<DSumLut>,
@@ -204,11 +211,13 @@ impl DircMacro {
             .map(|(w, b)| layout.bit_error_rate(map, w, b))
             .collect();
 
+        let planes = PackedPlanes::pack(docs, n_docs, cfg.dim, cfg.bits);
         let mut m = DircMacro {
             cfg,
             layout,
             plane_rate,
             docs: docs.to_vec(),
+            planes,
             n_docs,
             luts: Vec::new(),
             wear: vec![0; SUB_CELLS],
@@ -284,6 +293,45 @@ impl DircMacro {
                 row.iter().zip(query).map(|(&a, &b)| a as i64 * b as i64).sum()
             })
             .collect()
+    }
+
+    /// The corpus packed into per-bit `u64` planes (kept in lockstep
+    /// with `docs` by the write path; validation and the flip-injection
+    /// cross-checks read it directly).
+    pub fn packed_planes(&self) -> &PackedPlanes {
+        &self.planes
+    }
+
+    /// Clean scores through the packed popcount kernel, into a reusable
+    /// buffer — bit-identical to [`DircMacro::clean_scores`] (the
+    /// bit-plane decomposition is exact; pinned by
+    /// `rust/tests/packed_kernel.rs`), without the per-query allocation.
+    pub fn clean_scores_packed_into(&self, q: &PackedQuery, out: &mut Vec<i64>) {
+        assert_eq!(q.dim(), self.cfg.dim);
+        self.planes.score_into(q, out);
+    }
+
+    /// Sensed (erroneous) scores through the packed kernel, into a
+    /// reusable buffer. Draws the *same* rng stream as
+    /// [`DircMacro::sensed_scores`] (clean scoring consumes no rng, and
+    /// sensing runs after it in both paths), and applies the surviving
+    /// flips as exact score corrections — `value_delta(bits) * q[elem]`,
+    /// the integer a flip's plane-XOR would contribute — so noisy scores
+    /// are bit-identical to the cell-walk path, flip for flip.
+    pub fn sensed_scores_packed_into(
+        &self,
+        query: &[i8],
+        q_packed: &PackedQuery,
+        rng: &mut Pcg,
+        out: &mut Vec<i64>,
+    ) -> SenseStats {
+        assert_eq!(query.len(), self.cfg.dim);
+        self.clean_scores_packed_into(q_packed, out);
+        let (flips, stats) = self.sense(rng);
+        for (doc, dq) in self.score_corrections(&flips, query) {
+            out[doc as usize] += dq;
+        }
+        stats
     }
 
     /// Simulate the sensing phase of one query: draw per-plane flips,
@@ -528,6 +576,9 @@ impl DircMacro {
 
         // Commit the new data first — the verify loop programs against it.
         self.docs[local * self.cfg.dim..(local + 1) * self.cfg.dim].copy_from_slice(values);
+        // The packed planes mirror `docs` at all times: re-derive exactly
+        // this document's plane block.
+        self.planes.repack_doc(local, values);
 
         let col = local % MACRO_DIM;
         let positions = self.doc_positions(local);
@@ -562,6 +613,9 @@ impl DircMacro {
             self.n_docs
         );
         self.docs.extend(std::iter::repeat(0i8).take(self.cfg.dim));
+        // Grow the packed planes with a zeroed block; write_doc repacks
+        // it from the real values right after.
+        self.planes.append_doc(&vec![0i8; self.cfg.dim]);
         self.n_docs += 1;
         self.write_doc(self.n_docs - 1, values, wm, rng)
     }

@@ -19,7 +19,8 @@
 //!   carry-save adder, accumulator; bit-exact QS MAC (Fig 4).
 //! * [`macro_`]   — the 128x128 DIRC macro: document layout (dimension
 //!   folding, INT4 packing), sensing with error injection, detection,
-//!   score computation.
+//!   score computation (element walk + the packed bit-plane popcount
+//!   kernel of [`crate::retrieval::packed`], kept bit-identical).
 //! * [`core`]     — a DIRC-RAG core: macro + norm/index ReRAM buffer +
 //!   cosine calculator + local top-k (Fig 3a, right).
 //! * [`chip`]     — the 16-core DIRC-RAG chip: query broadcast, norm unit,

@@ -37,7 +37,7 @@
 //! * coordinator — [`coordinator::server::Coordinator::submit`], whose
 //!   requests carry the plan end-to-end (workers group queued requests
 //!   for batched dispatch keyed on the plan: `(k, prune)` plus
-//!   matching detail/exec).
+//!   matching detail/backend/exec).
 //!
 //! ```no_run
 //! # use dirc_rag::retrieval::{Prune, QueryPlan};
@@ -70,6 +70,35 @@
 //! [`sim::cycles::worst_core`]); and (4) the global top-k comparator
 //! breaks score ties by lower doc id, so duplicate scores cannot
 //! reorder under concurrency.
+//!
+//! ## Scoring kernels
+//!
+//! The simulator's functional scores come from one of two bit-identical
+//! kernels, selected by the plan's [`retrieval::plan::ScoreBackend`]:
+//!
+//! * **Packed** (default) — the corpus is packed into per-bit `u64`
+//!   planes at build/mutation time ([`retrieval::packed`]; doc-major,
+//!   cluster-contiguous because the planes mirror the chip layout), and
+//!   a query streams over them with `count_ones()` popcounts combined
+//!   by two's-complement positional weights — the host-side analogue of
+//!   the QS `D_bit x Q_bit` schedule in
+//!   `python/compile/kernels/bitserial.py`, sign-bit weight
+//!   `-2^(B-1)` ([`dirc::column::bit_weight`]). Batch queries run with
+//!   zero per-query allocation on the scoring path (one packed query
+//!   shared by all core jobs; per-worker thread-local score buffers).
+//! * **Walk** — the original element-by-element reference
+//!   ([`dirc::macro_::DircMacro::clean_scores`]), retained as the
+//!   cross-check oracle.
+//!
+//! Sensed bit-flips reach the packed path as exact score corrections
+//! (`value_delta * q[elem]` — the integer a flip's plane-XOR would
+//! contribute; see [`dirc::macro_::Flip`]), so noisy scores are
+//! bit-identical to the cell-walk path too: same rng stream, same
+//! flips, same `i64` scores, same `f64` finalisation
+//! ([`retrieval::score::finalize_one`]). `rust/tests/packed_kernel.rs`
+//! pins the equivalence (kernel, chip, batch, mutations, flip
+//! injection); the `hotpath` bench gates packed-over-walk throughput
+//! and re-asserts bit-identity in the same run (`BENCH_6.json`).
 //!
 //! ## Online corpus ingest
 //!
@@ -119,8 +148,9 @@
 //!   error detection and error-aware bit remapping.
 //! * [`sim`] — cycle-accurate query-stationary dataflow and energy/area
 //!   models (Table I derivations).
-//! * [`retrieval`] — quantisation, scoring references, top-k machinery,
-//!   and the [`retrieval::plan`] execution currency.
+//! * [`retrieval`] — quantisation, scoring references, the packed
+//!   bit-plane popcount kernel ([`retrieval::packed`]), top-k
+//!   machinery, and the [`retrieval::plan`] execution currency.
 //! * [`runtime`] — PJRT client wrapper: artifact registry, executable
 //!   cache, typed execution.
 //! * [`coordinator`] — the serving system: router, batcher, worker pool,

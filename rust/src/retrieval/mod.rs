@@ -1,15 +1,18 @@
-//! Retrieval primitives: quantisation, scoring references, top-k, the
-//! cluster-pruned (IVF-style) two-stage index, and the [`plan`] module —
-//! the [`QueryPlan`] execution currency every layer consumes.
+//! Retrieval primitives: quantisation, scoring references, the packed
+//! bit-plane popcount kernel ([`packed`]), top-k, the cluster-pruned
+//! (IVF-style) two-stage index, and the [`plan`] module — the
+//! [`QueryPlan`] execution currency every layer consumes.
 
 pub mod cluster;
+pub mod packed;
 pub mod plan;
 pub mod quant;
 pub mod score;
 pub mod topk;
 
 pub use cluster::{Centroids, ClusterPolicy, Clustering, Prune};
-pub use plan::{Exec, PlanError, PlanOutput, QueryPlan, RngPolicy, StatsDetail};
+pub use packed::{PackedPlanes, PackedQuery};
+pub use plan::{Exec, PlanError, PlanOutput, QueryPlan, RngPolicy, ScoreBackend, StatsDetail};
 pub use quant::{QuantScheme, Quantized};
 pub use score::Metric;
 pub use topk::{ScoredDoc, TopK};

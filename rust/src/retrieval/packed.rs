@@ -1,0 +1,375 @@
+//! Packed bit-plane scoring: the QS `D_bit x Q_bit` popcount kernel on
+//! the host (ROADMAP item 3; the schedule of
+//! `python/compile/kernels/bitserial.py` and [`crate::dirc::column`]).
+//!
+//! ## Layout
+//!
+//! [`PackedPlanes`] stores a corpus doc-major: document `d` owns `bits`
+//! consecutive bit-planes of `words_per_plane = ceil(dim / 64)` `u64`
+//! words each, so one document's whole plane block
+//! (`bits * words_per_plane` words) is contiguous and a scoring pass
+//! streams the corpus front to back. Bit `j % 64` of word `j / 64` of
+//! plane `b` is bit `b` of the two's-complement element `j`. Tail bits
+//! past `dim` in the last word of every plane are zero (and stay zero
+//! through [`PackedPlanes::repack_doc`] / [`PackedPlanes::toggle_bit`]),
+//! so they never contribute to an AND.
+//!
+//! ## The kernel
+//!
+//! With the query packed the same way ([`PackedQuery`]), the exact
+//! integer inner product factors over bit pairs:
+//!
+//! ```text
+//! dot(d, q) = sum_{db, qb} w(db) * w(qb) * popcount(D[db] & Q[qb])
+//! ```
+//!
+//! where `w` is [`crate::dirc::column::bit_weight`] (sign bit weighs
+//! `-2^(bits-1)`). The decomposition is an algebraic identity over the
+//! integers, so [`packed_dot`] equals
+//! [`crate::retrieval::score::dot_i8`] **bit-for-bit** — not
+//! approximately (pinned by `rust/tests/packed_kernel.rs`). All-zero
+//! query planes are skipped (their popcounts are zero by construction).
+//!
+//! ## Accumulator headroom
+//!
+//! Each popcount is at most `dim`; each weight product at most
+//! `2^(2 bits - 2)`. The `i64` accumulator therefore holds
+//! `dim * 2^14 * bits^2` worst case for INT8 — at the crate's maximum
+//! dimensions that is far below `2^63` (and the total is the exact dot,
+//! itself bounded by `dim * 2^14`).
+
+use crate::dirc::column::bit_weight;
+
+/// One corpus packed into per-bit `u64` planes, doc-major (see the
+/// module docs for the exact layout).
+#[derive(Debug, Clone)]
+pub struct PackedPlanes {
+    bits: usize,
+    dim: usize,
+    n_docs: usize,
+    /// Words per (document, bit) plane: `ceil(dim / 64)`.
+    words_per_plane: usize,
+    /// `[n_docs][bits][words_per_plane]`.
+    planes: Vec<u64>,
+}
+
+impl PackedPlanes {
+    /// Pack a row-major `[n][dim]` signed matrix. Values must fit the
+    /// `bits`-wide two's-complement range (the low `bits` bits of the
+    /// `i8` representation *are* that word — sign extension only touches
+    /// bits we never read).
+    pub fn pack(docs: &[i8], n: usize, dim: usize, bits: usize) -> PackedPlanes {
+        assert_eq!(docs.len(), n * dim);
+        assert!(bits >= 1 && bits <= 8, "bits must be in 1..=8");
+        let words_per_plane = dim.div_ceil(64);
+        let mut p = PackedPlanes {
+            bits,
+            dim,
+            n_docs: 0,
+            words_per_plane,
+            planes: Vec::with_capacity(n * bits * words_per_plane),
+        };
+        for d in 0..n {
+            p.append_doc(&docs[d * dim..(d + 1) * dim]);
+        }
+        p
+    }
+
+    pub fn n_docs(&self) -> usize {
+        self.n_docs
+    }
+
+    pub fn bits(&self) -> usize {
+        self.bits
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn words_per_plane(&self) -> usize {
+        self.words_per_plane
+    }
+
+    /// Words in one document's plane block.
+    #[inline]
+    fn doc_stride(&self) -> usize {
+        self.bits * self.words_per_plane
+    }
+
+    /// The contiguous plane block of document `d`
+    /// (`bits * words_per_plane` words).
+    #[inline]
+    pub fn doc_planes(&self, d: usize) -> &[u64] {
+        let s = self.doc_stride();
+        &self.planes[d * s..(d + 1) * s]
+    }
+
+    /// Append one document's planes at slot `n_docs` (the macro's
+    /// append path; the values are re-packed in place by the write).
+    pub fn append_doc(&mut self, row: &[i8]) {
+        assert_eq!(row.len(), self.dim);
+        let s = self.doc_stride();
+        self.planes.extend(std::iter::repeat(0u64).take(s));
+        self.n_docs += 1;
+        self.repack_doc(self.n_docs - 1, row);
+    }
+
+    /// Re-pack document `d` from new values (the macro's write path —
+    /// an in-place update re-derives exactly this doc's planes).
+    pub fn repack_doc(&mut self, d: usize, row: &[i8]) {
+        assert!(d < self.n_docs);
+        assert_eq!(row.len(), self.dim);
+        let (bits, wpp) = (self.bits, self.words_per_plane);
+        let base = d * self.doc_stride();
+        self.planes[base..base + bits * wpp].iter_mut().for_each(|w| *w = 0);
+        for (j, &v) in row.iter().enumerate() {
+            let u = v as u8;
+            let (word, off) = (j / 64, (j % 64) as u32);
+            for b in 0..bits {
+                if (u >> b) & 1 != 0 {
+                    self.planes[base + b * wpp + word] |= 1u64 << off;
+                }
+            }
+        }
+    }
+
+    /// XOR bit `bit` of element `elem` of document `doc` — the
+    /// flip-injection contract: a sensed flip IS this toggle, and
+    /// scoring the toggled planes equals adding the flip's exact score
+    /// correction `value_delta * q[elem]` (cross-checked in tests; the
+    /// query hot path uses the correction form so the shared planes stay
+    /// immutable).
+    pub fn toggle_bit(&mut self, doc: usize, elem: usize, bit: usize) {
+        assert!(doc < self.n_docs && elem < self.dim && bit < self.bits);
+        let idx =
+            doc * self.doc_stride() + bit * self.words_per_plane + elem / 64;
+        self.planes[idx] ^= 1u64 << (elem % 64);
+    }
+
+    /// Score every document against a packed query into `out`
+    /// (`out` is resized; reusing one buffer keeps the batch path free
+    /// of per-(query, core) score allocations).
+    pub fn score_into(&self, q: &PackedQuery, out: &mut Vec<i64>) {
+        assert_eq!(q.bits, self.bits);
+        assert_eq!(q.dim, self.dim);
+        out.clear();
+        out.reserve(self.n_docs);
+        let s = self.doc_stride();
+        for d in 0..self.n_docs {
+            out.push(packed_dot(&self.planes[d * s..(d + 1) * s], q));
+        }
+    }
+
+    /// Score one document (tests / spot checks).
+    pub fn score_doc(&self, d: usize, q: &PackedQuery) -> i64 {
+        packed_dot(self.doc_planes(d), q)
+    }
+
+    /// Host memory held by the planes, in bytes.
+    pub fn bytes(&self) -> usize {
+        self.planes.len() * std::mem::size_of::<u64>()
+    }
+}
+
+/// One query packed into bit-planes, plus the precomputed
+/// `w(db) * w(qb)` weight-product table. Built once per query
+/// ([`PackedQuery::pack`]) and shared across every core/doc it scores.
+#[derive(Debug, Clone)]
+pub struct PackedQuery {
+    bits: usize,
+    dim: usize,
+    words_per_plane: usize,
+    /// `[bits][words_per_plane]`.
+    planes: Vec<u64>,
+    /// `weight[db * bits + qb] = bit_weight(db) * bit_weight(qb)`.
+    weights: Vec<i64>,
+    /// Query planes that are entirely zero contribute nothing; skip them.
+    nonzero: Vec<bool>,
+}
+
+impl PackedQuery {
+    /// Pack a query vector. Values must fit the `bits`-wide
+    /// two's-complement range (debug-asserted — an out-of-range value
+    /// has no `bits`-plane representation, so neither the hardware
+    /// schedule nor this kernel is defined for it).
+    pub fn pack(q: &[i8], bits: usize) -> PackedQuery {
+        assert!(bits >= 1 && bits <= 8, "bits must be in 1..=8");
+        debug_assert!(
+            q.iter().all(|&v| {
+                let lo = -(1i16 << (bits - 1));
+                let hi = (1i16 << (bits - 1)) - 1;
+                (v as i16) >= lo && (v as i16) <= hi
+            }),
+            "query value out of the INT{bits} range"
+        );
+        let dim = q.len();
+        let wpp = dim.div_ceil(64);
+        let mut planes = vec![0u64; bits * wpp];
+        for (j, &v) in q.iter().enumerate() {
+            let u = v as u8;
+            let (word, off) = (j / 64, (j % 64) as u32);
+            for (b, plane) in planes.chunks_exact_mut(wpp).enumerate() {
+                if (u >> b) & 1 != 0 {
+                    plane[word] |= 1u64 << off;
+                }
+            }
+        }
+        let weights = (0..bits)
+            .flat_map(|db| {
+                (0..bits)
+                    .map(move |qb| bit_weight(db, bits) as i64 * bit_weight(qb, bits) as i64)
+            })
+            .collect();
+        let nonzero = planes
+            .chunks_exact(wpp)
+            .map(|p| p.iter().any(|&w| w != 0))
+            .collect();
+        PackedQuery { bits, dim, words_per_plane: wpp, planes, weights, nonzero }
+    }
+
+    pub fn bits(&self) -> usize {
+        self.bits
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Plane `b` of the packed query.
+    pub fn plane(&self, b: usize) -> &[u64] {
+        &self.planes[b * self.words_per_plane..(b + 1) * self.words_per_plane]
+    }
+}
+
+/// The popcount kernel over one document's contiguous plane block:
+/// `sum_{db, qb} w(db) w(qb) popcount(D[db] & Q[qb])` — the exact QS
+/// bit-serial schedule, reduced with `count_ones()` instead of the
+/// hardware CSA tree.
+#[inline]
+pub fn packed_dot(doc_planes: &[u64], q: &PackedQuery) -> i64 {
+    let (bits, wpp) = (q.bits, q.words_per_plane);
+    debug_assert_eq!(doc_planes.len(), bits * wpp);
+    let mut total = 0i64;
+    for db in 0..bits {
+        let d = &doc_planes[db * wpp..(db + 1) * wpp];
+        for qb in 0..bits {
+            if !q.nonzero[qb] {
+                continue;
+            }
+            let qp = &q.planes[qb * wpp..(qb + 1) * wpp];
+            let mut pop = 0u32;
+            for (&a, &b) in d.iter().zip(qp.iter()) {
+                pop += (a & b).count_ones();
+            }
+            total += q.weights[db * bits + qb] * pop as i64;
+        }
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::retrieval::score::dot_i8;
+    use crate::util::rng::Pcg;
+
+    fn rand_vec(n: usize, bits: usize, rng: &mut Pcg) -> Vec<i8> {
+        let lo = -(1i64 << (bits - 1));
+        let hi = (1i64 << (bits - 1)) - 1;
+        (0..n).map(|_| rng.int_in(lo, hi) as i8).collect()
+    }
+
+    #[test]
+    fn packed_dot_matches_reference_walk() {
+        let mut rng = Pcg::new(1);
+        // Dims straddling word boundaries: tails, exact fits, multi-word.
+        for &dim in &[1usize, 63, 64, 65, 100, 128, 512] {
+            for &bits in &[4usize, 8] {
+                let n = 17;
+                let docs = rand_vec(n * dim, bits, &mut rng);
+                let q = rand_vec(dim, bits, &mut rng);
+                let p = PackedPlanes::pack(&docs, n, dim, bits);
+                let qp = PackedQuery::pack(&q, bits);
+                let mut out = Vec::new();
+                p.score_into(&qp, &mut out);
+                for d in 0..n {
+                    let want = dot_i8(&docs[d * dim..(d + 1) * dim], &q);
+                    assert_eq!(out[d], want, "dim {dim} bits {bits} doc {d}");
+                    assert_eq!(p.score_doc(d, &qp), want);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn extreme_values_no_overflow() {
+        // i8::MIN everywhere is the worst-case magnitude for INT8; the
+        // packed kernel must agree with the exact walk at a large dim.
+        for &dim in &[512usize, 4096, 8192] {
+            let docs = vec![i8::MIN; dim];
+            let q = vec![i8::MIN; dim];
+            let p = PackedPlanes::pack(&docs, 1, dim, 8);
+            let qp = PackedQuery::pack(&q, 8);
+            let want = 128i64 * 128 * dim as i64;
+            assert_eq!(p.score_doc(0, &qp), want);
+            assert_eq!(dot_i8(&docs, &q), want);
+        }
+    }
+
+    #[test]
+    fn repack_and_append_roundtrip() {
+        let mut rng = Pcg::new(2);
+        let (n, dim, bits) = (6usize, 100usize, 8usize);
+        let mut docs = rand_vec(n * dim, bits, &mut rng);
+        let mut p = PackedPlanes::pack(&docs, n, dim, bits);
+        // In-place rewrite of doc 3.
+        let new_row = rand_vec(dim, bits, &mut rng);
+        docs[3 * dim..4 * dim].copy_from_slice(&new_row);
+        p.repack_doc(3, &new_row);
+        // Append a fresh doc.
+        let extra = rand_vec(dim, bits, &mut rng);
+        docs.extend_from_slice(&extra);
+        p.append_doc(&extra);
+        assert_eq!(p.n_docs(), n + 1);
+        let q = rand_vec(dim, bits, &mut rng);
+        let qp = PackedQuery::pack(&q, bits);
+        for d in 0..n + 1 {
+            assert_eq!(p.score_doc(d, &qp), dot_i8(&docs[d * dim..(d + 1) * dim], &q));
+        }
+    }
+
+    #[test]
+    fn toggle_bit_is_xor_on_the_value() {
+        let mut rng = Pcg::new(3);
+        let (dim, bits) = (70usize, 8usize);
+        let mut docs = rand_vec(dim, bits, &mut rng);
+        let mut p = PackedPlanes::pack(&docs, 1, dim, bits);
+        let q = rand_vec(dim, bits, &mut rng);
+        let qp = PackedQuery::pack(&q, bits);
+        for (elem, bit) in [(0usize, 0usize), (63, 7), (64, 3), (69, 7)] {
+            p.toggle_bit(0, elem, bit);
+            docs[elem] = (docs[elem] as u8 ^ (1 << bit)) as i8;
+            assert_eq!(p.score_doc(0, &qp), dot_i8(&docs, &q), "elem {elem} bit {bit}");
+        }
+    }
+
+    #[test]
+    fn zero_query_scores_zero_via_plane_skip() {
+        let mut rng = Pcg::new(4);
+        let docs = rand_vec(5 * 64, 8, &mut rng);
+        let p = PackedPlanes::pack(&docs, 5, 64, 8);
+        let qp = PackedQuery::pack(&vec![0i8; 64], 8);
+        let mut out = Vec::new();
+        p.score_into(&qp, &mut out);
+        assert_eq!(out, vec![0i64; 5]);
+    }
+
+    #[test]
+    fn memory_accounting() {
+        let p = PackedPlanes::pack(&vec![0i8; 4 * 512], 4, 512, 8);
+        // 4 docs x 8 planes x 8 words x 8 bytes.
+        assert_eq!(p.bytes(), 4 * 8 * 8 * 8);
+        assert_eq!(p.words_per_plane(), 8);
+    }
+}

@@ -121,6 +121,39 @@ impl Exec {
     }
 }
 
+/// Which functional scoring kernel a plan's core jobs run.
+///
+/// A semantics-free knob like [`Exec`]: both backends produce
+/// **bit-identical** results — same integer inner products (the
+/// bit-plane decomposition is an algebraic identity, see
+/// [`crate::retrieval::packed`]), same flips (sensing consumes the rng
+/// before either backend touches a score), same `f64` finalisation
+/// (shared [`crate::retrieval::score::finalize_one`]). Pinned by
+/// `rust/tests/packed_kernel.rs` and asserted again inside the
+/// `hotpath` bench gate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum ScoreBackend {
+    /// The packed bit-plane popcount kernel (default): corpus planes are
+    /// packed once at build/mutation time, queries stream over them with
+    /// popcounts — the host-side analogue of the QS bit-serial MAC.
+    #[default]
+    Packed,
+    /// The original element-by-element reference walk
+    /// ([`crate::dirc::macro_::DircMacro::clean_scores`]); kept as the
+    /// cross-check oracle and for kernels-under-suspicion debugging.
+    Walk,
+}
+
+impl ScoreBackend {
+    /// Short name for artifacts/logs (`BENCH_6.json` records it).
+    pub fn name(self) -> &'static str {
+        match self {
+            ScoreBackend::Packed => "packed",
+            ScoreBackend::Walk => "walk",
+        }
+    }
+}
+
 /// Where a plan's query nonces come from (see the module docs for the
 /// full contract).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -227,6 +260,7 @@ pub struct QueryPlan {
     exec: Exec,
     rng: RngPolicy,
     detail: StatsDetail,
+    backend: ScoreBackend,
     /// Carried from the builder so post-build tweaks
     /// ([`QueryPlan::with_k`]) revalidate against the same bound.
     corpus_hint: Option<usize>,
@@ -236,7 +270,7 @@ impl QueryPlan {
     /// Start building a top-`k` plan. Defaults: [`Prune::Default`]
     /// (the chip's own policy — exhaustive without a cluster index),
     /// [`Exec::Auto`], [`RngPolicy::Seeded`]`(0)`,
-    /// [`StatsDetail::Full`].
+    /// [`StatsDetail::Full`], [`ScoreBackend::Packed`].
     pub fn topk(k: usize) -> PlanBuilder {
         PlanBuilder {
             k,
@@ -244,6 +278,7 @@ impl QueryPlan {
             exec: Exec::Auto,
             rng: RngPolicy::default(),
             detail: StatsDetail::default(),
+            backend: ScoreBackend::default(),
             corpus_hint: None,
         }
     }
@@ -266,6 +301,10 @@ impl QueryPlan {
 
     pub fn detail(&self) -> StatsDetail {
         self.detail
+    }
+
+    pub fn backend(&self) -> ScoreBackend {
+        self.backend
     }
 
     /// This plan with [`RngPolicy::Seeded`]`(seed)`.
@@ -293,6 +332,12 @@ impl QueryPlan {
     /// This plan with a different stats detail level.
     pub fn with_detail(&self, detail: StatsDetail) -> QueryPlan {
         QueryPlan { detail, ..self.clone() }
+    }
+
+    /// This plan with a different scoring backend (results are
+    /// bit-identical either way — see [`ScoreBackend`]).
+    pub fn with_backend(&self, backend: ScoreBackend) -> QueryPlan {
+        QueryPlan { backend, ..self.clone() }
     }
 
     /// This plan with a different `k`, revalidated — including against
@@ -360,6 +405,7 @@ pub struct PlanBuilder {
     exec: Exec,
     rng: RngPolicy,
     detail: StatsDetail,
+    backend: ScoreBackend,
     corpus_hint: Option<usize>,
 }
 
@@ -421,6 +467,18 @@ impl PlanBuilder {
         self
     }
 
+    /// Scoring backend (defaults to [`ScoreBackend::Packed`]).
+    pub fn backend(mut self, backend: ScoreBackend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Shorthand for `backend(ScoreBackend::Walk)` — the reference
+    /// element-walk kernel.
+    pub fn walk(self) -> Self {
+        self.backend(ScoreBackend::Walk)
+    }
+
     /// Corpus-size hint: when known, `k` is validated against it.
     pub fn corpus_hint(mut self, n_docs: usize) -> Self {
         self.corpus_hint = Some(n_docs);
@@ -446,6 +504,7 @@ impl PlanBuilder {
             exec: self.exec,
             rng: self.rng,
             detail: self.detail,
+            backend: self.backend,
             corpus_hint: self.corpus_hint,
         })
     }
@@ -471,6 +530,11 @@ mod tests {
         assert!(matches!(p.exec(), Exec::Auto));
         assert_eq!(p.rng(), RngPolicy::Seeded(0));
         assert_eq!(p.detail(), StatsDetail::Full);
+        assert_eq!(p.backend(), ScoreBackend::Packed);
+        assert_eq!(p.with_backend(ScoreBackend::Walk).backend(), ScoreBackend::Walk);
+        assert_eq!(QueryPlan::topk(3).walk().build().unwrap().backend(), ScoreBackend::Walk);
+        assert_eq!(ScoreBackend::Packed.name(), "packed");
+        assert_eq!(ScoreBackend::Walk.name(), "walk");
     }
 
     #[test]

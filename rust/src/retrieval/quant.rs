@@ -109,6 +109,22 @@ impl Quantized {
     pub fn stored_bytes(&self) -> usize {
         (self.n * self.dim * self.scheme.bits()).div_ceil(8)
     }
+
+    /// Pack the quantised matrix into per-bit `u64` planes for the
+    /// popcount scoring kernel (see [`crate::retrieval::packed`]).
+    /// Integer schemes only — FP32 has no bit-plane decomposition.
+    pub fn pack_planes(&self) -> crate::retrieval::packed::PackedPlanes {
+        assert!(
+            self.scheme != QuantScheme::Fp32,
+            "pack_planes() needs an integer scheme"
+        );
+        crate::retrieval::packed::PackedPlanes::pack(
+            &self.values,
+            self.n,
+            self.dim,
+            self.scheme.bits(),
+        )
+    }
 }
 
 /// Quantisation SNR (dB) between an FP32 matrix and its quantised form —
@@ -198,6 +214,28 @@ mod tests {
         let x = random_unit_rows(10, 512, &mut rng);
         assert_eq!(quantize(&x, 10, 512, QuantScheme::Int8).stored_bytes(), 5120);
         assert_eq!(quantize(&x, 10, 512, QuantScheme::Int4).stored_bytes(), 2560);
+    }
+
+    #[test]
+    fn pack_planes_matches_values() {
+        let mut rng = Pcg::new(6);
+        let x = random_unit_rows(12, 100, &mut rng);
+        for scheme in [QuantScheme::Int8, QuantScheme::Int4] {
+            let q = quantize(&x, 12, 100, scheme);
+            let p = q.pack_planes();
+            assert_eq!(p.n_docs(), 12);
+            assert_eq!(p.bits(), scheme.bits());
+            let probe: Vec<i8> = (0..100)
+                .map(|_| rng.int_in(scheme.qmin() as i64, scheme.qmax() as i64) as i8)
+                .collect();
+            let pq = crate::retrieval::packed::PackedQuery::pack(&probe, scheme.bits());
+            for d in 0..12 {
+                assert_eq!(
+                    p.score_doc(d, &pq),
+                    crate::retrieval::score::dot_i8(q.row(d), &probe)
+                );
+            }
+        }
     }
 
     #[test]

@@ -36,8 +36,10 @@ impl Metric {
 pub fn dot_i8(d: &[i8], q: &[i8]) -> i64 {
     debug_assert_eq!(d.len(), q.len());
     // Accumulate in i32 blocks for autovectorisation, widen to i64 at
-    // block boundaries (a 512-dim INT8 dot fits i32 comfortably: max
-    // 128*128*512 = 2^23).
+    // block boundaries. Headroom: |a * b| <= 128 * 128 = 2^14, so a full
+    // 4096-element block reaches at most 4096 * 2^14 = 2^26 — inside i32
+    // (2^31 - 1) with 32x margin, for any dim (the block size bounds the
+    // i32 excursion, not the vector length).
     let mut total: i64 = 0;
     for (dc, qc) in d.chunks(4096).zip(q.chunks(4096)) {
         let mut acc: i32 = 0;
@@ -61,6 +63,23 @@ pub fn norm_i8(v: &[i8]) -> f64 {
     (v.iter().map(|&x| (x as i64 * x as i64) as f64).sum::<f64>()).sqrt()
 }
 
+/// Convert one integer inner product to the metric's score domain —
+/// the single per-element finalisation both the reference walk
+/// ([`finalize_scores`]) and the packed popcount path
+/// ([`crate::dirc::core::DircCore::query_packed`]) share, so the two
+/// backends produce bit-identical `f64` scores by construction.
+/// `d_norm` is ignored under [`Metric::Mips`].
+#[inline]
+pub fn finalize_one(ip: i64, metric: Metric, d_norm: f32, q_norm: f64) -> f64 {
+    match metric {
+        Metric::Mips => ip as f64,
+        Metric::Cosine => {
+            let denom = (d_norm as f64 * q_norm).max(1e-12);
+            ip as f64 / denom
+        }
+    }
+}
+
 /// Convert integer inner products to the metric's score domain.
 pub fn finalize_scores(
     ips: &[i64],
@@ -69,16 +88,13 @@ pub fn finalize_scores(
     q_norm: f64,
 ) -> Vec<f64> {
     match metric {
-        Metric::Mips => ips.iter().map(|&v| v as f64).collect(),
+        Metric::Mips => ips.iter().map(|&v| finalize_one(v, metric, 0.0, q_norm)).collect(),
         Metric::Cosine => {
             let norms = d_norms.expect("cosine needs stored document norms");
             assert_eq!(norms.len(), ips.len());
             ips.iter()
                 .zip(norms.iter())
-                .map(|(&ip, &dn)| {
-                    let denom = (dn as f64 * q_norm).max(1e-12);
-                    ip as f64 / denom
-                })
+                .map(|(&ip, &dn)| finalize_one(ip, metric, dn, q_norm))
                 .collect()
         }
     }
@@ -122,9 +138,21 @@ mod tests {
 
     #[test]
     fn dot_extremes_no_overflow() {
-        let a = vec![-128i8; 4096];
-        let b = vec![-128i8; 4096];
+        // i8::MIN everywhere: the worst-case per-block i32 excursion
+        // (4096 * 2^14 = 2^26) at exactly one block...
+        let a = vec![i8::MIN; 4096];
+        let b = vec![i8::MIN; 4096];
         assert_eq!(dot_i8(&a, &b), 128 * 128 * 4096);
+        // ...and across block boundaries (dims above and not a multiple
+        // of the 4096 block), where the i64 widening must carry the sum.
+        for dim in [4097usize, 8192, 12_000] {
+            let a = vec![i8::MIN; dim];
+            let b = vec![i8::MIN; dim];
+            assert_eq!(dot_i8(&a, &b), 128 * 128 * dim as i64, "dim {dim}");
+            // Mixed extremes: MIN x MAX is the negative worst case.
+            let c = vec![i8::MAX; dim];
+            assert_eq!(dot_i8(&a, &c), -128 * 127 * dim as i64, "dim {dim}");
+        }
     }
 
     #[test]

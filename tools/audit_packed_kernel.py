@@ -1,0 +1,120 @@
+#!/usr/bin/env python3
+"""Independent recomputation of the packed bit-plane kernel identity.
+
+No Rust toolchain ships in some build containers, so this script
+re-derives the math that rust/src/retrieval/packed.rs relies on, in
+plain Python, and checks it exhaustively enough to trust:
+
+  1. bit-plane decomposition: for B-bit two's-complement values,
+       dot(d, q) == sum_{db, qb} w(db) * w(qb) * popcount(D[db] & Q[qb])
+     with w(b) = -2^(B-1) for the sign bit, else 2^b
+     (mirrors bit_weight in rust/src/dirc/column.rs).
+  2. i8 extreme headroom: |dot| at dim 512 with values in [-128, 127]
+     fits i64 with enormous slack (the dot_i8 comment's claim).
+  3. flip corrections: toggling stored bit `b` of element `e` in doc d
+     changes dot(d, q) by exactly value_delta * q[e], where
+     value_delta = -w(b) if the bit was 1 else +w(b)
+     (mirrors Flip::value_delta in rust/src/dirc/macro_.rs).
+  4. packing round-trip: the low B bits of the i8 two's-complement
+     representation, interpreted through (1), reproduce the value.
+
+Run: python3 tools/audit_packed_kernel.py   (exit 0 == all identities hold)
+"""
+
+import random
+
+random.seed(0xD1AC)
+
+
+def bit_weight(b, bits):
+    return -(1 << b) if b == bits - 1 else (1 << b)
+
+
+def low_bits(v, bits):
+    # two's-complement truncation to `bits` bits (what the macro stores)
+    return v & ((1 << bits) - 1)
+
+
+def pack_planes(values, bits, dim):
+    """Per-doc bit planes as Python ints (one int per plane == u64 words)."""
+    planes = [0] * bits
+    for e, v in enumerate(values):
+        w = low_bits(v, bits)
+        for b in range(bits):
+            if (w >> b) & 1:
+                planes[b] |= 1 << e
+    assert dim >= len(values)
+    return planes
+
+
+def packed_dot(d_planes, q_planes, bits):
+    acc = 0
+    for db in range(bits):
+        for qb in range(bits):
+            acc += (
+                bit_weight(db, bits)
+                * bit_weight(qb, bits)
+                * bin(d_planes[db] & q_planes[qb]).count("1")
+            )
+    return acc
+
+
+def check_identity(bits, lo, hi, dims, trials):
+    for dim in dims:
+        for _ in range(trials):
+            d = [random.randint(lo, hi) for _ in range(dim)]
+            q = [random.randint(lo, hi) for _ in range(dim)]
+            ref = sum(a * b for a, b in zip(d, q))
+            got = packed_dot(pack_planes(d, bits, dim), pack_planes(q, bits, dim), bits)
+            assert got == ref, (bits, dim, got, ref)
+
+
+def check_extremes():
+    # worst case magnitude: 512 * 128 * 128 = 2^23 -- i64 headroom is huge
+    for d_v, q_v in [(-128, -128), (-128, 127), (127, 127), (-128, 1), (127, -1)]:
+        dim = 512
+        d, q = [d_v] * dim, [q_v] * dim
+        ref = sum(a * b for a, b in zip(d, q))
+        got = packed_dot(pack_planes(d, 8, dim), pack_planes(q, 8, dim), 8)
+        assert got == ref, (d_v, q_v, got, ref)
+        assert abs(ref) <= 512 * 128 * 128 < 2**63
+    # exhaustive single-element i8 x i8: every pair, both INT8 and (range-
+    # clamped) INT4
+    for a in range(-128, 128):
+        for b in range(-128, 128):
+            got = packed_dot(pack_planes([a], 8, 1), pack_planes([b], 8, 1), 8)
+            assert got == a * b, (a, b, got)
+    for a in range(-8, 8):
+        for b in range(-8, 8):
+            got = packed_dot(pack_planes([a], 4, 1), pack_planes([b], 4, 1), 4)
+            assert got == a * b, (a, b, got)
+
+
+def check_flip_corrections(bits, lo, hi, trials):
+    dim = 96
+    for _ in range(trials):
+        d = [random.randint(lo, hi) for _ in range(dim)]
+        q = [random.randint(lo, hi) for _ in range(dim)]
+        planes = pack_planes(d, bits, dim)
+        qp = pack_planes(q, bits, dim)
+        base = packed_dot(planes, qp, bits)
+        e = random.randrange(dim)
+        b = random.randrange(bits)
+        was_one = bool((planes[b] >> e) & 1)
+        planes[b] ^= 1 << e  # the physical flip
+        flipped = packed_dot(planes, qp, bits)
+        value_delta = -bit_weight(b, bits) if was_one else bit_weight(b, bits)
+        assert flipped - base == value_delta * q[e], (bits, e, b, was_one)
+
+
+def main():
+    check_identity(8, -128, 127, dims=[1, 60, 64, 65, 128, 200, 512], trials=40)
+    check_identity(4, -8, 7, dims=[1, 60, 64, 65, 128, 200, 512], trials=40)
+    check_extremes()
+    check_flip_corrections(8, -128, 127, trials=400)
+    check_flip_corrections(4, -8, 7, trials=400)
+    print("audit_packed_kernel: all identities hold")
+
+
+if __name__ == "__main__":
+    main()
