@@ -10,6 +10,7 @@ use crate::dirc::chip::ChipConfig;
 use crate::dirc::detect::ResensePolicy;
 use crate::dirc::variation::VariationModel;
 use crate::dirc::RemapStrategy;
+use crate::retrieval::cache::CacheConfig;
 use crate::retrieval::cluster::{ClusterPolicy, Prune};
 use crate::retrieval::plan::QueryPlan;
 use crate::retrieval::quant::QuantScheme;
@@ -96,26 +97,44 @@ pub fn coordinator_config(cfg: &Config) -> Result<CoordinatorConfig> {
             cfg.int_or("serving.mutation_max_defer_ms", 20).max(0) as u64,
         ),
         seed: cfg.int_or("chip.seed", 0xC00D) as u64,
+        cache: CacheConfig {
+            result_entries: cfg.usize_or("serving.cache_results", 0),
+            routing_entries: cfg.usize_or("serving.cache_routing", 0),
+        },
     })
 }
 
-/// Build the serving [`QueryPlan`] template from the `[serving]` knobs:
-/// `serving.k` (top-k, default 10) and `serving.nprobe` (0 or absent =
-/// defer to the chip's own pruning policy; `p > 0` probes `p`
-/// centroids). Validation runs through the plan builder's typed errors,
-/// so the config binding and hand-built plans reject exactly the same
-/// inputs. Callers tweak the template per request
-/// ([`QueryPlan::with_k`] / [`QueryPlan::with_prune`]).
+/// Build the serving [`QueryPlan`] template from the `[serving]` and
+/// `[prune]` knobs: `serving.k` (top-k, default 10), `serving.nprobe`
+/// (0 or absent = defer to the chip's own pruning policy; `p > 0`
+/// probes `p` centroids), and the adaptive arm — `prune.adaptive_margin`
+/// (> 0 arms early termination; 0/absent = off) with
+/// `prune.adaptive_max_probe` as its probe budget (0/absent = inherit
+/// `serving.nprobe`, then `prune.nprobe`). A non-zero margin takes
+/// precedence over fixed `serving.nprobe`. Validation runs through the
+/// plan builder's typed errors, so the config binding and hand-built
+/// plans reject exactly the same inputs. Callers tweak the template per
+/// request ([`QueryPlan::with_k`] / [`QueryPlan::with_prune`]).
 pub fn query_plan(cfg: &Config) -> Result<QueryPlan> {
     let k = cfg.usize_or("serving.k", 10);
-    let prune = match cfg.usize_or("serving.nprobe", 0) {
-        0 => Prune::Default,
-        p => Prune::Probe(p),
+    let nprobe = cfg.usize_or("serving.nprobe", 0);
+    let margin = cfg.float_or("prune.adaptive_margin", 0.0);
+    let prune = if margin != 0.0 {
+        let fallback = if nprobe > 0 { nprobe } else { cfg.usize_or("prune.nprobe", 4) };
+        let max_probe = match cfg.usize_or("prune.adaptive_max_probe", 0) {
+            0 => fallback,
+            p => p,
+        };
+        Prune::adaptive(margin, max_probe)
+    } else if nprobe > 0 {
+        Prune::Probe(nprobe)
+    } else {
+        Prune::Default
     };
     QueryPlan::topk(k)
         .prune(prune)
         .build()
-        .map_err(|e| anyhow!("[serving] plan: {e}"))
+        .map_err(|e| anyhow!("[serving]/[prune] plan: {e}"))
 }
 
 /// Load the default config (if present) layered under the `DIRC_CONFIG`
@@ -259,6 +278,55 @@ query_quant = "int4"
         assert!(chip_config(&bad).is_err(), "n_clusters = 1 would silently disable pruning");
         let bad = Config::parse("[serving]\nk = 0").unwrap();
         assert!(query_plan(&bad).is_err(), "serving.k = 0 must be rejected");
+    }
+
+    #[test]
+    fn adaptive_and_cache_knobs_bind() {
+        // Off by default: no adaptive arm, no caches.
+        let cfg = Config::parse("").unwrap();
+        assert_eq!(query_plan(&cfg).unwrap().prune(), Prune::Default);
+        let c = coordinator_config(&cfg).unwrap();
+        assert_eq!(c.cache.result_entries, 0);
+        assert_eq!(c.cache.routing_entries, 0);
+        assert!(!c.cache.enabled());
+
+        // Armed adaptive takes precedence over fixed serving.nprobe and
+        // inherits it as the probe budget when max_probe is absent.
+        let cfg = Config::parse(
+            "[prune]\nadaptive_margin = 0.05\n[serving]\nnprobe = 6",
+        )
+        .unwrap();
+        assert_eq!(query_plan(&cfg).unwrap().prune(), Prune::adaptive(0.05, 6));
+
+        // Explicit budget wins; without serving.nprobe it falls back to
+        // prune.nprobe.
+        let cfg = Config::parse(
+            "[prune]\nadaptive_margin = 0.1\nadaptive_max_probe = 12",
+        )
+        .unwrap();
+        assert_eq!(query_plan(&cfg).unwrap().prune(), Prune::adaptive(0.1, 12));
+        let cfg = Config::parse("[prune]\nnprobe = 5\nadaptive_margin = 0.1").unwrap();
+        assert_eq!(query_plan(&cfg).unwrap().prune(), Prune::adaptive(0.1, 5));
+
+        // An explicit 0 budget means inherit, mirroring serving.nprobe.
+        let cfg = Config::parse(
+            "[prune]\nadaptive_margin = 0.1\nadaptive_max_probe = 0\n[serving]\nnprobe = 6",
+        )
+        .unwrap();
+        assert_eq!(query_plan(&cfg).unwrap().prune(), Prune::adaptive(0.1, 6));
+
+        // Rejection goes through the shared plan-builder validation.
+        let bad = Config::parse("[prune]\nadaptive_margin = -0.5").unwrap();
+        assert!(query_plan(&bad).is_err(), "negative margin must be rejected");
+        let bad = Config::parse("[prune]\nadaptive_margin = 0.1\nnprobe = 0").unwrap();
+        assert!(query_plan(&bad).is_err(), "zero inherited probe budget must be rejected");
+
+        // Cache capacities flow into the coordinator config.
+        let cfg = Config::parse("[serving]\ncache_results = 256\ncache_routing = 64").unwrap();
+        let c = coordinator_config(&cfg).unwrap();
+        assert_eq!(c.cache.result_entries, 256);
+        assert_eq!(c.cache.routing_entries, 64);
+        assert!(c.cache.enabled());
     }
 
     #[test]

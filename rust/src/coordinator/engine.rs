@@ -42,12 +42,16 @@
 //! untouched cores proceed in parallel with the write — the
 //! query-stationary dataflow is never disturbed mid-query.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
 use anyhow::{bail, Result};
 
 use crate::coordinator::request::Mutation;
 use crate::dirc::chip::{ChipConfig, DircChip, DocPayload, MutationStats};
+use crate::retrieval::cache::{
+    CacheConfig, CacheHierarchyStats, CentroidCache, ResultCache, ResultKey,
+};
 use crate::retrieval::plan::{Exec, PlanOutput, QueryPlan};
 use crate::retrieval::quant::{QuantScheme, Quantized};
 use crate::retrieval::score::{finalize_scores, norm_i8, Metric};
@@ -108,6 +112,82 @@ pub trait Engine: Send + Sync {
     fn dim(&self) -> usize;
 
     fn n_docs(&self) -> usize;
+
+    /// Counter snapshot of the engine's serving cache hierarchy, `None`
+    /// when the engine has no caches configured (the default).
+    fn cache_stats(&self) -> Option<CacheHierarchyStats> {
+        None
+    }
+}
+
+/// The serving cache hierarchy of one engine: hot-query result cache
+/// plus mutation-epoch bookkeeping, shared by both engines. The routing
+/// cache lives inside the chip (installed at construction, shared across
+/// mutation snapshots); this struct only keeps a handle for stats.
+struct EngineCaches {
+    cfg: CacheConfig,
+    results: Mutex<ResultCache<PlanOutput>>,
+    routing: Option<Arc<Mutex<CentroidCache>>>,
+    /// Chip mutation epoch: bumped (SeqCst) AFTER every snapshot swap,
+    /// read BEFORE taking the snapshot on the query path, so a stale
+    /// insert racing a mutation is keyed to the old epoch and can never
+    /// serve a post-mutation lookup.
+    epoch: AtomicU64,
+}
+
+impl EngineCaches {
+    /// Build the hierarchy and install the routing cache into `chip`
+    /// (before it is frozen behind its first snapshot `Arc`).
+    fn install(cfg: CacheConfig, chip: &mut DircChip) -> EngineCaches {
+        let routing = if cfg.routing_entries > 0 {
+            let cache = Arc::new(Mutex::new(CentroidCache::new(cfg.routing_entries)));
+            chip.set_routing_cache(Arc::clone(&cache));
+            Some(cache)
+        } else {
+            None
+        };
+        EngineCaches {
+            cfg,
+            results: Mutex::new(ResultCache::new(cfg.result_entries)),
+            routing,
+            epoch: AtomicU64::new(0),
+        }
+    }
+
+    /// The result-cache key of `(plan, query)` at the current epoch —
+    /// `None` when result caching is off or the plan is not Seeded.
+    fn key(&self, plan: &QueryPlan, q: &[i8]) -> Option<ResultKey> {
+        if self.cfg.result_entries == 0 {
+            return None;
+        }
+        ResultKey::for_plan(plan, q, self.epoch.load(Ordering::SeqCst))
+    }
+
+    fn get(&self, key: &ResultKey) -> Option<PlanOutput> {
+        self.results.lock().unwrap().get(key)
+    }
+
+    fn put(&self, key: ResultKey, out: &PlanOutput) {
+        self.results.lock().unwrap().put(key, out.clone());
+    }
+
+    /// Advance the mutation epoch and drop every cached result. Called
+    /// with the mutate lock held, AFTER the snapshot swap published.
+    fn on_mutation(&self) {
+        self.epoch.fetch_add(1, Ordering::SeqCst);
+        self.results.lock().unwrap().invalidate();
+    }
+
+    fn stats(&self) -> CacheHierarchyStats {
+        CacheHierarchyStats {
+            results: self.results.lock().unwrap().stats(),
+            routing: self
+                .routing
+                .as_ref()
+                .map(|r| r.lock().unwrap().stats())
+                .unwrap_or_default(),
+        }
+    }
 }
 
 /// Resolve [`Exec::Auto`] against an engine's attached pool: with a pool
@@ -186,6 +266,7 @@ pub struct SimEngine {
     /// with the final pointer swap).
     mutate_lock: Mutex<()>,
     pool: Option<Arc<ThreadPool>>,
+    caches: EngineCaches,
 }
 
 impl SimEngine {
@@ -200,10 +281,27 @@ impl SimEngine {
         db: &Quantized,
         pool: Option<Arc<ThreadPool>>,
     ) -> SimEngine {
+        Self::with_caches(cfg, db, pool, CacheConfig::default())
+    }
+
+    /// Build with the serving cache hierarchy: a hot-query result cache
+    /// on the retrieve path (Seeded plans only; hits are bit-identical
+    /// to recompute and invalidated by every mutation) and a
+    /// centroid-routing cache inside the chip. Zero capacities (the
+    /// default) are exactly the uncached engine.
+    pub fn with_caches(
+        cfg: ChipConfig,
+        db: &Quantized,
+        pool: Option<Arc<ThreadPool>>,
+        caches: CacheConfig,
+    ) -> SimEngine {
+        let mut chip = DircChip::build(cfg, db);
+        let caches = EngineCaches::install(caches, &mut chip);
         SimEngine {
-            chip: RwLock::new(Arc::new(DircChip::build(cfg, db))),
+            chip: RwLock::new(Arc::new(chip)),
             mutate_lock: Mutex::new(()),
             pool,
+            caches,
         }
     }
 
@@ -216,12 +314,29 @@ impl SimEngine {
 
 impl Engine for SimEngine {
     fn retrieve(&self, q: &[i8], plan: &QueryPlan) -> PlanOutput {
-        self.chip().execute(q, &resolve_exec(plan, &self.pool))
+        let plan = resolve_exec(plan, &self.pool);
+        // Epoch-stamped key BEFORE the snapshot read (see EngineCaches).
+        let key = self.caches.key(&plan, q);
+        if let Some(key) = &key {
+            if let Some(hit) = self.caches.get(key) {
+                return hit;
+            }
+        }
+        let out = self.chip().execute(q, &plan);
+        if let Some(key) = key {
+            self.caches.put(key, &out);
+        }
+        out
     }
 
     fn retrieve_batch(&self, queries: &[Vec<i8>], plan: &QueryPlan) -> Vec<PlanOutput> {
         // One snapshot for the whole batch; under a pool this pipelines
-        // as the queries x cores job matrix.
+        // as the queries x cores job matrix. The result cache is NOT
+        // consulted here: under a shared seeded stream a query's nonce
+        // depends on its batch position, so per-query results are not a
+        // function of (query, plan) alone. Cached serving goes through
+        // single-query `retrieve` (the coordinator's workers switch to
+        // it when caching is enabled).
         self.chip().execute_batch(queries, &resolve_exec(plan, &self.pool))
     }
 
@@ -245,6 +360,10 @@ impl Engine for SimEngine {
         let mut next = DircChip::clone(&self.chip());
         let out = apply_mutation(&mut next, m, rng)?;
         *self.chip.write().unwrap() = Arc::new(next);
+        // Epoch bump + result-cache clear strictly AFTER the swap
+        // publishes (the query path reads epoch before snapshot, so this
+        // ordering makes stale inserts unreachable).
+        self.caches.on_mutation();
         Ok(out)
     }
 
@@ -254,6 +373,10 @@ impl Engine for SimEngine {
 
     fn n_docs(&self) -> usize {
         self.chip().n_docs()
+    }
+
+    fn cache_stats(&self) -> Option<CacheHierarchyStats> {
+        self.caches.cfg.enabled().then(|| self.caches.stats())
     }
 }
 
@@ -325,6 +448,7 @@ pub struct ServingEngine {
     runtime: Arc<PjrtRuntime>,
     metric: Metric,
     pool: Option<Arc<ThreadPool>>,
+    caches: EngineCaches,
 }
 
 impl ServingEngine {
@@ -345,15 +469,30 @@ impl ServingEngine {
         runtime: Arc<PjrtRuntime>,
         pool: Option<Arc<ThreadPool>>,
     ) -> Result<ServingEngine> {
+        Self::with_caches(cfg, db, runtime, pool, CacheConfig::default())
+    }
+
+    /// Build with the serving cache hierarchy (see
+    /// [`SimEngine::with_caches`] — the contract is identical, and both
+    /// engines stay bit-identical under every plan, cached or not).
+    pub fn with_caches(
+        cfg: ChipConfig,
+        db: &Quantized,
+        runtime: Arc<PjrtRuntime>,
+        pool: Option<Arc<ThreadPool>>,
+        caches: CacheConfig,
+    ) -> Result<ServingEngine> {
         let metric = cfg.metric;
-        let chip = Arc::new(DircChip::build(cfg, db));
-        let state = ServeState::build(chip, &runtime)?;
+        let mut chip = DircChip::build(cfg, db);
+        let caches = EngineCaches::install(caches, &mut chip);
+        let state = ServeState::build(Arc::new(chip), &runtime)?;
         Ok(ServingEngine {
             state: RwLock::new(state),
             mutate_lock: Mutex::new(()),
             runtime,
             metric,
             pool,
+            caches,
         })
     }
 
@@ -370,6 +509,14 @@ impl ServingEngine {
 impl Engine for ServingEngine {
     fn retrieve(&self, q: &[i8], plan: &QueryPlan) -> PlanOutput {
         let plan = resolve_exec(plan, &self.pool);
+        // Epoch-stamped key BEFORE the state read (see EngineCaches): a
+        // hit skips the sense pass AND the PJRT execution entirely.
+        let key = self.caches.key(&plan, q);
+        if let Some(key) = &key {
+            if let Some(hit) = self.caches.get(key) {
+                return hit;
+            }
+        }
         let q_norm = norm_i8(q);
         // Hold the read lock across the whole pass: the PJRT block and
         // the chip snapshot must come from the same corpus version.
@@ -425,7 +572,12 @@ impl Engine for ServingEngine {
                 }
             }
         }
-        PlanOutput { topk: topk.into_sorted(), stats: sense.stats }
+        let out = PlanOutput { topk: topk.into_sorted(), stats: sense.stats };
+        drop(state);
+        if let Some(key) = key {
+            self.caches.put(key, &out);
+        }
+        out
     }
 
     fn mutate(&self, m: &Mutation, rng: &mut Pcg) -> Result<MutationOutcome> {
@@ -439,6 +591,9 @@ impl Engine for ServingEngine {
         let out = apply_mutation(&mut next, m, rng)?;
         let next_state = ServeState::build(Arc::new(next), &self.runtime)?;
         *self.state.write().unwrap() = next_state;
+        // Epoch bump + result-cache clear strictly AFTER the state swap
+        // publishes (same ordering argument as SimEngine::mutate).
+        self.caches.on_mutation();
         Ok(out)
     }
 
@@ -448,6 +603,10 @@ impl Engine for ServingEngine {
 
     fn n_docs(&self) -> usize {
         self.state.read().unwrap().chip.n_docs()
+    }
+
+    fn cache_stats(&self) -> Option<CacheHierarchyStats> {
+        self.caches.cfg.enabled().then(|| self.caches.stats())
     }
 }
 
@@ -605,6 +764,80 @@ mod tests {
                 assert!(pruned.energy_j < full.energy_j);
             }
         }
+    }
+
+    #[test]
+    fn cached_retrieve_bit_identical_and_invalidated_by_mutation() {
+        let q = db(300, 128, 21);
+        let caches = CacheConfig { result_entries: 64, routing_entries: 64 };
+        let cached = SimEngine::with_caches(cfg(128, 4), &q, None, caches);
+        let plain = SimEngine::new(cfg(128, 4), &q);
+        let mut rng = Pcg::new(5);
+        let qv: Vec<i8> = (0..128).map(|_| rng.int_in(-128, 127) as i8).collect();
+        let plan = QueryPlan::topk(5).seed(33).build().unwrap();
+
+        // First retrieve misses and must equal the uncached engine bit
+        // for bit; the repeat must hit and return the identical output.
+        let miss = cached.retrieve(&qv, &plan);
+        let want = plain.retrieve(&qv, &plan);
+        assert_eq!(miss.topk, want.topk);
+        assert_eq!(miss.stats.cycles, want.stats.cycles);
+        assert_eq!(miss.stats.energy_j.to_bits(), want.stats.energy_j.to_bits());
+        let hit = cached.retrieve(&qv, &plan);
+        assert_eq!(hit.topk, miss.topk);
+        assert_eq!(hit.stats.cycles, miss.stats.cycles);
+        assert_eq!(hit.stats.energy_j.to_bits(), miss.stats.energy_j.to_bits());
+        let s = cached.cache_stats().expect("caches configured");
+        assert_eq!((s.results.hits, s.results.misses), (1, 1));
+
+        // A mutation invalidates: the next retrieve recomputes on the
+        // new corpus, then repeats hit again.
+        let new_doc: Vec<f32> = (0..128).map(|i| ((i % 5) as f32 - 2.0) / 10.0).collect();
+        cached.mutate(&Mutation::Add { docs: vec![new_doc] }, &mut rng).expect("add");
+        let after = cached.retrieve(&qv, &plan);
+        let s2 = cached.cache_stats().unwrap();
+        assert_eq!(s2.results.invalidations, 1);
+        assert_eq!(s2.results.misses, 2, "post-mutation lookup must miss");
+        let again = cached.retrieve(&qv, &plan);
+        assert_eq!(again.topk, after.topk);
+        assert_eq!(cached.cache_stats().unwrap().results.hits, 2);
+    }
+
+    #[test]
+    fn routing_cache_keeps_pruned_paths_bit_identical() {
+        // The centroid-routing cache is a throughput knob: cached and
+        // uncached engines must agree bit for bit under fixed-nprobe AND
+        // adaptive policies, and the cache must actually serve repeats.
+        let q = db(320, 128, 23);
+        let mk_cfg = || ChipConfig {
+            cluster: crate::retrieval::cluster::ClusterPolicy {
+                n_clusters: 8,
+                nprobe: 2,
+                kmeans_iters: 6,
+            },
+            ..cfg(128, 4)
+        };
+        let caches = CacheConfig { result_entries: 0, routing_entries: 32 };
+        let routed = SimEngine::with_caches(mk_cfg(), &q, None, caches);
+        let plain = SimEngine::new(mk_cfg(), &q);
+        let mut qrng = Pcg::new(71);
+        let queries: Vec<Vec<i8>> = (0..3)
+            .map(|_| (0..128).map(|_| qrng.int_in(-128, 127) as i8).collect())
+            .collect();
+        let base = QueryPlan::topk(5).seed(9).build().unwrap();
+        for prune in [Prune::Default, Prune::Probe(3), Prune::adaptive(0.05, 6)] {
+            let plan = base.with_prune(prune).unwrap();
+            for qv in &queries {
+                let a = plain.retrieve(qv, &plan);
+                let b = routed.retrieve(qv, &plan);
+                assert_eq!(a.topk, b.topk, "{prune:?}");
+                assert_eq!(a.stats.cycles, b.stats.cycles, "{prune:?}");
+                assert_eq!(a.stats.clusters_probed, b.stats.clusters_probed, "{prune:?}");
+            }
+        }
+        let s = routed.cache_stats().expect("routing cache configured");
+        assert_eq!(s.routing.misses, 3, "one ranking per distinct query");
+        assert!(s.routing.hits >= 6, "repeats must reuse cached rankings");
     }
 
     // ServingEngine vs SimEngine equivalence lives in rust/tests/

@@ -5,6 +5,7 @@
 use std::sync::Mutex;
 use std::time::Instant;
 
+use crate::retrieval::cache::CacheHierarchyStats;
 use crate::util::stats::{Histogram, Welford};
 
 /// Aggregated serving metrics.
@@ -26,6 +27,9 @@ struct Inner {
     sim_energy_j: Welford,
     sim_flips: u64,
     sim_resenses: u64,
+    macros_sensed: u64,
+    macros_skipped: u64,
+    clusters_probed: u64,
     mutations: u64,
     docs_written: u64,
     docs_deleted: u64,
@@ -49,6 +53,21 @@ pub struct Snapshot {
     pub sim_energy_mean_j: f64,
     pub sim_flips: u64,
     pub sim_resenses: u64,
+    /// Macros the centroid prefilter let sense (probes issued).
+    pub macros_sensed: u64,
+    /// Macros the prefilter skipped (probes saved — zero sense cycles,
+    /// zero energy events).
+    pub macros_skipped: u64,
+    /// Clusters probed by the prefilter, summed over pruned queries
+    /// (adaptive early termination shows up as a drop in this total at
+    /// fixed traffic).
+    pub clusters_probed: u64,
+    /// Serving cache hierarchy counters — `None` when the engine has no
+    /// caches configured (the coordinator fills this from
+    /// [`crate::coordinator::engine::Engine::cache_stats`] at snapshot
+    /// time; result-cache hits are queries served without touching the
+    /// chip).
+    pub cache: Option<CacheHierarchyStats>,
     /// Mutation batches applied through the serve-mode mutation channel.
     pub mutations: u64,
     /// Documents programmed (adds + updates).
@@ -82,6 +101,9 @@ impl Metrics {
                 sim_energy_j: Welford::default(),
                 sim_flips: 0,
                 sim_resenses: 0,
+                macros_sensed: 0,
+                macros_skipped: 0,
+                clusters_probed: 0,
                 mutations: 0,
                 docs_written: 0,
                 docs_deleted: 0,
@@ -105,6 +127,9 @@ impl Metrics {
         m.sim_energy_j.push(resp.stats.energy_j);
         m.sim_flips += resp.stats.sense.flips;
         m.sim_resenses += resp.stats.sense.resenses;
+        m.macros_sensed += resp.stats.macros_sensed as u64;
+        m.macros_skipped += resp.stats.macros_skipped as u64;
+        m.clusters_probed += resp.stats.clusters_probed as u64;
     }
 
     pub fn record_error(&self) {
@@ -139,6 +164,10 @@ impl Metrics {
             sim_energy_mean_j: m.sim_energy_j.mean(),
             sim_flips: m.sim_flips,
             sim_resenses: m.sim_resenses,
+            macros_sensed: m.macros_sensed,
+            macros_skipped: m.macros_skipped,
+            clusters_probed: m.clusters_probed,
+            cache: None,
             mutations: m.mutations,
             docs_written: m.docs_written,
             docs_deleted: m.docs_deleted,
@@ -151,13 +180,15 @@ impl Metrics {
 
 impl Snapshot {
     pub fn render(&self) -> String {
-        format!(
+        let mut out = format!(
             concat!(
                 "served={} errors={} uptime={:.1}s qps={:.1}\n",
                 "host latency: mean {:.3} ms, p95 {:.3} ms ",
                 "(embed {:.3} ms, retrieve {:.3} ms)\n",
                 "simulated chip: latency {:.2} µs/query, energy {:.3} µJ/query, ",
                 "{} flips, {} re-senses\n",
+                "pruning: {} clusters probed, {} macros sensed, {} skipped ",
+                "({:.1}% of macro senses saved)\n",
                 "ingest: {} mutations ({} docs written, {} deleted, {} cells), ",
                 "write cost {:.1} µJ / {:.3} ms\n",
             ),
@@ -173,13 +204,35 @@ impl Snapshot {
             self.sim_energy_mean_j * 1e6,
             self.sim_flips,
             self.sim_resenses,
+            self.clusters_probed,
+            self.macros_sensed,
+            self.macros_skipped,
+            100.0 * self.macros_skipped as f64
+                / (self.macros_sensed + self.macros_skipped).max(1) as f64,
             self.mutations,
             self.docs_written,
             self.docs_deleted,
             self.cells_written,
             self.write_energy_j * 1e6,
             self.write_time_s * 1e3,
-        )
+        );
+        if let Some(cache) = &self.cache {
+            out.push_str(&format!(
+                concat!(
+                    "caches: results {} hits / {} misses ({:.1}% hit rate, ",
+                    "{} evictions, {} invalidations), ",
+                    "routing {} hits / {} misses\n",
+                ),
+                cache.results.hits,
+                cache.results.misses,
+                100.0 * cache.results.hit_rate(),
+                cache.results.evictions,
+                cache.results.invalidations,
+                cache.routing.hits,
+                cache.routing.misses,
+            ));
+        }
+        out
     }
 }
 
@@ -199,7 +252,8 @@ mod tests {
                 cycles: 1400,
                 work_cycles: 20480,
                 macros_sensed: 16,
-                macros_skipped: 0,
+                macros_skipped: 48,
+                clusters_probed: 2,
                 latency_s: 5.6e-6,
                 energy_j: 0.95e-6,
                 docs_scored: 100,
@@ -223,7 +277,37 @@ mod tests {
         assert!((s.host_latency_mean_s - 5.5e-3).abs() < 1e-6);
         assert_eq!(s.sim_flips, 30);
         assert_eq!(s.sim_resenses, 10);
-        assert!(s.render().contains("served=10"));
+        assert_eq!(s.macros_sensed, 160);
+        assert_eq!(s.macros_skipped, 480);
+        assert_eq!(s.clusters_probed, 20);
+        assert!(s.cache.is_none());
+        let text = s.render();
+        assert!(text.contains("served=10"));
+        assert!(text.contains("20 clusters probed"));
+        assert!(text.contains("75.0% of macro senses saved"));
+        assert!(!text.contains("caches:"));
+    }
+
+    #[test]
+    fn render_includes_cache_line_when_present() {
+        use crate::retrieval::cache::CacheStats;
+        let m = Metrics::new();
+        m.record(&fake_response(1e-3));
+        let mut s = m.snapshot();
+        s.cache = Some(CacheHierarchyStats {
+            results: CacheStats {
+                hits: 3,
+                misses: 1,
+                insertions: 1,
+                evictions: 0,
+                invalidations: 2,
+            },
+            routing: CacheStats { hits: 7, misses: 2, ..CacheStats::default() },
+        });
+        let text = s.render();
+        assert!(text.contains("results 3 hits / 1 misses (75.0% hit rate"));
+        assert!(text.contains("2 invalidations"));
+        assert!(text.contains("routing 7 hits / 2 misses"));
     }
 
     #[test]

@@ -40,6 +40,7 @@ use crate::coordinator::request::{
     Mutation, MutationResponse, Query, Request, RequestKind, Response,
 };
 use crate::data::text::{bow_features, HASH_BUCKETS};
+use crate::retrieval::cache::{content_seed, CacheConfig};
 use crate::retrieval::plan::QueryPlan;
 use crate::retrieval::quant::QuantScheme;
 use crate::runtime::PjrtRuntime;
@@ -65,6 +66,19 @@ pub struct CoordinatorConfig {
     /// policy).
     pub mutation_max_defer: Duration,
     pub seed: u64,
+    /// Serving cache hierarchy capacities (`[serving] cache_results` /
+    /// `cache_routing`; both 0 = off, the default). The engine must be
+    /// built with the same [`CacheConfig`] (see
+    /// `SimEngine::with_caches`) — the coordinator's half switches the
+    /// workers to cache-friendly dispatch: with result caching on, each
+    /// query dispatches singly under a **content-pinned** seed
+    /// ([`crate::retrieval::cache::content_seed`]), so a repeat of a hot
+    /// query carries the identical Seeded plan and the engine's result
+    /// cache serves it bit-identically. This trades the per-dispatch
+    /// rng decorrelation of repeats for cacheability — which is the
+    /// semantic of a result cache — while distinct queries stay
+    /// decorrelated through the content hash.
+    pub cache: CacheConfig,
 }
 
 impl Default for CoordinatorConfig {
@@ -76,6 +90,7 @@ impl Default for CoordinatorConfig {
             retrieve_batch: 8,
             mutation_max_defer: Duration::from_millis(20),
             seed: 0xC00D,
+            cache: CacheConfig::default(),
         }
     }
 }
@@ -107,6 +122,9 @@ pub struct Coordinator {
     mutation_tx: Option<Sender<MutPending>>,
     threads: Vec<JoinHandle<()>>,
     metrics: Arc<Metrics>,
+    /// Kept for metrics snapshots: the engine owns the serving caches,
+    /// so the coordinator reads their counters at snapshot time.
+    engine: Arc<dyn Engine>,
     next_id: AtomicU64,
     stop: Arc<AtomicBool>,
     /// Accepted retrievals not yet answered — counted from `submit`
@@ -173,11 +191,16 @@ impl Coordinator {
             let inflight2 = Arc::clone(&inflight);
             let seed = cfg.seed ^ (w as u64) << 32;
             let batch_max = cfg.retrieve_batch.max(1);
+            // Result caching switches dispatch to content-pinned seeds;
+            // the pin base is the UNSALTED config seed — it must agree
+            // across workers or the same query would never hit.
+            let pin_base =
+                (cfg.cache.result_entries > 0).then_some(cfg.seed);
             threads.push(
                 std::thread::Builder::new()
                     .name(format!("dirc-worker-{w}"))
                     .spawn(move || {
-                        worker_loop(work_rx, engine, metrics2, inflight2, seed, batch_max)
+                        worker_loop(work_rx, engine, metrics2, inflight2, seed, batch_max, pin_base)
                     })
                     .expect("spawn worker"),
             );
@@ -207,6 +230,7 @@ impl Coordinator {
             mutation_tx: Some(mutation_tx),
             threads,
             metrics,
+            engine,
             next_id: AtomicU64::new(1),
             stop,
             inflight,
@@ -269,7 +293,9 @@ impl Coordinator {
     }
 
     pub fn metrics(&self) -> Snapshot {
-        self.metrics.snapshot()
+        let mut snap = self.metrics.snapshot();
+        snap.cache = self.engine.cache_stats();
+        snap
     }
 
     /// Graceful shutdown: drain queues — in-flight mutation requests
@@ -281,7 +307,9 @@ impl Coordinator {
         for t in self.threads.drain(..) {
             let _ = t.join();
         }
-        self.metrics.snapshot()
+        let mut snap = self.metrics.snapshot();
+        snap.cache = self.engine.cache_stats();
+        snap
     }
 }
 
@@ -437,6 +465,7 @@ fn flush(
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     work_rx: Arc<Mutex<Receiver<WorkItem>>>,
     engine: Arc<dyn Engine>,
@@ -444,6 +473,7 @@ fn worker_loop(
     inflight: Arc<AtomicU64>,
     seed: u64,
     batch_max: usize,
+    pin_base: Option<u64>,
 ) {
     let mut rng = Pcg::new(seed);
     // Engines whose batch path is a serial loop report capacity 1, so a
@@ -461,6 +491,32 @@ fn worker_loop(
             crate::coordinator::batcher::recv_batch(&guard, batch_max)
         };
         let Some(items) = items else { return };
+        if let Some(base) = pin_base {
+            // Result caching is on: dispatch each query singly through
+            // the engine's cached `retrieve` path, under a seed pinned to
+            // the query content. A repeat of a hot query carries the
+            // identical Seeded plan — the cache-key precondition — and
+            // batch-position-dependent nonces never enter the picture
+            // (per-query results inside a shared-stream batch are not
+            // cacheable; see `SimEngine::retrieve_batch`).
+            for item in items {
+                let plan = item.plan.with_seed(content_seed(&item.q_int, base));
+                let t0 = Instant::now();
+                let out = engine.retrieve(&item.q_int, &plan);
+                let resp = Response {
+                    id: item.pending.req.id,
+                    topk: out.topk,
+                    stats: out.stats,
+                    embed_s: item.embed_s,
+                    retrieve_s: t0.elapsed().as_secs_f64(),
+                    total_s: item.pending.submitted.elapsed().as_secs_f64(),
+                };
+                metrics.record(&resp);
+                let _ = item.pending.resp_tx.send(resp);
+                inflight.fetch_sub(1, Ordering::SeqCst);
+            }
+            continue;
+        }
         let mut items = std::collections::VecDeque::from(items);
         while !items.is_empty() {
             // Group only requests whose plans can honestly share one

@@ -47,7 +47,7 @@
 //!    under concurrency.
 
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Result};
 
@@ -58,7 +58,8 @@ use crate::dirc::macro_::{DocWrite, Flip, MacroConfig, SenseStats};
 use crate::dirc::remap::RemapStrategy;
 use crate::dirc::variation::{ErrorMap, VariationModel};
 use crate::dirc::write::{UpdateCost, WriteModel};
-use crate::retrieval::cluster::{kmeans, Centroids, ClusterPolicy, Prune};
+use crate::retrieval::cache::CentroidCache;
+use crate::retrieval::cluster::{kmeans, Centroids, ClusterBounds, ClusterPolicy, Prune};
 use crate::retrieval::packed::PackedQuery;
 use crate::retrieval::plan::{Exec, PlanOutput, QueryPlan, ScoreBackend, StatsDetail};
 use crate::retrieval::quant::Quantized;
@@ -155,6 +156,11 @@ pub struct QueryStats {
     pub energy_j: f64,
     /// Documents scored across the sensed cores.
     pub docs_scored: u64,
+    /// Clusters the centroid prefilter probed for this query (0 on the
+    /// exhaustive path). Under [`Prune::Adaptive`] this is where the
+    /// early stop landed — the probes-per-query quantity the adaptive
+    /// bench and the serving metrics report.
+    pub clusters_probed: u32,
 }
 
 /// One core's independent contribution to a query — everything the chip
@@ -179,6 +185,19 @@ pub struct CoreOutcome {
     pub skipped: bool,
 }
 
+/// The outcome of resolving a [`Prune`] policy for one query: the
+/// macro mask ([`None`] for the exhaustive path) plus the number of
+/// clusters the prefilter actually probed, stamped into
+/// [`QueryStats::clusters_probed`] by the plan execution paths.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PruneResolution {
+    /// `Some(mask)` with `mask[c] == false` for skipped macros, `None`
+    /// for the exhaustive (unpruned) path.
+    pub mask: Option<Vec<bool>>,
+    /// Clusters the centroid prefilter probed (0 when exhaustive).
+    pub clusters_probed: u32,
+}
+
 /// The chip's two-stage retrieval index: frozen build-time centroids plus
 /// a per-core bitset of the clusters each core currently hosts (live
 /// documents only — the mutation path keeps it in sync).
@@ -189,12 +208,25 @@ pub struct ClusterIndex {
     /// `core_clusters[c]` is a bitset over cluster ids: bit `j` set iff
     /// core `c` holds at least one live document of cluster `j`.
     core_clusters: Vec<Vec<u64>>,
+    /// Conservative per-cluster score bounds for the adaptive early
+    /// stop: exact at build time, grown by the mutation path
+    /// ([`ClusterIndex::observe_doc`]), stale-loose after deletes.
+    bounds: ClusterBounds,
 }
 
 impl ClusterIndex {
     fn new(centroids: Arc<Centroids>, cores: usize) -> ClusterIndex {
         let words = centroids.n_clusters.div_ceil(64);
-        ClusterIndex { centroids, core_clusters: vec![vec![0u64; words]; cores] }
+        let k = centroids.n_clusters;
+        ClusterIndex {
+            centroids,
+            core_clusters: vec![vec![0u64; words]; cores],
+            bounds: ClusterBounds {
+                radii: vec![0.0; k],
+                min_norms: vec![f64::INFINITY; k],
+                max_norms: vec![0.0; k],
+            },
+        }
     }
 
     pub fn n_clusters(&self) -> usize {
@@ -203,6 +235,18 @@ impl ClusterIndex {
 
     pub fn centroids(&self) -> &Centroids {
         &self.centroids
+    }
+
+    /// The per-cluster adaptive-stop bounds.
+    pub fn bounds(&self) -> &ClusterBounds {
+        &self.bounds
+    }
+
+    /// Fold one routed (or re-routed) document into its cluster's
+    /// bounds — the grow-only maintenance of the mutation path.
+    fn observe_doc(&mut self, cluster: u32, values: &[i8], norm: f32) {
+        let centroids = Arc::clone(&self.centroids);
+        self.bounds.observe(cluster, values, &centroids, norm);
     }
 
     /// Whether core `c` hosts at least one live document of `cluster`.
@@ -276,6 +320,11 @@ pub struct DircChip {
     wear_at_refresh: u64,
     /// Monotone epoch counter salting the refresh characterisation seed.
     map_epoch: u64,
+    /// Optional centroid-routing cache (engine-installed): query bits →
+    /// full centroid ranking. Centroids are frozen for the chip's
+    /// lifetime, so the cache is shared **across mutation snapshots**
+    /// (clones share the `Arc`) and never needs invalidation.
+    routing_cache: Option<Arc<Mutex<CentroidCache>>>,
 }
 
 impl DircChip {
@@ -322,9 +371,13 @@ impl DircChip {
         let per_core = db.n.div_ceil(cfg.cores);
         let mut cores = Vec::with_capacity(cfg.cores);
         let mut doc_core = HashMap::with_capacity(db.n);
-        let mut index = clustering
-            .as_ref()
-            .map(|cl| ClusterIndex::new(Arc::new(cl.centroids.clone()), cfg.cores));
+        let mut index = clustering.as_ref().map(|cl| {
+            let mut index = ClusterIndex::new(Arc::new(cl.centroids.clone()), cfg.cores);
+            // Exact adaptive-stop bounds over the freshly clustered
+            // corpus; the mutation path keeps them conservative.
+            index.bounds = ClusterBounds::build(&db.values, db.n, db.dim, cl, &db.norms);
+            index
+        });
         for c in 0..cfg.cores {
             let lo = (c * per_core).min(db.n);
             let hi = ((c + 1) * per_core).min(db.n);
@@ -364,6 +417,7 @@ impl DircChip {
             stale_cores,
             wear_at_refresh: 0,
             map_epoch: 0,
+            routing_cache: None,
         }
     }
 
@@ -389,6 +443,36 @@ impl DircChip {
         self.clusters.as_ref()
     }
 
+    /// Install a centroid-routing cache: subsequent prefilter
+    /// resolutions reuse cached centroid rankings instead of re-ranking
+    /// per query. Routing through the cache is **bit-identical** to
+    /// recompute (a ranking is a pure function of the frozen centroids),
+    /// so this is a throughput knob, never a semantics knob. Engines
+    /// install it once at construction; mutation snapshots share it.
+    pub fn set_routing_cache(&mut self, cache: Arc<Mutex<CentroidCache>>) {
+        self.routing_cache = Some(cache);
+    }
+
+    /// The installed centroid-routing cache, if any (metrics snapshots
+    /// read its counters here).
+    pub fn routing_cache(&self) -> Option<&Arc<Mutex<CentroidCache>>> {
+        self.routing_cache.as_ref()
+    }
+
+    /// The full centroid ranking for `q`, through the routing cache when
+    /// one is installed.
+    fn ranked_for(&self, index: &ClusterIndex, q: &[i8]) -> Arc<Vec<(f64, u32)>> {
+        match &self.routing_cache {
+            Some(cache) => cache
+                .lock()
+                .expect("routing cache poisoned")
+                .ranked_or_insert(q, || {
+                    index.centroids().ranked_for_query(q, self.cfg.metric)
+                }),
+            None => Arc::new(index.centroids().ranked_for_query(q, self.cfg.metric)),
+        }
+    }
+
     /// Resolve a [`Prune`] policy into the per-core macro mask of one
     /// query: `Some(mask)` with `mask[c] == false` for every macro the
     /// centroid prefilter skips, `None` for the exhaustive path.
@@ -399,23 +483,129 @@ impl DircChip {
     /// `nprobe` covers every centroid, or the mask would select no macro
     /// at all (every probed centroid empty; falling back to exhaustive
     /// beats returning nothing).
+    ///
+    /// An adaptive policy resolves here with its early stop *disarmed*
+    /// (the `Probe(max_probe)` superset mask — this signature carries no
+    /// `k` for the running top-k); the plan execution paths resolve
+    /// adaptive policies through [`DircChip::resolve_prune`].
     pub fn macro_mask(&self, q: &[i8], prune: Prune) -> Option<Vec<bool>> {
-        let index = self.clusters.as_ref()?;
+        let prune = match prune {
+            Prune::Adaptive { max_probe, .. } => Prune::Probe(max_probe),
+            p => p,
+        };
+        self.resolve_prune(q, 1, prune).mask
+    }
+
+    /// The full [`Prune`] resolution of one query: the macro mask plus
+    /// how many clusters the prefilter probed (the
+    /// [`QueryStats::clusters_probed`] quantity). Consumes **no rng** —
+    /// for [`Prune::Adaptive`] the wave-by-wave early-termination
+    /// controller runs on clean (noise-free) scores, so the mask stays a
+    /// pure function of `(query, k, policy, chip state)` and the
+    /// mask-before-nonce invariant of the determinism contract holds
+    /// unchanged. `k` is the plan's `k` (the running top-k the stop rule
+    /// watches); it only affects adaptive policies.
+    pub fn resolve_prune(&self, q: &[i8], k: usize, prune: Prune) -> PruneResolution {
+        let exhaustive = PruneResolution { mask: None, clusters_probed: 0 };
+        let Some(index) = self.clusters.as_ref() else {
+            return exhaustive;
+        };
         let nprobe = match prune {
-            Prune::None => return None,
+            Prune::None => return exhaustive,
             Prune::Default => self.cfg.cluster.nprobe,
             Prune::Probe(p) => p,
+            Prune::Adaptive { target_margin, max_probe } => {
+                let margin = target_margin.get();
+                if margin > 0.0 {
+                    return self.adaptive_resolve(index, q, k, margin, max_probe);
+                }
+                // Zero margin disarms the stop entirely: bit-identical
+                // to Probe(max_probe), the invariant the tests pin.
+                max_probe
+            }
         };
         if nprobe == 0 || nprobe >= index.n_clusters() {
-            return None;
+            return exhaustive;
         }
-        let probed = index.centroids().top_for_query(q, self.cfg.metric, nprobe);
+        // Prefix of the full ranking == `top_for_query` (pinned by the
+        // cluster module's tests), routed through the cache if installed.
+        let ranked = self.ranked_for(index, q);
+        let probed: Vec<u32> = ranked.iter().take(nprobe).map(|&(_, j)| j).collect();
         let mask = index.core_mask(&probed);
         if mask.iter().any(|&m| m) {
-            Some(mask)
+            PruneResolution { mask: Some(mask), clusters_probed: nprobe as u32 }
         } else {
-            None
+            exhaustive
         }
+    }
+
+    /// The armed adaptive controller: walk clusters in centroid-score
+    /// order, folding each newly selected core's clean scores into a
+    /// running top-`k`, and stop once the running k-th score beats the
+    /// next cluster's conservative upper bound by `margin` (or the
+    /// `max_probe` cap is hit). A core is evaluated at most once — the
+    /// final mask is exactly the `Probe(p_stop)` mask, so the adaptive
+    /// result is bit-identical to a `Probe(p_stop)` plan for the
+    /// query-dependent prefix `p_stop` (pinned by the property tests).
+    fn adaptive_resolve(
+        &self,
+        index: &ClusterIndex,
+        q: &[i8],
+        k: usize,
+        margin: f64,
+        max_probe: usize,
+    ) -> PruneResolution {
+        let n_clusters = index.n_clusters();
+        let cap = max_probe.min(n_clusters);
+        let ranked = self.ranked_for(index, q);
+        let q_norm = norm_i8(q);
+        let mut running = crate::retrieval::topk::TopK::new(k.max(1));
+        let mut sensed = vec![false; self.cores.len()];
+        let mut probed = 0usize;
+        for step in 0..cap {
+            let j = ranked[step].1;
+            probed = step + 1;
+            for (c, core) in self.cores.iter().enumerate() {
+                if sensed[c] || !index.core_has(c, j) {
+                    continue;
+                }
+                sensed[c] = true;
+                // Clean-score controller: no rng, shared verbatim by
+                // execute / sense_execute / clean_execute, and the same
+                // candidate set a Probe plan would rank (all live docs
+                // of the sensed core — the mask is macro-granular).
+                let scores = core.clean_scores(q, q_norm, self.cfg.metric);
+                for (i, &s) in scores.iter().enumerate() {
+                    if core.live()[i] {
+                        running.push(ScoredDoc { doc_id: core.doc_ids()[i], score: s });
+                    }
+                }
+            }
+            if probed >= cap {
+                break;
+            }
+            if running.len() == running.k() {
+                let kth = running.threshold().expect("running top-k is full").score;
+                let next = ranked[probed].1 as usize;
+                let ub = index.bounds().upper_bound(
+                    index.centroids(),
+                    next,
+                    q,
+                    q_norm,
+                    self.cfg.metric,
+                );
+                if kth >= ub + margin {
+                    break;
+                }
+            }
+        }
+        // Mirror the Probe-path degradations: probing every cluster is
+        // the exhaustive path, and an all-empty selection falls back to
+        // exhaustive rather than returning nothing.
+        if probed >= n_clusters || !sensed.iter().any(|&s| s) {
+            return PruneResolution { mask: None, clusters_probed: 0 };
+        }
+        PruneResolution { mask: Some(sensed), clusters_probed: probed as u32 }
     }
 
     /// Deterministic per-(query, core) sensing stream: [`Pcg::keyed`] on
@@ -571,7 +761,8 @@ impl DircChip {
     /// [`Exec::Serial`] by the module's determinism contract.
     pub fn execute(&self, q: &[i8], plan: &QueryPlan) -> PlanOutput {
         assert_eq!(q.len(), self.cfg.dim);
-        let mask = self.macro_mask(q, plan.prune());
+        let res = self.resolve_prune(q, plan.k(), plan.prune());
+        let mask = res.mask;
         let nonce = plan.first_nonce();
         let q_norm = norm_i8(q);
         let k = plan.k();
@@ -602,8 +793,9 @@ impl DircChip {
                 mask.as_deref(),
             ),
         };
-        let (topk, stats) =
+        let (topk, mut stats) =
             self.finish_query_planned(outcomes, k, mask.is_some(), plan.detail());
+        stats.clusters_probed = res.clusters_probed;
         PlanOutput { topk, stats }
     }
 
@@ -689,12 +881,14 @@ impl DircChip {
         for q in queries {
             assert_eq!(q.len(), self.cfg.dim);
         }
-        // Masks before nonces: the prefilter consumes no rng, so the
-        // nonce stream is prune-policy-independent (the nonces above
-        // depend only on the rng policy).
-        let masks: Vec<Option<Vec<bool>>> =
-            queries.iter().map(|q| self.macro_mask(q, plan.prune())).collect();
+        // Masks before nonces: the prefilter consumes no rng (the
+        // adaptive controller runs on clean scores), so the nonce stream
+        // is prune-policy-independent (the nonces above depend only on
+        // the rng policy).
         let k = plan.k();
+        let resolutions: Vec<PruneResolution> =
+            queries.iter().map(|q| self.resolve_prune(q, k, plan.prune())).collect();
+        let masks: Vec<&Option<Vec<bool>>> = resolutions.iter().map(|r| &r.mask).collect();
         let n_cores = self.cores.len();
         let metric = self.cfg.metric;
         // Each query is packed once here (when the plan scores packed)
@@ -750,10 +944,11 @@ impl DircChip {
         );
         per_query
             .into_iter()
-            .zip(&masks)
-            .map(|(outcomes, mask)| {
-                let (topk, stats) =
-                    self.finish_query_planned(outcomes, k, mask.is_some(), plan.detail());
+            .zip(&resolutions)
+            .map(|(outcomes, res)| {
+                let (topk, mut stats) =
+                    self.finish_query_planned(outcomes, k, res.mask.is_some(), plan.detail());
+                stats.clusters_probed = res.clusters_probed;
                 PlanOutput { topk, stats }
             })
             .collect()
@@ -770,7 +965,8 @@ impl DircChip {
     /// plan.
     pub fn sense_execute(&self, q: &[i8], plan: &QueryPlan) -> SenseOutput {
         assert_eq!(q.len(), self.cfg.dim);
-        let mask = self.macro_mask(q, plan.prune());
+        let res = self.resolve_prune(q, plan.k(), plan.prune());
+        let mask = res.mask;
         let nonce = plan.first_nonce();
         let n_cores = self.cores.len();
         let results: Vec<(Vec<Flip>, CoreOutcome)> = match self.plan_pool(plan) {
@@ -814,8 +1010,9 @@ impl DircChip {
             flips.push(f);
             outcomes.push(o);
         }
-        let (_, stats) =
+        let (_, mut stats) =
             self.finish_query_planned(outcomes, plan.k(), mask.is_some(), plan.detail());
+        stats.clusters_probed = res.clusters_probed;
         SenseOutput { flips, stats, mask }
     }
 
@@ -845,6 +1042,7 @@ impl DircChip {
                 work_cycles: 0,
                 macros_sensed: sensed as u32,
                 macros_skipped: (used_slots.len() - sensed) as u32,
+                clusters_probed: 0,
                 latency_s: 0.0,
                 energy_j: 0.0,
                 docs_scored,
@@ -895,6 +1093,7 @@ impl DircChip {
             work_cycles,
             macros_sensed: sensed as u32,
             macros_skipped: (used_slots.len() - sensed) as u32,
+            clusters_probed: 0,
             latency_s,
             energy_j,
             docs_scored,
@@ -913,7 +1112,7 @@ impl DircChip {
         assert_eq!(q.len(), self.cfg.dim);
         let q_norm = norm_i8(q);
         let k = plan.k();
-        let mask = self.macro_mask(q, plan.prune());
+        let mask = self.resolve_prune(q, k, plan.prune()).mask;
         let locals: Vec<Vec<ScoredDoc>> = self
             .cores
             .iter()
@@ -1275,10 +1474,14 @@ impl DircChip {
                 .expect("placement chose a core without a free slot");
             if let Some(cl) = cluster {
                 Arc::make_mut(&mut self.cores[c]).set_slot_cluster(local, cl);
-                self.clusters
+                let index = self
+                    .clusters
                     .as_mut()
-                    .expect("cluster routed on a clustered chip")
-                    .set(c, cl);
+                    .expect("cluster routed on a clustered chip");
+                index.set(c, cl);
+                // Grow-only bounds maintenance: the adaptive early stop
+                // stays conservative for the new member.
+                index.observe_doc(cl, &p.values, p.norm);
             }
             live_counts[c] += 1;
             free[c] = self.cores[c].has_free_slot();
@@ -1338,6 +1541,12 @@ impl DircChip {
                     Arc::make_mut(&mut self.cores[c]).set_slot_cluster(local, cluster);
                     moved[c] = true;
                 }
+                // Grow-only bounds for the re-routed payload (deletes
+                // leave bounds stale-loose — conservative, never unsafe).
+                self.clusters
+                    .as_mut()
+                    .expect("checked above")
+                    .observe_doc(cluster, &p.values, p.norm);
             }
             self.account_write(c, &w, &mut stats);
             stats.docs_updated += 1;
@@ -1681,6 +1890,196 @@ mod tests {
             .map(|(_, core)| core.n_docs() as u64)
             .sum();
         assert_eq!(pruned.docs_scored, sensed_docs);
+    }
+
+    /// Topic-separable corpus for the adaptive early-stop tests: `topics`
+    /// tight clusters of `per_topic` unit vectors each, clustered with
+    /// `n_clusters == topics` so kmeans recovers the planted structure
+    /// and the per-cluster bounds stay tight.
+    fn build_topical(
+        topics: usize,
+        per_topic: usize,
+        dim: usize,
+        cores: usize,
+        nprobe: usize,
+    ) -> (DircChip, Vec<f32>) {
+        let mut rng = Pcg::new(53);
+        let centers = random_unit_rows(topics, dim, &mut rng);
+        let n = topics * per_topic;
+        let mut fp = vec![0f32; n * dim];
+        for t in 0..topics {
+            for i in 0..per_topic {
+                let row = t * per_topic + i;
+                let mut norm = 0f32;
+                for j in 0..dim {
+                    let v = centers[t * dim + j] + 0.02 * rng.normal() as f32;
+                    fp[row * dim + j] = v;
+                    norm += v * v;
+                }
+                let norm = norm.sqrt().max(1e-9);
+                for j in 0..dim {
+                    fp[row * dim + j] /= norm;
+                }
+            }
+        }
+        let db = quantize(&fp, n, dim, QuantScheme::Int8);
+        let cfg = ChipConfig {
+            cores,
+            map_points: 40,
+            cluster: crate::retrieval::cluster::ClusterPolicy {
+                n_clusters: topics,
+                nprobe,
+                kmeans_iters: 8,
+            },
+            ..ChipConfig::paper_default(dim, Metric::Cosine)
+        };
+        (DircChip::build(cfg, &db), centers)
+    }
+
+    fn topical_query(centers: &[f32], t: usize, dim: usize, rng: &mut Pcg) -> Vec<i8> {
+        let qf: Vec<f32> = (0..dim)
+            .map(|j| centers[t * dim + j] + 0.03 * rng.normal() as f32)
+            .collect();
+        quantize(&qf, 1, dim, QuantScheme::Int8).row(0).to_vec()
+    }
+
+    #[test]
+    fn zero_margin_adaptive_bit_identical_to_probe() {
+        // The pinned degradation invariant: a zero-margin adaptive policy
+        // disarms the stop and is bit-identical to Probe(max_probe) —
+        // results, cycle census, and energy bits — for every cap,
+        // including the full-probe cap (both exhaustive).
+        let chip = build_clustered(400, 128, 4, 8, 4);
+        let base = QueryPlan::topk(10).seed(11).build().unwrap();
+        let mut rng = Pcg::new(41);
+        for p in [1usize, 3, 8] {
+            for _ in 0..3 {
+                let q: Vec<i8> = (0..128).map(|_| rng.int_in(-128, 127) as i8).collect();
+                let probe = chip.execute(&q, &base.with_prune(Prune::Probe(p)).unwrap());
+                let adapt =
+                    chip.execute(&q, &base.with_prune(Prune::adaptive(0.0, p)).unwrap());
+                assert_eq!(probe.topk, adapt.topk);
+                assert_eq!(probe.stats.sense, adapt.stats.sense);
+                assert_eq!(probe.stats.cycles, adapt.stats.cycles);
+                assert_eq!(probe.stats.energy_j.to_bits(), adapt.stats.energy_j.to_bits());
+                assert_eq!(probe.stats.clusters_probed, adapt.stats.clusters_probed);
+            }
+        }
+    }
+
+    #[test]
+    fn armed_adaptive_is_probe_at_its_stopping_point() {
+        // Structural bit-identity: an armed adaptive query equals the
+        // fixed-nprobe query at its own (query-dependent) stopping point
+        // p_stop — same mask, same nonce, same census. Exhaustive
+        // fallbacks mirror Prune::None exactly.
+        let (chip, centers) = build_topical(8, 50, 128, 4, 4);
+        let base = QueryPlan::topk(5).seed(13).build().unwrap();
+        let adaptive = Prune::adaptive(0.05, 8);
+        let mut rng = Pcg::new(43);
+        for qi in 0..6 {
+            let q = topical_query(&centers, qi % 8, 128, &mut rng);
+            let res = chip.resolve_prune(&q, 5, adaptive);
+            let adapt = chip.execute(&q, &base.with_prune(adaptive).unwrap());
+            assert_eq!(adapt.stats.clusters_probed, res.clusters_probed);
+            match &res.mask {
+                None => {
+                    let full = chip.execute(&q, &base.with_prune(Prune::None).unwrap());
+                    assert_eq!(adapt.topk, full.topk);
+                    assert_eq!(adapt.stats.cycles, full.stats.cycles);
+                    assert_eq!(res.clusters_probed, 0);
+                }
+                Some(_) => {
+                    let p = res.clusters_probed as usize;
+                    assert!(p >= 1 && p < 8, "stored stop point out of range: {p}");
+                    let probe =
+                        chip.execute(&q, &base.with_prune(Prune::Probe(p)).unwrap());
+                    assert_eq!(adapt.topk, probe.topk);
+                    assert_eq!(adapt.stats.sense, probe.stats.sense);
+                    assert_eq!(adapt.stats.cycles, probe.stats.cycles);
+                    assert_eq!(
+                        adapt.stats.energy_j.to_bits(),
+                        probe.stats.energy_j.to_bits()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn adaptive_stops_early_on_separable_topics() {
+        // On a topic-separable corpus, on-topic queries dominate every
+        // other cluster's upper bound and the stop fires well before the
+        // cap: strictly fewer probes than the fixed-nprobe policy, with
+        // the probed count stamped into the stats.
+        let (chip, centers) = build_topical(8, 50, 128, 4, 4);
+        let adaptive = Prune::adaptive(0.05, 8);
+        let plan = QueryPlan::topk(3)
+            .prune(adaptive)
+            .seed(17)
+            .build()
+            .unwrap();
+        let mut rng = Pcg::new(47);
+        let mut early = 0usize;
+        let mut probes_total = 0u32;
+        for t in 0..8 {
+            let q = topical_query(&centers, t, 128, &mut rng);
+            let out = chip.execute(&q, &plan);
+            assert!(!out.topk.is_empty());
+            if out.stats.clusters_probed > 0 {
+                probes_total += out.stats.clusters_probed;
+                if out.stats.clusters_probed < 4 {
+                    early += 1;
+                }
+            } else {
+                probes_total += 8; // exhaustive fallback probed everything
+            }
+        }
+        assert!(
+            early >= 4,
+            "adaptive stop never engaged on separable topics (early={early})"
+        );
+        assert!(
+            probes_total < 8 * 4,
+            "adaptive probed no fewer clusters than nprobe=4 ({probes_total})"
+        );
+    }
+
+    #[test]
+    fn mutated_docs_grow_cluster_bounds() {
+        // The mutation path keeps the adaptive bounds conservative: after
+        // adds and updates, every live document's clean score still sits
+        // at or below its cluster's upper bound for a fresh query.
+        let mut chip = build_clustered(300, 128, 4, 8, 4);
+        let mut rng = Pcg::new(59);
+        let mkdoc = |rng: &mut Pcg| {
+            let vals: Vec<i8> = (0..128).map(|_| rng.int_in(-128, 127) as i8).collect();
+            let norm = norm_i8(&vals) as f32;
+            DocPayload { values: vals, norm }
+        };
+        let docs: Vec<DocPayload> = (0..6).map(|_| mkdoc(&mut rng)).collect();
+        let (ids, _) = chip.add_docs(&docs, &mut rng).unwrap();
+        let updates: Vec<(u64, DocPayload)> =
+            ids.iter().take(3).map(|&id| (id, mkdoc(&mut rng))).collect();
+        chip.update_docs(&updates, &mut rng).unwrap();
+        let index = chip.cluster_index().expect("clustered chip");
+        let q: Vec<i8> = (0..128).map(|_| rng.int_in(-128, 127) as i8).collect();
+        let q_norm = norm_i8(&q);
+        for core in chip.cores().iter() {
+            let scores = core.clean_scores(&q, q_norm, Metric::Mips);
+            for (i, &s) in scores.iter().enumerate() {
+                if !core.live()[i] {
+                    continue;
+                }
+                let cl = core.slot_clusters()[i] as usize;
+                let ub =
+                    index.bounds().upper_bound(index.centroids(), cl, &q, q_norm, Metric::Mips);
+                assert!(
+                    s <= ub + 1e-6,
+                    "doc score {s} above its cluster's bound {ub} after mutation"
+                );
+            }
+        }
     }
 
     #[test]

@@ -135,6 +135,34 @@
 //! `rust/tests/precision_regression.rs` gates pruned P@{1,5,10} within
 //! 2% of exhaustive at the default `nprobe`.
 //!
+//! ## Adaptive early termination & serving caches
+//!
+//! `Prune::Adaptive { target_margin, max_probe }` makes the probe
+//! budget query-dependent: clusters are visited in centroid-score
+//! order and probing stops once the running k-th clean score beats an
+//! upper bound on the best unprobed cluster
+//! ([`retrieval::cluster::ClusterBounds`]) by the margin. The
+//! controller is rng-free and resolves before the query nonce, so a
+//! `target_margin` of `0.0` degrades bit-identically to
+//! [`retrieval::Prune::Probe`]`(max_probe)` and an armed query that
+//! stops after `p` probes is bit-identical to `Probe(p)` — both
+//! property-pinned in `rust/tests/properties.rs`.
+//!
+//! The serving layer adds a cache hierarchy ([`retrieval::cache`]):
+//! a bounded hot-query [`retrieval::cache::ResultCache`] (keyed on
+//! query bits + plan shape + seed + mutation epoch; Seeded plans only,
+//! so a hit is bit-identical to a recompute; flushed by every
+//! [`coordinator::engine::Engine::mutate`] snapshot swap) and a
+//! [`retrieval::cache::CentroidCache`] memoising centroid rankings
+//! (centroids are frozen at build, so it survives mutations). With
+//! result caching on, coordinator workers stamp plans with
+//! content-pinned seeds ([`retrieval::cache::content_seed`]) so
+//! answers are independent of arrival order. Counters surface in the
+//! coordinator snapshot; `rust/tests/serving_cache.rs` pins the
+//! hit-bit-identity, invalidation, and arrival-order contracts, and
+//! `benches/adaptive_cache.rs` gates probe savings and Zipfian
+//! hit rate (`BENCH_7.json`).
+//!
 //! Tier-1 verification: `cargo build --release && cargo test -q` from the
 //! repository root (no artifacts or PJRT backend required — see
 //! [`runtime::xla_stub`]).

@@ -49,6 +49,11 @@ fn cli() -> Command {
                 .opt("remap", "error-aware", "interleaved|random|error-aware")
                 .opt("clusters", "0", "two-stage pruning: k-means centroids (0 = off)")
                 .opt("nprobe", "0", "centroids probed per query (0 = chip default)")
+                .opt(
+                    "adaptive-margin",
+                    "0",
+                    "adaptive early termination margin (> 0 adds an adaptive pass)",
+                )
                 .flag("no-detect", "disable the ΣD error-detection circuit")
                 .flag("errors", "inject sensing errors (hardware path)"),
         )
@@ -59,7 +64,14 @@ fn cli() -> Command {
                 .opt("workers", "0", "retrieval worker threads (0 = config)")
                 .opt("config", "", "TOML config overlay (configs/*.toml)")
                 .opt("nprobe", "0", "two-stage pruning default (0 = chip policy)")
-                .opt("k", "0", "top-k (0 = serving.k from the config)"),
+                .opt("k", "0", "top-k (0 = serving.k from the config)")
+                .opt(
+                    "adaptive-margin",
+                    "0",
+                    "adaptive early termination margin (0 = [prune] config)",
+                )
+                .opt("cache-results", "0", "hot-query result cache entries (0 = config)")
+                .opt("cache-routing", "0", "centroid routing cache entries (0 = config)"),
         )
         .sub(
             Command::new("ingest", "online corpus-ingest demo (no PJRT needed)")
@@ -139,6 +151,7 @@ fn cmd_eval(sub: &dirc_rag::util::cli::Parsed) -> Result<()> {
     let cap = sub.get_usize("queries")?;
     let clusters = sub.get_usize("clusters")?;
     let nprobe = sub.get_usize("nprobe")?;
+    let adaptive_margin = sub.get_f64("adaptive-margin")?;
 
     let ds = SynthDataset::generate(spec.n_docs, spec.n_queries, spec.dim, &spec.params);
     let n_queries = if cap == 0 { ds.n_queries() } else { cap.min(ds.n_queries()) };
@@ -193,13 +206,14 @@ fn cmd_eval(sub: &dirc_rag::util::cli::Parsed) -> Result<()> {
             .expect("eval plan");
         if with_errors {
             let outs = chip.execute_batch(&queries, &plan);
-            let mut acc = (0u64, 0u64, 0.0f64, 0.0f64, 0u64);
+            let mut acc = (0u64, 0u64, 0.0f64, 0.0f64, 0u64, 0u64);
             for out in &outs {
                 acc.0 += out.stats.work_cycles;
                 acc.1 += out.stats.cycles;
                 acc.2 += out.stats.energy_j;
                 acc.3 += out.stats.latency_s;
                 acc.4 += out.stats.macros_sensed as u64;
+                acc.5 += out.stats.clusters_probed as u64;
             }
             let report =
                 evaluate(n_queries, &ds.qrels[..n_queries], |qi| outs[qi].topk.clone());
@@ -208,7 +222,7 @@ fn cmd_eval(sub: &dirc_rag::util::cli::Parsed) -> Result<()> {
             let report = evaluate(n_queries, &ds.qrels[..n_queries], |qi| {
                 chip.clean_execute(&queries[qi], &plan)
             });
-            (report, (0u64, 0u64, 0.0f64, 0.0f64, 0u64))
+            (report, (0u64, 0u64, 0.0f64, 0.0f64, 0u64, 0u64))
         }
     };
 
@@ -252,6 +266,31 @@ fn cmd_eval(sub: &dirc_rag::util::cli::Parsed) -> Result<()> {
                 chip.cfg.cores,
             );
         }
+
+        if adaptive_margin > 0.0 {
+            // Third pass: adaptive early termination under the same
+            // probe budget — precision next to the probes it saved.
+            let budget = chip.cfg.cluster.nprobe;
+            let (adaptive, aacc) = run(Prune::adaptive(adaptive_margin, budget));
+            println!(
+                "adaptive [margin {adaptive_margin}, max_probe {budget}]: \
+                 P@1 {:.4}  P@3 {:.4}  P@5 {:.4}",
+                adaptive.p_at_1, adaptive.p_at_3, adaptive.p_at_5
+            );
+            if with_errors {
+                let n = n_queries as f64;
+                println!(
+                    "adaptive probes/query: {:.2} (fixed nprobe {}), \
+                     macros sensed {:.1} -> {:.1}, energy {:.3} -> {:.3} µJ",
+                    aacc.5 as f64 / n,
+                    budget,
+                    acc.4 as f64 / n,
+                    aacc.4 as f64 / n,
+                    acc.2 / n * 1e6,
+                    aacc.2 / n * 1e6,
+                );
+            }
+        }
     }
     Ok(())
 }
@@ -270,9 +309,19 @@ fn cmd_serve(sub: &dirc_rag::util::cli::Parsed) -> Result<()> {
     if workers > 0 {
         coord_cfg.workers = workers;
     }
-    // The serving QueryPlan template: [serving] knobs from the layered
-    // config, per-run --nprobe/--k flags layered on top (0 = defer to
-    // the config, like --workers).
+    // Serving cache capacities: [serving] cache_* from the config,
+    // per-run flags layered on top (0 = defer, like --workers).
+    let cache_results = sub.get_usize("cache-results")?;
+    if cache_results > 0 {
+        coord_cfg.cache.result_entries = cache_results;
+    }
+    let cache_routing = sub.get_usize("cache-routing")?;
+    if cache_routing > 0 {
+        coord_cfg.cache.routing_entries = cache_routing;
+    }
+    // The serving QueryPlan template: [serving]/[prune] knobs from the
+    // layered config, per-run --nprobe/--k/--adaptive-margin flags
+    // layered on top (0 = defer to the config, like --workers).
     let mut plan = configfile::query_plan(&file_cfg)?;
     let k_flag = sub.get_usize("k")?;
     if k_flag > 0 {
@@ -281,6 +330,12 @@ fn cmd_serve(sub: &dirc_rag::util::cli::Parsed) -> Result<()> {
     let nprobe = sub.get_usize("nprobe")?;
     if nprobe > 0 {
         plan = plan.with_prune(Prune::Probe(nprobe))?;
+    }
+    let margin = sub.get_f64("adaptive-margin")?;
+    if margin > 0.0 {
+        // --nprobe (or the chip's default budget of 4) caps the probes.
+        let budget = if nprobe > 0 { nprobe } else { 4 };
+        plan = plan.with_prune(Prune::adaptive(margin, budget))?;
     }
     let k = plan.k();
 
@@ -312,11 +367,12 @@ fn cmd_serve(sub: &dirc_rag::util::cli::Parsed) -> Result<()> {
     let pool = Arc::new(dirc_rag::util::pool::ThreadPool::new(
         dirc_rag::util::pool::default_threads(),
     ));
-    let engine = Arc::new(ServingEngine::with_pool(
+    let engine = Arc::new(ServingEngine::with_caches(
         chip_cfg,
         &db,
         Arc::clone(&runtime),
         Some(pool),
+        coord_cfg.cache,
     )?);
     let coord = Coordinator::start(engine, Arc::clone(&runtime), coord_cfg);
 
@@ -404,7 +460,8 @@ fn cmd_ingest(sub: &dirc_rag::util::cli::Parsed) -> Result<()> {
     let pool = Arc::new(dirc_rag::util::pool::ThreadPool::new(
         dirc_rag::util::pool::default_threads(),
     ));
-    let engine = Arc::new(SimEngine::with_pool(chip_cfg, &db, Some(pool)));
+    let engine =
+        Arc::new(SimEngine::with_caches(chip_cfg, &db, Some(pool), coord_cfg.cache));
     let coord = dirc_rag::coordinator::Coordinator::start_sim(engine, coord_cfg);
 
     // Serving plan template from the layered config; --k layers on top

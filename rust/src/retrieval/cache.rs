@@ -1,0 +1,476 @@
+//! Serving-side cache hierarchy: the hot-query **result cache** and the
+//! **centroid-routing cache**.
+//!
+//! Edge RAG traffic is heavily skewed — a small set of hot queries
+//! dominates the stream — so the serving layer keeps two bounded LRU
+//! caches in front of the simulated chip:
+//!
+//! * [`ResultCache`]: full retrieval results, keyed on the quantised
+//!   query bits plus every plan knob that can change the answer
+//!   ([`ResultKey`]). A hit skips the chip entirely. Only plans under
+//!   [`RngPolicy::Seeded`] are cacheable — a seeded plan's output is a
+//!   pure function of `(query, plan shape, chip state)` by the
+//!   determinism contract, so a hit is **bit-identical** to recompute
+//!   (pinned by `rust/tests/serving_cache.rs`). Nonce-driven plans
+//!   consume a live rng stream and are never cached. Chip mutations
+//!   invalidate the whole cache (the engine calls
+//!   [`ResultCache::invalidate`] on every snapshot swap).
+//! * [`CentroidCache`]: the full centroid ranking
+//!   ([`crate::retrieval::cluster::Centroids::ranked_for_query`]) per
+//!   query. Centroids are frozen at build time, so this cache survives
+//!   mutation epochs: routing reuses the ranking while the per-core
+//!   hosted-cluster bitsets and adaptive bounds are always read live.
+//!
+//! Both caches expose [`CacheStats`] counters (hits/misses/insertions/
+//! evictions/invalidations) that the coordinator folds into its metrics
+//! snapshot. A capacity of `0` disables a cache: every lookup is a miss
+//! and nothing is stored, so the disabled path is the uncached path.
+
+use std::collections::{BTreeMap, HashMap};
+use std::hash::Hash;
+use std::sync::Arc;
+
+use crate::retrieval::cluster::Prune;
+use crate::retrieval::plan::{QueryPlan, RngPolicy, ScoreBackend, StatsDetail};
+
+/// Capacity knobs of the serving cache hierarchy, in entries; `0`
+/// disables a layer. Both layers default **off** — caching is strictly
+/// opt-in (`[serving] cache_results` / `cache_routing` in the config
+/// file), never a silent default change.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CacheConfig {
+    /// Hot-query result cache entries ([`ResultCache`]).
+    pub result_entries: usize,
+    /// Centroid-routing cache entries ([`CentroidCache`]).
+    pub routing_entries: usize,
+}
+
+impl CacheConfig {
+    /// Whether any cache layer is enabled.
+    pub fn enabled(&self) -> bool {
+        self.result_entries > 0 || self.routing_entries > 0
+    }
+}
+
+/// Counter snapshot of the whole hierarchy (what
+/// [`crate::coordinator::engine::Engine::cache_stats`] returns and the
+/// metrics snapshot surfaces).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct CacheHierarchyStats {
+    /// Hot-query result cache counters.
+    pub results: CacheStats,
+    /// Centroid-routing cache counters.
+    pub routing: CacheStats,
+}
+
+/// The content-pinned rng seed of one query: a deterministic FNV-1a fold
+/// of the quantised query bits over `base`. When result caching is on,
+/// the coordinator's workers stamp plans with this instead of a fresh
+/// per-dispatch draw, so a repeat of the same query carries the same
+/// [`RngPolicy::Seeded`] policy — the precondition for a [`ResultCache`]
+/// hit — while distinct queries stay decorrelated. `base` must be shared
+/// by every worker (the coordinator's config seed, NOT a per-worker
+/// salt), or the same query would pin different seeds on different
+/// workers and never hit.
+pub fn content_seed(q: &[i8], base: u64) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64 ^ base;
+    for &b in q {
+        h = (h ^ (b as u8 as u64)).wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Hit/miss/eviction counters of one cache. Plain data — the owner
+/// (engine or chip) locks the cache itself; snapshots copy these out.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Lookups answered from the cache.
+    pub hits: u64,
+    /// Lookups that fell through to recompute (including every lookup
+    /// on a disabled, capacity-0 cache).
+    pub misses: u64,
+    /// Entries stored.
+    pub insertions: u64,
+    /// Entries evicted by the LRU bound.
+    pub evictions: u64,
+    /// Whole-cache invalidations (mutation snapshot swaps).
+    pub invalidations: u64,
+}
+
+impl CacheStats {
+    /// Fold another counter set into this one (metrics aggregation).
+    pub fn merge(&mut self, other: &CacheStats) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.insertions += other.insertions;
+        self.evictions += other.evictions;
+        self.invalidations += other.invalidations;
+    }
+
+    /// Hits over lookups, `0.0` when nothing was looked up.
+    pub fn hit_rate(&self) -> f64 {
+        let lookups = self.hits + self.misses;
+        if lookups == 0 {
+            0.0
+        } else {
+            self.hits as f64 / lookups as f64
+        }
+    }
+}
+
+/// The shared bounded-LRU machinery of both caches: a key→value map plus
+/// a recency index keyed on a monotonic touch tick, so get/insert/evict
+/// are all `O(log n)` with no external dependencies.
+#[derive(Debug)]
+struct Lru<K, V> {
+    cap: usize,
+    tick: u64,
+    map: HashMap<K, (V, u64)>,
+    order: BTreeMap<u64, K>,
+}
+
+impl<K: Eq + Hash + Clone, V: Clone> Lru<K, V> {
+    fn new(cap: usize) -> Lru<K, V> {
+        Lru { cap, tick: 0, map: HashMap::new(), order: BTreeMap::new() }
+    }
+
+    fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// Look up and touch (move to most-recent) on hit.
+    fn get(&mut self, key: &K) -> Option<V> {
+        self.tick += 1;
+        let tick = self.tick;
+        let (value, slot) = self.map.get_mut(key)?;
+        let old = std::mem::replace(slot, tick);
+        let value = value.clone();
+        self.order.remove(&old);
+        self.order.insert(tick, key.clone());
+        Some(value)
+    }
+
+    /// Insert (or refresh) an entry; returns how many entries the LRU
+    /// bound evicted to make room. No-op on a capacity-0 cache.
+    fn insert(&mut self, key: K, value: V) -> u64 {
+        if self.cap == 0 {
+            return 0;
+        }
+        self.tick += 1;
+        let tick = self.tick;
+        if let Some((_, old)) = self.map.insert(key.clone(), (value, tick)) {
+            self.order.remove(&old);
+        }
+        self.order.insert(tick, key);
+        let mut evicted = 0;
+        while self.map.len() > self.cap {
+            let (_, victim) = self.order.pop_first().expect("map larger than empty order");
+            self.map.remove(&victim);
+            evicted += 1;
+        }
+        evicted
+    }
+
+    fn clear(&mut self) {
+        self.map.clear();
+        self.order.clear();
+    }
+}
+
+/// Everything that selects a cached retrieval result: the quantised
+/// query bits plus every plan knob that can change the output bits.
+///
+/// [`crate::retrieval::plan::Exec`] is deliberately absent — execution
+/// shape is a throughput knob, never a semantics knob (pooled and serial
+/// runs are bit-identical by the determinism contract), so a result
+/// computed serially may serve a pooled plan and vice versa. The rng
+/// seed IS part of the key: two seeds sense different noise.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ResultKey {
+    /// Quantised query vector (the bits the chip actually senses).
+    pub q: Vec<i8>,
+    /// Plan `k`.
+    pub k: usize,
+    /// Prune policy (adaptive margins compare by canonical bits, see
+    /// [`crate::retrieval::cluster::Margin`]).
+    pub prune: Prune,
+    /// Stats detail — `Counters` and `Full` outputs differ (zeroed
+    /// census fields), so they cache separately.
+    pub detail: StatsDetail,
+    /// Scoring backend. Backends are bit-identical, but keying on it
+    /// keeps the cache's contract purely structural ("same plan shape")
+    /// rather than leaning on a cross-kernel equivalence proof.
+    pub backend: ScoreBackend,
+    /// The plan's rng seed ([`RngPolicy::Seeded`] only).
+    pub seed: u64,
+    /// The engine's chip mutation epoch at lookup time. Epochs advance
+    /// on every snapshot swap, so an entry inserted by a query racing a
+    /// mutation is keyed to the old epoch and can never serve a
+    /// post-mutation lookup (the engine also clears the cache outright
+    /// on every swap — the epoch is the correctness belt, the clear is
+    /// the memory-reclaim braces).
+    pub epoch: u64,
+}
+
+impl ResultKey {
+    /// The cache key of `(plan, query)` at a mutation epoch — `None`
+    /// when the plan is not cacheable, i.e. not under
+    /// [`RngPolicy::Seeded`]. This is the one place the Seeded-only rule
+    /// lives.
+    pub fn for_plan(plan: &QueryPlan, q: &[i8], epoch: u64) -> Option<ResultKey> {
+        let RngPolicy::Seeded(seed) = plan.rng() else {
+            return None;
+        };
+        Some(ResultKey {
+            q: q.to_vec(),
+            k: plan.k(),
+            prune: plan.prune(),
+            detail: plan.detail(),
+            backend: plan.backend(),
+            seed,
+            epoch,
+        })
+    }
+}
+
+/// Bounded LRU over full retrieval results, generic in the cached value
+/// (the engines store their `PlanOutput`). See the module docs for the
+/// bit-identity and invalidation contract.
+#[derive(Debug)]
+pub struct ResultCache<V> {
+    lru: Lru<ResultKey, V>,
+    stats: CacheStats,
+}
+
+impl<V: Clone> ResultCache<V> {
+    /// A cache holding at most `cap` results; `cap == 0` disables it.
+    pub fn new(cap: usize) -> ResultCache<V> {
+        ResultCache { lru: Lru::new(cap), stats: CacheStats::default() }
+    }
+
+    /// Look up a result, counting the hit or miss.
+    pub fn get(&mut self, key: &ResultKey) -> Option<V> {
+        match self.lru.get(key) {
+            Some(v) => {
+                self.stats.hits += 1;
+                Some(v)
+            }
+            None => {
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Store a freshly computed result.
+    pub fn put(&mut self, key: ResultKey, value: V) {
+        if self.lru.cap == 0 {
+            return;
+        }
+        self.stats.insertions += 1;
+        self.stats.evictions += self.lru.insert(key, value);
+    }
+
+    /// Drop everything — the engine calls this on every mutation
+    /// snapshot swap, so a hit can never serve results from a previous
+    /// chip state.
+    pub fn invalidate(&mut self) {
+        if self.lru.len() > 0 || self.lru.cap > 0 {
+            self.stats.invalidations += 1;
+        }
+        self.lru.clear();
+    }
+
+    /// Live entry count.
+    pub fn len(&self) -> usize {
+        self.lru.len()
+    }
+
+    /// Whether the cache currently holds no entries.
+    pub fn is_empty(&self) -> bool {
+        self.lru.len() == 0
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+}
+
+/// Bounded LRU over centroid rankings: query bits → the full
+/// [`Centroids::ranked_for_query`] order, shared behind an `Arc` so a
+/// hit clones a pointer, not a ranking. Keyed on the query alone — the
+/// owner chip's centroid table and metric are fixed for its lifetime,
+/// and centroids are frozen across mutation snapshots, so this cache is
+/// never invalidated.
+///
+/// [`Centroids::ranked_for_query`]: crate::retrieval::cluster::Centroids::ranked_for_query
+#[derive(Debug)]
+pub struct CentroidCache {
+    lru: Lru<Vec<i8>, Arc<Vec<(f64, u32)>>>,
+    stats: CacheStats,
+}
+
+impl CentroidCache {
+    /// A cache holding at most `cap` rankings; `cap == 0` disables it.
+    pub fn new(cap: usize) -> CentroidCache {
+        CentroidCache { lru: Lru::new(cap), stats: CacheStats::default() }
+    }
+
+    /// The ranking for `q`, computing (and storing) it on miss.
+    pub fn ranked_or_insert(
+        &mut self,
+        q: &[i8],
+        compute: impl FnOnce() -> Vec<(f64, u32)>,
+    ) -> Arc<Vec<(f64, u32)>> {
+        let key = q.to_vec();
+        if let Some(hit) = self.lru.get(&key) {
+            self.stats.hits += 1;
+            return hit;
+        }
+        self.stats.misses += 1;
+        let ranked = Arc::new(compute());
+        if self.lru.cap > 0 {
+            self.stats.insertions += 1;
+            self.stats.evictions += self.lru.insert(key, Arc::clone(&ranked));
+        }
+        ranked
+    }
+
+    /// Live entry count.
+    pub fn len(&self) -> usize {
+        self.lru.len()
+    }
+
+    /// Whether the cache currently holds no entries.
+    pub fn is_empty(&self) -> bool {
+        self.lru.len() == 0
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(tag: i8) -> ResultKey {
+        ResultKey {
+            q: vec![tag; 8],
+            k: 10,
+            prune: Prune::Default,
+            detail: StatsDetail::Full,
+            backend: ScoreBackend::Packed,
+            seed: 7,
+            epoch: 0,
+        }
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let mut c: ResultCache<u64> = ResultCache::new(2);
+        c.put(key(1), 100);
+        c.put(key(2), 200);
+        assert_eq!(c.get(&key(1)), Some(100)); // touch 1 -> 2 is now LRU
+        c.put(key(3), 300);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.get(&key(2)), None, "LRU entry must be the evicted one");
+        assert_eq!(c.get(&key(1)), Some(100));
+        assert_eq!(c.get(&key(3)), Some(300));
+        let s = c.stats();
+        assert_eq!(s.evictions, 1);
+        assert_eq!(s.insertions, 3);
+        assert_eq!(s.hits, 3);
+        assert_eq!(s.misses, 1);
+    }
+
+    #[test]
+    fn capacity_zero_disables_without_panicking() {
+        let mut c: ResultCache<u64> = ResultCache::new(0);
+        c.put(key(1), 100);
+        assert_eq!(c.get(&key(1)), None);
+        assert_eq!(c.len(), 0);
+        assert_eq!(c.stats().insertions, 0);
+        assert_eq!(c.stats().misses, 1);
+    }
+
+    #[test]
+    fn invalidate_clears_and_counts() {
+        let mut c: ResultCache<u64> = ResultCache::new(4);
+        c.put(key(1), 100);
+        c.put(key(2), 200);
+        c.invalidate();
+        assert!(c.is_empty());
+        assert_eq!(c.get(&key(1)), None);
+        assert_eq!(c.stats().invalidations, 1);
+    }
+
+    #[test]
+    fn seeded_only_keying() {
+        let q = vec![3i8; 8];
+        let seeded = QueryPlan::topk(5).seed(9).build().unwrap();
+        let k = ResultKey::for_plan(&seeded, &q, 0).expect("seeded plans are cacheable");
+        assert_eq!(k.seed, 9);
+        assert_eq!(k.k, 5);
+        assert_eq!(k.q, q);
+        let nonce = seeded.with_nonce(1234);
+        assert!(
+            ResultKey::for_plan(&nonce, &q, 0).is_none(),
+            "nonce-driven plans consume a live rng stream and must never cache"
+        );
+        // Different seeds sense different noise: the keys must differ.
+        let other = ResultKey::for_plan(&seeded.with_seed(10), &q, 0).unwrap();
+        assert_ne!(k, other);
+        // Different mutation epochs must never alias.
+        let bumped = ResultKey::for_plan(&seeded, &q, 1).unwrap();
+        assert_ne!(k, bumped);
+    }
+
+    #[test]
+    fn content_seed_is_deterministic_and_base_salted() {
+        let q1 = vec![5i8, -3, 100, 0];
+        let q2 = vec![5i8, -3, 100, 1];
+        assert_eq!(content_seed(&q1, 7), content_seed(&q1, 7));
+        assert_ne!(content_seed(&q1, 7), content_seed(&q2, 7));
+        assert_ne!(content_seed(&q1, 7), content_seed(&q1, 8));
+    }
+
+    #[test]
+    fn centroid_cache_reuses_rankings() {
+        let mut c = CentroidCache::new(2);
+        let mut computes = 0;
+        let q1 = [1i8; 4];
+        let r1 = c.ranked_or_insert(&q1, || {
+            computes += 1;
+            vec![(0.5, 0), (0.25, 1)]
+        });
+        let r2 = c.ranked_or_insert(&q1, || {
+            computes += 1;
+            vec![]
+        });
+        assert_eq!(computes, 1, "hit must not recompute");
+        assert!(Arc::ptr_eq(&r1, &r2));
+        assert_eq!(c.stats().hits, 1);
+        assert_eq!(c.stats().misses, 1);
+        // Fill past capacity: LRU evicts the stalest query.
+        c.ranked_or_insert(&[2i8; 4], || vec![(0.1, 0)]);
+        c.ranked_or_insert(&[3i8; 4], || vec![(0.2, 0)]);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.stats().evictions, 1);
+    }
+
+    #[test]
+    fn stats_merge_and_hit_rate() {
+        let mut a = CacheStats { hits: 3, misses: 1, ..CacheStats::default() };
+        let b = CacheStats { hits: 1, misses: 3, evictions: 2, ..CacheStats::default() };
+        a.merge(&b);
+        assert_eq!(a.hits, 4);
+        assert_eq!(a.misses, 4);
+        assert_eq!(a.evictions, 2);
+        assert!((a.hit_rate() - 0.5).abs() < 1e-12);
+        assert_eq!(CacheStats::default().hit_rate(), 0.0);
+    }
+}

@@ -29,6 +29,30 @@
 
 use crate::retrieval::score::Metric;
 
+/// An `f64` early-termination margin stored as its IEEE-754 bit pattern,
+/// so [`Prune`] keeps the `Eq + Hash` derives the coordinator's plan-key
+/// grouping and the result-cache key rely on. Negative zero is
+/// canonicalised to `+0.0` at construction; validity (finite, `>= 0`) is
+/// enforced by [`crate::retrieval::plan::QueryPlan`] validation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Margin(u64);
+
+impl Margin {
+    /// Store a margin. `0.0` (the default) disables early termination:
+    /// clean centroid geometry cannot bound *sensed* (noise-perturbed)
+    /// scores, so a sound stop rule needs explicit headroom — the margin
+    /// is that headroom, and only a strictly positive one arms the
+    /// stop test.
+    pub fn new(v: f64) -> Margin {
+        Margin(if v == 0.0 { 0.0f64.to_bits() } else { v.to_bits() })
+    }
+
+    /// The margin as `f64`.
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0)
+    }
+}
+
 /// Per-query pruning policy of the two-stage retrieval path.
 ///
 /// On a chip built without clustering every variant degenerates to the
@@ -44,6 +68,34 @@ pub enum Prune {
     Default,
     /// Probe exactly this many top centroids.
     Probe(usize),
+    /// Adaptive early termination: probe clusters in centroid-score
+    /// order ([`Centroids::top_for_query`]'s total order), maintain the
+    /// running top-k after each probed wave, and stop as soon as the
+    /// running k-th score beats the next cluster's
+    /// [`ClusterBounds::upper_bound`] by `target_margin` — or after
+    /// `max_probe` clusters, whichever comes first.
+    ///
+    /// A zero `target_margin` disables the early stop (see
+    /// [`Margin::new`]), so a zero-margin `Adaptive` is bit-identical to
+    /// [`Prune::Probe`]`(p)` for every `p` — in particular `p ==
+    /// n_clusters` degrades bit-identically to the exhaustive path, the
+    /// invariant the test net pins.
+    Adaptive {
+        /// Early-stop headroom in the finalised score domain (raw
+        /// integer dot products for MIPS, `[-1, 1]` similarity for
+        /// cosine). Must be finite and `>= 0`; `0` disables the stop.
+        target_margin: Margin,
+        /// Hard cap on probed clusters (the adaptive path never probes
+        /// more than a `Probe(max_probe)` plan would). Must be `>= 1`.
+        max_probe: usize,
+    },
+}
+
+impl Prune {
+    /// Shorthand constructor for the adaptive policy.
+    pub fn adaptive(target_margin: f64, max_probe: usize) -> Prune {
+        Prune::Adaptive { target_margin: Margin::new(target_margin), max_probe }
+    }
 }
 
 /// Chip-level clustering knobs (carried by
@@ -110,7 +162,7 @@ impl Centroids {
     }
 
     /// `q . c_j` in f64 (sequential fold — deterministic).
-    fn dot(&self, j: usize, v: &[i8]) -> f64 {
+    pub fn dot(&self, j: usize, v: &[i8]) -> f64 {
         self.row(j)
             .iter()
             .zip(v.iter())
@@ -143,6 +195,18 @@ impl Centroids {
     /// of the selected set for `nprobe + 1` (recall\@k is therefore
     /// monotone in `nprobe`; pinned by the property tests).
     pub fn top_for_query(&self, q: &[i8], metric: Metric, nprobe: usize) -> Vec<u32> {
+        let mut ranked = self.ranked_for_query(q, metric);
+        ranked.truncate(nprobe.min(self.n_clusters));
+        ranked.into_iter().map(|(_, j)| j).collect()
+    }
+
+    /// The *full* centroid ranking for a query — every cluster, sorted
+    /// by the same (score desc, cluster id asc) total order as
+    /// [`Centroids::top_for_query`] (which is a prefix of this list by
+    /// construction). The adaptive early-termination path walks this
+    /// order wave by wave; the routing score is also what a cached
+    /// ranking replays (see [`crate::retrieval::cache::CentroidCache`]).
+    pub fn ranked_for_query(&self, q: &[i8], metric: Metric) -> Vec<(f64, u32)> {
         assert_eq!(q.len(), self.dim);
         let mut scored: Vec<(f64, u32)> = (0..self.n_clusters)
             .map(|j| {
@@ -159,8 +223,7 @@ impl Centroids {
                 .expect("non-finite centroid score")
                 .then(a.1.cmp(&b.1))
         });
-        scored.truncate(nprobe.min(self.n_clusters));
-        scored.into_iter().map(|(_, j)| j).collect()
+        scored
     }
 }
 
@@ -170,6 +233,106 @@ impl Centroids {
 pub struct Clustering {
     pub centroids: Centroids,
     pub assign: Vec<u32>,
+}
+
+/// Conservative per-cluster score bounds for adaptive early termination
+/// ([`Prune::Adaptive`]).
+///
+/// For every cluster `j` this tracks the member radius `r_j = max |d -
+/// c_j|` (L2 over the quantised document vectors) and the min/max stored
+/// document norms, from which [`ClusterBounds::upper_bound`] derives an
+/// upper bound on any member's *clean finalised* score:
+///
+/// * MIPS — `q.d <= q.c_j + |q| r_j` (Cauchy–Schwarz on `q.(d - c_j)`);
+/// * cosine — the same numerator bound divided by the smallest possible
+///   denominator (`min_norm_j * |q|`) when positive, else `0.0` (every
+///   member score is negative, so zero stays conservative).
+///
+/// The bounds are maintained *conservatively* under online mutations:
+/// adds/updates grow the radius and widen the norm range
+/// ([`ClusterBounds::observe`]); deletes leave them stale-loose (a loose
+/// bound costs extra probes, never correctness). Note the bound covers
+/// clean scores only — sensing noise can push a sensed score past it,
+/// which is exactly why [`Margin::new`] makes a strictly positive margin
+/// the price of arming the early stop.
+#[derive(Debug, Clone, Default)]
+pub struct ClusterBounds {
+    /// Per-cluster max L2 distance of a member to its centroid.
+    pub radii: Vec<f64>,
+    /// Per-cluster minimum stored (integer-domain) document norm;
+    /// `f64::INFINITY` for an empty cluster.
+    pub min_norms: Vec<f64>,
+    /// Per-cluster maximum stored document norm; `0` for an empty one.
+    pub max_norms: Vec<f64>,
+}
+
+impl ClusterBounds {
+    /// Compute exact bounds over a freshly clustered corpus. `values` is
+    /// the row-major `[n][dim]` quantised matrix, `norms` the per-doc
+    /// integer-domain L2 norms (what the cores store).
+    pub fn build(values: &[i8], n: usize, dim: usize, cl: &Clustering, norms: &[f32]) -> Self {
+        let k = cl.centroids.n_clusters;
+        let mut b = ClusterBounds {
+            radii: vec![0.0; k],
+            min_norms: vec![f64::INFINITY; k],
+            max_norms: vec![0.0; k],
+        };
+        for i in 0..n {
+            b.observe(cl.assign[i], &values[i * dim..(i + 1) * dim], &cl.centroids, norms[i]);
+        }
+        b
+    }
+
+    /// Fold one (routed or re-routed) document into cluster `cluster`'s
+    /// bounds. Grow-only / widen-only, so observing is safe under any
+    /// interleaving of the mutation path.
+    pub fn observe(&mut self, cluster: u32, doc: &[i8], centroids: &Centroids, norm: f32) {
+        let j = cluster as usize;
+        if j >= self.radii.len() {
+            return; // chip built without bounds (e.g. no clustering)
+        }
+        let c = centroids.row(j);
+        let dist = doc
+            .iter()
+            .zip(c.iter())
+            .map(|(&d, &cv)| (d as f64 - cv as f64).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        if dist > self.radii[j] {
+            self.radii[j] = dist;
+        }
+        let n = norm as f64;
+        if n < self.min_norms[j] {
+            self.min_norms[j] = n;
+        }
+        if n > self.max_norms[j] {
+            self.max_norms[j] = n;
+        }
+    }
+
+    /// Upper bound on any member of cluster `j`'s clean finalised score
+    /// for query `q` (with precomputed L2 norm `q_norm`), in the same
+    /// domain as [`crate::retrieval::score::finalize_one`].
+    pub fn upper_bound(
+        &self,
+        centroids: &Centroids,
+        j: usize,
+        q: &[i8],
+        q_norm: f64,
+        metric: Metric,
+    ) -> f64 {
+        let ip_bound = centroids.dot(j, q) + q_norm * self.radii[j];
+        match metric {
+            Metric::Mips => ip_bound,
+            Metric::Cosine => {
+                if ip_bound > 0.0 {
+                    ip_bound / (self.min_norms[j] * q_norm).max(1e-12)
+                } else {
+                    0.0
+                }
+            }
+        }
+    }
 }
 
 /// Deterministic Lloyd k-means over a row-major `[n][dim]` quantised
@@ -325,6 +488,94 @@ mod tests {
         let cl = kmeans(&v, 20, 8, 3, 5);
         let q = vec![1i8; 8];
         assert_eq!(cl.centroids.top_for_query(&q, Metric::Mips, 100).len(), 3);
+    }
+
+    #[test]
+    fn margin_canonicalises_and_roundtrips() {
+        assert_eq!(Margin::new(-0.0), Margin::new(0.0));
+        assert_eq!(Margin::new(1.5).get(), 1.5);
+        // Eq/Hash-compatible: identical margins make identical prunes.
+        assert_eq!(Prune::adaptive(0.25, 8), Prune::adaptive(0.25, 8));
+        assert_ne!(Prune::adaptive(0.25, 8), Prune::adaptive(0.5, 8));
+    }
+
+    #[test]
+    fn ranked_for_query_prefixes_top_for_query() {
+        let v = blobs(40, 16, 9);
+        let cl = kmeans(&v, 80, 16, 8, 8);
+        let mut rng = Pcg::new(10);
+        for metric in [Metric::Mips, Metric::Cosine] {
+            let q: Vec<i8> = (0..16).map(|_| rng.int_in(-128, 127) as i8).collect();
+            let ranked = cl.centroids.ranked_for_query(&q, metric);
+            assert_eq!(ranked.len(), 8);
+            for nprobe in 1..=8 {
+                let top = cl.centroids.top_for_query(&q, metric, nprobe);
+                let prefix: Vec<u32> =
+                    ranked[..nprobe].iter().map(|&(_, j)| j).collect();
+                assert_eq!(top, prefix);
+            }
+        }
+    }
+
+    /// The cluster upper bound must dominate every member's clean
+    /// finalised score, for both metrics — the soundness property the
+    /// adaptive stop rule rests on.
+    #[test]
+    fn upper_bound_dominates_member_scores() {
+        use crate::retrieval::score::{finalize_one, norm_i8};
+        let (n, dim) = (80usize, 16usize);
+        let v = blobs(40, dim, 11);
+        let cl = kmeans(&v, n, dim, 6, 8);
+        let norms: Vec<f32> =
+            (0..n).map(|i| norm_i8(&v[i * dim..(i + 1) * dim]) as f32).collect();
+        let b = ClusterBounds::build(&v, n, dim, &cl, &norms);
+        let mut rng = Pcg::new(12);
+        for metric in [Metric::Mips, Metric::Cosine] {
+            for _ in 0..20 {
+                let q: Vec<i8> = (0..dim).map(|_| rng.int_in(-128, 127) as i8).collect();
+                let q_norm = norm_i8(&q);
+                for i in 0..n {
+                    let j = cl.assign[i] as usize;
+                    let row = &v[i * dim..(i + 1) * dim];
+                    let ip: i64 = row
+                        .iter()
+                        .zip(&q)
+                        .map(|(&d, &x)| d as i64 * x as i64)
+                        .sum();
+                    let score = finalize_one(ip, metric, norms[i], q_norm);
+                    let ub = b.upper_bound(&cl.centroids, j, &q, q_norm, metric);
+                    assert!(
+                        score <= ub + 1e-6,
+                        "{metric:?}: member {i} score {score} > bound {ub}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Grow-only maintenance: observing a far-away document widens the
+    /// bound enough to cover it.
+    #[test]
+    fn observe_grows_bounds() {
+        use crate::retrieval::score::{finalize_one, norm_i8};
+        let (n, dim) = (40usize, 8usize);
+        let v = blobs(20, dim, 13);
+        let cl = kmeans(&v, n, dim, 4, 6);
+        let norms: Vec<f32> =
+            (0..n).map(|i| norm_i8(&v[i * dim..(i + 1) * dim]) as f32).collect();
+        let mut b = ClusterBounds::build(&v, n, dim, &cl, &norms);
+        let outlier = vec![127i8; dim];
+        let o_norm = norm_i8(&outlier) as f32;
+        let j = cl.centroids.nearest(&outlier);
+        b.observe(j, &outlier, &cl.centroids, o_norm);
+        let q = vec![100i8; dim];
+        let q_norm = norm_i8(&q);
+        let ip: i64 = outlier.iter().zip(&q).map(|(&d, &x)| d as i64 * x as i64).sum();
+        for metric in [Metric::Mips, Metric::Cosine] {
+            let score = finalize_one(ip, metric, o_norm, q_norm);
+            let ub = b.upper_bound(&cl.centroids, j as usize, &q, q_norm, metric);
+            assert!(score <= ub + 1e-6, "{metric:?}: {score} > {ub}");
+        }
     }
 
     #[test]

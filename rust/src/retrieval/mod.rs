@@ -1,8 +1,11 @@
 //! Retrieval primitives: quantisation, scoring references, the packed
 //! bit-plane popcount kernel ([`packed`]), top-k, the cluster-pruned
-//! (IVF-style) two-stage index, and the [`plan`] module — the
-//! [`QueryPlan`] execution currency every layer consumes.
+//! (IVF-style) two-stage index (with adaptive early termination,
+//! [`cluster::Prune::Adaptive`]), the serving-side [`cache`] hierarchy,
+//! and the [`plan`] module — the [`QueryPlan`] execution currency every
+//! layer consumes.
 
+pub mod cache;
 pub mod cluster;
 pub mod packed;
 pub mod plan;
@@ -10,7 +13,10 @@ pub mod quant;
 pub mod score;
 pub mod topk;
 
-pub use cluster::{Centroids, ClusterPolicy, Clustering, Prune};
+pub use cache::{
+    CacheConfig, CacheHierarchyStats, CacheStats, CentroidCache, ResultCache, ResultKey,
+};
+pub use cluster::{Centroids, ClusterBounds, ClusterPolicy, Clustering, Margin, Prune};
 pub use packed::{PackedPlanes, PackedQuery};
 pub use plan::{Exec, PlanError, PlanOutput, QueryPlan, RngPolicy, ScoreBackend, StatsDetail};
 pub use quant::{QuantScheme, Quantized};

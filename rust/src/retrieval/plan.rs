@@ -173,7 +173,7 @@ impl Default for RngPolicy {
 }
 
 /// How much of the hardware census a plan's [`QueryStats`] carries.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
 pub enum StatsDetail {
     /// The full cycle/energy/latency census (the default; every
     /// equivalence and precision gate runs here).
@@ -204,6 +204,11 @@ pub enum PlanError {
     /// A cluster policy with clustering on needs a default `nprobe`
     /// of at least 1.
     ZeroDefaultNprobe,
+    /// An adaptive margin must be a finite, non-negative `f64`.
+    BadAdaptiveMargin,
+    /// `Prune::Adaptive { max_probe: 0 }` would silently disable the
+    /// query, like `Probe(0)`.
+    ZeroMaxProbe,
 }
 
 impl fmt::Display for PlanError {
@@ -225,7 +230,33 @@ impl fmt::Display for PlanError {
             PlanError::ZeroDefaultNprobe => {
                 write!(f, "nprobe must be >= 1 when clustering is on")
             }
+            PlanError::BadAdaptiveMargin => {
+                write!(f, "adaptive target_margin must be finite and >= 0")
+            }
+            PlanError::ZeroMaxProbe => {
+                write!(f, "adaptive max_probe must be >= 1 (use Prune::None for exhaustive)")
+            }
         }
+    }
+}
+
+/// The one range check every path accepting a [`Prune`] shares
+/// ([`PlanBuilder::build`], [`QueryPlan::with_prune`], the config
+/// binding).
+fn validate_prune(prune: Prune) -> Result<(), PlanError> {
+    match prune {
+        Prune::Probe(0) => Err(PlanError::ZeroNprobe),
+        Prune::Adaptive { target_margin, max_probe } => {
+            let m = target_margin.get();
+            if !m.is_finite() || m < 0.0 {
+                return Err(PlanError::BadAdaptiveMargin);
+            }
+            if max_probe == 0 {
+                return Err(PlanError::ZeroMaxProbe);
+            }
+            Ok(())
+        }
+        _ => Ok(()),
     }
 }
 
@@ -356,9 +387,7 @@ impl QueryPlan {
 
     /// This plan with a different pruning policy (revalidated).
     pub fn with_prune(&self, prune: Prune) -> Result<QueryPlan, PlanError> {
-        if matches!(prune, Prune::Probe(0)) {
-            return Err(PlanError::ZeroNprobe);
-        }
+        validate_prune(prune)?;
         Ok(QueryPlan { prune, ..self.clone() })
     }
 
@@ -420,6 +449,13 @@ impl PlanBuilder {
     /// Shorthand for `prune(Prune::Probe(nprobe))`.
     pub fn nprobe(self, nprobe: usize) -> Self {
         self.prune(Prune::Probe(nprobe))
+    }
+
+    /// Shorthand for `prune(`[`Prune::adaptive`]`(margin, max_probe))` —
+    /// adaptive early termination with the given score-domain margin and
+    /// probe cap.
+    pub fn adaptive(self, target_margin: f64, max_probe: usize) -> Self {
+        self.prune(Prune::adaptive(target_margin, max_probe))
     }
 
     /// Execution shape.
@@ -490,9 +526,7 @@ impl PlanBuilder {
         if self.k == 0 {
             return Err(PlanError::ZeroK);
         }
-        if matches!(self.prune, Prune::Probe(0)) {
-            return Err(PlanError::ZeroNprobe);
-        }
+        validate_prune(self.prune)?;
         if let Some(corpus) = self.corpus_hint {
             if self.k > corpus {
                 return Err(PlanError::KBeyondCorpus { k: self.k, corpus });
@@ -561,6 +595,39 @@ mod tests {
             PlanError::KBeyondCorpus { k: 101, corpus: 100 }
         );
         assert_eq!(hinted.with_k(100).unwrap().k(), 100);
+    }
+
+    #[test]
+    fn adaptive_validation() {
+        // Well-formed adaptive plans build, through both entries.
+        let p = QueryPlan::topk(5).adaptive(0.5, 8).build().unwrap();
+        assert_eq!(p.prune(), Prune::adaptive(0.5, 8));
+        let base = QueryPlan::topk(5).build().unwrap();
+        assert_eq!(
+            base.with_prune(Prune::adaptive(0.0, 4)).unwrap().prune(),
+            Prune::adaptive(0.0, 4)
+        );
+        // Degenerate margins and probe caps are typed errors.
+        assert_eq!(
+            QueryPlan::topk(5).adaptive(f64::NAN, 4).build().unwrap_err(),
+            PlanError::BadAdaptiveMargin
+        );
+        assert_eq!(
+            QueryPlan::topk(5).adaptive(f64::INFINITY, 4).build().unwrap_err(),
+            PlanError::BadAdaptiveMargin
+        );
+        assert_eq!(
+            QueryPlan::topk(5).adaptive(-0.5, 4).build().unwrap_err(),
+            PlanError::BadAdaptiveMargin
+        );
+        assert_eq!(
+            QueryPlan::topk(5).adaptive(0.5, 0).build().unwrap_err(),
+            PlanError::ZeroMaxProbe
+        );
+        assert_eq!(
+            base.with_prune(Prune::adaptive(0.5, 0)).unwrap_err(),
+            PlanError::ZeroMaxProbe
+        );
     }
 
     #[test]

@@ -643,3 +643,52 @@ fn prop_remap_bijective_all_strategies() {
         true
     });
 }
+
+/// Structural property of adaptive early termination: `Prune::Adaptive`
+/// never invents a candidate set — it only picks WHERE to stop along the
+/// centroid ranking. With a zero margin the stop is disarmed and the
+/// policy must be bit-identical to `Prune::Probe(max_probe)`; armed,
+/// whatever stopping point `p` the controller reports
+/// (`stats.clusters_probed`) must reproduce `Prune::Probe(p)` exactly —
+/// top-k, cycle census, and energy to the bit (exhaustive fallbacks
+/// report 0 and must match `Prune::None`).
+#[test]
+fn prop_adaptive_is_a_probe_plan_at_its_stopping_point() {
+    let docs = rand_docs(360, 128, 8, 91);
+    let fp: Vec<f32> = docs.iter().map(|&v| v as f32 / 128.0).collect();
+    let db = quantize(&fp, 360, 128, QuantScheme::Int8);
+    let chip = DircChip::build(
+        ChipConfig {
+            cores: 6,
+            map_points: 25,
+            cluster: ClusterPolicy { n_clusters: 6, nprobe: 2, kmeans_iters: 4 },
+            ..ChipConfig::paper_default(128, Metric::Mips)
+        },
+        &db,
+    );
+    forall(cases(16), gen_pair(gen_usize(1, 8), gen_usize(0, 500)), |&(k, seed)| {
+        let mut rng = Pcg::new(seed as u64 + 3);
+        let q: Vec<i8> = (0..128).map(|_| rng.int_in(-128, 127) as i8).collect();
+        let margin = (seed % 5) as f64 * 0.02; // 0.0 .. 0.08, disarmed case included
+        let cap = 1 + (seed / 5) % 6; // 1 .. 6 == n_clusters
+        let s = seed as u64 + 7;
+        let plan = |prune: Prune| QueryPlan::topk(k).prune(prune).seed(s).build().unwrap();
+        let a = chip.execute(&q, &plan(Prune::adaptive(margin, cap)));
+        let reference = if margin == 0.0 {
+            // Disarmed: the pinned degradation invariant.
+            Prune::Probe(cap)
+        } else {
+            match a.stats.clusters_probed as usize {
+                0 => Prune::None, // exhaustive fallback
+                p => Prune::Probe(p),
+            }
+        };
+        let r = chip.execute(&q, &plan(reference));
+        a.topk == r.topk
+            && a.stats.sense == r.stats.sense
+            && a.stats.cycles == r.stats.cycles
+            && a.stats.macros_sensed == r.stats.macros_sensed
+            && a.stats.macros_skipped == r.stats.macros_skipped
+            && a.stats.energy_j.to_bits() == r.stats.energy_j.to_bits()
+    });
+}

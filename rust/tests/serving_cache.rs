@@ -1,0 +1,230 @@
+//! Serving cache hierarchy integration tests — the pin referenced by the
+//! `retrieval::cache` module docs. The hot-query result cache and the
+//! centroid-routing cache are driven end-to-end through `SimEngine` and
+//! the coordinator: hits must be bit-identical to recompute (Seeded plans
+//! only), every mutation must invalidate the result cache (add/update/
+//! delete bursts), the routing cache must survive mutations without
+//! perturbing results, and content-pinned dispatch must make serving
+//! results independent of arrival order.
+
+use std::sync::Arc;
+
+use dirc_rag::coordinator::{
+    Coordinator, CoordinatorConfig, Engine, Mutation, Query, SimEngine,
+};
+use dirc_rag::dirc::chip::ChipConfig;
+use dirc_rag::retrieval::cache::CacheConfig;
+use dirc_rag::retrieval::plan::QueryPlan;
+use dirc_rag::retrieval::quant::{quantize, random_unit_rows, QuantScheme, Quantized};
+use dirc_rag::retrieval::score::Metric;
+use dirc_rag::retrieval::{ClusterPolicy, Prune};
+use dirc_rag::util::rng::Pcg;
+
+fn db(n: usize, dim: usize, seed: u64) -> Quantized {
+    let mut rng = Pcg::new(seed);
+    let fp = random_unit_rows(n, dim, &mut rng);
+    quantize(&fp, n, dim, QuantScheme::Int8)
+}
+
+fn cfg(dim: usize, cores: usize) -> ChipConfig {
+    ChipConfig { cores, map_points: 40, ..ChipConfig::paper_default(dim, Metric::Cosine) }
+}
+
+fn clustered_cfg(dim: usize, cores: usize, clusters: usize, nprobe: usize) -> ChipConfig {
+    ChipConfig {
+        cluster: ClusterPolicy { n_clusters: clusters, nprobe, kmeans_iters: 4 },
+        ..cfg(dim, cores)
+    }
+}
+
+/// Dequantised embedding of a stored row — a query/mutation payload in
+/// the same space as the corpus.
+fn emb_of(db: &Quantized, i: usize) -> Vec<f32> {
+    db.row(i).iter().map(|&v| v as f32 * db.scale).collect()
+}
+
+/// A one-worker cached coordinator over a `SimEngine`, returning both
+/// handles (the engine stays reachable for direct counter checks).
+fn cached_coordinator(
+    base: &Quantized,
+    chip_cfg: ChipConfig,
+    cache: CacheConfig,
+) -> (Coordinator, Arc<SimEngine>) {
+    let engine = Arc::new(SimEngine::with_caches(chip_cfg, base, None, cache));
+    let ccfg = CoordinatorConfig { workers: 1, cache, ..CoordinatorConfig::default() };
+    let coord = Coordinator::start_sim(Arc::clone(&engine) as Arc<dyn Engine>, ccfg);
+    (coord, engine)
+}
+
+fn oracle(k: usize) -> QueryPlan {
+    QueryPlan::topk(k).build().unwrap()
+}
+
+#[test]
+fn hot_queries_hit_and_stay_bit_identical_through_the_coordinator() {
+    let base = db(256, 128, 1);
+    let cache = CacheConfig { result_entries: 64, routing_entries: 0 };
+    let (coord, _engine) = cached_coordinator(&base, cfg(128, 4), cache);
+
+    // One hot query served 6 times, interleaved with 4 distinct cold
+    // queries. Sequential submit/recv: every repeat finds the first
+    // answer already inserted.
+    let hot = emb_of(&base, 3);
+    let mut hot_resps = Vec::new();
+    for i in 0..10 {
+        let q = if i % 2 == 0 { hot.clone() } else { emb_of(&base, 10 + i) };
+        let (_, rx) = coord.submit(Query::Embedding(q), oracle(5)).unwrap();
+        let resp = rx.recv().expect("query answered");
+        if i % 2 == 0 {
+            hot_resps.push(resp);
+        }
+    }
+    // Bit-identity across every serving of the hot query: same docs,
+    // same scores, same modeled hardware accounting to the bit.
+    let first = &hot_resps[0];
+    assert_eq!(first.topk[0].doc_id, 3, "a corpus row is its own best match");
+    for r in &hot_resps[1..] {
+        assert_eq!(r.topk, first.topk);
+        assert_eq!(r.stats.sense, first.stats.sense);
+        assert_eq!(r.stats.cycles, first.stats.cycles);
+        assert_eq!(r.stats.energy_j.to_bits(), first.stats.energy_j.to_bits());
+    }
+
+    let snap = coord.shutdown();
+    assert_eq!(snap.served, 10);
+    let cache = snap.cache.expect("cached engine must surface counters");
+    // 1 hot miss + 4 repeats served from cache + 5 distinct misses.
+    assert_eq!(cache.results.hits, 4);
+    assert_eq!(cache.results.misses, 6);
+    assert!(snap.render().contains("caches:"));
+}
+
+#[test]
+fn mutation_bursts_invalidate_the_result_cache() {
+    let base = db(200, 128, 2);
+    let cache = CacheConfig { result_entries: 32, routing_entries: 0 };
+    let (coord, _engine) = cached_coordinator(&base, cfg(128, 4), cache);
+    let fresh = db(2, 128, 91);
+
+    let ask = |q: &Vec<f32>| {
+        let (_, rx) = coord.submit(Query::Embedding(q.clone()), oracle(5)).unwrap();
+        rx.recv().expect("query answered")
+    };
+
+    // Warm the cache on both probe embeddings, then ingest fresh doc 0.
+    let q0 = emb_of(&fresh, 0);
+    let q1 = emb_of(&fresh, 1);
+    let before = ask(&q0);
+    assert!(
+        before.topk.iter().all(|d| d.doc_id != 200),
+        "doc 200 must not exist before the add"
+    );
+    ask(&q1);
+    let (_, mrx) = coord.submit_mutation(Mutation::Add { docs: vec![q0.clone()] }).unwrap();
+    assert_eq!(mrx.recv().expect("add applied").added_ids, vec![200]);
+
+    // A stale cache would replay `before` (no doc 200); invalidation
+    // forces a recompute on the post-add snapshot.
+    assert_eq!(ask(&q0).topk[0].doc_id, 200, "added doc must be its own best match");
+
+    // In-place update: doc 200 becomes fresh-1; the q1 entry (cached
+    // before the add) must not survive two intervening mutations.
+    let (_, mrx) = coord
+        .submit_mutation(Mutation::Update { docs: vec![(200, q1.clone())] })
+        .unwrap();
+    assert_eq!(mrx.recv().expect("update applied").stats.docs_updated, 1);
+    assert_eq!(ask(&q1).topk[0].doc_id, 200, "updated doc must match its new embedding");
+
+    // Tombstone it: cached results naming doc 200 must not come back.
+    let (_, mrx) = coord.submit_mutation(Mutation::Delete { ids: vec![200] }).unwrap();
+    assert_eq!(mrx.recv().expect("delete applied").stats.docs_deleted, 1);
+    assert!(ask(&q1).topk.iter().all(|d| d.doc_id != 200));
+
+    let snap = coord.shutdown();
+    let cache = snap.cache.expect("cache counters");
+    assert_eq!(cache.results.invalidations, 3, "one invalidation per mutation batch");
+    assert_eq!(snap.mutations, 3);
+}
+
+#[test]
+fn routing_cache_survives_mutations_without_perturbing_results() {
+    // Centroid rankings depend only on the build-time centroids, so the
+    // routing cache is NOT invalidated by mutations — and a cached
+    // engine must stay bit-identical to an uncached one through the
+    // same mutation stream.
+    let base = db(400, 128, 3);
+    let chip_cfg = clustered_cfg(128, 8, 8, 2);
+    let cached = SimEngine::with_caches(
+        chip_cfg.clone(),
+        &base,
+        None,
+        CacheConfig { result_entries: 0, routing_entries: 32 },
+    );
+    let plain = SimEngine::with_caches(chip_cfg, &base, None, CacheConfig::default());
+
+    let queries: Vec<Vec<i8>> = (0..4).map(|i| base.row(i * 7).to_vec()).collect();
+    let plans = [
+        QueryPlan::topk(5).seed(11).build().unwrap(),
+        QueryPlan::topk(5).prune(Prune::Probe(3)).seed(11).build().unwrap(),
+        QueryPlan::topk(5).prune(Prune::adaptive(0.05, 6)).seed(11).build().unwrap(),
+    ];
+    let check_all = |label: &str| {
+        for plan in &plans {
+            for q in &queries {
+                let a = cached.retrieve(q, plan);
+                let b = plain.retrieve(q, plan);
+                assert_eq!(a.topk, b.topk, "{label}: topk diverged");
+                assert_eq!(a.stats.cycles, b.stats.cycles, "{label}: cycles diverged");
+                assert_eq!(
+                    a.stats.clusters_probed, b.stats.clusters_probed,
+                    "{label}: probe accounting diverged"
+                );
+            }
+        }
+    };
+    check_all("pre-mutation");
+
+    // Identical mutation streams on both engines (same rng seeds).
+    let fresh = db(6, 128, 44);
+    let docs: Vec<Vec<f32>> = (0..6).map(|i| emb_of(&fresh, i)).collect();
+    let mut r1 = Pcg::new(5);
+    let mut r2 = Pcg::new(5);
+    cached.mutate(&Mutation::Add { docs: docs.clone() }, &mut r1).unwrap();
+    plain.mutate(&Mutation::Add { docs }, &mut r2).unwrap();
+    cached.mutate(&Mutation::Delete { ids: vec![13, 99] }, &mut r1).unwrap();
+    plain.mutate(&Mutation::Delete { ids: vec![13, 99] }, &mut r2).unwrap();
+    check_all("post-mutation");
+
+    let stats = cached.cache_stats().expect("routing cache on");
+    assert_eq!(stats.routing.invalidations, 0, "mutations must not clear routing");
+    assert!(stats.routing.hits > 0, "repeat rankings must be served from cache");
+    assert_eq!(stats.results.hits + stats.results.misses, 0, "result cache is off");
+}
+
+#[test]
+fn content_pinned_dispatch_is_independent_of_arrival_order() {
+    // With result caching on, workers stamp plans with content-pinned
+    // seeds — so what a query returns cannot depend on which dispatch
+    // (or coordinator lifetime) served it. Two coordinators over
+    // identically built engines, fed the same queries in opposite
+    // orders, must answer each query bit-identically.
+    let base = db(220, 128, 6);
+    let cache = CacheConfig { result_entries: 16, routing_entries: 0 };
+    let (coord_a, _ea) = cached_coordinator(&base, cfg(128, 4), cache);
+    let (coord_b, _eb) = cached_coordinator(&base, cfg(128, 4), cache);
+
+    let ids: Vec<usize> = vec![5, 17, 60, 101, 219];
+    let ask = |coord: &Coordinator, i: usize| {
+        let (_, rx) = coord.submit(Query::Embedding(emb_of(&base, i)), oracle(5)).unwrap();
+        rx.recv().expect("query answered")
+    };
+    let a: Vec<_> = ids.iter().map(|&i| ask(&coord_a, i)).collect();
+    let b: Vec<_> = ids.iter().rev().map(|&i| ask(&coord_b, i)).collect();
+    for (ra, rb) in a.iter().zip(b.iter().rev()) {
+        assert_eq!(ra.topk, rb.topk);
+        assert_eq!(ra.stats.sense, rb.stats.sense);
+        assert_eq!(ra.stats.energy_j.to_bits(), rb.stats.energy_j.to_bits());
+    }
+    coord_a.shutdown();
+    coord_b.shutdown();
+}
