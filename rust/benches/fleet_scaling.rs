@@ -1,0 +1,248 @@
+//! Multi-chip fleet serving on the synthetic 4 MB corpus: shard the
+//! clustered chip across 1 / 2 / 4 DircChips and chart how the
+//! centroid-routed scatter spreads the probed sense work across the
+//! fleet. Emits the `BENCH_8.json` trajectory artifact (override the
+//! path with `DIRC_BENCH_OUT`).
+//!
+//! ```bash
+//! cargo bench --bench fleet_scaling
+//! ```
+//!
+//! Gates (deterministic — the census comes from the simulator):
+//!
+//! * every shard count returns bit-identical results (ids AND score
+//!   bits) to the bare single chip on the union corpus, per query —
+//!   checked before any scaling number is reported;
+//! * pruned P@{1,5,10} holds >= 95% of the exhaustive baseline;
+//! * the busiest chip of the 4-shard fleet senses <= half the macros
+//!   the single chip does — the scatter actually spreads the work.
+
+use dirc_rag::bench::{fmt_duration, Bench, Table};
+use dirc_rag::data::{SynthDataset, SynthParams};
+use dirc_rag::dirc::chip::{ChipConfig, DircChip};
+use dirc_rag::eval::precision_at_k;
+use dirc_rag::fleet::DircFleet;
+use dirc_rag::retrieval::cluster::ClusterPolicy;
+use dirc_rag::retrieval::plan::{PlanOutput, QueryPlan};
+use dirc_rag::retrieval::quant::{quantize, QuantScheme};
+use dirc_rag::retrieval::score::Metric;
+use dirc_rag::retrieval::Prune;
+use dirc_rag::util::json::Json;
+
+const N_CLUSTERS: usize = 128;
+// 8 of 128 clusters probed: enough scattered macro touches that a
+// 4-shard split has headroom to spread them (E[busiest of 4] is well
+// under half the total), while still pruning ~94% of the corpus.
+const NPROBE: usize = 8;
+const SHARD_COUNTS: [usize; 3] = [1, 2, 4];
+
+fn mean_precision(outs: &[PlanOutput], ds: &SynthDataset, k: usize) -> f64 {
+    let n = outs.len() as f64;
+    outs.iter()
+        .enumerate()
+        .map(|(qi, o)| precision_at_k(&o.topk, &ds.qrels[qi], k))
+        .sum::<f64>()
+        / n
+}
+
+fn main() {
+    let fast = std::env::var("DIRC_BENCH_FAST").ok().as_deref() == Some("1");
+    // The full 4 MB chip of the cluster_pruning bench: 8192 docs x 512
+    // dims INT8 on 16 cores, topic-structured so precision is
+    // meaningful and the centroid router has real structure to shard by.
+    let (n, dim) = (8192usize, 512usize);
+    let n_queries = if fast { 24 } else { 64 };
+    let params = SynthParams {
+        topics: 32,
+        doc_noise: 0.35,
+        rels_per_query: 1,
+        extra_rel_range: 1,
+        query_noise: 0.35,
+        confuse: 0.4,
+        aniso: 1.0,
+        seed: 4242,
+    };
+    eprintln!("generating {n} x {dim} corpus + building clustered chip...");
+    let ds = SynthDataset::generate(n, n_queries, dim, &params);
+    let db = quantize(&ds.docs, n, dim, QuantScheme::Int8);
+    let cfg = ChipConfig {
+        map_points: if fast { 40 } else { 80 },
+        cluster: ClusterPolicy { n_clusters: N_CLUSTERS, nprobe: NPROBE, kmeans_iters: 8 },
+        ..ChipConfig::paper_default(dim, Metric::Cosine)
+    };
+    assert_eq!(db.stored_bytes(), 4 << 20, "corpus must be exactly 4 MB INT8");
+    let chip = DircChip::build(cfg.clone(), &db);
+
+    let queries: Vec<Vec<i8>> = (0..n_queries)
+        .map(|qi| quantize(ds.query(qi), 1, dim, QuantScheme::Int8).values)
+        .collect();
+
+    // Single-chip reference bits (the fleet must reproduce these
+    // exactly) and the exhaustive precision baseline, both under the
+    // same seeded nonce stream.
+    let plan = QueryPlan::topk(10).prune(Prune::Default).seed(17).build().expect("plan");
+    let nonces = plan.nonces(n_queries);
+    let single = chip.execute_batch(&queries, &plan);
+    let ex_plan = QueryPlan::topk(10).prune(Prune::None).seed(17).build().expect("plan");
+    let exhaustive = chip.execute_batch(&queries, &ex_plan);
+
+    let mut b = Bench::new();
+    let mut t = Table::new(&[
+        "fleet",
+        "per-chip macros/q",
+        "busiest/q",
+        "spread vs 1 chip",
+        "host wall/q",
+    ]);
+    // (chips, per-chip macros/query, busiest/query, host seconds)
+    let mut rows: Vec<(usize, Vec<f64>, f64, f64)> = Vec::new();
+    for &chips in &SHARD_COUNTS {
+        let fleet = DircFleet::build(cfg.clone(), &db, chips);
+        let mut per_chip = vec![0u64; chips];
+        for (qi, q) in queries.iter().enumerate() {
+            let (out, shard_stats) = fleet.execute_scatter(q, &plan.with_nonce(nonces[qi]));
+            assert_eq!(
+                out.topk.len(),
+                single[qi].topk.len(),
+                "fleet x{chips} changed the result count (query {qi})"
+            );
+            for (a, s) in out.topk.iter().zip(&single[qi].topk) {
+                assert_eq!(
+                    a.doc_id, s.doc_id,
+                    "fleet x{chips} diverged from the single chip (query {qi})"
+                );
+                assert_eq!(
+                    a.score.to_bits(),
+                    s.score.to_bits(),
+                    "fleet x{chips} perturbed score bits (query {qi}, doc {})",
+                    a.doc_id
+                );
+            }
+            for (s, st) in shard_stats.iter().enumerate() {
+                if let Some(st) = st {
+                    per_chip[s] += st.macros_sensed as u64;
+                }
+            }
+        }
+        let nq = n_queries as f64;
+        let per_chip: Vec<f64> = per_chip.iter().map(|&m| m as f64 / nq).collect();
+        let busiest = per_chip.iter().copied().fold(0.0f64, f64::max);
+        let host = b
+            .run(&format!("fleet x{chips} scatter-gather"), || {
+                queries
+                    .iter()
+                    .enumerate()
+                    .map(|(qi, q)| {
+                        fleet.execute(q, &plan.with_nonce(nonces[qi])).topk.len()
+                    })
+                    .sum::<usize>()
+            })
+            .summary
+            .median;
+        rows.push((chips, per_chip, busiest, host / nq));
+    }
+    let single_busiest = rows[0].2;
+    for (chips, per_chip, busiest, host) in &rows {
+        t.row(&[
+            format!("{chips} chip{}", if *chips > 1 { "s" } else { "" }),
+            format!(
+                "[{}]",
+                per_chip.iter().map(|m| format!("{m:.1}")).collect::<Vec<_>>().join(", ")
+            ),
+            format!("{busiest:.1}"),
+            format!("{:.2}x", single_busiest / busiest.max(1e-9)),
+            fmt_duration(*host),
+        ]);
+    }
+    println!("\n=== fleet_scaling: centroid-routed sharding on the 4 MB corpus ===");
+    t.print();
+
+    let p1 = mean_precision(&single, &ds, 1);
+    let p5 = mean_precision(&single, &ds, 5);
+    let p10 = mean_precision(&single, &ds, 10);
+    let e1 = mean_precision(&exhaustive, &ds, 1);
+    let e5 = mean_precision(&exhaustive, &ds, 5);
+    let e10 = mean_precision(&exhaustive, &ds, 10);
+    println!(
+        "precision (pruned, fleet == single chip by the equivalence gate): \
+         P@1 {p1:.4} / P@5 {p5:.4} / P@10 {p10:.4} \
+         (exhaustive {e1:.4} / {e5:.4} / {e10:.4})"
+    );
+
+    // The acceptance gates (deterministic).
+    for (k, p, e) in [(1, p1, e1), (5, p5, e5), (10, p10, e10)] {
+        assert!(
+            p >= 0.95 * e,
+            "pruned P@{k} fell below 95% of exhaustive: {p:.4} vs {e:.4}"
+        );
+    }
+    let busiest4 = rows.last().expect("4-shard row").2;
+    assert!(
+        busiest4 * 2.0 <= single_busiest,
+        "4-shard fleet's busiest chip must sense <= half the single chip's \
+         macros: {busiest4:.1} vs {single_busiest:.1}"
+    );
+
+    let out = std::env::var("DIRC_BENCH_OUT")
+        .unwrap_or_else(|_| concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_8.json").into());
+    let json = Json::obj(vec![
+        ("bench", Json::str("fleet_scaling")),
+        (
+            "corpus",
+            Json::obj(vec![
+                ("docs", Json::num(n as f64)),
+                ("dim", Json::num(dim as f64)),
+                ("stored_mb", Json::num(db.stored_bytes() as f64 / (1 << 20) as f64)),
+                ("queries", Json::num(n_queries as f64)),
+            ]),
+        ),
+        (
+            "config",
+            Json::obj(vec![
+                ("n_clusters", Json::num(N_CLUSTERS as f64)),
+                ("nprobe", Json::num(NPROBE as f64)),
+                ("cores", Json::num(cfg.cores as f64)),
+            ]),
+        ),
+        (
+            "fleets",
+            Json::arr(
+                rows.iter()
+                    .map(|(chips, per_chip, busiest, host)| {
+                        Json::obj(vec![
+                            ("chips", Json::num(*chips as f64)),
+                            (
+                                "per_chip_macros_per_query",
+                                Json::arr(per_chip.iter().map(|&m| Json::num(m)).collect()),
+                            ),
+                            ("busiest_macros_per_query", Json::num(*busiest)),
+                            ("host_s_per_query", Json::num(*host)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "precision",
+            Json::obj(vec![
+                ("p_at_1", Json::num(p1)),
+                ("p_at_5", Json::num(p5)),
+                ("p_at_10", Json::num(p10)),
+                ("exhaustive_p_at_1", Json::num(e1)),
+                ("exhaustive_p_at_5", Json::num(e5)),
+                ("exhaustive_p_at_10", Json::num(e10)),
+            ]),
+        ),
+        (
+            "savings",
+            Json::obj(vec![(
+                "busiest_ratio_4_chips",
+                Json::num(single_busiest / busiest4.max(1e-9)),
+            )]),
+        ),
+    ]);
+    std::fs::write(&out, json.to_string_pretty()).expect("write bench artifact");
+    println!("wrote {out}");
+
+    b.report("fleet_scaling");
+}

@@ -14,8 +14,16 @@
 //! pooled engine, pipelines it across the DIRC cores as a queries × cores
 //! job matrix instead of one query at a time. Work-conserving by
 //! construction: an empty queue never delays the first query.
+//!
+//! [`DrrQueues`] replaces the single worker channel when the coordinator
+//! serves multiple tenants: one queue per tenant, drained by deficit
+//! round-robin so a saturating tenant gets throughput proportional to
+//! its weight while idle tenants cost nothing (work-conserving, and an
+//! idle queue's deficit resets so it cannot bank a burst).
 
+use std::collections::VecDeque;
 use std::sync::mpsc::{Receiver, TryRecvError};
+use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// Batching policy.
@@ -106,6 +114,125 @@ impl<T> Batcher<T> {
 
     pub fn policy(&self) -> &BatchPolicy {
         &self.policy
+    }
+}
+
+/// Per-tenant work queues drained by deficit round-robin (DRR).
+///
+/// Each tenant owns a FIFO queue and a *quantum* equal to its weight;
+/// [`DrrQueues::pop_run`] walks the queues in cyclic order, refilling a
+/// tenant's deficit counter by its quantum when the counter is empty and
+/// handing out up to `min(deficit, max)` items per visit. Under
+/// saturation the long-run item ratio between tenants equals the weight
+/// ratio *exactly* (e.g. weights 3:1 yield the service pattern
+/// `A A A B` repeating, at any `max`); an idle tenant is skipped at zero
+/// cost and its deficit resets, so no backlog of "credit" accumulates
+/// while it is away.
+///
+/// Blocking semantics mirror a channel: `pop_run` parks on a condvar
+/// until an item arrives, and returns `None` once the queues are
+/// [`DrrQueues::close`]d *and* fully drained.
+pub struct DrrQueues<T> {
+    state: Mutex<DrrState<T>>,
+    ready: Condvar,
+}
+
+struct DrrState<T> {
+    queues: Vec<VecDeque<T>>,
+    deficit: Vec<u64>,
+    quantum: Vec<u64>,
+    /// Next tenant the scan starts from; stays put while that tenant
+    /// still has deficit to spend.
+    cursor: usize,
+    closed: bool,
+}
+
+impl<T> DrrQueues<T> {
+    /// One queue per weight. Zero weights are clamped to 1 (every
+    /// tenant makes progress); an empty slice gets a single
+    /// weight-1 queue.
+    pub fn new(weights: &[u32]) -> Self {
+        let quantum: Vec<u64> =
+            if weights.is_empty() { vec![1] } else { weights.iter().map(|&w| u64::from(w.max(1))).collect() };
+        let n = quantum.len();
+        DrrQueues {
+            state: Mutex::new(DrrState {
+                queues: (0..n).map(|_| VecDeque::new()).collect(),
+                deficit: vec![0; n],
+                quantum,
+                cursor: 0,
+                closed: false,
+            }),
+            ready: Condvar::new(),
+        }
+    }
+
+    pub fn n_tenants(&self) -> usize {
+        self.state.lock().unwrap().queues.len()
+    }
+
+    /// Enqueue an item for `tenant` and wake one waiting worker.
+    pub fn push(&self, tenant: usize, item: T) {
+        let mut st = self.state.lock().unwrap();
+        st.queues[tenant].push_back(item);
+        drop(st);
+        self.ready.notify_one();
+    }
+
+    /// Mark the queues closed: workers drain what remains, then
+    /// `pop_run` returns `None`.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.ready.notify_all();
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.state.lock().unwrap().queues.iter().all(VecDeque::is_empty)
+    }
+
+    /// Block until work is available, then return one tenant's run:
+    /// `(tenant, items)` with `1 ..= min(deficit, max)` items, all from
+    /// the same tenant (so a worker can batch them under that tenant's
+    /// plan). Returns `None` when closed and drained. `max` is clamped
+    /// to at least 1.
+    pub fn pop_run(&self, max: usize) -> Option<(usize, Vec<T>)> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.queues.iter().all(VecDeque::is_empty) {
+                if st.closed {
+                    return None;
+                }
+                st = self.ready.wait(st).unwrap();
+                continue;
+            }
+            let n = st.queues.len();
+            let start = st.cursor;
+            for step in 0..n {
+                let t = (start + step) % n;
+                if st.queues[t].is_empty() {
+                    // Idle tenants bank no credit.
+                    st.deficit[t] = 0;
+                    continue;
+                }
+                if st.deficit[t] == 0 {
+                    st.deficit[t] = st.quantum[t];
+                }
+                let take =
+                    (st.deficit[t] as usize).min(max.max(1)).min(st.queues[t].len());
+                let items: Vec<T> = st.queues[t].drain(..take).collect();
+                st.deficit[t] -= take as u64;
+                if st.queues[t].is_empty() {
+                    st.deficit[t] = 0;
+                    st.cursor = (t + 1) % n;
+                } else if st.deficit[t] > 0 {
+                    // Quantum not spent: this tenant keeps the floor.
+                    st.cursor = t;
+                } else {
+                    st.cursor = (t + 1) % n;
+                }
+                return Some((t, items));
+            }
+        }
     }
 }
 
@@ -215,5 +342,97 @@ mod tests {
         tx.send(8).unwrap();
         assert_eq!(recv_batch(&rx, 0).unwrap(), vec![7]);
         drop(tx);
+    }
+
+    #[test]
+    fn drr_single_tenant_is_fifo() {
+        let q = DrrQueues::new(&[1]);
+        for i in 0..10u32 {
+            q.push(0, i);
+        }
+        q.close();
+        let mut got = Vec::new();
+        while let Some((t, items)) = q.pop_run(4) {
+            assert_eq!(t, 0);
+            got.extend(items);
+        }
+        assert_eq!(got, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn drr_weighted_ratio_is_exact_under_saturation() {
+        // Both tenants saturated, weights 3:1, one item per run: the
+        // service pattern is A A A B repeating — exactly 3:1.
+        let q = DrrQueues::new(&[3, 1]);
+        for i in 0..400u32 {
+            q.push(0, i);
+            q.push(1, i);
+        }
+        let mut served = [0usize; 2];
+        let mut order = Vec::new();
+        for _ in 0..200 {
+            let (t, items) = q.pop_run(1).unwrap();
+            assert_eq!(items.len(), 1);
+            served[t] += 1;
+            order.push(t);
+        }
+        assert_eq!(served, [150, 50]);
+        assert_eq!(&order[..8], &[0, 0, 0, 1, 0, 0, 0, 1]);
+    }
+
+    #[test]
+    fn drr_run_size_caps_at_deficit_and_max() {
+        let q = DrrQueues::new(&[3, 1]);
+        for i in 0..10u32 {
+            q.push(0, i);
+            q.push(1, i);
+        }
+        // max=2 splits tenant 0's quantum of 3 into runs of 2 then 1.
+        assert_eq!(q.pop_run(2).unwrap(), (0, vec![0, 1]));
+        assert_eq!(q.pop_run(2).unwrap(), (0, vec![2]));
+        assert_eq!(q.pop_run(2).unwrap(), (1, vec![0]));
+        // Next round starts a fresh quantum for tenant 0.
+        assert_eq!(q.pop_run(8).unwrap(), (0, vec![3, 4, 5]));
+    }
+
+    #[test]
+    fn drr_is_work_conserving_when_other_tenants_idle() {
+        // Only the light tenant has work: it is served immediately and
+        // repeatedly, never waiting on the heavy tenant's empty queue.
+        let q = DrrQueues::new(&[7, 1]);
+        for i in 0..5u32 {
+            q.push(1, i);
+        }
+        for i in 0..5u32 {
+            assert_eq!(q.pop_run(1).unwrap(), (1, vec![i]));
+        }
+    }
+
+    #[test]
+    fn drr_close_drains_then_ends() {
+        let q = DrrQueues::new(&[2, 1]);
+        q.push(0, 1u32);
+        q.push(1, 2u32);
+        q.close();
+        let mut total = 0;
+        while let Some((_, items)) = q.pop_run(8) {
+            total += items.len();
+        }
+        assert_eq!(total, 2);
+        assert!(q.pop_run(8).is_none());
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn drr_pop_blocks_until_push() {
+        use std::sync::Arc;
+        let q = Arc::new(DrrQueues::new(&[1, 1]));
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            q2.push(1, 42u32);
+        });
+        assert_eq!(q.pop_run(4).unwrap(), (1, vec![42]));
+        h.join().unwrap();
     }
 }

@@ -1,11 +1,13 @@
 //! Config-file binding: build [`ChipConfig`] / [`CoordinatorConfig`] /
 //! the serving [`QueryPlan`] template from the TOML-subset files under
-//! `configs/` (layered: defaults <- file).
+//! `configs/` (layered: defaults <- file). Fleet serving binds through
+//! `[fleet] n_chips` ([`fleet_chips`]) and per-tenant QoS through
+//! `[tenants]` blocks ([`tenant_specs`]).
 
 use anyhow::{anyhow, Result};
 
 use crate::coordinator::batcher::BatchPolicy;
-use crate::coordinator::server::CoordinatorConfig;
+use crate::coordinator::server::{CoordinatorConfig, TenantSpec};
 use crate::dirc::chip::ChipConfig;
 use crate::dirc::detect::ResensePolicy;
 use crate::dirc::variation::VariationModel;
@@ -101,7 +103,56 @@ pub fn coordinator_config(cfg: &Config) -> Result<CoordinatorConfig> {
             result_entries: cfg.usize_or("serving.cache_results", 0),
             routing_entries: cfg.usize_or("serving.cache_routing", 0),
         },
+        tenants: tenant_specs(cfg)?,
+        default_plan: query_plan(cfg)?,
     })
+}
+
+/// `[fleet] n_chips` — how many [`crate::fleet::DircFleet`] shards the
+/// serving chip splits into (1, the default, is the single-chip path;
+/// `chip.cores` must split evenly across the shards).
+pub fn fleet_chips(cfg: &Config) -> usize {
+    cfg.usize_or("fleet.n_chips", 1).max(1)
+}
+
+/// Bind the `[tenants]` blocks: `names = ["a", "b"]` declares the
+/// tenants (queue-index order), and each `[tenants.<name>]` table takes
+/// a deficit-round-robin `weight` (default 1) plus optional `k` /
+/// `nprobe` overrides of the serving plan template (0 or absent =
+/// inherit). No `[tenants]` section means single-tenant serving
+/// (an empty spec list; the coordinator synthesises its implicit
+/// `default` tenant).
+pub fn tenant_specs(cfg: &Config) -> Result<Vec<TenantSpec>> {
+    if cfg.get("tenants.names").is_none() {
+        return Ok(Vec::new());
+    }
+    let names = cfg.str_arr("tenants.names")?;
+    let base = query_plan(cfg)?;
+    let mut specs: Vec<TenantSpec> = Vec::new();
+    for name in names {
+        if specs.iter().any(|s| s.name == name) {
+            return Err(anyhow!("[tenants]: duplicate tenant name {name:?}"));
+        }
+        let weight = cfg.int_or(&format!("tenants.{name}.weight"), 1).max(1) as u32;
+        let k = cfg.usize_or(&format!("tenants.{name}.k"), 0);
+        let nprobe = cfg.usize_or(&format!("tenants.{name}.nprobe"), 0);
+        let plan = if k == 0 && nprobe == 0 {
+            None
+        } else {
+            let mut p = base.clone();
+            if k > 0 {
+                p = p.with_k(k).map_err(|e| anyhow!("[tenants.{name}] k: {e}"))?;
+            }
+            if nprobe > 0 {
+                p = p
+                    .with_prune(Prune::Probe(nprobe))
+                    .map_err(|e| anyhow!("[tenants.{name}] nprobe: {e}"))?;
+            }
+            Some(p)
+        };
+        specs.push(TenantSpec { name, weight, plan });
+    }
+    Ok(specs)
 }
 
 /// Build the serving [`QueryPlan`] template from the `[serving]` and
@@ -327,6 +378,56 @@ query_quant = "int4"
         assert_eq!(c.cache.result_entries, 256);
         assert_eq!(c.cache.routing_entries, 64);
         assert!(c.cache.enabled());
+    }
+
+    #[test]
+    fn fleet_and_tenant_knobs_bind() {
+        // Defaults: one chip, no tenants (single-tenant coordinator).
+        let cfg = Config::parse("").unwrap();
+        assert_eq!(fleet_chips(&cfg), 1);
+        assert!(tenant_specs(&cfg).unwrap().is_empty());
+        let c = coordinator_config(&cfg).unwrap();
+        assert!(c.tenants.is_empty());
+        assert_eq!(c.default_plan.k(), 10);
+
+        let cfg = Config::parse(
+            "[fleet]\nn_chips = 4\n\
+             [serving]\nk = 7\n\
+             [tenants]\nnames = [\"gold\", \"best_effort\"]\n\
+             [tenants.gold]\nweight = 3\nk = 5\n\
+             [tenants.best_effort]\nnprobe = 2",
+        )
+        .unwrap();
+        assert_eq!(fleet_chips(&cfg), 4);
+        let specs = tenant_specs(&cfg).unwrap();
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0].name, "gold");
+        assert_eq!(specs[0].weight, 3);
+        // gold overrides k, inherits the template's prune.
+        let gold = specs[0].plan.as_ref().unwrap();
+        assert_eq!(gold.k(), 5);
+        assert_eq!(gold.prune(), Prune::Default);
+        // best_effort keeps the template k, overrides nprobe.
+        assert_eq!(specs[1].weight, 1);
+        let be = specs[1].plan.as_ref().unwrap();
+        assert_eq!(be.k(), 7);
+        assert_eq!(be.prune(), Prune::Probe(2));
+        // The same specs ride into the coordinator config.
+        let c = coordinator_config(&cfg).unwrap();
+        assert_eq!(c.tenants.len(), 2);
+        assert_eq!(c.default_plan.k(), 7);
+
+        // A tenant block with no overrides inherits the template whole.
+        let cfg = Config::parse("[tenants]\nnames = [\"a\"]").unwrap();
+        let specs = tenant_specs(&cfg).unwrap();
+        assert_eq!(specs[0].weight, 1);
+        assert!(specs[0].plan.is_none());
+
+        // Duplicates and malformed declarations are rejected.
+        let bad = Config::parse("[tenants]\nnames = [\"a\", \"a\"]").unwrap();
+        assert!(tenant_specs(&bad).is_err());
+        let bad = Config::parse("[tenants]\nnames = [1, 2]").unwrap();
+        assert!(tenant_specs(&bad).is_err(), "tenant names must be strings");
     }
 
     #[test]

@@ -49,6 +49,7 @@ use anyhow::{bail, Result};
 
 use crate::coordinator::request::Mutation;
 use crate::dirc::chip::{ChipConfig, DircChip, DocPayload, MutationStats};
+use crate::fleet::DircFleet;
 use crate::retrieval::cache::{
     CacheConfig, CacheHierarchyStats, CentroidCache, ResultCache, ResultKey,
 };
@@ -377,6 +378,125 @@ impl Engine for SimEngine {
 
     fn cache_stats(&self) -> Option<CacheHierarchyStats> {
         self.caches.cfg.enabled().then(|| self.caches.stats())
+    }
+}
+
+/// Fleet-backed engine: [`SimEngine`]'s snapshot-swap discipline over a
+/// [`DircFleet`] — the whole fleet lives behind one `RwLock<Arc<..>>`
+/// snapshot (cloning a fleet is cheap: shards share their cores'
+/// `Arc` storage), queries scatter-gather lock-free on the snapshot,
+/// and a mutation clones, routes each document to its owning shard,
+/// and publishes. By the fleet's determinism contract an N=1
+/// `FleetEngine` is bit-identical to [`SimEngine`] under every plan;
+/// results are invariant in the shard count at any N.
+///
+/// No serving caches here: the cache hierarchy is a single-chip
+/// engine feature ([`Engine::cache_stats`] stays `None`).
+pub struct FleetEngine {
+    fleet: RwLock<Arc<DircFleet>>,
+    /// Serialises mutations so clone-mutate-publish runs without holding
+    /// the snapshot lock (same discipline as [`SimEngine`]).
+    mutate_lock: Mutex<()>,
+    pool: Option<Arc<ThreadPool>>,
+}
+
+impl FleetEngine {
+    /// Build a fleet of `n_chips` shards over the union corpus (see
+    /// [`DircFleet::build`]; `cfg.cores` is the fleet-wide core count
+    /// and must split evenly).
+    pub fn new(cfg: ChipConfig, db: &Quantized, n_chips: usize) -> FleetEngine {
+        Self::with_pool(cfg, db, n_chips, None)
+    }
+
+    /// Build with a shared thread pool: [`Exec::Auto`] plans run every
+    /// targeted shard's per-core jobs on it.
+    pub fn with_pool(
+        cfg: ChipConfig,
+        db: &Quantized,
+        n_chips: usize,
+        pool: Option<Arc<ThreadPool>>,
+    ) -> FleetEngine {
+        FleetEngine {
+            fleet: RwLock::new(Arc::new(DircFleet::build(cfg, db, n_chips))),
+            mutate_lock: Mutex::new(()),
+            pool,
+        }
+    }
+
+    /// The current fleet snapshot. Mutations swap it; a held `Arc`
+    /// keeps observing the pre-mutation corpus.
+    pub fn fleet(&self) -> Arc<DircFleet> {
+        self.fleet.read().unwrap().clone()
+    }
+}
+
+impl Engine for FleetEngine {
+    fn retrieve(&self, q: &[i8], plan: &QueryPlan) -> PlanOutput {
+        self.fleet().execute(q, &resolve_exec(plan, &self.pool))
+    }
+
+    fn retrieve_batch(&self, queries: &[Vec<i8>], plan: &QueryPlan) -> Vec<PlanOutput> {
+        // One snapshot for the whole batch; nonces are drawn in query
+        // order inside the fleet, so this is the serial stream bit for
+        // bit (and the union chip's batch, by the fleet contract).
+        self.fleet().execute_batch(queries, &resolve_exec(plan, &self.pool))
+    }
+
+    fn batch_capacity(&self) -> usize {
+        if self.pool.is_some() {
+            usize::MAX
+        } else {
+            1
+        }
+    }
+
+    fn mutate(&self, m: &Mutation, rng: &mut Pcg) -> Result<MutationOutcome> {
+        let _writer = self.mutate_lock.lock().unwrap();
+        let mut next = DircFleet::clone(&self.fleet());
+        let out = apply_fleet_mutation(&mut next, m, rng)?;
+        *self.fleet.write().unwrap() = Arc::new(next);
+        Ok(out)
+    }
+
+    fn dim(&self) -> usize {
+        self.fleet().cfg().dim
+    }
+
+    fn n_docs(&self) -> usize {
+        self.fleet().n_docs()
+    }
+}
+
+/// [`apply_mutation`], routed through the fleet's owning-shard
+/// dispatch. Payloads quantise on the fleet's frozen corpus grid
+/// (every shard shares the union `quant_scale`, so shard 0 stands in
+/// for the fleet).
+fn apply_fleet_mutation(
+    fleet: &mut DircFleet,
+    m: &Mutation,
+    rng: &mut Pcg,
+) -> Result<MutationOutcome> {
+    match m {
+        Mutation::Add { docs } => {
+            let payloads =
+                quantize_payloads(docs.iter().map(Vec::as_slice), &fleet.shards()[0])?;
+            let (added_ids, stats) = fleet.add_docs(&payloads, rng)?;
+            Ok(MutationOutcome { added_ids, stats })
+        }
+        Mutation::Delete { ids } => {
+            Ok(MutationOutcome { added_ids: Vec::new(), stats: fleet.delete_docs(ids) })
+        }
+        Mutation::Update { docs } => {
+            let payloads =
+                quantize_payloads(docs.iter().map(|(_, e)| e.as_slice()), &fleet.shards()[0])?;
+            let updates: Vec<(u64, DocPayload)> = docs
+                .iter()
+                .zip(payloads)
+                .map(|(&(id, _), p)| (id, p))
+                .collect();
+            let stats = fleet.update_docs(&updates, rng)?;
+            Ok(MutationOutcome { added_ids: Vec::new(), stats })
+        }
     }
 }
 

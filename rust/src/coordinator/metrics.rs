@@ -1,6 +1,12 @@
 //! Serving metrics: throughput, latency distribution, simulated hardware
 //! totals. Shared across worker threads behind a mutex (updates are tiny
 //! compared to retrieval work; see §Perf).
+//!
+//! Multi-tenant serving splits the serve/error counters per tenant
+//! ([`TenantSnapshot`]): every response is recorded against the tenant
+//! that submitted it, and the per-tenant `served`/`errors` columns sum
+//! to the global totals by construction — the fairness tests lean on
+//! that identity.
 
 use std::sync::Mutex;
 use std::time::Instant;
@@ -36,6 +42,24 @@ struct Inner {
     cells_written: u64,
     write_energy_j: f64,
     write_time_s: f64,
+    tenants: Vec<TenantCounters>,
+}
+
+#[derive(Debug)]
+struct TenantCounters {
+    name: String,
+    served: u64,
+    errors: u64,
+    host_latency: Welford,
+}
+
+/// Per-tenant slice of the serving counters.
+#[derive(Debug, Clone)]
+pub struct TenantSnapshot {
+    pub name: String,
+    pub served: u64,
+    pub errors: u64,
+    pub host_latency_mean_s: f64,
 }
 
 /// Snapshot of metrics at a point in time.
@@ -79,6 +103,9 @@ pub struct Snapshot {
     /// Simulated write energy (J) and serialised write time (s), summed.
     pub write_energy_j: f64,
     pub write_time_s: f64,
+    /// Per-tenant served/error counters, in tenant index order. The
+    /// `served` and `errors` columns sum to the global totals.
+    pub tenants: Vec<TenantSnapshot>,
 }
 
 impl Default for Metrics {
@@ -88,7 +115,22 @@ impl Default for Metrics {
 }
 
 impl Metrics {
+    /// Single-tenant metrics (one implicit `default` tenant).
     pub fn new() -> Metrics {
+        Self::with_tenants(&["default"])
+    }
+
+    /// Metrics with one counter block per tenant, in tenant index order.
+    pub fn with_tenants<S: AsRef<str>>(names: &[S]) -> Metrics {
+        let tenants = names
+            .iter()
+            .map(|n| TenantCounters {
+                name: n.as_ref().to_string(),
+                served: 0,
+                errors: 0,
+                host_latency: Welford::default(),
+            })
+            .collect();
         Metrics {
             inner: Mutex::new(Inner {
                 served: 0,
@@ -110,13 +152,20 @@ impl Metrics {
                 cells_written: 0,
                 write_energy_j: 0.0,
                 write_time_s: 0.0,
+                tenants,
             }),
             started: Instant::now(),
         }
     }
 
-    /// Record one served response.
+    /// Record one served response against tenant 0 (the single-tenant
+    /// path).
     pub fn record(&self, resp: &crate::coordinator::request::Response) {
+        self.record_for(0, resp);
+    }
+
+    /// Record one served response against `tenant`.
+    pub fn record_for(&self, tenant: usize, resp: &crate::coordinator::request::Response) {
         let mut m = self.inner.lock().unwrap();
         m.served += 1;
         m.host_latency.push(resp.total_s);
@@ -130,10 +179,22 @@ impl Metrics {
         m.macros_sensed += resp.stats.macros_sensed as u64;
         m.macros_skipped += resp.stats.macros_skipped as u64;
         m.clusters_probed += resp.stats.clusters_probed as u64;
+        if let Some(t) = m.tenants.get_mut(tenant) {
+            t.served += 1;
+            t.host_latency.push(resp.total_s);
+        }
     }
 
     pub fn record_error(&self) {
-        self.inner.lock().unwrap().errors += 1;
+        self.record_error_for(0);
+    }
+
+    pub fn record_error_for(&self, tenant: usize) {
+        let mut m = self.inner.lock().unwrap();
+        m.errors += 1;
+        if let Some(t) = m.tenants.get_mut(tenant) {
+            t.errors += 1;
+        }
     }
 
     /// Record one applied mutation batch (measured write accounting).
@@ -174,6 +235,16 @@ impl Metrics {
             cells_written: m.cells_written,
             write_energy_j: m.write_energy_j,
             write_time_s: m.write_time_s,
+            tenants: m
+                .tenants
+                .iter()
+                .map(|t| TenantSnapshot {
+                    name: t.name.clone(),
+                    served: t.served,
+                    errors: t.errors,
+                    host_latency_mean_s: t.host_latency.mean(),
+                })
+                .collect(),
         }
     }
 }
@@ -216,6 +287,17 @@ impl Snapshot {
             self.write_energy_j * 1e6,
             self.write_time_s * 1e3,
         );
+        if self.tenants.len() > 1 {
+            for t in &self.tenants {
+                out.push_str(&format!(
+                    "tenant {}: served={} errors={} mean latency {:.3} ms\n",
+                    t.name,
+                    t.served,
+                    t.errors,
+                    t.host_latency_mean_s * 1e3,
+                ));
+            }
+        }
         if let Some(cache) = &self.cache {
             out.push_str(&format!(
                 concat!(
@@ -335,5 +417,39 @@ mod tests {
         assert!((s.write_energy_j - 10e-6).abs() < 1e-12);
         assert!((s.write_time_s - 6e-3).abs() < 1e-12);
         assert!(s.render().contains("2 mutations"));
+    }
+
+    #[test]
+    fn per_tenant_counters_sum_to_global() {
+        let m = Metrics::with_tenants(&["a", "b"]);
+        for _ in 0..3 {
+            m.record_for(0, &fake_response(1e-3));
+        }
+        m.record_for(1, &fake_response(2e-3));
+        m.record_error_for(1);
+        let s = m.snapshot();
+        assert_eq!(s.served, 4);
+        assert_eq!(s.errors, 1);
+        assert_eq!(s.tenants.len(), 2);
+        assert_eq!(s.tenants[0].served, 3);
+        assert_eq!(s.tenants[0].errors, 0);
+        assert_eq!(s.tenants[1].served, 1);
+        assert_eq!(s.tenants[1].errors, 1);
+        assert_eq!(s.tenants.iter().map(|t| t.served).sum::<u64>(), s.served);
+        assert_eq!(s.tenants.iter().map(|t| t.errors).sum::<u64>(), s.errors);
+        let text = s.render();
+        assert!(text.contains("tenant a: served=3 errors=0"));
+        assert!(text.contains("tenant b: served=1 errors=1"));
+    }
+
+    #[test]
+    fn single_tenant_render_skips_tenant_lines() {
+        let m = Metrics::new();
+        m.record(&fake_response(1e-3));
+        let s = m.snapshot();
+        assert_eq!(s.tenants.len(), 1);
+        assert_eq!(s.tenants[0].name, "default");
+        assert_eq!(s.tenants[0].served, 1);
+        assert!(!s.render().contains("tenant "));
     }
 }

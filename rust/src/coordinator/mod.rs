@@ -8,11 +8,13 @@
 //! the functional scores. Python never runs here.
 //!
 //! * [`request`] — request/response types.
-//! * [`engine`]  — the retrieval engines (PJRT-fused serving engine and
-//!   the pure-simulator engine used by evaluation sweeps).
-//! * [`batcher`] — embed-batch assembly (size/deadline policy).
-//! * [`metrics`] — latency/throughput accounting.
-//! * [`server`]  — worker threads, channels, lifecycle.
+//! * [`engine`]  — the retrieval engines (PJRT-fused serving engine, the
+//!   pure-simulator engine used by evaluation sweeps, and the
+//!   multi-chip fleet engine).
+//! * [`batcher`] — embed-batch assembly (size/deadline policy) and the
+//!   per-tenant deficit-round-robin work queues.
+//! * [`metrics`] — latency/throughput accounting (global + per tenant).
+//! * [`server`]  — worker threads, channels, tenant QoS, lifecycle.
 
 pub mod batcher;
 pub mod configfile;
@@ -21,6 +23,6 @@ pub mod metrics;
 pub mod request;
 pub mod server;
 
-pub use engine::{Engine, MutationOutcome, ServingEngine, SimEngine};
+pub use engine::{Engine, FleetEngine, MutationOutcome, ServingEngine, SimEngine};
 pub use request::{Mutation, MutationResponse, Query, Request, RequestKind, Response};
-pub use server::{Coordinator, CoordinatorConfig};
+pub use server::{Coordinator, CoordinatorConfig, TenantSpec};

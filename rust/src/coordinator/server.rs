@@ -7,12 +7,25 @@
 //! Topology:
 //!
 //! ```text
-//!  submit()          -> ingest queue -> [ingest thread: batcher -> PJRT
-//!      embed -> quantise] -> work queue -> [N retrieval workers: Engine]
-//!      -> per-request response channel
-//!  submit_mutation() -> mutation queue -> [mutation worker: admission
+//!  submit()/submit_for() -> ingest queue -> [ingest thread: batcher ->
+//!      PJRT embed -> quantise] -> per-tenant DRR work queues ->
+//!      [N retrieval workers: Engine] -> per-request response channel
+//!  submit_mutation()     -> mutation queue -> [mutation worker: admission
 //!      policy -> Engine::mutate] -> per-request mutation response channel
 //! ```
+//!
+//! ## Multi-tenant QoS
+//!
+//! `[tenants]` blocks give each tenant a name, a scheduling weight, and
+//! an optional [`QueryPlan`] template. [`Coordinator::submit_for`]
+//! stamps the tenant's template onto the request; the embed stage stays
+//! shared (batching across tenants is what keeps the PJRT artifact
+//! full), and admission to the retrieval workers goes through
+//! [`DrrQueues`] — deficit round-robin over per-tenant queues — so
+//! under saturation tenants complete work in proportion to their
+//! weights while an idle tenant costs nothing. Metrics split
+//! served/error counters per tenant
+//! ([`crate::coordinator::metrics::TenantSnapshot`]).
 //!
 //! ## Mutation/query interleaving contract
 //!
@@ -27,13 +40,13 @@
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::coordinator::batcher::{BatchPolicy, Batcher};
+use crate::coordinator::batcher::{BatchPolicy, Batcher, DrrQueues};
 use crate::coordinator::engine::Engine;
 use crate::coordinator::metrics::{Metrics, Snapshot};
 use crate::coordinator::request::{
@@ -45,6 +58,20 @@ use crate::retrieval::plan::QueryPlan;
 use crate::retrieval::quant::QuantScheme;
 use crate::runtime::PjrtRuntime;
 use crate::util::rng::Pcg;
+
+/// One serving tenant: a name (the [`Coordinator::submit_for`] key), a
+/// deficit-round-robin scheduling weight, and an optional plan template
+/// stamped onto the tenant's requests.
+#[derive(Clone)]
+pub struct TenantSpec {
+    pub name: String,
+    /// Relative share of retrieval-worker admission under saturation
+    /// (clamped to at least 1).
+    pub weight: u32,
+    /// Plan template for [`Coordinator::submit_for`]; `None` uses
+    /// [`CoordinatorConfig::default_plan`].
+    pub plan: Option<QueryPlan>,
+}
 
 /// Coordinator configuration.
 #[derive(Clone)]
@@ -79,6 +106,12 @@ pub struct CoordinatorConfig {
     /// semantic of a result cache — while distinct queries stay
     /// decorrelated through the content hash.
     pub cache: CacheConfig,
+    /// Serving tenants in queue-index order. Empty means one implicit
+    /// `default` tenant of weight 1 — the single-tenant behaviour.
+    pub tenants: Vec<TenantSpec>,
+    /// Plan for [`Coordinator::submit_for`] requests whose tenant has no
+    /// template of its own.
+    pub default_plan: QueryPlan,
 }
 
 impl Default for CoordinatorConfig {
@@ -91,6 +124,10 @@ impl Default for CoordinatorConfig {
             mutation_max_defer: Duration::from_millis(20),
             seed: 0xC00D,
             cache: CacheConfig::default(),
+            tenants: Vec::new(),
+            default_plan: QueryPlan::topk(10)
+                .build()
+                .expect("static default plan is valid"),
         }
     }
 }
@@ -99,6 +136,8 @@ struct Pending {
     req: Request,
     submitted: Instant,
     resp_tx: Sender<Response>,
+    /// Tenant queue index (0 on the single-tenant `submit` path).
+    tenant: usize,
 }
 
 struct WorkItem {
@@ -131,6 +170,9 @@ pub struct Coordinator {
     /// (before the ingest thread even sees them, so queued-but-undrained
     /// queries are visible to the mutation admission policy).
     inflight: Arc<AtomicU64>,
+    /// Resolved tenant table (never empty; index = queue index).
+    tenants: Vec<TenantSpec>,
+    default_plan: QueryPlan,
 }
 
 impl Coordinator {
@@ -157,36 +199,45 @@ impl Coordinator {
         runtime: Option<Arc<PjrtRuntime>>,
         cfg: CoordinatorConfig,
     ) -> Coordinator {
-        let metrics = Arc::new(Metrics::new());
+        let tenants: Vec<TenantSpec> = if cfg.tenants.is_empty() {
+            vec![TenantSpec { name: "default".into(), weight: 1, plan: None }]
+        } else {
+            cfg.tenants.clone()
+        };
+        let names: Vec<&str> = tenants.iter().map(|t| t.name.as_str()).collect();
+        let metrics = Arc::new(Metrics::with_tenants(&names));
         let stop = Arc::new(AtomicBool::new(false));
         let inflight = Arc::new(AtomicU64::new(0));
         let (ingest_tx, ingest_rx) = channel::<Pending>();
-        let (work_tx, work_rx) = channel::<WorkItem>();
+        let weights: Vec<u32> = tenants.iter().map(|t| t.weight).collect();
+        let work = Arc::new(DrrQueues::<WorkItem>::new(&weights));
         let (mutation_tx, mutation_rx) = channel::<MutPending>();
-        let work_rx = Arc::new(Mutex::new(work_rx));
 
         let mut threads = Vec::new();
 
-        // Ingest thread: batches token queries through the embedder.
+        // Ingest thread: batches token queries through the embedder
+        // (shared across tenants — batching is what fills the fixed-size
+        // embed artifact), then fans out into the per-tenant queues.
         {
             let cfg2 = cfg.clone();
             let stop2 = Arc::clone(&stop);
             let metrics2 = Arc::clone(&metrics);
             let inflight2 = Arc::clone(&inflight);
+            let work2 = Arc::clone(&work);
             threads.push(
                 std::thread::Builder::new()
                     .name("dirc-ingest".into())
                     .spawn(move || {
-                        ingest_loop(ingest_rx, work_tx, runtime, cfg2, stop2, metrics2, inflight2)
+                        ingest_loop(ingest_rx, work2, runtime, cfg2, stop2, metrics2, inflight2)
                     })
                     .expect("spawn ingest"),
             );
         }
 
-        // Retrieval workers.
+        // Retrieval workers, drawing tenant runs off the DRR queues.
         for w in 0..cfg.workers.max(1) {
             let engine = Arc::clone(&engine);
-            let work_rx = Arc::clone(&work_rx);
+            let work2 = Arc::clone(&work);
             let metrics2 = Arc::clone(&metrics);
             let inflight2 = Arc::clone(&inflight);
             let seed = cfg.seed ^ (w as u64) << 32;
@@ -200,7 +251,7 @@ impl Coordinator {
                 std::thread::Builder::new()
                     .name(format!("dirc-worker-{w}"))
                     .spawn(move || {
-                        worker_loop(work_rx, engine, metrics2, inflight2, seed, batch_max, pin_base)
+                        worker_loop(work2, engine, metrics2, inflight2, seed, batch_max, pin_base)
                     })
                     .expect("spawn worker"),
             );
@@ -225,6 +276,7 @@ impl Coordinator {
             );
         }
 
+        let default_plan = cfg.default_plan.clone();
         Coordinator {
             ingest_tx: Some(ingest_tx),
             mutation_tx: Some(mutation_tx),
@@ -234,6 +286,8 @@ impl Coordinator {
             next_id: AtomicU64::new(1),
             stop,
             inflight,
+            tenants,
+            default_plan,
         }
     }
 
@@ -250,12 +304,44 @@ impl Coordinator {
     /// interleaving. Callers that need caller-controlled rng talk to an
     /// [`Engine`] directly.
     pub fn submit(&self, query: Query, plan: QueryPlan) -> Result<(u64, Receiver<Response>)> {
+        self.submit_as(0, query, plan)
+    }
+
+    /// Submit a retrieval request on behalf of a named tenant, under the
+    /// tenant's plan template (falling back to the coordinator's
+    /// default plan). The request joins that tenant's DRR queue, so its
+    /// admission to the retrieval workers is weighted by the tenant's
+    /// configured share.
+    pub fn submit_for(&self, tenant: &str, query: Query) -> Result<(u64, Receiver<Response>)> {
+        let idx = self
+            .tenants
+            .iter()
+            .position(|t| t.name == tenant)
+            .ok_or_else(|| anyhow!("unknown tenant {tenant:?}"))?;
+        let plan =
+            self.tenants[idx].plan.clone().unwrap_or_else(|| self.default_plan.clone());
+        self.submit_as(idx, query, plan)
+    }
+
+    /// Tenant names in queue-index order (matches
+    /// [`crate::coordinator::metrics::Snapshot::tenants`]).
+    pub fn tenant_names(&self) -> Vec<String> {
+        self.tenants.iter().map(|t| t.name.clone()).collect()
+    }
+
+    fn submit_as(
+        &self,
+        tenant: usize,
+        query: Query,
+        plan: QueryPlan,
+    ) -> Result<(u64, Receiver<Response>)> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (resp_tx, resp_rx) = channel();
         let pending = Pending {
             req: Request { id, kind: RequestKind::Retrieve { query, plan } },
             submitted: Instant::now(),
             resp_tx,
+            tenant,
         };
         // Count the query in flight from acceptance, so a mutation
         // racing a just-submitted burst sees it before the ingest
@@ -327,7 +413,7 @@ impl Drop for Coordinator {
 #[allow(clippy::too_many_arguments)]
 fn ingest_loop(
     rx: Receiver<Pending>,
-    work_tx: Sender<WorkItem>,
+    work: Arc<DrrQueues<WorkItem>>,
     runtime: Option<Arc<PjrtRuntime>>,
     cfg: CoordinatorConfig,
     stop: Arc<AtomicBool>,
@@ -345,22 +431,24 @@ fn ingest_loop(
             Ok(p) => batcher.push(p),
             Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
             Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
-                // Drain what's left, then exit.
+                // Drain what's left, then close the work queues so the
+                // retrieval workers finish the backlog and exit.
                 while !batcher.is_empty() {
-                    flush(&mut batcher, &work_tx, runtime.as_deref(), &cfg, &metrics, &inflight);
+                    flush(&mut batcher, &work, runtime.as_deref(), &cfg, &metrics, &inflight);
                 }
+                work.close();
                 return;
             }
         }
         while batcher.should_flush() || (stop.load(Ordering::SeqCst) && !batcher.is_empty()) {
-            flush(&mut batcher, &work_tx, runtime.as_deref(), &cfg, &metrics, &inflight);
+            flush(&mut batcher, &work, runtime.as_deref(), &cfg, &metrics, &inflight);
         }
     }
 }
 
 fn flush(
     batcher: &mut Batcher<Pending>,
-    work_tx: &Sender<WorkItem>,
+    work: &DrrQueues<WorkItem>,
     runtime: Option<&PjrtRuntime>,
     cfg: &CoordinatorConfig,
     metrics: &Metrics,
@@ -395,8 +483,8 @@ fn flush(
             "dirc-ingest: {} token queries dropped (no PJRT runtime for embedding)",
             token_items.len()
         );
-        for _ in &token_items {
-            metrics.record_error();
+        for p in &token_items {
+            metrics.record_error_for(p.tenant);
         }
         drop_inflight(token_items.len() as u64);
         token_items.clear();
@@ -442,32 +530,30 @@ fn flush(
                 // would drop them AND leak their inflight counts,
                 // permanently degrading the mutation admission policy).
                 eprintln!("dirc-ingest: embed batch failed: {err:#}");
-                for _ in &token_items {
-                    metrics.record_error();
+                for p in &token_items {
+                    metrics.record_error_for(p.tenant);
                 }
                 drop_inflight(token_items.len() as u64);
             }
         }
     }
-    // Quantise queries and hand to workers, the request's plan riding
-    // along verbatim.
+    // Quantise queries and enqueue on the submitting tenant's DRR
+    // queue, the request's plan riding along verbatim.
     for (p, emb, embed_s) in ready {
         let q = crate::retrieval::quant::quantize(&emb, 1, emb.len(), cfg.scheme);
         let plan = match &p.req.kind {
             RequestKind::Retrieve { plan, .. } => plan.clone(),
             RequestKind::Mutate(_) => unreachable!(),
         };
+        let tenant = p.tenant;
         let item = WorkItem { pending: p, q_int: q.values, plan, embed_s };
-        if work_tx.send(item).is_err() {
-            metrics.record_error();
-            drop_inflight(1);
-        }
+        work.push(tenant, item);
     }
 }
 
 #[allow(clippy::too_many_arguments)]
 fn worker_loop(
-    work_rx: Arc<Mutex<Receiver<WorkItem>>>,
+    work: Arc<DrrQueues<WorkItem>>,
     engine: Arc<dyn Engine>,
     metrics: Arc<Metrics>,
     inflight: Arc<AtomicU64>,
@@ -481,16 +567,13 @@ fn worker_loop(
     // onto whichever worker drained it first.
     let batch_max = batch_max.min(engine.batch_capacity()).max(1);
     loop {
-        // Block for one query, drain whatever else is already queued
-        // (work-conserving — see `batcher::recv_batch`), then dispatch
-        // runs of like-planned requests — keyed straight off each
-        // request's plan — through the engine's batch path so a pooled
-        // engine can pipeline them across the DIRC cores.
-        let items = {
-            let guard = work_rx.lock().unwrap();
-            crate::coordinator::batcher::recv_batch(&guard, batch_max)
-        };
-        let Some(items) = items else { return };
+        // Block for one tenant run off the DRR queues (work-conserving:
+        // the scheduler only weighs tenants against each other when more
+        // than one has queued work), then dispatch runs of like-planned
+        // requests — keyed straight off each request's plan — through
+        // the engine's batch path so a pooled engine can pipeline them
+        // across the DIRC cores. All items in a run share one tenant.
+        let Some((tenant, items)) = work.pop_run(batch_max) else { return };
         if let Some(base) = pin_base {
             // Result caching is on: dispatch each query singly through
             // the engine's cached `retrieve` path, under a seed pinned to
@@ -511,7 +594,7 @@ fn worker_loop(
                     retrieve_s: t0.elapsed().as_secs_f64(),
                     total_s: item.pending.submitted.elapsed().as_secs_f64(),
                 };
-                metrics.record(&resp);
+                metrics.record_for(tenant, &resp);
                 let _ = item.pending.resp_tx.send(resp);
                 inflight.fetch_sub(1, Ordering::SeqCst);
             }
@@ -560,7 +643,7 @@ fn worker_loop(
                     retrieve_s,
                     total_s: item.pending.submitted.elapsed().as_secs_f64(),
                 };
-                metrics.record(&resp);
+                metrics.record_for(tenant, &resp);
                 let _ = item.pending.resp_tx.send(resp);
                 inflight.fetch_sub(1, Ordering::SeqCst);
             }

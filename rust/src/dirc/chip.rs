@@ -198,6 +198,43 @@ pub struct PruneResolution {
     pub clusters_probed: u32,
 }
 
+/// Cluster metadata for a fleet shard built by [`DircChip::build_shard`]:
+/// the shared **union** centroid table (every shard ranks centroids off
+/// the same `Arc`), the per-row cluster assignment restricted to this
+/// shard's rows (placement order), and a clone of the union chip's
+/// adaptive-stop bounds.
+#[derive(Clone)]
+pub struct ShardClusters {
+    pub centroids: Arc<Centroids>,
+    /// Cluster of each shard row, in the shard's (pre-arranged) row order.
+    pub assign: Vec<u32>,
+    /// Union-corpus bounds snapshot (shards never rebuild them locally —
+    /// the fleet grows its own union copy through mutations).
+    pub bounds: ClusterBounds,
+}
+
+/// Placement directions for [`DircChip::build_shard`] — everything the
+/// union layout already decided, so the shard reproduces it verbatim.
+#[derive(Clone)]
+pub struct ShardSpec {
+    /// The **union** chip's rows-per-core (`union_n.div_ceil(union_cores)`),
+    /// *not* the shard-local ratio: ragged tails would otherwise shift
+    /// core boundaries and break bit-identity with the union chip.
+    pub per_core: usize,
+    /// Global doc id of each shard row, in row order.
+    pub ids: Vec<u64>,
+    /// Cluster metadata (None for an exhaustive/unclustered fleet).
+    pub clusters: Option<ShardClusters>,
+    /// Index of this shard's first core in the union chip (keys the
+    /// per-core sensing streams — see [`DircChip`]'s `core_rng_base`).
+    pub core_rng_base: usize,
+    /// First id this shard hands to an added document.
+    pub next_doc_id: u64,
+    /// Stride between added-doc ids (the fleet width), so shards draw
+    /// from disjoint id lanes.
+    pub doc_id_stride: u64,
+}
+
 /// The chip's two-stage retrieval index: frozen build-time centroids plus
 /// a per-core bitset of the clusters each core currently hosts (live
 /// documents only — the mutation path keeps it in sync).
@@ -303,6 +340,18 @@ pub struct DircChip {
     energy_model: EnergyModel,
     /// Live documents (tombstoned slots excluded).
     n_docs: usize,
+    /// Offset added to a core's local index when keying its per-query
+    /// sensing stream ([`Pcg::keyed`]`(nonce, core_rng_base + c)`). 0 on
+    /// a standalone chip; a fleet shard built by
+    /// [`DircChip::build_shard`] carries its first core's index in the
+    /// union chip, so shard-local core `c` draws exactly the flips the
+    /// union chip's core `core_rng_base + c` would draw — the invariant
+    /// behind the fleet's bit-identical scatter-gather.
+    core_rng_base: usize,
+    /// Stride between ids handed to added documents (1 on a standalone
+    /// chip). A fleet shard strides by the fleet width from a per-shard
+    /// start, so concurrent shards never collide on fresh ids.
+    doc_id_stride: u64,
     /// The corpus quantisation scale (fp ≈ scale * int). The integer
     /// grid is frozen at build time; online ingest must quantise new
     /// payloads onto THIS grid or integer MIPS scores would not be
@@ -410,9 +459,100 @@ impl DircChip {
             cycle_model: CycleModel::default(),
             energy_model: EnergyModel::default(),
             n_docs: db.n,
+            core_rng_base: 0,
+            doc_id_stride: 1,
             quant_scale: db.scale,
             doc_core,
             next_doc_id: db.n as u64,
+            stale_rows: 0,
+            stale_cores,
+            wear_at_refresh: 0,
+            map_epoch: 0,
+            routing_cache: None,
+        }
+    }
+
+    /// Build a **fleet shard**: a chip over a pre-arranged slice of a
+    /// union corpus, keeping every placement decision the union chip
+    /// already made.
+    ///
+    /// Unlike [`DircChip::build`], no k-means and no reordering happen
+    /// here: `db` rows arrive **already in placement order** (the union
+    /// chip's `(cluster, id)` order restricted to this shard's core
+    /// range), `spec.per_core` is the *union* rows-per-core so core
+    /// boundaries land exactly where the union chip put them, and
+    /// `spec.ids` carries the global doc ids. The shard's cluster index
+    /// shares the union centroid table (`Arc`) and starts from a clone
+    /// of the union's adaptive-stop bounds, so prune resolution ranks
+    /// centroids identically on every shard. `spec.core_rng_base` keys
+    /// shard-local cores to their union sensing streams, which is what
+    /// makes a fleet scatter bit-identical to the union chip (see
+    /// [`crate::fleet`]).
+    pub fn build_shard(cfg: ChipConfig, db: &Quantized, spec: ShardSpec) -> DircChip {
+        assert_eq!(db.dim, cfg.dim);
+        assert_eq!(db.scheme.bits(), cfg.bits, "db precision != chip precision");
+        assert_eq!(spec.ids.len(), db.n, "one global id per shard row");
+        assert!(spec.per_core >= 1, "shard needs a positive rows-per-core");
+        assert!(
+            spec.per_core * cfg.cores >= db.n,
+            "{} docs exceed shard layout {} cores x {} rows",
+            db.n,
+            cfg.cores,
+            spec.per_core
+        );
+        assert!(
+            db.n <= cfg.capacity_docs(),
+            "{} docs exceed shard capacity {}",
+            db.n,
+            cfg.capacity_docs()
+        );
+        // Same seed => same characterised error map as the union chip.
+        let map = cfg.variation.extract_error_map(cfg.map_points, cfg.seed);
+        let mut cores = Vec::with_capacity(cfg.cores);
+        let mut doc_core = HashMap::with_capacity(db.n);
+        let mut index = spec.clusters.as_ref().map(|sc| {
+            assert_eq!(sc.assign.len(), db.n, "one cluster per shard row");
+            let mut index = ClusterIndex::new(Arc::clone(&sc.centroids), cfg.cores);
+            index.bounds = sc.bounds.clone();
+            index
+        });
+        for c in 0..cfg.cores {
+            let lo = (c * spec.per_core).min(db.n);
+            let hi = ((c + 1) * spec.per_core).min(db.n);
+            let mut docs = Vec::with_capacity((hi - lo) * db.dim);
+            let mut norms = Vec::with_capacity(hi - lo);
+            let mut ids = Vec::with_capacity(hi - lo);
+            for r in lo..hi {
+                docs.extend_from_slice(db.row(r));
+                norms.push(db.norms[r]);
+                ids.push(spec.ids[r]);
+                doc_core.insert(spec.ids[r], c as u32);
+            }
+            let mut core = DircCore::program(cfg.macro_cfg(), &docs, &norms, &ids, &map);
+            if let Some(index) = index.as_mut() {
+                let sc = spec.clusters.as_ref().unwrap();
+                let slot_clusters: Vec<u32> = sc.assign[lo..hi].to_vec();
+                for &cluster in &slot_clusters {
+                    index.set(c, cluster);
+                }
+                core.set_slot_clusters(slot_clusters);
+            }
+            cores.push(Arc::new(core));
+        }
+        let stale_cores = vec![false; cfg.cores];
+        DircChip {
+            cfg,
+            cores,
+            clusters: index,
+            map,
+            cycle_model: CycleModel::default(),
+            energy_model: EnergyModel::default(),
+            n_docs: db.n,
+            core_rng_base: spec.core_rng_base,
+            doc_id_stride: spec.doc_id_stride.max(1),
+            quant_scale: db.scale,
+            doc_core,
+            next_doc_id: spec.next_doc_id,
             stale_rows: 0,
             stale_cores,
             wear_at_refresh: 0,
@@ -630,7 +770,7 @@ impl DircChip {
         k: usize,
         qnonce: u64,
     ) -> CoreOutcome {
-        core_query_job(&self.cores[c], c, q, q_norm, self.cfg.metric, k, qnonce)
+        core_query_job(&self.cores[c], c, q, q_norm, self.cfg.metric, k, qnonce, self.core_rng_base + c)
     }
 
     /// [`DircChip::run_core_query`] through the packed bit-plane popcount
@@ -646,7 +786,17 @@ impl DircChip {
         k: usize,
         qnonce: u64,
     ) -> CoreOutcome {
-        core_query_packed_job(&self.cores[c], c, q, q_packed, q_norm, self.cfg.metric, k, qnonce)
+        core_query_packed_job(
+            &self.cores[c],
+            c,
+            q,
+            q_packed,
+            q_norm,
+            self.cfg.metric,
+            k,
+            qnonce,
+            self.core_rng_base + c,
+        )
     }
 
     /// Pack one query for this chip's bit width (the per-query half of
@@ -674,7 +824,7 @@ impl DircChip {
     /// functional compute). Same RNG stream as [`DircChip::run_core_query`],
     /// so flips are identical for the same `qnonce`.
     pub fn run_core_sense(&self, c: usize, qnonce: u64) -> (Vec<Flip>, CoreOutcome) {
-        core_sense_job(&self.cores[c], c, qnonce)
+        core_sense_job(&self.cores[c], c, qnonce, self.core_rng_base + c)
     }
 
     /// Deterministic reduction of per-core shard results: sort by core
@@ -816,6 +966,7 @@ impl DircChip {
     ) -> Vec<CoreOutcome> {
         let q: Arc<Vec<i8>> = Arc::new(q.to_vec());
         let metric = self.cfg.metric;
+        let rng_base = self.core_rng_base;
         let (tx, rx) = std::sync::mpsc::channel::<CoreOutcome>();
         let mut outcomes = Vec::with_capacity(self.cores.len());
         for c in 0..self.cores.len() {
@@ -831,10 +982,18 @@ impl DircChip {
             let tx = tx.clone();
             pool.execute(move || {
                 let out = match &packed {
-                    Some(qp) => {
-                        core_query_packed_job(&core, c, &q, qp, q_norm, metric, k, qnonce)
-                    }
-                    None => core_query_job(&core, c, &q, q_norm, metric, k, qnonce),
+                    Some(qp) => core_query_packed_job(
+                        &core,
+                        c,
+                        &q,
+                        qp,
+                        q_norm,
+                        metric,
+                        k,
+                        qnonce,
+                        rng_base + c,
+                    ),
+                    None => core_query_job(&core, c, &q, q_norm, metric, k, qnonce, rng_base + c),
                 };
                 let _ = tx.send(out);
             });
@@ -891,6 +1050,7 @@ impl DircChip {
         let masks: Vec<&Option<Vec<bool>>> = resolutions.iter().map(|r| &r.mask).collect();
         let n_cores = self.cores.len();
         let metric = self.cfg.metric;
+        let rng_base = self.core_rng_base;
         // Each query is packed once here (when the plan scores packed)
         // and shared by all its core jobs through the `Arc` — the jobs
         // themselves allocate nothing on the scoring path (per-worker
@@ -925,10 +1085,20 @@ impl DircChip {
                 pool.execute(move || {
                     let (q, qp, q_norm, nonce) = &prepared[qi];
                     let out = match qp {
-                        Some(qp) => {
-                            core_query_packed_job(&core, c, q, qp, *q_norm, metric, k, *nonce)
+                        Some(qp) => core_query_packed_job(
+                            &core,
+                            c,
+                            q,
+                            qp,
+                            *q_norm,
+                            metric,
+                            k,
+                            *nonce,
+                            rng_base + c,
+                        ),
+                        None => {
+                            core_query_job(&core, c, q, *q_norm, metric, k, *nonce, rng_base + c)
                         }
-                        None => core_query_job(&core, c, q, *q_norm, metric, k, *nonce),
                     };
                     let _ = tx.send((qi, out));
                 });
@@ -977,6 +1147,7 @@ impl DircChip {
                 })
                 .collect(),
             Some(pool) => {
+                let rng_base = self.core_rng_base;
                 let (tx, rx) =
                     std::sync::mpsc::channel::<(usize, (Vec<Flip>, CoreOutcome))>();
                 let mut slots: Vec<Option<(Vec<Flip>, CoreOutcome)>> =
@@ -991,7 +1162,7 @@ impl DircChip {
                     let core = Arc::clone(&self.cores[c]);
                     let tx = tx.clone();
                     pool.execute(move || {
-                        let _ = tx.send((c, core_sense_job(&core, c, nonce)));
+                        let _ = tx.send((c, core_sense_job(&core, c, nonce, rng_base + c)));
                     });
                 }
                 drop(tx);
@@ -1153,6 +1324,11 @@ pub struct SenseOutput {
 /// One core's share of a query as a free function over its `Arc`'d
 /// storage: pooled execution ships this as a `'static` job capturing
 /// only the [`DircCore`] it scores (never a chip handle).
+///
+/// `rng_core` keys the sensing stream and is usually `c`; a fleet shard
+/// passes `core_rng_base + c` so shard-local cores keep their union
+/// chip's streams (the outcome still reports the local `c`).
+#[allow(clippy::too_many_arguments)]
 fn core_query_job(
     core: &DircCore,
     c: usize,
@@ -1161,8 +1337,9 @@ fn core_query_job(
     metric: Metric,
     k: usize,
     qnonce: u64,
+    rng_core: usize,
 ) -> CoreOutcome {
-    let mut core_rng = DircChip::core_stream(qnonce, c);
+    let mut core_rng = DircChip::core_stream(qnonce, rng_core);
     let res = core.query(q, q_norm, metric, k, &mut core_rng);
     CoreOutcome {
         core: c,
@@ -1180,6 +1357,7 @@ fn core_query_job(
 /// pooled jobs streams over the packed corpus planes with zero per-query
 /// heap allocation — the buffer grows to the largest macro once per
 /// worker and is reused for every subsequent (query, core) job.
+#[allow(clippy::too_many_arguments)]
 fn core_query_packed_job(
     core: &DircCore,
     c: usize,
@@ -1189,12 +1367,13 @@ fn core_query_packed_job(
     metric: Metric,
     k: usize,
     qnonce: u64,
+    rng_core: usize,
 ) -> CoreOutcome {
     thread_local! {
         static SCRATCH: std::cell::RefCell<Vec<i64>> =
             const { std::cell::RefCell::new(Vec::new()) };
     }
-    let mut core_rng = DircChip::core_stream(qnonce, c);
+    let mut core_rng = DircChip::core_stream(qnonce, rng_core);
     let res = SCRATCH.with(|s| {
         core.query_packed(q, q_packed, q_norm, metric, k, &mut core_rng, &mut s.borrow_mut())
     });
@@ -1211,8 +1390,13 @@ fn core_query_packed_job(
 
 /// Sensing-only counterpart of [`core_query_job`] (same rng stream, so
 /// flips are identical for the same nonce).
-fn core_sense_job(core: &DircCore, c: usize, qnonce: u64) -> (Vec<Flip>, CoreOutcome) {
-    let mut core_rng = DircChip::core_stream(qnonce, c);
+fn core_sense_job(
+    core: &DircCore,
+    c: usize,
+    qnonce: u64,
+    rng_core: usize,
+) -> (Vec<Flip>, CoreOutcome) {
+    let mut core_rng = DircChip::core_stream(qnonce, rng_core);
     let (flips, stats) = core.macro_().sense(&mut core_rng);
     let outcome = CoreOutcome {
         core: c,
@@ -1468,7 +1652,7 @@ impl DircChip {
                 })
                 .expect("capacity pre-check guarantees a free core");
             let id = self.next_doc_id;
-            self.next_doc_id += 1;
+            self.next_doc_id += self.doc_id_stride;
             let (local, w) = Arc::make_mut(&mut self.cores[c])
                 .add_doc(id, &p.values, p.norm, &self.cfg.write, rng)
                 .expect("placement chose a core without a free slot");

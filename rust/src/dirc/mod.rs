@@ -40,7 +40,7 @@ pub mod write;
 
 pub use chip::{
     ChipConfig, ClusterIndex, CoreOutcome, DircChip, DocPayload, MutationStats, QueryStats,
-    SenseOutput,
+    SenseOutput, ShardClusters, ShardSpec,
 };
 pub use device::{MlcLevel, ReramDevice};
 pub use remap::RemapStrategy;

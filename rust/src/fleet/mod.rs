@@ -1,0 +1,596 @@
+//! Multi-chip fleet serving: one logical corpus sharded across N
+//! [`DircChip`]s with centroid-routed scatter-gather retrieval.
+//!
+//! ## Sharding by union layout
+//!
+//! [`DircFleet::build`] first lays the corpus out exactly as a single
+//! union chip with `cfg.cores` total cores would ([`DircChip::build`]'s
+//! `(cluster, id)` cluster-contiguous order, `per_core =
+//! n.div_ceil(cores)` rows per core), then slices that layout into
+//! `n_chips` contiguous core ranges: shard `s` is a [`DircChip`] of
+//! `cfg.cores / n_chips` cores built by [`DircChip::build_shard`] over
+//! union cores `[s*C/N, (s+1)*C/N)`. Because clusters are contiguous in
+//! the union order, each cluster lands on as few shards as possible and
+//! a probed-cluster set selects few shards — the fleet analogue of the
+//! chip's probed-cluster → few-macros property.
+//!
+//! ## Determinism contract (fleet == one big chip, bit for bit)
+//!
+//! Every shard is built from the same `cfg.seed` (identical error map),
+//! holds its union cores' exact document placement, shares the **union**
+//! centroid table by `Arc` (so prune resolution ranks centroids
+//! identically everywhere), and carries `core_rng_base = s*C/N` so
+//! shard-local core `c` senses from [`DircChip::core_stream`]`(nonce,
+//! core_rng_base + c)` — the *union* core's stream. Scatter hands every
+//! targeted shard the **same** query nonce (the per-shard sub-plan is
+//! the query plan with the fleet-resolved [`Prune`] and that nonce; the
+//! "per-shard nonce derivation" is exactly this `(nonce, core_rng_base)`
+//! keying, pinned by `rust/tests/fleet.rs`), so the flips any document
+//! sees are independent of how many shards the fleet is cut into.
+//! Gather merges per-shard top-ks through [`merge_local`]'s (score desc,
+//! global id asc) total order. Net effect, pinned by the fleet tests and
+//! properties:
+//!
+//! * an N=1 fleet is **bit-identical** to the bare union chip — ids,
+//!   scores, stats, energy bits;
+//! * top-k ids *and score bits* are invariant across 1, 2, 4, ... shards.
+//!
+//! Merged fleet statistics at N>1 model chips running in parallel:
+//! `cycles`/`latency_s` take the max across targeted shards, energy and
+//! work sum, and each skipped shard's macros count as skipped. (At N>1
+//! the *sum* views differ from the union chip's by one centroid-select
+//! overhead per extra targeted shard — each chip runs its own
+//! prefilter; the single-target and N=1 cases degrade to exact
+//! equality.)
+//!
+//! ## Routing
+//!
+//! [`DircFleet::route`] mirrors [`DircChip::resolve_prune`] shard-wise:
+//! [`Prune::None`], a missing index, `nprobe == 0`, or `nprobe >=
+//! n_clusters` dispatch every shard exhaustively; a probe policy targets
+//! only the shards hosting at least one probed cluster (live documents
+//! only, via each shard's hosted-cluster bitsets), falling back to
+//! all-shards-exhaustive when no shard hosts any probed cluster; an
+//! armed [`Prune::Adaptive`] runs the chip's clean-score controller at
+//! the fleet level (walking shards in union core order against the
+//! fleet's union bounds) and dispatches the resulting `Probe(p_stop)`.
+//!
+//! Mutations route through the union table: an add goes to the shard
+//! owning its nearest centroid ([`Centroids::nearest`]), updates and
+//! deletes to the shard resident in the fleet's id directory. Fresh ids
+//! stay globally unique without coordination: shard `s` hands out
+//! `union_n + s, union_n + s + N, ...` (id lane striping).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::dirc::chip::{
+    ChipConfig, DircChip, DocPayload, MutationStats, QueryStats, ShardClusters, ShardSpec,
+};
+use crate::retrieval::cluster::{kmeans, Centroids, ClusterBounds, Prune};
+use crate::retrieval::plan::{PlanOutput, QueryPlan};
+use crate::retrieval::quant::Quantized;
+use crate::retrieval::score::norm_i8;
+use crate::retrieval::topk::{merge_local, ScoredDoc, TopK};
+use crate::util::rng::Pcg;
+
+/// One query's fleet-level dispatch decision: which shards run, under
+/// which (already resolved) [`Prune`] policy.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FleetRoute {
+    /// Policy dispatched to every targeted shard: [`Prune::None`] or a
+    /// resolved [`Prune::Probe`] (adaptive stops resolve here, at the
+    /// fleet level).
+    pub sub_prune: Prune,
+    /// `targets[s]` — shard `s` executes this query.
+    pub targets: Vec<bool>,
+    /// Fleet-level clusters-probed count, stamped into the merged
+    /// [`QueryStats`] (per-shard prefilters would over-count it).
+    pub clusters_probed: u32,
+}
+
+impl FleetRoute {
+    fn exhaustive(n_shards: usize) -> FleetRoute {
+        FleetRoute {
+            sub_prune: Prune::None,
+            targets: vec![true; n_shards],
+            clusters_probed: 0,
+        }
+    }
+}
+
+/// A fleet of [`DircChip`] shards serving one logical corpus. Cheap to
+/// clone (shards share their cores' `Arc` storage), so serving engines
+/// keep whole-fleet snapshots and mutate copy-on-write exactly as they
+/// do single chips.
+#[derive(Clone)]
+pub struct DircFleet {
+    /// The union configuration (`cfg.cores` = total cores fleet-wide).
+    cfg: ChipConfig,
+    shards: Vec<DircChip>,
+    /// Union centroid table shared with every shard (None = exhaustive
+    /// fleet, no two-stage routing).
+    centroids: Option<Arc<Centroids>>,
+    /// The fleet's own union adaptive-stop bounds, maintained through
+    /// mutations exactly like a chip's ([`ClusterBounds::observe`] on
+    /// every admitted payload) so the fleet-level adaptive controller
+    /// tracks the bare union chip bit for bit.
+    bounds: Option<ClusterBounds>,
+    /// Cluster -> shard receiving adds routed to that cluster (the shard
+    /// holding the cluster's first union slot; shard 0 for clusters with
+    /// no build-time members).
+    owner: Vec<usize>,
+    /// Global doc id -> resident shard, for update/delete routing.
+    doc_shard: HashMap<u64, usize>,
+}
+
+impl DircFleet {
+    /// Partition `db` across `n_chips` shards of `cfg.cores / n_chips`
+    /// cores each (the union layout sliced into contiguous core ranges —
+    /// see the module docs). `cfg.cores` must divide evenly.
+    pub fn build(cfg: ChipConfig, db: &Quantized, n_chips: usize) -> DircFleet {
+        assert!(n_chips >= 1, "a fleet needs at least one chip");
+        assert_eq!(
+            cfg.cores % n_chips,
+            0,
+            "{} union cores do not split evenly across {} chips",
+            cfg.cores,
+            n_chips
+        );
+        assert_eq!(db.dim, cfg.dim);
+        // The union layout, verbatim from `DircChip::build`.
+        let clustering = if cfg.cluster.enabled(db.n) {
+            Some(kmeans(
+                &db.values,
+                db.n,
+                db.dim,
+                cfg.cluster.n_clusters,
+                cfg.cluster.kmeans_iters,
+            ))
+        } else {
+            None
+        };
+        let mut order: Vec<usize> = (0..db.n).collect();
+        if let Some(cl) = &clustering {
+            order.sort_by_key(|&i| (cl.assign[i], i));
+        }
+        let per_core = db.n.div_ceil(cfg.cores);
+        let cores_per_shard = cfg.cores / n_chips;
+        let centroids = clustering.as_ref().map(|cl| Arc::new(cl.centroids.clone()));
+        let bounds = clustering
+            .as_ref()
+            .map(|cl| ClusterBounds::build(&db.values, db.n, db.dim, cl, &db.norms));
+        // Add-routing owner table: each cluster's first union slot names
+        // its shard (placement is cluster-contiguous, so that shard
+        // holds the bulk of the cluster).
+        let mut owner = Vec::new();
+        if let Some(cl) = &clustering {
+            owner = vec![0usize; cl.centroids.n_clusters];
+            let mut seen = vec![false; cl.centroids.n_clusters];
+            for (r, &i) in order.iter().enumerate() {
+                let j = cl.assign[i] as usize;
+                if !seen[j] {
+                    seen[j] = true;
+                    owner[j] = (r / per_core) / cores_per_shard;
+                }
+            }
+        }
+        let mut shards = Vec::with_capacity(n_chips);
+        let mut doc_shard = HashMap::with_capacity(db.n);
+        for s in 0..n_chips {
+            let c0 = s * cores_per_shard;
+            let c1 = c0 + cores_per_shard;
+            let lo = (c0 * per_core).min(db.n);
+            let hi = (c1 * per_core).min(db.n);
+            let rows = &order[lo..hi];
+            let mut values = Vec::with_capacity(rows.len() * db.dim);
+            let mut norms = Vec::with_capacity(rows.len());
+            let mut ids = Vec::with_capacity(rows.len());
+            let mut assign = Vec::with_capacity(rows.len());
+            for &i in rows {
+                values.extend_from_slice(db.row(i));
+                norms.push(db.norms[i]);
+                ids.push(i as u64);
+                doc_shard.insert(i as u64, s);
+                if let Some(cl) = &clustering {
+                    assign.push(cl.assign[i]);
+                }
+            }
+            let sub_db = Quantized {
+                scheme: db.scheme,
+                n: rows.len(),
+                dim: db.dim,
+                values,
+                scale: db.scale,
+                norms,
+            };
+            let shard_cfg = ChipConfig { cores: cores_per_shard, ..cfg.clone() };
+            let spec = ShardSpec {
+                per_core,
+                ids,
+                clusters: clustering.as_ref().map(|_| ShardClusters {
+                    centroids: Arc::clone(centroids.as_ref().expect("clustered fleet")),
+                    assign: std::mem::take(&mut assign),
+                    bounds: bounds.clone().expect("clustered fleet"),
+                }),
+                core_rng_base: c0,
+                next_doc_id: db.n as u64 + s as u64,
+                doc_id_stride: n_chips as u64,
+            };
+            shards.push(DircChip::build_shard(shard_cfg, &sub_db, spec));
+        }
+        DircFleet { cfg, shards, centroids, bounds, owner, doc_shard }
+    }
+
+    pub fn n_chips(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn shards(&self) -> &[DircChip] {
+        &self.shards
+    }
+
+    /// The union configuration (`cfg.cores` = fleet-wide core count).
+    pub fn cfg(&self) -> &ChipConfig {
+        &self.cfg
+    }
+
+    /// Live documents across the whole fleet.
+    pub fn n_docs(&self) -> usize {
+        self.shards.iter().map(|sh| sh.n_docs()).sum()
+    }
+
+    /// The shared union centroid table (None on an exhaustive fleet).
+    pub fn centroids(&self) -> Option<&Arc<Centroids>> {
+        self.centroids.as_ref()
+    }
+
+    /// The fleet's union adaptive-stop bounds.
+    pub fn bounds(&self) -> Option<&ClusterBounds> {
+        self.bounds.as_ref()
+    }
+
+    /// Which shard currently holds document `id`.
+    pub fn shard_of(&self, id: u64) -> Option<usize> {
+        self.doc_shard.get(&id).copied()
+    }
+
+    /// Resolve one query's dispatch: the shard-wise mirror of
+    /// [`DircChip::resolve_prune`] (see the module docs for the
+    /// exhaustive-fallback cases). Consumes no rng.
+    pub fn route(&self, q: &[i8], k: usize, prune: Prune) -> FleetRoute {
+        let n = self.shards.len();
+        let Some(centroids) = &self.centroids else {
+            return FleetRoute::exhaustive(n);
+        };
+        let nprobe = match prune {
+            Prune::None => return FleetRoute::exhaustive(n),
+            Prune::Default => self.cfg.cluster.nprobe,
+            Prune::Probe(p) => p,
+            Prune::Adaptive { target_margin, max_probe } => {
+                let margin = target_margin.get();
+                if margin > 0.0 {
+                    return self.adaptive_route(q, k, margin, max_probe);
+                }
+                max_probe
+            }
+        };
+        if nprobe == 0 || nprobe >= centroids.n_clusters {
+            return FleetRoute::exhaustive(n);
+        }
+        let ranked = centroids.ranked_for_query(q, self.cfg.metric);
+        let probed: Vec<u32> = ranked.iter().take(nprobe).map(|&(_, j)| j).collect();
+        let targets: Vec<bool> = self
+            .shards
+            .iter()
+            .map(|sh| {
+                let idx = sh.cluster_index().expect("clustered fleet shard has an index");
+                (0..sh.cores().len()).any(|c| probed.iter().any(|&j| idx.core_has(c, j)))
+            })
+            .collect();
+        if !targets.iter().any(|&t| t) {
+            // Every probed cluster is empty fleet-wide: fall back to
+            // exhaustive rather than returning nothing (the chip's own
+            // degradation, so N=1 stays bit-identical).
+            return FleetRoute::exhaustive(n);
+        }
+        FleetRoute {
+            sub_prune: Prune::Probe(nprobe),
+            targets,
+            clusters_probed: nprobe as u32,
+        }
+    }
+
+    /// The armed adaptive controller at fleet level: the chip's
+    /// clean-score walk ([`DircChip`]'s `adaptive_resolve`) over shards
+    /// in union core order, against the fleet's union bounds. Resolves
+    /// to the `Probe(p_stop)` dispatch the union chip would mask.
+    fn adaptive_route(&self, q: &[i8], k: usize, margin: f64, max_probe: usize) -> FleetRoute {
+        let centroids = self.centroids.as_ref().expect("armed adaptive needs centroids");
+        let bounds = self.bounds.as_ref().expect("clustered fleet keeps union bounds");
+        let n_clusters = centroids.n_clusters;
+        let cap = max_probe.min(n_clusters);
+        let ranked = centroids.ranked_for_query(q, self.cfg.metric);
+        let q_norm = norm_i8(q);
+        let mut running = TopK::new(k.max(1));
+        let mut sensed: Vec<Vec<bool>> = self
+            .shards
+            .iter()
+            .map(|sh| vec![false; sh.cores().len()])
+            .collect();
+        let mut probed = 0usize;
+        for step in 0..cap {
+            let j = ranked[step].1;
+            probed = step + 1;
+            // Union core order == (shard, local core) lexicographic:
+            // shard ranges are contiguous and ascending.
+            for (s, sh) in self.shards.iter().enumerate() {
+                let idx = sh.cluster_index().expect("clustered fleet shard has an index");
+                for (c, core) in sh.cores().iter().enumerate() {
+                    if sensed[s][c] || !idx.core_has(c, j) {
+                        continue;
+                    }
+                    sensed[s][c] = true;
+                    let scores = core.clean_scores(q, q_norm, self.cfg.metric);
+                    for (i, &sc) in scores.iter().enumerate() {
+                        if core.live()[i] {
+                            running.push(ScoredDoc { doc_id: core.doc_ids()[i], score: sc });
+                        }
+                    }
+                }
+            }
+            if probed >= cap {
+                break;
+            }
+            if running.len() == running.k() {
+                let kth = running.threshold().expect("running top-k is full").score;
+                let next = ranked[probed].1 as usize;
+                let ub = bounds.upper_bound(centroids, next, q, q_norm, self.cfg.metric);
+                if kth >= ub + margin {
+                    break;
+                }
+            }
+        }
+        if probed >= n_clusters || !sensed.iter().flatten().any(|&s| s) {
+            return FleetRoute::exhaustive(self.shards.len());
+        }
+        let targets = sensed.iter().map(|sc| sc.iter().any(|&s| s)).collect();
+        FleetRoute {
+            sub_prune: Prune::Probe(probed),
+            targets,
+            clusters_probed: probed as u32,
+        }
+    }
+
+    /// Execute one query across the fleet: route, scatter the sub-plan
+    /// (fleet-resolved prune + this query's nonce) to every targeted
+    /// shard's [`DircChip::execute_batch`], gather through the global
+    /// (score desc, id asc) top-k merge.
+    pub fn execute(&self, q: &[i8], plan: &QueryPlan) -> PlanOutput {
+        self.execute_scatter(q, plan).0
+    }
+
+    /// [`DircFleet::execute`] exposing the per-shard statistics of the
+    /// scatter (`None` for shards the route skipped) — what the scaling
+    /// bench charts as per-chip sensed work.
+    pub fn execute_scatter(
+        &self,
+        q: &[i8],
+        plan: &QueryPlan,
+    ) -> (PlanOutput, Vec<Option<QueryStats>>) {
+        assert_eq!(q.len(), self.cfg.dim);
+        let k = plan.k();
+        // Route before nonce, mirroring the chip's mask-before-nonce
+        // invariant (routing consumes no rng).
+        let route = self.route(q, k, plan.prune());
+        let nonce = plan.first_nonce();
+        let sub = plan
+            .with_nonce(nonce)
+            .with_prune(route.sub_prune)
+            .expect("fleet routes resolve to always-valid None/Probe policies");
+        let batch = [q.to_vec()];
+        let mut per_shard: Vec<Option<QueryStats>> = vec![None; self.shards.len()];
+        let mut locals: Vec<Vec<ScoredDoc>> = Vec::new();
+        let mut merged: Option<QueryStats> = None;
+        for (s, sh) in self.shards.iter().enumerate() {
+            if !route.targets[s] {
+                continue;
+            }
+            let out = sh
+                .execute_batch(&batch, &sub)
+                .pop()
+                .expect("one output per scattered query");
+            match merged.as_mut() {
+                None => merged = Some(out.stats.clone()),
+                Some(m) => {
+                    // Chips run in parallel: latency views take the max,
+                    // energy/work views sum, sense censuses fold through
+                    // the chip's own associative merge.
+                    m.sense.merge(&out.stats.sense);
+                    m.cycles = m.cycles.max(out.stats.cycles);
+                    m.latency_s = m.latency_s.max(out.stats.latency_s);
+                    m.work_cycles += out.stats.work_cycles;
+                    m.energy_j += out.stats.energy_j;
+                    m.docs_scored += out.stats.docs_scored;
+                    m.macros_sensed += out.stats.macros_sensed;
+                    m.macros_skipped += out.stats.macros_skipped;
+                }
+            }
+            per_shard[s] = Some(out.stats);
+            locals.push(out.topk);
+        }
+        let mut stats = merged.expect("a route targets at least one shard");
+        for (s, sh) in self.shards.iter().enumerate() {
+            if !route.targets[s] {
+                stats.macros_skipped += sh.cores().len() as u32;
+            }
+        }
+        stats.clusters_probed = route.clusters_probed;
+        let topk = merge_local(&locals, k);
+        (PlanOutput { topk, stats }, per_shard)
+    }
+
+    /// Execute a batch bit-identically to the serial query stream:
+    /// nonces are drawn in query order from the plan's rng policy
+    /// (exactly as [`DircChip::execute_batch`] draws them), then each
+    /// query scatters independently — so a fleet batch returns the same
+    /// bits as the same batch on the bare union chip.
+    pub fn execute_batch(&self, queries: &[Vec<i8>], plan: &QueryPlan) -> Vec<PlanOutput> {
+        let nonces = plan.nonces(queries.len());
+        queries
+            .iter()
+            .zip(&nonces)
+            .map(|(q, &nonce)| self.execute(q, &plan.with_nonce(nonce)))
+            .collect()
+    }
+
+    /// Admit new documents fleet-wide. Each document routes to the shard
+    /// owning its nearest union centroid ([`Centroids::nearest`] — the
+    /// chip's own add routing, lifted a level); an exhaustive fleet
+    /// places least-loaded-first. All-or-nothing across the fleet:
+    /// shapes and per-shard capacity are validated before any cell is
+    /// programmed. Returns assigned global ids in input order.
+    ///
+    /// The shared `rng` streams through shards in shard order, so a
+    /// given batch is deterministic for a given fleet shape (and, at
+    /// N=1, bit-identical to [`DircChip::add_docs`] on the union chip).
+    pub fn add_docs(
+        &mut self,
+        docs: &[DocPayload],
+        rng: &mut Pcg,
+    ) -> Result<(Vec<u64>, MutationStats)> {
+        for p in docs {
+            if p.values.len() != self.cfg.dim {
+                bail!("doc dim {} != fleet dim {}", p.values.len(), self.cfg.dim);
+            }
+        }
+        let n = self.shards.len();
+        let mut groups: Vec<Vec<usize>> = vec![Vec::new(); n];
+        let mut load: Vec<usize> = self.shards.iter().map(|sh| sh.n_docs()).collect();
+        for (i, p) in docs.iter().enumerate() {
+            let s = match &self.centroids {
+                Some(c) => self.owner[c.nearest(&p.values) as usize],
+                None => (0..n).min_by_key(|&s| (load[s], s)).expect("fleet has shards"),
+            };
+            groups[s].push(i);
+            load[s] += 1;
+        }
+        for (s, g) in groups.iter().enumerate() {
+            let sh = &self.shards[s];
+            if sh.n_docs() + g.len() > sh.cfg.capacity_docs() {
+                bail!(
+                    "shard {} full: {} live docs + {} routed adds exceeds capacity {}",
+                    s,
+                    sh.n_docs(),
+                    g.len(),
+                    sh.cfg.capacity_docs()
+                );
+            }
+        }
+        let mut ids = vec![0u64; docs.len()];
+        let mut stats: Option<MutationStats> = None;
+        for (s, g) in groups.iter().enumerate() {
+            if g.is_empty() {
+                continue;
+            }
+            let group: Vec<DocPayload> = g.iter().map(|&i| docs[i].clone()).collect();
+            let (got, st) = self.shards[s].add_docs(&group, rng)?;
+            for (&i, &id) in g.iter().zip(&got) {
+                ids[i] = id;
+                self.doc_shard.insert(id, s);
+            }
+            fold_mutation(&mut stats, st);
+        }
+        // Union-bounds maintenance mirrors the chip: grow-only observe
+        // of every admitted payload (order-independent folds).
+        if let Some(c) = &self.centroids {
+            let b = self.bounds.as_mut().expect("clustered fleet keeps union bounds");
+            for p in docs {
+                b.observe(c.nearest(&p.values), &p.values, c, p.norm);
+            }
+        }
+        Ok((ids, stats.unwrap_or_default()))
+    }
+
+    /// Re-program resident documents in place, each on its resident
+    /// shard. Ids the fleet has never seen count in `missing_ids` and
+    /// are never dispatched (they consume no rng — the chip's own skip
+    /// semantics, so N=1 stays bit-identical).
+    pub fn update_docs(
+        &mut self,
+        updates: &[(u64, DocPayload)],
+        rng: &mut Pcg,
+    ) -> Result<MutationStats> {
+        for (_, p) in updates {
+            if p.values.len() != self.cfg.dim {
+                bail!("doc dim {} != fleet dim {}", p.values.len(), self.cfg.dim);
+            }
+        }
+        let n = self.shards.len();
+        let mut groups: Vec<Vec<usize>> = vec![Vec::new(); n];
+        let mut missing = 0usize;
+        for (i, (id, _)) in updates.iter().enumerate() {
+            match self.doc_shard.get(id) {
+                Some(&s) => groups[s].push(i),
+                None => missing += 1,
+            }
+        }
+        let mut stats: Option<MutationStats> = None;
+        for (s, g) in groups.iter().enumerate() {
+            if g.is_empty() {
+                continue;
+            }
+            let group: Vec<(u64, DocPayload)> =
+                g.iter().map(|&i| updates[i].clone()).collect();
+            fold_mutation(&mut stats, self.shards[s].update_docs(&group, rng)?);
+        }
+        if let Some(c) = &self.centroids {
+            let b = self.bounds.as_mut().expect("clustered fleet keeps union bounds");
+            for (id, p) in updates {
+                if self.doc_shard.contains_key(id) {
+                    b.observe(c.nearest(&p.values), &p.values, c, p.norm);
+                }
+            }
+        }
+        let mut stats = stats.unwrap_or_default();
+        stats.missing_ids += missing;
+        Ok(stats)
+    }
+
+    /// Tombstone resident documents on their resident shards. Unknown
+    /// ids count in `missing_ids`.
+    pub fn delete_docs(&mut self, ids: &[u64]) -> MutationStats {
+        let n = self.shards.len();
+        let mut groups: Vec<Vec<u64>> = vec![Vec::new(); n];
+        let mut missing = 0usize;
+        for id in ids {
+            match self.doc_shard.remove(id) {
+                Some(s) => groups[s].push(*id),
+                None => missing += 1,
+            }
+        }
+        let mut stats: Option<MutationStats> = None;
+        for (s, g) in groups.iter().enumerate() {
+            if g.is_empty() {
+                continue;
+            }
+            fold_mutation(&mut stats, self.shards[s].delete_docs(g));
+        }
+        let mut stats = stats.unwrap_or_default();
+        stats.missing_ids += missing;
+        stats
+    }
+}
+
+/// Fold one shard's mutation accounting into the fleet batch total
+/// (first shard's stats seed the fold; [`MutationStats::merge`] sums the
+/// scalars and accumulates per-core costs index-wise, so `per_core[c]`
+/// reads as "local core c summed across shards").
+fn fold_mutation(acc: &mut Option<MutationStats>, st: MutationStats) {
+    match acc {
+        None => *acc = Some(st),
+        Some(a) => a.merge(&st),
+    }
+}

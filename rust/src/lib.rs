@@ -163,6 +163,27 @@
 //! `benches/adaptive_cache.rs` gates probe savings and Zipfian
 //! hit rate (`BENCH_7.json`).
 //!
+//! ## Fleet serving
+//!
+//! One chip tops out at a 4 MB corpus; [`fleet::DircFleet`] shards the
+//! union corpus across N [`dirc::chip::DircChip`]s by slicing the union
+//! chip's cluster-contiguous layout into contiguous core ranges, routes
+//! each pruned query to only the shards hosting its probed clusters
+//! (the union centroid table is shared by `Arc`), scatters per-shard
+//! `execute_batch` sub-plans and gathers through the (score desc,
+//! global id asc) top-k merge. Shards key their sensing streams by
+//! *union* core index (`core_rng_base`), so fleet results are
+//! **bit-identical** to the bare union chip at any shard count —
+//! pinned by `rust/tests/fleet.rs` and the shard-count-invariance
+//! properties. Mutations route to the owning shard via
+//! [`retrieval::cluster::Centroids::nearest`] with per-shard id lanes.
+//! The coordinator layers per-tenant QoS on top: named tenants with
+//! [`retrieval::plan::QueryPlan`] templates and weighted fair admission
+//! (deficit round-robin over per-tenant queues,
+//! [`coordinator::batcher::DrrQueues`]) plus per-tenant metrics;
+//! `benches/fleet_scaling.rs` gates per-chip sensed work shrinking as
+//! shards are added (`BENCH_8.json`).
+//!
 //! Tier-1 verification: `cargo build --release && cargo test -q` from the
 //! repository root (no artifacts or PJRT backend required — see
 //! [`runtime::xla_stub`]).
@@ -181,8 +202,10 @@
 //!   machinery, and the [`retrieval::plan`] execution currency.
 //! * [`runtime`] — PJRT client wrapper: artifact registry, executable
 //!   cache, typed execution.
+//! * [`fleet`] — multi-chip serving: centroid-routed sharding with
+//!   bit-identical scatter-gather across [`dirc::chip::DircChip`]s.
 //! * [`coordinator`] — the serving system: router, batcher, worker pool,
-//!   metrics.
+//!   per-tenant fair admission, metrics.
 //! * [`baseline`] — GPU cost model (Table III), WS/IS CIM dataflow models
 //!   (Sec III.B ablation), CIM technology comparison (Fig 2).
 //! * [`data`] — synthetic BEIR-like corpora and the embedding front-end.
@@ -196,6 +219,7 @@ pub mod coordinator;
 pub mod data;
 pub mod dirc;
 pub mod eval;
+pub mod fleet;
 pub mod retrieval;
 pub mod runtime;
 pub mod sim;

@@ -17,7 +17,8 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
-use dirc_rag::coordinator::{Coordinator, Query, ServingEngine};
+use dirc_rag::coordinator::{Coordinator, Engine, FleetEngine, Query, ServingEngine};
+use dirc_rag::fleet::DircFleet;
 use dirc_rag::data::text::{TextCorpus, TextParams};
 use dirc_rag::data::{dataset_by_name, paper_datasets, SynthDataset};
 use dirc_rag::dirc::chip::ChipConfig;
@@ -54,6 +55,11 @@ fn cli() -> Command {
                     "0",
                     "adaptive early termination margin (> 0 adds an adaptive pass)",
                 )
+                .opt(
+                    "chips",
+                    "1",
+                    "fleet shards (>1 adds a fleet-equivalence arm + per-chip report)",
+                )
                 .flag("no-detect", "disable the ΣD error-detection circuit")
                 .flag("errors", "inject sensing errors (hardware path)"),
         )
@@ -71,7 +77,8 @@ fn cli() -> Command {
                     "adaptive early termination margin (0 = [prune] config)",
                 )
                 .opt("cache-results", "0", "hot-query result cache entries (0 = config)")
-                .opt("cache-routing", "0", "centroid routing cache entries (0 = config)"),
+                .opt("cache-routing", "0", "centroid routing cache entries (0 = config)")
+                .opt("chips", "0", "fleet shards (0 = [fleet] n_chips from the config)"),
         )
         .sub(
             Command::new("ingest", "online corpus-ingest demo (no PJRT needed)")
@@ -292,6 +299,75 @@ fn cmd_eval(sub: &dirc_rag::util::cli::Parsed) -> Result<()> {
             }
         }
     }
+
+    let chips = sub.get_usize("chips")?;
+    if chips > 1 {
+        // Fleet-equivalence arm: shard the same quantised corpus across
+        // `chips` DircChips and replay the hardware-path query stream.
+        // By the fleet determinism contract the merged results must be
+        // bit-identical to the single chip — verified here per query —
+        // and the per-chip sense census shows how the probed work
+        // spreads across the fleet.
+        if chip.cfg.cores % chips != 0 {
+            return Err(anyhow!(
+                "--chips {} must divide chip.cores {}",
+                chips,
+                chip.cfg.cores
+            ));
+        }
+        let fleet = DircFleet::build(chip.cfg.clone(), &db, chips);
+        let plan = QueryPlan::topk(5)
+            .prune(if chip.cluster_index().is_some() { Prune::Default } else { Prune::None })
+            .seed(7)
+            .corpus_hint(ds.n_docs)
+            .build()
+            .expect("fleet eval plan");
+        let single = chip.execute_batch(&queries, &plan);
+        let nonces = plan.nonces(queries.len());
+        let mut mismatches = 0usize;
+        let mut per_chip = vec![0u64; chips];
+        for (qi, q) in queries.iter().enumerate() {
+            let (out, shard_stats) = fleet.execute_scatter(q, &plan.with_nonce(nonces[qi]));
+            let same = out.topk.len() == single[qi].topk.len()
+                && out.topk.iter().zip(&single[qi].topk).all(|(a, b)| {
+                    a.doc_id == b.doc_id && a.score.to_bits() == b.score.to_bits()
+                });
+            if !same {
+                mismatches += 1;
+            }
+            for (s, st) in shard_stats.iter().enumerate() {
+                if let Some(st) = st {
+                    per_chip[s] += st.macros_sensed as u64;
+                }
+            }
+        }
+        let n = queries.len() as f64;
+        let single_macros: u64 =
+            single.iter().map(|o| o.stats.macros_sensed as u64).sum();
+        let busiest = per_chip.iter().copied().max().unwrap_or(0);
+        println!(
+            "fleet [{chips} chips x {} cores]: {}",
+            chip.cfg.cores / chips,
+            if mismatches == 0 {
+                format!("bit-identical to single chip over {} queries", queries.len())
+            } else {
+                format!("{mismatches} MISMATCHED queries (determinism contract broken)")
+            },
+        );
+        println!(
+            "per-chip macros sensed/query: [{}]; busiest {:.1} vs single-chip {:.1}",
+            per_chip
+                .iter()
+                .map(|&m| format!("{:.1}", m as f64 / n))
+                .collect::<Vec<_>>()
+                .join(", "),
+            busiest as f64 / n,
+            single_macros as f64 / n,
+        );
+        if mismatches > 0 {
+            return Err(anyhow!("fleet results diverged from the single chip"));
+        }
+    }
     Ok(())
 }
 
@@ -367,13 +443,35 @@ fn cmd_serve(sub: &dirc_rag::util::cli::Parsed) -> Result<()> {
     let pool = Arc::new(dirc_rag::util::pool::ThreadPool::new(
         dirc_rag::util::pool::default_threads(),
     ));
-    let engine = Arc::new(ServingEngine::with_caches(
-        chip_cfg,
-        &db,
-        Arc::clone(&runtime),
-        Some(pool),
-        coord_cfg.cache,
-    )?);
+    // Fleet serving: --chips layers over [fleet] n_chips (0 = defer).
+    // More than one chip swaps the PJRT-fused single-chip engine for the
+    // scatter-gather fleet engine (bit-identical results by the fleet
+    // determinism contract; query embedding still runs through PJRT).
+    let chips_flag = sub.get_usize("chips")?;
+    let n_chips =
+        if chips_flag > 0 { chips_flag } else { configfile::fleet_chips(&file_cfg) };
+    if chip_cfg.cores % n_chips != 0 {
+        return Err(anyhow!(
+            "--chips {} must divide chip.cores {}",
+            n_chips,
+            chip_cfg.cores
+        ));
+    }
+    let engine: Arc<dyn Engine> = if n_chips > 1 {
+        eprintln!(
+            "fleet serving: {n_chips} chips x {} cores each",
+            chip_cfg.cores / n_chips
+        );
+        Arc::new(FleetEngine::with_pool(chip_cfg, &db, n_chips, Some(pool)))
+    } else {
+        Arc::new(ServingEngine::with_caches(
+            chip_cfg,
+            &db,
+            Arc::clone(&runtime),
+            Some(pool),
+            coord_cfg.cache,
+        )?)
+    };
     let coord = Coordinator::start(engine, Arc::clone(&runtime), coord_cfg);
 
     eprintln!("serving {n_queries} token queries...");

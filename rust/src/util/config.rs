@@ -227,6 +227,21 @@ impl Config {
         }
     }
 
+    /// Typed array accessor (strings).
+    pub fn str_arr(&self, path: &str) -> Result<Vec<String>> {
+        match self.get(path) {
+            Some(Value::Arr(items)) => items
+                .iter()
+                .map(|v| match v {
+                    Value::Str(s) => Ok(s.clone()),
+                    other => bail!("config key {path:?}: non-string array item {other:?}"),
+                })
+                .collect(),
+            Some(other) => bail!("config key {path:?}: expected array, got {other:?}"),
+            None => bail!("config key {path:?} missing"),
+        }
+    }
+
     /// Merge another config over this one (other wins).
     pub fn overlay(&mut self, other: &Config) {
         for (k, v) in &other.values {
@@ -277,6 +292,14 @@ mac_fj = 3.2          # per bit-MAC
         let c = Config::parse("n = 1_000_000 # one million\ns = \"a # not comment\"").unwrap();
         assert_eq!(c.int_or("n", 0), 1_000_000);
         assert_eq!(c.require_str("s").unwrap(), "a # not comment");
+    }
+
+    #[test]
+    fn str_arr_access() {
+        let c = Config::parse("names = [\"alpha\", \"beta\"]\nmixed = [1, \"x\"]").unwrap();
+        assert_eq!(c.str_arr("names").unwrap(), vec!["alpha", "beta"]);
+        assert!(c.str_arr("mixed").is_err());
+        assert!(c.str_arr("missing").is_err());
     }
 
     #[test]

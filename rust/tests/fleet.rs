@@ -1,0 +1,327 @@
+//! Fleet-equivalence golden tests: the determinism contract of
+//! [`DircFleet`] (fleet == one big chip, bit for bit) pinned against
+//! the bare [`DircChip`] — ids, score bits, the full hardware census,
+//! mutations over shared rng streams, and the scatter-gather merge's
+//! (score desc, global id asc) total order on tie-heavy corpora.
+
+use dirc_rag::dirc::chip::{ChipConfig, DircChip, DocPayload, MutationStats, QueryStats};
+use dirc_rag::fleet::DircFleet;
+use dirc_rag::retrieval::cluster::ClusterPolicy;
+use dirc_rag::retrieval::plan::QueryPlan;
+use dirc_rag::retrieval::quant::{quantize, QuantScheme, Quantized};
+use dirc_rag::retrieval::score::Metric;
+use dirc_rag::retrieval::topk::{merge_local, ScoredDoc};
+use dirc_rag::retrieval::Prune;
+use dirc_rag::util::rng::Pcg;
+
+fn db_of(n: usize, dim: usize, seed: u64) -> Quantized {
+    let mut rng = Pcg::new(seed);
+    let docs: Vec<f32> = (0..n * dim).map(|_| rng.int_in(-128, 127) as f32 / 128.0).collect();
+    quantize(&docs, n, dim, QuantScheme::Int8)
+}
+
+fn clustered_cfg(cores: usize, n_clusters: usize) -> ChipConfig {
+    ChipConfig {
+        cores,
+        map_points: 25,
+        cluster: ClusterPolicy { n_clusters, nprobe: 2, kmeans_iters: 6 },
+        ..ChipConfig::paper_default(128, Metric::Mips)
+    }
+}
+
+fn query(dim: usize, seed: u64) -> Vec<i8> {
+    let mut rng = Pcg::new(seed);
+    (0..dim).map(|_| rng.int_in(-128, 127) as i8).collect()
+}
+
+/// Top-k equality down to the score *bits* (ScoredDoc's `==` already
+/// compares exact f64 values; the bit view makes -0.0/NaN drift loud).
+fn assert_topk_bits(got: &[ScoredDoc], want: &[ScoredDoc], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: result count");
+    for (i, (a, b)) in got.iter().zip(want).enumerate() {
+        assert_eq!(a.doc_id, b.doc_id, "{ctx}: rank {i} id");
+        assert_eq!(
+            a.score.to_bits(),
+            b.score.to_bits(),
+            "{ctx}: rank {i} score bits (doc {})",
+            a.doc_id
+        );
+    }
+}
+
+/// Field-by-field QueryStats equality, floats compared by bits.
+fn assert_stats_bits(got: &QueryStats, want: &QueryStats, ctx: &str) {
+    assert_eq!(got.sense, want.sense, "{ctx}: sense census");
+    assert_eq!(got.cycles, want.cycles, "{ctx}: cycles");
+    assert_eq!(got.work_cycles, want.work_cycles, "{ctx}: work_cycles");
+    assert_eq!(got.macros_sensed, want.macros_sensed, "{ctx}: macros_sensed");
+    assert_eq!(got.macros_skipped, want.macros_skipped, "{ctx}: macros_skipped");
+    assert_eq!(got.docs_scored, want.docs_scored, "{ctx}: docs_scored");
+    assert_eq!(got.clusters_probed, want.clusters_probed, "{ctx}: clusters_probed");
+    assert_eq!(
+        got.latency_s.to_bits(),
+        want.latency_s.to_bits(),
+        "{ctx}: latency bits"
+    );
+    assert_eq!(got.energy_j.to_bits(), want.energy_j.to_bits(), "{ctx}: energy bits");
+}
+
+fn mutation_stats_eq(a: &MutationStats, b: &MutationStats, ctx: &str) {
+    assert_eq!(a.docs_added, b.docs_added, "{ctx}: docs_added");
+    assert_eq!(a.docs_updated, b.docs_updated, "{ctx}: docs_updated");
+    assert_eq!(a.docs_deleted, b.docs_deleted, "{ctx}: docs_deleted");
+    assert_eq!(a.missing_ids, b.missing_ids, "{ctx}: missing_ids");
+    assert_eq!(a.write_pulses, b.write_pulses, "{ctx}: write_pulses");
+    assert_eq!(a.write_cycles, b.write_cycles, "{ctx}: write_cycles");
+    assert_eq!(a.per_core.len(), b.per_core.len(), "{ctx}: per_core len");
+    for (c, (x, y)) in a.per_core.iter().zip(&b.per_core).enumerate() {
+        assert_eq!(x.cells_written, y.cells_written, "{ctx}: core {c} cells");
+        assert_eq!(x.energy_j.to_bits(), y.energy_j.to_bits(), "{ctx}: core {c} energy");
+        assert_eq!(x.time_s.to_bits(), y.time_s.to_bits(), "{ctx}: core {c} time");
+    }
+}
+
+/// An N=1 fleet is the bare chip, bit for bit: ids, score bits, and the
+/// full hardware census (including energy bits) across every prune
+/// policy, seeded.
+#[test]
+fn n1_fleet_bit_identical_to_bare_chip_across_plans() {
+    let db = db_of(480, 128, 0xF1EE7);
+    let cfg = clustered_cfg(8, 16);
+    let chip = DircChip::build(cfg.clone(), &db);
+    let fleet = DircFleet::build(cfg, &db, 1);
+    assert_eq!(fleet.n_chips(), 1);
+    assert_eq!(fleet.n_docs(), chip.n_docs());
+
+    let prunes = [
+        Prune::None,
+        Prune::Default,
+        Prune::Probe(3),
+        Prune::Probe(16), // >= n_clusters: the exhaustive degradation
+        Prune::adaptive(0.05, 6),
+        Prune::adaptive(0.0, 4), // disarmed: Probe(4) degradation
+    ];
+    for (pi, &prune) in prunes.iter().enumerate() {
+        for seed in 0..4u64 {
+            let q = query(128, 1000 + seed);
+            let plan = QueryPlan::topk(7)
+                .prune(prune)
+                .seed(40 + pi as u64 * 10 + seed)
+                .build()
+                .unwrap();
+            let want = chip.execute(&q, &plan);
+            let got = fleet.execute(&q, &plan);
+            let ctx = format!("plan {pi} seed {seed}");
+            assert_topk_bits(&got.topk, &want.topk, &ctx);
+            assert_stats_bits(&got.stats, &want.stats, &ctx);
+        }
+    }
+}
+
+/// N=1 bit-identity holds *through* mutations: the fleet's add/update/
+/// delete draw from the shared rng stream exactly as the bare chip does
+/// (same assigned ids, same write accounting), and post-churn queries
+/// still return identical bits.
+#[test]
+fn n1_fleet_bit_identical_through_mutations() {
+    let db = db_of(240, 128, 0xADD5);
+    let cfg = clustered_cfg(4, 8);
+    let mut chip = DircChip::build(cfg.clone(), &db);
+    let mut fleet = DircFleet::build(cfg, &db, 1);
+    let mut rc = Pcg::new(77);
+    let mut rf = Pcg::new(77);
+    let mut payload_rng = Pcg::new(31);
+    let mut payloads = |n: usize| -> Vec<DocPayload> {
+        (0..n)
+            .map(|_| {
+                DocPayload::from_values(
+                    (0..128).map(|_| payload_rng.int_in(-128, 127) as i8).collect(),
+                )
+            })
+            .collect()
+    };
+
+    // Adds: same ids, same accounting.
+    let adds = payloads(9);
+    let (ids_c, st_c) = chip.add_docs(&adds, &mut rc).unwrap();
+    let (ids_f, st_f) = fleet.add_docs(&adds, &mut rf).unwrap();
+    assert_eq!(ids_c, ids_f, "assigned global ids");
+    mutation_stats_eq(&st_c, &st_f, "add");
+    for &id in &ids_f {
+        assert_eq!(fleet.shard_of(id), Some(0));
+    }
+
+    // Updates, including a never-seen id: both sides must count it in
+    // missing_ids without touching the rng stream.
+    let fresh = payloads(4);
+    let mut updates: Vec<(u64, DocPayload)> = vec![
+        (3, fresh[0].clone()),
+        (9_999_999, fresh[1].clone()),
+        (ids_c[0], fresh[2].clone()),
+        (120, fresh[3].clone()),
+    ];
+    let st_c = chip.update_docs(&updates, &mut rc).unwrap();
+    let st_f = fleet.update_docs(&updates, &mut rf).unwrap();
+    assert_eq!(st_f.missing_ids, 1, "one unknown update target");
+    mutation_stats_eq(&st_c, &st_f, "update");
+
+    // Deletes (one missing), then a post-churn query: still bit-identical.
+    let dels = [ids_c[1], 5, 8_888_888];
+    let st_c = chip.delete_docs(&dels);
+    let st_f = fleet.delete_docs(&dels);
+    mutation_stats_eq(&st_c, &st_f, "delete");
+    assert_eq!(fleet.shard_of(ids_c[1]), None, "deleted id leaves the directory");
+    assert_eq!(fleet.n_docs(), chip.n_docs());
+
+    // A second round keeps the streams locked (updates after adds reuse
+    // fleet-assigned ids).
+    updates = vec![(ids_c[2], payloads(1)[0].clone())];
+    let st_c2 = chip.update_docs(&updates, &mut rc).unwrap();
+    let st_f2 = fleet.update_docs(&updates, &mut rf).unwrap();
+    mutation_stats_eq(&st_c2, &st_f2, "second update");
+
+    for seed in 0..4u64 {
+        let q = query(128, 7000 + seed);
+        for prune in [Prune::None, Prune::Default] {
+            let plan = QueryPlan::topk(6).prune(prune).seed(300 + seed).build().unwrap();
+            let want = chip.execute(&q, &plan);
+            let got = fleet.execute(&q, &plan);
+            let ctx = format!("post-churn seed {seed} {prune:?}");
+            assert_topk_bits(&got.topk, &want.topk, &ctx);
+            assert_stats_bits(&got.stats, &want.stats, &ctx);
+        }
+    }
+}
+
+/// A fleet of 4 returns exactly the (score desc, global id asc) merge of
+/// the per-shard top-ks — checked both against an independent
+/// reconstruction of the scatter (route -> per-shard execute ->
+/// merge_local) and against the bare union chip's bits.
+#[test]
+fn fleet_of_4_is_exactly_the_merged_per_shard_topk() {
+    let db = db_of(480, 128, 0x5CA7);
+    let cfg = clustered_cfg(8, 16);
+    let chip = DircChip::build(cfg.clone(), &db);
+    let fleet = DircFleet::build(cfg, &db, 4);
+    assert_eq!(fleet.n_chips(), 4);
+
+    for seed in 0..6u64 {
+        let q = query(128, 2000 + seed);
+        for (k, prune) in [(5, Prune::Probe(3)), (9, Prune::Default), (7, Prune::None)] {
+            let plan = QueryPlan::topk(k).prune(prune).seed(500 + seed).build().unwrap();
+            let (got, per_shard) = fleet.execute_scatter(&q, &plan);
+            let ctx = format!("seed {seed} {prune:?}");
+
+            // Same bits as the bare union chip.
+            let want = chip.execute(&q, &plan);
+            assert_topk_bits(&got.topk, &want.topk, &ctx);
+
+            // Exactly the merge of the per-shard top-ks under the
+            // fleet-resolved sub-plan.
+            let route = fleet.route(&q, k, plan.prune());
+            let sub = plan
+                .with_nonce(plan.first_nonce())
+                .with_prune(route.sub_prune)
+                .unwrap();
+            let mut locals = Vec::new();
+            for (s, sh) in fleet.shards().iter().enumerate() {
+                assert_eq!(
+                    route.targets[s],
+                    per_shard[s].is_some(),
+                    "{ctx}: scatter hit exactly the routed shards"
+                );
+                if route.targets[s] {
+                    let out = sh.execute_batch(&[q.clone()], &sub).pop().unwrap();
+                    locals.push(out.topk);
+                }
+            }
+            let merged = merge_local(&locals, k);
+            assert_topk_bits(&got.topk, &merged, &format!("{ctx}: vs manual merge"));
+
+            // Census closure: every core fleet-wide either sensed or was
+            // skipped, and per-shard sensed counts sum to the merged view.
+            assert_eq!(
+                got.stats.macros_sensed + got.stats.macros_skipped,
+                8,
+                "{ctx}: macro census covers all fleet cores"
+            );
+            let sensed_sum: u32 =
+                per_shard.iter().flatten().map(|st| st.macros_sensed).sum();
+            assert_eq!(got.stats.macros_sensed, sensed_sum, "{ctx}: sensed sum");
+        }
+    }
+}
+
+/// Tie-heavy corpus (each distinct vector appears 40x): merge order must
+/// fall back to global id ascending on equal scores, and the fleet must
+/// still match the bare chip bit for bit while doing so.
+#[test]
+fn tie_heavy_corpus_merges_by_global_id() {
+    let dim = 128;
+    let distinct = 8;
+    let reps = 40;
+    let n = distinct * reps;
+    let mut rng = Pcg::new(0x71E5);
+    let protos: Vec<Vec<f32>> = (0..distinct)
+        .map(|_| (0..dim).map(|_| rng.int_in(-128, 127) as f32 / 128.0).collect())
+        .collect();
+    // Interleave the prototypes so duplicates of one vector land on
+    // *different* cores/shards — the merge has real cross-shard ties.
+    let mut docs = Vec::with_capacity(n * dim);
+    for _ in 0..reps {
+        for p in &protos {
+            docs.extend_from_slice(p);
+        }
+    }
+    let db = quantize(&docs, n, dim, QuantScheme::Int8);
+    // Exhaustive chip (no clustering): every duplicate is scored.
+    let cfg = ChipConfig {
+        cores: 8,
+        map_points: 25,
+        ..ChipConfig::paper_default(dim, Metric::Mips)
+    };
+    let chip = DircChip::build(cfg.clone(), &db);
+    let fleet = DircFleet::build(cfg, &db, 4);
+
+    for seed in 0..4u64 {
+        let q = query(dim, 9000 + seed);
+        let k = 3 * reps; // deep enough to span many full tie groups
+        let plan = QueryPlan::topk(k).seed(seed).build().unwrap();
+        let want = chip.execute(&q, &plan);
+        let got = fleet.execute(&q, &plan);
+        let ctx = format!("tie corpus seed {seed}");
+        assert_topk_bits(&got.topk, &want.topk, &ctx);
+        // The total order really is (score desc, id asc) — with 40
+        // copies per vector the result is dominated by exact ties.
+        let mut ties = 0;
+        for w in got.topk.windows(2) {
+            assert!(w[0].score >= w[1].score, "{ctx}: scores descend");
+            if w[0].score == w[1].score {
+                assert!(w[0].doc_id < w[1].doc_id, "{ctx}: ties break by id asc");
+                ties += 1;
+            }
+        }
+        assert!(ties >= reps / 2, "{ctx}: tie-heavy fixture produced {ties} ties");
+    }
+}
+
+/// Shard-count invariance of batches: `DircFleet::execute_batch` draws
+/// nonces in query order exactly like the chip, so whole batches are
+/// bit-identical at 1, 2, and 4 shards and against the bare chip.
+#[test]
+fn batch_execution_invariant_across_shard_counts() {
+    let db = db_of(480, 128, 0xBA7C);
+    let cfg = clustered_cfg(8, 16);
+    let chip = DircChip::build(cfg.clone(), &db);
+    let queries: Vec<Vec<i8>> = (0..6).map(|i| query(128, 4000 + i)).collect();
+    let plan = QueryPlan::topk(8).prune(Prune::Default).seed(11).build().unwrap();
+    let want = chip.execute_batch(&queries, &plan);
+    for chips in [1usize, 2, 4] {
+        let fleet = DircFleet::build(cfg.clone(), &db, chips);
+        let got = fleet.execute_batch(&queries, &plan);
+        assert_eq!(got.len(), want.len());
+        for (qi, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_topk_bits(&g.topk, &w.topk, &format!("x{chips} query {qi}"));
+        }
+    }
+}

@@ -644,6 +644,229 @@ fn prop_remap_bijective_all_strategies() {
     });
 }
 
+// ---------------------------------------------------------------------
+// Multi-chip fleet properties (fleet::DircFleet).
+
+/// Shard-count invariance: for random (k, nprobe, query), the fleet's
+/// top-k ids *and score bits* are identical at 1, 2, and 4 shards and
+/// equal to the bare union chip's.
+#[test]
+fn prop_fleet_shard_count_invariance() {
+    let chip = clustered_chip(480, 8, 16);
+    let db_docs = rand_docs(480, 128, 8, 0xC1);
+    let fp: Vec<f32> = db_docs.iter().map(|&v| v as f32 / 128.0).collect();
+    let db = quantize(&fp, 480, 128, QuantScheme::Int8);
+    let cfg = ChipConfig {
+        cores: 8,
+        map_points: 25,
+        cluster: ClusterPolicy { n_clusters: 16, nprobe: 2, kmeans_iters: 6 },
+        ..ChipConfig::paper_default(128, Metric::Mips)
+    };
+    let fleets: Vec<dirc_rag::fleet::DircFleet> = [1usize, 2, 4]
+        .iter()
+        .map(|&s| dirc_rag::fleet::DircFleet::build(cfg.clone(), &db, s))
+        .collect();
+    forall(
+        cases(20),
+        gen_pair(gen_usize(1, 10), gen_pair(gen_usize(1, 16), gen_usize(0, 1000))),
+        |&(k, (nprobe, seed))| {
+            let mut qrng = Pcg::new(seed as u64 + 40);
+            let q: Vec<i8> = (0..128).map(|_| qrng.int_in(-128, 127) as i8).collect();
+            let prune = match seed % 3 {
+                0 => Prune::None,
+                1 => Prune::Default,
+                _ => Prune::Probe(nprobe),
+            };
+            let plan =
+                QueryPlan::topk(k).prune(prune).seed(seed as u64 + 11).build().unwrap();
+            let want = chip.execute(&q, &plan).topk;
+            fleets.iter().all(|fleet| {
+                let got = fleet.execute(&q, &plan).topk;
+                got.len() == want.len()
+                    && got.iter().zip(&want).all(|(a, b)| {
+                        a.doc_id == b.doc_id && a.score.to_bits() == b.score.to_bits()
+                    })
+            })
+        },
+    );
+}
+
+/// The fleet's cluster partition and id directory survive fleet-routed
+/// add/update/delete bursts: every live slot on every shard carries an
+/// in-range cluster, hosted-cluster bitsets match recomputation, global
+/// ids stay unique fleet-wide, the id directory points at the resident
+/// shard, and fresh ids respect the per-shard id lanes.
+#[test]
+fn prop_fleet_partition_survives_routed_churn() {
+    let base_n = 200u64;
+    let fleet_ok = |fleet: &dirc_rag::fleet::DircFleet| -> bool {
+        let stride = fleet.n_chips() as u64;
+        let mut ids = std::collections::HashSet::new();
+        let mut live_total = 0usize;
+        for (s, shard) in fleet.shards().iter().enumerate() {
+            let Some(index) = shard.cluster_index() else { return false };
+            let k = index.n_clusters();
+            for (c, core) in shard.cores().iter().enumerate() {
+                let clusters = core.slot_clusters();
+                if clusters.len() != core.doc_ids().len() {
+                    return false;
+                }
+                let mut hosted = vec![false; k];
+                for ((&cl, &l), &id) in
+                    clusters.iter().zip(core.live()).zip(core.doc_ids())
+                {
+                    if cl as usize >= k {
+                        return false;
+                    }
+                    if l {
+                        live_total += 1;
+                        hosted[cl as usize] = true;
+                        if !ids.insert(id) {
+                            return false; // a live doc placed twice fleet-wide
+                        }
+                        if fleet.shard_of(id) != Some(s) {
+                            return false; // directory points at the wrong shard
+                        }
+                        // Fresh ids come out of shard s's lane.
+                        if id >= base_n && (id - base_n) % stride != s as u64 {
+                            return false;
+                        }
+                    }
+                }
+                for (cl, &h) in hosted.iter().enumerate() {
+                    if index.core_has(c, cl as u32) != h {
+                        return false;
+                    }
+                }
+            }
+        }
+        live_total == fleet.n_docs()
+    };
+    forall(cases(6), gen_pair(gen_usize(0, 1000), gen_usize(1, 10)), |&(seed, burst)| {
+        let docs = rand_docs(base_n as usize, 128, 8, 0xF2);
+        let fp: Vec<f32> = docs.iter().map(|&v| v as f32 / 128.0).collect();
+        let db = quantize(&fp, base_n as usize, 128, QuantScheme::Int8);
+        let cfg = ChipConfig {
+            cores: 4,
+            map_points: 25,
+            cluster: ClusterPolicy { n_clusters: 8, nprobe: 2, kmeans_iters: 6 },
+            ..ChipConfig::paper_default(128, Metric::Mips)
+        };
+        let n_chips = if seed % 2 == 0 { 2 } else { 4 };
+        let mut fleet = dirc_rag::fleet::DircFleet::build(cfg, &db, n_chips);
+        if !fleet_ok(&fleet) {
+            return false;
+        }
+        let mut rng = Pcg::new(seed as u64);
+        let mut wrng = Pcg::new(seed as u64 + 1);
+        for _ in 0..3 {
+            let adds: Vec<DocPayload> = (0..burst)
+                .map(|_| {
+                    DocPayload::from_values(
+                        (0..128).map(|_| rng.int_in(-128, 127) as i8).collect(),
+                    )
+                })
+                .collect();
+            let (new_ids, st) = fleet.add_docs(&adds, &mut wrng).expect("add burst");
+            if st.docs_added != burst || new_ids.len() != burst {
+                return false;
+            }
+            let updates: Vec<(u64, DocPayload)> = (0..burst)
+                .map(|_| {
+                    let id = rng.index(base_n as usize) as u64;
+                    (
+                        id,
+                        DocPayload::from_values(
+                            (0..128).map(|_| rng.int_in(-128, 127) as i8).collect(),
+                        ),
+                    )
+                })
+                .collect();
+            fleet.update_docs(&updates, &mut wrng).expect("update burst");
+            let mut dels: Vec<u64> = new_ids.iter().step_by(2).copied().collect();
+            dels.push(9_999_999); // never-resident id: counts missing only
+            let st = fleet.delete_docs(&dels);
+            if st.missing_ids != 1 {
+                return false;
+            }
+            if !fleet_ok(&fleet) {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+/// Pruned fleet retrieval is exactly exhaustive fleet retrieval
+/// restricted to the probed shards' probed macros: the fleet-level
+/// mirror of `prop_pruned_equals_exhaustive_restricted_to_probed`, with
+/// the candidate set unioned across exactly the shards the route
+/// targets.
+#[test]
+fn prop_fleet_pruned_equals_exhaustive_restricted_to_probed_shards() {
+    let docs = rand_docs(480, 128, 8, 0xC1);
+    let fp: Vec<f32> = docs.iter().map(|&v| v as f32 / 128.0).collect();
+    let db = quantize(&fp, 480, 128, QuantScheme::Int8);
+    let cfg = ChipConfig {
+        cores: 8,
+        map_points: 25,
+        cluster: ClusterPolicy { n_clusters: 16, nprobe: 2, kmeans_iters: 6 },
+        ..ChipConfig::paper_default(128, Metric::Mips)
+    };
+    let fleet = dirc_rag::fleet::DircFleet::build(cfg, &db, 4);
+    let n = fleet.n_docs();
+    forall(
+        cases(18),
+        gen_pair(gen_usize(1, 15), gen_pair(gen_usize(1, 12), gen_usize(0, 1000))),
+        |&(nprobe, (k, seed))| {
+            let mut qrng = Pcg::new(seed as u64 + 70);
+            let q: Vec<i8> = (0..128).map(|_| qrng.int_in(-128, 127) as i8).collect();
+            let s = seed as u64 + 6000;
+            let pruned = fleet
+                .execute(
+                    &q,
+                    &QueryPlan::topk(k)
+                        .prune(Prune::Probe(nprobe))
+                        .seed(s)
+                        .build()
+                        .unwrap(),
+                )
+                .topk;
+            let full = fleet
+                .execute(&q, &QueryPlan::topk(n).prune(Prune::None).seed(s).build().unwrap())
+                .topk;
+            let route = fleet.route(&q, k, Prune::Probe(nprobe));
+            if route.sub_prune == Prune::None {
+                // Degenerate route -> the pruned plan ran exhaustively.
+                return pruned == full[..k.min(full.len())];
+            }
+            // Candidate set: on each targeted shard, the docs its own
+            // macro mask probes (a shard falling back to exhaustive
+            // contributes all its live docs).
+            let mut probed = std::collections::HashSet::new();
+            for (s, shard) in fleet.shards().iter().enumerate() {
+                if !route.targets[s] {
+                    continue;
+                }
+                match shard.macro_mask(&q, route.sub_prune) {
+                    Some(mask) => probed.extend(probed_ids(shard, &mask)),
+                    None => probed.extend(probed_ids(
+                        shard,
+                        &vec![true; shard.cores().len()],
+                    )),
+                }
+            }
+            let want: Vec<_> = full
+                .iter()
+                .filter(|d| probed.contains(&d.doc_id))
+                .take(k)
+                .cloned()
+                .collect();
+            pruned == want
+        },
+    );
+}
+
 /// Structural property of adaptive early termination: `Prune::Adaptive`
 /// never invents a candidate set — it only picks WHERE to stop along the
 /// centroid ranking. With a zero margin the stop is disarmed and the

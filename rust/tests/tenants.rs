@@ -1,0 +1,172 @@
+//! Multi-tenant QoS integration tests: weighted deficit-round-robin
+//! admission through the full coordinator (submit_for -> ingest ->
+//! per-tenant DRR work queues -> worker), per-tenant plan templates, and
+//! the per-tenant metrics identity (tenant counters sum to the globals).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use dirc_rag::coordinator::batcher::BatchPolicy;
+use dirc_rag::coordinator::{
+    Coordinator, CoordinatorConfig, Engine, Query, SimEngine, TenantSpec,
+};
+use dirc_rag::dirc::chip::ChipConfig;
+use dirc_rag::retrieval::plan::QueryPlan;
+use dirc_rag::retrieval::quant::{quantize, random_unit_rows, QuantScheme, Quantized};
+use dirc_rag::retrieval::score::Metric;
+use dirc_rag::util::rng::Pcg;
+
+fn db(n: usize, dim: usize, seed: u64) -> Quantized {
+    let mut rng = Pcg::new(seed);
+    let fp = random_unit_rows(n, dim, &mut rng);
+    quantize(&fp, n, dim, QuantScheme::Int8)
+}
+
+fn emb(dim: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg::new(seed);
+    (0..dim).map(|_| rng.normal() as f32).collect()
+}
+
+/// Saturating two-tenant load at weights 3:1 on one worker: among the
+/// earliest completions the served counts must split (close to) 3:1 —
+/// the DRR guarantee — and the per-tenant snapshot counters must sum to
+/// the global ones at shutdown.
+#[test]
+fn weighted_tenants_complete_near_their_drr_shares() {
+    let dim = 128;
+    let base = db(1536, dim, 1);
+    let engine = Arc::new(SimEngine::new(
+        ChipConfig { cores: 4, map_points: 30, ..ChipConfig::paper_default(dim, Metric::Mips) },
+        &base,
+    ));
+    let ccfg = CoordinatorConfig {
+        workers: 1,
+        // Hold ingest flushes to 32-query batches so the work queues fill
+        // much faster than one worker drains them — the fairness ratio is
+        // only defined under saturation.
+        batch: BatchPolicy { sizes: vec![32], max_wait: Duration::from_millis(20) },
+        tenants: vec![
+            TenantSpec { name: "gold".into(), weight: 3, plan: None },
+            TenantSpec { name: "best_effort".into(), weight: 1, plan: None },
+        ],
+        ..CoordinatorConfig::default()
+    };
+    let coord = Coordinator::start_sim(engine as Arc<dyn Engine>, ccfg);
+    assert_eq!(coord.tenant_names(), vec!["gold".to_string(), "best_effort".to_string()]);
+
+    // 360 queries per tenant, submitted interleaved (so both DRR queues
+    // fill together and neither ever idles while measured).
+    let per_tenant = 360usize;
+    let mut pending = Vec::with_capacity(per_tenant * 2);
+    for i in 0..per_tenant {
+        for name in ["gold", "best_effort"] {
+            let (_, rx) = coord
+                .submit_for(name, Query::Embedding(emb(dim, 100 + i as u64)))
+                .expect("submit");
+            pending.push((name, Some(rx)));
+        }
+    }
+
+    // Sweep the response channels until ~240 queries have completed.
+    // Only stop at sweep boundaries: a full sweep's collected set is
+    // exactly the served-so-far set (regardless of sweep order), so its
+    // tenant split reflects the DRR serving order without bias.
+    let measure = 240usize;
+    let mut gold = 0usize;
+    let mut best_effort = 0usize;
+    while gold + best_effort < measure {
+        let mut progressed = false;
+        for (name, rx) in pending.iter_mut() {
+            let Some(ch) = rx else { continue };
+            if let Ok(resp) = ch.try_recv() {
+                assert_eq!(resp.topk.len(), 10, "default plan template");
+                match *name {
+                    "gold" => gold += 1,
+                    _ => best_effort += 1,
+                }
+                *rx = None;
+                progressed = true;
+            }
+        }
+        if !progressed {
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+    let ratio = gold as f64 / best_effort.max(1) as f64;
+    assert!(
+        (2.7..=3.3).contains(&ratio),
+        "completed {gold}:{best_effort} (ratio {ratio:.2}) — expected within 10% of 3:1"
+    );
+
+    // Drain the rest, then check the metrics identity on the final
+    // snapshot: per-tenant served/errors sum to the global counters.
+    for (_, rx) in pending.iter_mut() {
+        if let Some(ch) = rx.take() {
+            ch.recv().expect("response");
+        }
+    }
+    let snap = coord.shutdown();
+    assert_eq!(snap.served, (per_tenant * 2) as u64);
+    assert_eq!(snap.errors, 0);
+    assert_eq!(snap.tenants.len(), 2);
+    let served_sum: u64 = snap.tenants.iter().map(|t| t.served).sum();
+    let errors_sum: u64 = snap.tenants.iter().map(|t| t.errors).sum();
+    assert_eq!(served_sum, snap.served, "tenant served counters sum to global");
+    assert_eq!(errors_sum, snap.errors, "tenant error counters sum to global");
+    for t in &snap.tenants {
+        assert_eq!(t.served, per_tenant as u64, "both tenants fully drained");
+        assert!(t.host_latency_mean_s > 0.0, "tenant {} latency tracked", t.name);
+    }
+}
+
+/// Per-tenant QueryPlan templates: a tenant with its own plan serves
+/// under it, a tenant without one inherits the coordinator's default
+/// template, and unknown tenant names are rejected at submit.
+#[test]
+fn tenant_plan_templates_and_unknown_tenants() {
+    let dim = 128;
+    let base = db(256, dim, 2);
+    let engine = Arc::new(SimEngine::new(
+        ChipConfig { cores: 2, map_points: 25, ..ChipConfig::paper_default(dim, Metric::Mips) },
+        &base,
+    ));
+    let ccfg = CoordinatorConfig {
+        workers: 1,
+        tenants: vec![
+            TenantSpec {
+                name: "gold".into(),
+                weight: 3,
+                plan: Some(QueryPlan::topk(3).seed(9).build().unwrap()),
+            },
+            TenantSpec { name: "free".into(), weight: 1, plan: None },
+        ],
+        default_plan: QueryPlan::topk(4).build().unwrap(),
+        ..CoordinatorConfig::default()
+    };
+    let coord = Coordinator::start_sim(engine as Arc<dyn Engine>, ccfg);
+
+    let (_, rx_gold) =
+        coord.submit_for("gold", Query::Embedding(emb(dim, 5))).expect("gold submit");
+    let (_, rx_free) =
+        coord.submit_for("free", Query::Embedding(emb(dim, 6))).expect("free submit");
+    assert_eq!(rx_gold.recv().unwrap().topk.len(), 3, "tenant template plan");
+    assert_eq!(rx_free.recv().unwrap().topk.len(), 4, "default template plan");
+    assert!(
+        coord.submit_for("platinum", Query::Embedding(emb(dim, 7))).is_err(),
+        "unknown tenants are rejected"
+    );
+
+    // Plain submit() still works on a multi-tenant coordinator: it books
+    // under the first tenant with an explicit plan.
+    let (_, rx) = coord
+        .submit(Query::Embedding(emb(dim, 8)), QueryPlan::topk(2).build().unwrap())
+        .expect("submit");
+    assert_eq!(rx.recv().unwrap().topk.len(), 2);
+
+    let snap = coord.shutdown();
+    assert_eq!(snap.served, 3);
+    let by_name: std::collections::HashMap<_, _> =
+        snap.tenants.iter().map(|t| (t.name.as_str(), t.served)).collect();
+    assert_eq!(by_name["gold"], 2, "submit() books under tenant 0");
+    assert_eq!(by_name["free"], 1);
+}
