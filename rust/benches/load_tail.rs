@@ -1,0 +1,368 @@
+//! Trace-driven tail-latency harness: seeded Zipfian/bursty mixed
+//! query+mutation traffic through (a) the deterministic queueing-aware
+//! latency model and (b) the live coordinator, with per-tenant
+//! p50/p95/p99 accounting. Emits the `BENCH_9.json` artifact (override
+//! the path with `DIRC_BENCH_OUT`).
+//!
+//! ```bash
+//! cargo bench --bench load_tail
+//! ```
+//!
+//! Gates:
+//!
+//! * the trace generator is deterministic: two generations from one
+//!   seed have equal digests, and two queueing-model runs over them
+//!   report bit-identical percentiles;
+//! * every reported percentile set is finite and monotone
+//!   (p50 <= p95 <= p99), per tenant and globally, in both the model
+//!   and the live coordinator snapshot;
+//! * tail isolation: with a 3:1 gold:light DRR mix saturated at 1.5x
+//!   modeled capacity, the light tenant's modeled p99 stays within
+//!   `DIRC_BENCH_TAIL_FACTOR` (default 25x) of its unloaded p99, and
+//!   under the gold tenant's p99 — the heavy tenant cannot export its
+//!   queueing tail;
+//! * the live replay pushes the full trace (>= 10k queries) through
+//!   `Coordinator::submit_for` and every submission completes, with the
+//!   per-tenant served counters summing to the global.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use dirc_rag::bench::{fmt_duration, Bench, Table};
+use dirc_rag::coordinator::batcher::BatchPolicy;
+use dirc_rag::coordinator::{
+    Coordinator, CoordinatorConfig, Engine, SimEngine, TenantSpec,
+};
+use dirc_rag::data::{SynthDataset, SynthParams};
+use dirc_rag::dirc::chip::ChipConfig;
+use dirc_rag::retrieval::quant::{quantize, QuantScheme};
+use dirc_rag::retrieval::score::Metric;
+use dirc_rag::retrieval::QueryPlan;
+use dirc_rag::util::json::Json;
+use dirc_rag::workload::{
+    queueing, runner, LoadReport, QueueModelConfig, Trace, TraceConfig,
+};
+
+const N_DOCS: usize = 2048;
+const DIM: usize = 256;
+const DISTINCT: usize = 192;
+const TENANT_NAMES: [&str; 2] = ["gold", "light"];
+const WEIGHTS: [u32; 2] = [3, 1];
+/// Gold floods with 90% of arrivals but only 75% of the DRR capacity —
+/// the light tenant's guaranteed share keeps its own load modest.
+const MIX: [f64; 2] = [0.9, 0.1];
+
+fn assert_monotone(label: &str, p50: f64, p95: f64, p99: f64) {
+    assert!(
+        p50.is_finite() && p95.is_finite() && p99.is_finite(),
+        "{label}: non-finite percentile ({p50} / {p95} / {p99})"
+    );
+    assert!(
+        p50 <= p95 && p95 <= p99,
+        "{label}: percentiles not monotone (p50 {p50} / p95 {p95} / p99 {p99})"
+    );
+}
+
+fn check_report(label: &str, rep: &LoadReport) {
+    assert_monotone(&format!("{label} global"), rep.global.p50_s, rep.global.p95_s, rep.global.p99_s);
+    for t in &rep.tenants {
+        assert_monotone(&format!("{label} tenant {}", t.name), t.p50_s, t.p95_s, t.p99_s);
+        assert!(t.p50_s > 0.0, "{label} tenant {}: zero p50", t.name);
+    }
+}
+
+fn main() {
+    let fast = std::env::var("DIRC_BENCH_FAST").ok().as_deref() == Some("1");
+    let tail_factor: f64 = std::env::var("DIRC_BENCH_TAIL_FACTOR")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(25.0);
+    // The acceptance floor: >= 10k queries through the coordinator even
+    // in fast mode.
+    let events = if fast { 10_000 } else { 16_000 };
+
+    eprintln!("generating {N_DOCS} x {DIM} corpus + building chip...");
+    let params = SynthParams {
+        topics: 32,
+        doc_noise: 0.5,
+        rels_per_query: 1,
+        extra_rel_range: 1,
+        query_noise: 0.5,
+        confuse: 0.5,
+        aniso: 1.0,
+        seed: 909,
+    };
+    let ds = SynthDataset::generate(N_DOCS, DISTINCT, DIM, &params);
+    let db = quantize(&ds.docs, N_DOCS, DIM, QuantScheme::Int8);
+    let chip_cfg = ChipConfig {
+        map_points: if fast { 40 } else { 80 },
+        ..ChipConfig::paper_default(DIM, Metric::Cosine)
+    };
+    let pool = Arc::new(dirc_rag::util::pool::ThreadPool::new(
+        dirc_rag::util::pool::default_threads(),
+    ));
+    let engine = Arc::new(SimEngine::with_pool(chip_cfg, &db, Some(pool)));
+
+    // Per-distinct-query service times from the cycle model, one seeded
+    // batch execution over the query pool.
+    let plan = QueryPlan::topk(10).seed(17).build().expect("plan");
+    let queries_i8: Vec<Vec<i8>> = (0..DISTINCT)
+        .map(|qi| quantize(ds.query(qi), 1, DIM, QuantScheme::Int8).values)
+        .collect();
+    let outs = engine.chip().execute_batch(&queries_i8, &plan);
+    let service_s: Vec<f64> = outs.iter().map(|o| o.stats.latency_s).collect();
+    let mean_service = service_s.iter().sum::<f64>() / service_s.len() as f64;
+
+    let workers = 2usize;
+    let capacity_qps = workers as f64 / mean_service;
+    let qcfg = QueueModelConfig {
+        workers,
+        batch_max: 32,
+        batch_max_wait_s: 20e-6,
+        run_max: 8,
+        weights: WEIGHTS.to_vec(),
+        tenant_names: TENANT_NAMES.iter().map(|s| s.to_string()).collect(),
+        mutation_max_defer_s: 500e-6,
+        write_s_per_doc: 100e-6,
+    };
+    let trace_cfg = |qps: f64| TraceConfig {
+        n_queries: events,
+        distinct_queries: DISTINCT,
+        n_docs: N_DOCS,
+        zipf_exponent: 1.1,
+        target_qps: qps,
+        tenant_mix: MIX.to_vec(),
+        mutate_every: 500,
+        mutation_docs: 8,
+        storm_mutations: 8,
+        seed: 0xB9,
+        ..TraceConfig::default()
+    };
+
+    let mut b = Bench::new();
+
+    // --- Determinism gate: trace schedule + model percentiles ---------
+    let sat_cfg = trace_cfg(1.5 * capacity_qps);
+    let trace = Trace::generate(&sat_cfg);
+    assert!(trace.n_queries() >= 10_000, "acceptance floor: >= 10k queries");
+    assert_eq!(
+        trace.digest(),
+        Trace::generate(&sat_cfg).digest(),
+        "identical seeds must reproduce identical trace schedules"
+    );
+    let saturated = queueing::simulate(&trace, &service_s, &qcfg);
+    {
+        let again = queueing::simulate(&Trace::generate(&sat_cfg), &service_s, &qcfg);
+        assert_eq!(
+            saturated.digest(),
+            again.digest(),
+            "identical runs must report bit-identical percentiles"
+        );
+        for (a, c) in saturated.tenants.iter().zip(&again.tenants) {
+            assert_eq!(a.p99_s.to_bits(), c.p99_s.to_bits(), "tenant {} p99 drifted", a.name);
+        }
+    }
+
+    // --- Queueing-model arms: unloaded vs saturated -------------------
+    let unloaded_cfg = trace_cfg(0.02 * capacity_qps);
+    let unloaded = queueing::simulate(&Trace::generate(&unloaded_cfg), &service_s, &qcfg);
+    let model_s = b
+        .run("queueing model (saturated trace)", || {
+            queueing::simulate(&Trace::generate(&sat_cfg), &service_s, &qcfg).global.queries
+        })
+        .summary
+        .median;
+    check_report("unloaded", &unloaded);
+    check_report("saturated", &saturated);
+
+    let light_sat = &saturated.tenants[1];
+    let light_un = &unloaded.tenants[1];
+    let gold_sat = &saturated.tenants[0];
+    assert!(gold_sat.queries > light_sat.queries, "mix must skew toward gold");
+
+    println!("\n=== load_tail: trace-driven tails, {events} queries/arm ===");
+    println!(
+        "service: mean {} / capacity {:.0} qps ({} workers); offered saturated {:.0} qps, \
+         unloaded {:.0} qps",
+        fmt_duration(mean_service),
+        capacity_qps,
+        workers,
+        saturated.offered_qps,
+        unloaded.offered_qps
+    );
+    let mut t = Table::new(&["arm / tenant", "n", "p50", "p95", "p99", "max"]);
+    for (arm, rep) in [("unloaded", &unloaded), ("saturated", &saturated)] {
+        for tl in std::iter::once(&rep.global).chain(rep.tenants.iter()) {
+            t.row(&[
+                format!("{arm} {}", tl.name),
+                format!("{}", tl.queries),
+                fmt_duration(tl.p50_s),
+                fmt_duration(tl.p95_s),
+                fmt_duration(tl.p99_s),
+                fmt_duration(tl.max_s),
+            ]);
+        }
+    }
+    t.print();
+    print!("{}", saturated.render());
+
+    // --- Tail-isolation gates -----------------------------------------
+    let inflation = light_sat.p99_s / light_un.p99_s.max(1e-12);
+    assert!(
+        inflation <= tail_factor,
+        "light tenant p99 inflated {inflation:.1}x under saturation \
+         (gate {tail_factor}x): {:.2} µs -> {:.2} µs",
+        light_un.p99_s * 1e6,
+        light_sat.p99_s * 1e6
+    );
+    assert!(
+        light_sat.p99_s <= gold_sat.p99_s,
+        "DRR must keep the light tenant's tail under the flooding tenant's: \
+         light {:.2} µs vs gold {:.2} µs",
+        light_sat.p99_s * 1e6,
+        gold_sat.p99_s * 1e6
+    );
+    println!(
+        "tail isolation: light p99 {} unloaded -> {} saturated ({inflation:.1}x, \
+         gate {tail_factor}x); gold p99 {}",
+        fmt_duration(light_un.p99_s),
+        fmt_duration(light_sat.p99_s),
+        fmt_duration(gold_sat.p99_s)
+    );
+
+    // --- Live replay through the coordinator ---------------------------
+    eprintln!("replaying {} events against the live coordinator...", trace.events.len());
+    let ccfg = CoordinatorConfig {
+        workers,
+        batch: BatchPolicy { sizes: vec![32], max_wait: Duration::from_millis(2) },
+        tenants: vec![
+            TenantSpec { name: "gold".into(), weight: 3, plan: None },
+            TenantSpec { name: "light".into(), weight: 1, plan: None },
+        ],
+        default_plan: plan.clone(),
+        ..CoordinatorConfig::default()
+    };
+    let coord = Coordinator::start_sim(Arc::clone(&engine) as Arc<dyn Engine>, ccfg);
+    let queries_fp: Vec<Vec<f32>> =
+        (0..DISTINCT).map(|qi| ds.query(qi).to_vec()).collect();
+    let tenant_names: Vec<String> = TENANT_NAMES.iter().map(|s| s.to_string()).collect();
+    let live_wall = std::time::Instant::now();
+    let rep = runner::replay(
+        &coord,
+        &trace,
+        &tenant_names,
+        &queries_fp,
+        DIM,
+        &runner::ReplayOptions::default(),
+    )
+    .expect("live replay");
+    let live_s = live_wall.elapsed().as_secs_f64();
+    let snap = coord.shutdown();
+
+    assert_eq!(
+        rep.queries_completed,
+        trace.n_queries() as u64,
+        "every live submission must complete ({} errors)",
+        rep.query_errors
+    );
+    assert_eq!(rep.query_errors, 0, "no submit/recv errors");
+    assert_eq!(snap.served, rep.queries_completed, "snapshot counts every query");
+    let served_sum: u64 = snap.tenants.iter().map(|t| t.served).sum();
+    assert_eq!(served_sum, snap.served, "per-tenant served sums to global");
+    assert_monotone(
+        "live global",
+        snap.host_latency_p50_s,
+        snap.host_latency_p95_s,
+        snap.host_latency_p99_s,
+    );
+    for ts in &snap.tenants {
+        assert_monotone(
+            &format!("live tenant {}", ts.name),
+            ts.host_latency_p50_s,
+            ts.host_latency_p95_s,
+            ts.host_latency_p99_s,
+        );
+    }
+    println!(
+        "live replay: {} queries + {} mutations in {} ({:.0} qps wall); \
+         host p50/p95/p99 {} / {} / {}",
+        rep.queries_completed,
+        rep.mutations_completed,
+        fmt_duration(live_s),
+        rep.queries_completed as f64 / live_s.max(1e-9),
+        fmt_duration(snap.host_latency_p50_s),
+        fmt_duration(snap.host_latency_p95_s),
+        fmt_duration(snap.host_latency_p99_s),
+    );
+
+    // --- Artifact -------------------------------------------------------
+    let tenant_json = |tl: &dirc_rag::workload::TenantLoad| {
+        Json::obj(vec![
+            ("name", Json::str(&tl.name)),
+            ("queries", Json::num(tl.queries as f64)),
+            ("p50_s", Json::num(tl.p50_s)),
+            ("p95_s", Json::num(tl.p95_s)),
+            ("p99_s", Json::num(tl.p99_s)),
+            ("max_s", Json::num(tl.max_s)),
+            ("mean_batch_wait_s", Json::num(tl.mean_batch_wait_s)),
+            ("mean_queue_wait_s", Json::num(tl.mean_queue_wait_s)),
+            ("mean_write_stall_s", Json::num(tl.mean_write_stall_s)),
+            ("mean_service_s", Json::num(tl.mean_service_s)),
+        ])
+    };
+    let arm_json = |rep: &LoadReport| {
+        Json::obj(vec![
+            ("offered_qps", Json::num(rep.offered_qps)),
+            ("makespan_s", Json::num(rep.makespan_s)),
+            ("mutations", Json::num(rep.mutations as f64)),
+            ("global", tenant_json(&rep.global)),
+            ("tenants", Json::arr(rep.tenants.iter().map(tenant_json).collect())),
+        ])
+    };
+    let out = std::env::var("DIRC_BENCH_OUT")
+        .unwrap_or_else(|_| concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_9.json").into());
+    let json = Json::obj(vec![
+        ("bench", Json::str("load_tail")),
+        (
+            "workload",
+            Json::obj(vec![
+                ("events", Json::num(events as f64)),
+                ("distinct_queries", Json::num(DISTINCT as f64)),
+                ("docs", Json::num(N_DOCS as f64)),
+                ("dim", Json::num(DIM as f64)),
+                ("zipf_exponent", Json::num(1.1)),
+                ("tenant_weights", Json::arr(WEIGHTS.iter().map(|&w| Json::num(f64::from(w))).collect())),
+                ("tenant_mix", Json::arr(MIX.iter().map(|&m| Json::num(m)).collect())),
+                ("trace_digest", Json::str(&format!("{:016x}", trace.digest()))),
+            ]),
+        ),
+        (
+            "model",
+            Json::obj(vec![
+                ("capacity_qps", Json::num(capacity_qps)),
+                ("mean_service_s", Json::num(mean_service)),
+                ("model_run_s", Json::num(model_s)),
+                ("unloaded", arm_json(&unloaded)),
+                ("saturated", arm_json(&saturated)),
+                ("light_p99_inflation", Json::num(inflation)),
+                ("tail_factor_gate", Json::num(tail_factor)),
+            ]),
+        ),
+        (
+            "live",
+            Json::obj(vec![
+                ("queries", Json::num(rep.queries_completed as f64)),
+                ("mutations", Json::num(rep.mutations_completed as f64)),
+                ("mutations_skipped", Json::num(rep.mutations_skipped as f64)),
+                ("wall_s", Json::num(live_s)),
+                ("host_p50_s", Json::num(snap.host_latency_p50_s)),
+                ("host_p95_s", Json::num(snap.host_latency_p95_s)),
+                ("host_p99_s", Json::num(snap.host_latency_p99_s)),
+            ]),
+        ),
+    ]);
+    std::fs::write(&out, json.to_string_pretty()).expect("write bench artifact");
+    println!("wrote {out}");
+
+    b.report("load_tail");
+}

@@ -51,15 +51,22 @@ struct TenantCounters {
     served: u64,
     errors: u64,
     host_latency: Welford,
+    host_hist: Histogram,
 }
 
-/// Per-tenant slice of the serving counters.
+/// Per-tenant slice of the serving counters, tails included: each tenant
+/// owns a log-bucketed latency histogram, so DRR starvation of one
+/// tenant shows up in *its* p95/p99 instead of vanishing into the
+/// global mean.
 #[derive(Debug, Clone)]
 pub struct TenantSnapshot {
     pub name: String,
     pub served: u64,
     pub errors: u64,
     pub host_latency_mean_s: f64,
+    pub host_latency_p50_s: f64,
+    pub host_latency_p95_s: f64,
+    pub host_latency_p99_s: f64,
 }
 
 /// Snapshot of metrics at a point in time.
@@ -70,7 +77,9 @@ pub struct Snapshot {
     pub uptime_s: f64,
     pub qps: f64,
     pub host_latency_mean_s: f64,
+    pub host_latency_p50_s: f64,
     pub host_latency_p95_s: f64,
+    pub host_latency_p99_s: f64,
     pub embed_mean_s: f64,
     pub retrieve_mean_s: f64,
     pub sim_latency_mean_s: f64,
@@ -129,6 +138,7 @@ impl Metrics {
                 served: 0,
                 errors: 0,
                 host_latency: Welford::default(),
+                host_hist: Histogram::latency(),
             })
             .collect();
         Metrics {
@@ -136,7 +146,7 @@ impl Metrics {
                 served: 0,
                 errors: 0,
                 host_latency: Welford::default(),
-                host_hist: Histogram::new(100e-6, 10_000), // 100 µs buckets, 1 s span
+                host_hist: Histogram::latency(),
                 embed_s: Welford::default(),
                 retrieve_s: Welford::default(),
                 sim_latency_s: Welford::default(),
@@ -182,6 +192,7 @@ impl Metrics {
         if let Some(t) = m.tenants.get_mut(tenant) {
             t.served += 1;
             t.host_latency.push(resp.total_s);
+            t.host_hist.record(resp.total_s);
         }
     }
 
@@ -218,7 +229,9 @@ impl Metrics {
             uptime_s: uptime,
             qps: m.served as f64 / uptime.max(1e-9),
             host_latency_mean_s: m.host_latency.mean(),
+            host_latency_p50_s: m.host_hist.percentile(50.0),
             host_latency_p95_s: m.host_hist.percentile(95.0),
+            host_latency_p99_s: m.host_hist.percentile(99.0),
             embed_mean_s: m.embed_s.mean(),
             retrieve_mean_s: m.retrieve_s.mean(),
             sim_latency_mean_s: m.sim_latency_s.mean(),
@@ -243,6 +256,9 @@ impl Metrics {
                     served: t.served,
                     errors: t.errors,
                     host_latency_mean_s: t.host_latency.mean(),
+                    host_latency_p50_s: t.host_hist.percentile(50.0),
+                    host_latency_p95_s: t.host_hist.percentile(95.0),
+                    host_latency_p99_s: t.host_hist.percentile(99.0),
                 })
                 .collect(),
         }
@@ -254,7 +270,7 @@ impl Snapshot {
         let mut out = format!(
             concat!(
                 "served={} errors={} uptime={:.1}s qps={:.1}\n",
-                "host latency: mean {:.3} ms, p95 {:.3} ms ",
+                "host latency: mean {:.3} ms, p50 {:.3} ms, p95 {:.3} ms, p99 {:.3} ms ",
                 "(embed {:.3} ms, retrieve {:.3} ms)\n",
                 "simulated chip: latency {:.2} µs/query, energy {:.3} µJ/query, ",
                 "{} flips, {} re-senses\n",
@@ -268,7 +284,9 @@ impl Snapshot {
             self.uptime_s,
             self.qps,
             self.host_latency_mean_s * 1e3,
+            self.host_latency_p50_s * 1e3,
             self.host_latency_p95_s * 1e3,
+            self.host_latency_p99_s * 1e3,
             self.embed_mean_s * 1e3,
             self.retrieve_mean_s * 1e3,
             self.sim_latency_mean_s * 1e6,
@@ -290,11 +308,15 @@ impl Snapshot {
         if self.tenants.len() > 1 {
             for t in &self.tenants {
                 out.push_str(&format!(
-                    "tenant {}: served={} errors={} mean latency {:.3} ms\n",
+                    "tenant {}: served={} errors={} latency mean {:.3} ms, \
+                     p50 {:.3} ms, p95 {:.3} ms, p99 {:.3} ms\n",
                     t.name,
                     t.served,
                     t.errors,
                     t.host_latency_mean_s * 1e3,
+                    t.host_latency_p50_s * 1e3,
+                    t.host_latency_p95_s * 1e3,
+                    t.host_latency_p99_s * 1e3,
                 ));
             }
         }
@@ -357,6 +379,12 @@ mod tests {
         assert_eq!(s.served, 10);
         assert_eq!(s.errors, 1);
         assert!((s.host_latency_mean_s - 5.5e-3).abs() < 1e-6);
+        // Tails: finite, monotone, inside the observed [1, 10] ms range.
+        assert!(s.host_latency_p50_s.is_finite());
+        assert!(s.host_latency_p50_s <= s.host_latency_p95_s);
+        assert!(s.host_latency_p95_s <= s.host_latency_p99_s);
+        assert!(s.host_latency_p99_s <= 1e-2 + 1e-9);
+        assert!(s.host_latency_p50_s >= 1e-3 - 1e-9);
         assert_eq!(s.sim_flips, 30);
         assert_eq!(s.sim_resenses, 10);
         assert_eq!(s.macros_sensed, 160);
@@ -437,9 +465,19 @@ mod tests {
         assert_eq!(s.tenants[1].errors, 1);
         assert_eq!(s.tenants.iter().map(|t| t.served).sum::<u64>(), s.served);
         assert_eq!(s.tenants.iter().map(|t| t.errors).sum::<u64>(), s.errors);
+        // Per-tenant tails come from per-tenant histograms: tenant a's
+        // tail sits near its own 1 ms latency, not the global mix.
+        for t in &s.tenants {
+            assert!(t.host_latency_p50_s.is_finite());
+            assert!(t.host_latency_p50_s <= t.host_latency_p95_s);
+            assert!(t.host_latency_p95_s <= t.host_latency_p99_s);
+        }
+        assert!(s.tenants[0].host_latency_p99_s <= 1e-3 + 1e-9);
+        assert!(s.tenants[1].host_latency_p50_s >= 2e-3 - 1e-9);
         let text = s.render();
         assert!(text.contains("tenant a: served=3 errors=0"));
         assert!(text.contains("tenant b: served=1 errors=1"));
+        assert!(text.contains("p99"));
     }
 
     #[test]

@@ -184,6 +184,23 @@
 //! `benches/fleet_scaling.rs` gates per-chip sensed work shrinking as
 //! shards are added (`BENCH_8.json`).
 //!
+//! ## Load testing & tail latency
+//!
+//! Throughput means little to an edge deployment that provisions for
+//! p99. The [`workload`] module generates deterministic trace-driven
+//! load — Zipfian query/document popularity, bursty Markov-modulated
+//! arrivals, mixed query/mutate traffic with churn storms, all on
+//! seeded [`util::rng::Pcg`] streams — and accounts for its tails two
+//! ways: a virtual-clock queueing model ([`workload::queueing`])
+//! composing the cycle model's per-query service time with ingest
+//! batch-formation delay, per-tenant DRR queue wait and
+//! mutation-admission stalls ([`sim::cycles::ServingLatency`]), and a
+//! live replay ([`workload::runner`]) driving the real coordinator.
+//! Per-tenant p50/p95/p99 surface in the coordinator snapshot via
+//! log-bucketed [`util::stats::Histogram`]s; the `loadgen` CLI runs
+//! both halves and `benches/load_tail.rs` gates tail isolation under
+//! saturation (`BENCH_9.json`).
+//!
 //! Tier-1 verification: `cargo build --release && cargo test -q` from the
 //! repository root (no artifacts or PJRT backend required — see
 //! [`runtime::xla_stub`]).
@@ -210,6 +227,9 @@
 //!   (Sec III.B ablation), CIM technology comparison (Fig 2).
 //! * [`data`] — synthetic BEIR-like corpora and the embedding front-end.
 //! * [`eval`] — Precision@k evaluation harness (Table II, Fig 6).
+//! * [`workload`] — deterministic trace-driven load generation (Zipf,
+//!   bursty arrivals, churn) with queueing-model and live-replay
+//!   tail-latency accounting.
 //! * [`bench`] — the statistics harness used by `cargo bench`
 //!   (criterion replacement; see DESIGN.md environment substitutions).
 
@@ -224,6 +244,7 @@ pub mod retrieval;
 pub mod runtime;
 pub mod sim;
 pub mod util;
+pub mod workload;
 
 /// Crate-wide result type.
 pub type Result<T> = anyhow::Result<T>;

@@ -11,6 +11,9 @@
 //! * `ingest`   — online corpus-ingest demo: live add/update/delete
 //!   bursts through the serve-mode mutation channel interleaved with
 //!   query traffic (pure simulator; no PJRT needed).
+//! * `loadgen`  — trace-driven load harness: deterministic Zipf/bursty
+//!   mixed traffic through the queueing-aware latency model (per-tenant
+//!   p50/p95/p99), optionally replayed against a live coordinator.
 //! * `datasets` — list the registered datasets.
 
 use std::sync::Arc;
@@ -92,6 +95,25 @@ fn cli() -> Command {
                 .opt("corner", "1.0", "process-corner noise multiplier")
                 .opt("config", "", "TOML config overlay (configs/*.toml)"),
         )
+        .sub(
+            Command::new("loadgen", "trace-driven load harness (no PJRT needed)")
+                .opt("docs", "2048", "resident corpus size")
+                .opt("dim", "256", "embedding dimension (multiple of 128)")
+                .opt("events", "10000", "query arrivals in the trace")
+                .opt("distinct", "192", "distinct query pool (Zipf head) size")
+                .opt("qps", "0", "target arrival rate (0 = 1.5x modeled capacity)")
+                .opt("zipf", "1.1", "query/document popularity exponent")
+                .opt("burst-mult", "6", "burst-state rate multiplier (1 = steady)")
+                .opt("mutate-every", "500", "queries per mutation event (0 = none)")
+                .opt("storm", "8", "churn-storm mutations at the trace midpoint")
+                .opt("tenants", "3,1", "comma-separated DRR weights (traffic follows weight)")
+                .opt("write-us", "100", "modeled serialized write time per mutated doc (µs)")
+                .opt("seed", "42", "trace seed")
+                .opt("k", "0", "top-k (0 = serving.k from the config)")
+                .opt("workers", "0", "retrieval worker threads (0 = config)")
+                .opt("config", "", "TOML config overlay (configs/*.toml)")
+                .flag("live", "also replay the trace against a live coordinator"),
+        )
         .sub(Command::new("datasets", "list registered datasets"))
 }
 
@@ -114,6 +136,7 @@ fn main() -> Result<()> {
         "eval" => cmd_eval(sub),
         "serve" => cmd_serve(sub),
         "ingest" => cmd_ingest(sub),
+        "loadgen" => cmd_loadgen(sub),
         "datasets" => cmd_datasets(),
         other => Err(anyhow!("unhandled subcommand {other}")),
     }
@@ -647,6 +670,173 @@ fn cmd_ingest(sub: &dirc_rag::util::cli::Parsed) -> Result<()> {
         "precision drift through churn: {:+.3} (before {before:.3}, after {after:.3})",
         after - before
     );
+    Ok(())
+}
+
+fn cmd_loadgen(sub: &dirc_rag::util::cli::Parsed) -> Result<()> {
+    use dirc_rag::coordinator::{configfile, SimEngine, TenantSpec};
+    use dirc_rag::data::SynthParams;
+    use dirc_rag::workload::{
+        queueing, runner, BurstProfile, QueueModelConfig, Trace, TraceConfig,
+    };
+
+    let n_docs = sub.get_usize("docs")?;
+    let dim = sub.get_usize("dim")?;
+    let events = sub.get_usize("events")?;
+    let distinct = sub.get_usize("distinct")?;
+    let qps_flag = sub.get_f64("qps")?;
+    let zipf = sub.get_f64("zipf")?;
+    let burst_mult = sub.get_f64("burst-mult")?;
+    let mutate_every = sub.get_usize("mutate-every")?;
+    let storm = sub.get_usize("storm")?;
+    let write_us = sub.get_f64("write-us")?;
+    let seed = sub.get_u64("seed")?;
+    let k_flag = sub.get_usize("k")?;
+    let live = sub.has_flag("live");
+
+    if dim % 128 != 0 {
+        return Err(anyhow!("--dim must be a multiple of 128"));
+    }
+    let weights: Vec<u32> = sub
+        .get("tenants")?
+        .split(',')
+        .map(|w| {
+            w.trim().parse::<u32>().map_err(|_| anyhow!("bad tenant weight {w:?}"))
+        })
+        .collect::<Result<_>>()?;
+
+    let overlay = Some(sub.get("config")?).filter(|s| !s.is_empty());
+    let file_cfg = configfile::load_layered(overlay)?;
+    let mut coord_cfg = configfile::coordinator_config(&file_cfg)?;
+    let workers_flag = sub.get_usize("workers")?;
+    if workers_flag > 0 {
+        coord_cfg.workers = workers_flag;
+    }
+    let mut chip_cfg = configfile::chip_config(&file_cfg)?;
+    chip_cfg.dim = dim;
+    chip_cfg.map_points = chip_cfg.map_points.min(300);
+    let scheme = match chip_cfg.bits {
+        4 => QuantScheme::Int4,
+        _ => QuantScheme::Int8,
+    };
+
+    // Resident corpus + the distinct query pool (the Zipf head the trace
+    // indexes into; pool index 0 is the hottest query).
+    let params = SynthParams {
+        topics: 32,
+        doc_noise: 0.6,
+        rels_per_query: 1,
+        extra_rel_range: 1,
+        query_noise: 0.5,
+        confuse: 0.6,
+        aniso: 1.0,
+        seed: 41,
+    };
+    let ds = SynthDataset::generate(n_docs, distinct, dim, &params);
+    let db = quantize(&ds.docs, n_docs, dim, scheme);
+    let pool = Arc::new(dirc_rag::util::pool::ThreadPool::new(
+        dirc_rag::util::pool::default_threads(),
+    ));
+    let engine =
+        Arc::new(SimEngine::with_caches(chip_cfg, &db, Some(pool), coord_cfg.cache));
+
+    let mut plan = configfile::query_plan(&file_cfg)?;
+    if k_flag > 0 {
+        plan = plan.with_k(k_flag)?;
+    }
+
+    // Per-distinct-query chip service times from the cycle model: one
+    // seeded batch execution, latency_s per pool entry.
+    let chip = engine.chip();
+    let queries_i8: Vec<Vec<i8>> =
+        (0..distinct).map(|qi| quantize(ds.query(qi), 1, dim, scheme).values).collect();
+    let outs = chip.execute_batch(&queries_i8, &plan);
+    let service_s: Vec<f64> = outs.iter().map(|o| o.stats.latency_s).collect();
+    let mean_service =
+        service_s.iter().sum::<f64>() / service_s.len().max(1) as f64;
+    let capacity_qps = coord_cfg.workers as f64 / mean_service.max(1e-12);
+    let target_qps = if qps_flag > 0.0 { qps_flag } else { 1.5 * capacity_qps };
+
+    let burst = if burst_mult <= 1.0 {
+        BurstProfile::steady()
+    } else {
+        BurstProfile { burst_mult, ..BurstProfile::default() }
+    };
+    let tcfg = TraceConfig {
+        n_queries: events,
+        distinct_queries: distinct,
+        n_docs,
+        zipf_exponent: zipf,
+        target_qps,
+        burst,
+        tenant_mix: weights.iter().map(|&w| f64::from(w)).collect(),
+        mutate_every,
+        mutation_docs: 8,
+        storm_mutations: storm,
+        seed,
+    };
+    let trace = Trace::generate(&tcfg);
+    println!(
+        "trace: {} queries + {} mutations over {:.4} s virtual \
+         ({:.0} qps target, {:.0} qps modeled capacity, digest {:016x})",
+        trace.n_queries(),
+        trace.n_mutations(),
+        trace.span_s(),
+        target_qps,
+        capacity_qps,
+        trace.digest()
+    );
+
+    let tenant_names: Vec<String> =
+        weights.iter().enumerate().map(|(i, &w)| format!("tenant{i}_w{w}")).collect();
+    let qcfg = QueueModelConfig {
+        workers: coord_cfg.workers,
+        batch_max: coord_cfg.batch.max_size(),
+        batch_max_wait_s: coord_cfg.batch.max_wait.as_secs_f64(),
+        run_max: coord_cfg.retrieve_batch.max(1),
+        weights: weights.clone(),
+        tenant_names: tenant_names.clone(),
+        mutation_max_defer_s: coord_cfg.mutation_max_defer.as_secs_f64(),
+        write_s_per_doc: write_us * 1e-6,
+    };
+    let report = queueing::simulate(&trace, &service_s, &qcfg);
+    print!("{}", report.render());
+
+    if live {
+        // Replay the same schedule against the real coordinator; its
+        // snapshot carries the wall-clock per-tenant tails.
+        coord_cfg.tenants = weights
+            .iter()
+            .zip(&tenant_names)
+            .map(|(&w, name)| TenantSpec { name: name.clone(), weight: w, plan: None })
+            .collect();
+        coord_cfg.default_plan = plan;
+        let coord = Coordinator::start_sim(
+            Arc::clone(&engine) as Arc<dyn Engine>,
+            coord_cfg,
+        );
+        let queries_fp: Vec<Vec<f32>> =
+            (0..distinct).map(|qi| ds.query(qi).to_vec()).collect();
+        let rep = runner::replay(
+            &coord,
+            &trace,
+            &tenant_names,
+            &queries_fp,
+            dim,
+            &runner::ReplayOptions::default(),
+        )?;
+        let snap = coord.shutdown();
+        print!("{}", snap.render());
+        println!(
+            "live replay: {}/{} queries, {}/{} mutations ({} skipped), wall {:.3} s",
+            rep.queries_completed,
+            rep.queries_submitted,
+            rep.mutations_completed,
+            rep.mutations_submitted,
+            rep.mutations_skipped,
+            rep.wall_s
+        );
+    }
     Ok(())
 }
 

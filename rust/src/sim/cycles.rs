@@ -236,6 +236,40 @@ impl CycleModel {
     }
 }
 
+/// Queueing-aware decomposition of one served query's end-to-end
+/// latency: the per-query cycle model above gives the chip *service*
+/// time ([`CycleModel::seconds`] of [`QueryCycles::total`]); under load
+/// the host adds batch-formation delay (waiting for the ingest batch to
+/// fill or hit its deadline) and DRR queue wait (waiting for the
+/// tenant's deficit-round-robin turn and a free worker). The
+/// `write_stall_s` component is the share of `queue_wait_s` spent
+/// behind an admitted mutation's serialized write window — an
+/// attribution, **not** an additive term: `total_s` is
+/// `batch_wait + queue_wait + service`, with `write_stall <= queue_wait`.
+///
+/// `workload::queueing` fills these from its deterministic virtual-time
+/// replay; the live coordinator's measured `Response::total_s` is the
+/// wall-clock analogue of `total_s`.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ServingLatency {
+    /// Batch-formation delay: arrival to ingest flush.
+    pub batch_wait_s: f64,
+    /// Flush to dispatch: DRR turn + worker availability + any
+    /// mutation write window in between.
+    pub queue_wait_s: f64,
+    /// Share of `queue_wait_s` attributable to mutation write stalls.
+    pub write_stall_s: f64,
+    /// Chip service time of the dispatched run this query rode in.
+    pub service_s: f64,
+}
+
+impl ServingLatency {
+    /// End-to-end sojourn: batch wait + queue wait + service.
+    pub fn total_s(&self) -> f64 {
+        self.batch_wait_s + self.queue_wait_s + self.service_s
+    }
+}
+
 /// Associative, commutative max of two per-core censuses: the one that
 /// gates chip latency wins. The comparison is a *total* order (total
 /// cycles first, then each component lexicographically), so two censuses
@@ -435,6 +469,26 @@ mod tests {
         // The select stage must stay small next to a full macro pass, or
         // two-stage retrieval could never pay for itself.
         assert!(m.prune_select(128) < m.macro_pass(16, 8, true).total() / 4);
+    }
+
+    #[test]
+    fn serving_latency_composes_queueing_on_top_of_service() {
+        // The queueing composition: total = batch wait + queue wait +
+        // the cycle model's service seconds; the write stall is an
+        // attribution inside the queue wait, never double-counted.
+        let m = CycleModel::default();
+        let service = m.seconds(m.chip_query(&[16; 16], 8, true, &[0; 16], 10).total());
+        let l = ServingLatency {
+            batch_wait_s: 10e-6,
+            queue_wait_s: 25e-6,
+            write_stall_s: 5e-6,
+            service_s: service,
+        };
+        assert!((l.total_s() - (35e-6 + service)).abs() < 1e-15);
+        assert!(l.write_stall_s <= l.queue_wait_s);
+        // Zero queueing degrades to the bare cycle model.
+        let idle = ServingLatency { service_s: service, ..ServingLatency::default() };
+        assert_eq!(idle.total_s(), service);
     }
 
     #[test]

@@ -87,25 +87,101 @@ pub fn percentile_sorted(sorted: &[f64], pct: f64) -> f64 {
     }
 }
 
-/// Histogram with fixed bucket width, for latency distributions.
+/// Nearest-rank percentile of a pre-sorted sample: the smallest element
+/// with at least `ceil(pct/100 * n)` elements at or below it. This is
+/// the definition a bucketed histogram approximates, so it is the
+/// reference the histogram property tests compare against.
+pub fn percentile_nearest_sorted(sorted: &[f64], pct: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let n = sorted.len();
+    let rank = (((pct / 100.0) * n as f64).ceil() as usize).clamp(1, n);
+    sorted[rank - 1]
+}
+
+/// Log-bucketed (HDR-style) histogram for latency distributions.
+///
+/// Bucket upper edges grow geometrically from `min_value`: bucket `i`
+/// covers `(min_value * g^i, min_value * g^(i+1)]` with
+/// `g = 2^(1/buckets_per_octave)`, so relative resolution is constant
+/// (`g - 1`, ~9% at 8 buckets per octave) across the whole range —
+/// microsecond chip latencies and second-scale queueing tails resolve
+/// equally well in one histogram.
+///
+/// Percentile semantics are total and finite by construction:
+///
+/// * an empty histogram reports `0.0` for every percentile;
+/// * samples at or below `min_value` land in the lowest bucket, samples
+///   above the top edge land in an overflow tally;
+/// * a reported percentile is the covering bucket's upper edge clamped
+///   into `[observed min, observed max]`, so it is never infinite and
+///   never leaves the observed range — a rank landing in the overflow
+///   region resolves to the observed max (the fix for the old
+///   fixed-width histogram returning `INFINITY` into
+///   `Snapshot::host_latency_p95_s` once a tail sample overflowed).
 #[derive(Debug, Clone)]
 pub struct Histogram {
-    bucket_width: f64,
+    min_value: f64,
+    ln_min: f64,
+    ln_growth: f64,
+    growth: f64,
     buckets: Vec<u64>,
     overflow: u64,
     count: u64,
+    sum: f64,
+    obs_min: f64,
+    obs_max: f64,
 }
 
 impl Histogram {
-    pub fn new(bucket_width: f64, buckets: usize) -> Self {
-        assert!(bucket_width > 0.0 && buckets > 0);
-        Histogram { bucket_width, buckets: vec![0; buckets], overflow: 0, count: 0 }
+    /// Geometric buckets spanning `[min_value, max_value]` at
+    /// `buckets_per_octave` buckets per factor of two.
+    pub fn new(min_value: f64, max_value: f64, buckets_per_octave: usize) -> Histogram {
+        assert!(
+            min_value > 0.0 && max_value > min_value && buckets_per_octave > 0,
+            "Histogram::new needs 0 < min < max and a positive resolution"
+        );
+        let growth = 2f64.powf(1.0 / buckets_per_octave as f64);
+        let octaves = (max_value / min_value).log2();
+        let n = (octaves * buckets_per_octave as f64).ceil() as usize + 1;
+        Histogram {
+            min_value,
+            ln_min: min_value.ln(),
+            ln_growth: growth.ln(),
+            growth,
+            buckets: vec![0; n],
+            overflow: 0,
+            count: 0,
+            sum: 0.0,
+            obs_min: f64::INFINITY,
+            obs_max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// The serving-latency operating range: 100 ns to 100 s at 8 buckets
+    /// per octave (~9% relative resolution, ~240 buckets) — covers chip
+    /// microseconds through pathological queueing tails without overflow.
+    pub fn latency() -> Histogram {
+        Histogram::new(1e-7, 100.0, 8)
     }
 
     pub fn record(&mut self, x: f64) {
         self.count += 1;
-        let idx = (x / self.bucket_width) as usize;
-        if x < 0.0 || idx >= self.buckets.len() {
+        self.sum += x;
+        if x < self.obs_min {
+            self.obs_min = x;
+        }
+        if x > self.obs_max {
+            self.obs_max = x;
+        }
+        if !(x > self.min_value) {
+            // At or below the floor (negative values included): the
+            // lowest bucket still counts it, and the observed-min clamp
+            // keeps its reported percentile honest.
+            self.buckets[0] += 1;
+            return;
+        }
+        let idx = ((x.ln() - self.ln_min) / self.ln_growth) as usize;
+        if idx >= self.buckets.len() {
             self.overflow += 1;
         } else {
             self.buckets[idx] += 1;
@@ -116,23 +192,62 @@ impl Histogram {
         self.count
     }
 
-    /// Approximate percentile from buckets (upper bucket edge).
+    /// Geometric bucket growth factor (one bucket of relative error).
+    pub fn growth(&self) -> f64 {
+        self.growth
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Smallest recorded sample (0.0 when empty).
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.obs_min
+        }
+    }
+
+    /// Largest recorded sample (0.0 when empty).
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.obs_max
+        }
+    }
+
+    /// Approximate percentile: the upper edge of the bucket holding the
+    /// nearest-rank sample, clamped into `[observed min, observed max]`.
+    /// Empty histograms report 0.0; overflowed ranks report the observed
+    /// max. Monotone in `pct` and always finite.
     pub fn percentile(&self, pct: f64) -> f64 {
-        let target = ((pct / 100.0) * self.count as f64).ceil() as u64;
-        let mut seen = 0;
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (((pct / 100.0) * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
         for (i, &c) in self.buckets.iter().enumerate() {
             seen += c;
             if seen >= target {
-                return (i + 1) as f64 * self.bucket_width;
+                let edge = self.min_value * self.growth.powi(i as i32 + 1);
+                return edge.clamp(self.obs_min, self.obs_max);
             }
         }
-        f64::INFINITY
+        self.obs_max
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prop::{cases, forall, gen_f64, gen_vec};
 
     #[test]
     fn welford_matches_naive() {
@@ -166,22 +281,114 @@ mod tests {
     }
 
     #[test]
-    fn histogram_percentile() {
-        let mut h = Histogram::new(1.0, 100);
-        for i in 0..100 {
-            h.record(i as f64 + 0.5);
-        }
-        let p50 = h.percentile(50.0);
-        assert!((49.0..=51.0).contains(&p50), "{p50}");
-        assert_eq!(h.count(), 100);
+    fn nearest_rank_percentile() {
+        let xs = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile_nearest_sorted(&xs, 0.0), 1.0);
+        assert_eq!(percentile_nearest_sorted(&xs, 25.0), 1.0);
+        assert_eq!(percentile_nearest_sorted(&xs, 50.0), 2.0);
+        assert_eq!(percentile_nearest_sorted(&xs, 75.0), 3.0);
+        assert_eq!(percentile_nearest_sorted(&xs, 100.0), 4.0);
     }
 
     #[test]
-    fn histogram_overflow() {
-        let mut h = Histogram::new(1.0, 4);
+    fn histogram_percentile_tracks_uniform_sample() {
+        let mut h = Histogram::new(1.0, 1024.0, 8);
+        for i in 0..100 {
+            h.record(i as f64 + 0.5);
+        }
+        assert_eq!(h.count(), 100);
+        let p50 = h.percentile(50.0);
+        // One bucket of relative error around the exact median (50.5).
+        assert!((45.0..=56.0).contains(&p50), "{p50}");
+        assert!((h.mean() - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_histogram_reports_zero() {
+        let h = Histogram::latency();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.percentile(50.0), 0.0);
+        assert_eq!(h.percentile(99.0), 0.0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 0.0);
+    }
+
+    #[test]
+    fn overflow_clamps_to_observed_max_not_infinity() {
+        // Top edge at 4.0: samples beyond it overflow but report the
+        // observed max, and samples below the floor report at least the
+        // observed min — tails are always finite.
+        let mut h = Histogram::new(1.0, 4.0, 1);
         h.record(10.0);
         h.record(-1.0);
         assert_eq!(h.count(), 2);
-        assert_eq!(h.percentile(99.0), f64::INFINITY);
+        let p99 = h.percentile(99.0);
+        assert!(p99.is_finite());
+        assert_eq!(p99, 10.0, "overflowed rank resolves to the observed max");
+        // The sub-floor sample reports its covering bucket's upper edge
+        // (1.0 * 2^1), still inside the observed [-1, 10] range.
+        assert_eq!(h.percentile(0.0), 2.0);
+        assert_eq!(h.min(), -1.0);
+        assert_eq!(h.max(), 10.0);
+    }
+
+    #[test]
+    fn histogram_spans_latency_range_without_overflow() {
+        let mut h = Histogram::latency();
+        for &x in &[2e-7, 5.6e-6, 1e-3, 0.25, 60.0] {
+            h.record(x);
+        }
+        let p100 = h.percentile(100.0);
+        assert!(p100.is_finite() && p100 <= 60.0 + 1e-9);
+        assert!(h.percentile(0.0) >= 2e-7 - 1e-12);
+    }
+
+    const PCTS: [f64; 9] = [0.0, 10.0, 25.0, 50.0, 75.0, 90.0, 95.0, 99.0, 100.0];
+
+    /// `percentile_sorted` is monotone in `pct`, bounded by the observed
+    /// min/max, and agrees with `Summary::of` at its named points.
+    #[test]
+    fn prop_percentile_sorted_monotone_bounded() {
+        forall(cases(200), gen_vec(gen_f64(0.0, 1e3), 1, 64), |xs| {
+            let mut sorted = xs.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let vals: Vec<f64> = PCTS.iter().map(|&p| percentile_sorted(&sorted, p)).collect();
+            let s = Summary::of(xs);
+            vals.windows(2).all(|w| w[0] <= w[1])
+                && vals.iter().all(|&v| v >= s.min && v <= s.max)
+                && percentile_sorted(&sorted, 50.0) == s.median
+                && percentile_sorted(&sorted, 95.0) == s.p95
+                && percentile_sorted(&sorted, 99.0) == s.p99
+        });
+    }
+
+    /// Histogram percentiles over random log-uniform samples are monotone
+    /// in `pct`, bounded by the observed min/max (== `Summary::of`'s
+    /// min/max), and within one bucket's relative error of the exact
+    /// nearest-rank percentile of the same sample.
+    #[test]
+    fn prop_histogram_percentiles_monotone_bounded_near_exact() {
+        forall(cases(120), gen_vec(gen_f64(-6.0, 1.0), 1, 96), |exps| {
+            let xs: Vec<f64> = exps.iter().map(|&e| 10f64.powf(e)).collect();
+            let mut h = Histogram::latency();
+            for &x in &xs {
+                h.record(x);
+            }
+            let mut sorted = xs.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let s = Summary::of(&xs);
+            let vals: Vec<f64> = PCTS.iter().map(|&p| h.percentile(p)).collect();
+            let monotone = vals.windows(2).all(|w| w[0] <= w[1]);
+            let bounded =
+                vals.iter().all(|&v| v >= s.min - 1e-12 && v <= s.max + 1e-12);
+            // One bucket of slack on each side (squared for edge rounding).
+            let slack = h.growth() * h.growth();
+            let near = PCTS.iter().zip(&vals).all(|(&p, &v)| {
+                let exact = percentile_nearest_sorted(&sorted, p);
+                v <= exact * slack + 1e-12 && v * slack + 1e-12 >= exact
+            });
+            monotone && bounded && near
+        });
     }
 }

@@ -1,0 +1,138 @@
+//! Bursty arrivals: a seeded Markov-modulated Poisson process (MMPP).
+//!
+//! Real edge-RAG traffic is not a steady drip: interactive sessions
+//! cluster requests into bursts. The generator models that with a
+//! two-state Markov chain (calm / burst) stepped once per arrival:
+//! interarrival gaps are exponential at the current state's rate
+//! (`target_qps`, or `target_qps * burst_mult` while bursting), and the
+//! state flips with the profile's per-arrival transition probabilities.
+//! Everything draws from one [`Pcg`] stream, so a seed pins the entire
+//! arrival schedule bit-for-bit.
+
+use crate::util::rng::Pcg;
+
+/// Two-state burst profile of the arrival chain.
+#[derive(Debug, Clone)]
+pub struct BurstProfile {
+    /// Arrival-rate multiplier while the chain is bursting.
+    pub burst_mult: f64,
+    /// Per-arrival probability of entering the burst state from calm.
+    pub p_enter: f64,
+    /// Per-arrival probability of leaving the burst state.
+    pub p_exit: f64,
+}
+
+impl Default for BurstProfile {
+    fn default() -> Self {
+        // ~16% of arrivals land in bursts ~6x over the base rate, in
+        // episodes averaging a dozen arrivals.
+        BurstProfile { burst_mult: 6.0, p_enter: 0.015, p_exit: 0.08 }
+    }
+}
+
+impl BurstProfile {
+    /// A flat Poisson process (no burst state ever entered).
+    pub fn steady() -> BurstProfile {
+        BurstProfile { burst_mult: 1.0, p_enter: 0.0, p_exit: 1.0 }
+    }
+}
+
+/// Markov-modulated interarrival generator.
+#[derive(Debug, Clone)]
+pub struct ArrivalModel {
+    base_rate: f64,
+    profile: BurstProfile,
+    bursting: bool,
+}
+
+impl ArrivalModel {
+    pub fn new(target_qps: f64, profile: BurstProfile) -> ArrivalModel {
+        assert!(target_qps > 0.0 && target_qps.is_finite());
+        assert!(profile.burst_mult >= 1.0);
+        assert!((0.0..=1.0).contains(&profile.p_enter));
+        assert!((0.0..=1.0).contains(&profile.p_exit));
+        ArrivalModel { base_rate: target_qps, profile, bursting: false }
+    }
+
+    pub fn bursting(&self) -> bool {
+        self.bursting
+    }
+
+    /// Next interarrival gap (seconds): exponential at the current
+    /// state's rate, then one step of the state chain. Two draws per
+    /// arrival in a fixed order, so the stream layout is stable.
+    pub fn next_gap(&mut self, rng: &mut Pcg) -> f64 {
+        let rate = if self.bursting {
+            self.base_rate * self.profile.burst_mult
+        } else {
+            self.base_rate
+        };
+        let u = rng.f64();
+        let gap = -(1.0 - u).ln() / rate;
+        let flip = rng.f64();
+        if self.bursting {
+            if flip < self.profile.p_exit {
+                self.bursting = false;
+            }
+        } else if flip < self.profile.p_enter {
+            self.bursting = true;
+        }
+        gap
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn steady_profile_matches_target_rate() {
+        let mut m = ArrivalModel::new(1000.0, BurstProfile::steady());
+        let mut rng = Pcg::new(5);
+        let n = 20_000;
+        let total: f64 = (0..n).map(|_| m.next_gap(&mut rng)).sum();
+        let rate = n as f64 / total;
+        assert!((900.0..1100.0).contains(&rate), "measured {rate} qps");
+        assert!(!m.bursting());
+    }
+
+    #[test]
+    fn bursts_raise_the_mean_rate_and_visit_both_states() {
+        let prof = BurstProfile { burst_mult: 8.0, p_enter: 0.05, p_exit: 0.05 };
+        let mut m = ArrivalModel::new(1000.0, prof);
+        let mut rng = Pcg::new(6);
+        let n = 20_000;
+        let mut total = 0.0;
+        let mut burst_arrivals = 0usize;
+        for _ in 0..n {
+            total += m.next_gap(&mut rng);
+            if m.bursting() {
+                burst_arrivals += 1;
+            }
+        }
+        let rate = n as f64 / total;
+        assert!(rate > 1200.0, "bursting must lift the offered rate: {rate}");
+        assert!(burst_arrivals > 0 && burst_arrivals < n, "{burst_arrivals}");
+    }
+
+    #[test]
+    fn gap_stream_is_deterministic_per_seed() {
+        let gaps = |seed: u64| {
+            let mut m = ArrivalModel::new(500.0, BurstProfile::default());
+            let mut rng = Pcg::new(seed);
+            (0..64).map(|_| m.next_gap(&mut rng).to_bits()).collect::<Vec<_>>()
+        };
+        assert_eq!(gaps(9), gaps(9));
+        assert_ne!(gaps(9), gaps(10));
+    }
+
+    #[test]
+    fn gaps_are_positive_and_finite() {
+        let mut m = ArrivalModel::new(1e6, BurstProfile::default());
+        let mut rng = Pcg::new(1);
+        for _ in 0..10_000 {
+            let g = m.next_gap(&mut rng);
+            assert!(g.is_finite() && g >= 0.0);
+        }
+    }
+}

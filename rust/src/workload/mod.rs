@@ -1,0 +1,34 @@
+//! Trace-driven load generation and tail-latency accounting.
+//!
+//! The serving stack's throughput numbers (the coordinator benches) say
+//! little about *tails*: p99 under bursty, skewed, mutation-interleaved
+//! traffic is what an edge deployment actually provisions for. This
+//! module builds that workload deterministically and accounts for it
+//! twice:
+//!
+//! 1. [`trace`] generates the schedule — Zipfian query/document
+//!    popularity ([`zipf`]), bursty Markov-modulated arrivals
+//!    ([`arrivals`]), mixed query/mutate traffic and churn storms — all
+//!    from seeded [`crate::util::rng::Pcg`] streams, so a seed pins the
+//!    workload bit-for-bit.
+//! 2. [`queueing`] replays the schedule on a virtual clock through the
+//!    coordinator's own disciplines (ingest batching, per-tenant DRR,
+//!    mutation admission) composed with per-query chip service times,
+//!    yielding reproducible per-tenant p50/p95/p99; [`runner`] replays
+//!    the same schedule against a *live* [`crate::coordinator::Coordinator`]
+//!    so the real stack (threads, channels, histograms) sees the traffic.
+//!
+//! The `loadgen` CLI subcommand and `benches/load_tail.rs` wire both
+//! halves together.
+
+pub mod arrivals;
+pub mod queueing;
+pub mod runner;
+pub mod trace;
+pub mod zipf;
+
+pub use arrivals::{ArrivalModel, BurstProfile};
+pub use queueing::{simulate, LoadReport, QueueModelConfig, TenantLoad};
+pub use runner::{replay, ReplayOptions, ReplayReport};
+pub use trace::{EventKind, MutationKind, Trace, TraceConfig, TraceEvent};
+pub use zipf::Zipf;

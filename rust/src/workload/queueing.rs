@@ -1,0 +1,702 @@
+//! Deterministic virtual-time queueing model of the serving coordinator.
+//!
+//! The live coordinator measures wall-clock latency, which depends on
+//! host scheduling — useful, but not reproducible. This model replays a
+//! [`Trace`] on a *virtual* clock through the same queueing disciplines
+//! the coordinator runs, composing each query's
+//! [`crate::sim::cycles::ServingLatency`] from:
+//!
+//! * **batch-formation delay** — arrivals accumulate in an ingest batch
+//!   flushed when it fills (`batch_max`) or when its oldest entry hits
+//!   the deadline (`batch_max_wait_s`), mirroring
+//!   [`crate::coordinator::batcher::Batcher`];
+//! * **DRR queue wait** — flushed queries join per-tenant FIFO queues
+//!   drained by deficit round-robin with quantum = weight and runs
+//!   capped at `run_max`, a faithful re-implementation of
+//!   [`crate::coordinator::batcher::DrrQueues::pop_run`] (same deficit,
+//!   cursor and idle-reset rules) minus the thread blocking;
+//! * **mutation-admission stalls** — a mutation is admitted when no
+//!   query is in flight or after `mutation_max_defer_s` (the
+//!   coordinator's admission rule); while its serialized write window
+//!   runs, no new query run starts, and the overlap is attributed to
+//!   the affected queries' `write_stall_s`;
+//! * **service** — per distinct query, the caller supplies the chip
+//!   service time from the cycle model (seeded chip executions), so the
+//!   virtual clock advances by exactly the modeled hardware time.
+//!
+//! Everything is integer/float arithmetic over the trace — no wall
+//! clock, no threads — so identical seeds yield bit-identical
+//! percentiles, run to run ([`LoadReport::digest`]).
+//!
+//! Simplifications vs the live path (documented, deliberate): the model
+//! flushes whole batches (no best-fit size ladder), charges a query run
+//! the sum of its members' service times (one worker dispatches a run
+//! as one engine batch), and serializes mutation writes against query
+//! dispatch — the conservative reading of "writes occupy the macro".
+
+use std::collections::{BinaryHeap, VecDeque};
+
+use crate::sim::cycles::ServingLatency;
+use crate::util::stats::percentile_sorted;
+
+use super::trace::{EventKind, MutationKind, Trace};
+
+/// Queueing parameters, mirroring `CoordinatorConfig`.
+#[derive(Debug, Clone)]
+pub struct QueueModelConfig {
+    pub workers: usize,
+    /// Flush the ingest batch at this many pending queries.
+    pub batch_max: usize,
+    /// ...or when the oldest pending query has waited this long.
+    pub batch_max_wait_s: f64,
+    /// Max items per DRR visit (the coordinator's `retrieve_batch`).
+    pub run_max: usize,
+    /// Per-tenant DRR weights (also fixes the tenant count).
+    pub weights: Vec<u32>,
+    pub tenant_names: Vec<String>,
+    /// Mutation admission bound (the coordinator's `mutation_max_defer`).
+    pub mutation_max_defer_s: f64,
+    /// Serialized write time charged per document of a mutation event.
+    pub write_s_per_doc: f64,
+}
+
+impl Default for QueueModelConfig {
+    fn default() -> Self {
+        QueueModelConfig {
+            workers: 2,
+            batch_max: 32,
+            batch_max_wait_s: 50e-6,
+            run_max: 8,
+            weights: vec![1],
+            tenant_names: vec!["default".into()],
+            mutation_max_defer_s: 500e-6,
+            write_s_per_doc: 100e-6,
+        }
+    }
+}
+
+/// Latency distribution of one tenant's (or the global) query stream.
+#[derive(Debug, Clone)]
+pub struct TenantLoad {
+    pub name: String,
+    pub queries: u64,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub p99_s: f64,
+    pub max_s: f64,
+    /// Mean composition (sums to `mean_s` minus nothing — the write
+    /// stall is an attribution inside the queue wait).
+    pub mean_batch_wait_s: f64,
+    pub mean_queue_wait_s: f64,
+    pub mean_write_stall_s: f64,
+    pub mean_service_s: f64,
+}
+
+impl TenantLoad {
+    fn of(name: &str, sojourns: &mut [f64], parts: &[ServingLatency]) -> TenantLoad {
+        if sojourns.is_empty() {
+            return TenantLoad {
+                name: name.into(),
+                queries: 0,
+                mean_s: 0.0,
+                p50_s: 0.0,
+                p95_s: 0.0,
+                p99_s: 0.0,
+                max_s: 0.0,
+                mean_batch_wait_s: 0.0,
+                mean_queue_wait_s: 0.0,
+                mean_write_stall_s: 0.0,
+                mean_service_s: 0.0,
+            };
+        }
+        sojourns.sort_by(|a, b| a.partial_cmp(b).expect("NaN sojourn"));
+        let n = sojourns.len() as f64;
+        let mean = |f: fn(&ServingLatency) -> f64| parts.iter().map(f).sum::<f64>() / n;
+        TenantLoad {
+            name: name.into(),
+            queries: sojourns.len() as u64,
+            mean_s: sojourns.iter().sum::<f64>() / n,
+            p50_s: percentile_sorted(sojourns, 50.0),
+            p95_s: percentile_sorted(sojourns, 95.0),
+            p99_s: percentile_sorted(sojourns, 99.0),
+            max_s: *sojourns.last().unwrap(),
+            mean_batch_wait_s: mean(|l| l.batch_wait_s),
+            mean_queue_wait_s: mean(|l| l.queue_wait_s),
+            mean_write_stall_s: mean(|l| l.write_stall_s),
+            mean_service_s: mean(|l| l.service_s),
+        }
+    }
+}
+
+/// The model's output: per-tenant and global tail-latency accounting.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    pub tenants: Vec<TenantLoad>,
+    pub global: TenantLoad,
+    /// Virtual time of the last completion.
+    pub makespan_s: f64,
+    /// Offered query rate over the arrival span.
+    pub offered_qps: f64,
+    pub mutations: u64,
+    pub mutation_wait_mean_s: f64,
+    pub mutation_apply_total_s: f64,
+}
+
+impl LoadReport {
+    /// FNV-1a over the bit patterns of every reported statistic — equal
+    /// digests mean bit-identical percentiles across runs.
+    pub fn digest(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut eat = |x: u64| {
+            for b in x.to_le_bytes() {
+                h ^= u64::from(b);
+                h = h.wrapping_mul(0x100_0000_01b3);
+            }
+        };
+        for t in self.tenants.iter().chain(std::iter::once(&self.global)) {
+            eat(t.queries);
+            for v in [t.mean_s, t.p50_s, t.p95_s, t.p99_s, t.max_s] {
+                eat(v.to_bits());
+            }
+        }
+        eat(self.makespan_s.to_bits());
+        eat(self.mutations);
+        h
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "queueing model: {} queries over {:.3} s virtual ({:.0} qps offered), \
+             {} mutations (mean admission wait {:.3} ms, {:.3} ms writes)\n",
+            self.global.queries,
+            self.makespan_s,
+            self.offered_qps,
+            self.mutations,
+            self.mutation_wait_mean_s * 1e3,
+            self.mutation_apply_total_s * 1e3,
+        );
+        let mut line = |t: &TenantLoad| {
+            out.push_str(&format!(
+                "  {:<12} n={:<6} p50 {:>9.2} µs  p95 {:>9.2} µs  p99 {:>9.2} µs  \
+                 max {:>9.2} µs  (batch {:.2} + queue {:.2} [stall {:.2}] + \
+                 service {:.2} µs mean)\n",
+                t.name,
+                t.queries,
+                t.p50_s * 1e6,
+                t.p95_s * 1e6,
+                t.p99_s * 1e6,
+                t.max_s * 1e6,
+                t.mean_batch_wait_s * 1e6,
+                t.mean_queue_wait_s * 1e6,
+                t.mean_write_stall_s * 1e6,
+                t.mean_service_s * 1e6,
+            ));
+        };
+        line(&self.global);
+        for t in &self.tenants {
+            line(t);
+        }
+        out
+    }
+}
+
+/// Heap entry: virtual event, ordered by (time bits, sequence).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Ev {
+    /// Trace event index arrives.
+    Arrive(usize),
+    /// Ingest-batch deadline for flush generation `gen`.
+    Flush(u64),
+    /// A worker finishes a run of `n` queries.
+    WorkerFree(usize),
+    /// A pending mutation's defer bound expires.
+    DeferExpire,
+    /// The admitted mutation's write window closes.
+    MutDone,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Timed {
+    at: f64,
+    seq: u64,
+    ev: Ev,
+}
+
+impl PartialEq for Timed {
+    fn eq(&self, other: &Self) -> bool {
+        self.at.to_bits() == other.at.to_bits() && self.seq == other.seq
+    }
+}
+impl Eq for Timed {}
+impl Ord for Timed {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Min-heap via reverse: earlier time first, then insertion order.
+        // Times are non-negative finite, so bit order == numeric order.
+        (other.at.to_bits(), other.seq).cmp(&(self.at.to_bits(), self.seq))
+    }
+}
+impl PartialOrd for Timed {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// A flushed query waiting in its tenant's DRR queue.
+#[derive(Debug, Clone, Copy)]
+struct QueuedItem {
+    /// Index into the per-query record table.
+    rec: usize,
+    arrival_s: f64,
+    ready_s: f64,
+    service_s: f64,
+    /// Cumulative mutation write time admitted before this item flushed.
+    busy_at_ready_s: f64,
+}
+
+/// Replay `trace` through the queueing model. `service_s[q]` is the chip
+/// service time of distinct query `q` (from seeded chip executions —
+/// the cycle model's seconds).
+pub fn simulate(trace: &Trace, service_s: &[f64], cfg: &QueueModelConfig) -> LoadReport {
+    assert!(!cfg.weights.is_empty(), "at least one tenant weight");
+    let n_tenants = cfg.weights.len();
+    assert!(cfg.workers > 0 && cfg.batch_max > 0);
+    assert_eq!(
+        cfg.tenant_names.len(),
+        n_tenants,
+        "one name per DRR weight"
+    );
+
+    // Event heap seeded with every trace arrival.
+    let mut heap: BinaryHeap<Timed> = BinaryHeap::with_capacity(trace.events.len() + 16);
+    let mut seq = 0u64;
+    let mut push = |heap: &mut BinaryHeap<Timed>, seq: &mut u64, at: f64, ev: Ev| {
+        *seq += 1;
+        heap.push(Timed { at, seq: *seq, ev });
+    };
+    for (i, ev) in trace.events.iter().enumerate() {
+        push(&mut heap, &mut seq, ev.at_s, Ev::Arrive(i));
+    }
+
+    // Ingest batch.
+    let mut batch: Vec<QueuedItem> = Vec::with_capacity(cfg.batch_max);
+    let mut flush_gen = 0u64;
+
+    // DRR state (mirrors DrrQueues::pop_run).
+    let quantum: Vec<u64> =
+        cfg.weights.iter().map(|&w| u64::from(w.max(1))).collect();
+    let mut queues: Vec<VecDeque<QueuedItem>> =
+        (0..n_tenants).map(|_| VecDeque::new()).collect();
+    let mut deficit = vec![0u64; n_tenants];
+    let mut cursor = 0usize;
+
+    let mut idle_workers = cfg.workers;
+    let mut inflight = 0u64;
+
+    // Mutation admission. Write-stall attribution needs the *busy-time
+    // integral* of serialized write windows — cum_busy(t) = total time
+    // the mutation path was writing in [0, t] — so a query's stall is
+    // the exact overlap of write windows with its [ready, dispatch]
+    // interval (and therefore never exceeds its queue wait). Windows
+    // never overlap each other, so one (start, end) pair plus the
+    // completed-before total is enough.
+    let mut pending_muts: VecDeque<(usize, f64)> = VecDeque::new();
+    let mut mut_busy = false;
+    let mut mut_cum_before = 0.0f64;
+    let mut mut_win = (0.0f64, 0.0f64);
+    let mut mut_waits: Vec<f64> = Vec::new();
+    let mut mut_apply_total = 0.0f64;
+
+    macro_rules! cum_busy {
+        ($t:expr) => {{
+            mut_cum_before + (($t).min(mut_win.1) - mut_win.0).max(0.0)
+        }};
+    }
+
+    // Per-query records, filled at dispatch.
+    let mut recs: Vec<(usize, f64, ServingLatency)> = Vec::new(); // (tenant, done_s, parts)
+    let mut rec_meta: Vec<(usize, f64)> = Vec::new(); // (tenant, arrival) per query event
+    let mut query_index: Vec<usize> = Vec::with_capacity(trace.events.len());
+    for ev in &trace.events {
+        if let EventKind::Query { tenant, .. } = ev.kind {
+            query_index.push(rec_meta.len());
+            rec_meta.push((tenant.min(n_tenants - 1), ev.at_s));
+        } else {
+            query_index.push(usize::MAX);
+        }
+    }
+    let mut makespan = 0.0f64;
+
+    // One DRR visit: identical deficit/cursor/idle-reset rules to
+    // DrrQueues::pop_run, returning at most `run_max` items.
+    let mut pop_run = |queues: &mut Vec<VecDeque<QueuedItem>>,
+                       deficit: &mut Vec<u64>,
+                       cursor: &mut usize|
+     -> Option<Vec<QueuedItem>> {
+        if queues.iter().all(VecDeque::is_empty) {
+            return None;
+        }
+        let n = queues.len();
+        let start = *cursor;
+        for step in 0..n {
+            let t = (start + step) % n;
+            if queues[t].is_empty() {
+                deficit[t] = 0;
+                continue;
+            }
+            if deficit[t] == 0 {
+                deficit[t] = quantum[t];
+            }
+            let take =
+                (deficit[t] as usize).min(cfg.run_max.max(1)).min(queues[t].len());
+            let items: Vec<QueuedItem> = queues[t].drain(..take).collect();
+            deficit[t] -= take as u64;
+            if queues[t].is_empty() {
+                deficit[t] = 0;
+                *cursor = (t + 1) % n;
+            } else if deficit[t] > 0 {
+                *cursor = t;
+            } else {
+                *cursor = (t + 1) % n;
+            }
+            return Some(items);
+        }
+        None
+    };
+
+    macro_rules! flush_batch {
+        ($t:expr) => {{
+            let t = $t;
+            for mut item in batch.drain(..) {
+                item.ready_s = t;
+                item.busy_at_ready_s = cum_busy!(t);
+                let tenant = rec_meta[item.rec].0;
+                queues[tenant].push_back(item);
+            }
+            flush_gen += 1;
+        }};
+    }
+
+    macro_rules! dispatch {
+        ($t:expr) => {{
+            let t = $t;
+            while idle_workers > 0 && !mut_busy {
+                let Some(items) = pop_run(&mut queues, &mut deficit, &mut cursor)
+                else {
+                    break;
+                };
+                let run_service: f64 = items.iter().map(|i| i.service_s).sum();
+                let done = t + run_service;
+                for item in &items {
+                    let tenant = rec_meta[item.rec].0;
+                    let parts = ServingLatency {
+                        batch_wait_s: item.ready_s - item.arrival_s,
+                        queue_wait_s: t - item.ready_s,
+                        write_stall_s: cum_busy!(t) - item.busy_at_ready_s,
+                        service_s: run_service,
+                    };
+                    recs.push((tenant, done, parts));
+                }
+                if done > makespan {
+                    makespan = done;
+                }
+                idle_workers -= 1;
+                push(&mut heap, &mut seq, done, Ev::WorkerFree(items.len()));
+            }
+        }};
+    }
+
+    macro_rules! admit {
+        ($t:expr) => {{
+            let t = $t;
+            while !mut_busy {
+                let Some(&(mi, arr)) = pending_muts.front() else { break };
+                if inflight != 0 && t < arr + cfg.mutation_max_defer_s {
+                    break;
+                }
+                pending_muts.pop_front();
+                let EventKind::Mutate(kind) = &trace.events[mi].kind else {
+                    unreachable!("pending mutation indexes a mutation event")
+                };
+                let apply = cfg.write_s_per_doc * kind.n_docs().max(1) as f64;
+                mut_busy = true;
+                mut_cum_before += mut_win.1 - mut_win.0;
+                mut_win = (t, t + apply);
+                mut_waits.push(t - arr);
+                mut_apply_total += apply;
+                let done = t + apply;
+                if done > makespan {
+                    makespan = done;
+                }
+                push(&mut heap, &mut seq, done, Ev::MutDone);
+            }
+        }};
+    }
+
+    while let Some(Timed { at: t, ev, .. }) = heap.pop() {
+        match ev {
+            Ev::Arrive(i) => match &trace.events[i].kind {
+                EventKind::Query { query, .. } => {
+                    inflight += 1;
+                    let q = *query;
+                    let svc = service_s
+                        .get(q)
+                        .copied()
+                        .expect("service time for every distinct query");
+                    if batch.is_empty() {
+                        push(
+                            &mut heap,
+                            &mut seq,
+                            t + cfg.batch_max_wait_s,
+                            Ev::Flush(flush_gen),
+                        );
+                    }
+                    batch.push(QueuedItem {
+                        rec: query_index[i],
+                        arrival_s: t,
+                        ready_s: t,
+                        service_s: svc,
+                        busy_at_ready_s: 0.0,
+                    });
+                    if batch.len() >= cfg.batch_max {
+                        flush_batch!(t);
+                        dispatch!(t);
+                    }
+                }
+                EventKind::Mutate(_) => {
+                    pending_muts.push_back((i, t));
+                    push(
+                        &mut heap,
+                        &mut seq,
+                        t + cfg.mutation_max_defer_s,
+                        Ev::DeferExpire,
+                    );
+                    admit!(t);
+                }
+            },
+            Ev::Flush(gen) => {
+                if gen == flush_gen && !batch.is_empty() {
+                    flush_batch!(t);
+                    dispatch!(t);
+                }
+            }
+            Ev::WorkerFree(n_done) => {
+                idle_workers += 1;
+                inflight -= n_done as u64;
+                dispatch!(t);
+                admit!(t);
+            }
+            Ev::DeferExpire => {
+                admit!(t);
+            }
+            Ev::MutDone => {
+                mut_busy = false;
+                dispatch!(t);
+                admit!(t);
+            }
+        }
+    }
+    assert!(batch.is_empty(), "every batch flushes by deadline");
+    assert!(queues.iter().all(VecDeque::is_empty), "every queued query dispatches");
+    assert!(pending_muts.is_empty(), "every mutation admits by its defer bound");
+
+    // Aggregate.
+    let span = trace.span_s();
+    let mut per_tenant_sojourns: Vec<Vec<f64>> = vec![Vec::new(); n_tenants];
+    let mut per_tenant_parts: Vec<Vec<ServingLatency>> = vec![Vec::new(); n_tenants];
+    let mut all_sojourns = Vec::with_capacity(recs.len());
+    let mut all_parts = Vec::with_capacity(recs.len());
+    for &(tenant, _done, parts) in recs.iter() {
+        let sojourn = parts.total_s();
+        per_tenant_sojourns[tenant].push(sojourn);
+        per_tenant_parts[tenant].push(parts);
+        all_sojourns.push(sojourn);
+        all_parts.push(parts);
+    }
+    let tenants: Vec<TenantLoad> = (0..n_tenants)
+        .map(|ti| {
+            TenantLoad::of(
+                &cfg.tenant_names[ti],
+                &mut per_tenant_sojourns[ti],
+                &per_tenant_parts[ti],
+            )
+        })
+        .collect();
+    let global = TenantLoad::of("global", &mut all_sojourns, &all_parts);
+    LoadReport {
+        tenants,
+        global,
+        makespan_s: makespan,
+        offered_qps: if span > 0.0 { global.queries as f64 / span } else { 0.0 },
+        mutations: mut_waits.len() as u64,
+        mutation_wait_mean_s: if mut_waits.is_empty() {
+            0.0
+        } else {
+            mut_waits.iter().sum::<f64>() / mut_waits.len() as f64
+        },
+        mutation_apply_total_s: mut_apply_total,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::arrivals::BurstProfile;
+    use crate::workload::trace::{EventKind, MutationKind, TraceConfig, TraceEvent};
+
+    fn hand_trace(events: Vec<TraceEvent>) -> Trace {
+        Trace { events }
+    }
+
+    fn q(at: f64, tenant: usize, query: usize) -> TraceEvent {
+        TraceEvent { at_s: at, kind: EventKind::Query { tenant, query } }
+    }
+
+    #[test]
+    fn two_query_batch_composes_exactly() {
+        // Two arrivals 10 µs apart fill a batch_max=2 batch: the flush
+        // happens at the second arrival, one worker serves both in one
+        // run. First query's batch wait is the 10 µs gap; both ride the
+        // same run service (3 µs + 5 µs).
+        let trace = hand_trace(vec![q(0.0, 0, 0), q(10e-6, 0, 1)]);
+        // Weight 2 so the DRR quantum covers both items in one run.
+        let cfg = QueueModelConfig {
+            workers: 1,
+            batch_max: 2,
+            batch_max_wait_s: 1.0,
+            run_max: 8,
+            weights: vec![2],
+            tenant_names: vec!["t".into()],
+            ..QueueModelConfig::default()
+        };
+        let rep = simulate(&trace, &[3e-6, 5e-6], &cfg);
+        assert_eq!(rep.global.queries, 2);
+        // Sojourns: q0 = 10 µs batch wait + 8 µs run; q1 = 0 + 8 µs.
+        assert!((rep.global.max_s - 18e-6).abs() < 1e-12, "{}", rep.global.max_s);
+        assert!((rep.global.mean_batch_wait_s - 5e-6).abs() < 1e-12);
+        assert!((rep.global.mean_service_s - 8e-6).abs() < 1e-12);
+        assert!((rep.makespan_s - 18e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn deadline_flush_bounds_batch_wait() {
+        // A lone arrival in a batch_max=32 batch flushes at the 20 µs
+        // deadline, not never.
+        let trace = hand_trace(vec![q(0.0, 0, 0)]);
+        let cfg = QueueModelConfig {
+            workers: 1,
+            batch_max: 32,
+            batch_max_wait_s: 20e-6,
+            weights: vec![1],
+            tenant_names: vec!["t".into()],
+            ..QueueModelConfig::default()
+        };
+        let rep = simulate(&trace, &[4e-6], &cfg);
+        assert!((rep.global.mean_batch_wait_s - 20e-6).abs() < 1e-12);
+        assert!((rep.global.max_s - 24e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mutation_write_window_stalls_dispatch() {
+        // A mutation arriving into an idle system admits immediately
+        // (inflight == 0) and blocks the query run behind its write
+        // window; the overlap surfaces as write_stall.
+        let trace = hand_trace(vec![
+            TraceEvent {
+                at_s: 0.0,
+                kind: EventKind::Mutate(MutationKind::Update { docs: vec![0, 1] }),
+            },
+            q(1e-6, 0, 0),
+        ]);
+        let cfg = QueueModelConfig {
+            workers: 1,
+            batch_max: 1,
+            batch_max_wait_s: 1.0,
+            weights: vec![1],
+            tenant_names: vec!["t".into()],
+            mutation_max_defer_s: 1.0,
+            write_s_per_doc: 50e-6,
+            ..QueueModelConfig::default()
+        };
+        let rep = simulate(&trace, &[4e-6], &cfg);
+        assert_eq!(rep.mutations, 1);
+        assert!((rep.mutation_apply_total_s - 100e-6).abs() < 1e-12);
+        // Query arrives at 1 µs, write window closes at 100 µs: 99 µs
+        // queue wait, all of it overlapping the write window.
+        assert!((rep.global.mean_queue_wait_s - 99e-6).abs() < 1e-12);
+        assert!((rep.global.mean_write_stall_s - 99e-6).abs() < 1e-12);
+        assert!(rep.global.mean_write_stall_s <= rep.global.mean_queue_wait_s + 1e-12);
+    }
+
+    #[test]
+    fn saturated_weights_protect_the_light_tenant() {
+        // Tenant 0 floods (90% of arrivals, weight 3), tenant 1 trickles
+        // (10%, weight 1, guaranteed 25% of capacity): the light tenant's
+        // p99 stays well under the heavy tenant's.
+        let cfg = TraceConfig {
+            n_queries: 4000,
+            distinct_queries: 32,
+            n_docs: 64,
+            target_qps: 600_000.0, // ~1.5x one worker at 2.5 µs/query
+            burst: BurstProfile::steady(),
+            tenant_mix: vec![0.9, 0.1],
+            seed: 99,
+            ..TraceConfig::default()
+        };
+        let trace = Trace::generate(&cfg);
+        let service: Vec<f64> = vec![2.5e-6; 32];
+        let qcfg = QueueModelConfig {
+            workers: 1,
+            batch_max: 32,
+            batch_max_wait_s: 20e-6,
+            run_max: 8,
+            weights: vec![3, 1],
+            tenant_names: vec!["gold".into(), "best_effort".into()],
+            ..QueueModelConfig::default()
+        };
+        let rep = simulate(&trace, &service, &qcfg);
+        assert_eq!(rep.global.queries, 4000);
+        let gold = &rep.tenants[0];
+        let light = &rep.tenants[1];
+        assert!(gold.queries > light.queries);
+        for t in [gold, light, &rep.global] {
+            assert!(t.p50_s.is_finite() && t.p50_s > 0.0);
+            assert!(t.p50_s <= t.p95_s && t.p95_s <= t.p99_s && t.p99_s <= t.max_s);
+        }
+        // The overloaded tenant's tail blows up; DRR keeps the light
+        // tenant's p99 orders of magnitude lower.
+        assert!(
+            light.p99_s * 5.0 < gold.p99_s,
+            "light p99 {} vs gold p99 {}",
+            light.p99_s,
+            gold.p99_s
+        );
+    }
+
+    #[test]
+    fn identical_runs_are_bit_identical() {
+        let cfg = TraceConfig {
+            n_queries: 1500,
+            distinct_queries: 48,
+            tenant_mix: vec![0.7, 0.3],
+            mutate_every: 200,
+            storm_mutations: 4,
+            target_qps: 200_000.0,
+            seed: 123,
+            ..TraceConfig::default()
+        };
+        let service: Vec<f64> = (0..48).map(|i| 2e-6 + i as f64 * 1e-8).collect();
+        let qcfg = QueueModelConfig {
+            workers: 2,
+            weights: vec![3, 1],
+            tenant_names: vec!["a".into(), "b".into()],
+            ..QueueModelConfig::default()
+        };
+        let a = simulate(&Trace::generate(&cfg), &service, &qcfg);
+        let b = simulate(&Trace::generate(&cfg), &service, &qcfg);
+        assert_eq!(a.digest(), b.digest());
+        assert_eq!(a.global.p99_s.to_bits(), b.global.p99_s.to_bits());
+        assert!(a.mutations > 0);
+        assert!(!a.render().is_empty());
+    }
+}

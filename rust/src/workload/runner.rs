@@ -1,0 +1,229 @@
+//! Live trace replay: drive a running [`Coordinator`] with a generated
+//! [`Trace`].
+//!
+//! The queueing model ([`super::queueing`]) answers "what latency does
+//! this schedule imply" deterministically; the runner answers "does the
+//! real serving stack survive this schedule" — it materializes the
+//! trace's abstract events into actual [`Coordinator::submit_for`] /
+//! [`Coordinator::submit_mutation`] calls, so the ingest batcher, DRR
+//! queues, serving workers, mutation admission and the per-tenant
+//! latency histograms all see genuine traffic. Wall-clock latencies come
+//! out of the coordinator's own metrics snapshot.
+//!
+//! Mutation materialization keeps a tombstone set so a trace that
+//! deletes document 7 and later updates it never issues a write against
+//! a dead id: deletes and updates target only still-resident documents
+//! of the initial corpus, and adds append fresh embeddings. Embedding
+//! payloads draw from a dedicated [`Pcg`] stream, so replay content is
+//! as reproducible as the schedule itself.
+
+use std::collections::BTreeSet;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::coordinator::{Coordinator, Mutation, MutationResponse, Query, Response};
+use crate::retrieval::quant::random_unit_rows;
+use crate::util::rng::Pcg;
+
+use super::trace::{EventKind, MutationKind, Trace};
+
+/// Replay knobs.
+#[derive(Debug, Clone)]
+pub struct ReplayOptions {
+    /// Pace the submission schedule at `trace time x time_scale` wall
+    /// seconds; `0.0` submits as fast as possible (a pure stress mode —
+    /// queue waits then reflect drain order, not the trace's arrival
+    /// gaps).
+    pub time_scale: f64,
+    /// Seed of the embedding stream used to materialize mutation
+    /// payloads.
+    pub payload_seed: u64,
+}
+
+impl Default for ReplayOptions {
+    fn default() -> Self {
+        ReplayOptions { time_scale: 0.0, payload_seed: 0xD0C5 }
+    }
+}
+
+/// What the replay observed (latency lives in the coordinator snapshot).
+#[derive(Debug, Clone, Default)]
+pub struct ReplayReport {
+    pub queries_submitted: u64,
+    pub queries_completed: u64,
+    pub query_errors: u64,
+    pub mutations_submitted: u64,
+    pub mutations_completed: u64,
+    pub mutation_errors: u64,
+    /// Mutation events dropped because every target was tombstoned.
+    pub mutations_skipped: u64,
+    pub wall_s: f64,
+}
+
+/// Turn one abstract mutation into a concrete [`Mutation`] against the
+/// resident corpus, respecting tombstones. Returns `None` when nothing
+/// is left to touch (all targets already deleted).
+fn materialize(
+    kind: &MutationKind,
+    tombstones: &mut BTreeSet<u64>,
+    rng: &mut Pcg,
+    dim: usize,
+) -> Option<Mutation> {
+    match kind {
+        MutationKind::Add { count } => {
+            let n = (*count).max(1);
+            let flat = random_unit_rows(n, dim, rng);
+            let docs = flat.chunks(dim).map(<[f32]>::to_vec).collect();
+            Some(Mutation::Add { docs })
+        }
+        MutationKind::Update { docs } => {
+            let live: Vec<u64> =
+                docs.iter().map(|&d| d as u64).filter(|id| !tombstones.contains(id)).collect();
+            if live.is_empty() {
+                return None;
+            }
+            let flat = random_unit_rows(live.len(), dim, rng);
+            let docs = live
+                .into_iter()
+                .zip(flat.chunks(dim))
+                .map(|(id, emb)| (id, emb.to_vec()))
+                .collect();
+            Some(Mutation::Update { docs })
+        }
+        MutationKind::Delete { docs } => {
+            let live: Vec<u64> =
+                docs.iter().map(|&d| d as u64).filter(|id| !tombstones.contains(id)).collect();
+            if live.is_empty() {
+                return None;
+            }
+            tombstones.extend(live.iter().copied());
+            Some(Mutation::Delete { ids: live })
+        }
+    }
+}
+
+/// Replay `trace` against a live coordinator. `queries[q]` is the
+/// embedding of distinct query `q` (the trace's pool index), and
+/// `tenant_names[t]` maps the trace's tenant index to a coordinator
+/// tenant. Blocks until every submitted request has completed.
+pub fn replay(
+    coord: &Coordinator,
+    trace: &Trace,
+    tenant_names: &[String],
+    queries: &[Vec<f32>],
+    dim: usize,
+    opts: &ReplayOptions,
+) -> Result<ReplayReport> {
+    assert!(!tenant_names.is_empty());
+    let mut report = ReplayReport::default();
+    let mut tombstones: BTreeSet<u64> = BTreeSet::new();
+    let mut payload_rng = Pcg::new(opts.payload_seed);
+    let mut query_rx: Vec<std::sync::mpsc::Receiver<Response>> =
+        Vec::with_capacity(trace.n_queries());
+    let mut mut_rx: Vec<std::sync::mpsc::Receiver<MutationResponse>> = Vec::new();
+
+    let started = Instant::now();
+    let t0 = trace.events.first().map_or(0.0, |e| e.at_s);
+    for ev in &trace.events {
+        if opts.time_scale > 0.0 {
+            let due = (ev.at_s - t0) * opts.time_scale;
+            let now = started.elapsed().as_secs_f64();
+            if due > now {
+                std::thread::sleep(Duration::from_secs_f64(due - now));
+            }
+        }
+        match &ev.kind {
+            EventKind::Query { tenant, query } => {
+                let name = &tenant_names[(*tenant).min(tenant_names.len() - 1)];
+                let emb = queries
+                    .get(*query)
+                    .unwrap_or_else(|| panic!("query pool missing index {query}"));
+                match coord.submit_for(name, Query::Embedding(emb.clone())) {
+                    Ok((_, rx)) => {
+                        report.queries_submitted += 1;
+                        query_rx.push(rx);
+                    }
+                    Err(_) => report.query_errors += 1,
+                }
+            }
+            EventKind::Mutate(kind) => {
+                let Some(m) = materialize(kind, &mut tombstones, &mut payload_rng, dim)
+                else {
+                    report.mutations_skipped += 1;
+                    continue;
+                };
+                match coord.submit_mutation(m) {
+                    Ok((_, rx)) => {
+                        report.mutations_submitted += 1;
+                        mut_rx.push(rx);
+                    }
+                    Err(_) => report.mutation_errors += 1,
+                }
+            }
+        }
+    }
+
+    // Drain: every accepted request must answer (the coordinator keeps
+    // serving while we block here, so this is also the backpressure).
+    for rx in query_rx {
+        match rx.recv() {
+            Ok(_) => report.queries_completed += 1,
+            Err(_) => report.query_errors += 1,
+        }
+    }
+    for rx in mut_rx {
+        match rx.recv() {
+            Ok(_) => report.mutations_completed += 1,
+            Err(_) => report.mutation_errors += 1,
+        }
+    }
+    report.wall_s = started.elapsed().as_secs_f64();
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn materialize_respects_tombstones() {
+        let mut tomb = BTreeSet::new();
+        let mut rng = Pcg::new(1);
+        let del = MutationKind::Delete { docs: vec![3, 5] };
+        let Some(Mutation::Delete { ids }) = materialize(&del, &mut tomb, &mut rng, 8)
+        else {
+            panic!("first delete materializes");
+        };
+        assert_eq!(ids, vec![3, 5]);
+        // A second delete of the same docs has nothing left to do.
+        assert!(materialize(&del, &mut tomb, &mut rng, 8).is_none());
+        // Updates skip the dead ids and keep the live ones.
+        let upd = MutationKind::Update { docs: vec![3, 4, 5] };
+        let Some(Mutation::Update { docs }) = materialize(&upd, &mut tomb, &mut rng, 8)
+        else {
+            panic!("update with one live target materializes");
+        };
+        assert_eq!(docs.len(), 1);
+        assert_eq!(docs[0].0, 4);
+        assert_eq!(docs[0].1.len(), 8);
+    }
+
+    #[test]
+    fn materialize_adds_fresh_unit_docs() {
+        let mut tomb = BTreeSet::new();
+        let mut rng = Pcg::new(2);
+        let add = MutationKind::Add { count: 3 };
+        let Some(Mutation::Add { docs }) = materialize(&add, &mut tomb, &mut rng, 16)
+        else {
+            panic!("add materializes");
+        };
+        assert_eq!(docs.len(), 3);
+        for d in &docs {
+            assert_eq!(d.len(), 16);
+            let norm: f32 = d.iter().map(|x| x * x).sum::<f32>().sqrt();
+            assert!((norm - 1.0).abs() < 1e-3, "unit rows, got norm {norm}");
+        }
+        assert!(tomb.is_empty());
+    }
+}

@@ -1,0 +1,330 @@
+//! Deterministic workload traces: seeded Zipfian popularity, bursty
+//! MMPP arrivals, mixed query/mutate traffic and churn storms.
+//!
+//! A [`Trace`] is a time-ordered event list generated entirely from a
+//! [`TraceConfig`] and its seed — the determinism contract is that the
+//! same config reproduces the same events bit-for-bit ([`Trace::digest`]
+//! gives a cheap identity check). Each concern draws from its own
+//! [`Pcg::fork`] stream (arrivals, query popularity, tenant assignment,
+//! mutation targets), so tweaking one knob never shifts another
+//! stream's draws.
+//!
+//! Events are abstract: queries carry a *pool index* into a caller-owned
+//! set of distinct query embeddings (index order is popularity order —
+//! index 0 is the hottest query), mutations carry document indices /
+//! counts that the replay layers materialize against their corpus.
+
+use crate::util::rng::Pcg;
+
+use super::arrivals::{ArrivalModel, BurstProfile};
+use super::zipf::Zipf;
+
+/// One mutation event's abstract payload.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum MutationKind {
+    /// Append `count` new documents.
+    Add { count: usize },
+    /// Re-program resident documents in place (Zipf-hot docs churn most).
+    Update { docs: Vec<usize> },
+    /// Tombstone resident documents.
+    Delete { docs: Vec<usize> },
+}
+
+impl MutationKind {
+    pub fn n_docs(&self) -> usize {
+        match self {
+            MutationKind::Add { count } => *count,
+            MutationKind::Update { docs } | MutationKind::Delete { docs } => docs.len(),
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum EventKind {
+    Query {
+        /// Tenant index (into the coordinator's tenant list).
+        tenant: usize,
+        /// Index into the distinct query pool; 0 is the hottest.
+        query: usize,
+    },
+    Mutate(MutationKind),
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    /// Arrival time on the trace's virtual clock (seconds from start).
+    pub at_s: f64,
+    pub kind: EventKind,
+}
+
+/// Everything that determines a trace, seed included.
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    /// Query arrivals to generate.
+    pub n_queries: usize,
+    /// Size of the distinct query pool the Zipf head draws from.
+    pub distinct_queries: usize,
+    /// Resident corpus size (update/delete targets).
+    pub n_docs: usize,
+    /// Zipf exponent for query and document popularity.
+    pub zipf_exponent: f64,
+    /// Base arrival rate on the virtual clock (queries per second).
+    pub target_qps: f64,
+    pub burst: BurstProfile,
+    /// Per-tenant traffic fractions (normalized by their sum).
+    pub tenant_mix: Vec<f64>,
+    /// One mutation every `mutate_every` query arrivals (0 = none).
+    pub mutate_every: usize,
+    /// Documents touched per mutation event.
+    pub mutation_docs: usize,
+    /// Churn storm: a back-to-back volley of this many mutation events
+    /// injected at the trace midpoint (0 = none).
+    pub storm_mutations: usize,
+    pub seed: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            n_queries: 10_000,
+            distinct_queries: 256,
+            n_docs: 2048,
+            zipf_exponent: 1.1,
+            target_qps: 10_000.0,
+            burst: BurstProfile::default(),
+            tenant_mix: vec![1.0],
+            mutate_every: 0,
+            mutation_docs: 8,
+            storm_mutations: 0,
+            seed: 0x10AD,
+        }
+    }
+}
+
+/// A generated, time-ordered workload trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Trace {
+    pub events: Vec<TraceEvent>,
+}
+
+impl Trace {
+    pub fn generate(cfg: &TraceConfig) -> Trace {
+        assert!(cfg.n_queries > 0 && cfg.distinct_queries > 0);
+        assert!(!cfg.tenant_mix.is_empty());
+        let mix_total: f64 = cfg.tenant_mix.iter().sum();
+        assert!(mix_total > 0.0, "tenant mix must have positive mass");
+        let tenant_cdf: Vec<f64> = cfg
+            .tenant_mix
+            .iter()
+            .scan(0.0, |acc, &w| {
+                assert!(w >= 0.0);
+                *acc += w / mix_total;
+                Some(*acc)
+            })
+            .collect();
+
+        let root = Pcg::new(cfg.seed);
+        let mut rng_arrive = root.fork(1);
+        let mut rng_rank = root.fork(2);
+        let mut rng_tenant = root.fork(3);
+        let mut rng_mut = root.fork(4);
+
+        let query_pop = Zipf::new(cfg.distinct_queries, cfg.zipf_exponent);
+        let doc_pop = Zipf::new(cfg.n_docs.max(1), cfg.zipf_exponent);
+        let mut arrivals = ArrivalModel::new(cfg.target_qps, cfg.burst.clone());
+
+        let mut events = Vec::with_capacity(cfg.n_queries + cfg.storm_mutations + 8);
+        let mut mutation_seq = 0usize;
+        let mut draw_mutation = |rng: &mut Pcg, seq: usize| -> MutationKind {
+            // Cycle update / add / delete so long traces exercise all
+            // three write paths; targets follow document popularity
+            // (hot documents churn most).
+            let mut docs = || -> Vec<usize> {
+                let mut set = std::collections::BTreeSet::new();
+                for _ in 0..cfg.mutation_docs.max(1) {
+                    set.insert(doc_pop.sample(rng));
+                }
+                set.into_iter().collect()
+            };
+            match seq % 3 {
+                0 => MutationKind::Update { docs: docs() },
+                1 => MutationKind::Add { count: cfg.mutation_docs.max(1) },
+                _ => MutationKind::Delete { docs: docs() },
+            }
+        };
+
+        let storm_at = cfg.n_queries / 2;
+        let mut t = 0.0f64;
+        for i in 0..cfg.n_queries {
+            t += arrivals.next_gap(&mut rng_arrive);
+            if cfg.storm_mutations > 0 && i == storm_at {
+                for _ in 0..cfg.storm_mutations {
+                    let kind = draw_mutation(&mut rng_mut, mutation_seq);
+                    mutation_seq += 1;
+                    events.push(TraceEvent { at_s: t, kind: EventKind::Mutate(kind) });
+                }
+            }
+            if cfg.mutate_every > 0 && i > 0 && i % cfg.mutate_every == 0 {
+                let kind = draw_mutation(&mut rng_mut, mutation_seq);
+                mutation_seq += 1;
+                events.push(TraceEvent { at_s: t, kind: EventKind::Mutate(kind) });
+            }
+            let u = rng_tenant.f64();
+            let tenant =
+                tenant_cdf.partition_point(|&c| c <= u).min(tenant_cdf.len() - 1);
+            let query = query_pop.sample(&mut rng_rank);
+            events.push(TraceEvent { at_s: t, kind: EventKind::Query { tenant, query } });
+        }
+        Trace { events }
+    }
+
+    pub fn n_queries(&self) -> usize {
+        self.events
+            .iter()
+            .filter(|e| matches!(e.kind, EventKind::Query { .. }))
+            .count()
+    }
+
+    pub fn n_mutations(&self) -> usize {
+        self.events.len() - self.n_queries()
+    }
+
+    /// Virtual-clock span from the first to the last arrival.
+    pub fn span_s(&self) -> f64 {
+        match (self.events.first(), self.events.last()) {
+            (Some(a), Some(b)) => b.at_s - a.at_s,
+            _ => 0.0,
+        }
+    }
+
+    /// FNV-1a over a canonical encoding of every event — two traces with
+    /// equal digests (and lengths) are the same schedule bit-for-bit.
+    pub fn digest(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut eat = |x: u64| {
+            for b in x.to_le_bytes() {
+                h ^= u64::from(b);
+                h = h.wrapping_mul(0x100_0000_01b3);
+            }
+        };
+        for ev in &self.events {
+            eat(ev.at_s.to_bits());
+            match &ev.kind {
+                EventKind::Query { tenant, query } => {
+                    eat(1);
+                    eat(*tenant as u64);
+                    eat(*query as u64);
+                }
+                EventKind::Mutate(m) => {
+                    match m {
+                        MutationKind::Add { count } => {
+                            eat(2);
+                            eat(*count as u64);
+                        }
+                        MutationKind::Update { docs } => {
+                            eat(3);
+                            for &d in docs {
+                                eat(d as u64);
+                            }
+                        }
+                        MutationKind::Delete { docs } => {
+                            eat(4);
+                            for &d in docs {
+                                eat(d as u64);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> TraceConfig {
+        TraceConfig {
+            n_queries: 600,
+            distinct_queries: 64,
+            n_docs: 512,
+            tenant_mix: vec![0.75, 0.25],
+            mutate_every: 100,
+            mutation_docs: 4,
+            storm_mutations: 6,
+            seed: 77,
+            ..TraceConfig::default()
+        }
+    }
+
+    #[test]
+    fn same_seed_replays_bit_identically() {
+        let a = Trace::generate(&cfg());
+        let b = Trace::generate(&cfg());
+        assert_eq!(a, b);
+        assert_eq!(a.digest(), b.digest());
+        let c = Trace::generate(&TraceConfig { seed: 78, ..cfg() });
+        assert_ne!(a.digest(), c.digest());
+    }
+
+    #[test]
+    fn event_mix_matches_config() {
+        let t = Trace::generate(&cfg());
+        assert_eq!(t.n_queries(), 600);
+        // 5 periodic mutations (at query 100..500) + the 6-event storm.
+        assert_eq!(t.n_mutations(), 5 + 6);
+        assert!(t.span_s() > 0.0);
+    }
+
+    #[test]
+    fn arrivals_are_time_ordered() {
+        let t = Trace::generate(&cfg());
+        for w in t.events.windows(2) {
+            assert!(w[0].at_s <= w[1].at_s);
+        }
+    }
+
+    #[test]
+    fn tenant_mix_is_respected() {
+        let t = Trace::generate(&cfg());
+        let mut per = [0usize; 2];
+        for ev in &t.events {
+            if let EventKind::Query { tenant, .. } = ev.kind {
+                per[tenant] += 1;
+            }
+        }
+        let frac = per[0] as f64 / (per[0] + per[1]) as f64;
+        assert!((0.68..0.82).contains(&frac), "tenant 0 got {frac}");
+    }
+
+    #[test]
+    fn query_popularity_is_zipf_skewed() {
+        let t = Trace::generate(&TraceConfig { n_queries: 5000, ..cfg() });
+        let mut counts = vec![0usize; 64];
+        for ev in &t.events {
+            if let EventKind::Query { query, .. } = ev.kind {
+                counts[query] += 1;
+            }
+        }
+        assert!(counts[0] > 4 * counts[32].max(1), "{:?}", &counts[..8]);
+    }
+
+    #[test]
+    fn mutation_targets_stay_in_corpus() {
+        let t = Trace::generate(&cfg());
+        for ev in &t.events {
+            if let EventKind::Mutate(m) = &ev.kind {
+                match m {
+                    MutationKind::Add { count } => assert_eq!(*count, 4),
+                    MutationKind::Update { docs } | MutationKind::Delete { docs } => {
+                        assert!(!docs.is_empty() && docs.len() <= 4);
+                        assert!(docs.windows(2).all(|w| w[0] < w[1]), "sorted, unique");
+                        assert!(docs.iter().all(|&d| d < 512));
+                    }
+                }
+            }
+        }
+    }
+}

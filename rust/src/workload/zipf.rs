@@ -1,0 +1,102 @@
+//! Zipfian popularity sampling over ranked items.
+//!
+//! Query and document popularity in retrieval serving is heavy-tailed:
+//! a few hot queries dominate traffic (the distribution the serving
+//! result cache's Zipfian replay gate already assumes). The sampler
+//! precomputes the normalized CDF of `weight(r) = (r+1)^-s` over `n`
+//! ranks and draws by binary search on one [`Pcg`] uniform — O(log n)
+//! per sample, fully deterministic under a seeded stream.
+
+use crate::util::rng::Pcg;
+
+/// Precomputed Zipf(`exponent`) CDF over `n` ranks; rank 0 is the most
+/// popular item. `exponent = 0` degrades to the uniform distribution.
+#[derive(Debug, Clone)]
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    pub fn new(n: usize, exponent: f64) -> Zipf {
+        assert!(n > 0, "Zipf over zero ranks");
+        assert!(exponent >= 0.0 && exponent.is_finite());
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0f64;
+        for r in 0..n {
+            acc += 1.0 / ((r + 1) as f64).powf(exponent);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for c in cdf.iter_mut() {
+            *c /= total;
+        }
+        // Guard the top edge against rounding so `sample` is total.
+        *cdf.last_mut().unwrap() = 1.0;
+        Zipf { cdf }
+    }
+
+    pub fn ranks(&self) -> usize {
+        self.cdf.len()
+    }
+
+    /// Draw one rank (0 = most popular).
+    pub fn sample(&self, rng: &mut Pcg) -> usize {
+        let u = rng.f64();
+        self.cdf.partition_point(|&c| c <= u).min(self.cdf.len() - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn head_ranks_dominate() {
+        let z = Zipf::new(256, 1.1);
+        let mut rng = Pcg::new(7);
+        let mut counts = vec![0u32; 256];
+        for _ in 0..20_000 {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        // Rank 0 beats the median rank by a wide margin, and the top 16
+        // ranks carry a large share of traffic.
+        assert!(counts[0] > 20 * counts[128].max(1));
+        let head: u32 = counts[..16].iter().sum();
+        assert!(head as f64 > 0.35 * 20_000.0, "head share {head}");
+    }
+
+    #[test]
+    fn exponent_zero_is_roughly_uniform() {
+        let z = Zipf::new(64, 0.0);
+        let mut rng = Pcg::new(11);
+        let mut counts = vec![0u32; 64];
+        for _ in 0..64_000 {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        for &c in &counts {
+            assert!((600..=1400).contains(&c), "uniform draw off: {c}");
+        }
+    }
+
+    #[test]
+    fn sampling_is_deterministic_per_seed() {
+        let z = Zipf::new(100, 0.9);
+        let draw = |seed: u64| {
+            let mut rng = Pcg::new(seed);
+            (0..50).map(|_| z.sample(&mut rng)).collect::<Vec<_>>()
+        };
+        assert_eq!(draw(3), draw(3));
+        assert_ne!(draw(3), draw(4));
+    }
+
+    #[test]
+    fn samples_stay_in_range() {
+        for n in [1usize, 2, 17] {
+            let z = Zipf::new(n, 1.3);
+            let mut rng = Pcg::new(n as u64);
+            for _ in 0..200 {
+                assert!(z.sample(&mut rng) < n);
+            }
+        }
+    }
+}

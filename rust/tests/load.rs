@@ -1,0 +1,177 @@
+//! Integration tests for the trace-driven load harness: trace
+//! determinism end-to-end through the queueing model, exact latency
+//! composition on a hand-built schedule, and a live replay smoke test
+//! through the full coordinator with per-tenant tail accounting.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use dirc_rag::coordinator::batcher::BatchPolicy;
+use dirc_rag::coordinator::{
+    Coordinator, CoordinatorConfig, Engine, SimEngine, TenantSpec,
+};
+use dirc_rag::dirc::chip::ChipConfig;
+use dirc_rag::retrieval::quant::{quantize, random_unit_rows, QuantScheme, Quantized};
+use dirc_rag::retrieval::score::Metric;
+use dirc_rag::util::rng::Pcg;
+use dirc_rag::workload::{
+    queueing, runner, EventKind, QueueModelConfig, Trace, TraceConfig, TraceEvent,
+};
+
+fn db(n: usize, dim: usize, seed: u64) -> Quantized {
+    let mut rng = Pcg::new(seed);
+    let fp = random_unit_rows(n, dim, &mut rng);
+    quantize(&fp, n, dim, QuantScheme::Int8)
+}
+
+/// The whole pipeline — trace generation through queueing-model
+/// percentiles — is a pure function of the seed: two runs agree bit for
+/// bit, and a different seed diverges.
+#[test]
+fn trace_and_model_are_reproducible_end_to_end() {
+    let tcfg = TraceConfig {
+        n_queries: 2000,
+        distinct_queries: 64,
+        n_docs: 256,
+        tenant_mix: vec![0.8, 0.2],
+        mutate_every: 250,
+        storm_mutations: 5,
+        target_qps: 150_000.0,
+        seed: 0xFEED,
+        ..TraceConfig::default()
+    };
+    let service: Vec<f64> = (0..64).map(|i| 1.5e-6 + i as f64 * 2e-8).collect();
+    let qcfg = QueueModelConfig {
+        workers: 2,
+        weights: vec![3, 1],
+        tenant_names: vec!["gold".into(), "light".into()],
+        ..QueueModelConfig::default()
+    };
+
+    let a = Trace::generate(&tcfg);
+    let b = Trace::generate(&tcfg);
+    assert_eq!(a.digest(), b.digest(), "same seed, same schedule");
+    assert_eq!(a.events.len(), b.events.len());
+
+    let ra = queueing::simulate(&a, &service, &qcfg);
+    let rb = queueing::simulate(&b, &service, &qcfg);
+    assert_eq!(ra.digest(), rb.digest(), "same schedule, same percentile bits");
+    for (x, y) in ra.tenants.iter().zip(&rb.tenants) {
+        assert_eq!(x.p50_s.to_bits(), y.p50_s.to_bits());
+        assert_eq!(x.p95_s.to_bits(), y.p95_s.to_bits());
+        assert_eq!(x.p99_s.to_bits(), y.p99_s.to_bits());
+    }
+
+    let c = Trace::generate(&TraceConfig { seed: 0xFEED + 1, ..tcfg });
+    assert_ne!(a.digest(), c.digest(), "seed changes the schedule");
+}
+
+/// Exact composition on a hand-built schedule: with one worker and
+/// immediate flushes, the second query's sojourn is its queue wait
+/// behind the first run plus its own service.
+#[test]
+fn queue_wait_composes_behind_a_busy_worker() {
+    let trace = Trace {
+        events: vec![
+            TraceEvent { at_s: 0.0, kind: EventKind::Query { tenant: 0, query: 0 } },
+            TraceEvent { at_s: 1e-6, kind: EventKind::Query { tenant: 0, query: 0 } },
+        ],
+    };
+    let qcfg = QueueModelConfig {
+        workers: 1,
+        batch_max: 1,
+        batch_max_wait_s: 1.0,
+        run_max: 1,
+        weights: vec![1],
+        tenant_names: vec!["t".into()],
+        ..QueueModelConfig::default()
+    };
+    let rep = queueing::simulate(&trace, &[10e-6], &qcfg);
+    assert_eq!(rep.global.queries, 2);
+    // q0: dispatches at 0, runs 10 µs. q1: ready at 1 µs, waits 9 µs for
+    // the worker, runs 10 µs — sojourn 19 µs.
+    assert!((rep.global.max_s - 19e-6).abs() < 1e-12, "{}", rep.global.max_s);
+    assert!((rep.global.mean_queue_wait_s - 4.5e-6).abs() < 1e-12);
+    assert!((rep.makespan_s - 20e-6).abs() < 1e-12);
+    assert_eq!(rep.global.mean_batch_wait_s, 0.0, "batch_max=1 flushes instantly");
+}
+
+/// Live replay smoke: a generated mixed query/mutation trace drives the
+/// real coordinator; every submission completes, per-tenant histograms
+/// report monotone tails, and the served counters keep the sum-to-global
+/// identity.
+#[test]
+fn live_replay_reports_per_tenant_tails() {
+    let dim = 128;
+    let n_docs = 512;
+    let distinct = 32;
+    let base = db(n_docs, dim, 11);
+    let engine = Arc::new(SimEngine::new(
+        ChipConfig { cores: 4, map_points: 25, ..ChipConfig::paper_default(dim, Metric::Mips) },
+        &base,
+    ));
+    let ccfg = CoordinatorConfig {
+        workers: 2,
+        batch: BatchPolicy { sizes: vec![16], max_wait: Duration::from_millis(1) },
+        tenants: vec![
+            TenantSpec { name: "gold".into(), weight: 3, plan: None },
+            TenantSpec { name: "light".into(), weight: 1, plan: None },
+        ],
+        ..CoordinatorConfig::default()
+    };
+    let coord = Coordinator::start_sim(Arc::clone(&engine) as Arc<dyn Engine>, ccfg);
+
+    let trace = Trace::generate(&TraceConfig {
+        n_queries: 400,
+        distinct_queries: distinct,
+        n_docs,
+        tenant_mix: vec![0.75, 0.25],
+        mutate_every: 100,
+        mutation_docs: 4,
+        storm_mutations: 3,
+        target_qps: 50_000.0,
+        seed: 21,
+        ..TraceConfig::default()
+    });
+    let mut rng = Pcg::new(33);
+    let queries: Vec<Vec<f32>> =
+        (0..distinct).map(|_| random_unit_rows(1, dim, &mut rng)).collect();
+    let names = vec!["gold".to_string(), "light".to_string()];
+    let rep = runner::replay(
+        &coord,
+        &trace,
+        &names,
+        &queries,
+        dim,
+        &runner::ReplayOptions::default(),
+    )
+    .expect("replay");
+
+    assert_eq!(rep.queries_submitted, trace.n_queries() as u64);
+    assert_eq!(rep.queries_completed, rep.queries_submitted);
+    assert_eq!(rep.query_errors, 0);
+    assert_eq!(
+        rep.mutations_submitted + rep.mutations_skipped,
+        trace.n_mutations() as u64
+    );
+    assert_eq!(rep.mutations_completed, rep.mutations_submitted);
+    assert_eq!(rep.mutation_errors, 0);
+
+    let snap = coord.shutdown();
+    assert_eq!(snap.served, rep.queries_completed);
+    assert_eq!(snap.errors, 0);
+    let served_sum: u64 = snap.tenants.iter().map(|t| t.served).sum();
+    assert_eq!(served_sum, snap.served, "per-tenant served sums to global");
+
+    assert!(snap.host_latency_p50_s.is_finite() && snap.host_latency_p50_s > 0.0);
+    assert!(snap.host_latency_p50_s <= snap.host_latency_p95_s);
+    assert!(snap.host_latency_p95_s <= snap.host_latency_p99_s);
+    for t in &snap.tenants {
+        assert!(t.served > 0, "both tenants saw traffic");
+        assert!(t.host_latency_p50_s.is_finite() && t.host_latency_p50_s > 0.0);
+        assert!(t.host_latency_p50_s <= t.host_latency_p95_s);
+        assert!(t.host_latency_p95_s <= t.host_latency_p99_s);
+    }
+    let text = snap.render();
+    assert!(text.contains("p99"), "render surfaces tails:\n{text}");
+}
