@@ -1,0 +1,832 @@
+//! Determinism & concurrency contract lint for `dirc_rag`.
+//!
+//! The crate's pinned gates — bit-identical serial==pooled goldens,
+//! fleet shard-count invariance, cache-hit-equals-recompute — rest on
+//! written contracts that this lint machine-checks over `rust/src`:
+//!
+//! * **`hash-collections`** — no `HashMap`/`HashSet` in deterministic
+//!   modules (anything under `dirc/`, `sim/`, `retrieval/`, `fleet/`,
+//!   `eval/`, `data/`, `workload/`, `baseline/`): iteration order could
+//!   leak into results, digests or stat merges. Use `BTreeMap`/
+//!   `BTreeSet` or sorted vectors.
+//! * **`naked-rng`** — no `Pcg::new` outside the stream-owning modules
+//!   (`util/rng.rs`, `util/prop.rs`, `retrieval/plan.rs`): forks must go
+//!   through `split`/`keyed`/the plan nonce contract so no call site can
+//!   silently correlate or shift another site's stream.
+//! * **`wall-clock`** — no `Instant`/`SystemTime` in modeled
+//!   (virtual-time) paths: the cycle/queueing models must be functions
+//!   of their inputs alone. The live-replay harness
+//!   (`workload/runner.rs`) measures real time by design and is exempt.
+//! * **`undocumented-unsafe`** / **`undocumented-ordering`** — every
+//!   `unsafe` item needs an adjacent `// SAFETY:` comment and every
+//!   non-`SeqCst` atomic ordering an adjacent `// ORDERING:` comment.
+//!
+//! `#[cfg(test)]` regions are skipped (tests and benches own their
+//! seeds and may use wall clocks and hash maps freely). Remaining
+//! intentional uses are suppressed by `rust/lint/allowlist.txt`;
+//! entries that no longer match any source line are reported **stale**
+//! and fail the run, so suppressions cannot outlive the code they
+//! justify.
+//!
+//! The analysis is token-level, not AST-level: sources are masked
+//! (comments and string/char literals blanked, with comment text and
+//! line structure preserved) and rules match word-boundary tokens on
+//! the masked code. This keeps the lint dependency-free — the offline
+//! build environment has no `syn` — while staying immune to false
+//! positives from strings, comments and test modules.
+
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+pub const RULE_HASH: &str = "hash-collections";
+pub const RULE_RNG: &str = "naked-rng";
+pub const RULE_WALLCLOCK: &str = "wall-clock";
+pub const RULE_UNSAFE: &str = "undocumented-unsafe";
+pub const RULE_ORDERING: &str = "undocumented-ordering";
+
+/// Every rule id, for allowlist validation.
+pub const RULES: &[&str] =
+    &[RULE_HASH, RULE_RNG, RULE_WALLCLOCK, RULE_UNSAFE, RULE_ORDERING];
+
+/// Module prefixes whose results/digests/stat merges must be independent
+/// of map iteration order (the `hash-collections` + `wall-clock` scope).
+const DETERMINISTIC_PREFIXES: &[&str] = &[
+    "baseline/", "data/", "dirc/", "eval/", "fleet/", "retrieval/", "sim/",
+    "workload/",
+];
+
+/// Files inside the deterministic prefixes that measure real wall time
+/// by design (the live replay drives an actual coordinator).
+const WALLCLOCK_EXEMPT: &[&str] = &["workload/runner.rs"];
+
+/// The RNG stream-owning modules: the only places allowed to construct
+/// root `Pcg` streams (`Pcg::new`). `util/rng.rs` defines the generator
+/// and its `split`/`keyed` fork contract, `retrieval/plan.rs` owns the
+/// plan nonce derivation, `util/prop.rs` owns the property-test harness
+/// root stream.
+const RNG_OWNERS: &[&str] = &["retrieval/plan.rs", "util/prop.rs", "util/rng.rs"];
+
+/// How far above an `unsafe`/ordering site the tag comment may sit: the
+/// walk skips blank lines, attributes and further comment lines, and
+/// gives up after this many lines (malformed files only).
+const COMMENT_WALK_LIMIT: usize = 40;
+
+/// One rule hit, in repo-relative terms.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    /// Rule id (one of [`RULES`]).
+    pub rule: &'static str,
+    /// Path relative to the scanned source root, `/`-separated.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// The original (unmasked) source line, trimmed.
+    pub line_text: String,
+    /// Human explanation with the suggested fix.
+    pub message: String,
+}
+
+/// One parsed allowlist entry: `rule | path-suffix | line-pattern | reason`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AllowEntry {
+    /// 1-based line in the allowlist file (for stale reporting).
+    pub source_line: usize,
+    pub rule: String,
+    /// Suffix of the repo-relative file path (`coordinator/server.rs`).
+    pub path: String,
+    /// Substring that must appear on the violating source line.
+    pub pattern: String,
+    pub reason: String,
+}
+
+/// A parsed allowlist.
+#[derive(Debug, Clone, Default)]
+pub struct Allowlist {
+    pub entries: Vec<AllowEntry>,
+}
+
+impl Allowlist {
+    /// Parse the `rule | path | pattern | reason` line format. `#`-lines
+    /// and blanks are comments. Malformed lines are hard errors — a
+    /// suppression that silently fails to parse would un-gate its rule.
+    pub fn parse(text: &str) -> Result<Allowlist, String> {
+        let mut entries = Vec::new();
+        for (i, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let parts: Vec<&str> = line.splitn(4, '|').map(str::trim).collect();
+            if parts.len() != 4 || parts.iter().any(|p| p.is_empty()) {
+                return Err(format!(
+                    "allowlist line {}: expected `rule | path | pattern | reason`, got `{line}`",
+                    i + 1
+                ));
+            }
+            if !RULES.contains(&parts[0]) {
+                return Err(format!(
+                    "allowlist line {}: unknown rule `{}` (known: {})",
+                    i + 1,
+                    parts[0],
+                    RULES.join(", ")
+                ));
+            }
+            entries.push(AllowEntry {
+                source_line: i + 1,
+                rule: parts[0].to_string(),
+                path: parts[1].to_string(),
+                pattern: parts[2].to_string(),
+                reason: parts[3].to_string(),
+            });
+        }
+        Ok(Allowlist { entries })
+    }
+}
+
+/// The result of linting a source tree.
+#[derive(Debug, Default)]
+pub struct Outcome {
+    /// Unsuppressed violations, ordered by (file, line).
+    pub violations: Vec<Violation>,
+    /// Violations silenced by the allowlist.
+    pub suppressed: Vec<Violation>,
+    /// Allowlist entries whose pattern matches no line of the named file
+    /// (or whose file no longer exists): the suppression outlived the
+    /// code it justified and must be deleted.
+    pub stale: Vec<AllowEntry>,
+    /// `.rs` files scanned.
+    pub files_scanned: usize,
+}
+
+impl Outcome {
+    /// Whether the tree passes the gate (no violations, no stale
+    /// suppressions).
+    pub fn clean(&self) -> bool {
+        self.violations.is_empty() && self.stale.is_empty()
+    }
+}
+
+/// A source file after comment/string masking: `lines` is the code with
+/// every comment and string/char literal blanked to spaces (line
+/// structure intact), `comments` the comment text per line, `in_test`
+/// whether the line sits inside a `#[cfg(test)]`-gated block.
+struct Masked {
+    lines: Vec<String>,
+    orig: Vec<String>,
+    comments: Vec<String>,
+    in_test: Vec<bool>,
+}
+
+/// Mask comments and string/char literals. Handles line comments, nested
+/// block comments, string literals with escapes, byte strings, raw (and
+/// raw byte) strings with `#` guards, char literals, and leaves
+/// lifetimes alone. Newlines survive in every state so line numbers are
+/// preserved.
+fn mask_source(src: &str) -> Masked {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut code = String::with_capacity(src.len());
+    let mut comments: Vec<String> = vec![String::new()];
+    let mut i = 0usize;
+
+    // Inner helper: blank one char into `code`, keeping newlines (and
+    // appending comment text when `comment` is set).
+    macro_rules! blank {
+        ($ch:expr, $comment:expr) => {{
+            if $ch == '\n' {
+                code.push('\n');
+                comments.push(String::new());
+            } else {
+                if $comment {
+                    comments.last_mut().expect("line").push($ch);
+                }
+                code.push(' ');
+            }
+        }};
+    }
+
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            code.push('\n');
+            comments.push(String::new());
+            i += 1;
+            continue;
+        }
+        // Line comment.
+        if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+            while i < n && chars[i] != '\n' {
+                blank!(chars[i], true);
+                i += 1;
+            }
+            continue;
+        }
+        // Block comment (Rust block comments nest).
+        if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+            let mut depth = 0usize;
+            while i < n {
+                if chars[i] == '/' && i + 1 < n && chars[i + 1] == '*' {
+                    depth += 1;
+                    blank!('/', true);
+                    blank!('*', true);
+                    i += 2;
+                } else if chars[i] == '*' && i + 1 < n && chars[i + 1] == '/' {
+                    depth -= 1;
+                    blank!('*', true);
+                    blank!('/', true);
+                    i += 2;
+                    if depth == 0 {
+                        break;
+                    }
+                } else {
+                    blank!(chars[i], true);
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Identifiers — also the gate for raw/byte string prefixes.
+        if c.is_alphanumeric() || c == '_' {
+            let start = i;
+            while i < n && (chars[i].is_alphanumeric() || chars[i] == '_') {
+                i += 1;
+            }
+            let is_str_prefix = matches!(
+                src_slice(&chars, start, i).as_str(),
+                "r" | "b" | "br"
+            );
+            let raw_capable = matches!(
+                src_slice(&chars, start, i).as_str(),
+                "r" | "br"
+            );
+            let starts_string = is_str_prefix
+                && i < n
+                && (chars[i] == '"' || (raw_capable && chars[i] == '#'));
+            if !starts_string {
+                for k in start..i {
+                    code.push(chars[k]);
+                }
+                continue;
+            }
+            // Blank the prefix and fall through to the string handlers
+            // below by not consuming the quote here.
+            for _ in start..i {
+                code.push(' ');
+            }
+            if raw_capable {
+                // Raw string: count '#' guards, expect '"', then scan for
+                // '"' + same number of '#'.
+                let mut hashes = 0usize;
+                while i < n && chars[i] == '#' {
+                    hashes += 1;
+                    blank!('#', false);
+                    i += 1;
+                }
+                if i < n && chars[i] == '"' {
+                    blank!('"', false);
+                    i += 1;
+                    'raw: while i < n {
+                        if chars[i] == '"' {
+                            let mut k = 0usize;
+                            while k < hashes && i + 1 + k < n && chars[i + 1 + k] == '#' {
+                                k += 1;
+                            }
+                            if k == hashes {
+                                blank!('"', false);
+                                i += 1;
+                                for _ in 0..hashes {
+                                    blank!('#', false);
+                                    i += 1;
+                                }
+                                break 'raw;
+                            }
+                        }
+                        blank!(chars[i], false);
+                        i += 1;
+                    }
+                }
+                continue;
+            }
+            // Byte string `b"..."`: same escape rules as a normal string
+            // (masked inline — `c` still holds the prefix char, so the
+            // '"' branch below would not see the opening quote).
+            blank!('"', false);
+            i += 1;
+            while i < n {
+                if chars[i] == '\\' && i + 1 < n {
+                    blank!(chars[i], false);
+                    blank!(chars[i + 1], false);
+                    i += 2;
+                    continue;
+                }
+                if chars[i] == '"' {
+                    blank!('"', false);
+                    i += 1;
+                    break;
+                }
+                blank!(chars[i], false);
+                i += 1;
+            }
+            continue;
+        }
+        // String literal with escapes (multi-line capable).
+        if c == '"' {
+            blank!('"', false);
+            i += 1;
+            while i < n {
+                if chars[i] == '\\' && i + 1 < n {
+                    blank!(chars[i], false);
+                    blank!(chars[i + 1], false);
+                    i += 2;
+                    continue;
+                }
+                if chars[i] == '"' {
+                    blank!('"', false);
+                    i += 1;
+                    break;
+                }
+                blank!(chars[i], false);
+                i += 1;
+            }
+            continue;
+        }
+        // Char literal vs lifetime.
+        if c == '\'' {
+            let is_char_lit = if i + 1 < n && chars[i + 1] == '\\' {
+                true
+            } else {
+                i + 2 < n && chars[i + 2] == '\'' && chars[i + 1] != '\''
+            };
+            if is_char_lit {
+                blank!('\'', false);
+                i += 1;
+                while i < n {
+                    if chars[i] == '\\' && i + 1 < n {
+                        blank!(chars[i], false);
+                        blank!(chars[i + 1], false);
+                        i += 2;
+                        continue;
+                    }
+                    if chars[i] == '\'' {
+                        blank!('\'', false);
+                        i += 1;
+                        break;
+                    }
+                    blank!(chars[i], false);
+                    i += 1;
+                }
+                continue;
+            }
+            // Lifetime / loop label: keep verbatim.
+            code.push('\'');
+            i += 1;
+            continue;
+        }
+        code.push(c);
+        i += 1;
+    }
+
+    let lines: Vec<String> = code.split('\n').map(str::to_string).collect();
+    let orig: Vec<String> = src.split('\n').map(str::to_string).collect();
+    let mut comments = comments;
+    comments.resize(lines.len(), String::new());
+    let in_test = mark_test_regions(&lines);
+    Masked { lines, orig, comments, in_test }
+}
+
+fn src_slice(chars: &[char], a: usize, b: usize) -> String {
+    chars[a..b].iter().collect()
+}
+
+/// Mark every line inside a `#[cfg(test)]`- (or `#[cfg(all(test`-) gated
+/// brace block. Works on masked code, so braces in strings/comments
+/// cannot desync the matcher.
+fn mark_test_regions(lines: &[String]) -> Vec<bool> {
+    let mut in_test = vec![false; lines.len()];
+    let mut l = 0usize;
+    while l < lines.len() {
+        let line = &lines[l];
+        let hit = line.find("#[cfg(test)]").or_else(|| line.find("#[cfg(all(test"));
+        let Some(col) = hit else {
+            l += 1;
+            continue;
+        };
+        // Find the block opened after the attribute and brace-match it.
+        let mut depth = 0usize;
+        let mut opened = false;
+        let mut end = lines.len() - 1;
+        let mut cur = l;
+        let mut start_col = col;
+        'scan: while cur < lines.len() {
+            for (ci, ch) in lines[cur].char_indices() {
+                if cur == l && ci < start_col {
+                    continue;
+                }
+                match ch {
+                    '{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    '}' => {
+                        if opened {
+                            depth -= 1;
+                            if depth == 0 {
+                                end = cur;
+                                break 'scan;
+                            }
+                        }
+                    }
+                    // A `;` before any `{` ends the gated item (e.g. a
+                    // gated `use` or `mod tests;`): only that item is
+                    // test-scoped.
+                    ';' if !opened => {
+                        end = cur;
+                        break 'scan;
+                    }
+                    _ => {}
+                }
+            }
+            cur += 1;
+            start_col = 0;
+        }
+        for flag in in_test.iter_mut().take(end + 1).skip(l) {
+            *flag = true;
+        }
+        l = end + 1;
+    }
+    in_test
+}
+
+/// Byte-level word-boundary search (identifier chars: alnum, `_`, and
+/// any non-ASCII byte, conservatively).
+fn find_word_from(line: &str, word: &str, from: usize) -> Option<usize> {
+    let bytes = line.as_bytes();
+    let is_ident = |b: u8| b.is_ascii_alphanumeric() || b == b'_' || b >= 0x80;
+    let mut at = from;
+    while at <= line.len() {
+        let Some(rel) = line.get(at..).and_then(|s| s.find(word)) else {
+            return None;
+        };
+        let p = at + rel;
+        let before_ok = p == 0 || !is_ident(bytes[p - 1]);
+        let end = p + word.len();
+        let after_ok = end >= bytes.len() || !is_ident(bytes[end]);
+        if before_ok && after_ok {
+            return Some(p);
+        }
+        at = p + word.len().max(1);
+    }
+    None
+}
+
+fn has_word(line: &str, word: &str) -> bool {
+    find_word_from(line, word, 0).is_some()
+}
+
+/// Whether `line` contains `Pcg :: new` as a token sequence.
+fn has_pcg_new(line: &str) -> bool {
+    let mut from = 0;
+    while let Some(p) = find_word_from(line, "Pcg", from) {
+        let rest = line[p + 3..].trim_start();
+        if let Some(r2) = rest.strip_prefix("::") {
+            let r2 = r2.trim_start();
+            if r2.starts_with("new")
+                && !r2[3..].starts_with(|c: char| c.is_alphanumeric() || c == '_')
+            {
+                return true;
+            }
+        }
+        from = p + 3;
+    }
+    false
+}
+
+/// The non-SeqCst ordering mentioned on `line`, if any.
+fn non_seqcst_ordering(line: &str) -> Option<&'static str> {
+    for variant in ["Relaxed", "Acquire", "Release", "AcqRel"] {
+        let mut from = 0;
+        while let Some(p) = find_word_from(line, "Ordering", from) {
+            let rest = line[p + "Ordering".len()..].trim_start();
+            if let Some(r2) = rest.strip_prefix("::") {
+                if r2.trim_start().starts_with(variant) {
+                    return Some(variant);
+                }
+            }
+            from = p + "Ordering".len();
+        }
+    }
+    None
+}
+
+/// Whether line `at` carries `tag` in a same-line comment or in the
+/// contiguous comment/attribute block directly above it.
+fn has_tag_comment(m: &Masked, at: usize, tag: &str) -> bool {
+    if m.comments[at].contains(tag) {
+        return true;
+    }
+    let mut k = at;
+    let mut walked = 0usize;
+    while k > 0 && walked < COMMENT_WALK_LIMIT {
+        k -= 1;
+        walked += 1;
+        if m.comments[k].contains(tag) {
+            return true;
+        }
+        let code = m.lines[k].trim();
+        let pure_comment_or_blank = code.is_empty();
+        let attribute = code.starts_with("#[") || code.starts_with("#!");
+        if !pure_comment_or_blank && !attribute {
+            return false; // hit real code without finding the tag
+        }
+    }
+    false
+}
+
+fn path_has_prefix(rel: &str, prefixes: &[&str]) -> bool {
+    prefixes.iter().any(|p| rel.starts_with(p))
+}
+
+fn path_in(rel: &str, files: &[&str]) -> bool {
+    files.iter().any(|f| rel == *f)
+}
+
+/// Lint one file's source given its root-relative path.
+pub fn lint_source(rel: &str, src: &str) -> Vec<Violation> {
+    let m = mask_source(src);
+    let mut out = Vec::new();
+    let deterministic = path_has_prefix(rel, DETERMINISTIC_PREFIXES);
+    let wallclock_scoped = deterministic && !path_in(rel, WALLCLOCK_EXEMPT);
+    let rng_scoped = !path_in(rel, RNG_OWNERS);
+    let mut push = |rule: &'static str, line: usize, message: String| {
+        out.push(Violation {
+            rule,
+            file: rel.to_string(),
+            line: line + 1,
+            line_text: m.orig.get(line).map_or_else(String::new, |l| l.trim().to_string()),
+            message,
+        });
+    };
+    for (l, code) in m.lines.iter().enumerate() {
+        if m.in_test[l] {
+            continue;
+        }
+        if deterministic {
+            for coll in ["HashMap", "HashSet"] {
+                if has_word(code, coll) {
+                    push(
+                        RULE_HASH,
+                        l,
+                        format!(
+                            "{coll} in deterministic module: iteration order could leak \
+                             into results/digests/stat merges; use BTree{} or a sorted Vec",
+                            &coll[4..]
+                        ),
+                    );
+                }
+            }
+        }
+        if rng_scoped && has_pcg_new(code) {
+            push(
+                RULE_RNG,
+                l,
+                "naked Pcg::new outside the stream-owning modules: fork via \
+                 split()/keyed()/the plan nonce contract, or justify root-stream \
+                 ownership in the allowlist"
+                    .to_string(),
+            );
+        }
+        if wallclock_scoped {
+            for clock in ["Instant", "SystemTime"] {
+                if has_word(code, clock) {
+                    push(
+                        RULE_WALLCLOCK,
+                        l,
+                        format!(
+                            "{clock} in a modeled (virtual-time) path: model outputs \
+                             must be functions of their inputs alone"
+                        ),
+                    );
+                }
+            }
+        }
+        if has_word(code, "unsafe") && !has_tag_comment(&m, l, "SAFETY:") {
+            push(
+                RULE_UNSAFE,
+                l,
+                "unsafe without an adjacent `// SAFETY:` comment documenting the \
+                 invariant that makes it sound"
+                    .to_string(),
+            );
+        }
+        if let Some(variant) = non_seqcst_ordering(code) {
+            if !has_tag_comment(&m, l, "ORDERING:") {
+                push(
+                    RULE_ORDERING,
+                    l,
+                    format!(
+                        "Ordering::{variant} without an adjacent `// ORDERING:` comment \
+                         explaining why the relaxation is sound"
+                    ),
+                );
+            }
+        }
+    }
+    out
+}
+
+/// Recursively collect `.rs` files under `root`, sorted for determinism.
+fn rs_files(root: &Path) -> std::io::Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        let mut entries: Vec<PathBuf> = std::fs::read_dir(&dir)?
+            .collect::<std::io::Result<Vec<_>>>()?
+            .into_iter()
+            .map(|e| e.path())
+            .collect();
+        entries.sort();
+        for p in entries {
+            if p.is_dir() {
+                stack.push(p);
+            } else if p.extension().is_some_and(|e| e == "rs") {
+                out.push(p);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Lint every `.rs` file under `src_root`, applying `allow`.
+pub fn lint_dir(src_root: &Path, allow: &Allowlist) -> std::io::Result<Outcome> {
+    let files = rs_files(src_root)?;
+    let mut outcome = Outcome { files_scanned: files.len(), ..Outcome::default() };
+    // Original lines per relative path, for stale-entry detection.
+    let mut sources: Vec<(String, String)> = Vec::new();
+    let mut raw: Vec<Violation> = Vec::new();
+    for path in &files {
+        let rel = path
+            .strip_prefix(src_root)
+            .expect("walked under root")
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy().into_owned())
+            .collect::<Vec<_>>()
+            .join("/");
+        let src = std::fs::read_to_string(path)?;
+        raw.extend(lint_source(&rel, &src));
+        sources.push((rel, src));
+    }
+    for v in raw {
+        let suppressed = allow.entries.iter().any(|e| {
+            e.rule == v.rule && v.file.ends_with(&e.path) && v.line_text.contains(&e.pattern)
+        });
+        if suppressed {
+            outcome.suppressed.push(v);
+        } else {
+            outcome.violations.push(v);
+        }
+    }
+    outcome.violations.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    // Stale entries: pattern matches no line of any file the path names.
+    for e in &allow.entries {
+        let alive = sources.iter().any(|(rel, src)| {
+            rel.ends_with(&e.path) && src.lines().any(|l| l.contains(&e.pattern))
+        });
+        if !alive {
+            outcome.stale.push(e.clone());
+        }
+    }
+    Ok(outcome)
+}
+
+/// Render the human/artifact report.
+pub fn render_report(src_root: &Path, allow_path: &Path, outcome: &Outcome) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "dirc-lint report");
+    let _ = writeln!(s, "  source root : {}", src_root.display());
+    let _ = writeln!(s, "  allowlist   : {}", allow_path.display());
+    let _ = writeln!(s, "  files       : {}", outcome.files_scanned);
+    let _ = writeln!(s, "  suppressed  : {}", outcome.suppressed.len());
+    if outcome.violations.is_empty() {
+        let _ = writeln!(s, "violations  : none");
+    } else {
+        let _ = writeln!(s, "violations  : {}", outcome.violations.len());
+        for v in &outcome.violations {
+            let _ = writeln!(s, "  {}:{} [{}]", v.file, v.line, v.rule);
+            let _ = writeln!(s, "      {}", v.line_text);
+            let _ = writeln!(s, "      {}", v.message);
+        }
+    }
+    if outcome.stale.is_empty() {
+        let _ = writeln!(s, "stale allowlist entries: none");
+    } else {
+        let _ = writeln!(s, "stale allowlist entries: {}", outcome.stale.len());
+        for e in &outcome.stale {
+            let _ = writeln!(
+                s,
+                "  allowlist:{} `{} | {} | {}` matches no source line — delete it",
+                e.source_line, e.rule, e.path, e.pattern
+            );
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn masking_strips_strings_and_comments() {
+        let src = "let a = \"HashMap\"; // HashMap in comment\nlet b = 1;\n";
+        let m = mask_source(src);
+        assert!(!has_word(&m.lines[0], "HashMap"), "{}", m.lines[0]);
+        assert!(m.comments[0].contains("HashMap in comment"));
+        assert_eq!(m.lines[1].trim(), "let b = 1;");
+    }
+
+    #[test]
+    fn masking_handles_raw_strings_and_chars() {
+        let src = "let r = r#\"Pcg::new(\" inside\"#; let c = '\"'; let l: &'static str = x;\n";
+        let m = mask_source(src);
+        assert!(!has_pcg_new(&m.lines[0]));
+        assert!(m.lines[0].contains("'static"), "{}", m.lines[0]);
+    }
+
+    #[test]
+    fn masking_handles_byte_strings() {
+        let src = "let b = b\"HashMap \\\" Instant\"; let x = HashSet::new();\n";
+        let m = mask_source(src);
+        assert!(!has_word(&m.lines[0], "HashMap"), "{}", m.lines[0]);
+        assert!(!has_word(&m.lines[0], "Instant"), "{}", m.lines[0]);
+        // Code after the byte string must survive unmasked.
+        assert!(has_word(&m.lines[0], "HashSet"), "{}", m.lines[0]);
+    }
+
+    #[test]
+    fn nested_block_comments_mask() {
+        let src = "/* outer /* Instant */ still comment */ let x = 1;\n";
+        let m = mask_source(src);
+        assert!(!has_word(&m.lines[0], "Instant"));
+        assert!(m.lines[0].contains("let x = 1;"));
+    }
+
+    #[test]
+    fn test_regions_are_skipped() {
+        let src = "\
+fn live() { let h = HashMap::new(); }
+#[cfg(test)]
+mod tests {
+    fn t() { let h = HashMap::new(); }
+}
+";
+        let v = lint_source("dirc/x.rs", src);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].line, 1);
+    }
+
+    #[test]
+    fn pcg_new_token_sequence() {
+        assert!(has_pcg_new("let r = Pcg::new(7);"));
+        assert!(has_pcg_new("Pcg :: new(7)"));
+        assert!(!has_pcg_new("MyPcg::new(7)"));
+        assert!(!has_pcg_new("Pcg::new_like(7)"));
+        assert!(!has_pcg_new("Pcg::keyed(1, 2)"));
+    }
+
+    #[test]
+    fn ordering_detection_ignores_seqcst_and_cmp() {
+        assert_eq!(non_seqcst_ordering("x.load(Ordering::SeqCst)"), None);
+        assert_eq!(non_seqcst_ordering("Ordering::Less => {}"), None);
+        assert_eq!(non_seqcst_ordering("x.load(Ordering::Relaxed)"), Some("Relaxed"));
+        assert_eq!(
+            non_seqcst_ordering("x.store(true, atomic::Ordering::Release)"),
+            Some("Release")
+        );
+    }
+
+    #[test]
+    fn tag_comment_walks_over_attributes() {
+        let src = "\
+// SAFETY: sound because reasons spanning
+// multiple comment lines.
+#[allow(unsafe_code)]
+unsafe impl Send for X {}
+";
+        assert!(lint_source("runtime/x.rs", src).is_empty());
+        let bare = "unsafe impl Send for X {}\n";
+        let v = lint_source("runtime/x.rs", bare);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, RULE_UNSAFE);
+    }
+
+    #[test]
+    fn allowlist_parses_and_rejects_malformed() {
+        let ok = "# comment\nnaked-rng | workload/trace.rs | Pcg::new(cfg.seed) | root stream\n";
+        let a = Allowlist::parse(ok).unwrap();
+        assert_eq!(a.entries.len(), 1);
+        assert_eq!(a.entries[0].rule, "naked-rng");
+        assert!(Allowlist::parse("bogus-rule | a | b | c\n").is_err());
+        assert!(Allowlist::parse("naked-rng | only-three | fields\n").is_err());
+    }
+}

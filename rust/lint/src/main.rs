@@ -1,0 +1,83 @@
+//! `dirc-lint` — gate the determinism & concurrency contracts over
+//! `rust/src`.
+//!
+//! ```text
+//! cargo run -p dirc-lint                 # lint rust/src with the committed allowlist
+//! cargo run -p dirc-lint -- --report lint-report.txt
+//! cargo run -p dirc-lint -- --stale-only # only check allowlist hygiene (bench-smoke)
+//! ```
+//!
+//! Exit codes: `0` clean, `1` contract violations, `2` stale allowlist
+//! entries (suppressions whose code is gone) or usage/IO errors.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use dirc_lint::{lint_dir, render_report, Allowlist};
+
+struct Opts {
+    src: PathBuf,
+    allowlist: PathBuf,
+    report: Option<PathBuf>,
+    stale_only: bool,
+}
+
+fn usage() -> &'static str {
+    "usage: dirc-lint [--src DIR] [--allowlist FILE] [--report FILE] [--stale-only]\n\
+     defaults: --src <crate>/../src  --allowlist <crate>/allowlist.txt"
+}
+
+fn parse_opts() -> Result<Opts, String> {
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let mut opts = Opts {
+        src: manifest.join("../src"),
+        allowlist: manifest.join("allowlist.txt"),
+        report: None,
+        stale_only: false,
+    };
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--src" => opts.src = args.next().ok_or("--src needs a value")?.into(),
+            "--allowlist" => {
+                opts.allowlist = args.next().ok_or("--allowlist needs a value")?.into()
+            }
+            "--report" => opts.report = Some(args.next().ok_or("--report needs a value")?.into()),
+            "--stale-only" => opts.stale_only = true,
+            "--help" | "-h" => return Err(usage().to_string()),
+            other => return Err(format!("unknown flag `{other}`\n{}", usage())),
+        }
+    }
+    Ok(opts)
+}
+
+fn run() -> Result<ExitCode, String> {
+    let opts = parse_opts()?;
+    let allow_text = std::fs::read_to_string(&opts.allowlist)
+        .map_err(|e| format!("read {}: {e}", opts.allowlist.display()))?;
+    let allow = Allowlist::parse(&allow_text)?;
+    let outcome = lint_dir(&opts.src, &allow)
+        .map_err(|e| format!("lint {}: {e}", opts.src.display()))?;
+    let report = render_report(&opts.src, &opts.allowlist, &outcome);
+    print!("{report}");
+    if let Some(path) = &opts.report {
+        std::fs::write(path, &report).map_err(|e| format!("write {}: {e}", path.display()))?;
+    }
+    if !outcome.stale.is_empty() {
+        return Ok(ExitCode::from(2));
+    }
+    if !opts.stale_only && !outcome.violations.is_empty() {
+        return Ok(ExitCode::from(1));
+    }
+    Ok(ExitCode::SUCCESS)
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(code) => code,
+        Err(msg) => {
+            eprintln!("dirc-lint: {msg}");
+            ExitCode::from(2)
+        }
+    }
+}

@@ -1,0 +1,13 @@
+// Seeded violation: HashMap/HashSet in a deterministic module.
+use std::collections::{HashMap, HashSet};
+
+pub fn build_index(ids: &[u64]) -> HashMap<u64, usize> {
+    let mut seen = HashSet::new();
+    let mut map = HashMap::new();
+    for (slot, &id) in ids.iter().enumerate() {
+        if seen.insert(id) {
+            map.insert(id, slot);
+        }
+    }
+    map
+}

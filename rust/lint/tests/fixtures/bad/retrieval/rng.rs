@@ -1,0 +1,6 @@
+// Seeded violation: naked root-stream construction outside the
+// stream-owning modules.
+pub fn jitter(seed: u64) -> u64 {
+    let mut rng = Pcg::new(seed);
+    rng.next_u64()
+}

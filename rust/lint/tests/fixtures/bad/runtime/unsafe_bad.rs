@@ -1,0 +1,4 @@
+// Seeded violation: unsafe impl with no adjacent SAFETY comment.
+pub struct Handle(*mut u8);
+
+unsafe impl Send for Handle {}

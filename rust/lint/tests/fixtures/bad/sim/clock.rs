@@ -1,0 +1,9 @@
+// Seeded violation: wall-clock reads inside a modeled (virtual-time)
+// path.
+use std::time::{Instant, SystemTime};
+
+pub fn stamp() -> f64 {
+    let t0 = Instant::now();
+    let _wall = SystemTime::now();
+    t0.elapsed().as_secs_f64()
+}

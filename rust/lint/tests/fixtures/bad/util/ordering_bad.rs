@@ -1,0 +1,7 @@
+// Seeded violation: relaxed atomic ordering with no adjacent ORDERING
+// comment.
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+pub fn bump(c: &AtomicUsize) -> usize {
+    c.fetch_add(1, Ordering::Relaxed)
+}

@@ -1,0 +1,23 @@
+// Clean twin: ordered map in the deterministic module; hash maps only
+// inside the test region, which the lint skips.
+use std::collections::BTreeMap;
+
+pub fn build_index(ids: &[u64]) -> BTreeMap<u64, usize> {
+    let mut map = BTreeMap::new();
+    for (slot, &id) in ids.iter().enumerate() {
+        map.entry(id).or_insert(slot);
+    }
+    map
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::HashMap;
+
+    #[test]
+    fn tests_may_hash() {
+        let mut m = HashMap::new();
+        m.insert(1u64, 0usize);
+        assert_eq!(m.len(), 1);
+    }
+}

@@ -1,0 +1,8 @@
+// Clean twin: forks its stream through the keyed contract instead of
+// minting a new root stream. Mentions of Pcg::new in strings and
+// comments ("Pcg::new is banned here") must not trip the lint.
+pub fn jitter(nonce: u64, core: u64) -> u64 {
+    let mut rng = Pcg::keyed(nonce, core);
+    let _doc = "call sites must never call Pcg::new directly";
+    rng.next_u64()
+}

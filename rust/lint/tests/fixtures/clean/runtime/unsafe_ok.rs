@@ -1,0 +1,11 @@
+// Clean twin: the SAFETY comment sits in the contiguous comment block
+// above the unsafe impl, with an attribute between them — the lint's
+// upward walk must cross blank lines, comments and attributes.
+pub struct Handle(*mut u8);
+
+// SAFETY: the pointer is owned uniquely by `Handle` and is only ever
+// dereferenced behind &mut self, so moving the owner across threads
+// cannot alias it.
+
+#[allow(unsafe_code)]
+unsafe impl Send for Handle {}

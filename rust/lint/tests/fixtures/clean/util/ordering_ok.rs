@@ -1,0 +1,21 @@
+// Clean twin: every non-SeqCst ordering carries an adjacent ORDERING
+// comment; SeqCst needs none, and `cmp::Ordering` variants never match.
+use std::cmp::Ordering as CmpOrdering;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+pub fn bump(c: &AtomicUsize) -> usize {
+    // ORDERING: Relaxed — a pure statistics counter; no other memory is
+    // published through it.
+    c.fetch_add(1, Ordering::Relaxed)
+}
+
+pub fn gate(c: &AtomicUsize) -> usize {
+    c.load(Ordering::SeqCst)
+}
+
+pub fn compare(a: u64, b: u64) -> CmpOrdering {
+    match a.cmp(&b) {
+        CmpOrdering::Less => CmpOrdering::Less,
+        other => other,
+    }
+}

@@ -1,0 +1,9 @@
+// Clean twin: workload/runner.rs is the live-replay harness and is
+// exempt from the wall-clock rule by design — it measures real time.
+use std::time::Instant;
+
+pub fn measure<F: FnOnce()>(f: F) -> f64 {
+    let t0 = Instant::now();
+    f();
+    t0.elapsed().as_secs_f64()
+}

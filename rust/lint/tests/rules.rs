@@ -1,0 +1,103 @@
+//! Fixture tests for every contract-lint rule (one seeded-violation and
+//! one clean twin per rule under `tests/fixtures/{bad,clean}/`), plus
+//! the gate that matters: the real `rust/src` tree must lint clean with
+//! the committed allowlist.
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+use dirc_lint::{
+    lint_dir, Allowlist, RULES, RULE_HASH, RULE_ORDERING, RULE_RNG, RULE_UNSAFE,
+    RULE_WALLCLOCK,
+};
+
+fn fixtures(which: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(which)
+}
+
+fn empty_allow() -> Allowlist {
+    Allowlist::parse("").expect("empty allowlist parses")
+}
+
+#[test]
+fn bad_fixtures_trip_every_rule() {
+    let outcome = lint_dir(&fixtures("bad"), &empty_allow()).expect("lint bad fixtures");
+    let tripped: BTreeSet<&str> = outcome.violations.iter().map(|v| v.rule).collect();
+    for rule in RULES {
+        assert!(tripped.contains(rule), "rule `{rule}` not tripped: {tripped:?}");
+    }
+    assert!(outcome.stale.is_empty());
+}
+
+#[test]
+fn bad_fixtures_flag_the_seeded_lines() {
+    let outcome = lint_dir(&fixtures("bad"), &empty_allow()).expect("lint bad fixtures");
+    let hit = |rule: &str, file: &str, needle: &str| {
+        outcome
+            .violations
+            .iter()
+            .any(|v| v.rule == rule && v.file == file && v.line_text.contains(needle))
+    };
+    assert!(hit(RULE_HASH, "dirc/hash.rs", "HashMap::new()"));
+    assert!(hit(RULE_HASH, "dirc/hash.rs", "HashSet::new()"));
+    assert!(hit(RULE_RNG, "retrieval/rng.rs", "Pcg::new(seed)"));
+    assert!(hit(RULE_WALLCLOCK, "sim/clock.rs", "Instant::now()"));
+    assert!(hit(RULE_WALLCLOCK, "sim/clock.rs", "SystemTime::now()"));
+    assert!(hit(RULE_UNSAFE, "runtime/unsafe_bad.rs", "unsafe impl Send"));
+    assert!(hit(RULE_ORDERING, "util/ordering_bad.rs", "Ordering::Relaxed"));
+}
+
+#[test]
+fn clean_fixtures_pass_without_suppressions() {
+    let outcome = lint_dir(&fixtures("clean"), &empty_allow()).expect("lint clean fixtures");
+    assert!(
+        outcome.violations.is_empty(),
+        "clean fixtures flagged: {:#?}",
+        outcome.violations
+    );
+    assert!(outcome.stale.is_empty());
+    assert!(outcome.files_scanned >= 5);
+}
+
+#[test]
+fn allowlist_suppresses_and_detects_stale() {
+    let allow = Allowlist::parse(
+        "naked-rng | retrieval/rng.rs | Pcg::new(seed) | fixture justification\n\
+         wall-clock | sim/clock.rs | NoSuchPatternAnywhere | outlived its code\n",
+    )
+    .expect("allowlist parses");
+    let outcome = lint_dir(&fixtures("bad"), &allow).expect("lint bad fixtures");
+    assert!(
+        !outcome.violations.iter().any(|v| v.rule == RULE_RNG),
+        "naked-rng should be suppressed: {:#?}",
+        outcome.violations
+    );
+    assert!(outcome.suppressed.iter().any(|v| v.rule == RULE_RNG));
+    assert_eq!(outcome.stale.len(), 1, "{:#?}", outcome.stale);
+    assert_eq!(outcome.stale[0].pattern, "NoSuchPatternAnywhere");
+    assert!(!outcome.clean());
+}
+
+/// The gate: the real source tree lints clean with the committed
+/// allowlist, and the allowlist stays small and justified.
+#[test]
+fn repo_source_tree_lints_clean() {
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let src = manifest.join("../src");
+    let allow_text = std::fs::read_to_string(manifest.join("allowlist.txt"))
+        .expect("read committed allowlist");
+    let allow = Allowlist::parse(&allow_text).expect("committed allowlist parses");
+    assert!(allow.entries.len() <= 10, "allowlist grew past 10 entries");
+    let outcome = lint_dir(&src, &allow).expect("lint rust/src");
+    assert!(
+        outcome.violations.is_empty(),
+        "contract violations in rust/src: {:#?}",
+        outcome.violations
+    );
+    assert!(
+        outcome.stale.is_empty(),
+        "stale allowlist entries: {:#?}",
+        outcome.stale
+    );
+    assert!(outcome.files_scanned > 20, "expected the full tree, scanned {}", outcome.files_scanned);
+}

@@ -42,7 +42,6 @@
 //! untouched cores proceed in parallel with the write — the
 //! query-stationary dataflow is never disturbed mid-query.
 
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
 use anyhow::{bail, Result};
@@ -60,6 +59,7 @@ use crate::retrieval::topk::{ScoredDoc, TopK};
 use crate::runtime::{PjrtRuntime, ResidentDb};
 use crate::util::pool::ThreadPool;
 use crate::util::rng::Pcg;
+use crate::util::sync::MutationEpoch;
 
 /// Result of one engine-level mutation.
 #[derive(Debug, Clone, Default)]
@@ -132,8 +132,10 @@ struct EngineCaches {
     /// Chip mutation epoch: bumped (SeqCst) AFTER every snapshot swap,
     /// read BEFORE taking the snapshot on the query path, so a stale
     /// insert racing a mutation is keyed to the old epoch and can never
-    /// serve a post-mutation lookup.
-    epoch: AtomicU64,
+    /// serve a post-mutation lookup. The protocol type lives in
+    /// [`crate::util::sync`] and is loom-model-checked in
+    /// `rust/tests/loom.rs`.
+    epoch: MutationEpoch,
 }
 
 impl EngineCaches {
@@ -151,7 +153,7 @@ impl EngineCaches {
             cfg,
             results: Mutex::new(ResultCache::new(cfg.result_entries)),
             routing,
-            epoch: AtomicU64::new(0),
+            epoch: MutationEpoch::new(),
         }
     }
 
@@ -161,7 +163,7 @@ impl EngineCaches {
         if self.cfg.result_entries == 0 {
             return None;
         }
-        ResultKey::for_plan(plan, q, self.epoch.load(Ordering::SeqCst))
+        ResultKey::for_plan(plan, q, self.epoch.observe())
     }
 
     fn get(&self, key: &ResultKey) -> Option<PlanOutput> {
@@ -175,7 +177,7 @@ impl EngineCaches {
     /// Advance the mutation epoch and drop every cached result. Called
     /// with the mutate lock held, AFTER the snapshot swap published.
     fn on_mutation(&self) {
-        self.epoch.fetch_add(1, Ordering::SeqCst);
+        self.epoch.advance();
         self.results.lock().unwrap().invalidate();
     }
 

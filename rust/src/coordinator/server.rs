@@ -58,6 +58,7 @@ use crate::retrieval::plan::QueryPlan;
 use crate::retrieval::quant::QuantScheme;
 use crate::runtime::PjrtRuntime;
 use crate::util::rng::Pcg;
+use crate::util::sync::InflightGauge;
 
 /// One serving tenant: a name (the [`Coordinator::submit_for`] key), a
 /// deficit-round-robin scheduling weight, and an optional plan template
@@ -168,8 +169,10 @@ pub struct Coordinator {
     stop: Arc<AtomicBool>,
     /// Accepted retrievals not yet answered — counted from `submit`
     /// (before the ingest thread even sees them, so queued-but-undrained
-    /// queries are visible to the mutation admission policy).
-    inflight: Arc<AtomicU64>,
+    /// queries are visible to the mutation admission policy). The gauge
+    /// protocol lives in [`crate::util::sync`] and is loom-model-checked
+    /// in `rust/tests/loom.rs`.
+    inflight: Arc<InflightGauge>,
     /// Resolved tenant table (never empty; index = queue index).
     tenants: Vec<TenantSpec>,
     default_plan: QueryPlan,
@@ -207,7 +210,7 @@ impl Coordinator {
         let names: Vec<&str> = tenants.iter().map(|t| t.name.as_str()).collect();
         let metrics = Arc::new(Metrics::with_tenants(&names));
         let stop = Arc::new(AtomicBool::new(false));
-        let inflight = Arc::new(AtomicU64::new(0));
+        let inflight = Arc::new(InflightGauge::new());
         let (ingest_tx, ingest_rx) = channel::<Pending>();
         let weights: Vec<u32> = tenants.iter().map(|t| t.weight).collect();
         let work = Arc::new(DrrQueues::<WorkItem>::new(&weights));
@@ -335,6 +338,8 @@ impl Coordinator {
         query: Query,
         plan: QueryPlan,
     ) -> Result<(u64, Receiver<Response>)> {
+        // ORDERING: Relaxed — id allocation only needs uniqueness; the
+        // response channel orders everything a caller observes about it.
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (resp_tx, resp_rx) = channel();
         let pending = Pending {
@@ -346,14 +351,14 @@ impl Coordinator {
         // Count the query in flight from acceptance, so a mutation
         // racing a just-submitted burst sees it before the ingest
         // thread drains the queue.
-        self.inflight.fetch_add(1, Ordering::SeqCst);
+        self.inflight.enter(1);
         let sent = self
             .ingest_tx
             .as_ref()
             .ok_or_else(|| anyhow!("coordinator stopped"))
             .and_then(|tx| tx.send(pending).map_err(|_| anyhow!("ingest thread gone")));
         if let Err(e) = sent {
-            self.inflight.fetch_sub(1, Ordering::SeqCst);
+            self.inflight.exit(1);
             return Err(e);
         }
         Ok((id, resp_rx))
@@ -363,6 +368,7 @@ impl Coordinator {
     /// returns the mutation-response channel. The write is admitted into
     /// the next query-idle window (bounded by `mutation_max_defer`).
     pub fn submit_mutation(&self, mutation: Mutation) -> Result<(u64, Receiver<MutationResponse>)> {
+        // ORDERING: Relaxed — see `submit_as`; ids only need uniqueness.
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (resp_tx, resp_rx) = channel();
         let pending = MutPending {
@@ -418,7 +424,7 @@ fn ingest_loop(
     cfg: CoordinatorConfig,
     stop: Arc<AtomicBool>,
     metrics: Arc<Metrics>,
-    inflight: Arc<AtomicU64>,
+    inflight: Arc<InflightGauge>,
 ) {
     let mut batcher: Batcher<Pending> = Batcher::new(cfg.batch.clone());
     loop {
@@ -452,14 +458,14 @@ fn flush(
     runtime: Option<&PjrtRuntime>,
     cfg: &CoordinatorConfig,
     metrics: &Metrics,
-    inflight: &AtomicU64,
+    inflight: &InflightGauge,
 ) {
     let batch = batcher.take_batch();
     if batch.is_empty() {
         return;
     }
     let drop_inflight = |n: u64| {
-        inflight.fetch_sub(n, Ordering::SeqCst);
+        inflight.exit(n);
     };
     // Split raw-embedding requests (no embed needed) from token requests.
     let mut token_items: Vec<Pending> = Vec::new();
@@ -556,7 +562,7 @@ fn worker_loop(
     work: Arc<DrrQueues<WorkItem>>,
     engine: Arc<dyn Engine>,
     metrics: Arc<Metrics>,
-    inflight: Arc<AtomicU64>,
+    inflight: Arc<InflightGauge>,
     seed: u64,
     batch_max: usize,
     pin_base: Option<u64>,
@@ -596,7 +602,7 @@ fn worker_loop(
                 };
                 metrics.record_for(tenant, &resp);
                 let _ = item.pending.resp_tx.send(resp);
-                inflight.fetch_sub(1, Ordering::SeqCst);
+                inflight.exit(1);
             }
             continue;
         }
@@ -645,7 +651,7 @@ fn worker_loop(
                 };
                 metrics.record_for(tenant, &resp);
                 let _ = item.pending.resp_tx.send(resp);
-                inflight.fetch_sub(1, Ordering::SeqCst);
+                inflight.exit(1);
             }
         }
     }
@@ -661,7 +667,7 @@ fn mutation_loop(
     rx: Receiver<MutPending>,
     engine: Arc<dyn Engine>,
     metrics: Arc<Metrics>,
-    inflight: Arc<AtomicU64>,
+    inflight: Arc<InflightGauge>,
     stop: Arc<AtomicBool>,
     max_defer: Duration,
     seed: u64,
@@ -673,7 +679,7 @@ fn mutation_loop(
         // after `max_defer`, and admit immediately on shutdown so the
         // drain cannot deadlock against queued queries.
         let wait0 = Instant::now();
-        while inflight.load(Ordering::SeqCst) > 0
+        while inflight.current() > 0
             && wait0.elapsed() < max_defer
             && !stop.load(Ordering::SeqCst)
         {

@@ -46,7 +46,7 @@
 //!    ([`crate::retrieval::topk`]), so duplicate scores cannot reorder
 //!    under concurrency.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Result};
@@ -357,8 +357,11 @@ pub struct DircChip {
     /// payloads onto THIS grid or integer MIPS scores would not be
     /// comparable across documents.
     quant_scale: f32,
-    /// Global id -> core index for the online mutation path.
-    doc_core: HashMap<u64, u32>,
+    /// Global id -> core index for the online mutation path. Ordered map
+    /// by contract (dirc-lint `hash-collections`): nothing iterates it
+    /// today, but a future iteration must not leak hash order into
+    /// results or digests.
+    doc_core: BTreeMap<u64, u32>,
     /// Next id handed to an added document.
     next_doc_id: u64,
     /// Subarray rows invalidated by writes since the last map refresh.
@@ -419,7 +422,7 @@ impl DircChip {
         }
         let per_core = db.n.div_ceil(cfg.cores);
         let mut cores = Vec::with_capacity(cfg.cores);
-        let mut doc_core = HashMap::with_capacity(db.n);
+        let mut doc_core = BTreeMap::new();
         let mut index = clustering.as_ref().map(|cl| {
             let mut index = ClusterIndex::new(Arc::new(cl.centroids.clone()), cfg.cores);
             // Exact adaptive-stop bounds over the freshly clustered
@@ -509,7 +512,7 @@ impl DircChip {
         // Same seed => same characterised error map as the union chip.
         let map = cfg.variation.extract_error_map(cfg.map_points, cfg.seed);
         let mut cores = Vec::with_capacity(cfg.cores);
-        let mut doc_core = HashMap::with_capacity(db.n);
+        let mut doc_core = BTreeMap::new();
         let mut index = spec.clusters.as_ref().map(|sc| {
             assert_eq!(sc.assign.len(), db.n, "one cluster per shard row");
             let mut index = ClusterIndex::new(Arc::clone(&sc.centroids), cfg.cores);

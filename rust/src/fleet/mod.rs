@@ -61,7 +61,7 @@
 //! stay globally unique without coordination: shard `s` hands out
 //! `union_n + s, union_n + s + N, ...` (id lane striping).
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
@@ -123,7 +123,10 @@ pub struct DircFleet {
     /// no build-time members).
     owner: Vec<usize>,
     /// Global doc id -> resident shard, for update/delete routing.
-    doc_shard: HashMap<u64, usize>,
+    /// Ordered map by contract (dirc-lint `hash-collections`): the id
+    /// directory must never leak hash iteration order into routing,
+    /// merge order, or digests.
+    doc_shard: BTreeMap<u64, usize>,
 }
 
 impl DircFleet {
@@ -178,7 +181,7 @@ impl DircFleet {
             }
         }
         let mut shards = Vec::with_capacity(n_chips);
-        let mut doc_shard = HashMap::with_capacity(db.n);
+        let mut doc_shard = BTreeMap::new();
         for s in 0..n_chips {
             let c0 = s * cores_per_shard;
             let c1 = c0 + cores_per_shard;

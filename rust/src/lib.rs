@@ -184,6 +184,27 @@
 //! `benches/fleet_scaling.rs` gates per-chip sensed work shrinking as
 //! shards are added (`BENCH_8.json`).
 //!
+//! ## Static analysis & determinism contracts
+//!
+//! The contracts above are machine-checked. `rust/lint/` (workspace
+//! member `dirc-lint`, run with `cargo run -p dirc-lint`) walks this
+//! crate's sources and enforces: no `HashMap`/`HashSet` in deterministic
+//! modules (iteration order could leak into results, digests or stat
+//! merges — use `BTreeMap`/`BTreeSet` or sorted vectors), no naked
+//! [`util::rng::Pcg::new`] outside the stream-owning modules (forks go
+//! through `split`/`keyed`/the nonce contract), no
+//! `Instant`/`SystemTime` in modeled virtual-time paths, and a
+//! `// SAFETY:` / `// ORDERING:` comment on every `unsafe` item and
+//! every non-`SeqCst` atomic ordering. The crate compiles under
+//! `#![deny(unsafe_code)]`; the only exceptions are the documented
+//! `Send`/`Sync` impls in [`runtime`]. The concurrency protocols the
+//! lint cannot prove — the pool join counter, the cache-epoch versus
+//! snapshot swap, the shutdown drain — live behind the
+//! [`util::sync`] facade and are model-checked exhaustively by loom in
+//! `rust/tests/loom.rs`. See the README section "Static analysis &
+//! determinism contracts" for how to run each lane and extend the
+//! lint allowlist.
+//!
 //! ## Load testing & tail latency
 //!
 //! Throughput means little to an edge deployment that provisions for
@@ -232,6 +253,10 @@
 //!   tail-latency accounting.
 //! * [`bench`] — the statistics harness used by `cargo bench`
 //!   (criterion replacement; see DESIGN.md environment substitutions).
+
+// Every unsafe item needs an explicit, SAFETY-commented `#[allow]`; the
+// dirc-lint `undocumented-unsafe` rule checks the comments are there.
+#![deny(unsafe_code)]
 
 pub mod baseline;
 pub mod bench;

@@ -26,8 +26,7 @@
 //! snapshot. A capacity of `0` disables a cache: every lookup is a miss
 //! and nothing is stored, so the disabled path is the uncached path.
 
-use std::collections::{BTreeMap, HashMap};
-use std::hash::Hash;
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use crate::retrieval::cluster::Prune;
@@ -120,18 +119,21 @@ impl CacheStats {
 
 /// The shared bounded-LRU machinery of both caches: a key→value map plus
 /// a recency index keyed on a monotonic touch tick, so get/insert/evict
-/// are all `O(log n)` with no external dependencies.
+/// are all `O(log n)` with no external dependencies. Both maps are
+/// ordered (dirc-lint `hash-collections`): the cache sits on the serving
+/// path of deterministic modules, so even though nothing iterates the
+/// key map today, hash order must never be available to leak.
 #[derive(Debug)]
 struct Lru<K, V> {
     cap: usize,
     tick: u64,
-    map: HashMap<K, (V, u64)>,
+    map: BTreeMap<K, (V, u64)>,
     order: BTreeMap<u64, K>,
 }
 
-impl<K: Eq + Hash + Clone, V: Clone> Lru<K, V> {
+impl<K: Ord + Clone, V: Clone> Lru<K, V> {
     fn new(cap: usize) -> Lru<K, V> {
-        Lru { cap, tick: 0, map: HashMap::new(), order: BTreeMap::new() }
+        Lru { cap, tick: 0, map: BTreeMap::new(), order: BTreeMap::new() }
     }
 
     fn len(&self) -> usize {
@@ -185,7 +187,10 @@ impl<K: Eq + Hash + Clone, V: Clone> Lru<K, V> {
 /// runs are bit-identical by the determinism contract), so a result
 /// computed serially may serve a pooled plan and vice versa. The rng
 /// seed IS part of the key: two seeds sense different noise.
-#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+///
+/// `Ord` exists purely so the key can live in ordered maps (the
+/// [`ResultCache`]'s `BTreeMap`); the order itself is meaningless.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct ResultKey {
     /// Quantised query vector (the bits the chip actually senses).
     pub q: Vec<i8>,

@@ -34,7 +34,10 @@ use crate::retrieval::score::Metric;
 /// grouping and the result-cache key rely on. Negative zero is
 /// canonicalised to `+0.0` at construction; validity (finite, `>= 0`) is
 /// enforced by [`crate::retrieval::plan::QueryPlan`] validation.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+/// `Ord` compares the bit patterns (map-keying only — for the
+/// non-negative margins validation admits this coincides with numeric
+/// order, but nothing should rely on that).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct Margin(u64);
 
 impl Margin {
@@ -59,7 +62,7 @@ impl Margin {
 /// exhaustive paper path; `Probe(nprobe >= n_clusters)` is likewise
 /// exhaustive — and **bit-identical** to [`Prune::None`], a property the
 /// test net pins.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum Prune {
     /// Sense every macro (the exhaustive paper path).
     None,

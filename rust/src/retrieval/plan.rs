@@ -131,7 +131,7 @@ impl Exec {
 /// (shared [`crate::retrieval::score::finalize_one`]). Pinned by
 /// `rust/tests/packed_kernel.rs` and asserted again inside the
 /// `hotpath` bench gate.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
 pub enum ScoreBackend {
     /// The packed bit-plane popcount kernel (default): corpus planes are
     /// packed once at build/mutation time, queries stream over them with
@@ -173,7 +173,7 @@ impl Default for RngPolicy {
 }
 
 /// How much of the hardware census a plan's [`QueryStats`] carries.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
 pub enum StatsDetail {
     /// The full cycle/energy/latency census (the default; every
     /// equivalence and precision gate runs here).

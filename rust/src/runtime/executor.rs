@@ -281,13 +281,29 @@ impl PjrtRuntime {
     }
 }
 
-// The runtime holds FFI pointers managed by xla_extension; the underlying
-// PJRT CPU client is thread-safe for compilation and execution, and the
-// cache is mutex-guarded. Used by the coordinator to share one runtime
-// across worker threads.
+// SAFETY: PjrtRuntime owns FFI handles managed by xla_extension. The
+// underlying PJRT CPU client is documented thread-safe for compilation
+// and execution (no thread-affine state), the manifest is immutable
+// after construction, and the executable cache is mutex-guarded — so
+// moving the runtime across threads or sharing `&PjrtRuntime` cannot
+// race. The coordinator relies on this to share one runtime across its
+// worker threads.
+#[allow(unsafe_code)]
 unsafe impl Send for PjrtRuntime {}
+// SAFETY: see the Send impl above — all interior mutability is behind a
+// Mutex and the PJRT client tolerates concurrent execute calls.
+#[allow(unsafe_code)]
 unsafe impl Sync for PjrtRuntime {}
+// SAFETY: ResidentDb wraps device buffers whose host-side handles are
+// plain pointers into client-owned memory; the buffers are written once
+// at construction and only read afterwards (execute arguments), so
+// transferring ownership across threads is sound.
+#[allow(unsafe_code)]
 unsafe impl Send for ResidentDb {}
+// SAFETY: see the Send impl above — `&ResidentDb` only ever reads the
+// frozen buffer handles, and PJRT permits concurrent executions against
+// the same input buffers.
+#[allow(unsafe_code)]
 unsafe impl Sync for ResidentDb {}
 
 #[cfg(test)]

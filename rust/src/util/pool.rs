@@ -17,7 +17,9 @@
 //!
 //! ## Join protocol
 //!
-//! `join` waits on a `(Mutex<usize>, Condvar)` pending counter. The
+//! `join` waits on the `(Mutex<usize>, Condvar)` pending counter of a
+//! [`JoinCounter`] (extracted into [`crate::util::sync`] so the loom
+//! model in `rust/tests/loom.rs` checks the very same code). The
 //! counter is incremented *before* a job is enqueued and decremented by a
 //! drop guard *after* it ran — including when the job panicked, so a
 //! panicking job can never wedge `join` (the original implementation
@@ -31,8 +33,10 @@
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+
+use crate::util::sync::JoinCounter;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -41,22 +45,16 @@ type Job = Box<dyn FnOnce() + Send + 'static>;
 pub struct ThreadPool {
     tx: Option<Sender<Job>>,
     workers: Vec<JoinHandle<()>>,
-    pending: Arc<(Mutex<usize>, Condvar)>,
-    panicked: Arc<AtomicUsize>,
+    pending: Arc<JoinCounter>,
 }
 
-/// Decrements the pending counter when dropped, so the count stays
+/// Completes one registered job when dropped, so the pending count stays
 /// correct even if the job unwinds.
-struct PendingGuard<'a>(&'a (Mutex<usize>, Condvar));
+struct PendingGuard<'a>(&'a JoinCounter);
 
 impl Drop for PendingGuard<'_> {
     fn drop(&mut self) {
-        let (lock, cv) = self.0;
-        let mut n = lock.lock().unwrap();
-        *n -= 1;
-        if *n == 0 {
-            cv.notify_all();
-        }
+        self.0.complete();
     }
 }
 
@@ -65,13 +63,11 @@ impl ThreadPool {
         assert!(threads > 0);
         let (tx, rx) = channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
-        let pending = Arc::new((Mutex::new(0usize), Condvar::new()));
-        let panicked = Arc::new(AtomicUsize::new(0));
+        let pending = Arc::new(JoinCounter::new());
         let workers = (0..threads)
             .map(|i| {
                 let rx: Arc<Mutex<Receiver<Job>>> = Arc::clone(&rx);
                 let pending = Arc::clone(&pending);
-                let panicked = Arc::clone(&panicked);
                 std::thread::Builder::new()
                     .name(format!("dirc-pool-{i}"))
                     .spawn(move || loop {
@@ -83,7 +79,7 @@ impl ThreadPool {
                             Ok(job) => {
                                 let _guard = PendingGuard(&pending);
                                 if catch_unwind(AssertUnwindSafe(job)).is_err() {
-                                    panicked.fetch_add(1, Ordering::Relaxed);
+                                    pending.record_panic();
                                 }
                             }
                             Err(_) => break, // pool dropped
@@ -92,7 +88,7 @@ impl ThreadPool {
                     .expect("spawn pool worker")
             })
             .collect();
-        ThreadPool { tx: Some(tx), workers, pending, panicked }
+        ThreadPool { tx: Some(tx), workers, pending }
     }
 
     /// Number of worker threads.
@@ -102,10 +98,7 @@ impl ThreadPool {
 
     /// Submit a job.
     pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
-        {
-            let (lock, _) = &*self.pending;
-            *lock.lock().unwrap() += 1;
-        }
+        self.pending.add(1);
         // Until the job is enqueued, this guard owns the decrement: if the
         // send fails (or the expect below unwinds), it rolls the counter
         // back so a concurrent `join` cannot hang on a job that never ran.
@@ -125,16 +118,12 @@ impl ThreadPool {
     /// Block until every submitted job has finished (including jobs that
     /// panicked — see [`ThreadPool::panicked`]).
     pub fn join(&self) {
-        let (lock, cv) = &*self.pending;
-        let mut n = lock.lock().unwrap();
-        while *n > 0 {
-            n = cv.wait(n).unwrap();
-        }
+        self.pending.wait_zero();
     }
 
     /// Number of jobs that panicked since the pool was created.
     pub fn panicked(&self) -> usize {
-        self.panicked.load(Ordering::Relaxed)
+        self.pending.panicked()
     }
 }
 
@@ -165,6 +154,9 @@ pub fn parallel_map<T: Sync, R: Send>(
     std::thread::scope(|scope| {
         for _ in 0..threads {
             scope.spawn(|| loop {
+                // ORDERING: Relaxed — a pure work-stealing ticket
+                // counter; slot contents are ordered by the per-slot
+                // mutexes and the scope join.
                 let i = next.fetch_add(1, Ordering::Relaxed);
                 if i >= items.len() {
                     break;

@@ -1,0 +1,242 @@
+//! Concurrency facade and extracted synchronization protocols.
+//!
+//! Two jobs live here:
+//!
+//! 1. **The `cfg(loom)` swap.** Every primitive this module re-exports
+//!    resolves to `std::sync` in normal builds and to [`loom`]'s modeled
+//!    twins when the crate is compiled with `RUSTFLAGS="--cfg loom"`.
+//!    Loom explores every interleaving a protocol admits, so a protocol
+//!    written against these re-exports can be model-checked without a
+//!    test-only reimplementation drifting from production.
+//! 2. **The protocols themselves.** The three trickiest multi-thread
+//!    contracts in the serving stack are extracted into small types so
+//!    the *same code* runs in production and under the model checker:
+//!    [`JoinCounter`] (the ThreadPool pending/panicked join protocol of
+//!    [`crate::util::pool`]), [`MutationEpoch`] (the cache-epoch versus
+//!    snapshot-swap ordering of `coordinator::engine`), and
+//!    [`InflightGauge`] (the inflight/stop shutdown drain of
+//!    `coordinator::server`). `rust/tests/loom.rs` model-checks all
+//!    three exhaustively; the gating CI `loom` job runs it.
+//!
+//! Modules that merely *plumb* (channel ownership, thread spawning)
+//! keep using `std` directly — only protocol state whose interleavings
+//! matter is routed through this facade.
+
+#[cfg(not(loom))]
+pub use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize};
+#[cfg(not(loom))]
+pub use std::sync::{Arc, Condvar, Mutex, MutexGuard, RwLock};
+
+#[cfg(loom)]
+pub use loom::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize};
+#[cfg(loom)]
+pub use loom::sync::{Arc, Condvar, Mutex, MutexGuard, RwLock};
+
+// Loom's atomics take the ordinary `std` ordering enum, so this one is
+// unconditional.
+pub use std::sync::atomic::Ordering;
+
+/// The ThreadPool join protocol: a `(Mutex<usize>, Condvar)` pending
+/// counter plus a panic tally.
+///
+/// Contract (see the `util::pool` module docs): the counter is
+/// incremented **before** a job is enqueued and decremented **after** it
+/// ran — including when the job panicked — so [`JoinCounter::wait_zero`]
+/// can never wedge on a job that already finished or never ran. The
+/// panic tally is monotonic and read only after a join, so it needs no
+/// ordering of its own.
+pub struct JoinCounter {
+    pending: (Mutex<usize>, Condvar),
+    panicked: AtomicUsize,
+}
+
+impl Default for JoinCounter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl JoinCounter {
+    pub fn new() -> JoinCounter {
+        JoinCounter {
+            pending: (Mutex::new(0), Condvar::new()),
+            panicked: AtomicUsize::new(0),
+        }
+    }
+
+    /// Register `n` not-yet-finished jobs. Must happen before the jobs
+    /// become runnable (e.g. before enqueueing), or a concurrent
+    /// [`JoinCounter::wait_zero`] could return while they run.
+    pub fn add(&self, n: usize) {
+        let (lock, _) = &self.pending;
+        *lock.lock().unwrap() += n;
+    }
+
+    /// Mark one registered job finished, waking joiners when the count
+    /// hits zero. Calling this more times than [`JoinCounter::add`]
+    /// registered is a protocol violation and panics on underflow.
+    pub fn complete(&self) {
+        let (lock, cv) = &self.pending;
+        let mut n = lock.lock().unwrap();
+        *n -= 1;
+        if *n == 0 {
+            cv.notify_all();
+        }
+    }
+
+    /// Tally a job that panicked (the job still [`JoinCounter::complete`]s).
+    pub fn record_panic(&self) {
+        // ORDERING: Relaxed — a monotonic statistics tally with no data
+        // dependent on it; reads happen after a join whose pending-counter
+        // mutex already orders the increments.
+        self.panicked.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Block until every registered job has completed. Only covers jobs
+    /// registered before the wait started; registrations racing with the
+    /// wait may or may not be included.
+    pub fn wait_zero(&self) {
+        let (lock, cv) = &self.pending;
+        let mut n = lock.lock().unwrap();
+        while *n > 0 {
+            n = cv.wait(n).unwrap();
+        }
+    }
+
+    /// Jobs registered but not yet completed.
+    pub fn pending(&self) -> usize {
+        let (lock, _) = &self.pending;
+        *lock.lock().unwrap()
+    }
+
+    /// Jobs that panicked since construction.
+    pub fn panicked(&self) -> usize {
+        // ORDERING: Relaxed — see `record_panic`; callers read this after
+        // a join, which already synchronized with every worker.
+        self.panicked.load(Ordering::Relaxed)
+    }
+}
+
+/// The cache-epoch half of the snapshot-swap mutation protocol.
+///
+/// Query paths call [`MutationEpoch::observe`] **before** reading the
+/// snapshot `RwLock`; mutation paths publish the new snapshot first and
+/// call [`MutationEpoch::advance`] **after**. Both sides are `SeqCst`,
+/// so a reader that observed epoch `e` reads a snapshot of version
+/// `>= e`: a cache entry keyed at `e` can cache a *newer* snapshot's
+/// answer (benign — it is invalidated one epoch early) but never a
+/// stale one. `rust/tests/loom.rs` checks the invariant exhaustively.
+pub struct MutationEpoch(AtomicU64);
+
+impl Default for MutationEpoch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MutationEpoch {
+    pub fn new() -> MutationEpoch {
+        MutationEpoch(AtomicU64::new(0))
+    }
+
+    /// Read the epoch for keying a cache entry. Must be called before
+    /// the snapshot read it keys.
+    pub fn observe(&self) -> u64 {
+        self.0.load(Ordering::SeqCst)
+    }
+
+    /// Bump the epoch after a mutation published its new snapshot.
+    /// Returns the epoch being retired.
+    pub fn advance(&self) -> u64 {
+        self.0.fetch_add(1, Ordering::SeqCst)
+    }
+}
+
+/// The inflight half of the coordinator shutdown/mutation drain.
+///
+/// Accepted requests [`InflightGauge::enter`] at submit time and
+/// [`InflightGauge::exit`] once their response is delivered (or their
+/// submission failed); the mutation admission loop polls
+/// [`InflightGauge::current`] to wait for a drain, bounded by its defer
+/// budget and short-circuited by the coordinator's stop flag. All
+/// operations are `SeqCst`: an admission loop that reads 0 must be
+/// ordered after every exit it raced with, or a mutation could be
+/// admitted while a query still holds the old snapshot's statistics.
+pub struct InflightGauge(AtomicU64);
+
+impl Default for InflightGauge {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl InflightGauge {
+    pub fn new() -> InflightGauge {
+        InflightGauge(AtomicU64::new(0))
+    }
+
+    /// Count `n` requests as accepted-but-unanswered.
+    pub fn enter(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::SeqCst);
+    }
+
+    /// Count `n` requests as answered (or rolled back after a failed
+    /// submit). Must pair with a prior [`InflightGauge::enter`].
+    pub fn exit(&self, n: u64) {
+        self.0.fetch_sub(n, Ordering::SeqCst);
+    }
+
+    /// Requests currently in flight.
+    pub fn current(&self) -> u64 {
+        self.0.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn join_counter_counts_and_tallies() {
+        let c = JoinCounter::new();
+        c.add(2);
+        assert_eq!(c.pending(), 2);
+        c.record_panic();
+        c.complete();
+        c.complete();
+        c.wait_zero(); // returns immediately at zero
+        assert_eq!(c.pending(), 0);
+        assert_eq!(c.panicked(), 1);
+    }
+
+    #[test]
+    fn join_counter_wait_crosses_threads() {
+        let c = Arc::new(JoinCounter::new());
+        c.add(1);
+        let worker = {
+            let c = Arc::clone(&c);
+            std::thread::spawn(move || c.complete())
+        };
+        c.wait_zero();
+        assert_eq!(c.pending(), 0);
+        worker.join().unwrap();
+    }
+
+    #[test]
+    fn epoch_observe_then_advance() {
+        let e = MutationEpoch::new();
+        assert_eq!(e.observe(), 0);
+        assert_eq!(e.advance(), 0);
+        assert_eq!(e.observe(), 1);
+    }
+
+    #[test]
+    fn gauge_balances() {
+        let g = InflightGauge::new();
+        g.enter(3);
+        g.exit(1);
+        assert_eq!(g.current(), 2);
+        g.exit(2);
+        assert_eq!(g.current(), 0);
+    }
+}

@@ -1,0 +1,160 @@
+//! Loom model checks for the three extracted concurrency protocols in
+//! [`dirc_rag::util::sync`]. Compiled ONLY under
+//! `RUSTFLAGS="--cfg loom"` (the gating `loom` CI lane):
+//!
+//! ```text
+//! RUSTFLAGS="--cfg loom" cargo test --release --test loom
+//! ```
+//!
+//! Each `loom::model` body runs once per admissible interleaving of its
+//! spawned threads, so the asserts below are exhaustive over the modeled
+//! schedule space — not a sampled stress test. The types under test are
+//! the *production* types: `util::sync` re-exports loom primitives under
+//! `cfg(loom)`, so the checked code is byte-for-byte the code the
+//! serving stack runs.
+#![cfg(loom)]
+
+use dirc_rag::util::sync::{
+    Arc, AtomicBool, InflightGauge, JoinCounter, MutationEpoch, Ordering, RwLock,
+};
+use loom::sync::Mutex;
+use loom::thread;
+
+/// ThreadPool join protocol (`util::pool`): pending is incremented
+/// before jobs become runnable, each job completes exactly once via its
+/// drop guard (panicking jobs tally first), and `wait_zero` returns only
+/// after every registered job completed.
+#[test]
+fn join_counter_protocol() {
+    loom::model(|| {
+        let c = Arc::new(JoinCounter::new());
+        // The submitter registers both jobs before they can run — the
+        // same order `ThreadPool::execute` enforces (add, then enqueue).
+        c.add(2);
+        let ok = {
+            let c = Arc::clone(&c);
+            thread::spawn(move || {
+                c.complete();
+            })
+        };
+        let panicky = {
+            let c = Arc::clone(&c);
+            thread::spawn(move || {
+                // A panicking job tallies, then its guard completes.
+                c.record_panic();
+                c.complete();
+            })
+        };
+        c.wait_zero();
+        // wait_zero returning means both completions are ordered before
+        // this point by the pending mutex.
+        assert_eq!(c.pending(), 0);
+        ok.join().unwrap();
+        panicky.join().unwrap();
+        assert_eq!(c.panicked(), 1);
+    });
+}
+
+/// Cache-epoch versus snapshot-swap ordering (`coordinator::engine`):
+/// the mutator publishes the new snapshot BEFORE advancing the epoch;
+/// the reader observes the epoch BEFORE reading the snapshot. A reader
+/// that observed epoch `e` must read a snapshot of version `>= e` —
+/// i.e. a cache entry keyed at `e` can never hold a stale snapshot's
+/// answer.
+#[test]
+fn epoch_snapshot_swap_never_keys_stale() {
+    loom::model(|| {
+        let epoch = Arc::new(MutationEpoch::new());
+        let snapshot = Arc::new(RwLock::new(0u64)); // snapshot version
+
+        let writer = {
+            let epoch = Arc::clone(&epoch);
+            let snapshot = Arc::clone(&snapshot);
+            thread::spawn(move || {
+                // Swap the snapshot first...
+                *snapshot.write().unwrap() = 1;
+                // ...then retire the old epoch (engine.on_mutation order).
+                epoch.advance();
+            })
+        };
+        let reader = {
+            let epoch = Arc::clone(&epoch);
+            let snapshot = Arc::clone(&snapshot);
+            thread::spawn(move || {
+                // Key first, read second (engine.key order).
+                let keyed_at = epoch.observe();
+                let version = *snapshot.read().unwrap();
+                // The invariant the cache hierarchy rests on.
+                assert!(
+                    version >= keyed_at,
+                    "cache entry keyed at epoch {keyed_at} captured snapshot v{version}"
+                );
+            })
+        };
+        writer.join().unwrap();
+        reader.join().unwrap();
+        // Post-state sanity: epoch retired exactly once.
+        assert_eq!(epoch.observe(), 1);
+    });
+}
+
+/// Coordinator shutdown/mutation drain (`coordinator::server`): requests
+/// enter the gauge at submit and exit at response; the drain loop polls
+/// `current()` and is short-circuited by the stop flag. After the
+/// producer is done and every request answered, the gauge must read 0
+/// and nothing may be left undrained.
+#[test]
+fn inflight_drain_on_shutdown() {
+    loom::model(|| {
+        let gauge = Arc::new(InflightGauge::new());
+        let queue = Arc::new(Mutex::new(Vec::<u64>::new()));
+        let stop = Arc::new(AtomicBool::new(false));
+
+        let producer = {
+            let gauge = Arc::clone(&gauge);
+            let queue = Arc::clone(&queue);
+            thread::spawn(move || {
+                for id in 0..2u64 {
+                    // Submit order: enter the gauge, then enqueue —
+                    // mirrors `Coordinator::submit_as`.
+                    gauge.enter(1);
+                    queue.lock().unwrap().push(id);
+                }
+            })
+        };
+        let worker = {
+            let gauge = Arc::clone(&gauge);
+            let queue = Arc::clone(&queue);
+            let stop = Arc::clone(&stop);
+            thread::spawn(move || {
+                let mut served = 0u64;
+                loop {
+                    let popped = queue.lock().unwrap().pop();
+                    match popped {
+                        Some(_id) => {
+                            // Response delivered: leave the gauge.
+                            gauge.exit(1);
+                            served += 1;
+                        }
+                        // ORDERING: SeqCst — the stop flag must not be
+                        // observed before queued work that preceded it.
+                        None if stop.load(Ordering::SeqCst) => break,
+                        None => thread::yield_now(),
+                    }
+                }
+                served
+            })
+        };
+
+        producer.join().unwrap();
+        // Drain loop (mutation admission / shutdown): poll until the
+        // gauge reads zero, then raise stop.
+        while gauge.current() > 0 {
+            thread::yield_now();
+        }
+        stop.store(true, Ordering::SeqCst);
+        let served = worker.join().unwrap();
+        assert_eq!(served, 2, "worker dropped a queued request");
+        assert_eq!(gauge.current(), 0, "gauge left unbalanced after drain");
+    });
+}

@@ -915,3 +915,90 @@ fn prop_adaptive_is_a_probe_plan_at_its_stopping_point() {
             && a.stats.energy_j.to_bits() == r.stats.energy_j.to_bits()
     });
 }
+
+// ---------------------------------------------------------------------
+// Load-harness digest invariance (the serving-side determinism
+// contract that the static-analysis pass machine-checks the inputs of).
+
+/// Trace generation and the queueing model are pure functions of their
+/// inputs, and the chip's modeled per-query service times are identical
+/// whether the plan executes serially or on worker pools of different
+/// widths — so `Trace::digest` and `LoadReport::digest` are invariant
+/// across repeat runs AND across thread counts, and only a seed change
+/// moves them.
+#[test]
+fn prop_load_digests_invariant_across_threads_and_repeats() {
+    use dirc_rag::util::pool::ThreadPool;
+    use dirc_rag::workload::{queueing, QueueModelConfig, Trace, TraceConfig};
+    use std::sync::Arc;
+
+    let chip = clustered_chip(256, 4, 8);
+    let distinct = 16usize;
+    forall(cases(6), gen_usize(0, 1000), |&seed| {
+        let tcfg = TraceConfig {
+            n_queries: 400,
+            distinct_queries: distinct,
+            n_docs: 256,
+            tenant_mix: vec![0.7, 0.3],
+            mutate_every: 120,
+            target_qps: 80_000.0,
+            seed: seed as u64,
+            ..TraceConfig::default()
+        };
+        // Trace digest: repeat-identical, seed-sensitive.
+        let trace = Trace::generate(&tcfg);
+        if trace.digest() != Trace::generate(&tcfg).digest() {
+            return false;
+        }
+        if Trace::generate(&TraceConfig { seed: seed as u64 + 9001, ..tcfg.clone() })
+            .digest()
+            == trace.digest()
+        {
+            return false;
+        }
+
+        // Per-distinct-query service times through the chip, serial vs
+        // pooled: the crate's serial==pooled contract says the bits match.
+        let mut qrng = Pcg::new(seed as u64 + 1);
+        let queries: Vec<Vec<i8>> = (0..distinct)
+            .map(|_| (0..128).map(|_| qrng.int_in(-128, 127) as i8).collect())
+            .collect();
+        let service_for = |plan: &QueryPlan| -> Vec<f64> {
+            chip.execute_batch(&queries, plan)
+                .iter()
+                .map(|o| o.stats.latency_s)
+                .collect()
+        };
+        let base = QueryPlan::topk(5).seed(seed as u64 + 2);
+        let serial = service_for(&base.clone().serial().build().unwrap());
+        let qcfg = QueueModelConfig {
+            workers: 2,
+            weights: vec![2, 1],
+            tenant_names: vec!["gold".into(), "light".into()],
+            ..QueueModelConfig::default()
+        };
+        let report = queueing::simulate(&trace, &serial, &qcfg);
+        // Repeat run of the whole model: identical report bits.
+        if queueing::simulate(&trace, &serial, &qcfg).digest() != report.digest() {
+            return false;
+        }
+        for threads in [2usize, 4] {
+            let pool = Arc::new(ThreadPool::new(threads));
+            let pooled = service_for(&base.clone().pool(pool).build().unwrap());
+            if serial.len() != pooled.len()
+                || serial
+                    .iter()
+                    .zip(&pooled)
+                    .any(|(a, b)| a.to_bits() != b.to_bits())
+            {
+                return false;
+            }
+            // Same service bits -> same LoadReport digest regardless of
+            // how wide the pool that produced them was.
+            if queueing::simulate(&trace, &pooled, &qcfg).digest() != report.digest() {
+                return false;
+            }
+        }
+        true
+    });
+}

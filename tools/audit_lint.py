@@ -1,0 +1,395 @@
+#!/usr/bin/env python3
+"""Offline mirror of `cargo run -p dirc-lint` (rust/lint).
+
+The build container for this repo has no Rust toolchain, so this script
+re-implements the dirc-lint rules 1:1 (masking lexer, #[cfg(test)]
+skipping, the five rules, allowlist + stale detection) to audit
+`rust/src` without cargo. CI runs the real binary; this is the local
+cross-check. Keep the two in sync — rule drift here is a bug.
+
+Usage: python3 tools/audit_lint.py [--src rust/src] [--allowlist rust/lint/allowlist.txt]
+Exit codes match dirc-lint: 0 clean, 1 violations, 2 stale/usage.
+"""
+
+import argparse
+import sys
+from pathlib import Path
+
+RULES = (
+    "hash-collections",
+    "naked-rng",
+    "wall-clock",
+    "undocumented-unsafe",
+    "undocumented-ordering",
+)
+DETERMINISTIC_PREFIXES = (
+    "baseline/", "data/", "dirc/", "eval/", "fleet/", "retrieval/", "sim/",
+    "workload/",
+)
+WALLCLOCK_EXEMPT = ("workload/runner.rs",)
+RNG_OWNERS = ("retrieval/plan.rs", "util/prop.rs", "util/rng.rs")
+COMMENT_WALK_LIMIT = 40
+
+
+def mask_source(src):
+    """Return (code_lines, comment_lines): comments/strings blanked to
+    spaces in code, comment text collected per line."""
+    n = len(src)
+    code = []
+    comments = [[]]
+    i = 0
+
+    def blank(ch, comment):
+        if ch == "\n":
+            code.append("\n")
+            comments.append([])
+        else:
+            if comment:
+                comments[-1].append(ch)
+            code.append(" ")
+
+    while i < n:
+        c = src[i]
+        if c == "\n":
+            code.append("\n")
+            comments.append([])
+            i += 1
+            continue
+        if c == "/" and src.startswith("//", i):
+            while i < n and src[i] != "\n":
+                blank(src[i], True)
+                i += 1
+            continue
+        if c == "/" and src.startswith("/*", i):
+            depth = 0
+            while i < n:
+                if src.startswith("/*", i):
+                    depth += 1
+                    blank("/", True)
+                    blank("*", True)
+                    i += 2
+                elif src.startswith("*/", i):
+                    depth -= 1
+                    blank("*", True)
+                    blank("/", True)
+                    i += 2
+                    if depth == 0:
+                        break
+                else:
+                    blank(src[i], True)
+                    i += 1
+            continue
+        if c.isalnum() or c == "_":
+            start = i
+            while i < n and (src[i].isalnum() or src[i] == "_"):
+                i += 1
+            word = src[start:i]
+            raw_capable = word in ("r", "br")
+            is_prefix = word in ("r", "b", "br")
+            starts_string = is_prefix and i < n and (
+                src[i] == '"' or (raw_capable and src[i] == "#")
+            )
+            if not starts_string:
+                code.extend(word)
+                continue
+            code.extend(" " * len(word))
+            if raw_capable:
+                hashes = 0
+                while i < n and src[i] == "#":
+                    hashes += 1
+                    blank("#", False)
+                    i += 1
+                if i < n and src[i] == '"':
+                    blank('"', False)
+                    i += 1
+                    closer = '"' + "#" * hashes
+                    while i < n:
+                        if src.startswith(closer, i):
+                            for ch in closer:
+                                blank(ch, False)
+                            i += len(closer)
+                            break
+                        blank(src[i], False)
+                        i += 1
+                continue
+            # b"...": mask inline (c still holds the prefix char, so the
+            # '"' branch below would not see the opening quote).
+            blank('"', False)
+            i += 1
+            while i < n:
+                if src[i] == "\\" and i + 1 < n:
+                    blank(src[i], False)
+                    blank(src[i + 1], False)
+                    i += 2
+                    continue
+                if src[i] == '"':
+                    blank('"', False)
+                    i += 1
+                    break
+                blank(src[i], False)
+                i += 1
+            continue
+        if c == '"':
+            blank('"', False)
+            i += 1
+            while i < n:
+                if src[i] == "\\" and i + 1 < n:
+                    blank(src[i], False)
+                    blank(src[i + 1], False)
+                    i += 2
+                    continue
+                if src[i] == '"':
+                    blank('"', False)
+                    i += 1
+                    break
+                blank(src[i], False)
+                i += 1
+            continue
+        if c == "'":
+            is_char = (i + 1 < n and src[i + 1] == "\\") or (
+                i + 2 < n and src[i + 2] == "'" and src[i + 1] != "'"
+            )
+            if is_char:
+                blank("'", False)
+                i += 1
+                while i < n:
+                    if src[i] == "\\" and i + 1 < n:
+                        blank(src[i], False)
+                        blank(src[i + 1], False)
+                        i += 2
+                        continue
+                    if src[i] == "'":
+                        blank("'", False)
+                        i += 1
+                        break
+                    blank(src[i], False)
+                    i += 1
+                continue
+            code.append("'")
+            i += 1
+            continue
+        code.append(c)
+        i += 1
+
+    lines = "".join(code).split("\n")
+    comment_lines = ["".join(c) for c in comments]
+    comment_lines += [""] * (len(lines) - len(comment_lines))
+    return lines, comment_lines
+
+
+def mark_test_regions(lines):
+    in_test = [False] * len(lines)
+    l = 0
+    while l < len(lines):
+        line = lines[l]
+        col = line.find("#[cfg(test)]")
+        if col < 0:
+            col = line.find("#[cfg(all(test")
+        if col < 0:
+            l += 1
+            continue
+        depth = 0
+        opened = False
+        end = len(lines) - 1
+        cur = l
+        start_col = col
+        done = False
+        while cur < len(lines) and not done:
+            for ci, ch in enumerate(lines[cur]):
+                if cur == l and ci < start_col:
+                    continue
+                if ch == "{":
+                    depth += 1
+                    opened = True
+                elif ch == "}":
+                    if opened:
+                        depth -= 1
+                        if depth == 0:
+                            end = cur
+                            done = True
+                            break
+                elif ch == ";" and not opened:
+                    end = cur
+                    done = True
+                    break
+            cur += 1
+            start_col = 0
+        for k in range(l, end + 1):
+            in_test[k] = True
+        l = end + 1
+    return in_test
+
+
+def is_ident(ch):
+    return ch.isalnum() or ch == "_" or ord(ch) >= 0x80
+
+
+def find_word_from(line, word, start):
+    at = start
+    while at <= len(line):
+        p = line.find(word, at)
+        if p < 0:
+            return -1
+        before_ok = p == 0 or not is_ident(line[p - 1])
+        end = p + len(word)
+        after_ok = end >= len(line) or not is_ident(line[end])
+        if before_ok and after_ok:
+            return p
+        at = p + max(len(word), 1)
+    return -1
+
+
+def has_word(line, word):
+    return find_word_from(line, word, 0) >= 0
+
+
+def has_pcg_new(line):
+    frm = 0
+    while True:
+        p = find_word_from(line, "Pcg", frm)
+        if p < 0:
+            return False
+        rest = line[p + 3 :].lstrip()
+        if rest.startswith("::"):
+            r2 = rest[2:].lstrip()
+            if r2.startswith("new") and (
+                len(r2) == 3 or not (r2[3].isalnum() or r2[3] == "_")
+            ):
+                return True
+        frm = p + 3
+    return False
+
+
+def non_seqcst_ordering(line):
+    for variant in ("Relaxed", "Acquire", "Release", "AcqRel"):
+        frm = 0
+        while True:
+            p = find_word_from(line, "Ordering", frm)
+            if p < 0:
+                break
+            rest = line[p + len("Ordering") :].lstrip()
+            if rest.startswith("::") and rest[2:].lstrip().startswith(variant):
+                return variant
+            frm = p + len("Ordering")
+    return None
+
+
+def has_tag_comment(lines, comments, at, tag):
+    if tag in comments[at]:
+        return True
+    k = at
+    walked = 0
+    while k > 0 and walked < COMMENT_WALK_LIMIT:
+        k -= 1
+        walked += 1
+        if tag in comments[k]:
+            return True
+        code = lines[k].strip()
+        if code and not (code.startswith("#[") or code.startswith("#!")):
+            return False
+    return False
+
+
+def lint_source(rel, src):
+    lines, comments = mask_source(src)
+    orig = src.split("\n")
+    in_test = mark_test_regions(lines)
+    out = []
+    deterministic = rel.startswith(DETERMINISTIC_PREFIXES)
+    wallclock_scoped = deterministic and rel not in WALLCLOCK_EXEMPT
+    rng_scoped = rel not in RNG_OWNERS
+
+    def push(rule, l, msg):
+        text = orig[l].strip() if l < len(orig) else ""
+        out.append((rule, rel, l + 1, text, msg))
+
+    for l, code in enumerate(lines):
+        if in_test[l]:
+            continue
+        if deterministic:
+            for coll in ("HashMap", "HashSet"):
+                if has_word(code, coll):
+                    push("hash-collections", l, f"{coll} in deterministic module")
+        if rng_scoped and has_pcg_new(code):
+            push("naked-rng", l, "naked Pcg::new outside stream owners")
+        if wallclock_scoped:
+            for clock in ("Instant", "SystemTime"):
+                if has_word(code, clock):
+                    push("wall-clock", l, f"{clock} in modeled path")
+        if has_word(code, "unsafe") and not has_tag_comment(
+            lines, comments, l, "SAFETY:"
+        ):
+            push("undocumented-unsafe", l, "unsafe without SAFETY: comment")
+        variant = non_seqcst_ordering(code)
+        if variant and not has_tag_comment(lines, comments, l, "ORDERING:"):
+            push("undocumented-ordering", l, f"Ordering::{variant} without ORDERING: comment")
+    return out
+
+
+def parse_allowlist(text):
+    entries = []
+    for i, raw in enumerate(text.splitlines(), 1):
+        line = raw.strip()
+        if not line or line.startswith("#"):
+            continue
+        parts = [p.strip() for p in line.split("|", 3)]
+        if len(parts) != 4 or any(not p for p in parts):
+            raise ValueError(f"allowlist line {i}: malformed: {line}")
+        if parts[0] not in RULES:
+            raise ValueError(f"allowlist line {i}: unknown rule {parts[0]}")
+        entries.append((i, *parts))
+    return entries
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    repo = Path(__file__).resolve().parent.parent
+    ap.add_argument("--src", default=str(repo / "rust/src"))
+    ap.add_argument("--allowlist", default=str(repo / "rust/lint/allowlist.txt"))
+    args = ap.parse_args()
+    src_root = Path(args.src)
+    entries = parse_allowlist(Path(args.allowlist).read_text())
+
+    files = sorted(src_root.rglob("*.rs"))
+    sources = {}
+    raw = []
+    for path in files:
+        rel = path.relative_to(src_root).as_posix()
+        text = path.read_text()
+        sources[rel] = text
+        raw.extend(lint_source(rel, text))
+
+    violations, suppressed = [], []
+    for v in raw:
+        rule, rel, _line, text, _msg = v
+        if any(
+            rule == e_rule and rel.endswith(e_path) and e_pat in text
+            for (_i, e_rule, e_path, e_pat, _r) in entries
+        ):
+            suppressed.append(v)
+        else:
+            violations.append(v)
+    stale = [
+        e
+        for e in entries
+        if not any(
+            rel.endswith(e[2]) and any(e[3] in l for l in text.split("\n"))
+            for rel, text in sources.items()
+        )
+    ]
+
+    print(f"audit_lint: {len(files)} files, {len(suppressed)} suppressed")
+    for rule, rel, line, text, msg in violations:
+        print(f"  {rel}:{line} [{rule}] {text}\n      {msg}")
+    for e in stale:
+        print(f"  stale allowlist entry line {e[0]}: {e[1]} | {e[2]} | {e[3]}")
+    if stale:
+        return 2
+    if violations:
+        return 1
+    print("audit_lint: clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
